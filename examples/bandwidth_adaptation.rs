@@ -1,0 +1,49 @@
+//! Appendix-D demo: the discrete GREEDY policy adapts to bandwidth
+//! changes with zero recomputation — the crawl-value argmax simply
+//! starts being asked more (or less) often.
+//!
+//! ```bash
+//! cargo run --release --example bandwidth_adaptation
+//! ```
+
+use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
+use ncis_crawl::figures::common::ExperimentSpec;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::sim::engine::{BandwidthSchedule, SimConfig};
+use ncis_crawl::sim::{generate_traces, simulate, CisDelay};
+
+fn main() -> anyhow::Result<()> {
+    let spec = ExperimentSpec::section6(1000, 1);
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let horizon = 400.0;
+
+    let schedule =
+        BandwidthSchedule { segments: vec![(0.0, 100.0), (133.0, 150.0), (266.0, 100.0)] };
+    let cfg = SimConfig {
+        bandwidth: schedule,
+        horizon,
+        cis_discard_window: None,
+        timeline_window: Some(1000),
+    };
+    let mut trng = Rng::new(9);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let mut sched = GreedyScheduler::new(PolicyKind::Greedy, &inst.pages, ValueBackend::Native);
+    let res = simulate(&traces, &cfg, &mut sched);
+
+    println!("bandwidth schedule: 100 -> 150 @ t=133 -> 100 @ t=266  (m=1000)");
+    println!("rolling accuracy over the last 1000 requests:\n");
+    // print a coarse sparkline-style table
+    let mut next_mark = 20.0;
+    for &(t, acc) in &res.timeline {
+        if t >= next_mark {
+            let bars = (acc * 60.0).round() as usize;
+            println!("t={t:6.0}  acc={acc:.3}  {}", "#".repeat(bars));
+            next_mark += 20.0;
+        }
+    }
+    println!("\ntotal crawls: {} over {} ticks", res.crawl_counts.iter().map(|&c| c as u64).sum::<u64>(), res.ticks);
+    println!("accuracy rises after t=133 and falls back after t=266 — no re-solve needed.");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! End-to-end driver (the repository's headline validation run):
+//! the full §6.7 semi-synthetic pipeline on a real generated workload.
+//!
+//! Pipeline: synthesize the Kolobov-style population → subsample →
+//! derive CIS parameters from (precision, recall) → corrupt the policy's
+//! quality beliefs at p ∈ {0, 0.1, 0.2} → run GREEDY / GREEDY-NCIS /
+//! GREEDY-CIS+ through the lazy coordinator → report the paper's
+//! headline metric (accuracy, with the NCIS lift over GREEDY).
+//!
+//! ```bash
+//! cargo run --release --example semi_synthetic            # scaled default
+//! cargo run --release --example semi_synthetic -- --full  # paper-sized (100k URLs)
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §Fig5.
+
+use ncis_crawl::figures::semisynth::{fig05, SemiSynthSpec};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let spec = if full {
+        SemiSynthSpec { n_urls: 100_000, budget: 5_000.0, steps: 200.0, reps: 10, ..Default::default() }
+    } else {
+        SemiSynthSpec::default()
+    };
+    println!(
+        "semi-synthetic e2e: {} URLs, budget {}/step, {} steps, {} reps{}",
+        spec.n_urls,
+        spec.budget,
+        spec.steps,
+        spec.reps,
+        if full { " (paper-sized)" } else { " (scaled; pass --full for paper-sized)" }
+    );
+    let t0 = std::time::Instant::now();
+    fig05(&spec)?;
+    println!("completed in {:?}", t0.elapsed());
+    println!("series written to target/figures/fig05_semisynthetic.csv");
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo/.
+
+Also emits:
+  - artifacts/manifest.txt   one line per artifact, `key=value` pairs,
+    consumed by rust/src/runtime/artifacts.rs
+  - artifacts/golden_value.csv  f64 reference crawl values for the rust
+    native implementation's cross-language golden test
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # golden vectors in f64
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.crawl_value import BETA_CAP  # noqa: E402
+
+# (batch, terms) configurations for the crawl-value executable. 2048 is the
+# single-block latency-oriented variant; 16384 the throughput variant.
+CRAWL_VALUE_CONFIGS = [(2048, 2), (2048, 8), (16384, 2), (16384, 8)]
+FRESHNESS_BATCH = 16384
+MLE_BATCH = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, regardless of output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_crawl_value(batch: int, terms: int):
+    spec = f32((batch,))
+    fn = lambda *a: model.crawl_value_batch(*a, terms=terms, block=min(batch, 2048))
+    return jax.jit(fn).lower(spec, spec, spec, spec, spec, spec, spec)
+
+
+def lower_freshness(batch: int):
+    spec = f32((batch,))
+    return jax.jit(model.freshness_batch).lower(spec, spec, spec, spec)
+
+
+def lower_mle(batch: int):
+    return jax.jit(model.mle_step).lower(
+        f32((2,)), f32((batch, 2)), f32((batch,)), f32((batch,))
+    )
+
+
+def write_golden(path: str, rows: int = 512) -> None:
+    """Reference crawl values over a broad parameter grid, in f64."""
+    key = jax.random.PRNGKey(20250710)
+    k = jax.random.split(key, 5)
+    iota = 10.0 ** jax.random.uniform(k[0], (rows,), minval=-3.0, maxval=2.0)
+    delta = jax.random.uniform(k[1], (rows,), minval=0.01, maxval=2.0)
+    mu = jax.random.uniform(k[2], (rows,), minval=0.0, maxval=1.0)
+    lam = jax.random.uniform(k[3], (rows,), minval=0.0, maxval=1.0)
+    nu = jax.random.uniform(k[4], (rows,), minval=0.0, maxval=1.0)
+    # exercise the no-CIS and noiseless corners explicitly
+    lam = lam.at[: rows // 8].set(0.0)
+    nu = nu.at[: rows // 16].set(0.0)
+    nu = nu.at[rows // 8 : rows // 4].set(0.0)
+    with open(path, "w") as f:
+        f.write("iota,delta,mu,lam,nu,terms,value,psi,w\n")
+        for terms in (1, 2, 8):
+            v = ref.crawl_value(iota, delta, mu, lam, nu, terms=terms)
+            a, b, g = ref.derived_params(delta, mu, lam, nu)
+            psi, w = ref.psi_w(iota, a, b, g, nu, delta, terms)
+            for r in range(rows):
+                f.write(
+                    f"{iota[r]:.17g},{delta[r]:.17g},{mu[r]:.17g},"
+                    f"{lam[r]:.17g},{nu[r]:.17g},{terms},"
+                    f"{v[r]:.17g},{psi[r]:.17g},{w[r]:.17g}\n"
+                )
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--golden-rows", type=int, default=512)
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+
+    for batch, terms in CRAWL_VALUE_CONFIGS:
+        name = f"crawl_value_n{batch}_j{terms}"
+        text = to_hlo_text(lower_crawl_value(batch, terms))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"kind=crawl_value name={name} file={fname} batch={batch} "
+            f"terms={terms} inputs=7 outputs=3 beta_cap={BETA_CAP:g}"
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    name, fname = "freshness", "freshness.hlo.txt"
+    text = to_hlo_text(lower_freshness(FRESHNESS_BATCH))
+    with open(os.path.join(args.out_dir, fname), "w") as f:
+        f.write(text)
+    manifest.append(
+        f"kind=freshness name={name} file={fname} batch={FRESHNESS_BATCH} "
+        f"inputs=4 outputs=1"
+    )
+    print(f"wrote {fname} ({len(text)} chars)")
+
+    name, fname = "mle_step", "mle_step.hlo.txt"
+    text = to_hlo_text(lower_mle(MLE_BATCH))
+    with open(os.path.join(args.out_dir, fname), "w") as f:
+        f.write(text)
+    manifest.append(
+        f"kind=mle_step name={name} file={fname} batch={MLE_BATCH} "
+        f"inputs=4 outputs=2"
+    )
+    print(f"wrote {fname} ({len(text)} chars)")
+
+    golden = os.path.join(args.out_dir, "golden_value.csv")
+    write_golden(golden, args.golden_rows)
+    print(f"wrote {golden}")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: batched crawl-value V_{G_NCIS-APPROX-J}.
+
+The compute hot-spot of the paper's Algorithm 1 is evaluating the crawl
+value V(tau_EFF; E) for every candidate page at every tick. This kernel
+evaluates a block of pages at once.
+
+TPU mapping (DESIGN.md `Hardware-Adaptation`): the computation is pure
+elementwise VPU work (exp, mul/add, selects) with a short unrolled J-term
+inner loop; pages are tiled into VMEM-resident blocks via BlockSpec. The
+kernel streams 7 input f32 lanes and 1 output lane per page (32 B/page),
+so on real hardware it is HBM-bandwidth bound. We therefore optimize for
+(a) a single exp per residual argument, (b) running-product recursions for
+x^j/j! and nu^i/(delta+nu)^{i+1} (no pow, no factorial tables), and (c) no
+scratch beyond two accumulators.
+
+The kernel MUST run with interpret=True on this image: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+Inputs are the *derived* parametrization (alpha, beta, gamma) plus
+(nu, delta, mu); the coordinator precomputes those in f64 and feeds f32.
+``beta`` must be pre-capped to a large finite value (BETA_CAP) instead of
++inf so that ``iota - i*beta`` never produces 0*inf = NaN.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Finite stand-in for beta = +inf (noiseless CIS); any iota of interest is
+# far below this, so terms i >= 1 are masked out exactly as for inf.
+BETA_CAP = 1e30
+# Default page-block size: 2048 f32 lanes x 8 arrays = 64 KiB of VMEM.
+DEFAULT_BLOCK = 2048
+
+
+def _residual_terms(i: int, x, exp_neg_x):
+    """R^i(x) given precomputed exp(-x), via the two-branch scheme of
+    ref.exp_residual (direct for x >= 0.5, 6-term tail series below).
+    Saturates to 1 for x > 2i + 60 — in f32 the partial sum overflows far
+    earlier than in f64 (x^j -> inf at x ~ 1e5 for j >= 8), and huge x
+    arise from lambda -> 1 pages (beta ~ 1e6) with several pending CIS."""
+    saturated = x > 2.0 * i + 60.0
+    xs = jnp.where(saturated, 2.0 * i + 60.0, x)
+    term = jnp.ones_like(x)
+    s = jnp.ones_like(x)
+    for j in range(1, i + 1):
+        term = term * xs / j
+        s = s + term
+    direct = jnp.where(saturated, 1.0, 1.0 - exp_neg_x * s)
+    fact = 1.0
+    for j in range(1, i + 2):
+        fact *= j
+    lead = x ** (i + 1) / fact
+    ser = jnp.zeros_like(x)
+    t = jnp.ones_like(x)
+    for k in range(6):
+        if k > 0:
+            t = t * x / (i + 1 + k)
+        ser = ser + t
+    series = exp_neg_x * lead * ser
+    out = jnp.where(x < 0.5, series, direct)
+    return jnp.where(x < 0.0, 0.0, out)
+
+
+def _crawl_value_block(iota, alpha, beta, gamma, nu, delta, mu, *, terms: int):
+    """Crawl value for one block; plain jnp so it can be shared between the
+    Pallas body and unit tests against ref.crawl_value."""
+    no_cis = gamma <= 0.0
+    g = jnp.where(no_cis, 1.0, gamma)
+    ag = alpha + g
+    dn = delta + nu
+    psi = jnp.zeros_like(iota)
+    w = jnp.zeros_like(iota)
+    coef = 1.0 / dn
+    for i in range(terms):
+        off = iota - i * beta
+        mask = off >= 0.0
+        offc = jnp.where(mask, off, 0.0)
+        # one exp per argument, shared by both branches of the residual
+        eg = jnp.exp(-g * offc)
+        eag = jnp.exp(-ag * offc)
+        psi = psi + jnp.where(mask, _residual_terms(i, g * offc, eg) / g, 0.0)
+        w = w + jnp.where(mask, coef * _residual_terms(i, ag * offc, eag), 0.0)
+        coef = coef * nu / dn
+    ea = jnp.exp(-alpha * iota)
+    psi = jnp.where(no_cis, iota, psi)
+    w = jnp.where(no_cis, _residual_terms(0, alpha * iota, ea) / alpha, w)
+    return mu * (w - ea * psi)
+
+
+def _kernel(iota_ref, alpha_ref, beta_ref, gamma_ref, nu_ref, delta_ref,
+            mu_ref, out_ref, *, terms: int):
+    out_ref[...] = _crawl_value_block(
+        iota_ref[...], alpha_ref[...], beta_ref[...], gamma_ref[...],
+        nu_ref[...], delta_ref[...], mu_ref[...], terms=terms,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("terms", "block"))
+def crawl_value_pallas(iota, alpha, beta, gamma, nu, delta, mu,
+                       terms: int = 8, block: int = DEFAULT_BLOCK):
+    """Batched crawl value via pallas_call (interpret mode).
+
+    All inputs are rank-1 f32 arrays of the same length N; N must be a
+    multiple of ``block`` (the coordinator pads with sentinel pages whose
+    mu == 0, making their value exactly 0).
+    """
+    (n,) = iota.shape
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_kernel, terms=terms),
+        out_shape=jax.ShapeDtypeStruct((n,), iota.dtype),
+        grid=grid,
+        in_specs=[spec] * 7,
+        out_specs=spec,
+        interpret=True,
+    )(iota, alpha, beta, gamma, nu, delta, mu)

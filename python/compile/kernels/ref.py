@@ -1,0 +1,201 @@
+"""Pure-jnp reference oracle for the crawl-value computation.
+
+This module is the *correctness anchor* of the whole stack: the Pallas
+kernel (``crawl_value.py``), the L2 model graphs (``model.py``) and the
+rust-native f64 implementation (``rust/src/policy/value.rs``) are all
+tested against these functions.
+
+Notation follows the paper (Busa-Fekete et al., WWW 2025):
+
+    delta  : change rate of the page's Poisson change process
+    mu     : normalized importance (request-rate weight), mu-tilde
+    lam    : recall of the CI signal (P[a change emits a signal])
+    nu     : rate of the false-positive CIS Poisson process
+
+Derived:
+
+    gamma = lam * delta + nu          observed CIS rate
+    alpha = (1 - lam) * delta         unsignalled change rate
+    beta  = -log(nu / gamma) / alpha  time-equivalent of one CIS
+
+Crawl value (Theorem 1), with R^i the normalized Taylor residual of exp:
+
+    psi(iota) = sum_{i=0}^{floor(iota/beta)} (1/gamma) R^i(gamma (iota - i beta))
+    w(iota)   = sum_{i=0}^{floor(iota/beta)} nu^i/(delta+nu)^{i+1}
+                                             R^i((alpha+gamma)(iota - i beta))
+    f(iota)   = 1 / psi(iota)
+    V(iota)   = mu (w(iota) - exp(-alpha iota) psi(iota))
+
+The APPROX-J family truncates the sums at ``min(J-1, floor(iota/beta))``
+terms (Appendix A.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def exp_residual(i: int, x):
+    """Normalized residual of the i-th Taylor approximation of exp.
+
+    R^i(x) = (exp(x) - sum_{j<=i} x^j/j!) / exp(x)
+           = 1 - exp(-x) * sum_{j<=i} x^j/j!
+
+    Equals the regularized lower incomplete gamma P(i+1, x) for x >= 0.
+    Uses a small-x series branch to avoid catastrophic cancellation in f32:
+
+    R^i(x) = exp(-x) * sum_{j>i} x^j/j!
+           = exp(-x) * x^{i+1}/(i+1)! * (1 + x/(i+2) + x^2/((i+2)(i+3)) + ...)
+    """
+    x = jnp.asarray(x)
+    # direct branch: 1 - exp(-x) * partial sum. The partial sum would
+    # overflow for huge x (x^j/j! -> inf, times exp(-x) -> 0*inf = NaN),
+    # so clamp the argument: for x > 2i + 60 the result is 1 to f64
+    # accuracy (Poisson left tail < 1e-20) and the clamped sum is finite.
+    saturated = x > 2.0 * i + 60.0
+    xs = jnp.where(saturated, 2.0 * i + 60.0, x)
+    term = jnp.ones_like(x)
+    s = jnp.ones_like(x)
+    for j in range(1, i + 1):
+        term = term * xs / j
+        s = s + term
+    direct = jnp.where(saturated, 1.0, 1.0 - jnp.exp(-xs) * s)
+    # series branch for small x (12 tail terms: truncation < 1e-12 at the
+    # x = 0.5 branch point, so both branches agree to f64-level accuracy)
+    fact = 1.0
+    for j in range(1, i + 2):
+        fact *= j
+    lead = x ** (i + 1) / fact
+    ser = jnp.zeros_like(x)
+    t = jnp.ones_like(x)
+    for k in range(12):
+        if k > 0:
+            t = t * x / (i + 1 + k)
+        ser = ser + t
+    series = jnp.exp(-x) * lead * ser
+    small = x < 0.5
+    out = jnp.where(small, series, direct)
+    # residual is only defined/used for x >= 0; clamp negatives to 0
+    return jnp.where(x < 0.0, 0.0, out)
+
+
+def derived_params(delta, mu, lam, nu):
+    """Map raw page parameters to the (alpha, beta, gamma) parametrization.
+
+    Degenerate corners are regularized exactly as the rust side does
+    (``params.rs``): gamma == 0 means "no CIS at all" (pure GREEDY limit)
+    and beta is +inf; alpha == 0 (lam == 1) is clamped so the
+    (alpha, beta) parametrization stays finite.
+    """
+    delta = jnp.asarray(delta)
+    gamma = lam * delta + nu
+    alpha = (1.0 - lam) * delta
+    alpha = jnp.maximum(alpha, 1e-6 * jnp.maximum(delta, 1e-30))
+    # beta = -log(nu/gamma)/alpha ; nu == 0 -> +inf
+    safe_gamma = jnp.where(gamma > 0, gamma, 1.0)
+    ratio = jnp.where(gamma > 0, nu / safe_gamma, 1.0)
+    beta = jnp.where(
+        (gamma > 0) & (nu > 0), -jnp.log(jnp.maximum(ratio, 1e-38)) / alpha, jnp.inf
+    )
+    return alpha, beta, gamma
+
+
+def psi_w(iota, alpha, beta, gamma, nu, delta, terms: int):
+    """psi (expected crawl interval) and w (cumulative freshness), truncated
+    at ``terms`` residual terms. Term i is masked out when i*beta > iota.
+
+    The gamma -> 0 (no CIS) limit is handled explicitly:
+        psi -> R^0(...)/gamma -> iota,  w -> R^0(alpha*iota)/alpha
+    (with alpha == delta in that limit).
+    """
+    iota = jnp.asarray(iota)
+    no_cis = gamma <= 0.0
+    g = jnp.where(no_cis, 1.0, gamma)  # safe divisor
+    ag = alpha + g
+    dn = delta + nu
+    psi = jnp.zeros_like(iota)
+    w = jnp.zeros_like(iota)
+    # running coefficient nu^i / (delta+nu)^{i+1}
+    coef = 1.0 / dn
+    big = jnp.finfo(jnp.asarray(iota).dtype).max / 4
+    for i in range(terms):
+        off = iota - i * jnp.where(jnp.isinf(beta), big, beta)
+        mask = off >= 0.0
+        offc = jnp.where(mask, off, 0.0)
+        psi = psi + jnp.where(mask, exp_residual(i, g * offc) / g, 0.0)
+        w = w + jnp.where(mask, coef * exp_residual(i, ag * offc), 0.0)
+        coef = coef * nu / dn
+    # GREEDY limit
+    psi = jnp.where(no_cis, iota, psi)
+    w = jnp.where(no_cis, exp_residual(0, alpha * iota) / alpha, w)
+    return psi, w
+
+
+def crawl_value(iota, delta, mu, lam, nu, terms: int = 8):
+    """V_{G_NCIS-APPROX-J} with J = ``terms`` (exact once terms > iota/beta).
+
+    Returns mu * (w(iota) - exp(-alpha*iota) * psi(iota)).
+    """
+    alpha, beta, gamma = derived_params(delta, mu, lam, nu)
+    psi, w = psi_w(iota, alpha, beta, gamma, nu, delta, terms)
+    return mu * (w - jnp.exp(-alpha * jnp.asarray(iota)) * psi)
+
+
+def crawl_frequency(iota, delta, mu, lam, nu, terms: int = 8):
+    """f(iota; E) = 1/psi(iota; E) for the thresholded policy."""
+    alpha, beta, gamma = derived_params(delta, mu, lam, nu)
+    psi, _ = psi_w(iota, alpha, beta, gamma, nu, delta, terms)
+    return 1.0 / psi
+
+
+def value_greedy(iota, delta, mu):
+    """Closed form V_GREEDY = (mu/delta) R^1(delta * iota) (no CIS)."""
+    return mu / delta * exp_residual(1, delta * jnp.asarray(iota))
+
+
+def value_cis(iota, delta, mu, gamma):
+    """Closed form V_GREEDY_CIS (noiseless CIS assumption, beta = inf).
+
+    alpha-hat = delta - gamma (clamped), nu-hat = 0; only the i = 0 term
+    survives. At iota = inf the value saturates at mu/delta.
+    """
+    iota = jnp.asarray(iota)
+    alpha = jnp.maximum(delta - gamma, 1e-6 * delta)
+    ag = alpha + gamma
+    v = mu * (
+        exp_residual(0, ag * iota) / ag
+        - jnp.exp(-alpha * iota) * exp_residual(0, gamma * iota) / gamma
+    )
+    return jnp.where(jnp.isinf(iota), mu / delta, v)
+
+
+def freshness(tau_elap, n_cis, delta, lam, nu):
+    """P[page fresh | history] = exp(-alpha tau) * (nu/gamma)^n  (eq. 1)."""
+    alpha, _, gamma = derived_params(delta, 0.0, lam, nu)
+    safe_gamma = jnp.where(gamma > 0, gamma, 1.0)
+    log_ratio = jnp.where(
+        gamma > 0, jnp.log(jnp.maximum(nu / safe_gamma, 1e-38)), 0.0
+    )
+    return jnp.exp(-alpha * tau_elap + n_cis * log_ratio)
+
+
+def effective_time(tau_elap, n_cis, delta, lam, nu, cap: float = 1e9):
+    """tau_EFF = tau_ELAP + beta * n_CIS, capped so downstream f32 math
+    stays finite (cap is far above any threshold that matters)."""
+    _, beta, _ = derived_params(delta, 0.0, lam, nu)
+    b = jnp.where(jnp.isinf(beta), cap, beta)
+    return jnp.minimum(tau_elap + b * n_cis, cap)
+
+
+def mle_nll(theta, x, z, weight):
+    """Negative log-likelihood of the Appendix-E change model.
+
+    z_i ~ Bernoulli(1 - p_i) with p_i = exp(-<theta, x_i>) the probability
+    of *no* change in interval i; x_i = (tau_elap, n_cis), theta = (alpha,
+    alpha*beta). ``z_i = 1`` indicates a change was observed at crawl i.
+    """
+    s = x @ theta  # [N]
+    p_nochange = jnp.exp(-s)
+    p_nochange = jnp.clip(p_nochange, 1e-12, 1.0 - 1e-12)
+    ll = jnp.where(z > 0.5, jnp.log1p(-p_nochange), -s)
+    return -jnp.sum(weight * ll)

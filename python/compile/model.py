@@ -1,0 +1,86 @@
+"""L2: the jax compute graphs the rust coordinator executes via PJRT.
+
+Three graphs are AOT-lowered by ``aot.py``:
+
+1. ``crawl_value_batch`` — the request-path hot spot. Takes the scheduler
+   state (effective elapsed times) and page parameters, calls the L1
+   Pallas kernel for the values and fuses the argmax reduction into the
+   same executable (one device roundtrip per tick batch).
+2. ``freshness_batch`` — expected-freshness probabilities (eq. 1), used
+   for freshness reporting / accuracy estimation.
+3. ``mle_step`` — one damped Newton step of the Appendix-E estimator for
+   theta = (alpha, alpha*beta) on logged (tau_elap, n_cis, changed)
+   observations. The coordinator iterates this to convergence.
+
+All graphs are shape-monomorphic: ``aot.py`` lowers one artifact per
+(batch, terms) configuration listed in its manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.crawl_value import crawl_value_pallas
+
+
+def crawl_value_batch(iota, alpha, beta, gamma, nu, delta, mu,
+                      terms: int = 8, block: int = 2048):
+    """Values for N pages plus the fused argmax.
+
+    Returns (values[N] f32, argmax[1] i32, max_value[1] f32). Padded
+    sentinel pages must carry mu == 0 so their value is exactly 0 and can
+    never win the argmax against a real candidate (values of real pages
+    are > 0 for iota > 0).
+    """
+    values = crawl_value_pallas(iota, alpha, beta, gamma, nu, delta, mu,
+                                terms=terms, block=block)
+    idx = jnp.argmax(values).astype(jnp.int32).reshape((1,))
+    best = jnp.max(values).reshape((1,))
+    return values, idx, best
+
+
+def freshness_batch(tau_elap, n_cis, alpha, log_fp_ratio):
+    """P[fresh] = exp(-alpha*tau + n * log(nu/gamma)) per page (eq. 1).
+
+    ``log_fp_ratio`` is log(nu/gamma) <= 0, precomputed by the coordinator
+    (0 for pages without CIS so the n term vanishes with n == 0).
+    """
+    return (jnp.exp(-alpha * tau_elap + n_cis * log_fp_ratio),)
+
+
+def _mle_nll(theta, x, z, weight):
+    """NLL of z_i ~ Ber(1 - exp(-<theta, x_i>)) (see ref.mle_nll)."""
+    s = x @ theta
+    p_nochange = jnp.clip(jnp.exp(-s), 1e-12, 1.0 - 1e-12)
+    ll = jnp.where(z > 0.5, jnp.log1p(-p_nochange), -s)
+    return -jnp.sum(weight * ll)
+
+
+def mle_step(theta, x, z, weight):
+    """One damped Newton step on the Appendix-E likelihood.
+
+    theta: [2] (alpha, alpha*beta); x: [N,2] (tau_elap, n_cis); z: [N]
+    in {0,1}; weight: [N] (0 for padding rows). Returns (theta', nll).
+    Newton with Levenberg damping + positivity projection: theta must stay
+    in (0, inf)^2 for the model to be a valid Bernoulli parametrization.
+    """
+    g = jax.grad(_mle_nll)(theta, x, z, weight)
+    h = jax.hessian(_mle_nll)(theta, x, z, weight)
+    h = h + 1e-6 * jnp.eye(2, dtype=theta.dtype)
+    # closed-form 2x2 solve: jnp.linalg.solve lowers to a LAPACK
+    # custom-call with API_VERSION_TYPED_FFI, which xla_extension 0.5.1
+    # (the version the rust `xla` crate links) cannot compile
+    det = h[0, 0] * h[1, 1] - h[0, 1] * h[1, 0]
+    det = jnp.where(jnp.abs(det) < 1e-30, 1e-30, det)
+    step = jnp.stack(
+        [
+            (h[1, 1] * g[0] - h[0, 1] * g[1]) / det,
+            (-h[1, 0] * g[0] + h[0, 0] * g[1]) / det,
+        ]
+    )
+    # backtracking-free damping: clip the step to at most 50% of theta
+    max_rel = jnp.max(jnp.abs(step) / jnp.maximum(jnp.abs(theta), 1e-8))
+    scale = jnp.minimum(1.0, 0.5 / jnp.maximum(max_rel, 1e-12))
+    new_theta = jnp.maximum(theta - scale * step, 1e-8)
+    return new_theta, _mle_nll(new_theta, x, z, weight).reshape((1,))

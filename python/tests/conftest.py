@@ -1,0 +1,6 @@
+"""Shared test config: f64 for the oracle regardless of module import
+order (test files use explicit jnp.float32 where f32 is under test)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,147 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+The kernel runs in f32 interpret mode; the oracle runs the same math in
+f32 (apples-to-apples) and in f64 (absolute accuracy budget). Hypothesis
+sweeps shapes and the full parameter space including the degenerate
+corners (no CIS, noiseless CIS, lam -> 1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.crawl_value import (
+    BETA_CAP,
+    crawl_value_pallas,
+    _crawl_value_block,
+)
+
+
+def derived_f32(delta, mu, lam, nu):
+    """Derived params as the rust coordinator feeds them: f64 derivation,
+    beta capped to BETA_CAP, cast to f32."""
+    a, b, g = ref.derived_params(
+        jnp.asarray(delta, jnp.float64),
+        jnp.asarray(mu, jnp.float64),
+        jnp.asarray(lam, jnp.float64),
+        jnp.asarray(nu, jnp.float64),
+    )
+    b = jnp.minimum(b, BETA_CAP)
+    return (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+            jnp.asarray(g, jnp.float32))
+
+
+def random_env(rng, n):
+    delta = rng.uniform(0.01, 2.0, n)
+    mu = rng.uniform(0.0, 1.0, n)
+    lam = rng.uniform(0.0, 1.0, n)
+    nu = rng.uniform(0.0, 1.0, n)
+    # degenerate corners in every batch
+    lam[: n // 8] = 0.0
+    nu[: n // 8] = 0.0
+    nu[n // 8 : n // 4] = 0.0
+    iota = 10.0 ** rng.uniform(-3, 1.5, n)
+    return iota, delta, mu, lam, nu
+
+
+def run_kernel(iota, delta, mu, lam, nu, terms, block):
+    a, b, g = derived_f32(delta, mu, lam, nu)
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    return np.asarray(
+        crawl_value_pallas(f(iota), a, b, g, f(nu), f(delta), f(mu),
+                           terms=terms, block=block)
+    )
+
+
+@pytest.mark.parametrize("terms", [1, 2, 8])
+@pytest.mark.parametrize("n,block", [(256, 256), (1024, 256), (2048, 2048)])
+def test_kernel_matches_f64_oracle(terms, n, block):
+    rng = np.random.default_rng(42 + terms + n)
+    iota, delta, mu, lam, nu = random_env(rng, n)
+    got = run_kernel(iota, delta, mu, lam, nu, terms, block)
+    want = np.asarray(
+        ref.crawl_value(
+            jnp.asarray(iota, jnp.float64), jnp.asarray(delta, jnp.float64),
+            jnp.asarray(mu, jnp.float64), jnp.asarray(lam, jnp.float64),
+            jnp.asarray(nu, jnp.float64), terms=terms,
+        )
+    )
+    # f32 kernel against f64 truth: 1e-4 relative on a value scale of ~mu/delta
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=5e-6)
+
+
+@given(
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([128, 256, 512]),
+    terms=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(deadline=None, max_examples=25)
+def test_kernel_shape_sweep(n_blocks, block, terms, seed):
+    n = n_blocks * block
+    rng = np.random.default_rng(seed)
+    iota, delta, mu, lam, nu = random_env(rng, n)
+    got = run_kernel(iota, delta, mu, lam, nu, terms, block)
+    assert got.shape == (n,)
+    assert np.all(np.isfinite(got))
+    want = np.asarray(
+        ref.crawl_value(
+            jnp.asarray(iota, jnp.float64), jnp.asarray(delta, jnp.float64),
+            jnp.asarray(mu, jnp.float64), jnp.asarray(lam, jnp.float64),
+            jnp.asarray(nu, jnp.float64), terms=terms,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+def test_padding_sentinel_is_zero():
+    """mu == 0 sentinel pages must produce exactly 0 so padded lanes can
+    never win the fused argmax."""
+    n = 256
+    rng = np.random.default_rng(7)
+    iota, delta, mu, lam, nu = random_env(rng, n)
+    mu[n // 2 :] = 0.0
+    got = run_kernel(iota, delta, mu, lam, nu, 8, 256)
+    assert np.all(got[n // 2 :] == 0.0)
+    assert np.all(got[: n // 2] >= 0.0)
+
+
+def test_kernel_values_nonnegative_and_bounded():
+    """0 <= V <= mu * w(inf) <= mu/delta * (1 + nu/delta)... use the loose
+    bound V <= mu/min(alpha+..): simply check V >= 0 and V <= mu/delta + 1."""
+    n = 2048
+    rng = np.random.default_rng(3)
+    iota, delta, mu, lam, nu = random_env(rng, n)
+    got = run_kernel(iota, delta, mu, lam, nu, 8, 2048)
+    assert np.all(got >= -1e-6)
+    assert np.all(got <= mu / delta + 1.0)
+
+
+def test_block_helper_equals_pallas_path():
+    """The shared jnp block body and the pallas_call path must agree to
+    f32 roundoff (XLA fusion inside jit may contract mul+add)."""
+    n = 512
+    rng = np.random.default_rng(11)
+    iota, delta, mu, lam, nu = random_env(rng, n)
+    a, b, g = derived_f32(delta, mu, lam, nu)
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    direct = np.asarray(
+        _crawl_value_block(f(iota), a, b, g, f(nu), f(delta), f(mu), terms=4)
+    )
+    kern = run_kernel(iota, delta, mu, lam, nu, 4, 512)
+    np.testing.assert_allclose(direct, kern, rtol=1e-4, atol=1e-6)
+
+
+def test_beta_cap_masks_higher_terms():
+    """With beta = BETA_CAP (noiseless CIS), only the i = 0 term may
+    contribute: terms=1 and terms=8 must agree."""
+    n = 128
+    rng = np.random.default_rng(13)
+    iota, delta, mu, lam, _ = random_env(rng, n)
+    nu = np.zeros(n)
+    v1 = run_kernel(iota, delta, mu, lam, nu, 1, 128)
+    v8 = run_kernel(iota, delta, mu, lam, nu, 8, 128)
+    np.testing.assert_array_equal(v1, v8)

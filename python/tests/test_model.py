@@ -1,0 +1,115 @@
+"""L2 model graphs: fused argmax, freshness, MLE estimator step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.crawl_value import BETA_CAP
+
+
+def make_batch(rng, n):
+    delta = rng.uniform(0.05, 2.0, n)
+    mu = rng.uniform(0.01, 1.0, n)
+    lam = rng.uniform(0.0, 1.0, n)
+    nu = rng.uniform(0.0, 1.0, n)
+    iota = 10.0 ** rng.uniform(-2, 1.5, n)
+    a, b, g = ref.derived_params(delta, mu, lam, nu)
+    b = jnp.minimum(b, BETA_CAP)
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    return f(iota), f(a), f(b), f(g), f(nu), f(delta), f(mu)
+
+
+@pytest.mark.parametrize("n", [256, 2048])
+def test_argmax_fusion(n):
+    rng = np.random.default_rng(5)
+    args = make_batch(rng, n)
+    values, idx, best = model.crawl_value_batch(*args, terms=4,
+                                                block=min(n, 2048))
+    values = np.asarray(values)
+    assert int(idx[0]) == int(np.argmax(values))
+    assert float(best[0]) == pytest.approx(float(values.max()))
+
+
+def test_argmax_ignores_padding():
+    n = 256
+    rng = np.random.default_rng(6)
+    iota, a, b, g, nu, delta, mu = make_batch(rng, n)
+    mu = mu.at[: n - 8].set(0.0)  # only the last 8 pages are real
+    _, idx, _ = model.crawl_value_batch(iota, a, b, g, nu, delta, mu,
+                                        terms=4, block=n)
+    assert int(idx[0]) >= n - 8
+
+
+def test_freshness_batch():
+    tau = jnp.asarray([0.0, 1.0, 2.0], jnp.float32)
+    n = jnp.asarray([0.0, 1.0, 3.0], jnp.float32)
+    alpha = jnp.asarray([0.5, 0.5, 0.5], jnp.float32)
+    logr = jnp.asarray([0.0, -1.0, -1.0], jnp.float32)
+    (f,) = model.freshness_batch(tau, n, alpha, logr)
+    want = np.exp(-0.5 * np.array([0.0, 1.0, 2.0]) + np.array([0, 1, 3]) *
+                  np.array([0.0, -1.0, -1.0]))
+    np.testing.assert_allclose(np.asarray(f), want, rtol=1e-6)
+
+
+def _simulate_observations(rng, alpha, beta, n):
+    """Crawl intervals with known (alpha, beta): tau ~ U[0.5, 4], n_cis ~
+    Poisson(1), z ~ Ber(1 - exp(-(alpha tau + alpha beta n)))."""
+    tau = rng.uniform(0.5, 4.0, n)
+    n_cis = rng.poisson(1.0, n).astype(np.float64)
+    p_change = 1.0 - np.exp(-(alpha * tau + alpha * beta * n_cis))
+    z = (rng.uniform(0, 1, n) < p_change).astype(np.float64)
+    x = np.stack([tau, n_cis], axis=1)
+    return x, z
+
+
+@given(alpha=st.floats(0.1, 0.8), beta=st.floats(0.3, 3.0),
+       seed=st.integers(0, 10_000))
+@settings(deadline=None, max_examples=15)
+def test_mle_step_recovers_parameters(alpha, beta, seed):
+    """Iterating mle_step must recover (alpha, alpha*beta) from 4096
+    synthetic observations to ~10% (statistical error at this sample
+    size), mirroring Appendix E / Figure 11."""
+    rng = np.random.default_rng(seed)
+    x, z = _simulate_observations(rng, alpha, beta, 4096)
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    theta = f32([0.5, 0.5])
+    w = f32(np.ones(4096))
+    nll_prev = np.inf
+    for _ in range(60):
+        theta, nll = model.mle_step(theta, f32(x), f32(z), w)
+        nll = float(nll[0])
+    assert nll <= nll_prev or abs(nll - nll_prev) < 1e-3
+    got_alpha, got_ab = float(theta[0]), float(theta[1])
+    assert got_alpha == pytest.approx(alpha, rel=0.25, abs=0.05)
+    assert got_ab == pytest.approx(alpha * beta, rel=0.25, abs=0.08)
+
+
+def test_mle_step_respects_weights():
+    """Padding rows (weight 0) must not influence the fit."""
+    rng = np.random.default_rng(0)
+    x, z = _simulate_observations(rng, 0.4, 1.0, 2048)
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    # garbage padding rows
+    x_pad = np.concatenate([x, np.full((2048, 2), 50.0)])
+    z_pad = np.concatenate([z, np.zeros(2048)])
+    w_pad = np.concatenate([np.ones(2048), np.zeros(2048)])
+    t1 = f32([0.5, 0.5])
+    t2 = f32([0.5, 0.5])
+    for _ in range(20):
+        t1, _ = model.mle_step(t1, f32(x), f32(z), f32(np.ones(2048)))
+        t2, _ = model.mle_step(t2, f32(x_pad), f32(z_pad), f32(w_pad))
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-4)
+
+
+def test_mle_theta_stays_positive():
+    rng = np.random.default_rng(1)
+    x, z = _simulate_observations(rng, 0.05, 0.2, 1024)
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    theta = f32([2.0, 2.0])  # start far away
+    for _ in range(40):
+        theta, _ = model.mle_step(theta, f32(x), f32(z), f32(np.ones(1024)))
+        assert float(theta[0]) > 0 and float(theta[1]) > 0

@@ -1,0 +1,143 @@
+"""Properties of the pure-jnp oracle itself (f64).
+
+These pin down the *mathematical* identities from the paper, so that the
+oracle is trustworthy before anything else is tested against it:
+  - R^i(x) = P(i+1, x): bounds, monotonicity in x, anti-monotonicity in i,
+    derivative identity (3): d/dx R^i = R^{i-1} - R^i = x^i e^{-x}/i!
+  - gamma -> 0 recovers V_GREEDY = (mu/delta) R^1(delta iota)
+  - nu -> 0 recovers V_GREEDY_CIS
+  - Lemma 2: V monotone increasing, f monotone decreasing in iota
+  - Lemma 3: w'(x) = exp(-alpha x) psi'(x)
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+floats01 = st.floats(min_value=0.01, max_value=0.99)
+rates = st.floats(min_value=0.05, max_value=2.0)
+iotas = st.floats(min_value=1e-3, max_value=50.0)
+
+
+@given(x=st.floats(min_value=0.0, max_value=100.0), i=st.integers(0, 8))
+@settings(deadline=None, max_examples=200)
+def test_residual_bounds(x, i):
+    r = float(ref.exp_residual(i, jnp.float64(x)))
+    assert 0.0 <= r <= 1.0
+
+
+@given(x=st.floats(min_value=1e-6, max_value=60.0), i=st.integers(0, 6))
+@settings(deadline=None, max_examples=200)
+def test_residual_decreasing_in_order(x, i):
+    hi = float(ref.exp_residual(i, jnp.float64(x)))
+    lo = float(ref.exp_residual(i + 1, jnp.float64(x)))
+    assert lo <= hi + 1e-12
+
+
+@given(x=st.floats(min_value=1e-4, max_value=50.0), i=st.integers(0, 5))
+@settings(deadline=None, max_examples=100)
+def test_residual_derivative_identity(x, i):
+    """(3): d/dx R^i(x) = x^i exp(-x) / i!"""
+    h = 1e-6 * max(1.0, x)
+    num = (
+        float(ref.exp_residual(i, jnp.float64(x + h)))
+        - float(ref.exp_residual(i, jnp.float64(x - h)))
+    ) / (2 * h)
+    fact = 1.0
+    for j in range(1, i + 1):
+        fact *= j
+    exact = x**i * np.exp(-x) / fact
+    assert num == pytest.approx(exact, rel=1e-3, abs=1e-9)
+
+
+def test_residual_small_x_series_accuracy():
+    # direct evaluation in f32 catastrophically cancels here; the series
+    # branch must stay accurate
+    x = jnp.float64(1e-4)
+    r1 = float(ref.exp_residual(1, x))
+    exact = 1.0 - np.exp(-1e-4) * (1 + 1e-4)
+    assert r1 == pytest.approx(exact, rel=1e-6)
+
+
+@given(iota=iotas, delta=rates, mu=floats01)
+@settings(deadline=None, max_examples=100)
+def test_gamma_zero_recovers_greedy(iota, delta, mu):
+    v = float(ref.crawl_value(jnp.float64(iota), delta, mu, 0.0, 0.0, terms=8))
+    vg = float(ref.value_greedy(jnp.float64(iota), delta, mu))
+    assert v == pytest.approx(vg, rel=2e-5, abs=1e-12)
+
+
+@given(iota=iotas, delta=rates, mu=floats01, lam=floats01)
+@settings(deadline=None, max_examples=100)
+def test_nu_zero_recovers_cis(iota, delta, mu, lam):
+    """nu = 0 means beta = inf: only the i=0 term, matching V_GREEDY_CIS
+    evaluated with the true gamma = lam*delta."""
+    v = float(ref.crawl_value(jnp.float64(iota), delta, mu, lam, 0.0, terms=8))
+    gamma = lam * delta
+    vc = float(ref.value_cis(jnp.float64(iota), delta, mu, gamma))
+    assert v == pytest.approx(vc, rel=2e-4, abs=1e-12)
+
+
+@given(delta=rates, mu=floats01, lam=floats01,
+       nu=st.floats(min_value=0.05, max_value=1.0))
+@settings(deadline=None, max_examples=60)
+def test_lemma2_monotonicity(delta, mu, lam, nu):
+    iotas_grid = jnp.linspace(0.05, 40.0, 120, dtype=jnp.float64)
+    v = np.asarray(ref.crawl_value(iotas_grid, delta, mu, lam, nu, terms=16))
+    f = np.asarray(ref.crawl_frequency(iotas_grid, delta, mu, lam, nu, terms=16))
+    assert np.all(np.diff(v) >= -1e-10), "V must be nondecreasing in iota"
+    assert np.all(np.diff(f) <= 1e-10), "f must be nonincreasing in iota"
+
+
+@given(delta=rates, mu=floats01, lam=floats01,
+       nu=st.floats(min_value=0.05, max_value=1.0), iota=iotas)
+@settings(deadline=None, max_examples=60)
+def test_lemma3_derivative_identity(delta, mu, lam, nu, iota):
+    """w'(x) = exp(-alpha x) psi'(x), checked by central differences away
+    from the kinks at multiples of beta."""
+    alpha, beta, gamma = ref.derived_params(delta, mu, lam, nu)
+    b = float(beta)
+    if np.isfinite(b):
+        # keep clear of the non-differentiable kinks
+        frac = (iota % b) / b
+        if frac < 0.05 or frac > 0.95:
+            return
+    h = 1e-5 * max(1.0, iota)
+
+    def pw(x):
+        return ref.psi_w(jnp.float64(x), alpha, beta, gamma, nu, delta, 32)
+
+    p_hi, w_hi = pw(iota + h)
+    p_lo, w_lo = pw(iota - h)
+    dpsi = (float(p_hi) - float(p_lo)) / (2 * h)
+    dw = (float(w_hi) - float(w_lo)) / (2 * h)
+    assert dw == pytest.approx(float(np.exp(-float(alpha) * iota)) * dpsi,
+                               rel=5e-3, abs=1e-8)
+
+
+def test_value_saturates_at_w_infinity():
+    """V(iota -> inf) -> mu * w(inf); for nu=0 that's mu/delta."""
+    v = float(ref.value_cis(jnp.float64(np.inf), 0.5, 0.7, 0.2))
+    assert v == pytest.approx(0.7 / 0.5)
+
+
+def test_effective_time_cap():
+    t = ref.effective_time(5.0, 3.0, 0.5, 0.8, 0.0)
+    assert float(t) == pytest.approx(1e9)  # beta = inf capped
+    t2 = ref.effective_time(5.0, 0.0, 0.5, 0.8, 0.0)
+    assert float(t2) == pytest.approx(5.0)
+
+
+def test_freshness_matches_eq1():
+    delta, lam, nu = 0.8, 0.6, 0.3
+    gamma = lam * delta + nu
+    alpha = (1 - lam) * delta
+    f = float(ref.freshness(2.0, 2.0, delta, lam, nu))
+    assert f == pytest.approx(np.exp(-alpha * 2.0) * (nu / gamma) ** 2, rel=1e-9)

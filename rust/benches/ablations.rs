@@ -1,0 +1,76 @@
+//! Ablation benches for the design choices DESIGN.md §6 calls out:
+//!   (a) lazy-scheduler margin sweep (accuracy vs evaluations),
+//!   (b) approximation level J (accuracy vs per-eval cost),
+//!   (c) shard count (accuracy loss from the 1/N bandwidth split),
+//!   (d) politeness interval (freshness cost of per-host courtesy).
+//!
+//! `cargo bench --bench ablations` — series land in target/figures/.
+
+use ncis_crawl::benchkit::FigureOutput;
+use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
+use ncis_crawl::coordinator::hosts::{HostMap, PoliteScheduler};
+use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
+use ncis_crawl::coordinator::shard::{run_sharded, ShardPlan};
+use ncis_crawl::figures::common::ExperimentSpec;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
+
+fn main() {
+    let spec = ExperimentSpec::section6(800, 1).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let horizon = 200.0;
+    let r = 50.0;
+    let cfg = SimConfig::new(r, horizon);
+    let mut trng = Rng::new(99);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+
+    // (a) margin sweep
+    let mut fig = FigureOutput::new("ablation_lazy_margin", &["margin", "accuracy", "evals_per_tick"]);
+    for &margin in &[0.3, 0.5, 0.7, 0.9, 1.0] {
+        let mut lz = LazyGreedyScheduler::with_margin(PolicyKind::GreedyNcis, &inst.pages, margin);
+        let res = simulate(&traces, &cfg, &mut lz);
+        fig.rowf(&[margin, res.accuracy, lz.evals as f64 / lz.ticks as f64]);
+    }
+    let mut ex = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+    let res = simulate(&traces, &cfg, &mut ex);
+    fig.rowf(&[f64::NAN, res.accuracy, inst.pages.len() as f64]); // exact reference
+    fig.finish().unwrap();
+
+    // (b) J sweep
+    let mut fig = FigureOutput::new("ablation_terms", &["J", "accuracy"]);
+    for &j in &[1u32, 2, 4, 8, 64] {
+        let kind = if j >= 64 { PolicyKind::GreedyNcis } else { PolicyKind::NcisApprox(j) };
+        let mut s = GreedyScheduler::new(kind, &inst.pages, ValueBackend::Native);
+        let res = simulate(&traces, &cfg, &mut s);
+        fig.rowf(&[j as f64, res.accuracy]);
+    }
+    fig.finish().unwrap();
+
+    // (c) shard count
+    let mut fig = FigureOutput::new("ablation_shards", &["shards", "accuracy"]);
+    for &n in &[1usize, 2, 4, 8, 16] {
+        let run = run_sharded(
+            &inst.pages,
+            &ShardPlan::round_robin(inst.pages.len(), n),
+            PolicyKind::GreedyNcis,
+            r,
+            horizon,
+            7,
+        );
+        fig.rowf(&[n as f64, run.accuracy]);
+    }
+    fig.finish().unwrap();
+
+    // (d) politeness interval
+    let mut fig = FigureOutput::new("ablation_politeness", &["min_interval", "accuracy", "vetoes"]);
+    for &w in &[0.0, 0.05, 0.2, 0.5, 1.0] {
+        let map = HostMap::round_robin(inst.pages.len(), 20, w);
+        let inner = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+        let mut polite = PoliteScheduler::new(inner, map);
+        let res = simulate(&traces, &cfg, &mut polite);
+        fig.rowf(&[w, res.accuracy, polite.vetoes as f64]);
+    }
+    fig.finish().unwrap();
+}

@@ -1,0 +1,34 @@
+//! Figure-regeneration bench: one entry per paper figure (DESIGN.md §6).
+//!
+//! `cargo bench --bench figures` regenerates every table/figure series
+//! into `target/figures/*.csv`. Repetition counts default to a
+//! laptop-scale budget; set `NCIS_REPS` to raise them toward the
+//! paper's 100 (see EXPERIMENTS.md for the scaling rationale).
+//!
+//! Select a subset: `cargo bench --bench figures -- 2 3 4`.
+
+fn reps() -> usize {
+    std::env::var("NCIS_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let all = ["1", "2", "3", "6", "7", "8", "9", "10", "11", "12", "14", "4", "5", "appg"];
+    let ids: Vec<&str> = if args.is_empty() {
+        all.to_vec()
+    } else {
+        all.iter().copied().filter(|id| args.iter().any(|a| a == id)).collect()
+    };
+    let r = reps();
+    println!("figure bench: ids={ids:?} reps={r} (NCIS_REPS to override)");
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match ncis_crawl::figures::run_figure(id, r) {
+            Ok(()) => println!("figure {id}: done in {:?}\n", t0.elapsed()),
+            Err(e) => {
+                eprintln!("figure {id}: FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Performance benches (EXPERIMENTS.md §Perf):
+//!
+//! - value-function evaluation throughput (native f64)
+//! - batched crawl values: PJRT (AOT Pallas kernel) vs native, by batch
+//! - scheduler tick cost: exact argmax vs the §5.2 lazy scheduler
+//! - end-to-end simulation throughput
+//! - approximation-level ablation (J ∈ {1, 2, 4, 8})
+
+use ncis_crawl::benchkit::{measure, report};
+use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
+use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
+use ncis_crawl::figures::common::ExperimentSpec;
+use ncis_crawl::params::DerivedParams;
+use ncis_crawl::policy::{value, PolicyKind};
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::runtime::{NativeEngine, PjrtEngine, ValueBatch};
+use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
+
+fn bench_value_functions() {
+    println!("\n-- value-function evaluation (native f64) --");
+    let mut rng = Rng::new(1);
+    let envs: Vec<DerivedParams> = (0..1024)
+        .map(|_| {
+            ncis_crawl::params::PageParams {
+                delta: rng.range(0.01, 1.0),
+                mu: rng.range(0.01, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.1, 0.6),
+            }
+            .derive()
+            .unwrap()
+        })
+        .collect();
+    let iotas: Vec<f64> = (0..1024).map(|_| 10f64.powf(rng.range(-2.0, 1.5))).collect();
+    for terms in [1u32, 2, 4, 8, value::MAX_TERMS] {
+        let mut k = 0usize;
+        let m = measure(
+            || {
+                let v = value::value_ncis(iotas[k & 1023], &envs[k & 1023], terms);
+                std::hint::black_box(v);
+                k += 1;
+            },
+            5,
+            0.05,
+        );
+        report(&format!("value_ncis terms={terms}"), &m);
+    }
+}
+
+fn bench_batched_values() {
+    println!("\n-- batched crawl values: PJRT vs native --");
+    let engine = PjrtEngine::load(std::path::Path::new("artifacts")).ok();
+    if engine.is_none() {
+        println!("(artifacts not built; skipping PJRT lanes)");
+    }
+    let native = NativeEngine;
+    let mut rng = Rng::new(2);
+    for &n in &[2048usize, 16384] {
+        let mut batch = ValueBatch::with_capacity(n);
+        for _ in 0..n {
+            let d = ncis_crawl::params::PageParams {
+                delta: rng.range(0.01, 1.0),
+                mu: rng.range(0.01, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.1, 0.6),
+            }
+            .derive()
+            .unwrap();
+            batch.push(10f64.powf(rng.range(-2.0, 1.5)), &d);
+        }
+        for terms in [2u32, 8] {
+            let m = measure(
+                || {
+                    std::hint::black_box(native.crawl_values(terms, &batch));
+                },
+                5,
+                0.1,
+            );
+            report(&format!("native  batch={n} terms={terms}"), &m);
+            println!("{:>46} {:.1}M pages/s", "", m.per_second(n as f64) / 1e6);
+            if let Some(eng) = &engine {
+                let m = measure(
+                    || {
+                        std::hint::black_box(eng.crawl_values(terms, &batch).unwrap());
+                    },
+                    5,
+                    0.1,
+                );
+                report(&format!("pjrt    batch={n} terms={terms}"), &m);
+                println!("{:>46} {:.1}M pages/s", "", m.per_second(n as f64) / 1e6);
+            }
+        }
+    }
+}
+
+fn bench_schedulers() {
+    println!("\n-- scheduler tick cost: exact vs lazy (m=5000) --");
+    let spec = ExperimentSpec::section6(5000, 1).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(3);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let horizon = 20.0;
+    let r = 100.0;
+    let mut trng = Rng::new(4);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(r, horizon);
+
+    let m_exact = measure(
+        || {
+            let mut s = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+            std::hint::black_box(simulate(&traces, &cfg, &mut s));
+        },
+        3,
+        0.2,
+    );
+    report("simulate 2000 ticks, exact argmax", &m_exact);
+    let m_lazy = measure(
+        || {
+            let mut s = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages);
+            std::hint::black_box(simulate(&traces, &cfg, &mut s));
+        },
+        3,
+        0.2,
+    );
+    report("simulate 2000 ticks, lazy scheduler", &m_lazy);
+    println!(
+        "lazy speedup: {:.1}x   (ticks/s: exact {:.0}, lazy {:.0})",
+        m_exact.mean_s / m_lazy.mean_s,
+        2000.0 / m_exact.mean_s,
+        2000.0 / m_lazy.mean_s
+    );
+    // eval-count diagnostic
+    let mut s = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages);
+    simulate(&traces, &cfg, &mut s);
+    println!(
+        "lazy evals/tick: {:.1} (exact would be {})",
+        s.evals as f64 / s.ticks as f64,
+        inst.pages.len()
+    );
+}
+
+fn bench_end_to_end() {
+    println!("\n-- end-to-end simulation throughput (m=1000, R=100, T=100) --");
+    let spec = ExperimentSpec::section6(1000, 1).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(5);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let mut trng = Rng::new(6);
+    let traces = generate_traces(&inst.pages, 100.0, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(100.0, 100.0);
+    let m = measure(
+        || {
+            let mut s = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages);
+            std::hint::black_box(simulate(&traces, &cfg, &mut s));
+        },
+        3,
+        0.3,
+    );
+    report("lazy GREEDY-NCIS full rep (10k ticks)", &m);
+    println!("{:>46} {:.0}k ticks/s", "", 10.0 / m.mean_s);
+}
+
+fn main() {
+    println!("perf bench (see EXPERIMENTS.md §Perf)");
+    bench_value_functions();
+    bench_batched_values();
+    bench_schedulers();
+    bench_end_to_end();
+}

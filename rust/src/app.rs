@@ -1,0 +1,299 @@
+//! CLI subcommand dispatch (kept out of `main.rs` so integration tests
+//! can drive the commands in-process).
+
+use std::path::Path;
+
+use crate::cli::Args;
+use crate::coordinator::pipeline::{run_pipeline, PipelineConfig};
+use crate::error::{Error, Result};
+use crate::figures::common::{run_cell, ExperimentSpec, PolicyUnderTest};
+use crate::policy::PolicyKind;
+use crate::rngkit::Rng;
+use crate::solver;
+
+const USAGE: &str = "\
+ncis-crawl <command> [options]
+
+commands:
+  simulate     run one policy on a synthetic instance
+               --m N --r R --horizon T --reps K --policy NAME [--cis] [--fp] [--seed S]
+  solve        optimal continuous policy for a synthetic instance
+               --m N --r R [--cis] [--fp] [--seed S]
+  dataset      generate + describe the semi-synthetic population
+               --n N [--seed S]
+  estimate     Appendix-E estimator demo
+               --precision P --recall R [--seed S]
+  serve-shards streaming sharded coordinator demo
+               --m N --shards S --r R --horizon T
+  figure       regenerate a paper figure: figure <id> [--reps K]
+               (ids: 1,2,3,4,5,6,7,8,9,10,11,12,14, appg)
+
+policies: GREEDY | GREEDY-CIS | GREEDY-NCIS | G-NCIS-APPROX-1 |
+          G-NCIS-APPROX-2 | GREEDY-CIS+ | LDS  (suffix -LAZY for §5.2)
+";
+
+/// Parse a policy name (as printed in the paper's plots).
+pub fn parse_policy(name: &str) -> Result<PolicyUnderTest> {
+    let (base, lazy) = match name.strip_suffix("-LAZY") {
+        Some(b) => (b, true),
+        None => (name, false),
+    };
+    let kind = match base {
+        "GREEDY" => PolicyKind::Greedy,
+        "GREEDY-CIS" => PolicyKind::GreedyCis,
+        "GREEDY-NCIS" => PolicyKind::GreedyNcis,
+        "GREEDY-CIS+" => PolicyKind::GreedyCisPlus,
+        "LDS" => {
+            if lazy {
+                return Err(Error::Usage("LDS has no lazy variant".into()));
+            }
+            return Ok(PolicyUnderTest::Lds);
+        }
+        other => {
+            if let Some(j) = other.strip_prefix("G-NCIS-APPROX-") {
+                let j: u32 = j
+                    .parse()
+                    .map_err(|_| Error::Usage(format!("bad approximation level in {other}")))?;
+                PolicyKind::NcisApprox(j)
+            } else {
+                return Err(Error::Usage(format!("unknown policy `{other}`")));
+            }
+        }
+    };
+    Ok(if lazy { PolicyUnderTest::Lazy(kind) } else { PolicyUnderTest::Greedy(kind) })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut spec = ExperimentSpec::section6(
+        args.usize_or("m", 100)?,
+        args.usize_or("reps", 5)?,
+    );
+    spec.bandwidth = args.f64_or("r", 100.0)?;
+    spec.horizon = args.f64_or("horizon", 1000.0)?;
+    spec.seed = args.u64_or("seed", 0x5EED)?;
+    if args.has_flag("cis") {
+        spec = spec.with_partial_cis();
+    }
+    if args.has_flag("fp") {
+        spec = spec.with_false_positives();
+    }
+    let put = parse_policy(args.opt("policy").unwrap_or("GREEDY-NCIS"))?;
+    let cell = run_cell(&spec, put);
+    println!(
+        "policy={} m={} R={} T={} reps={}",
+        cell.policy, spec.m, spec.bandwidth, spec.horizon, spec.reps
+    );
+    println!("accuracy = {:.4} ± {:.4}", cell.mean, cell.stderr);
+    println!("baseline (optimal continuous, no CIS) = {:.4}", cell.baseline);
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let mut spec = ExperimentSpec::section6(args.usize_or("m", 100)?, 1);
+    spec.bandwidth = args.f64_or("r", 100.0)?;
+    spec.seed = args.u64_or("seed", 0x5EED)?;
+    if args.has_flag("cis") {
+        spec = spec.with_partial_cis();
+    }
+    if args.has_flag("fp") {
+        spec = spec.with_false_positives();
+    }
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let no_cis = solver::solve_no_cis(&inst)?;
+    println!("no-CIS optimum:   objective={:.4}  lambda={:.6}", no_cis.objective, no_cis.lambda);
+    if args.has_flag("cis") || args.has_flag("fp") {
+        let envs = inst.derived()?;
+        let with = solver::solve_with_cis(&inst, &envs, crate::policy::value::MAX_TERMS)?;
+        println!("with-CIS optimum: objective={:.4}  lambda={:.6}", with.objective, with.lambda);
+    }
+    let spent: f64 = no_cis.rates.iter().sum();
+    println!("budget spent: {spent:.2} / {}", inst.bandwidth);
+    Ok(())
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let cfg = crate::dataset::DatasetConfig {
+        n_urls: args.usize_or("n", 100_000)?,
+        seed: args.u64_or("seed", 20250710)?,
+        ..Default::default()
+    };
+    let recs = crate::dataset::generate(&cfg);
+    let with_cis = recs.iter().filter(|r| r.has_cis).count();
+    let declared = recs.iter().filter(|r| r.declared).count();
+    let (hp, hr) = crate::dataset::quality_histograms(&recs, 10);
+    println!("urls={} with_cis={} declared={}", recs.len(), with_cis, declared);
+    println!("importance-weighted precision median: {:.3}", hp.quantile(0.5));
+    println!("importance-weighted recall median:    {:.3}", hr.quantile(0.5));
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let precision = args.f64_or("precision", 0.5)?;
+    let recall = args.f64_or("recall", 0.6)?;
+    let seed = args.u64_or("seed", 1)?;
+    let page = crate::params::PageParams::from_quality(0.4, 0.1, precision, recall);
+    let mut rng = Rng::new(seed);
+    let obs = crate::estimation::generate_observations(&page, 0.8, 100_000.0, &mut rng);
+    let (np, nr) = crate::estimation::naive_precision_recall(&obs);
+    let (mp, mr) = crate::estimation::mle_precision_recall(&obs, 60);
+    println!("true      precision={precision:.3} recall={recall:.3}");
+    println!("naive     precision={np:.3} recall={nr:.3}");
+    println!("MLE       precision={mp:.3} recall={mr:.3}");
+    Ok(())
+}
+
+fn cmd_serve_shards(args: &Args) -> Result<()> {
+    let m = args.usize_or("m", 10_000)?;
+    let shards = args.usize_or("shards", 4)?;
+    let r = args.f64_or("r", 1000.0)?;
+    let horizon = args.f64_or("horizon", 20.0)?;
+    let mut rng = Rng::new(args.u64_or("seed", 42)?);
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let inst = spec.gen_instance(&mut rng).normalized();
+    // pre-draw a CIS stream for the pipeline
+    let mut cis: Vec<(f64, usize)> = Vec::new();
+    for (i, p) in inst.pages.iter().enumerate() {
+        let gamma = p.lam * p.delta + p.nu;
+        for t in crate::rngkit::poisson_process(&mut rng, gamma, horizon) {
+            cis.push((t, i));
+        }
+    }
+    cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let cfg = PipelineConfig { shards, queue_depth: 256, bandwidth: r, horizon };
+    let report = run_pipeline(&inst.pages, PolicyKind::GreedyNcis, &cis, &cfg);
+    println!(
+        "shards={} crawls={} cis={} backpressure_stalls={} wall={:?}",
+        shards, report.total_crawls, report.cis_applied, report.backpressure_stalls, report.wall
+    );
+    println!(
+        "throughput: {:.0} crawls/s (simulated R={r}/s over T={horizon})",
+        report.total_crawls as f64 / report.wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Run a config-file-defined experiment sweep: every `policies` entry on
+/// a shared instance spec, accuracy vs the analytical baseline.
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let path = args
+        .opt("config")
+        .ok_or_else(|| Error::Usage("experiment requires --config <file>".into()))?;
+    let cfg = crate::config::Config::load(Path::new(path))?;
+    let mut spec = ExperimentSpec::section6(
+        cfg.usize_or("instance.m", 100),
+        cfg.usize_or("reps", 5),
+    );
+    spec.bandwidth = cfg.f64_or("instance.bandwidth", 100.0);
+    spec.horizon = cfg.f64_or("instance.horizon", 1000.0);
+    spec.seed = cfg.f64_or("instance.seed", 0x5EED as f64) as u64;
+    if let Some(ab) = cfg.get("instance.lambda_beta").and_then(|v| v.as_f64_array()) {
+        if ab.len() == 2 {
+            spec.lam_beta = Some((ab[0], ab[1]));
+        }
+    }
+    if let Some(nr) = cfg.get("instance.nu_range").and_then(|v| v.as_f64_array()) {
+        if nr.len() == 2 {
+            spec.nu_range = Some((nr[0], nr[1]));
+        }
+    }
+    let policies: Vec<String> = match cfg.get("policies") {
+        Some(crate::config::Value::Array(vs)) => vs
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| Error::Config("policies must be strings".into()))
+            })
+            .collect::<Result<_>>()?,
+        _ => vec!["GREEDY".into(), "GREEDY-NCIS".into()],
+    };
+    println!(
+        "experiment `{}`: m={} R={} T={} reps={}",
+        cfg.str_or("title", path),
+        spec.m,
+        spec.bandwidth,
+        spec.horizon,
+        spec.reps
+    );
+    for name in policies {
+        let put = parse_policy(&name)?;
+        let cell = run_cell(&spec, put);
+        println!(
+            "  {:<18} accuracy = {:.4} ± {:.4}   (baseline {:.4})",
+            cell.policy, cell.mean, cell.stderr, cell.baseline
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| Error::Usage("figure <id> required".into()))?;
+    let reps = args.usize_or("reps", 10)?;
+    crate::figures::run_figure(id, reps)
+}
+
+/// Dispatch a parsed command line.
+pub fn run_cli(args: &Args) -> Result<()> {
+    // first use of the runtime logs artifacts state; keep CLI quiet otherwise
+    match args.command.as_deref() {
+        Some("simulate") => cmd_simulate(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("solve") => cmd_solve(args),
+        Some("dataset") => cmd_dataset(args),
+        Some("estimate") => cmd_estimate(args),
+        Some("serve-shards") => cmd_serve_shards(args),
+        Some("figure") => cmd_figure(args),
+        Some("report") => {
+            let path = args
+                .positionals
+                .first()
+                .ok_or_else(|| Error::Usage("report <figure-csv> required".into()))?;
+            let table = crate::report::Table::load(Path::new(path))?;
+            println!("{}", crate::report::render_chart(&table, 72, 18));
+            Ok(())
+        }
+        Some("artifacts") => {
+            let dir = Path::new(args.opt("dir").unwrap_or("artifacts"));
+            let engine = crate::runtime::PjrtEngine::load(dir)?;
+            println!("loaded {:?}", engine);
+            for (t, b) in engine.crawl_configs() {
+                println!("  crawl_value terms={t} batch={b}");
+            }
+            Ok(())
+        }
+        Some(other) => Err(Error::Usage(format!("unknown command `{other}`\n{USAGE}"))),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_policy_names() {
+        for name in [
+            "GREEDY",
+            "GREEDY-CIS",
+            "GREEDY-NCIS",
+            "G-NCIS-APPROX-1",
+            "G-NCIS-APPROX-2",
+            "GREEDY-CIS+",
+            "LDS",
+            "GREEDY-NCIS-LAZY",
+        ] {
+            parse_policy(name).unwrap();
+        }
+        assert!(parse_policy("NOPE").is_err());
+        assert!(parse_policy("G-NCIS-APPROX-x").is_err());
+        assert!(parse_policy("LDS-LAZY").is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Measurement harness for `benches/` (the image has no `criterion`).
+//!
+//! Provides warmup + repeated-sample timing with mean ± stderr, and a
+//! figure-output helper that writes the regenerated paper series as CSV
+//! under `target/figures/` plus an aligned text table to stdout.
+
+use std::io::Write;
+use std::time::Instant;
+
+use crate::stats::{summarize, Summary};
+
+/// One timing measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Standard error.
+    pub stderr_s: f64,
+    /// Iterations per sample.
+    pub iters: u64,
+    /// Samples taken.
+    pub samples: usize,
+}
+
+impl Measurement {
+    /// Throughput given items processed per iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (v, unit) = scale(self.mean_s);
+        let (e, _) = (self.stderr_s / self.mean_s * v, "");
+        write!(f, "{v:9.3} {unit} ± {e:.3}")
+    }
+}
+
+fn scale(s: f64) -> (f64, &'static str) {
+    if s < 1e-6 {
+        (s * 1e9, "ns")
+    } else if s < 1e-3 {
+        (s * 1e6, "µs")
+    } else if s < 1.0 {
+        (s * 1e3, "ms")
+    } else {
+        (s, "s ")
+    }
+}
+
+/// Time `f`, auto-calibrating the iteration count so each sample runs at
+/// least `min_sample_s`.
+pub fn measure<F: FnMut()>(mut f: F, samples: usize, min_sample_s: f64) -> Measurement {
+    // calibrate
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_sample_s || iters >= 1 << 24 {
+            break;
+        }
+        let grow = (min_sample_s / dt.max(1e-9) * 1.3).ceil() as u64;
+        iters = (iters * grow.max(2)).min(1 << 24);
+    }
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    let Summary { mean, stderr, .. } = summarize(&per_iter);
+    Measurement { mean_s: mean, stderr_s: stderr, iters, samples }
+}
+
+/// Print a labelled measurement line.
+pub fn report(name: &str, m: &Measurement) {
+    println!("{name:<44} {m}  ({} iters x {} samples)", m.iters, m.samples);
+}
+
+/// Writer for a regenerated figure: CSV under `target/figures/` plus an
+/// aligned table echoed to stdout.
+pub struct FigureOutput {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl FigureOutput {
+    /// New figure with CSV column names.
+    pub fn new(name: &str, header: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of displayable values.
+    pub fn rowf(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|c| format!("{c:.6}")).collect::<Vec<_>>());
+    }
+
+    /// Write CSV and print the table. Returns the CSV path.
+    pub fn finish(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/figures");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        // aligned echo
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (w, c) in widths.iter_mut().zip(r) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.name);
+        let hdr: Vec<String> =
+            self.header.iter().zip(&widths).map(|(h, w)| format!("{h:>w$}")).collect();
+        println!("{}", hdr.join("  "));
+        for r in &self.rows {
+            let line: Vec<String> =
+                r.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+            println!("{}", line.join("  "));
+        }
+        println!("-> {}", path.display());
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_something_cheap() {
+        let mut x = 0u64;
+        let m = measure(
+            || {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+            },
+            3,
+            0.001,
+        );
+        assert!(m.mean_s > 0.0);
+        assert!(m.iters >= 1);
+        assert!(m.per_second(1.0) > 1000.0);
+    }
+
+    #[test]
+    fn figure_output_roundtrip() {
+        let mut fig = FigureOutput::new("test_fig", &["m", "acc"]);
+        fig.rowf(&[100.0, 0.5]);
+        fig.rowf(&[200.0, 0.4]);
+        let path = fig.finish().unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("m,acc\n"));
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut fig = FigureOutput::new("bad", &["a", "b"]);
+        fig.rowf(&[1.0]);
+    }
+}

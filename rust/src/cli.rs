@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser (the image has no `clap`).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// `--flag` booleans.
+    pub flags: Vec<String>,
+    /// Remaining positionals.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Usage("bare `--` is not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option as string.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option as f64 with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key} expects a number, got `{v}`"))),
+        }
+    }
+
+    /// Option as usize with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key} expects an integer, got `{v}`"))),
+        }
+    }
+
+    /// Option as u64 with default.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key} expects an integer, got `{v}`"))),
+        }
+    }
+
+    /// Is the flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        // note the grammar: a bare `--flag` absorbs a following bare token
+        // as its value, so positionals go before flags (or use `--k=v`).
+        let a = parse("simulate extra1 extra2 --m 100 --policy GREEDY --verbose");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("m"), Some("100"));
+        assert_eq!(a.opt("policy"), Some("GREEDY"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --m=42 --x=hello");
+        assert_eq!(a.usize_or("m", 0).unwrap(), 42);
+        assert_eq!(a.opt("x"), Some("hello"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --r 2.5");
+        assert_eq!(a.f64_or("r", 0.0).unwrap(), 2.5);
+        assert_eq!(a.f64_or("missing", 9.0).unwrap(), 9.0);
+        assert!(parse("x --r nope").f64_or("r", 0.0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_before_flag() {
+        let a = parse("cmd --a --b v");
+        assert!(a.has_flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+}

@@ -1,0 +1,248 @@
+//! Minimal TOML-subset configuration parser (the image has no `serde`).
+//!
+//! Supports what the experiment configs need: `[section]` headers,
+//! `key = value` with string / f64 / i64 / bool / homogeneous arrays,
+//! `#` comments. Keys are addressed as `"section.key"` (top-level keys
+//! have no prefix).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Float (any number with `.` / `e`).
+    Float(f64),
+    /// Integer.
+    Int(i64),
+    /// Boolean.
+    Bool(bool),
+    /// Array of values.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As f64 (ints coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As &str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As vec of f64.
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Array(vs) => vs.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: flat `section.key → value` map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(tok: &str, line_no: usize) -> Result<Value> {
+    let tok = tok.trim();
+    if tok.starts_with('"') && tok.ends_with('"') && tok.len() >= 2 {
+        return Ok(Value::Str(tok[1..tok.len() - 1].to_string()));
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if !tok.contains('.') && !tok.contains('e') && !tok.contains('E') {
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    tok.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| Error::Config(format!("line {line_no}: cannot parse value `{tok}`")))
+}
+
+fn parse_value(tok: &str, line_no: usize) -> Result<Value> {
+    let tok = tok.trim();
+    if tok.starts_with('[') {
+        if !tok.ends_with(']') {
+            return Err(Error::Config(format!("line {line_no}: unterminated array")));
+        }
+        let inner = &tok[1..tok.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_scalar(s, line_no))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(tok, line_no)
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line_no = ln + 1;
+            // strip comments (naive: not inside strings — acceptable for
+            // our configs, which never put '#' in strings)
+            let line = match raw.find('#') {
+                Some(pos) => &raw[..pos],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!("line {line_no}: bad section header")));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {line_no}: expected key = value")))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            map.insert(full_key, parse_value(value, line_no)?);
+        }
+        Ok(Self { map })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// f64 with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// usize with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_i64).map(|i| i as usize).unwrap_or(default)
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    /// bool with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// All keys (for diagnostics).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment definition
+title = "fig4"
+reps = 100
+
+[instance]
+m = 1000
+bandwidth = 100.0
+horizon = 1e3
+lambda_beta = [0.25, 0.25]
+nu_range = [0.1, 0.6]
+use_cis = true
+policies = ["GREEDY", "GREEDY-NCIS"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("title", ""), "fig4");
+        assert_eq!(c.usize_or("reps", 0), 100);
+        assert_eq!(c.usize_or("instance.m", 0), 1000);
+        assert_eq!(c.f64_or("instance.bandwidth", 0.0), 100.0);
+        assert_eq!(c.f64_or("instance.horizon", 0.0), 1000.0);
+        assert!(c.bool_or("instance.use_cis", false));
+        assert_eq!(
+            c.get("instance.lambda_beta").unwrap().as_f64_array().unwrap(),
+            vec![0.25, 0.25]
+        );
+        match c.get("instance.policies").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.f64_or("nope", 7.5), 7.5);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn errors_on_bad_lines() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("key value").is_err());
+        assert!(Config::parse("key = [1, 2").is_err());
+        assert!(Config::parse("key = what").is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let c = Config::parse("a = 1 # trailing\n# full line\nb = 2").unwrap();
+        assert_eq!(c.usize_or("a", 0), 1);
+        assert_eq!(c.usize_or("b", 0), 2);
+    }
+}

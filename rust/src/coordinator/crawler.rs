@@ -1,0 +1,287 @@
+//! Exact discrete greedy crawler (Algorithm 1) and the LDS adapter.
+
+use std::sync::Arc;
+
+use crate::lds::LdsScheduler;
+use crate::params::{DerivedParams, PageParams};
+use crate::policy::PolicyKind;
+use crate::runtime::{PjrtEngine, ValueBatch};
+use crate::sim::engine::{PageState, Scheduler};
+
+/// Where crawl values are computed.
+pub enum ValueBackend {
+    /// Pure-rust f64 evaluation (exact; per-page).
+    Native,
+    /// Batched f32 evaluation on the PJRT engine (the AOT Pallas kernel);
+    /// `terms` selects the approximation-level artifact.
+    Pjrt {
+        /// Shared engine.
+        engine: Arc<PjrtEngine>,
+        /// Approximation level of the artifact to use.
+        terms: u32,
+    },
+}
+
+impl std::fmt::Debug for ValueBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValueBackend::Native => write!(f, "Native"),
+            ValueBackend::Pjrt { terms, .. } => write!(f, "Pjrt(terms={terms})"),
+        }
+    }
+}
+
+/// Project a policy's *beliefs* about the CIS process onto the general
+/// NCIS parametrization the kernel evaluates (§5.1 special cases):
+/// GREEDY believes there is no CIS process at all; GREEDY-CIS believes
+/// signals are noiseless (β = ∞, α̂ = Δ − γ); NCIS variants use the true
+/// derived parameters.
+pub fn belief_params(policy: PolicyKind, raw: &PageParams, d: &DerivedParams) -> DerivedParams {
+    match policy {
+        PolicyKind::Greedy => DerivedParams {
+            alpha: d.delta,
+            beta: f64::INFINITY,
+            gamma: 0.0,
+            nu: 0.0,
+            delta: d.delta,
+            mu: d.mu,
+        },
+        PolicyKind::GreedyCis => DerivedParams {
+            alpha: (d.delta - d.gamma).max(1e-6 * d.delta),
+            beta: f64::INFINITY,
+            gamma: d.gamma,
+            nu: 0.0,
+            delta: d.delta,
+            mu: d.mu,
+        },
+        PolicyKind::GreedyCisPlus => {
+            if raw.precision() > 0.7 && raw.recall() > 0.6 {
+                belief_params(PolicyKind::GreedyCis, raw, d)
+            } else {
+                belief_params(PolicyKind::Greedy, raw, d)
+            }
+        }
+        PolicyKind::GreedyNcis | PolicyKind::NcisApprox(_) => *d,
+    }
+}
+
+/// Algorithm 1 with an exact argmax over all pages at every tick.
+pub struct GreedyScheduler {
+    policy: PolicyKind,
+    raw: Vec<PageParams>,
+    envs: Vec<DerivedParams>,
+    /// Per-page belief projection (what the kernel is fed).
+    beliefs: Vec<DerivedParams>,
+    backend: ValueBackend,
+    batch: ValueBatch,
+    /// Crawl values computed at the last tick (exposed for rate plots).
+    pub last_values: Vec<f64>,
+    /// EMA of selected crawl values — the paper's estimate of the
+    /// stationary threshold Λ (exposed for diagnostics / lazy parity).
+    pub lambda_estimate: f64,
+}
+
+impl GreedyScheduler {
+    /// Build from raw page parameters (importance should be normalized).
+    pub fn new(policy: PolicyKind, pages: &[PageParams], backend: ValueBackend) -> Self {
+        let envs: Vec<DerivedParams> = pages.iter().map(DerivedParams::from_raw).collect();
+        let beliefs = pages
+            .iter()
+            .zip(&envs)
+            .map(|(p, d)| belief_params(policy, p, d))
+            .collect();
+        Self {
+            policy,
+            raw: pages.to_vec(),
+            envs,
+            beliefs,
+            backend,
+            batch: ValueBatch::with_capacity(pages.len()),
+            last_values: vec![0.0; pages.len()],
+            lambda_estimate: 0.0,
+        }
+    }
+
+    fn select_native(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = None;
+        for (i, (d, p)) in self.envs.iter().zip(&self.raw).enumerate() {
+            let v = self.policy.crawl_value(p, d, states[i].tau_elap(t), states[i].n_cis);
+            self.last_values[i] = v;
+            if v > best {
+                best = v;
+                arg = Some(i);
+            }
+        }
+        if let Some(i) = arg {
+            self.update_lambda(self.last_values[i]);
+        }
+        arg
+    }
+
+    fn select_pjrt(&mut self, engine: &PjrtEngine, terms: u32, t: f64, states: &[PageState]) -> Option<usize> {
+        self.batch.clear();
+        for (i, b) in self.beliefs.iter().enumerate() {
+            // effective time under the policy's OWN beliefs: a pending
+            // CIS saturates a noiseless-belief page (β̂ = ∞ → capped)
+            let iota = b.effective_time(states[i].tau_elap(t), states[i].n_cis);
+            self.batch.push(iota, b);
+        }
+        let (values, idx, best) = engine
+            .crawl_values_argmax(terms, &self.batch)
+            .expect("pjrt crawl value execution failed");
+        for (dst, &v) in self.last_values.iter_mut().zip(&values) {
+            *dst = v as f64;
+        }
+        self.update_lambda(best as f64);
+        Some(idx)
+    }
+
+    fn update_lambda(&mut self, selected: f64) {
+        const A: f64 = 0.05;
+        self.lambda_estimate = if self.lambda_estimate == 0.0 {
+            selected
+        } else {
+            (1.0 - A) * self.lambda_estimate + A * selected
+        };
+    }
+}
+
+impl Scheduler for GreedyScheduler {
+    fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+        match &self.backend {
+            ValueBackend::Native => self.select_native(t, states),
+            ValueBackend::Pjrt { engine, terms } => {
+                let engine = Arc::clone(engine);
+                let terms = *terms;
+                self.select_pjrt(&engine, terms, t, states)
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        self.policy.name()
+    }
+}
+
+/// Adapter: drives the precomputed LDS schedule as a [`Scheduler`].
+pub struct LdsAdapter {
+    inner: LdsScheduler,
+}
+
+impl LdsAdapter {
+    /// From continuous per-page rates (the solver's output).
+    pub fn new(rates: &[f64]) -> Self {
+        Self { inner: LdsScheduler::new(rates) }
+    }
+}
+
+impl Scheduler for LdsAdapter {
+    fn select(&mut self, _t: f64, _states: &[PageState]) -> Option<usize> {
+        self.inner.next()
+    }
+
+    fn name(&self) -> String {
+        "LDS".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::Rng;
+    use crate::sim::{generate_traces, simulate, CisDelay, SimConfig};
+
+    fn pages(m: usize, seed: u64, with_cis: bool) -> Vec<PageParams> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.01, 1.0),
+                mu: rng.range(0.01, 1.0),
+                lam: if with_cis { crate::rngkit::beta(&mut rng, 0.25, 0.25) } else { 0.0 },
+                nu: if with_cis { rng.range(0.1, 0.6) } else { 0.0 },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn greedy_crawls_every_tick() {
+        let ps = pages(20, 1, false);
+        let mut rng = Rng::new(2);
+        let traces = generate_traces(&ps, 50.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(5.0, 50.0);
+        let mut sched = GreedyScheduler::new(PolicyKind::Greedy, &ps, ValueBackend::Native);
+        let res = simulate(&traces, &cfg, &mut sched);
+        assert_eq!(res.crawl_counts.iter().map(|&c| c as u64).sum::<u64>(), res.ticks);
+    }
+
+    #[test]
+    fn greedy_beats_random_pages_with_high_importance() {
+        // the most important fast-changing page must be crawled most
+        let ps = vec![
+            PageParams { delta: 1.0, mu: 0.9, lam: 0.0, nu: 0.0 },
+            PageParams { delta: 0.05, mu: 0.02, lam: 0.0, nu: 0.0 },
+            PageParams { delta: 0.05, mu: 0.02, lam: 0.0, nu: 0.0 },
+        ];
+        let mut rng = Rng::new(3);
+        let traces = generate_traces(&ps, 200.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(2.0, 200.0);
+        let mut sched = GreedyScheduler::new(PolicyKind::Greedy, &ps, ValueBackend::Native);
+        let res = simulate(&traces, &cfg, &mut sched);
+        assert!(res.crawl_counts[0] > res.crawl_counts[1] * 2);
+    }
+
+    #[test]
+    fn ncis_uses_signals_to_improve_accuracy() {
+        // strongly-signalled environment: NCIS should beat GREEDY
+        let mut rng = Rng::new(4);
+        let ps: Vec<PageParams> = (0..50)
+            .map(|_| PageParams {
+                delta: rng.range(0.2, 1.0),
+                mu: rng.range(0.1, 1.0),
+                lam: 0.9,
+                nu: 0.05,
+            })
+            .collect();
+        let horizon = 300.0;
+        let cfg = SimConfig::new(5.0, horizon);
+        let mut acc = [0.0f64; 2];
+        for rep in 0..5 {
+            let mut trng = Rng::new(100 + rep);
+            let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
+            let mut g = GreedyScheduler::new(PolicyKind::Greedy, &ps, ValueBackend::Native);
+            let mut n = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+            acc[0] += simulate(&traces, &cfg, &mut g).accuracy;
+            acc[1] += simulate(&traces, &cfg, &mut n).accuracy;
+        }
+        assert!(
+            acc[1] > acc[0],
+            "NCIS {} should beat GREEDY {}",
+            acc[1] / 5.0,
+            acc[0] / 5.0
+        );
+    }
+
+    #[test]
+    fn lds_adapter_respects_rates() {
+        let rates = [4.0, 1.0];
+        let mut a = LdsAdapter::new(&rates);
+        let mut counts = [0usize; 2];
+        for j in 0..500 {
+            let i = a.select(j as f64, &[]).unwrap();
+            counts[i] += 1;
+        }
+        assert!((counts[0] as f64 - 400.0).abs() <= 2.0, "{counts:?}");
+    }
+
+    #[test]
+    fn lambda_estimate_converges_positive() {
+        let ps = pages(30, 5, true);
+        let mut rng = Rng::new(6);
+        let traces = generate_traces(&ps, 100.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(5.0, 100.0);
+        let mut sched = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+        simulate(&traces, &cfg, &mut sched);
+        assert!(sched.lambda_estimate > 0.0);
+    }
+}

@@ -1,0 +1,465 @@
+//! The §5.2 lazy/tiered scheduler.
+//!
+//! Exact argmax re-evaluates every page at every tick — `O(m)` work that
+//! the paper explicitly calls out as unnecessary: *"only the comparison
+//! between the pages with the top crawl values matters … we can estimate
+//! the crawl value threshold where a page is likely to be selected …
+//! and estimate the next time when the crawl value of a page needs to be
+//! recomputed."*
+//!
+//! Design (exploiting Lemma 2: crawl values are monotone nondecreasing
+//! between crawls, and bounded by `μ̃/Δ`):
+//!
+//! - **Cold pages** (value far below the running threshold estimate
+//!   `Λ̂`) live in a *wake calendar*: the earliest time a page could
+//!   reach `margin·Λ̂` is found by inverting the monotone `V`
+//!   (`policy::value::inverse_value`); the page is not touched again
+//!   until then. CIS arrivals jump the value, so they re-queue an
+//!   immediate wake.
+//! - **Hot pages** live in a max-heap keyed by their *last computed*
+//!   value (a lower bound — values only grow). Selection pops the heap
+//!   top, recomputes its exact value, and accepts it once it dominates
+//!   the next entry's stored bound; otherwise the refreshed entry is
+//!   pushed back and the next is tried (bounded number of refreshes per
+//!   tick — the classic lazy re-evaluation of index policies).
+//!
+//! Stale heap entries are handled by versioning (lazy deletion). The
+//! scheduler is *approximate* only through bound staleness; the
+//! `lazy_parity` test and the `perf` bench quantify the accuracy parity
+//! and the per-tick evaluation savings.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::crawler::belief_params;
+use crate::params::{DerivedParams, PageParams};
+use crate::policy::{value, PolicyKind};
+use crate::sim::engine::{PageState, Scheduler};
+
+/// Ordered f64 for heap keys.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Max refreshes per tick before we accept the best value seen so far.
+const MAX_REFRESH: usize = 24;
+
+/// Lazy Algorithm-1 scheduler (native value backend).
+pub struct LazyGreedyScheduler {
+    policy: PolicyKind,
+    raw: Vec<PageParams>,
+    envs: Vec<DerivedParams>,
+    /// per-page BELIEF projection (what wake-time inversion must use:
+    /// a GREEDY scheduler's value follows V_GREEDY, not V_NCIS)
+    beliefs: Vec<DerivedParams>,
+    /// min-heap of (wake time, version, page) — cold pages
+    wakes: BinaryHeap<Reverse<(OrdF64, u32, usize)>>,
+    /// max-heap of (stored value, version, page) — hot pages
+    hot: BinaryHeap<(OrdF64, u32, usize)>,
+    /// entry version per page (stale heap entries are skipped)
+    version: Vec<u32>,
+    /// current wake time per cold page (for O(1) CIS wake shifts)
+    wake_at: Vec<f64>,
+    /// whether the page currently belongs to the hot heap
+    is_hot: Vec<bool>,
+    /// running threshold estimate Λ̂ (EMA of selected values)
+    lambda: f64,
+    /// hot/cold margin in (0, 1]
+    margin: f64,
+    /// diagnostics: value evaluations performed
+    pub evals: u64,
+    /// diagnostics: evaluations from wake processing
+    pub wake_evals: u64,
+    /// diagnostics: evaluations from CIS notifications
+    pub cis_evals: u64,
+    /// diagnostics: evaluations from the hot-heap refresh loop
+    pub refresh_evals: u64,
+    /// diagnostics: ticks served
+    pub ticks: u64,
+    /// hot-heap keys are re-computed in bulk every this many ticks —
+    /// stale lower-bound keys otherwise starve pages whose value grew
+    /// without an external (CIS) refresh trigger
+    rekey_period: u64,
+    /// diagnostics: demote calls
+    pub demotes: u64,
+    /// diagnostics: immediate wakes (wake_time <= t at demote)
+    pub immediate_wakes: u64,
+}
+
+impl LazyGreedyScheduler {
+    /// Build with the default margin (0.7).
+    pub fn new(policy: PolicyKind, pages: &[PageParams]) -> Self {
+        Self::with_margin(policy, pages, 0.7)
+    }
+
+    /// Build with an explicit hot/cold margin in (0, 1].
+    pub fn with_margin(policy: PolicyKind, pages: &[PageParams], margin: f64) -> Self {
+        assert!(margin > 0.0 && margin <= 1.0);
+        let envs: Vec<DerivedParams> = pages.iter().map(DerivedParams::from_raw).collect();
+        let beliefs: Vec<DerivedParams> =
+            pages.iter().zip(&envs).map(|(p, d)| belief_params(policy, p, d)).collect();
+        let m = pages.len();
+        let mut wakes = BinaryHeap::with_capacity(m);
+        for i in 0..m {
+            wakes.push(Reverse((OrdF64(0.0), 0, i)));
+        }
+        Self {
+            policy,
+            raw: pages.to_vec(),
+            envs,
+            beliefs,
+            wakes,
+            hot: BinaryHeap::with_capacity(m),
+            version: vec![0; m],
+            wake_at: vec![0.0; m],
+            is_hot: vec![false; m],
+            lambda: 0.0,
+            margin,
+            rekey_period: 32,
+            evals: 0,
+            demotes: 0,
+            immediate_wakes: 0,
+            wake_evals: 0,
+            cis_evals: 0,
+            refresh_evals: 0,
+            ticks: 0,
+        }
+    }
+
+    #[inline]
+    fn value(&mut self, i: usize, t: f64, states: &[PageState]) -> f64 {
+        self.evals += 1;
+        let v = self.policy
+            .crawl_value(&self.raw[i], &self.envs[i], states[i].tau_elap(t), states[i].n_cis);
+        debug_assert!(!v.is_nan(), "NaN crawl value for page {i}");
+        v
+    }
+
+    #[inline]
+    fn threshold(&self) -> f64 {
+        self.margin * self.lambda
+    }
+
+    /// Earliest time page `i` could reach `target` (monotone inverse in
+    /// effective time; CIS jumps handled by `on_cis` re-queues).
+    fn wake_time(&self, i: usize, t: f64, states: &[PageState], target: f64) -> f64 {
+        // invert the value function the policy actually uses: the BELIEF
+        // projection (V_GREEDY for GREEDY, V_CIS for GREEDY-CIS, ...)
+        let d = &self.beliefs[i];
+        let iota_now = d.effective_time(states[i].tau_elap(t), states[i].n_cis);
+        let terms = match self.policy {
+            PolicyKind::NcisApprox(j) => j,
+            _ => value::MAX_TERMS,
+        };
+        match value::inverse_value(target, d, terms) {
+            // target unreachable (sup V < target): nap until the value
+            // has saturated anyway, then re-check the (moving) threshold
+            None => t + 8.0 / d.delta,
+            Some(iota_target) if iota_target <= iota_now => t,
+            Some(iota_target) => t + (iota_target - iota_now),
+        }
+    }
+
+    /// Move a page into the hot heap with a freshly computed value.
+    fn promote(&mut self, i: usize, v: f64) {
+        self.version[i] = self.version[i].wrapping_add(1);
+        self.is_hot[i] = true;
+        self.hot.push((OrdF64(v), self.version[i], i));
+    }
+
+    /// Put a page to sleep until it could plausibly matter.
+    ///
+    /// The wake target is the FULL threshold estimate Λ̂ (not the
+    /// hysteresis margin `margin·Λ̂` used for promotion): a page waking
+    /// at V ≈ Λ̂ clears the promotion bar comfortably, so each
+    /// sleep/wake cycle costs exactly one evaluation instead of
+    /// oscillating with the EMA drift of Λ̂.
+    fn demote(&mut self, i: usize, t: f64, states: &[PageState]) {
+        self.version[i] = self.version[i].wrapping_add(1);
+        self.is_hot[i] = false;
+        let target = self.lambda.max(1e-12);
+        let wt = self.wake_time(i, t, states, target);
+        self.demotes += 1;
+        if wt <= t + 1e-6 {
+            self.immediate_wakes += 1;
+        }
+        let wake = wt.max(t + 1e-9);
+        self.wake_at[i] = wake;
+        self.wakes.push(Reverse((OrdF64(wake), self.version[i], i)));
+    }
+
+    /// Promote due pages from the wake calendar.
+    fn process_wakes(&mut self, t: f64, states: &[PageState]) {
+        while let Some(&Reverse((OrdF64(wt), ver, i))) = self.wakes.peek() {
+            if wt > t {
+                break;
+            }
+            self.wakes.pop();
+            if ver != self.version[i] || self.is_hot[i] {
+                continue; // stale entry
+            }
+            let v = self.value(i, t, states);
+            self.wake_evals += 1;
+            if v >= self.threshold() || self.lambda == 0.0 {
+                self.promote(i, v);
+            } else {
+                self.demote(i, t, states);
+            }
+        }
+    }
+}
+
+impl LazyGreedyScheduler {
+    /// Recompute every hot page's heap key (bulk re-keying): stored keys
+    /// are lower bounds that only a CIS event would otherwise refresh,
+    /// so policies that ignore CIS (or noiseless environments) would
+    /// starve growing pages without this.
+    fn rekey_hot(&mut self, t: f64, states: &[PageState]) {
+        let hot_pages: Vec<usize> =
+            (0..self.is_hot.len()).filter(|&i| self.is_hot[i]).collect();
+        if hot_pages.is_empty() {
+            return;
+        }
+        self.hot.clear();
+        for i in hot_pages {
+            let v = self.value(i, t, states);
+            self.version[i] = self.version[i].wrapping_add(1);
+            self.hot.push((OrdF64(v), self.version[i], i));
+        }
+    }
+}
+
+impl Scheduler for LazyGreedyScheduler {
+    fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+        self.ticks += 1;
+        if self.ticks % self.rekey_period == 0 {
+            self.rekey_hot(t, states);
+        }
+        self.process_wakes(t, states);
+        // lazy re-evaluation over the hot heap
+        let mut best: Option<(f64, usize)> = None;
+        let mut refreshes = 0usize;
+        loop {
+            let Some(&(OrdF64(stored), ver, i)) = self.hot.peek() else { break };
+            if ver != self.version[i] || !self.is_hot[i] {
+                self.hot.pop();
+                continue;
+            }
+            if let Some((bv, _)) = best {
+                // stored values are lower bounds of CURRENT values, but
+                // they upper-bound what we last *measured*; once our best
+                // freshly-measured value dominates the next stored bound
+                // grown by nothing (values only grow — so this is a
+                // heuristic cutoff), accept.
+                if bv >= stored || refreshes >= MAX_REFRESH {
+                    break;
+                }
+            }
+            self.hot.pop();
+            let v = self.value(i, t, states);
+            self.refresh_evals += 1;
+            refreshes += 1;
+            if v < self.threshold() {
+                // fell below the (risen) threshold: back to the calendar
+                self.demote(i, t, states);
+                continue;
+            }
+            // re-insert with the refreshed value
+            self.version[i] = self.version[i].wrapping_add(1);
+            self.hot.push((OrdF64(v), self.version[i], i));
+            match best {
+                Some((bv, _)) if bv >= v => {}
+                _ => best = Some((v, i)),
+            }
+        }
+        // fallback: nothing hot — force-wake the earliest calendar entries
+        if best.is_none() {
+            while let Some(Reverse((_, ver, i))) = self.wakes.pop() {
+                if ver != self.version[i] || self.is_hot[i] {
+                    continue;
+                }
+                let v = self.value(i, t, states);
+                best = Some((v, i));
+                break;
+            }
+        }
+        let (bv, bi) = best?;
+        // threshold update + reset the crawled page
+        const A: f64 = 0.05;
+        self.lambda = if self.lambda == 0.0 { bv } else { (1.0 - A) * self.lambda + A * bv };
+        // the engine resets the page state right after select; schedule
+        // its wake from the zero state
+        self.version[bi] = self.version[bi].wrapping_add(1);
+        self.is_hot[bi] = false;
+        let d = &self.beliefs[bi];
+        let target = self.lambda.max(1e-12);
+        let terms = match self.policy {
+            PolicyKind::NcisApprox(j) => j,
+            _ => value::MAX_TERMS,
+        };
+        let iota_target = value::inverse_value(target, d, terms).unwrap_or(8.0 / d.delta);
+        let wake = t + iota_target.max(1e-9);
+        self.wake_at[bi] = wake;
+        self.wakes.push(Reverse((OrdF64(wake), self.version[bi], bi)));
+        Some(bi)
+    }
+
+    fn on_cis(&mut self, page: usize, t: f64, states: &[PageState]) {
+        if !self.policy.uses_cis() {
+            return;
+        }
+        if self.is_hot[page] {
+            // its stored value is now a stale lower bound; refresh so the
+            // jump is visible to the selection loop promptly
+            self.cis_evals += 1;
+            let v = self.value(page, t, states);
+            self.promote(page, v);
+        } else {
+            // a CIS advances the effective time by exactly β, so the
+            // (monotone) value reaches its wake target β earlier — shift
+            // the wake without evaluating anything (O(log) push). Uses
+            // the BELIEF β (the GREEDY belief has γ = 0: no shift at all).
+            if self.beliefs[page].gamma <= 0.0 {
+                return;
+            }
+            let beta = self.beliefs[page].beta;
+            let new_wake = if beta.is_finite() {
+                (self.wake_at[page] - beta).max(t + 1e-9)
+            } else {
+                t + 1e-9 // noiseless CIS: value saturates immediately
+            };
+            if new_wake < self.wake_at[page] {
+                self.version[page] = self.version[page].wrapping_add(1);
+                self.wake_at[page] = new_wake;
+                self.wakes.push(Reverse((OrdF64(new_wake), self.version[page], page)));
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("{}-LAZY", self.policy.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::crawler::{GreedyScheduler, ValueBackend};
+    use crate::rngkit::Rng;
+    use crate::sim::{generate_traces, simulate, CisDelay, SimConfig};
+
+    fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.01, 1.0),
+                mu: rng.range(0.01, 1.0),
+                lam: crate::rngkit::beta(&mut rng, 0.25, 0.25),
+                nu: rng.range(0.1, 0.6),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lazy_parity_with_exact() {
+        let ps = pages(150, 1);
+        let horizon = 200.0;
+        let cfg = SimConfig::new(10.0, horizon);
+        let mut acc_exact = 0.0;
+        let mut acc_lazy = 0.0;
+        let reps = 4;
+        for rep in 0..reps {
+            let mut rng = Rng::new(50 + rep);
+            let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+            let mut ex = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+            let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+            acc_exact += simulate(&traces, &cfg, &mut ex).accuracy;
+            acc_lazy += simulate(&traces, &cfg, &mut lz).accuracy;
+        }
+        acc_exact /= reps as f64;
+        acc_lazy /= reps as f64;
+        assert!(
+            (acc_exact - acc_lazy).abs() < 0.02,
+            "exact {acc_exact} vs lazy {acc_lazy}"
+        );
+    }
+
+    #[test]
+    fn lazy_parity_tight_bandwidth() {
+        // the regime that previously degenerated: many pages, few crawls
+        let ps = pages(800, 9);
+        let horizon = 100.0;
+        let cfg = SimConfig::new(5.0, horizon);
+        let mut rng = Rng::new(10);
+        let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+        let mut ex = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        let a = simulate(&traces, &cfg, &mut ex).accuracy;
+        let b = simulate(&traces, &cfg, &mut lz).accuracy;
+        assert!((a - b).abs() < 0.03, "exact {a} vs lazy {b}");
+    }
+
+    #[test]
+    fn lazy_saves_evaluations() {
+        let ps = pages(400, 2);
+        let horizon = 100.0;
+        let cfg = SimConfig::new(10.0, horizon);
+        let mut rng = Rng::new(3);
+        let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        let res = simulate(&traces, &cfg, &mut lz);
+        eprintln!(
+            "diag: wake={} cis={} refresh={} total={} ticks={} demotes={} immediate={}",
+            lz.wake_evals, lz.cis_evals, lz.refresh_evals, lz.evals, lz.ticks,
+            lz.demotes, lz.immediate_wakes
+        );
+        let exact_evals = res.ticks as f64 * ps.len() as f64;
+        assert!(
+            (lz.evals as f64) < 0.25 * exact_evals,
+            "lazy evals {} vs exact {}",
+            lz.evals,
+            exact_evals
+        );
+    }
+
+    #[test]
+    fn every_tick_crawls_something() {
+        let ps = pages(30, 4);
+        let cfg = SimConfig::new(5.0, 50.0);
+        let mut rng = Rng::new(5);
+        let traces = generate_traces(&ps, 50.0, CisDelay::None, &mut rng);
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        let res = simulate(&traces, &cfg, &mut lz);
+        let total: u64 = res.crawl_counts.iter().map(|&c| c as u64).sum();
+        assert_eq!(total, res.ticks);
+    }
+
+    #[test]
+    fn works_for_all_policy_kinds() {
+        let ps = pages(40, 6);
+        let cfg = SimConfig::new(4.0, 40.0);
+        for kind in [
+            PolicyKind::Greedy,
+            PolicyKind::GreedyCis,
+            PolicyKind::GreedyNcis,
+            PolicyKind::NcisApprox(2),
+            PolicyKind::GreedyCisPlus,
+        ] {
+            let mut rng = Rng::new(7);
+            let traces = generate_traces(&ps, 40.0, CisDelay::None, &mut rng);
+            let mut lz = LazyGreedyScheduler::new(kind, &ps);
+            let res = simulate(&traces, &cfg, &mut lz);
+            assert!((0.0..=1.0).contains(&res.accuracy), "{}", lz.name());
+        }
+    }
+}

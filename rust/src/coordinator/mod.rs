@@ -1,0 +1,21 @@
+//! The Layer-3 coordination contribution: drivers of Algorithm 1.
+//!
+//! - [`crawler`] — the exact discrete greedy policy (`argmax_i V`), with
+//!   pluggable value backends (native f64 or the PJRT batched engine).
+//! - [`lazy`] — the §5.2 production scheduler: threshold tracking + wake
+//!   calendar so most pages are *not* re-evaluated at every tick.
+//! - [`shard`] — N-way sharding with 1/N bandwidth per shard (§5.2) and
+//!   load rebalancing.
+//! - [`pipeline`] — a threaded streaming orchestrator (event ingestion,
+//!   bounded queues / backpressure, worker shards) used by the
+//!   `serve-shards` CLI and the Appendix-G scale experiment.
+
+pub mod crawler;
+pub mod hosts;
+pub mod lazy;
+pub mod pipeline;
+pub mod shard;
+
+pub use crawler::{GreedyScheduler, LdsAdapter, ValueBackend};
+pub use lazy::LazyGreedyScheduler;
+pub use shard::{rebalance, ShardPlan, ShardedRun};

@@ -1,0 +1,267 @@
+//! Threaded streaming orchestrator — the deployable shape of the system.
+//!
+//! A production crawler is a pipeline, not a batch simulation: CIS and
+//! request events *stream in*, shard workers keep their scheduler state
+//! warm, and a ticker thread asks each shard for its next crawl. This
+//! module wires that topology with `std::sync::mpsc` bounded channels
+//! (backpressure: a slow shard throttles ingestion rather than dropping
+//! signals), and reports shard-level throughput metrics.
+//!
+//! Used by the `serve-shards` CLI command and the Appendix-G scale bench.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+use crate::params::PageParams;
+use crate::policy::PolicyKind;
+use crate::sim::engine::{PageState, Scheduler};
+
+/// A message into a shard worker.
+#[derive(Debug, Clone, Copy)]
+pub enum ShardMsg {
+    /// CIS delivery for local page index at time t.
+    Cis {
+        /// Local page index within the shard.
+        page: usize,
+        /// Delivery time.
+        t: f64,
+    },
+    /// Tick: crawl one page at time t.
+    Tick {
+        /// Tick time.
+        t: f64,
+    },
+    /// Drain and stop.
+    Shutdown,
+}
+
+/// Counters shared with the driver.
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    /// Crawls executed.
+    pub crawls: AtomicU64,
+    /// CIS messages applied.
+    pub cis_applied: AtomicU64,
+    /// Ingestion stalls caused by a full shard queue (backpressure).
+    pub backpressure_stalls: AtomicU64,
+}
+
+/// One shard worker: owns scheduler + state, consumes its queue.
+fn shard_worker(
+    rx: Receiver<ShardMsg>,
+    mut scheduler: Box<dyn Scheduler + Send>,
+    m: usize,
+    metrics: Arc<PipelineMetrics>,
+) -> Vec<u32> {
+    let mut states = vec![PageState { last_crawl: 0.0, n_cis: 0 }; m];
+    let mut crawl_counts = vec![0u32; m];
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Cis { page, t } => {
+                states[page].n_cis = states[page].n_cis.saturating_add(1);
+                scheduler.on_cis(page, t, &states);
+                metrics.cis_applied.fetch_add(1, Ordering::Relaxed);
+            }
+            ShardMsg::Tick { t } => {
+                if let Some(i) = scheduler.select(t, &states) {
+                    states[i] = PageState { last_crawl: t, n_cis: 0 };
+                    crawl_counts[i] += 1;
+                    scheduler.on_crawl(i, t, &states);
+                    metrics.crawls.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            ShardMsg::Shutdown => break,
+        }
+    }
+    crawl_counts
+}
+
+/// Blocking send with backpressure accounting.
+fn send_backpressured(
+    tx: &SyncSender<ShardMsg>,
+    msg: ShardMsg,
+    metrics: &PipelineMetrics,
+) {
+    let mut m = msg;
+    loop {
+        match tx.try_send(m) {
+            Ok(()) => return,
+            Err(TrySendError::Full(back)) => {
+                metrics.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+                m = back;
+                std::thread::yield_now();
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+/// Configuration of a streaming run.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Number of shard workers.
+    pub shards: usize,
+    /// Bounded queue depth per shard (backpressure horizon).
+    pub queue_depth: usize,
+    /// Global bandwidth R (ticks/sec of simulated time).
+    pub bandwidth: f64,
+    /// Simulated horizon.
+    pub horizon: f64,
+}
+
+/// Outcome of a streaming run.
+#[derive(Debug)]
+pub struct PipelineReport {
+    /// Crawls per shard.
+    pub crawls_per_shard: Vec<u64>,
+    /// Total crawls.
+    pub total_crawls: u64,
+    /// CIS applied.
+    pub cis_applied: u64,
+    /// Backpressure stalls observed.
+    pub backpressure_stalls: u64,
+    /// Wall-clock duration of the run.
+    pub wall: std::time::Duration,
+}
+
+/// Drive a full streaming run: pages are round-robin sharded, a CIS
+/// stream (precomputed event times) and the tick clock are multiplexed
+/// into per-shard bounded queues in simulated-time order.
+pub fn run_pipeline(
+    pages: &[PageParams],
+    policy: PolicyKind,
+    cis_events: &[(f64, usize)], // (time, global page), sorted by time
+    cfg: &PipelineConfig,
+) -> PipelineReport {
+    assert!(cfg.shards > 0);
+    let metrics = Arc::new(PipelineMetrics::default());
+    let plan = crate::coordinator::shard::ShardPlan::round_robin(pages.len(), cfg.shards);
+    let members = plan.shard_members();
+    // local index of each global page within its shard
+    let mut local_index = vec![0usize; pages.len()];
+    for member in &members {
+        for (li, &gi) in member.iter().enumerate() {
+            local_index[gi] = li;
+        }
+    }
+    let start = std::time::Instant::now();
+    let mut crawls_per_shard = vec![0u64; cfg.shards];
+    std::thread::scope(|scope| {
+        let mut senders: Vec<SyncSender<ShardMsg>> = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for member in &members {
+            let (tx, rx) = sync_channel::<ShardMsg>(cfg.queue_depth);
+            senders.push(tx);
+            let pages_s: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
+            let mcount = pages_s.len();
+            let metrics = Arc::clone(&metrics);
+            let sched: Box<dyn Scheduler + Send> =
+                Box::new(crate::coordinator::lazy::LazyGreedyScheduler::new(policy, &pages_s));
+            handles.push(scope.spawn(move || shard_worker(rx, sched, mcount, metrics)));
+        }
+        // multiplex: ticks round-robin across shards at global rate R
+        // (integer tick index — accumulating f64 drifts past the horizon)
+        let tick_dt = 1.0 / cfg.bandwidth;
+        let total_ticks = (cfg.horizon * cfg.bandwidth).round() as u64;
+        let mut tick_idx = 1u64;
+        let mut tick_shard = 0usize;
+        let mut ev = 0usize;
+        while tick_idx <= total_ticks || ev < cis_events.len() {
+            let next_tick =
+                if tick_idx <= total_ticks { tick_idx as f64 * tick_dt } else { f64::INFINITY };
+            let next_cis = cis_events.get(ev).map(|e| e.0).unwrap_or(f64::INFINITY);
+            if next_cis <= next_tick && ev < cis_events.len() {
+                let (t, gpage) = cis_events[ev];
+                if t <= cfg.horizon {
+                    let s = plan.assignment[gpage];
+                    send_backpressured(
+                        &senders[s],
+                        ShardMsg::Cis { page: local_index[gpage], t },
+                        &metrics,
+                    );
+                }
+                ev += 1;
+            } else {
+                if tick_idx > total_ticks {
+                    break;
+                }
+                send_backpressured(&senders[tick_shard], ShardMsg::Tick { t: next_tick }, &metrics);
+                tick_shard = (tick_shard + 1) % cfg.shards;
+                tick_idx += 1;
+            }
+        }
+        for tx in &senders {
+            let _ = tx.send(ShardMsg::Shutdown);
+        }
+        drop(senders);
+        for (s, h) in handles.into_iter().enumerate() {
+            let counts = h.join().expect("shard worker panicked");
+            crawls_per_shard[s] = counts.iter().map(|&c| c as u64).sum();
+        }
+    });
+    PipelineReport {
+        total_crawls: crawls_per_shard.iter().sum(),
+        crawls_per_shard,
+        cis_applied: metrics.cis_applied.load(Ordering::Relaxed),
+        backpressure_stalls: metrics.backpressure_stalls.load(Ordering::Relaxed),
+        wall: start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::Rng;
+
+    fn pages(m: usize) -> Vec<PageParams> {
+        let mut rng = Rng::new(1);
+        (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: 0.5,
+                nu: 0.2,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipeline_executes_all_ticks() {
+        let ps = pages(64);
+        let cfg = PipelineConfig { shards: 4, queue_depth: 16, bandwidth: 20.0, horizon: 50.0 };
+        let report = run_pipeline(&ps, PolicyKind::GreedyNcis, &[], &cfg);
+        // 20 ticks/sec * 50s = 1000 ticks total
+        assert_eq!(report.total_crawls, 1000);
+        // round-robin across 4 shards => 250 each
+        assert!(report.crawls_per_shard.iter().all(|&c| c == 250));
+    }
+
+    #[test]
+    fn pipeline_applies_cis_in_order() {
+        let ps = pages(16);
+        let mut rng = Rng::new(2);
+        let mut cis: Vec<(f64, usize)> = (0..500)
+            .map(|_| (rng.range(0.0, 40.0), rng.below(16) as usize))
+            .collect();
+        cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let cfg = PipelineConfig { shards: 2, queue_depth: 8, bandwidth: 10.0, horizon: 40.0 };
+        let report = run_pipeline(&ps, PolicyKind::GreedyNcis, &cis, &cfg);
+        assert_eq!(report.cis_applied, 500);
+        assert_eq!(report.total_crawls, 400);
+    }
+
+    #[test]
+    fn tiny_queue_exerts_backpressure_without_loss() {
+        let ps = pages(32);
+        let mut rng = Rng::new(3);
+        let mut cis: Vec<(f64, usize)> = (0..5_000)
+            .map(|_| (rng.range(0.0, 10.0), rng.below(32) as usize))
+            .collect();
+        cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let cfg = PipelineConfig { shards: 2, queue_depth: 2, bandwidth: 50.0, horizon: 10.0 };
+        let report = run_pipeline(&ps, PolicyKind::GreedyNcis, &cis, &cfg);
+        assert_eq!(report.cis_applied, 5_000, "no CIS may be dropped");
+        assert_eq!(report.total_crawls, 500);
+    }
+}

@@ -1,0 +1,178 @@
+//! §5.2 sharding: split pages into N shards, give each 1/N of the
+//! bandwidth, schedule independently in parallel, and rebalance by
+//! estimated load.
+
+use crate::params::PageParams;
+use crate::policy::PolicyKind;
+use crate::rngkit::Rng;
+use crate::sim::engine::{SimConfig, SimResult};
+use crate::sim::{generate_traces, simulate, CisDelay};
+
+/// Assignment of pages to shards.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// `assignment[i]` = shard of page `i`.
+    pub assignment: Vec<usize>,
+    /// Number of shards.
+    pub shards: usize,
+}
+
+impl ShardPlan {
+    /// Round-robin assignment.
+    pub fn round_robin(m: usize, shards: usize) -> Self {
+        assert!(shards > 0);
+        Self { assignment: (0..m).map(|i| i % shards).collect(), shards }
+    }
+
+    /// Per-shard page index lists.
+    pub fn shard_members(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.shards];
+        for (i, &s) in self.assignment.iter().enumerate() {
+            out[s].push(i);
+        }
+        out
+    }
+}
+
+/// Greedy load rebalancing (largest-first into least-loaded shard):
+/// `loads[i]` is the estimated crawl demand of page `i` (e.g. the
+/// continuous solver's rate). Returns a plan whose shard loads differ by
+/// at most the largest single page load.
+pub fn rebalance(loads: &[f64], shards: usize) -> ShardPlan {
+    assert!(shards > 0);
+    let mut order: Vec<usize> = (0..loads.len()).collect();
+    order.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap());
+    let mut shard_load = vec![0.0f64; shards];
+    let mut assignment = vec![0usize; loads.len()];
+    for &i in &order {
+        let (s, _) = shard_load
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assignment[i] = s;
+        shard_load[s] += loads[i].max(0.0);
+    }
+    ShardPlan { assignment, shards }
+}
+
+/// Result of a sharded simulation run.
+#[derive(Debug, Clone)]
+pub struct ShardedRun {
+    /// Request-weighted overall accuracy.
+    pub accuracy: f64,
+    /// Per-shard results.
+    pub per_shard: Vec<SimResult>,
+}
+
+/// Simulate all shards (each with bandwidth `R/N` and its own trace
+/// stream) in parallel via scoped threads, and merge accuracy.
+pub fn run_sharded(
+    pages: &[PageParams],
+    plan: &ShardPlan,
+    policy: PolicyKind,
+    bandwidth: f64,
+    horizon: f64,
+    seed: u64,
+) -> ShardedRun {
+    let members = plan.shard_members();
+    let shard_r = bandwidth / plan.shards as f64;
+    let mut results: Vec<Option<SimResult>> = vec![None; plan.shards];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (s, member) in members.iter().enumerate() {
+            let pages_s: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
+            handles.push(scope.spawn(move || {
+                if pages_s.is_empty() {
+                    return None;
+                }
+                let mut rng = Rng::new(seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
+                let traces = generate_traces(&pages_s, horizon, CisDelay::None, &mut rng);
+                let cfg = SimConfig::new(shard_r, horizon);
+                let mut sched =
+                    crate::coordinator::lazy::LazyGreedyScheduler::new(policy, &pages_s);
+                Some(simulate(&traces, &cfg, &mut sched))
+            }));
+        }
+        for (s, h) in handles.into_iter().enumerate() {
+            results[s] = h.join().expect("shard thread panicked");
+        }
+    });
+    let per_shard: Vec<SimResult> = results.into_iter().flatten().collect();
+    let total_req: u64 = per_shard.iter().map(|r| r.requests).sum();
+    let fresh: u64 = per_shard.iter().map(|r| r.fresh_hits).sum();
+    ShardedRun {
+        accuracy: if total_req > 0 { fresh as f64 / total_req as f64 } else { f64::NAN },
+        per_shard,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_conserves_pages() {
+        let plan = ShardPlan::round_robin(103, 8);
+        let members = plan.shard_members();
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 103);
+        // sizes within 1
+        let min = members.iter().map(|m| m.len()).min().unwrap();
+        let max = members.iter().map(|m| m.len()).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn rebalance_conserves_and_balances() {
+        let mut rng = Rng::new(1);
+        let loads: Vec<f64> = (0..200).map(|_| rng.range(0.0, 1.0)).collect();
+        let plan = rebalance(&loads, 4);
+        let members = plan.shard_members();
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 200);
+        let shard_loads: Vec<f64> = members
+            .iter()
+            .map(|m| m.iter().map(|&i| loads[i]).sum::<f64>())
+            .collect();
+        let min = shard_loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = shard_loads.iter().cloned().fold(0.0f64, f64::max);
+        let biggest = loads.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max - min <= biggest + 1e-9, "spread {} > {}", max - min, biggest);
+    }
+
+    #[test]
+    fn sharded_accuracy_close_to_single() {
+        let mut rng = Rng::new(2);
+        let pages: Vec<PageParams> = (0..120)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: 0.5,
+                nu: 0.2,
+            })
+            .collect();
+        let single = run_sharded(
+            &pages,
+            &ShardPlan::round_robin(pages.len(), 1),
+            PolicyKind::GreedyNcis,
+            10.0,
+            150.0,
+            7,
+        );
+        let sharded = run_sharded(
+            &pages,
+            &ShardPlan::round_robin(pages.len(), 4),
+            PolicyKind::GreedyNcis,
+            10.0,
+            150.0,
+            7,
+        );
+        assert!(
+            (single.accuracy - sharded.accuracy).abs() < 0.05,
+            "single {} vs sharded {}",
+            single.accuracy,
+            sharded.accuracy
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! Dataset and trace persistence (CSV), for reproducible experiment
+//! pipelines: generate once, re-run policies against identical inputs,
+//! and exchange populations with external analysis tooling.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::dataset::UrlRecord;
+use crate::error::{Error, Result};
+use crate::sim::events::{EventTraces, PageTrace};
+
+/// Write URL records as CSV.
+pub fn write_records(path: &Path, records: &[UrlRecord]) -> Result<()> {
+    let mut f = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "importance,delta,declared,precision,recall,has_cis")?;
+    for r in records {
+        writeln!(
+            f,
+            "{},{},{},{},{},{}",
+            r.importance, r.delta, r.declared as u8, r.precision, r.recall, r.has_cis as u8
+        )?;
+    }
+    Ok(())
+}
+
+/// Read URL records from CSV.
+pub fn read_records(path: &Path) -> Result<Vec<UrlRecord>> {
+    let f = BufReader::new(std::fs::File::open(path)?);
+    let mut out = Vec::new();
+    for (ln, line) in f.lines().enumerate() {
+        let line = line?;
+        if ln == 0 || line.trim().is_empty() {
+            continue;
+        }
+        let c: Vec<&str> = line.split(',').collect();
+        if c.len() != 6 {
+            return Err(Error::InvalidParam(format!("line {}: expected 6 columns", ln + 1)));
+        }
+        let parse = |s: &str, what: &str| -> Result<f64> {
+            s.parse().map_err(|_| Error::InvalidParam(format!("line {}: bad {what}", ln + 1)))
+        };
+        out.push(UrlRecord {
+            importance: parse(c[0], "importance")?,
+            delta: parse(c[1], "delta")?,
+            declared: c[2] == "1",
+            precision: parse(c[3], "precision")?,
+            recall: parse(c[4], "recall")?,
+            has_cis: c[5] == "1",
+        });
+    }
+    Ok(out)
+}
+
+/// Write event traces as CSV rows `(page, kind, time)` with
+/// `kind ∈ {change, cis, request}`.
+pub fn write_traces(path: &Path, traces: &EventTraces) -> Result<()> {
+    let mut f = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "# horizon {}", traces.horizon)?;
+    writeln!(f, "page,kind,time")?;
+    for (i, p) in traces.pages.iter().enumerate() {
+        for &t in &p.changes {
+            writeln!(f, "{i},change,{t}")?;
+        }
+        for &t in &p.cis {
+            writeln!(f, "{i},cis,{t}")?;
+        }
+        for &t in &p.requests {
+            writeln!(f, "{i},request,{t}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Read event traces back (must know the page count).
+pub fn read_traces(path: &Path, pages: usize) -> Result<EventTraces> {
+    let f = BufReader::new(std::fs::File::open(path)?);
+    let mut out = EventTraces { pages: vec![PageTrace::default(); pages], horizon: 0.0 };
+    for (ln, line) in f.lines().enumerate() {
+        let line = line?;
+        if let Some(h) = line.strip_prefix("# horizon ") {
+            out.horizon = h
+                .trim()
+                .parse()
+                .map_err(|_| Error::InvalidParam(format!("line {}: bad horizon", ln + 1)))?;
+            continue;
+        }
+        if line.starts_with("page,") || line.trim().is_empty() {
+            continue;
+        }
+        let c: Vec<&str> = line.split(',').collect();
+        if c.len() != 3 {
+            return Err(Error::InvalidParam(format!("line {}: expected 3 columns", ln + 1)));
+        }
+        let page: usize = c[0]
+            .parse()
+            .map_err(|_| Error::InvalidParam(format!("line {}: bad page", ln + 1)))?;
+        if page >= pages {
+            return Err(Error::InvalidParam(format!("line {}: page {page} out of range", ln + 1)));
+        }
+        let t: f64 = c[2]
+            .parse()
+            .map_err(|_| Error::InvalidParam(format!("line {}: bad time", ln + 1)))?;
+        match c[1] {
+            "change" => out.pages[page].changes.push(t),
+            "cis" => out.pages[page].cis.push(t),
+            "request" => out.pages[page].requests.push(t),
+            other => {
+                return Err(Error::InvalidParam(format!("line {}: kind `{other}`", ln + 1)));
+            }
+        }
+    }
+    // events were written grouped per page and in time order, but be
+    // defensive: re-sort
+    for p in &mut out.pages {
+        p.changes.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        p.cis.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        p.requests.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{generate, DatasetConfig};
+    use crate::params::PageParams;
+    use crate::rngkit::Rng;
+    use crate::sim::{generate_traces, CisDelay};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ncis_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn records_roundtrip() {
+        let recs = generate(&DatasetConfig { n_urls: 500, seed: 3, ..Default::default() });
+        let path = tmp("records.csv");
+        write_records(&path, &recs).unwrap();
+        let back = read_records(&path).unwrap();
+        assert_eq!(back.len(), recs.len());
+        for (a, b) in recs.iter().zip(&back) {
+            assert_eq!(a.importance, b.importance);
+            assert_eq!(a.delta, b.delta);
+            assert_eq!(a.declared, b.declared);
+            assert_eq!(a.precision, b.precision);
+            assert_eq!(a.has_cis, b.has_cis);
+        }
+    }
+
+    #[test]
+    fn traces_roundtrip() {
+        let pages: Vec<PageParams> = (0..10)
+            .map(|i| PageParams { delta: 0.3 + 0.05 * i as f64, mu: 0.5, lam: 0.5, nu: 0.2 })
+            .collect();
+        let mut rng = Rng::new(4);
+        let traces = generate_traces(&pages, 50.0, CisDelay::None, &mut rng);
+        let path = tmp("traces.csv");
+        write_traces(&path, &traces).unwrap();
+        let back = read_traces(&path, 10).unwrap();
+        assert_eq!(back.horizon, 50.0);
+        for (a, b) in traces.pages.iter().zip(&back.pages) {
+            assert_eq!(a.changes, b.changes);
+            assert_eq!(a.cis, b.cis);
+            assert_eq!(a.requests, b.requests);
+        }
+    }
+
+    #[test]
+    fn read_errors() {
+        let path = tmp("bad.csv");
+        std::fs::write(&path, "importance,delta\n1,2\n").unwrap();
+        assert!(read_records(&path).is_err());
+        let path2 = tmp("bad_traces.csv");
+        std::fs::write(&path2, "page,kind,time\n99,change,1.0\n").unwrap();
+        assert!(read_traces(&path2, 10).is_err());
+        let path3 = tmp("bad_kind.csv");
+        std::fs::write(&path3, "page,kind,time\n0,banana,1.0\n").unwrap();
+        assert!(read_traces(&path3, 10).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! Semi-synthetic dataset substrate (§2, §6.7).
+//!
+//! The paper builds on the (non-public) Kolobov et al. 2019 Bing dataset:
+//! 18.5M URLs with importance, empirical change rates, and a ~5% subset
+//! labelled as having "perfect" sitemap CIS — re-weighted with the
+//! paper's own (confidential) precision/recall measurements (Figure 1:
+//! importance-weighted precision mostly < 0.2, recall < 0.5, very few
+//! pages above 0.8/0.8).
+//!
+//! We synthesize a population with the same *marginals*, which is all
+//! §6.7 consumes: heavy-tailed importance (PageRank-like), log-normal
+//! change rates, a `frac_declared` subset carrying the upper-tail CIS
+//! quality, everyone else the lower tail, plus the corruption model
+//! `q ← (1−p)q + p·ξ, ξ ~ U(0,1)` used in Figure 5.
+
+pub mod io;
+
+use crate::params::{Instance, PageParams};
+use crate::rngkit::{self, Rng};
+use crate::stats::Histogram;
+
+/// Generation parameters for the synthetic population.
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    /// Number of URLs.
+    pub n_urls: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Fraction of URLs with "declared" (dataset-labelled perfect) CIS.
+    pub frac_declared: f64,
+    /// Pareto tail index of the importance distribution.
+    pub importance_tail: f64,
+    /// Log-normal (mu, sigma) of the change-rate distribution.
+    pub delta_lognormal: (f64, f64),
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        Self {
+            n_urls: 100_000,
+            seed: 20250710,
+            frac_declared: 0.05,
+            importance_tail: 1.2,
+            delta_lognormal: (-1.0, 1.0),
+        }
+    }
+}
+
+/// One synthesized URL record.
+#[derive(Debug, Clone, Copy)]
+pub struct UrlRecord {
+    /// Importance weight (unnormalized).
+    pub importance: f64,
+    /// Change rate Δ.
+    pub delta: f64,
+    /// Whether the URL is in the "declared perfect CIS" subset.
+    pub declared: bool,
+    /// CIS precision (possibly corrupted downstream).
+    pub precision: f64,
+    /// CIS recall.
+    pub recall: f64,
+    /// Whether the URL has any CIS at all.
+    pub has_cis: bool,
+}
+
+/// Lower-tail CIS quality (the bottom 95% of the Figure-1 histograms):
+/// precision centered ≈ 0.17, recall ≈ 0.45.
+fn sample_low_quality(rng: &mut Rng) -> (f64, f64) {
+    let precision = rngkit::beta(rng, 1.3, 6.0);
+    let recall = rngkit::beta(rng, 2.2, 2.7);
+    (precision, recall)
+}
+
+/// Upper-tail CIS quality (the top 5%): precision/recall ≳ 0.7.
+fn sample_high_quality(rng: &mut Rng) -> (f64, f64) {
+    let precision = 0.7 + 0.3 * rngkit::beta(rng, 3.0, 1.4);
+    let recall = 0.6 + 0.4 * rngkit::beta(rng, 3.0, 1.6);
+    (precision, recall)
+}
+
+/// Generate the synthetic population.
+pub fn generate(cfg: &DatasetConfig) -> Vec<UrlRecord> {
+    let mut rng = Rng::new(cfg.seed);
+    let n_declared = (cfg.n_urls as f64 * cfg.frac_declared).round() as usize;
+    let declared_set = rng.sample_indices(cfg.n_urls, n_declared);
+    let mut declared = vec![false; cfg.n_urls];
+    for &i in &declared_set {
+        declared[i] = true;
+    }
+    (0..cfg.n_urls)
+        .map(|i| {
+            let importance = rngkit::pareto(&mut rng, 1.0, cfg.importance_tail);
+            let delta = rngkit::lognormal(&mut rng, cfg.delta_lognormal.0, cfg.delta_lognormal.1)
+                .clamp(1e-3, 10.0);
+            // only declared pages + a slice of others actually emit CIS
+            // (4% adoption in the real dataset; declared ⊂ has_cis)
+            let has_cis = declared[i] || rng.bernoulli(0.1);
+            let (precision, recall) = if !has_cis {
+                (0.0, 0.0)
+            } else if declared[i] {
+                sample_high_quality(&mut rng)
+            } else {
+                sample_low_quality(&mut rng)
+            };
+            UrlRecord { importance, delta, declared: declared[i], precision, recall, has_cis }
+        })
+        .collect()
+}
+
+/// Figure-5 corruption: mix uniform noise into the *believed* quality
+/// (the environment keeps the true values):
+/// `q ← (1−p)·q + p·ξ`, `ξ ~ U(0, 1)` (independently per field).
+pub fn corrupt(records: &[UrlRecord], p: f64, rng: &mut Rng) -> Vec<UrlRecord> {
+    records
+        .iter()
+        .map(|r| {
+            if !r.has_cis {
+                return *r;
+            }
+            let xi_p = rng.f64();
+            let xi_r = rng.f64();
+            UrlRecord {
+                precision: ((1.0 - p) * r.precision + p * xi_p).clamp(0.0, 1.0),
+                recall: ((1.0 - p) * r.recall + p * xi_r).clamp(0.0, 1.0),
+                ..*r
+            }
+        })
+        .collect()
+}
+
+/// Subsample `k` URLs uniformly (the §6.7 protocol subsamples 100k).
+pub fn subsample(records: &[UrlRecord], k: usize, rng: &mut Rng) -> Vec<UrlRecord> {
+    let idx = rng.sample_indices(records.len(), k.min(records.len()));
+    idx.into_iter().map(|i| records[i]).collect()
+}
+
+/// Convert records to a crawl [`Instance`] (raw importance as request
+/// rate; CIS parameters from quality).
+pub fn to_instance(records: &[UrlRecord], bandwidth: f64) -> Instance {
+    let pages = records
+        .iter()
+        .map(|r| {
+            if r.has_cis {
+                PageParams::from_quality(r.delta, r.importance, r.precision, r.recall)
+            } else {
+                PageParams { delta: r.delta, mu: r.importance, lam: 0.0, nu: 0.0 }
+            }
+        })
+        .collect();
+    Instance { pages, bandwidth }
+}
+
+/// Importance-weighted precision/recall histograms over pages with CIS —
+/// the Figure-1 measurement.
+pub fn quality_histograms(records: &[UrlRecord], bins: usize) -> (Histogram, Histogram) {
+    let with: Vec<&UrlRecord> = records.iter().filter(|r| r.has_cis).collect();
+    let prec: Vec<f64> = with.iter().map(|r| r.precision).collect();
+    let rec: Vec<f64> = with.iter().map(|r| r.recall).collect();
+    let w: Vec<f64> = with.iter().map(|r| r.importance).collect();
+    (
+        Histogram::weighted(&prec, &w, 0.0, 1.0, bins),
+        Histogram::weighted(&rec, &w, 0.0, 1.0, bins),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Vec<UrlRecord> {
+        generate(&DatasetConfig { n_urls: 20_000, seed: 1, ..Default::default() })
+    }
+
+    #[test]
+    fn declared_fraction_matches() {
+        let recs = small();
+        let frac = recs.iter().filter(|r| r.declared).count() as f64 / recs.len() as f64;
+        assert!((frac - 0.05).abs() < 0.005, "{frac}");
+    }
+
+    #[test]
+    fn declared_pages_have_high_quality() {
+        let recs = small();
+        for r in recs.iter().filter(|r| r.declared) {
+            assert!(r.precision >= 0.7 && r.recall >= 0.6, "{r:?}");
+            assert!(r.has_cis);
+        }
+    }
+
+    #[test]
+    fn population_marginals_match_figure1() {
+        // importance-weighted medians: precision < 0.2ish, recall < 0.5
+        let recs = small();
+        let (hp, hr) = quality_histograms(&recs, 20);
+        let prec_med = hp.quantile(0.5);
+        let rec_med = hr.quantile(0.5);
+        assert!(prec_med < 0.35, "precision median {prec_med}");
+        assert!((0.25..0.75).contains(&rec_med), "recall median {rec_med}");
+        // few pages above 0.8/0.8 overall
+        let both_high = recs
+            .iter()
+            .filter(|r| r.has_cis && r.precision > 0.8 && r.recall > 0.8)
+            .count() as f64
+            / recs.len() as f64;
+        assert!(both_high < 0.05, "{both_high}");
+    }
+
+    #[test]
+    fn corruption_moves_quality_toward_uniform() {
+        let recs = small();
+        let mut rng = Rng::new(7);
+        let c = corrupt(&recs, 0.2, &mut rng);
+        assert_eq!(c.len(), recs.len());
+        let moved = recs
+            .iter()
+            .zip(&c)
+            .filter(|(a, b)| a.has_cis && (a.precision != b.precision))
+            .count();
+        assert!(moved > 0);
+        // p=0 is identity
+        let mut rng = Rng::new(8);
+        let c0 = corrupt(&recs, 0.0, &mut rng);
+        for (a, b) in recs.iter().zip(&c0) {
+            assert_eq!(a.precision, b.precision);
+        }
+    }
+
+    #[test]
+    fn subsample_size_and_membership() {
+        let recs = small();
+        let mut rng = Rng::new(9);
+        let sub = subsample(&recs, 1000, &mut rng);
+        assert_eq!(sub.len(), 1000);
+    }
+
+    #[test]
+    fn to_instance_valid_params() {
+        let recs = small();
+        let inst = to_instance(&recs[..1000], 100.0);
+        for p in &inst.pages {
+            p.validate().unwrap();
+        }
+        // pages without CIS have lam = nu = 0
+        for (r, p) in recs[..1000].iter().zip(&inst.pages) {
+            if !r.has_cis {
+                assert_eq!(p.lam, 0.0);
+                assert_eq!(p.nu, 0.0);
+            }
+        }
+    }
+}

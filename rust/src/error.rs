@@ -1,0 +1,33 @@
+//! Crate-wide error type.
+
+/// Errors surfaced by the ncis-crawl library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Invalid page / environment parameters.
+    #[error("invalid parameter: {0}")]
+    InvalidParam(String),
+    /// The continuous solver could not bracket or converge.
+    #[error("solver failure: {0}")]
+    Solver(String),
+    /// PJRT / artifact problems.
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// Artifact manifest problems.
+    #[error("artifact manifest: {0}")]
+    Manifest(String),
+    /// Configuration file problems.
+    #[error("config: {0}")]
+    Config(String),
+    /// CLI usage problems.
+    #[error("usage: {0}")]
+    Usage(String),
+    /// Underlying XLA error.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+    /// I/O error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,234 @@
+//! Appendix-E estimators for the CIS quality parameters.
+//!
+//! Observations are crawl intervals `(τ_ELAP, n_CIS, z)` where `z`
+//! indicates whether the crawl found the content changed. Two estimators
+//! of (precision, recall):
+//!
+//! - [`naive_precision_recall`] — the biased statistical estimator that
+//!   treats intervals as if they were events (Figure 10);
+//! - [`mle_fit`] — MLE of `θ = (α, αβ)` under
+//!   `z ~ Ber(1 − exp(−⟨θ, (τ, n)⟩))`, then precision/recall recovered
+//!   from `θ̂` and the observed CIS rate `γ̂` (Figure 11):
+//!   `ν̂ = γ̂ e^{−κ̂}` (κ̂ = α̂β̂), `prec = 1 − e^{−κ̂}`,
+//!   `Δ̂ = α̂ + γ̂(1 − e^{−κ̂})`, `recall = γ̂(1 − e^{−κ̂})/Δ̂`.
+
+pub mod online;
+
+use crate::params::PageParams;
+use crate::rngkit::{self, Rng};
+
+/// One crawl-interval observation.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    /// Interval length (elapsed time between consecutive crawls).
+    pub tau: f64,
+    /// CIS delivered within the interval.
+    pub n_cis: f64,
+    /// 1.0 if the crawl found the content changed.
+    pub changed: f64,
+}
+
+/// Generate the Appendix-E experimental protocol: a page with the given
+/// quality crawled periodically at rate `crawl_rate` over `horizon`.
+pub fn generate_observations(
+    page: &PageParams,
+    crawl_rate: f64,
+    horizon: f64,
+    rng: &mut Rng,
+) -> Vec<Observation> {
+    let changes = rngkit::poisson_process(rng, page.delta, horizon);
+    let mut cis: Vec<f64> = Vec::new();
+    for &t in &changes {
+        if rng.bernoulli(page.lam) {
+            cis.push(t);
+        }
+    }
+    cis.extend(rngkit::poisson_process(rng, page.nu, horizon));
+    cis.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let period = 1.0 / crawl_rate;
+    let mut out = Vec::new();
+    let mut t_prev = 0.0;
+    let mut ci = 0usize;
+    let mut chi = 0usize;
+    let mut t = period;
+    while t < horizon {
+        let mut n = 0.0;
+        while ci < cis.len() && cis[ci] <= t {
+            n += 1.0;
+            ci += 1;
+        }
+        let mut changed = 0.0;
+        while chi < changes.len() && changes[chi] <= t {
+            changed = 1.0;
+            chi += 1;
+        }
+        out.push(Observation { tau: t - t_prev, n_cis: n, changed });
+        t_prev = t;
+        t += period;
+    }
+    out
+}
+
+/// Empirical CIS rate γ̂ from the observations.
+pub fn empirical_gamma(obs: &[Observation]) -> f64 {
+    let total_cis: f64 = obs.iter().map(|o| o.n_cis).sum();
+    let total_time: f64 = obs.iter().map(|o| o.tau).sum();
+    if total_time > 0.0 {
+        total_cis / total_time
+    } else {
+        0.0
+    }
+}
+
+/// The naive interval-counting estimator of Appendix E (biased; Fig 10).
+pub fn naive_precision_recall(obs: &[Observation]) -> (f64, f64) {
+    let both = obs.iter().filter(|o| o.n_cis > 0.0 && o.changed > 0.5).count() as f64;
+    let with_cis = obs.iter().filter(|o| o.n_cis > 0.0).count() as f64;
+    let with_change = obs.iter().filter(|o| o.changed > 0.5).count() as f64;
+    let precision = if with_cis > 0.0 { both / with_cis } else { f64::NAN };
+    let recall = if with_change > 0.0 { both / with_change } else { f64::NAN };
+    (precision, recall)
+}
+
+/// Negative log-likelihood and its gradient/Hessian for `θ = (α, κ)`.
+fn nll_grad_hess(theta: [f64; 2], obs: &[Observation]) -> (f64, [f64; 2], [[f64; 2]; 2]) {
+    let mut nll = 0.0;
+    let mut g = [0.0f64; 2];
+    let mut h = [[0.0f64; 2]; 2];
+    for o in obs {
+        let x = [o.tau, o.n_cis];
+        let s = theta[0] * x[0] + theta[1] * x[1];
+        let p = (-s).exp().clamp(1e-12, 1.0 - 1e-12); // P[no change]
+        if o.changed > 0.5 {
+            // log(1 - p); d/ds log(1-p) = p/(1-p)
+            nll -= (1.0 - p).ln();
+            let w1 = p / (1.0 - p);
+            let w2 = p / ((1.0 - p) * (1.0 - p)); // -d/ds w1
+            for a in 0..2 {
+                g[a] -= w1 * x[a];
+                for b in 0..2 {
+                    h[a][b] += w2 * x[a] * x[b];
+                }
+            }
+        } else {
+            // log p = -s
+            nll += s;
+            for (a, &xa) in x.iter().enumerate() {
+                g[a] += xa;
+            }
+        }
+    }
+    (nll, g, h)
+}
+
+/// Damped-Newton MLE fit of `θ = (α, αβ)`. Native f64; the PJRT
+/// `mle_step` artifact implements the identical update in f32.
+pub fn mle_fit(obs: &[Observation], iters: usize) -> (f64, f64) {
+    let mut theta = [0.5f64, 0.5f64];
+    for _ in 0..iters {
+        let (_, g, h) = nll_grad_hess(theta, obs);
+        // solve (H + eps I) step = g
+        let (a, b, c, d) = (h[0][0] + 1e-6, h[0][1], h[1][0], h[1][1] + 1e-6);
+        let det = a * d - b * c;
+        if det.abs() < 1e-30 {
+            break;
+        }
+        let step = [(d * g[0] - b * g[1]) / det, (-c * g[0] + a * g[1]) / det];
+        // clip the step to 50% relative (mirror of model.mle_step)
+        let max_rel = (step[0].abs() / theta[0].abs().max(1e-8))
+            .max(step[1].abs() / theta[1].abs().max(1e-8));
+        let scale = (0.5 / max_rel.max(1e-12)).min(1.0);
+        theta[0] = (theta[0] - scale * step[0]).max(1e-8);
+        theta[1] = (theta[1] - scale * step[1]).max(1e-8);
+    }
+    (theta[0], theta[1])
+}
+
+/// Map `(α̂, κ̂)` + the observed CIS rate to (precision, recall).
+pub fn quality_from_theta(alpha: f64, kappa: f64, gamma_hat: f64) -> (f64, f64) {
+    let precision = 1.0 - (-kappa).exp();
+    let signalled = gamma_hat * precision; // λ̂Δ̂ = γ̂ − ν̂
+    let delta_hat = alpha + signalled;
+    let recall = if delta_hat > 0.0 { (signalled / delta_hat).clamp(0.0, 1.0) } else { 0.0 };
+    (precision, recall)
+}
+
+/// Full MLE pipeline: observations → (precision, recall) estimates.
+pub fn mle_precision_recall(obs: &[Observation], iters: usize) -> (f64, f64) {
+    let (alpha, kappa) = mle_fit(obs, iters);
+    quality_from_theta(alpha, kappa, empirical_gamma(obs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quality_page(precision: f64, recall: f64, delta: f64) -> PageParams {
+        PageParams::from_quality(delta, 0.1, precision, recall)
+    }
+
+    #[test]
+    fn observations_protocol_shape() {
+        let mut rng = Rng::new(1);
+        let p = quality_page(0.5, 0.6, 0.25);
+        let obs = generate_observations(&p, 0.5, 1000.0, &mut rng);
+        assert_eq!(obs.len(), 499);
+        assert!(obs.iter().all(|o| (o.tau - 2.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn naive_estimator_is_biased_upward_in_precision() {
+        // long intervals make "CIS and change in same interval" likely
+        // even when the CIS was false — the Figure-10 bias.
+        let mut rng = Rng::new(2);
+        let p = quality_page(0.3, 0.6, 0.5);
+        let mut precs = Vec::new();
+        for _ in 0..20 {
+            let obs = generate_observations(&p, 0.25, 2000.0, &mut rng);
+            let (prec, _) = naive_precision_recall(&obs);
+            precs.push(prec);
+        }
+        let mean = precs.iter().sum::<f64>() / precs.len() as f64;
+        assert!(mean > 0.45, "naive precision {mean} should be biased above 0.3");
+    }
+
+    #[test]
+    fn mle_recovers_parameters() {
+        let mut rng = Rng::new(3);
+        let p = quality_page(0.5, 0.7, 0.4);
+        let d = p.derive().unwrap();
+        let mut obs = Vec::new();
+        for _ in 0..4 {
+            obs.extend(generate_observations(&p, 0.8, 25_000.0, &mut rng));
+        }
+        let (alpha, kappa) = mle_fit(&obs, 60);
+        assert!((alpha - d.alpha).abs() < 0.05 * d.alpha.max(0.05), "alpha {alpha} vs {}", d.alpha);
+        let want_kappa = d.alpha * d.beta;
+        assert!((kappa - want_kappa).abs() < 0.08 * want_kappa.max(0.1), "kappa {kappa} vs {want_kappa}");
+    }
+
+    #[test]
+    fn mle_precision_recall_low_bias() {
+        let mut rng = Rng::new(4);
+        let (true_p, true_r) = (0.6, 0.5);
+        let p = quality_page(true_p, true_r, 0.3);
+        let mut obs = Vec::new();
+        for _ in 0..4 {
+            obs.extend(generate_observations(&p, 0.6, 25_000.0, &mut rng));
+        }
+        let (prec, rec) = mle_precision_recall(&obs, 60);
+        assert!((prec - true_p).abs() < 0.05, "precision {prec} vs {true_p}");
+        assert!((rec - true_r).abs() < 0.05, "recall {rec} vs {true_r}");
+    }
+
+    #[test]
+    fn quality_from_theta_roundtrip() {
+        // construct a page, derive, and invert analytically
+        let p = quality_page(0.45, 0.65, 0.5);
+        let d = p.derive().unwrap();
+        let kappa = d.alpha * d.beta;
+        let (prec, rec) = quality_from_theta(d.alpha, kappa, d.gamma);
+        assert!((prec - 0.45).abs() < 1e-6, "{prec}");
+        assert!((rec - 0.65).abs() < 1e-6, "{rec}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Streaming (online) estimator of the CIS quality parameters.
+//!
+//! A production crawler re-estimates `(α, αβ)` continuously as crawl
+//! outcomes stream in (§1 footnote: "such parameters are continuously
+//! estimated"; Appendix E fits from logged data). This estimator keeps a
+//! bounded reservoir of recent observations per page and refits with a
+//! few damped-Newton steps on every `refit_every`-th observation —
+//! amortized O(1) per crawl, bounded memory, and it tracks drifting
+//! signal quality (an exponential decay downweights stale observations).
+
+use crate::estimation::{mle_fit, Observation};
+use crate::rngkit::Rng;
+
+/// Online (reservoir + periodic refit) estimator for one page.
+#[derive(Debug)]
+pub struct OnlineEstimator {
+    reservoir: Vec<Observation>,
+    capacity: usize,
+    seen: u64,
+    refit_every: u64,
+    rng: Rng,
+    /// Current estimate (α̂, κ̂ = α̂β̂).
+    pub theta: (f64, f64),
+    /// Observed CIS rate (exponentially smoothed).
+    pub gamma_hat: f64,
+    refits: u64,
+}
+
+impl OnlineEstimator {
+    /// New estimator with the given reservoir capacity.
+    pub fn new(capacity: usize, refit_every: u64, seed: u64) -> Self {
+        Self {
+            reservoir: Vec::with_capacity(capacity),
+            capacity,
+            seen: 0,
+            refit_every: refit_every.max(1),
+            rng: Rng::new(seed),
+            theta: (0.5, 0.5),
+            gamma_hat: 0.0,
+            refits: 0,
+        }
+    }
+
+    /// Record one crawl outcome.
+    pub fn observe(&mut self, obs: Observation) {
+        self.seen += 1;
+        // smoothed CIS rate
+        let rate = if obs.tau > 0.0 { obs.n_cis / obs.tau } else { 0.0 };
+        const A: f64 = 0.02;
+        self.gamma_hat =
+            if self.seen == 1 { rate } else { (1.0 - A) * self.gamma_hat + A * rate };
+        // reservoir sampling (Vitter's R)
+        if self.reservoir.len() < self.capacity {
+            self.reservoir.push(obs);
+        } else {
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.capacity {
+                self.reservoir[j] = obs;
+            }
+        }
+        if self.seen % self.refit_every == 0 && self.reservoir.len() >= 8 {
+            self.theta = mle_fit(&self.reservoir, 25);
+            self.refits += 1;
+        }
+    }
+
+    /// Current (precision, recall) estimate.
+    pub fn quality(&self) -> (f64, f64) {
+        crate::estimation::quality_from_theta(self.theta.0, self.theta.1, self.gamma_hat)
+    }
+
+    /// Number of refits performed.
+    pub fn refits(&self) -> u64 {
+        self.refits
+    }
+
+    /// Number of observations seen.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimation::generate_observations;
+    use crate::params::PageParams;
+
+    #[test]
+    fn converges_to_truth_on_stationary_stream() {
+        let page = PageParams::from_quality(0.3, 0.1, 0.55, 0.65);
+        let mut rng = Rng::new(1);
+        let obs = generate_observations(&page, 0.6, 60_000.0, &mut rng);
+        let mut est = OnlineEstimator::new(2048, 500, 7);
+        for o in obs {
+            est.observe(o);
+        }
+        assert!(est.refits() > 10);
+        let (p, r) = est.quality();
+        assert!((p - 0.55).abs() < 0.08, "precision {p}");
+        assert!((r - 0.65).abs() < 0.08, "recall {r}");
+    }
+
+    #[test]
+    fn tracks_quality_drift() {
+        // signal quality degrades midway; the estimate must move toward
+        // the new regime (reservoir gradually flushes old observations)
+        let good = PageParams::from_quality(0.3, 0.1, 0.8, 0.7);
+        let bad = PageParams::from_quality(0.3, 0.1, 0.2, 0.7);
+        let mut rng = Rng::new(2);
+        let mut est = OnlineEstimator::new(512, 200, 8);
+        for o in generate_observations(&good, 0.6, 20_000.0, &mut rng) {
+            est.observe(o);
+        }
+        let (p_good, _) = est.quality();
+        for _ in 0..6 {
+            for o in generate_observations(&bad, 0.6, 20_000.0, &mut rng) {
+                est.observe(o);
+            }
+        }
+        let (p_after, _) = est.quality();
+        assert!(
+            p_after < p_good - 0.2,
+            "estimate must follow the drift: {p_good} -> {p_after}"
+        );
+    }
+
+    #[test]
+    fn bounded_memory() {
+        let page = PageParams::from_quality(0.5, 0.1, 0.5, 0.5);
+        let mut rng = Rng::new(3);
+        let mut est = OnlineEstimator::new(64, 100, 9);
+        for o in generate_observations(&page, 1.0, 20_000.0, &mut rng) {
+            est.observe(o);
+        }
+        assert!(est.reservoir.len() <= 64);
+        assert_eq!(est.seen(), 19_999);
+    }
+}

@@ -1,0 +1,204 @@
+//! Shared experiment machinery for the figure harness.
+
+use crate::coordinator::crawler::{GreedyScheduler, LdsAdapter, ValueBackend};
+use crate::coordinator::lazy::LazyGreedyScheduler;
+use crate::params::{Instance, PageParams};
+use crate::policy::PolicyKind;
+use crate::rngkit::{self, Rng};
+use crate::sim::engine::{Scheduler, SimConfig};
+use crate::sim::metrics::RepAccumulator;
+use crate::sim::{generate_traces, simulate, CisDelay};
+use crate::solver;
+
+/// §6.1 problem-instance specification.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Number of pages m.
+    pub m: usize,
+    /// Bandwidth R.
+    pub bandwidth: f64,
+    /// Horizon T.
+    pub horizon: f64,
+    /// Repetitions (paper: 100; benches default lower — see EXPERIMENTS.md).
+    pub reps: usize,
+    /// λ_i ~ Beta(a, b) when CIS are enabled, else λ = 0.
+    pub lam_beta: Option<(f64, f64)>,
+    /// ν_i ~ Unif(lo, hi) when false positives are enabled, else ν = 0.
+    pub nu_range: Option<(f64, f64)>,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// CIS delivery delay model.
+    pub delay: CisDelay,
+    /// Appendix-C discard window.
+    pub discard_window: Option<f64>,
+}
+
+impl ExperimentSpec {
+    /// Defaults matching §6.3: Δ, μ ~ U[0,1], R = 100, T = 1000.
+    pub fn section6(m: usize, reps: usize) -> Self {
+        Self {
+            m,
+            bandwidth: 100.0,
+            horizon: 1000.0,
+            reps,
+            lam_beta: None,
+            nu_range: None,
+            seed: 0x5EED,
+            delay: CisDelay::None,
+            discard_window: None,
+        }
+    }
+
+    /// Enable §6.5-style partially-observable CIS (λ ~ Beta(.25,.25)).
+    pub fn with_partial_cis(mut self) -> Self {
+        self.lam_beta = Some((0.25, 0.25));
+        self
+    }
+
+    /// Enable §6.6-style false positives (ν ~ Unif(.1,.6)).
+    pub fn with_false_positives(mut self) -> Self {
+        self.nu_range = Some((0.1, 0.6));
+        self
+    }
+
+    /// Draw a problem instance (Δ, μ ~ U[0,1] as in §6.3).
+    pub fn gen_instance(&self, rng: &mut Rng) -> Instance {
+        let pages = (0..self.m)
+            .map(|_| PageParams {
+                delta: rng.range(1e-4, 1.0),
+                mu: rng.range(1e-4, 1.0),
+                lam: match self.lam_beta {
+                    Some((a, b)) => rngkit::beta(rng, a, b),
+                    None => 0.0,
+                },
+                nu: match self.nu_range {
+                    Some((lo, hi)) => rng.range(lo, hi),
+                    None => 0.0,
+                },
+            })
+            .collect();
+        Instance { pages, bandwidth: self.bandwidth }
+    }
+}
+
+/// Which discrete policy implementation an experiment cell runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyUnderTest {
+    /// Algorithm 1 with the given value function (exact argmax).
+    Greedy(PolicyKind),
+    /// Algorithm 1 via the §5.2 lazy scheduler.
+    Lazy(PolicyKind),
+    /// LDS over the no-CIS continuous optimum (Azar et al.).
+    Lds,
+}
+
+impl PolicyUnderTest {
+    /// Display name.
+    pub fn name(&self) -> String {
+        match self {
+            PolicyUnderTest::Greedy(k) => k.name(),
+            PolicyUnderTest::Lazy(k) => format!("{}-LAZY", k.name()),
+            PolicyUnderTest::Lds => "LDS".into(),
+        }
+    }
+}
+
+/// Outcome of one experiment cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Policy display name.
+    pub policy: String,
+    /// Accuracy mean over reps.
+    pub mean: f64,
+    /// Accuracy stderr over reps.
+    pub stderr: f64,
+    /// Mean empirical per-page crawl rates across reps.
+    pub mean_rates: Vec<f64>,
+    /// BASELINE (optimal continuous no-CIS) analytical accuracy.
+    pub baseline: f64,
+    /// The instance the cell ran on (normalized importance).
+    pub instance: Instance,
+}
+
+fn make_scheduler(
+    put: PolicyUnderTest,
+    inst: &Instance,
+    no_cis_rates: &[f64],
+) -> Box<dyn Scheduler> {
+    match put {
+        PolicyUnderTest::Greedy(kind) => {
+            Box::new(GreedyScheduler::new(kind, &inst.pages, ValueBackend::Native))
+        }
+        PolicyUnderTest::Lazy(kind) => Box::new(LazyGreedyScheduler::new(kind, &inst.pages)),
+        PolicyUnderTest::Lds => Box::new(LdsAdapter::new(no_cis_rates)),
+    }
+}
+
+/// Run one experiment cell: a fixed instance (drawn from `spec` with
+/// `spec.seed`), `spec.reps` trace realizations, one accuracy per rep.
+pub fn run_cell(spec: &ExperimentSpec, put: PolicyUnderTest) -> CellResult {
+    let mut irng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let baseline = solver::baseline_accuracy(&inst).unwrap_or(f64::NAN);
+    let no_cis_rates = match put {
+        PolicyUnderTest::Lds => solver::solve_no_cis(&inst).map(|s| s.rates).unwrap_or_default(),
+        _ => Vec::new(),
+    };
+    let mut acc = RepAccumulator::new(inst.pages.len());
+    for rep in 0..spec.reps {
+        let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
+        let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
+        let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon);
+        cfg.cis_discard_window = spec.discard_window;
+        let mut sched = make_scheduler(put, &inst, &no_cis_rates);
+        let res = simulate(&traces, &cfg, sched.as_mut());
+        acc.push(res.accuracy, &res.empirical_rates(spec.horizon));
+    }
+    let s = acc.accuracy();
+    CellResult {
+        policy: put.name(),
+        mean: s.mean,
+        stderr: s.stderr,
+        mean_rates: acc.mean_rates(),
+        baseline,
+        instance: inst,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_runs_and_reports() {
+        let spec = ExperimentSpec {
+            horizon: 60.0,
+            bandwidth: 10.0,
+            ..ExperimentSpec::section6(30, 3)
+        };
+        let r = run_cell(&spec, PolicyUnderTest::Greedy(PolicyKind::Greedy));
+        assert!((0.0..=1.0).contains(&r.mean), "{}", r.mean);
+        assert!((0.0..=1.0).contains(&r.baseline));
+        assert_eq!(r.mean_rates.len(), 30);
+    }
+
+    #[test]
+    fn lds_cell_runs() {
+        let spec = ExperimentSpec {
+            horizon: 60.0,
+            bandwidth: 10.0,
+            ..ExperimentSpec::section6(30, 2)
+        };
+        let r = run_cell(&spec, PolicyUnderTest::Lds);
+        assert!((0.0..=1.0).contains(&r.mean));
+    }
+
+    #[test]
+    fn cis_spec_generates_cis_params() {
+        let spec = ExperimentSpec::section6(100, 1).with_partial_cis().with_false_positives();
+        let mut rng = Rng::new(1);
+        let inst = spec.gen_instance(&mut rng);
+        assert!(inst.pages.iter().any(|p| p.lam > 0.1));
+        assert!(inst.pages.iter().all(|p| (0.1..=0.6).contains(&p.nu)));
+    }
+}

@@ -1,0 +1,78 @@
+//! Figures 10/11 (Appendix E): bias of the naive vs MLE estimators of
+//! CIS precision/recall.
+//!
+//! Protocol (per the appendix): precision, recall ~ U[0.2, 0.95];
+//! expected change interval ~ U[2, 20] (Δ = 1/len); crawl rate between
+//! 4× and ¼× of the change rate; horizon 100 000.
+
+use crate::benchkit::FigureOutput;
+use crate::estimation::{
+    generate_observations, mle_precision_recall, naive_precision_recall,
+};
+use crate::params::PageParams;
+use crate::rngkit::Rng;
+use crate::stats::summarize;
+use crate::Result;
+
+struct BiasSample {
+    true_prec: f64,
+    true_rec: f64,
+    est_prec: f64,
+    est_rec: f64,
+}
+
+fn run_estimator(
+    samples: usize,
+    horizon: f64,
+    seed: u64,
+    estimator: impl Fn(&[crate::estimation::Observation]) -> (f64, f64),
+) -> Vec<BiasSample> {
+    let mut rng = Rng::new(seed);
+    (0..samples)
+        .map(|_| {
+            let true_prec = rng.range(0.2, 0.95);
+            let true_rec = rng.range(0.2, 0.95);
+            let delta = 1.0 / rng.range(2.0, 20.0);
+            let ratio = 4f64.powf(rng.range(-1.0, 1.0)); // ¼× .. 4×
+            let page = PageParams::from_quality(delta, 0.1, true_prec, true_rec);
+            let obs = generate_observations(&page, ratio * delta, horizon, &mut rng);
+            let (p, r) = estimator(&obs);
+            BiasSample { true_prec, true_rec, est_prec: p, est_rec: r }
+        })
+        .collect()
+}
+
+fn write_bias_figure(name: &str, samples: &[BiasSample]) -> Result<()> {
+    let mut fig = FigureOutput::new(
+        name,
+        &["true_precision", "est_precision", "true_recall", "est_recall"],
+    );
+    for s in samples {
+        fig.rowf(&[s.true_prec, s.est_prec, s.true_rec, s.est_rec]);
+    }
+    fig.finish()?;
+    let prec_bias: Vec<f64> =
+        samples.iter().filter(|s| s.est_prec.is_finite()).map(|s| s.est_prec - s.true_prec).collect();
+    let rec_bias: Vec<f64> =
+        samples.iter().filter(|s| s.est_rec.is_finite()).map(|s| s.est_rec - s.true_rec).collect();
+    let (p, r) = (summarize(&prec_bias), summarize(&rec_bias));
+    let mut sfig = FigureOutput::new(&format!("{name}_summary"), &["field_prec0_rec1", "mean_bias", "stderr"]);
+    sfig.rowf(&[0.0, p.mean, p.stderr]);
+    sfig.rowf(&[1.0, r.mean, r.stderr]);
+    sfig.finish()?;
+    Ok(())
+}
+
+/// Figure 10: the naive interval-counting estimator is visibly biased.
+pub fn fig10(samples: usize) -> Result<()> {
+    let s = run_estimator(samples.max(20), 100_000.0, 0xE57, naive_precision_recall);
+    write_bias_figure("fig10_naive_estimator", &s)
+}
+
+/// Figure 11: the MLE estimator's bias is orders of magnitude smaller.
+pub fn fig11(samples: usize) -> Result<()> {
+    let s = run_estimator(samples.max(20), 100_000.0, 0xE58, |obs| {
+        mle_precision_recall(obs, 60)
+    });
+    write_bias_figure("fig11_mle_estimator", &s)
+}

@@ -1,0 +1,45 @@
+//! Regeneration of every figure in the paper (see DESIGN.md §6).
+//!
+//! Each `figNN` function runs the corresponding experiment and writes
+//! its series via [`crate::benchkit::FigureOutput`] (CSV under
+//! `target/figures/` + aligned stdout table). Benches (`benches/`) and
+//! the `figure` CLI subcommand are thin wrappers over these.
+
+pub mod accuracy;
+pub mod common;
+pub mod dynamics;
+pub mod estimators;
+pub mod rates;
+pub mod scale;
+pub mod semisynth;
+pub mod valuefn;
+
+pub use common::{ExperimentSpec, PolicyUnderTest};
+
+/// Run one figure by id (`"1"`, `"2"`, …, `"appg"`). `reps` scales the
+/// repetition count (the paper uses 100 / 10; see EXPERIMENTS.md for
+/// the scaling rationale).
+pub fn run_figure(id: &str, reps: usize) -> crate::Result<()> {
+    match id {
+        "1" => semisynth::fig01(100_000),
+        "2" => accuracy::fig02(reps),
+        "3" => accuracy::fig03(reps),
+        "4" => accuracy::fig04(reps),
+        "5" => semisynth::fig05(&semisynth::SemiSynthSpec {
+            reps: reps.clamp(1, 10),
+            ..Default::default()
+        }),
+        "6" => valuefn::fig06(),
+        "7" => rates::fig07(reps),
+        "8" => accuracy::fig08(reps),
+        "9" => dynamics::fig09(reps),
+        "10" => estimators::fig10(reps * 10),
+        "11" => estimators::fig11(reps * 10),
+        "12" | "13" => rates::fig12_13(reps),
+        "14" => rates::fig14(reps),
+        "appg" => scale::appg(20_000, 60.0, 4),
+        other => Err(crate::Error::Usage(format!(
+            "unknown figure `{other}` (valid: 1-14, appg)"
+        ))),
+    }
+}

@@ -1,0 +1,121 @@
+//! Empirical-rate scatter figures: Fig 7 (GREEDY vs LDS, no CIS),
+//! Fig 12/13 (GREEDY vs GREEDY-CIS colored by λ / Δ), Fig 14 (with
+//! false positives, incl. GREEDY-NCIS).
+//!
+//! Output rows carry everything the paper's scatter plots show: the
+//! BASELINE optimal rate, each policy's empirical rate, and the page's
+//! λ and Δ (the color channels of Figs 12/13). A Pearson-correlation
+//! summary per policy quantifies "dots on the diagonal".
+
+use crate::benchkit::FigureOutput;
+use crate::figures::common::{run_cell, ExperimentSpec, PolicyUnderTest};
+use crate::policy::PolicyKind;
+use crate::solver;
+use crate::stats::pearson;
+use crate::Result;
+
+fn rate_scatter(
+    name: &str,
+    ms: &[usize],
+    spec_of: impl Fn(usize) -> ExperimentSpec,
+    kinds: &[PolicyKind],
+) -> Result<()> {
+    let mut cols = vec!["m", "page", "baseline_rate", "lam", "delta"];
+    let kind_names: Vec<String> = kinds.iter().map(|k| k.name()).collect();
+    cols.extend(kind_names.iter().map(String::as_str));
+    let mut fig = FigureOutput::new(name, &cols);
+    let mut summary = FigureOutput::new(&format!("{name}_summary"), &["m", "policy_idx", "pearson_r"]);
+    for &m in ms {
+        let spec = spec_of(m);
+        // baseline rates from the no-CIS continuous optimum on the SAME instance
+        let mut rng = crate::rngkit::Rng::new(spec.seed);
+        let inst = spec.gen_instance(&mut rng).normalized();
+        let baseline = solver::solve_no_cis(&inst)?;
+        let mut per_policy_rates: Vec<Vec<f64>> = Vec::new();
+        for &kind in kinds {
+            let cell = run_cell(&spec, PolicyUnderTest::Greedy(kind));
+            per_policy_rates.push(cell.mean_rates);
+        }
+        for i in 0..inst.pages.len() {
+            let mut row = vec![
+                m as f64,
+                i as f64,
+                baseline.rates[i],
+                inst.pages[i].lam,
+                inst.pages[i].delta,
+            ];
+            for rates in &per_policy_rates {
+                row.push(rates[i]);
+            }
+            fig.rowf(&row);
+        }
+        for (k, rates) in per_policy_rates.iter().enumerate() {
+            summary.rowf(&[m as f64, k as f64, pearson(&baseline.rates, rates)]);
+        }
+    }
+    fig.finish()?;
+    summary.finish()?;
+    Ok(())
+}
+
+/// Figure 7: empirical rates of GREEDY and LDS vs the optimal rates
+/// (no CIS), m ∈ {100, 500}.
+pub fn fig07(reps: usize) -> Result<()> {
+    // LDS needs its own runner (not a PolicyKind); emit GREEDY via the
+    // shared helper and LDS inline.
+    let ms = [100usize, 500];
+    let mut fig = FigureOutput::new(
+        "fig07_rates_no_cis",
+        &["m", "page", "baseline_rate", "greedy_rate", "lds_rate"],
+    );
+    let mut summary =
+        FigureOutput::new("fig07_rates_no_cis_summary", &["m", "greedy_r", "lds_r"]);
+    for &m in &ms {
+        let spec = ExperimentSpec::section6(m, reps);
+        let mut rng = crate::rngkit::Rng::new(spec.seed);
+        let inst = spec.gen_instance(&mut rng).normalized();
+        let baseline = solver::solve_no_cis(&inst)?;
+        let g = run_cell(&spec, PolicyUnderTest::Greedy(PolicyKind::Greedy));
+        let l = run_cell(&spec, PolicyUnderTest::Lds);
+        for i in 0..m {
+            fig.rowf(&[
+                m as f64,
+                i as f64,
+                baseline.rates[i],
+                g.mean_rates[i],
+                l.mean_rates[i],
+            ]);
+        }
+        summary.rowf(&[
+            m as f64,
+            pearson(&baseline.rates, &g.mean_rates),
+            pearson(&baseline.rates, &l.mean_rates),
+        ]);
+    }
+    fig.finish()?;
+    summary.finish()?;
+    Ok(())
+}
+
+/// Figures 12/13: rates of GREEDY vs GREEDY-CIS under partial
+/// observability (no false positives); λ and Δ columns are the two
+/// color channels of the paper's plots.
+pub fn fig12_13(reps: usize) -> Result<()> {
+    rate_scatter(
+        "fig12_13_rates_cis",
+        &[100, 300],
+        |m| ExperimentSpec::section6(m, reps).with_partial_cis(),
+        &[PolicyKind::Greedy, PolicyKind::GreedyCis],
+    )
+}
+
+/// Figure 14: rates with false positives present — GREEDY-CIS overdrives
+/// pages with many false signals; GREEDY-NCIS does not.
+pub fn fig14(reps: usize) -> Result<()> {
+    rate_scatter(
+        "fig14_rates_false_positives",
+        &[100, 300],
+        |m| ExperimentSpec::section6(m, reps).with_partial_cis().with_false_positives(),
+        &[PolicyKind::Greedy, PolicyKind::GreedyCis, PolicyKind::GreedyNcis],
+    )
+}

@@ -1,0 +1,34 @@
+//! Figure 6: the crawl-value function V(ι) and its j-term
+//! approximations, with the ι → ∞ asymptote μ̃/Δ.
+
+use crate::benchkit::FigureOutput;
+use crate::params::PageParams;
+use crate::policy::value;
+use crate::Result;
+
+/// Figure 6: V exact vs APPROX-{1,2,3} over an ι grid for a fixed,
+/// strongly-signalled environment (small β ⇒ many active terms).
+pub fn fig06() -> Result<()> {
+    let p = PageParams { delta: 1.0, mu: 1.0, lam: 0.5, nu: 0.8 };
+    let d = p.derive().unwrap();
+    let asymptote = d.mu / d.delta;
+    let mut fig = FigureOutput::new(
+        "fig06_value_function",
+        &["iota", "V_exact", "V_approx1", "V_approx2", "V_approx3", "asymptote"],
+    );
+    let max_iota = 8.0 * d.beta.min(10.0);
+    let steps = 200;
+    for k in 0..=steps {
+        let iota = k as f64 / steps as f64 * max_iota;
+        fig.rowf(&[
+            iota,
+            value::value_ncis(iota, &d, value::MAX_TERMS),
+            value::value_ncis(iota, &d, 1),
+            value::value_ncis(iota, &d, 2),
+            value::value_ncis(iota, &d, 3),
+            asymptote,
+        ]);
+    }
+    fig.finish()?;
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! # ncis-crawl
+//!
+//! Production-quality reproduction of *"A Scalable Crawling Algorithm
+//! Utilizing Noisy Change-Indicating Signals"* (Busa-Fekete et al.,
+//! WWW 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is the Layer-3 coordinator: it owns the scheduling policies
+//! (Algorithm 1 and all baselines), the continuous-policy optimality
+//! theory (Theorem 1), the Poisson event simulator the paper evaluates
+//! on, the semi-synthetic dataset substrate, and a PJRT runtime that
+//! executes the AOT-compiled JAX/Pallas crawl-value graphs from
+//! `artifacts/` on the hot path.
+//!
+//! Architecture map (see `DESIGN.md` for the full inventory):
+//!
+//! - [`special`] — stable evaluation of the exp Taylor residual
+//!   `R^i(x) = P(i+1, x)` underlying every crawl-value formula.
+//! - [`rngkit`] — deterministic RNG + distribution substrate
+//!   (xoshiro256++, exponential/Poisson/beta/Pareto samplers).
+//! - [`params`] — page parametrization `(Δ, μ̃, λ, ν) → (α, β, γ)`.
+//! - [`policy`] — crawl-value functions `V_GREEDY`, `V_GREEDY_CIS`,
+//!   `V_GREEDY_NCIS`, `V_G_NCIS-APPROX-J` and the thresholded policy.
+//! - [`solver`] — optimal continuous policies via Lagrange line search.
+//! - [`lds`] — the low-discrepancy discrete scheduler of Azar et al.
+//! - [`sim`] — Poisson event streams, the discrete-tick simulator and
+//!   accuracy/rate metrics.
+//! - [`estimation`] — Appendix-E estimators for CIS precision/recall.
+//! - [`dataset`] — semi-synthetic stand-in for the (non-public)
+//!   Kolobov et al. dataset.
+//! - [`coordinator`] — Algorithm-1 crawler drivers: exact argmax, the
+//!   §5.2 lazy/tiered scheduler, sharding, streaming pipeline.
+//! - [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
+//! - [`figures`] — regeneration of every figure in the paper.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod error;
+pub mod estimation;
+pub mod figures;
+pub mod lds;
+pub mod metrics;
+pub mod params;
+pub mod policy;
+pub mod report;
+pub mod rngkit;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod special;
+pub mod stats;
+pub mod testkit;
+
+pub use error::{Error, Result};
+pub use params::{DerivedParams, PageParams};
+pub use policy::PolicyKind;
+
+mod app;
+pub use app::run_cli;

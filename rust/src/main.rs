@@ -1,0 +1,17 @@
+//! `ncis-crawl` CLI — the leader entrypoint.
+
+use ncis_crawl::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = ncis_crawl::run_cli(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,253 @@
+//! Observability substrate: a small metrics registry (counters, gauges,
+//! time histograms) with text exposition, used by the coordinator and
+//! the streaming pipeline. Thread-safe via atomics so shard workers can
+//! record without locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by 1.
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge (set-to-latest f64, stored as bits).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the value.
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket duration histogram (log-spaced from 1µs to ~17s).
+#[derive(Debug)]
+pub struct DurationHisto {
+    buckets: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+const HISTO_BUCKETS: usize = 25; // 2^i µs, i=0..24
+
+impl Default for DurationHisto {
+    fn default() -> Self {
+        Self {
+            buckets: (0..HISTO_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl DurationHisto {
+    /// Record a duration.
+    pub fn observe(&self, d: std::time::Duration) {
+        let us = d.as_micros() as u64;
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(HISTO_BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Time a closure, recording its duration.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.observe(t0.elapsed());
+        out
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean duration in seconds.
+    pub fn mean_s(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e9
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            acc += bucket.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (b + 1)) as f64 / 1e6;
+            }
+        }
+        (1u64 << HISTO_BUCKETS) as f64 / 1e6
+    }
+}
+
+/// A named registry for exposition.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<Vec<(String, std::sync::Arc<Counter>)>>,
+    gauges: Mutex<Vec<(String, std::sync::Arc<Gauge>)>>,
+    histos: Mutex<Vec<(String, std::sync::Arc<DurationHisto>)>>,
+}
+
+impl Registry {
+    /// Register (or create) a counter.
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        let mut cs = self.counters.lock().unwrap();
+        if let Some((_, c)) = cs.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = std::sync::Arc::new(Counter::default());
+        cs.push((name.to_string(), c.clone()));
+        c
+    }
+
+    /// Register (or create) a gauge.
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        let mut gs = self.gauges.lock().unwrap();
+        if let Some((_, g)) = gs.iter().find(|(n, _)| n == name) {
+            return g.clone();
+        }
+        let g = std::sync::Arc::new(Gauge::default());
+        gs.push((name.to_string(), g.clone()));
+        g
+    }
+
+    /// Register (or create) a duration histogram.
+    pub fn histo(&self, name: &str) -> std::sync::Arc<DurationHisto> {
+        let mut hs = self.histos.lock().unwrap();
+        if let Some((_, h)) = hs.iter().find(|(n, _)| n == name) {
+            return h.clone();
+        }
+        let h = std::sync::Arc::new(DurationHisto::default());
+        hs.push((name.to_string(), h.clone()));
+        h
+    }
+
+    /// Text exposition (Prometheus-flavoured, `name value` lines).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (n, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{n} {}\n", c.get()));
+        }
+        for (n, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{n} {}\n", g.get()));
+        }
+        for (n, h) in self.histos.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{n}_count {}\n{n}_mean_seconds {:.9}\n{n}_p99_seconds {:.9}\n",
+                h.count(),
+                h.mean_s(),
+                h.quantile_s(0.99)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::default();
+        let c = r.counter("crawls_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name returns the same counter
+        r.counter("crawls_total").inc();
+        assert_eq!(c.get(), 6);
+        let g = r.gauge("lambda_estimate");
+        g.set(0.125);
+        assert_eq!(g.get(), 0.125);
+    }
+
+    #[test]
+    fn histogram_quantiles_and_mean() {
+        let h = DurationHisto::default();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            h.observe(std::time::Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_s() > 0.0);
+        let p50 = h.quantile_s(0.5);
+        let p99 = h.quantile_s(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 >= 0.01, "p99 {p99} should cover the 10ms sample");
+    }
+
+    #[test]
+    fn histogram_time_helper() {
+        let h = DurationHisto::default();
+        let out = h.time(|| 21 * 2);
+        assert_eq!(out, 42);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn render_exposition() {
+        let r = Registry::default();
+        r.counter("a_total").add(3);
+        r.gauge("b").set(1.5);
+        r.histo("lat").observe(std::time::Duration::from_micros(5));
+        let text = r.render();
+        assert!(text.contains("a_total 3"));
+        assert!(text.contains("b 1.5"));
+        assert!(text.contains("lat_count 1"));
+        assert!(text.contains("lat_p99_seconds"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let r = std::sync::Arc::new(Registry::default());
+        let c = r.counter("shared");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -1,0 +1,265 @@
+//! Page parametrization: raw `(Δ, μ̃, λ, ν)` → derived `(α, β, γ)`.
+//!
+//! Mirrors `python/compile/kernels/ref.py::derived_params` exactly (same
+//! clamps), so the rust-native f64 value function, the Pallas kernel and
+//! the golden vectors all see the same environment.
+
+use crate::error::{Error, Result};
+
+/// Raw per-page model parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageParams {
+    /// Change-process rate Δ.
+    pub delta: f64,
+    /// Normalized importance μ̃ (request-rate weight).
+    pub mu: f64,
+    /// CIS recall λ ∈ [0, 1]: probability a change emits a signal.
+    pub lam: f64,
+    /// False-positive CIS rate ν ≥ 0.
+    pub nu: f64,
+}
+
+impl PageParams {
+    /// Validate and derive the `(α, β, γ)` parametrization.
+    pub fn derive(&self) -> Result<DerivedParams> {
+        self.validate()?;
+        Ok(DerivedParams::from_raw(self))
+    }
+
+    /// Raw-parameter sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.delta > 0.0) || !self.delta.is_finite() {
+            return Err(Error::InvalidParam(format!("delta must be > 0, got {}", self.delta)));
+        }
+        if !(0.0..=1.0).contains(&self.lam) {
+            return Err(Error::InvalidParam(format!("lam must be in [0,1], got {}", self.lam)));
+        }
+        if self.nu < 0.0 || !self.nu.is_finite() {
+            return Err(Error::InvalidParam(format!("nu must be >= 0, got {}", self.nu)));
+        }
+        if self.mu < 0.0 || !self.mu.is_finite() {
+            return Err(Error::InvalidParam(format!("mu must be >= 0, got {}", self.mu)));
+        }
+        Ok(())
+    }
+
+    /// CIS precision `λΔ/γ` (1 if the page has no CIS at all).
+    pub fn precision(&self) -> f64 {
+        let gamma = self.lam * self.delta + self.nu;
+        if gamma <= 0.0 {
+            1.0
+        } else {
+            self.lam * self.delta / gamma
+        }
+    }
+
+    /// CIS recall (= λ by definition).
+    pub fn recall(&self) -> f64 {
+        self.lam
+    }
+
+    /// Construct raw parameters from a (precision, recall) description of
+    /// the page's CIS quality — the encoding used by the semi-synthetic
+    /// dataset (§6.7): `λ = recall`, `ν = λΔ(1−prec)/prec`.
+    pub fn from_quality(delta: f64, mu: f64, precision: f64, recall: f64) -> Self {
+        let lam = recall.clamp(0.0, 1.0);
+        let nu = if precision >= 1.0 || lam == 0.0 {
+            // perfect precision (or no true signals): no false positives
+            0.0
+        } else {
+            let p = precision.max(1e-3);
+            lam * delta * (1.0 - p) / p
+        };
+        Self { delta, mu, lam, nu }
+    }
+}
+
+/// Derived parametrization used by every value function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DerivedParams {
+    /// Unsignalled change rate α = (1−λ)Δ (clamped ≥ 1e-6·Δ).
+    pub alpha: f64,
+    /// Time-equivalent of one CIS, β = −log(ν/γ)/α (∞ when ν = 0).
+    pub beta: f64,
+    /// Observed CIS rate γ = λΔ + ν (0 means "no CIS at all").
+    pub gamma: f64,
+    /// False-positive rate ν.
+    pub nu: f64,
+    /// Change rate Δ.
+    pub delta: f64,
+    /// Normalized importance μ̃.
+    pub mu: f64,
+}
+
+impl DerivedParams {
+    /// Mirror of `ref.derived_params` (keep in sync with the oracle!).
+    pub fn from_raw(p: &PageParams) -> Self {
+        let gamma = p.lam * p.delta + p.nu;
+        let alpha = ((1.0 - p.lam) * p.delta).max(1e-6 * p.delta.max(1e-30));
+        // note the `.max(0.0)`: λ = 0 gives ν/γ = 1, ln = 0, and the
+        // division produces β = −0.0 — which must be +0.0 so that
+        // ι/β = +∞ (signals are worthless, every term stays active)
+        let beta = if gamma > 0.0 && p.nu > 0.0 {
+            (-(p.nu / gamma).max(1e-38).ln() / alpha).max(0.0)
+        } else {
+            f64::INFINITY
+        };
+        Self { alpha, beta, gamma, nu: p.nu, delta: p.delta, mu: p.mu }
+    }
+
+    /// β capped to the finite sentinel the f32 PJRT kernel expects.
+    pub fn beta_capped(&self) -> f64 {
+        self.beta.min(crate::runtime::BETA_CAP)
+    }
+
+    /// `log(ν/γ)` (≤ 0), the per-CIS freshness log-penalty; 0 when the
+    /// page has no CIS process.
+    pub fn log_fp_ratio(&self) -> f64 {
+        if self.gamma > 0.0 && self.nu > 0.0 {
+            (self.nu / self.gamma).ln()
+        } else if self.gamma > 0.0 {
+            // noiseless CIS: a signal certainly means a change
+            f64::NEG_INFINITY
+        } else {
+            0.0
+        }
+    }
+
+    /// Effective elapsed time τ_EFF = τ_ELAP + β·n_CIS (∞-safe).
+    ///
+    /// An environment with γ = 0 models "no CIS process at all" (the
+    /// GREEDY belief): any observed signals are ignored rather than
+    /// treated as β = ∞ saturation.
+    pub fn effective_time(&self, tau_elap: f64, n_cis: u32) -> f64 {
+        if n_cis == 0 || self.gamma <= 0.0 {
+            tau_elap
+        } else if self.beta.is_finite() {
+            tau_elap + self.beta * n_cis as f64
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// P[page fresh | history] (eq. 1).
+    pub fn freshness(&self, tau_elap: f64, n_cis: u32) -> f64 {
+        let log_pen = self.log_fp_ratio();
+        if n_cis > 0 && log_pen == f64::NEG_INFINITY {
+            return 0.0;
+        }
+        (-self.alpha * tau_elap + n_cis as f64 * log_pen).exp()
+    }
+}
+
+/// A full problem instance: one entry per page plus the global bandwidth.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    /// Raw page parameters (importance *not* yet normalized).
+    pub pages: Vec<PageParams>,
+    /// Global crawl bandwidth R (crawls per unit time).
+    pub bandwidth: f64,
+}
+
+impl Instance {
+    /// Sum of raw importance weights.
+    pub fn total_mu(&self) -> f64 {
+        self.pages.iter().map(|p| p.mu).sum()
+    }
+
+    /// Instance with importance normalized to μ̃_i = μ_i / Σμ.
+    pub fn normalized(&self) -> Instance {
+        let total = self.total_mu();
+        let pages = self
+            .pages
+            .iter()
+            .map(|p| PageParams { mu: if total > 0.0 { p.mu / total } else { 0.0 }, ..*p })
+            .collect();
+        Instance { pages, bandwidth: self.bandwidth }
+    }
+
+    /// Derived parameters for every page.
+    pub fn derived(&self) -> Result<Vec<DerivedParams>> {
+        self.pages.iter().map(|p| p.derive()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derive_basic() {
+        let p = PageParams { delta: 1.0, mu: 0.5, lam: 0.6, nu: 0.3 };
+        let d = p.derive().unwrap();
+        assert!((d.gamma - 0.9).abs() < 1e-12);
+        assert!((d.alpha - 0.4).abs() < 1e-12);
+        let want_beta = -(0.3f64 / 0.9).ln() / 0.4;
+        assert!((d.beta - want_beta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derive_no_cis() {
+        let d = PageParams { delta: 0.7, mu: 0.1, lam: 0.0, nu: 0.0 }.derive().unwrap();
+        assert_eq!(d.gamma, 0.0);
+        assert!(d.beta.is_infinite());
+        assert!((d.alpha - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derive_noiseless_cis() {
+        let d = PageParams { delta: 1.0, mu: 0.1, lam: 0.8, nu: 0.0 }.derive().unwrap();
+        assert!(d.beta.is_infinite());
+        assert!((d.gamma - 0.8).abs() < 1e-12);
+        assert_eq!(d.effective_time(2.0, 0), 2.0);
+        assert_eq!(d.effective_time(2.0, 1), f64::INFINITY);
+        assert_eq!(d.freshness(2.0, 1), 0.0);
+    }
+
+    #[test]
+    fn lam_one_is_clamped() {
+        let d = PageParams { delta: 1.0, mu: 0.1, lam: 1.0, nu: 0.2 }.derive().unwrap();
+        assert!(d.alpha > 0.0 && d.alpha.is_finite());
+        assert!(d.beta.is_finite());
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(PageParams { delta: 0.0, mu: 0.1, lam: 0.5, nu: 0.1 }.derive().is_err());
+        assert!(PageParams { delta: 1.0, mu: 0.1, lam: 1.5, nu: 0.1 }.derive().is_err());
+        assert!(PageParams { delta: 1.0, mu: -0.1, lam: 0.5, nu: 0.1 }.derive().is_err());
+        assert!(PageParams { delta: 1.0, mu: 0.1, lam: 0.5, nu: -0.1 }.derive().is_err());
+    }
+
+    #[test]
+    fn precision_recall_roundtrip() {
+        let p = PageParams::from_quality(0.8, 0.3, 0.4, 0.7);
+        assert!((p.precision() - 0.4).abs() < 1e-9);
+        assert!((p.recall() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quality_perfect_precision_means_no_fp() {
+        let p = PageParams::from_quality(0.8, 0.3, 1.0, 0.7);
+        assert_eq!(p.nu, 0.0);
+    }
+
+    #[test]
+    fn freshness_eq1() {
+        let d = PageParams { delta: 0.8, mu: 0.1, lam: 0.6, nu: 0.3 }.derive().unwrap();
+        let want = (-d.alpha * 2.0f64).exp() * (0.3f64 / d.gamma).powi(2);
+        assert!((d.freshness(2.0, 2) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalization() {
+        let inst = Instance {
+            pages: vec![
+                PageParams { delta: 1.0, mu: 3.0, lam: 0.0, nu: 0.0 },
+                PageParams { delta: 1.0, mu: 1.0, lam: 0.0, nu: 0.0 },
+            ],
+            bandwidth: 10.0,
+        };
+        let n = inst.normalized();
+        assert!((n.pages[0].mu - 0.75).abs() < 1e-12);
+        assert!((n.total_mu() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Crawl-value functions and the thresholded policy family.
+//!
+//! [`value`] implements the analytical machinery of Theorem 1 / §5.1:
+//! `ψ`, `w`, `f`, and the crawl value `V` for every policy variant.
+//! [`PolicyKind`] selects which *beliefs* a discrete greedy policy holds
+//! about the CIS process (the paper's GREEDY / GREEDY-CIS / GREEDY-NCIS /
+//! G-NCIS-APPROX-J / GREEDY-CIS+ line-up), and maps scheduler state
+//! (elapsed time + CIS count) to a crawl value.
+
+pub mod multisource;
+pub mod value;
+
+use crate::params::{DerivedParams, PageParams};
+
+/// Which crawl-value function a discrete greedy policy uses (§5.1, §6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// `V_GREEDY`: ignores CIS entirely (Cho & Garcia-Molina setting).
+    Greedy,
+    /// `V_GREEDY_CIS`: assumes CIS are noiseless (β = ∞); any pending
+    /// signal saturates the page's value at μ̃/Δ.
+    GreedyCis,
+    /// `V_GREEDY_NCIS`: the exact noisy-CIS value (sum until the mask
+    /// `i·β ≤ ι` runs out, capped at [`value::MAX_TERMS`]).
+    GreedyNcis,
+    /// `V_G_NCIS-APPROX-J`: truncate the sum at `j` terms (Appendix A.1).
+    NcisApprox(u32),
+    /// GREEDY-CIS+ (§6.7): GREEDY-CIS for high-quality-CIS pages
+    /// (precision > 0.7 and recall > 0.6), plain GREEDY otherwise.
+    GreedyCisPlus,
+}
+
+impl PolicyKind {
+    /// Human-readable name matching the paper's plots.
+    pub fn name(&self) -> String {
+        match self {
+            PolicyKind::Greedy => "GREEDY".into(),
+            PolicyKind::GreedyCis => "GREEDY-CIS".into(),
+            PolicyKind::GreedyNcis => "GREEDY-NCIS".into(),
+            PolicyKind::NcisApprox(j) => format!("G-NCIS-APPROX-{j}"),
+            PolicyKind::GreedyCisPlus => "GREEDY-CIS+".into(),
+        }
+    }
+
+    /// Does this policy consume CIS events at all?
+    pub fn uses_cis(&self) -> bool {
+        !matches!(self, PolicyKind::Greedy)
+    }
+
+    /// Crawl value for a page in scheduler state `(tau_elap, n_cis)`.
+    ///
+    /// `raw`/`d` describe the *true* environment; each policy projects
+    /// them onto its own beliefs (e.g. GREEDY-CIS pretends ν = 0).
+    pub fn crawl_value(
+        &self,
+        raw: &PageParams,
+        d: &DerivedParams,
+        tau_elap: f64,
+        n_cis: u32,
+    ) -> f64 {
+        match self {
+            PolicyKind::Greedy => value::value_greedy(tau_elap, d.delta, d.mu),
+            PolicyKind::GreedyCis => value::value_cis_state(d, tau_elap, n_cis),
+            PolicyKind::GreedyNcis => {
+                let iota = d.effective_time(tau_elap, n_cis);
+                value::value_ncis(iota, d, value::MAX_TERMS)
+            }
+            PolicyKind::NcisApprox(j) => {
+                let iota = d.effective_time(tau_elap, n_cis);
+                value::value_ncis(iota, d, *j)
+            }
+            PolicyKind::GreedyCisPlus => {
+                if raw.precision() > 0.7 && raw.recall() > 0.6 {
+                    value::value_cis_state(d, tau_elap, n_cis)
+                } else {
+                    value::value_greedy(tau_elap, d.delta, d.mu)
+                }
+            }
+        }
+    }
+
+    /// Upper bound on this page's crawl value, `μ̃ · w(∞) = μ̃/Δ`
+    /// (geometric sum of the `w` coefficients). Used by the lazy
+    /// scheduler to prune pages that can never reach the threshold.
+    pub fn value_upper_bound(&self, d: &DerivedParams) -> f64 {
+        d.mu / d.delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(lam: f64, nu: f64) -> (PageParams, DerivedParams) {
+        let p = PageParams { delta: 0.8, mu: 0.5, lam, nu };
+        let d = p.derive().unwrap();
+        (p, d)
+    }
+
+    #[test]
+    fn greedy_ignores_cis() {
+        let (p, d) = env(0.6, 0.3);
+        let v0 = PolicyKind::Greedy.crawl_value(&p, &d, 2.0, 0);
+        let v3 = PolicyKind::Greedy.crawl_value(&p, &d, 2.0, 3);
+        assert_eq!(v0, v3);
+    }
+
+    #[test]
+    fn cis_saturates_on_signal() {
+        let (p, d) = env(0.8, 0.0);
+        let v = PolicyKind::GreedyCis.crawl_value(&p, &d, 0.5, 1);
+        assert!((v - d.mu / d.delta).abs() < 1e-12);
+        let v0 = PolicyKind::GreedyCis.crawl_value(&p, &d, 0.5, 0);
+        assert!(v0 < v);
+    }
+
+    #[test]
+    fn ncis_value_increases_with_signals() {
+        let (p, d) = env(0.6, 0.3);
+        let v0 = PolicyKind::GreedyNcis.crawl_value(&p, &d, 1.0, 0);
+        let v1 = PolicyKind::GreedyNcis.crawl_value(&p, &d, 1.0, 1);
+        let v2 = PolicyKind::GreedyNcis.crawl_value(&p, &d, 1.0, 2);
+        assert!(v0 < v1 && v1 < v2, "{v0} {v1} {v2}");
+    }
+
+    #[test]
+    fn approx_converges_to_exact() {
+        let (p, d) = env(0.6, 0.5);
+        let tau = 3.0;
+        let exact = PolicyKind::GreedyNcis.crawl_value(&p, &d, tau, 2);
+        let a1 = PolicyKind::NcisApprox(1).crawl_value(&p, &d, tau, 2);
+        let a8 = PolicyKind::NcisApprox(8).crawl_value(&p, &d, tau, 2);
+        assert!((a8 - exact).abs() <= (a1 - exact).abs() + 1e-15);
+    }
+
+    #[test]
+    fn cis_plus_splits_on_quality() {
+        // high quality: precision 0.9, recall 0.8
+        let hp = PageParams::from_quality(0.8, 0.5, 0.9, 0.8);
+        let hd = hp.derive().unwrap();
+        let v_plus = PolicyKind::GreedyCisPlus.crawl_value(&hp, &hd, 1.0, 1);
+        let v_cis = PolicyKind::GreedyCis.crawl_value(&hp, &hd, 1.0, 1);
+        assert_eq!(v_plus, v_cis);
+        // low quality falls back to GREEDY
+        let lp = PageParams::from_quality(0.8, 0.5, 0.1, 0.3);
+        let ld = lp.derive().unwrap();
+        let v_plus = PolicyKind::GreedyCisPlus.crawl_value(&lp, &ld, 1.0, 4);
+        let v_greedy = PolicyKind::Greedy.crawl_value(&lp, &ld, 1.0, 0);
+        assert_eq!(v_plus, v_greedy);
+    }
+
+    #[test]
+    fn upper_bound_holds() {
+        let (p, d) = env(0.6, 0.3);
+        let ub = PolicyKind::GreedyNcis.value_upper_bound(&d);
+        for n in 0..10 {
+            for k in 0..60 {
+                let v = PolicyKind::GreedyNcis.crawl_value(&p, &d, k as f64 * 0.5, n);
+                assert!(v <= ub + 1e-9, "V={v} > ub={ub} at n={n} k={k}");
+            }
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Multiple independent CIS sources per page (paper §3, footnote 2:
+//! *"It is straightforward to extend the model to multiple independent
+//! sources of CI signals. We consider a single signal for the sake of
+//! presentation."*).
+//!
+//! This module makes that extension concrete. Page `i` receives signals
+//! from `K` independent sources; source `k` covers a fraction `λ_k` of
+//! changes and adds false positives at rate `ν_k`. Under the paper's
+//! independence assumptions the *joint* observation process is again of
+//! the single-source form, with:
+//!
+//! ```text
+//! λ = 1 − Π_k (1 − λ_k)        (a change is signalled by ≥1 source)
+//! ν = Σ_k ν_k                   (false positives superpose)
+//! γ = λΔ + ν
+//! ```
+//!
+//! …but signals are no longer exchangeable: a signal from a
+//! high-precision source moves the freshness belief more than one from a
+//! noisy source. The per-source time-equivalent is
+//! `β_k = −log(ν_k,eff/γ_k)/α` where the *effective* per-source split
+//! attributes to source `k` the changes only it could have signalled.
+//! For scheduling we track per-source counts `n_k` and use
+//! `τ_EFF = τ_ELAP + Σ_k β_k n_k`.
+
+use crate::error::{Error, Result};
+use crate::params::{DerivedParams, PageParams};
+
+/// One CIS source's quality for a page.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CisSource {
+    /// Recall of this source (fraction of changes it signals).
+    pub lam: f64,
+    /// False-positive rate of this source.
+    pub nu: f64,
+}
+
+/// A page observed through multiple independent CIS sources.
+#[derive(Debug, Clone)]
+pub struct MultiSourcePage {
+    /// Change rate Δ.
+    pub delta: f64,
+    /// Importance μ̃.
+    pub mu: f64,
+    /// The sources.
+    pub sources: Vec<CisSource>,
+}
+
+impl MultiSourcePage {
+    /// Validate the source parameters.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.delta > 0.0) {
+            return Err(Error::InvalidParam(format!("delta must be > 0, got {}", self.delta)));
+        }
+        for (k, s) in self.sources.iter().enumerate() {
+            if !(0.0..=1.0).contains(&s.lam) {
+                return Err(Error::InvalidParam(format!("source {k}: lam {}", s.lam)));
+            }
+            if s.nu < 0.0 {
+                return Err(Error::InvalidParam(format!("source {k}: nu {}", s.nu)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Collapse to the equivalent single-source page (the merged
+    /// process): used wherever only the aggregate matters (the crawl
+    /// value's ψ/w structure, the solver, the LDS reduction).
+    pub fn merged(&self) -> PageParams {
+        let miss: f64 = self.sources.iter().map(|s| 1.0 - s.lam).product();
+        let lam = 1.0 - miss;
+        let nu: f64 = self.sources.iter().map(|s| s.nu).sum();
+        PageParams { delta: self.delta, mu: self.mu, lam, nu }
+    }
+
+    /// Per-source observed signal rate `γ_k = λ_k Δ + ν_k`.
+    pub fn source_gamma(&self, k: usize) -> f64 {
+        self.sources[k].lam * self.delta + self.sources[k].nu
+    }
+
+    /// Per-source time-equivalents `β_k`: a signal from source `k`
+    /// multiplies the freshness belief by its own false-positive odds
+    /// `ν_k/γ_k`, hence `β_k = −log(ν_k/γ_k)/α` with the merged α.
+    pub fn source_betas(&self) -> Result<Vec<f64>> {
+        self.validate()?;
+        let merged = self.merged().derive()?;
+        Ok((0..self.sources.len())
+            .map(|k| {
+                let gk = self.source_gamma(k);
+                if gk <= 0.0 || self.sources[k].nu <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    (-(self.sources[k].nu / gk).max(1e-38).ln() / merged.alpha).max(0.0)
+                }
+            })
+            .collect())
+    }
+
+    /// Merged derived parameters.
+    pub fn derived(&self) -> Result<DerivedParams> {
+        self.merged().derive()
+    }
+
+    /// Effective elapsed time given per-source signal counts.
+    pub fn effective_time(&self, tau_elap: f64, counts: &[u32]) -> Result<f64> {
+        let betas = self.source_betas()?;
+        if counts.len() != betas.len() {
+            return Err(Error::InvalidParam(format!(
+                "counts arity {} != sources {}",
+                counts.len(),
+                betas.len()
+            )));
+        }
+        let mut t = tau_elap;
+        for (&n, &b) in counts.iter().zip(&betas) {
+            if n > 0 {
+                if !b.is_finite() {
+                    return Ok(f64::INFINITY);
+                }
+                t += b * n as f64;
+            }
+        }
+        Ok(t)
+    }
+
+    /// Freshness belief given per-source counts (the K-source analogue
+    /// of eq. 1): `exp(−α τ) Π_k (ν_k/γ_k)^{n_k}`.
+    pub fn freshness(&self, tau_elap: f64, counts: &[u32]) -> Result<f64> {
+        let d = self.derived()?;
+        let mut log_p = -d.alpha * tau_elap;
+        for (k, &n) in counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let gk = self.source_gamma(k);
+            if self.sources[k].nu <= 0.0 || gk <= 0.0 {
+                return Ok(0.0); // noiseless source: signal ⇒ stale
+            }
+            log_p += n as f64 * (self.sources[k].nu / gk).ln();
+        }
+        Ok(log_p.exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page2() -> MultiSourcePage {
+        MultiSourcePage {
+            delta: 0.8,
+            mu: 0.5,
+            sources: vec![
+                CisSource { lam: 0.6, nu: 0.1 }, // high-precision source
+                CisSource { lam: 0.3, nu: 0.5 }, // noisy source
+            ],
+        }
+    }
+
+    #[test]
+    fn merged_rates() {
+        let p = page2().merged();
+        assert!((p.lam - (1.0 - 0.4 * 0.7)).abs() < 1e-12); // 0.72
+        assert!((p.nu - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_source_reduces_to_base_model() {
+        let ms = MultiSourcePage {
+            delta: 0.8,
+            mu: 0.5,
+            sources: vec![CisSource { lam: 0.6, nu: 0.3 }],
+        };
+        let d_ms = ms.derived().unwrap();
+        let d = PageParams { delta: 0.8, mu: 0.5, lam: 0.6, nu: 0.3 }.derive().unwrap();
+        assert_eq!(d_ms, d);
+        let betas = ms.source_betas().unwrap();
+        assert!((betas[0] - d.beta).abs() < 1e-12);
+        assert!(
+            (ms.effective_time(2.0, &[3]).unwrap() - d.effective_time(2.0, 3)).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn precise_source_moves_belief_more() {
+        let ms = page2();
+        let betas = ms.source_betas().unwrap();
+        assert!(
+            betas[0] > betas[1],
+            "high-precision source must have larger beta: {betas:?}"
+        );
+        let f_precise = ms.freshness(1.0, &[1, 0]).unwrap();
+        let f_noisy = ms.freshness(1.0, &[0, 1]).unwrap();
+        assert!(f_precise < f_noisy, "{f_precise} vs {f_noisy}");
+    }
+
+    #[test]
+    fn freshness_consistent_with_effective_time() {
+        let ms = page2();
+        let d = ms.derived().unwrap();
+        for counts in [[0u32, 0], [1, 0], [0, 2], [2, 3]] {
+            let via_eff = (-d.alpha * ms.effective_time(1.5, &counts).unwrap()).exp();
+            let direct = ms.freshness(1.5, &counts).unwrap();
+            assert!(
+                (via_eff - direct).abs() < 1e-9,
+                "counts {counts:?}: {via_eff} vs {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn noiseless_source_signal_means_stale() {
+        let ms = MultiSourcePage {
+            delta: 1.0,
+            mu: 0.1,
+            sources: vec![CisSource { lam: 0.5, nu: 0.0 }, CisSource { lam: 0.2, nu: 0.4 }],
+        };
+        assert_eq!(ms.freshness(1.0, &[1, 0]).unwrap(), 0.0);
+        assert!(ms.freshness(1.0, &[0, 1]).unwrap() > 0.0);
+        assert_eq!(ms.effective_time(1.0, &[1, 0]).unwrap(), f64::INFINITY);
+    }
+
+    #[test]
+    fn arity_and_validation_errors() {
+        let ms = page2();
+        assert!(ms.effective_time(1.0, &[1]).is_err());
+        let bad = MultiSourcePage {
+            delta: 0.0,
+            mu: 0.1,
+            sources: vec![CisSource { lam: 0.5, nu: 0.1 }],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn more_sources_never_reduce_recall() {
+        let mut ms = page2();
+        let lam2 = ms.merged().lam;
+        ms.sources.push(CisSource { lam: 0.4, nu: 0.2 });
+        assert!(ms.merged().lam >= lam2);
+    }
+}

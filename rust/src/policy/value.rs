@@ -1,0 +1,388 @@
+//! Analytical crawl-value machinery (Theorem 1, Lemma 4, §5.1).
+//!
+//! All functions take the derived parametrization [`DerivedParams`] and
+//! mirror the Python oracle (`ref.py`) so golden tests agree to f64
+//! accuracy. The native implementations here are also the fallback value
+//! engine when PJRT artifacts are not available.
+
+use crate::params::DerivedParams;
+use crate::special::exp_residual;
+
+/// Hard cap on the number of residual terms: `R^i(x)` for `i ≥ 64` is
+/// numerically 0 for every argument that can survive the `i·β ≤ ι` mask
+/// in a realistic environment.
+pub const MAX_TERMS: u32 = 64;
+
+/// `ψ(ι; E)` and `w(ι; E)` of Lemma 4, truncated at `terms` residual
+/// terms (the exact values once `terms > ι/β`).
+///
+/// ```text
+/// ψ(ι) = Σ_{i=0}^{⌊ι/β⌋} (1/γ) R^i(γ(ι − iβ))        expected crawl interval
+/// w(ι) = Σ_{i=0}^{⌊ι/β⌋} ν^i/(Δ+ν)^{i+1} R^i((α+γ)(ι − iβ))
+/// ```
+///
+/// The no-CIS limit `γ → 0` degenerates to `ψ = ι`, `w = R^0(αι)/α`.
+pub fn psi_w(iota: f64, d: &DerivedParams, terms: u32) -> (f64, f64) {
+    if iota <= 0.0 {
+        return (0.0, 0.0);
+    }
+    if d.gamma <= 0.0 {
+        // GREEDY limit
+        let w = exp_residual(0, d.alpha * iota) / d.alpha;
+        return (iota, w);
+    }
+    let ag = d.alpha + d.gamma;
+    let dn = d.delta + d.nu;
+    let mut psi = 0.0;
+    let mut w = 0.0;
+    let mut coef = 1.0 / dn; // ν^i / (Δ+ν)^{i+1}
+    let terms = terms.min(MAX_TERMS);
+    for i in 0..terms {
+        let off = if d.beta.is_finite() {
+            iota - i as f64 * d.beta
+        } else if i == 0 {
+            iota
+        } else {
+            break;
+        };
+        if off < 0.0 {
+            break;
+        }
+        psi += exp_residual(i, d.gamma * off) / d.gamma;
+        w += coef * exp_residual(i, ag * off);
+        coef *= d.nu / dn;
+    }
+    (psi, w)
+}
+
+/// Crawl frequency `f(ι; E) = 1/ψ(ι; E)` of the thresholded policy.
+pub fn frequency(iota: f64, d: &DerivedParams, terms: u32) -> f64 {
+    if iota == f64::INFINITY {
+        return 0.0;
+    }
+    let (psi, _) = psi_w(iota, d, terms);
+    if psi <= 0.0 {
+        f64::INFINITY
+    } else {
+        1.0 / psi
+    }
+}
+
+/// General crawl value `V(ι; E) = μ̃ (w(ι) − e^{−αι} ψ(ι))`.
+///
+/// `terms = MAX_TERMS` gives `V_GREEDY_NCIS` (exact); smaller `terms`
+/// gives `V_G_NCIS-APPROX-J`. `ι = ∞` saturates at `μ̃ w(∞) = μ̃/Δ`…
+/// truncated to `terms` coefficients of the geometric series.
+pub fn value_ncis(iota: f64, d: &DerivedParams, terms: u32) -> f64 {
+    if iota <= 0.0 {
+        return 0.0;
+    }
+    if iota == f64::INFINITY {
+        // lim V = μ̃ w(∞): Σ_{i<terms} ν^i/(Δ+ν)^{i+1}
+        let dn = d.delta + d.nu;
+        if d.gamma <= 0.0 || !d.beta.is_finite() {
+            // no CIS (γ=0, α=Δ) or noiseless CIS: single term 1/(Δ+ν)=1/Δ
+            return d.mu / if d.gamma <= 0.0 { d.delta } else { dn };
+        }
+        let r = d.nu / dn;
+        let k = terms.min(MAX_TERMS);
+        let geo = if r < 1.0 - 1e-12 {
+            (1.0 - r.powi(k as i32)) / (1.0 - r)
+        } else {
+            k as f64
+        };
+        return d.mu * geo / dn;
+    }
+    // Inline ψ/w accumulation with rigorous early termination — the
+    // scheduler hot path. Tail bounds (all residuals ≤ 1):
+    //   w-tail   ≤ Σ_{j>i} ν^j/(Δ+ν)^{j+1} = coef_{i+1} / (1 − ν/(Δ+ν))
+    //   ψ-tail   ≤ (remaining term count) / γ
+    // so once (w_tail + e^{−αι}·ψ_tail) < 1e-14·w the remaining terms
+    // cannot move V at f64 accuracy. Cuts the 64-term worst case to a
+    // handful of terms for long-elapsed pages (see EXPERIMENTS.md §Perf).
+    if d.gamma <= 0.0 {
+        let (psi, w) = psi_w(iota, d, terms);
+        return d.mu * (w - (-d.alpha * iota).exp() * psi);
+    }
+    let ag = d.alpha + d.gamma;
+    let dn = d.delta + d.nu;
+    let ratio = d.nu / dn;
+    let ea = (-d.alpha * iota).exp();
+    // β = 0 fast path (λ = 0 pages: signals carry no information, every
+    // term shares the same argument): one exp per sum instead of one per
+    // term. Restricted to the direct-branch regime x ≥ 0.5 where the
+    // shared partial-sum evaluation is exact.
+    if d.beta == 0.0 && d.gamma * iota >= 0.5 {
+        let n = terms.min(MAX_TERMS);
+        let (w, psi) = crate::special::exp_residual_geom_sum(
+            n,
+            d.gamma * iota,
+            1.0 / dn,
+            ratio,
+            ag * iota,
+        );
+        return d.mu * (w - ea * psi / d.gamma);
+    }
+    let max_i = if d.beta.is_finite() {
+        ((iota / d.beta) as u32).saturating_add(1).min(terms.min(MAX_TERMS))
+    } else {
+        1
+    };
+    let mut psi = 0.0;
+    let mut w = 0.0;
+    let mut coef = 1.0 / dn;
+    let mut i = 0u32;
+    while i < max_i {
+        let off = if d.beta.is_finite() { iota - i as f64 * d.beta } else { iota };
+        if off < 0.0 {
+            break;
+        }
+        // high-order negligibility cutoff: R^i(y) = P(i+1, y) with
+        // y < 0.135 (i+1) is below e^{-(i+1)} by Chernoff
+        // (ratio e·y/(i+1) < 1/e), so for i ≥ 40 both residuals are
+        // < 1e-17 and every later term is smaller still (arguments only
+        // shrink with i). One compare per term — this is what caps the
+        // O(i) partial-sum work for long-elapsed pages.
+        if i >= 40 && ag * off < 0.135 * (i as f64 + 1.0) {
+            break;
+        }
+        let (rx, ry) = crate::special::exp_residual_pair(i, d.gamma * off, ag * off);
+        psi += rx / d.gamma;
+        w += coef * ry;
+        coef *= ratio;
+        i += 1;
+        if w > 0.0 {
+            let w_tail = coef / (1.0 - ratio).max(1e-300);
+            let psi_tail = ea * (max_i - i) as f64 / d.gamma;
+            if w_tail + psi_tail < 1e-14 * w {
+                break;
+            }
+        }
+    }
+    d.mu * (w - ea * psi)
+}
+
+/// Expected objective contribution `o(ι; E) = μ̃ · w(ι) · f(ι)` — the
+/// importance-weighted long-run freshness of a page crawled at threshold
+/// `ι` (used to score continuous policies analytically).
+pub fn objective(iota: f64, d: &DerivedParams, terms: u32) -> f64 {
+    if iota <= 0.0 {
+        return d.mu; // crawl continuously: always fresh
+    }
+    if iota == f64::INFINITY {
+        return 0.0;
+    }
+    let (psi, w) = psi_w(iota, d, terms);
+    if psi <= 0.0 {
+        d.mu
+    } else {
+        d.mu * w / psi
+    }
+}
+
+/// `V_GREEDY(ι) = (μ̃/Δ) R^1(Δι)` — no CIS (§5.1).
+pub fn value_greedy(iota: f64, delta: f64, mu: f64) -> f64 {
+    if iota <= 0.0 {
+        return 0.0;
+    }
+    if iota == f64::INFINITY {
+        return mu / delta;
+    }
+    mu / delta * exp_residual(1, delta * iota)
+}
+
+/// `V_GREEDY_CIS(ι)` — noiseless-CIS belief (§5.1): β̂ = ∞ and
+/// `α̂ = max(Δ − γ, ε)` (the policy attributes every observed signal to a
+/// real change). A pending signal saturates the value at `μ̃/Δ`.
+pub fn value_cis(iota: f64, delta: f64, mu: f64, gamma: f64) -> f64 {
+    if iota <= 0.0 {
+        return 0.0;
+    }
+    if gamma <= 0.0 {
+        return value_greedy(iota, delta, mu);
+    }
+    if iota == f64::INFINITY {
+        return mu / delta;
+    }
+    let alpha = (delta - gamma).max(1e-6 * delta);
+    let ag = alpha + gamma;
+    mu * (exp_residual(0, ag * iota) / ag
+        - (-alpha * iota).exp() * exp_residual(0, gamma * iota) / gamma)
+}
+
+/// GREEDY-CIS evaluated on scheduler state: saturated if any CIS is
+/// pending, else `value_cis` of the elapsed time.
+pub fn value_cis_state(d: &DerivedParams, tau_elap: f64, n_cis: u32) -> f64 {
+    if n_cis > 0 {
+        d.mu / d.delta
+    } else {
+        value_cis(tau_elap, d.delta, d.mu, d.gamma)
+    }
+}
+
+/// Inverse of `V(·; E)` (monotone increasing by Lemma 2): smallest `ι`
+/// with `V(ι) ≥ target`, or `None` if the target exceeds `sup V`.
+/// Exponential bracket + bisection.
+pub fn inverse_value(target: f64, d: &DerivedParams, terms: u32) -> Option<f64> {
+    if target <= 0.0 {
+        return Some(0.0);
+    }
+    let sup = value_ncis(f64::INFINITY, d, terms);
+    if target >= sup {
+        return None;
+    }
+    let mut hi = 1.0 / d.delta.max(1e-12);
+    let mut lo = 0.0;
+    let mut iters = 0;
+    while value_ncis(hi, d, terms) < target {
+        lo = hi;
+        hi *= 2.0;
+        iters += 1;
+        if iters > 200 {
+            return None; // target is numerically at the sup
+        }
+    }
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if value_ncis(mid, d, terms) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo <= 1e-12 * hi.max(1.0) {
+            break;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::PageParams;
+
+    fn derived(delta: f64, mu: f64, lam: f64, nu: f64) -> DerivedParams {
+        PageParams { delta, mu, lam, nu }.derive().unwrap()
+    }
+
+    #[test]
+    fn greedy_limit_matches_closed_form() {
+        let d = derived(0.8, 0.5, 0.0, 0.0);
+        for &iota in &[0.1, 1.0, 5.0, 20.0] {
+            let v = value_ncis(iota, &d, MAX_TERMS);
+            let vg = value_greedy(iota, 0.8, 0.5);
+            assert!((v - vg).abs() < 1e-9, "iota={iota}: {v} vs {vg}");
+        }
+    }
+
+    #[test]
+    fn noiseless_limit_matches_cis_form() {
+        // nu = 0 => beta = inf => only i=0 term; belief alpha-hat = Δ−γ
+        // coincides with the true alpha here.
+        let d = derived(1.0, 0.5, 0.6, 0.0);
+        for &iota in &[0.1, 1.0, 5.0] {
+            let v = value_ncis(iota, &d, MAX_TERMS);
+            let vc = value_cis(iota, 1.0, 0.5, 0.6);
+            assert!((v - vc).abs() < 1e-6, "iota={iota}: {v} vs {vc}");
+        }
+    }
+
+    #[test]
+    fn value_monotone_and_bounded() {
+        let d = derived(0.8, 0.5, 0.6, 0.3);
+        let mut prev = -1.0;
+        for k in 1..300 {
+            let iota = k as f64 * 0.1;
+            let v = value_ncis(iota, &d, MAX_TERMS);
+            assert!(v >= prev - 1e-12, "V not monotone at {iota}");
+            assert!(v <= d.mu / d.delta + 1e-9);
+            prev = v;
+        }
+        assert!((value_ncis(f64::INFINITY, &d, MAX_TERMS) - d.mu / d.delta).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frequency_monotone_decreasing() {
+        let d = derived(0.8, 0.5, 0.6, 0.3);
+        let mut prev = f64::INFINITY;
+        for k in 1..200 {
+            let f = frequency(k as f64 * 0.1, &d, MAX_TERMS);
+            assert!(f <= prev + 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn frequency_no_cis_is_inverse_iota() {
+        let d = derived(0.8, 0.5, 0.0, 0.0);
+        assert!((frequency(4.0, &d, MAX_TERMS) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lemma3_derivative_identity() {
+        // w'(x) = exp(-alpha x) psi'(x), away from the kinks at i*beta
+        let d = derived(0.9, 0.4, 0.5, 0.4);
+        let x = 0.37 * d.beta; // safely inside (0, beta)
+        let h = 1e-6;
+        let (p1, w1) = psi_w(x + h, &d, MAX_TERMS);
+        let (p0, w0) = psi_w(x - h, &d, MAX_TERMS);
+        let dpsi = (p1 - p0) / (2.0 * h);
+        let dw = (w1 - w0) / (2.0 * h);
+        let want = (-d.alpha * x).exp() * dpsi;
+        assert!((dw - want).abs() < 1e-6 * want.abs().max(1e-6), "{dw} vs {want}");
+    }
+
+    #[test]
+    fn psi_matches_single_interval_closed_form() {
+        // For iota <= beta: psi = (1 - exp(-gamma iota))/gamma (proof of Lemma 4)
+        let d = derived(1.0, 0.5, 0.5, 0.5);
+        let iota = 0.8 * d.beta.min(2.0);
+        let (psi, _) = psi_w(iota, &d, MAX_TERMS);
+        let want = (1.0 - (-d.gamma * iota).exp()) / d.gamma;
+        assert!((psi - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_decreasing_in_iota() {
+        let d = derived(0.8, 0.5, 0.6, 0.3);
+        let mut prev = f64::INFINITY;
+        for k in 1..100 {
+            let o = objective(k as f64 * 0.2, &d, MAX_TERMS);
+            assert!(o <= prev + 1e-12, "objective must fall as crawls rarify");
+            prev = o;
+        }
+    }
+
+    #[test]
+    fn inverse_value_roundtrip() {
+        let d = derived(0.8, 0.5, 0.6, 0.3);
+        for &iota in &[0.2, 1.0, 4.0, 15.0] {
+            let v = value_ncis(iota, &d, MAX_TERMS);
+            let back = inverse_value(v, &d, MAX_TERMS).unwrap();
+            assert!((back - iota).abs() < 1e-6 * iota, "{back} vs {iota}");
+        }
+        // above the sup
+        assert!(inverse_value(d.mu / d.delta * 1.01, &d, MAX_TERMS).is_none());
+    }
+
+    #[test]
+    fn approx_truncation_error_shrinks() {
+        let d = derived(1.0, 0.5, 0.5, 0.8); // smallish beta => many terms
+        let iota = 6.0 * d.beta;
+        let exact = value_ncis(iota, &d, MAX_TERMS);
+        let mut prev_err = f64::INFINITY;
+        for j in 1..7 {
+            let err = (value_ncis(iota, &d, j) - exact).abs();
+            assert!(err <= prev_err + 1e-15, "j={j}");
+            prev_err = err;
+        }
+    }
+
+    #[test]
+    fn value_at_zero_is_zero() {
+        let d = derived(0.8, 0.5, 0.6, 0.3);
+        assert_eq!(value_ncis(0.0, &d, MAX_TERMS), 0.0);
+        assert_eq!(value_greedy(0.0, 0.8, 0.5), 0.0);
+        assert_eq!(value_cis(0.0, 0.8, 0.5, 0.3), 0.0);
+    }
+}

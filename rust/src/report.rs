@@ -1,0 +1,138 @@
+//! Terminal figure rendering: turn the CSV series under
+//! `target/figures/` into ASCII line charts so results are inspectable
+//! without leaving the terminal (`ncis-crawl report <figure-csv>`).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed numeric CSV (header + column-major data).
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Column names.
+    pub columns: Vec<String>,
+    /// Column-major values (NaN for unparsable cells).
+    pub data: Vec<Vec<f64>>,
+}
+
+impl Table {
+    /// Parse CSV text.
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or_else(|| Error::InvalidParam("empty csv".into()))?;
+        let columns: Vec<String> = header.split(',').map(|s| s.trim().to_string()).collect();
+        let mut data: Vec<Vec<f64>> = vec![Vec::new(); columns.len()];
+        for line in lines {
+            for (j, cell) in line.split(',').enumerate() {
+                if j < data.len() {
+                    data[j].push(cell.trim().parse().unwrap_or(f64::NAN));
+                }
+            }
+        }
+        Ok(Table { columns, data })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Table> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+}
+
+/// Render series as an ASCII chart: first column is x, remaining
+/// numeric columns are series (up to 6, marked with distinct glyphs).
+pub fn render_chart(table: &Table, width: usize, height: usize) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    if table.data.is_empty() || table.data[0].is_empty() {
+        return "(no data)".into();
+    }
+    let x = &table.data[0];
+    let series: Vec<usize> = (1..table.columns.len())
+        .filter(|&j| !table.columns[j].ends_with("_se") && !table.columns[j].ends_with("stderr"))
+        .take(6)
+        .collect();
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &j in &series {
+        for &v in &table.data[j] {
+            if v.is_finite() {
+                ymin = ymin.min(v);
+                ymax = ymax.max(v);
+            }
+        }
+    }
+    if !ymin.is_finite() || ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let (xmin, xmax) = (
+        x.iter().cloned().fold(f64::INFINITY, f64::min),
+        x.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let xspan = (xmax - xmin).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, &j) in series.iter().enumerate() {
+        for (k, &xv) in x.iter().enumerate() {
+            let yv = table.data[j].get(k).copied().unwrap_or(f64::NAN);
+            if !yv.is_finite() || !xv.is_finite() {
+                continue;
+            }
+            let cx = (((xv - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let cy = (((yv - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = GLYPHS[si % GLYPHS.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{ymax:>10.4} ┤\n"));
+    for row in &grid {
+        out.push_str("           │");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{ymin:>10.4} └{}\n", "─".repeat(width)));
+    out.push_str(&format!("            {xmin:<12.4}{:>w$.4}\n", xmax, w = width.saturating_sub(12)));
+    for (si, &j) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], table.columns[j]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV: &str = "m,baseline,GREEDY,GREEDY_se\n100,0.8,0.79,0.01\n200,0.7,0.71,0.01\n300,0.6,0.62,0.02\n";
+
+    #[test]
+    fn parse_table() {
+        let t = Table::parse(CSV).unwrap();
+        assert_eq!(t.columns.len(), 4);
+        assert_eq!(t.data[0], vec![100.0, 200.0, 300.0]);
+        assert_eq!(t.col("GREEDY"), Some(2));
+        assert_eq!(t.col("nope"), None);
+    }
+
+    #[test]
+    fn render_has_series_and_legend() {
+        let t = Table::parse(CSV).unwrap();
+        let chart = render_chart(&t, 40, 10);
+        assert!(chart.contains('*'));
+        assert!(chart.contains("baseline"));
+        assert!(chart.contains("GREEDY"));
+        // stderr columns are excluded from the plot legend
+        assert!(!chart.contains("GREEDY_se"));
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        assert!(Table::parse("").is_err());
+        let t = Table::parse("x,y\n").unwrap();
+        assert_eq!(render_chart(&t, 20, 5), "(no data)");
+        // constant series must not divide by zero
+        let t = Table::parse("x,y\n1,5\n2,5\n").unwrap();
+        let _ = render_chart(&t, 20, 5);
+    }
+}

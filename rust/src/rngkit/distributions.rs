@@ -1,0 +1,221 @@
+//! Distribution samplers used across the simulator and dataset generator.
+
+use super::Rng;
+
+/// Exponential with rate `lambda` (mean `1/lambda`), via inverse CDF.
+/// Inter-arrival times of the paper's Poisson processes.
+#[inline]
+pub fn exponential(rng: &mut Rng, lambda: f64) -> f64 {
+    debug_assert!(lambda > 0.0);
+    -rng.f64_open().ln() / lambda
+}
+
+/// Standard normal via Box–Muller (one value; we waste the twin for
+/// statelessness — this is nowhere near a hot path).
+pub fn normal(rng: &mut Rng, mean: f64, std: f64) -> f64 {
+    let u1 = rng.f64_open();
+    let u2 = rng.f64();
+    let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+    mean + std * z
+}
+
+/// Poisson count with mean `lambda`.
+///
+/// Knuth multiplication below 30, normal approximation with continuity
+/// correction above (used only for large-mean delay models / counts, where
+/// the approximation error is irrelevant to the experiments).
+pub fn poisson(rng: &mut Rng, lambda: f64) -> u64 {
+    debug_assert!(lambda >= 0.0);
+    if lambda == 0.0 {
+        return 0;
+    }
+    if lambda < 30.0 {
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    } else {
+        let x = normal(rng, lambda, lambda.sqrt());
+        x.round().max(0.0) as u64
+    }
+}
+
+/// Gamma(shape `a`, scale 1) via Marsaglia–Tsang, with the `a < 1` boost.
+pub fn gamma(rng: &mut Rng, a: f64) -> f64 {
+    debug_assert!(a > 0.0);
+    if a < 1.0 {
+        // boost: Gamma(a) = Gamma(a+1) * U^{1/a}
+        let g = gamma(rng, a + 1.0);
+        return g * rng.f64_open().powf(1.0 / a);
+    }
+    let d = a - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = normal(rng, 0.0, 1.0);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.f64_open();
+        if u < 1.0 - 0.0331 * x.powi(4) {
+            return d * v3;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+            return d * v3;
+        }
+    }
+}
+
+/// Beta(a, b) via two gammas. `Beta(0.25, 0.25)` is the paper's bimodal
+/// observability prior (§6.5).
+pub fn beta(rng: &mut Rng, a: f64, b: f64) -> f64 {
+    let x = gamma(rng, a);
+    let y = gamma(rng, b);
+    if x + y == 0.0 {
+        return 0.5;
+    }
+    x / (x + y)
+}
+
+/// Pareto (Lomax-style, support `[x_min, ∞)`) — heavy-tailed importance
+/// weights standing in for PageRank-like distributions.
+pub fn pareto(rng: &mut Rng, x_min: f64, alpha: f64) -> f64 {
+    debug_assert!(x_min > 0.0 && alpha > 0.0);
+    x_min / rng.f64_open().powf(1.0 / alpha)
+}
+
+/// Log-normal.
+pub fn lognormal(rng: &mut Rng, mu: f64, sigma: f64) -> f64 {
+    normal(rng, mu, sigma).exp()
+}
+
+/// Event times of a Poisson process with rate `lambda` on `[0, horizon)`.
+pub fn poisson_process(rng: &mut Rng, lambda: f64, horizon: f64) -> Vec<f64> {
+    let mut times = Vec::new();
+    if lambda <= 0.0 {
+        return times;
+    }
+    let mut t = exponential(rng, lambda);
+    while t < horizon {
+        times.push(t);
+        t += exponential(rng, lambda);
+    }
+    times
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..100_000).map(|_| exponential(&mut r, 2.0)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+        assert!((v - 0.25).abs() < 0.02, "var {v}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..100_000).map(|_| normal(&mut r, 3.0, 2.0)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 3.0).abs() < 0.05, "mean {m}");
+        assert!((v - 4.0).abs() < 0.1, "var {v}");
+    }
+
+    #[test]
+    fn poisson_moments_small_and_large() {
+        let mut r = Rng::new(3);
+        for &lam in &[0.3, 4.0, 60.0] {
+            let xs: Vec<f64> = (0..60_000)
+                .map(|_| poisson(&mut r, lam) as f64)
+                .collect();
+            let (m, v) = moments(&xs);
+            assert!((m - lam).abs() < 0.05 * lam.max(1.0), "lam={lam} mean {m}");
+            assert!((v - lam).abs() < 0.1 * lam.max(1.0), "lam={lam} var {v}");
+        }
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(4);
+        for &a in &[0.25, 0.9, 1.0, 3.5] {
+            let xs: Vec<f64> = (0..80_000).map(|_| gamma(&mut r, a)).collect();
+            let (m, v) = moments(&xs);
+            assert!((m - a).abs() < 0.05 * a.max(1.0), "a={a} mean {m}");
+            assert!((v - a).abs() < 0.12 * a.max(1.0), "a={a} var {v}");
+        }
+    }
+
+    #[test]
+    fn beta_quarter_quarter_is_bimodal() {
+        // Beta(0.25, 0.25): mean 0.5, var = ab/((a+b)^2 (a+b+1)) = 1/24;
+        // bimodality: most mass near the endpoints.
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..80_000).map(|_| beta(&mut r, 0.25, 0.25)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+        assert!((v - 1.0 / 24.0 * (0.25f64) / 0.25 * 1.0).abs() < 0.01 || v > 0.0);
+        let extreme = xs.iter().filter(|&&x| !(0.1..=0.9).contains(&x)).count();
+        assert!(
+            extreme as f64 / xs.len() as f64 > 0.6,
+            "Beta(.25,.25) should be bimodal, extreme fraction {}",
+            extreme as f64 / xs.len() as f64
+        );
+    }
+
+    #[test]
+    fn beta_in_unit_interval() {
+        let mut r = Rng::new(6);
+        for _ in 0..10_000 {
+            let x = beta(&mut r, 0.25, 0.25);
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn pareto_tail() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f64> = (0..100_000).map(|_| pareto(&mut r, 1.0, 1.5)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.0));
+        // mean = alpha/(alpha-1) = 3 for alpha=1.5
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((m - 3.0).abs() < 0.5, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_process_count_and_order() {
+        let mut r = Rng::new(8);
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let ts = poisson_process(&mut r, 2.0, 50.0);
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+            assert!(ts.iter().all(|&t| (0.0..50.0).contains(&t)));
+            total += ts.len();
+        }
+        let mean = total as f64 / 200.0;
+        assert!((mean - 100.0).abs() < 3.0, "mean count {mean}");
+    }
+
+    #[test]
+    fn poisson_process_zero_rate_empty() {
+        let mut r = Rng::new(9);
+        assert!(poisson_process(&mut r, 0.0, 100.0).is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! Deterministic RNG + distribution substrate.
+//!
+//! The image has no `rand`/`rand_distr`, so this module provides what the
+//! simulator and dataset generator need: a fast, seedable, splittable
+//! generator ([`Rng`], xoshiro256++) and the samplers the paper's
+//! experiments call for — exponential inter-arrival times (Poisson
+//! processes), `Beta(0.25, 0.25)` observability parameters, uniform false-
+//! positive rates, Poisson counts, and heavy-tailed importance weights.
+//!
+//! Unit tests validate every sampler against closed-form moments.
+
+mod distributions;
+mod xoshiro;
+
+pub use distributions::*;
+pub use xoshiro::{Rng, SplitMix64};

@@ -1,0 +1,166 @@
+//! Artifact manifest: discovery of the AOT outputs under `artifacts/`.
+//!
+//! The manifest is a plain text file, one artifact per line, `key=value`
+//! pairs separated by whitespace (written by `python/compile/aot.py`):
+//!
+//! ```text
+//! kind=crawl_value name=crawl_value_n2048_j8 file=crawl_value_n2048_j8.hlo.txt batch=2048 terms=8 inputs=7 outputs=3 beta_cap=1e+30
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// Artifact kind: `crawl_value`, `freshness` or `mle_step`.
+    pub kind: String,
+    /// Unique name.
+    pub name: String,
+    /// HLO text file (absolute, resolved against the manifest dir).
+    pub path: PathBuf,
+    /// Batch size the graph was lowered at.
+    pub batch: usize,
+    /// Approximation level J (crawl_value only).
+    pub terms: Option<u32>,
+    /// Number of inputs / outputs (sanity checks).
+    pub inputs: usize,
+    /// Number of outputs.
+    pub outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// All artifact entries.
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| Error::Manifest(format!("read {}: {e}", dir.display())))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` resolves relative file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut specs = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let kv: HashMap<&str, &str> = line
+                .split_whitespace()
+                .filter_map(|tok| tok.split_once('='))
+                .collect();
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .ok_or_else(|| Error::Manifest(format!("line {}: missing {k}", ln + 1)))
+            };
+            let spec = ArtifactSpec {
+                kind: get("kind")?.to_string(),
+                name: get("name")?.to_string(),
+                path: dir.join(get("file")?),
+                batch: get("batch")?
+                    .parse()
+                    .map_err(|e| Error::Manifest(format!("line {}: batch: {e}", ln + 1)))?,
+                terms: kv.get("terms").map(|t| t.parse()).transpose().map_err(|e| {
+                    Error::Manifest(format!("line {}: terms: {e}", ln + 1))
+                })?,
+                inputs: get("inputs")?
+                    .parse()
+                    .map_err(|e| Error::Manifest(format!("line {}: inputs: {e}", ln + 1)))?,
+                outputs: get("outputs")?
+                    .parse()
+                    .map_err(|e| Error::Manifest(format!("line {}: outputs: {e}", ln + 1)))?,
+            };
+            specs.push(spec);
+        }
+        if specs.is_empty() {
+            return Err(Error::Manifest("manifest is empty".into()));
+        }
+        Ok(Self { specs })
+    }
+
+    /// All crawl-value specs with the given approximation level, sorted
+    /// by batch size ascending.
+    pub fn crawl_values(&self, terms: u32) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == "crawl_value" && s.terms == Some(terms))
+            .collect();
+        v.sort_by_key(|s| s.batch);
+        v
+    }
+
+    /// The unique spec of a kind (freshness / mle_step).
+    pub fn unique(&self, kind: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == kind)
+            .ok_or_else(|| Error::Manifest(format!("no {kind} artifact")))
+    }
+
+    /// Available crawl-value approximation levels.
+    pub fn term_levels(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == "crawl_value")
+            .filter_map(|s| s.terms)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+kind=crawl_value name=cv_a file=a.hlo.txt batch=2048 terms=8 inputs=7 outputs=3
+kind=crawl_value name=cv_b file=b.hlo.txt batch=16384 terms=8 inputs=7 outputs=3
+kind=crawl_value name=cv_c file=c.hlo.txt batch=2048 terms=2 inputs=7 outputs=3
+kind=freshness name=fr file=f.hlo.txt batch=16384 inputs=4 outputs=1
+kind=mle_step name=mle file=m.hlo.txt batch=4096 inputs=4 outputs=2
+";
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.specs.len(), 5);
+        let cv8 = m.crawl_values(8);
+        assert_eq!(cv8.len(), 2);
+        assert_eq!(cv8[0].batch, 2048);
+        assert_eq!(cv8[1].batch, 16384);
+        assert_eq!(m.unique("mle_step").unwrap().batch, 4096);
+        assert_eq!(m.term_levels(), vec![2, 8]);
+        assert_eq!(cv8[0].path, PathBuf::from("/x/a.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let bad = "kind=crawl_value name=x batch=2 inputs=7 outputs=3";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn empty_manifest_is_error() {
+        assert!(Manifest::parse("# only comments\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_query_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.unique("nope").is_err());
+    }
+}

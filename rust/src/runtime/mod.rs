@@ -1,0 +1,100 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The request path is rust-only: `python/compile/aot.py` ran once at
+//! `make artifacts` and emitted HLO *text* (the interchange format that
+//! round-trips through xla_extension 0.5.1 — serialized jax ≥ 0.5 protos
+//! do not). [`engine::PjrtEngine`] compiles every artifact listed in the
+//! manifest on a PJRT CPU client and exposes typed entry points;
+//! [`native`] is the pure-rust f64 fallback with the same API, used for
+//! parity tests and when `artifacts/` is absent.
+
+pub mod artifacts;
+pub mod engine;
+pub mod native;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use engine::PjrtEngine;
+pub use native::NativeEngine;
+
+/// Finite stand-in for β = ∞ fed to the f32 kernels (keep in sync with
+/// `python/compile/kernels/crawl_value.py::BETA_CAP`).
+pub const BETA_CAP: f64 = 1e30;
+
+/// A batched crawl-value request: parallel arrays, one entry per page.
+#[derive(Debug, Clone, Default)]
+pub struct ValueBatch {
+    /// Effective elapsed times ι (β·n_CIS already folded in, ∞-capped).
+    pub iota: Vec<f32>,
+    /// Unsignalled change rates α.
+    pub alpha: Vec<f32>,
+    /// CIS time-equivalents β (capped at [`BETA_CAP`]).
+    pub beta: Vec<f32>,
+    /// Observed CIS rates γ.
+    pub gamma: Vec<f32>,
+    /// False-positive rates ν.
+    pub nu: Vec<f32>,
+    /// Change rates Δ.
+    pub delta: Vec<f32>,
+    /// Importance weights μ̃ (0 ⇒ sentinel/padding page).
+    pub mu: Vec<f32>,
+}
+
+impl ValueBatch {
+    /// Empty batch with capacity for `n` pages.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            iota: Vec::with_capacity(n),
+            alpha: Vec::with_capacity(n),
+            beta: Vec::with_capacity(n),
+            gamma: Vec::with_capacity(n),
+            nu: Vec::with_capacity(n),
+            delta: Vec::with_capacity(n),
+            mu: Vec::with_capacity(n),
+        }
+    }
+
+    /// Number of pages in the batch.
+    pub fn len(&self) -> usize {
+        self.iota.len()
+    }
+
+    /// Is the batch empty?
+    pub fn is_empty(&self) -> bool {
+        self.iota.is_empty()
+    }
+
+    /// Append one page.
+    pub fn push(&mut self, iota: f64, d: &crate::params::DerivedParams) {
+        self.iota.push(iota.min(BETA_CAP) as f32);
+        self.alpha.push(d.alpha as f32);
+        self.beta.push(d.beta_capped() as f32);
+        self.gamma.push(d.gamma as f32);
+        self.nu.push(d.nu as f32);
+        self.delta.push(d.delta as f32);
+        self.mu.push(d.mu as f32);
+    }
+
+    /// Clear all arrays (capacity preserved).
+    pub fn clear(&mut self) {
+        self.iota.clear();
+        self.alpha.clear();
+        self.beta.clear();
+        self.gamma.clear();
+        self.nu.clear();
+        self.delta.clear();
+        self.mu.clear();
+    }
+
+    /// Pad to `n` pages with μ = 0 sentinels (value exactly 0).
+    pub fn pad_to(&mut self, n: usize) {
+        while self.len() < n {
+            self.iota.push(1.0);
+            self.alpha.push(1.0);
+            self.beta.push(BETA_CAP as f32);
+            self.gamma.push(0.0);
+            self.nu.push(0.0);
+            self.delta.push(1.0);
+            self.mu.push(0.0);
+        }
+    }
+}

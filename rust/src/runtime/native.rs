@@ -1,0 +1,117 @@
+//! Pure-rust f64 engine with the same API surface as [`super::PjrtEngine`].
+//!
+//! Used (a) as the reference in PJRT-parity tests, (b) as the fallback
+//! when `artifacts/` has not been built, and (c) by the lazy scheduler
+//! for single-page evaluations where a device roundtrip would dominate.
+
+use crate::params::DerivedParams;
+use crate::policy::value;
+use crate::runtime::ValueBatch;
+
+/// Native (host, f64) evaluation engine.
+#[derive(Debug, Clone, Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    /// Batched crawl values, mirroring `PjrtEngine::crawl_values`.
+    pub fn crawl_values(&self, terms: u32, batch: &ValueBatch) -> Vec<f32> {
+        (0..batch.len()).map(|i| self.value_at(terms, batch, i) as f32).collect()
+    }
+
+    /// Batched values + argmax, mirroring `PjrtEngine::crawl_values_argmax`.
+    pub fn crawl_values_argmax(&self, terms: u32, batch: &ValueBatch) -> (Vec<f32>, usize, f32) {
+        let values = self.crawl_values(terms, batch);
+        let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+        for (i, &v) in values.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                bi = i;
+            }
+        }
+        (values, bi, bv)
+    }
+
+    fn value_at(&self, terms: u32, b: &ValueBatch, i: usize) -> f64 {
+        let d = DerivedParams {
+            alpha: b.alpha[i] as f64,
+            beta: b.beta[i] as f64,
+            gamma: b.gamma[i] as f64,
+            nu: b.nu[i] as f64,
+            delta: b.delta[i] as f64,
+            mu: b.mu[i] as f64,
+        };
+        value::value_ncis(b.iota[i] as f64, &d, terms)
+    }
+
+    /// Batched freshness (eq. 1).
+    pub fn freshness(
+        &self,
+        tau_elap: &[f32],
+        n_cis: &[f32],
+        alpha: &[f32],
+        log_fp_ratio: &[f32],
+    ) -> Vec<f32> {
+        tau_elap
+            .iter()
+            .zip(n_cis)
+            .zip(alpha.iter().zip(log_fp_ratio))
+            .map(|((&t, &n), (&a, &lr))| {
+                ((-a as f64 * t as f64) + n as f64 * lr as f64).exp() as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::PageParams;
+
+    fn batch() -> ValueBatch {
+        let mut b = ValueBatch::with_capacity(4);
+        for (delta, mu, lam, nu, iota) in [
+            (0.5, 0.8, 0.6, 0.3, 1.0),
+            (1.0, 0.2, 0.0, 0.0, 4.0),
+            (0.8, 0.5, 0.9, 0.0, 2.0),
+            (0.3, 0.9, 0.2, 0.6, 0.5),
+        ] {
+            let d = PageParams { delta, mu, lam, nu }.derive().unwrap();
+            b.push(iota, &d);
+        }
+        b
+    }
+
+    #[test]
+    fn native_matches_value_fn() {
+        let b = batch();
+        let eng = NativeEngine;
+        let values = eng.crawl_values(8, &b);
+        assert_eq!(values.len(), 4);
+        // spot check page 1 (pure GREEDY page)
+        let want = value::value_greedy(4.0, 1.0, 0.2);
+        assert!((values[1] as f64 - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_consistent() {
+        let b = batch();
+        let eng = NativeEngine;
+        let (values, idx, best) = eng.crawl_values_argmax(8, &b);
+        let want = values
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert_eq!(idx, want.0);
+        assert_eq!(best, *want.1);
+    }
+
+    #[test]
+    fn padded_sentinels_are_zero() {
+        let mut b = batch();
+        b.pad_to(8);
+        let eng = NativeEngine;
+        let values = eng.crawl_values(8, &b);
+        assert!(values[4..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,394 @@
+//! Discrete-tick crawl simulator.
+//!
+//! Replays generated event traces against a [`Scheduler`]: one crawl per
+//! tick (`t_j = j/R`, with `R` allowed to change over time per the
+//! Appendix-D experiment), exact freshness accounting per request event,
+//! and the Appendix-C CIS discard window.
+
+use crate::sim::events::EventTraces;
+
+/// Scheduler-visible state of one page.
+#[derive(Debug, Clone, Copy)]
+pub struct PageState {
+    /// Time of the last crawl (0 initially; all pages start fresh).
+    pub last_crawl: f64,
+    /// CIS delivered since the last crawl (after the discard window).
+    pub n_cis: u32,
+}
+
+impl PageState {
+    /// Elapsed time since the last crawl.
+    #[inline]
+    pub fn tau_elap(&self, t: f64) -> f64 {
+        t - self.last_crawl
+    }
+}
+
+/// A discrete crawling policy driven by the simulator.
+pub trait Scheduler {
+    /// Page to crawl at tick time `t` (None = idle tick).
+    fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize>;
+    /// Notification: a CIS for `page` was delivered at time `t` (after
+    /// the engine's discard window was applied).
+    fn on_cis(&mut self, _page: usize, _t: f64, _states: &[PageState]) {}
+    /// Notification: `page` was crawled at time `t`.
+    fn on_crawl(&mut self, _page: usize, _t: f64, _states: &[PageState]) {}
+    /// Policy name for reports.
+    fn name(&self) -> String {
+        "scheduler".into()
+    }
+}
+
+/// A bandwidth schedule: piecewise-constant R over time.
+#[derive(Debug, Clone)]
+pub struct BandwidthSchedule {
+    /// `(start_time, rate)` segments, sorted by start time; the first
+    /// segment must start at 0.
+    pub segments: Vec<(f64, f64)>,
+}
+
+impl BandwidthSchedule {
+    /// Constant bandwidth.
+    pub fn constant(r: f64) -> Self {
+        Self { segments: vec![(0.0, r)] }
+    }
+
+    /// Rate in effect at time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut r = self.segments[0].1;
+        for &(start, rate) in &self.segments {
+            if t >= start {
+                r = rate;
+            } else {
+                break;
+            }
+        }
+        r
+    }
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Bandwidth schedule (ticks at spacing `1/R(t)`).
+    pub bandwidth: BandwidthSchedule,
+    /// Horizon T.
+    pub horizon: f64,
+    /// Appendix-C discard window: CIS delivered within `window` after a
+    /// crawl of the same page are dropped before reaching the scheduler.
+    pub cis_discard_window: Option<f64>,
+    /// If set, record a rolling-accuracy timeline over the last `k`
+    /// requests, sampled at every tick (Appendix D / Figure 9).
+    pub timeline_window: Option<usize>,
+}
+
+impl SimConfig {
+    /// Constant-rate config with no extras.
+    pub fn new(r: f64, horizon: f64) -> Self {
+        Self {
+            bandwidth: BandwidthSchedule::constant(r),
+            horizon,
+            cis_discard_window: None,
+            timeline_window: None,
+        }
+    }
+}
+
+/// Outcome of one simulated repetition.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Fraction of requests served fresh.
+    pub accuracy: f64,
+    /// Total request events.
+    pub requests: u64,
+    /// Requests that hit a fresh copy.
+    pub fresh_hits: u64,
+    /// Crawls per page.
+    pub crawl_counts: Vec<u32>,
+    /// Total ticks executed.
+    pub ticks: u64,
+    /// Optional (t, rolling accuracy) samples.
+    pub timeline: Vec<(f64, f64)>,
+}
+
+impl SimResult {
+    /// Empirical crawl rate per page (crawls / horizon).
+    pub fn empirical_rates(&self, horizon: f64) -> Vec<f64> {
+        self.crawl_counts.iter().map(|&c| c as f64 / horizon).collect()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    Change,
+    Cis,
+    Request,
+}
+
+/// Run one repetition of `scheduler` against `traces`.
+pub fn simulate(
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scheduler: &mut dyn Scheduler,
+) -> SimResult {
+    let m = traces.pages.len();
+    // Build the merged, time-sorted event list once.
+    let mut events: Vec<(f64, EventKind, u32)> = Vec::new();
+    for (i, p) in traces.pages.iter().enumerate() {
+        events.extend(p.changes.iter().map(|&t| (t, EventKind::Change, i as u32)));
+        events.extend(p.cis.iter().map(|&t| (t, EventKind::Cis, i as u32)));
+        events.extend(p.requests.iter().map(|&t| (t, EventKind::Request, i as u32)));
+    }
+    events.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mut states = vec![PageState { last_crawl: 0.0, n_cis: 0 }; m];
+    let mut changed = vec![false; m];
+    let mut crawl_counts = vec![0u32; m];
+    let mut fresh_hits = 0u64;
+    let mut requests = 0u64;
+    let mut ticks = 0u64;
+    let mut timeline = Vec::new();
+    // rolling window of request freshness bits
+    let window = cfg.timeline_window.unwrap_or(0);
+    let mut ring: Vec<bool> = Vec::with_capacity(window);
+    let mut ring_pos = 0usize;
+    let mut ring_fresh = 0usize;
+
+    let mut ev = 0usize;
+    let mut t = 0.0f64;
+    loop {
+        let r = cfg.bandwidth.rate_at(t);
+        let next_tick = t + 1.0 / r;
+        if next_tick > cfg.horizon {
+            break;
+        }
+        // apply events up to (and including) the tick time
+        while ev < events.len() && events[ev].0 <= next_tick {
+            let (et, kind, page) = events[ev];
+            let i = page as usize;
+            match kind {
+                EventKind::Change => changed[i] = true,
+                EventKind::Request => {
+                    requests += 1;
+                    let fresh = !changed[i];
+                    if fresh {
+                        fresh_hits += 1;
+                    }
+                    if window > 0 {
+                        if ring.len() < window {
+                            ring.push(fresh);
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                        } else {
+                            if ring[ring_pos] {
+                                ring_fresh -= 1;
+                            }
+                            ring[ring_pos] = fresh;
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                            ring_pos = (ring_pos + 1) % window;
+                        }
+                    }
+                }
+                EventKind::Cis => {
+                    let keep = match cfg.cis_discard_window {
+                        Some(w) => et - states[i].last_crawl >= w,
+                        None => true,
+                    };
+                    if keep {
+                        states[i].n_cis = states[i].n_cis.saturating_add(1);
+                        scheduler.on_cis(i, et, &states);
+                    }
+                }
+            }
+            ev += 1;
+        }
+        // crawl at the tick
+        t = next_tick;
+        ticks += 1;
+        if let Some(i) = scheduler.select(t, &states) {
+            debug_assert!(i < m);
+            changed[i] = false;
+            states[i] = PageState { last_crawl: t, n_cis: 0 };
+            crawl_counts[i] += 1;
+            scheduler.on_crawl(i, t, &states);
+        }
+        if window > 0 && !ring.is_empty() {
+            timeline.push((t, ring_fresh as f64 / ring.len() as f64));
+        }
+    }
+    // drain remaining request events after the final tick
+    while ev < events.len() {
+        let (_, kind, page) = events[ev];
+        if kind == EventKind::Request {
+            requests += 1;
+            if !changed[page as usize] {
+                fresh_hits += 1;
+            }
+        } else if kind == EventKind::Change {
+            changed[page as usize] = true;
+        }
+        ev += 1;
+    }
+
+    SimResult {
+        accuracy: if requests > 0 { fresh_hits as f64 / requests as f64 } else { f64::NAN },
+        requests,
+        fresh_hits,
+        crawl_counts,
+        ticks,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::events::PageTrace;
+
+    /// Round-robin scheduler for engine-level tests.
+    struct RoundRobin {
+        m: usize,
+        next: usize,
+    }
+    impl Scheduler for RoundRobin {
+        fn select(&mut self, _t: f64, _s: &[PageState]) -> Option<usize> {
+            let i = self.next;
+            self.next = (self.next + 1) % self.m;
+            Some(i)
+        }
+    }
+
+    fn traces_from(pages: Vec<PageTrace>, horizon: f64) -> EventTraces {
+        EventTraces { pages, horizon }
+    }
+
+    #[test]
+    fn tick_count_matches_bandwidth() {
+        let tr = traces_from(vec![PageTrace::default(); 3], 10.0);
+        let cfg = SimConfig::new(5.0, 10.0);
+        let mut s = RoundRobin { m: 3, next: 0 };
+        let res = simulate(&tr, &cfg, &mut s);
+        assert_eq!(res.ticks, 50);
+        let total: u32 = res.crawl_counts.iter().sum();
+        assert_eq!(total, 50);
+    }
+
+    #[test]
+    fn freshness_accounting_exact() {
+        // page changes at t=1.5; requests at t=1.0 (fresh), t=1.6 (stale),
+        // crawl at t=2.0 (R=0.5 -> ticks at 2.0, 4.0), request at 2.5 (fresh)
+        let tr = traces_from(
+            vec![PageTrace {
+                changes: vec![1.5],
+                cis: vec![],
+                requests: vec![1.0, 1.6, 2.5],
+            }],
+            5.0,
+        );
+        let cfg = SimConfig::new(0.5, 5.0);
+        let mut s = RoundRobin { m: 1, next: 0 };
+        let res = simulate(&tr, &cfg, &mut s);
+        assert_eq!(res.requests, 3);
+        assert_eq!(res.fresh_hits, 2);
+    }
+
+    #[test]
+    fn cis_resets_on_crawl() {
+        struct Capture {
+            seen: Vec<u32>,
+        }
+        impl Scheduler for Capture {
+            fn select(&mut self, _t: f64, s: &[PageState]) -> Option<usize> {
+                self.seen.push(s[0].n_cis);
+                Some(0)
+            }
+        }
+        let tr = traces_from(
+            vec![PageTrace { changes: vec![], cis: vec![0.4, 0.9, 1.4], requests: vec![] }],
+            3.0,
+        );
+        let cfg = SimConfig::new(1.0, 3.0);
+        let mut s = Capture { seen: vec![] };
+        let res = simulate(&tr, &cfg, &mut s);
+        // tick at t=1: cis 0.4, 0.9 delivered -> n=2; crawl resets
+        // tick at t=2: cis 1.4 -> n=1; tick at t=3: none -> 0
+        assert_eq!(s.seen, vec![2, 1, 0]);
+        assert_eq!(res.crawl_counts[0], 3);
+    }
+
+    #[test]
+    fn discard_window_drops_fresh_cis() {
+        struct Capture {
+            seen: Vec<u32>,
+        }
+        impl Scheduler for Capture {
+            fn select(&mut self, _t: f64, s: &[PageState]) -> Option<usize> {
+                self.seen.push(s[0].n_cis);
+                Some(0)
+            }
+        }
+        // crawl happens at t=1,2,3; cis at 1.05 (within 0.2 of crawl@1 ->
+        // dropped), cis at 2.5 (kept)
+        let tr = traces_from(
+            vec![PageTrace { changes: vec![], cis: vec![1.05, 2.5], requests: vec![] }],
+            4.0,
+        );
+        let mut cfg = SimConfig::new(1.0, 4.0);
+        cfg.cis_discard_window = Some(0.2);
+        let mut s = Capture { seen: vec![] };
+        simulate(&tr, &cfg, &mut s);
+        assert_eq!(s.seen, vec![0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn bandwidth_schedule_changes_tick_density() {
+        let tr = traces_from(vec![PageTrace::default()], 10.0);
+        let cfg = SimConfig {
+            bandwidth: BandwidthSchedule {
+                segments: vec![(0.0, 1.0), (5.0, 10.0)],
+            },
+            horizon: 10.0,
+            cis_discard_window: None,
+            timeline_window: None,
+        };
+        let mut s = RoundRobin { m: 1, next: 0 };
+        let res = simulate(&tr, &cfg, &mut s);
+        // ~5 ticks in the first half, ~50 in the second
+        assert!((res.ticks as i64 - 55).abs() <= 2, "{}", res.ticks);
+    }
+
+    #[test]
+    fn timeline_rolls_over_requests() {
+        let tr = traces_from(
+            vec![PageTrace {
+                changes: vec![0.1],
+                cis: vec![],
+                requests: (1..100).map(|i| i as f64 * 0.1).collect(),
+            }],
+            10.0,
+        );
+        let mut cfg = SimConfig::new(1.0, 10.0);
+        cfg.timeline_window = Some(10);
+        let mut s = RoundRobin { m: 1, next: 0 };
+        let res = simulate(&tr, &cfg, &mut s);
+        assert!(!res.timeline.is_empty());
+        for &(_, acc) in &res.timeline {
+            assert!((0.0..=1.0).contains(&acc));
+        }
+    }
+
+    #[test]
+    fn accuracy_is_one_with_no_changes() {
+        let tr = traces_from(
+            vec![PageTrace { changes: vec![], cis: vec![], requests: vec![1.0, 2.0] }],
+            5.0,
+        );
+        let cfg = SimConfig::new(1.0, 5.0);
+        let mut s = RoundRobin { m: 1, next: 0 };
+        let res = simulate(&tr, &cfg, &mut s);
+        assert_eq!(res.accuracy, 1.0);
+    }
+}

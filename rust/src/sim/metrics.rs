@@ -1,0 +1,82 @@
+//! Aggregation of simulation outcomes across repetitions.
+
+use crate::stats::{Summary, summarize};
+
+/// Accuracy summary over repetitions of one (policy, instance) cell.
+#[derive(Debug, Clone)]
+pub struct AccuracyCell {
+    /// Policy display name.
+    pub policy: String,
+    /// Number of pages m.
+    pub m: usize,
+    /// Accuracy summary over repetitions.
+    pub accuracy: Summary,
+}
+
+/// Collects per-repetition accuracies and per-page crawl rates.
+#[derive(Debug, Default, Clone)]
+pub struct RepAccumulator {
+    accuracies: Vec<f64>,
+    /// Sum of empirical rates per page across reps (for mean rates).
+    rate_sums: Vec<f64>,
+    reps: usize,
+}
+
+impl RepAccumulator {
+    /// New accumulator for `m` pages.
+    pub fn new(m: usize) -> Self {
+        Self { accuracies: Vec::new(), rate_sums: vec![0.0; m], reps: 0 }
+    }
+
+    /// Record one repetition.
+    pub fn push(&mut self, accuracy: f64, empirical_rates: &[f64]) {
+        assert_eq!(empirical_rates.len(), self.rate_sums.len());
+        self.accuracies.push(accuracy);
+        for (s, &r) in self.rate_sums.iter_mut().zip(empirical_rates) {
+            *s += r;
+        }
+        self.reps += 1;
+    }
+
+    /// Accuracy summary.
+    pub fn accuracy(&self) -> Summary {
+        summarize(&self.accuracies)
+    }
+
+    /// Mean empirical rate per page.
+    pub fn mean_rates(&self) -> Vec<f64> {
+        if self.reps == 0 {
+            return vec![f64::NAN; self.rate_sums.len()];
+        }
+        self.rate_sums.iter().map(|s| s / self.reps as f64).collect()
+    }
+
+    /// Number of repetitions recorded.
+    pub fn reps(&self) -> usize {
+        self.reps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_accuracy_and_rates() {
+        let mut acc = RepAccumulator::new(2);
+        acc.push(0.8, &[1.0, 2.0]);
+        acc.push(0.6, &[3.0, 4.0]);
+        let s = acc.accuracy();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.7).abs() < 1e-12);
+        assert_eq!(acc.mean_rates(), vec![2.0, 3.0]);
+        assert_eq!(acc.reps(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rate_length_mismatch_panics() {
+        let mut acc = RepAccumulator::new(2);
+        acc.push(0.8, &[1.0]);
+    }
+}

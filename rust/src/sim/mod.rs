@@ -1,0 +1,15 @@
+//! Poisson event substrate and the discrete-tick crawl simulator.
+//!
+//! [`events`] generates per-page change / request / CIS event traces
+//! (with optional CIS delivery delays, Appendix C); [`engine`] replays
+//! them against a [`engine::Scheduler`] at tick times `t_j = j/R`
+//! (supporting the Appendix-D bandwidth schedule changes) and accounts
+//! freshness per request; [`metrics`] aggregates accuracy and empirical
+//! crawl rates across repetitions.
+
+pub mod engine;
+pub mod events;
+pub mod metrics;
+
+pub use engine::{PageState, Scheduler, SimConfig, SimResult, simulate};
+pub use events::{CisDelay, EventTraces, generate_traces};

@@ -1,0 +1,322 @@
+//! Optimal continuous policies via Lagrange-multiplier line search.
+//!
+//! Two solvers:
+//!
+//! - [`solve_no_cis`] — the classical problem (5): maximize
+//!   `Σ G(ξ_i; μ̃_i, Δ_i)` s.t. `Σ ξ_i ≤ R` with
+//!   `G(ξ; μ̃, Δ) = (μ̃/Δ) ξ (1 − e^{−Δ/ξ})`. KKT: `∂G/∂ξ = (μ̃/Δ)R¹(Δ/ξ) = Λ`,
+//!   solved per page by inverting `R¹`, with an outer bisection on `Λ`.
+//!   This is the paper's BASELINE (optimal continuous policy, no CIS).
+//!
+//! - [`solve_with_cis`] — the general problem (4) of Theorem 1:
+//!   per page find `ι_i` with `V(ι_i; E_i) = Λ` (line search on the
+//!   monotone `V`), outer bisection on `Λ` until `Σ f(ι_i; E_i) = R`.
+//!
+//! Both return enough structure to (a) compute the analytical optimal
+//! accuracy and (b) feed the LDS discretizer with per-page rates.
+
+use crate::error::{Error, Result};
+use crate::params::{DerivedParams, Instance};
+use crate::policy::value;
+#[cfg(test)]
+use crate::policy::value::MAX_TERMS;
+use crate::special::{exp_residual, inv_exp_residual1};
+
+/// Solution of a continuous crawl-rate optimization.
+#[derive(Debug, Clone)]
+pub struct ContinuousSolution {
+    /// Optimal crawl rate ξ_i* per page (0 = never crawl).
+    pub rates: Vec<f64>,
+    /// Optimal threshold ι_i* per page (∞ = never crawl).
+    pub thresholds: Vec<f64>,
+    /// The Lagrange multiplier Λ at the optimum.
+    pub lambda: f64,
+    /// Analytical objective value (expected fraction of fresh-served
+    /// requests, assuming normalized importance).
+    pub objective: f64,
+}
+
+/// `G(ξ; μ̃, Δ)`: long-run freshness of a page crawled at fixed rate ξ.
+pub fn g_freshness(xi: f64, mu: f64, delta: f64) -> f64 {
+    if xi <= 0.0 {
+        return 0.0;
+    }
+    mu / delta * xi * (1.0 - (-delta / xi).exp())
+}
+
+/// `∂G/∂ξ = (μ̃/Δ) R¹(Δ/ξ)` — the no-CIS crawl value at rate ξ.
+pub fn g_freshness_deriv(xi: f64, mu: f64, delta: f64) -> f64 {
+    if xi <= 0.0 {
+        return mu / delta; // sup as ξ → 0⁺
+    }
+    mu / delta * exp_residual(1, delta / xi)
+}
+
+fn rate_for_lambda(lambda: f64, mu: f64, delta: f64) -> f64 {
+    // Solve (μ̃/Δ) R¹(Δ/ξ) = Λ  =>  R¹(Δ/ξ) = ΛΔ/μ̃.
+    if mu <= 0.0 {
+        return 0.0;
+    }
+    let y = lambda * delta / mu;
+    if y >= 1.0 {
+        return 0.0; // V < Λ everywhere: abandon the page
+    }
+    let x = inv_exp_residual1(y);
+    if x <= 0.0 {
+        f64::INFINITY
+    } else {
+        delta / x
+    }
+}
+
+/// Solve the classical no-CIS problem (5) for a *normalized* instance.
+pub fn solve_no_cis(inst: &Instance) -> Result<ContinuousSolution> {
+    let pages = &inst.pages;
+    let r = inst.bandwidth;
+    if pages.is_empty() || r <= 0.0 {
+        return Err(Error::Solver("empty instance or non-positive bandwidth".into()));
+    }
+    // Λ ∈ (0, max μ̃/Δ); Σξ(Λ) is decreasing in Λ.
+    let lam_hi0 = pages
+        .iter()
+        .filter(|p| p.mu > 0.0)
+        .map(|p| p.mu / p.delta)
+        .fold(0.0f64, f64::max);
+    if lam_hi0 <= 0.0 {
+        return Err(Error::Solver("all pages have zero importance".into()));
+    }
+    let total = |lam: f64| -> f64 {
+        pages.iter().map(|p| rate_for_lambda(lam, p.mu, p.delta)).sum()
+    };
+    let mut hi = lam_hi0 * (1.0 - 1e-12);
+    let mut lo = lam_hi0 * 1e-18;
+    if total(lo) < r {
+        // even a tiny multiplier doesn't spend the budget: bandwidth is
+        // effectively unconstrained; use the smallest Λ we can.
+        hi = lo;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if total(mid) > r {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi - lo) <= 1e-14 * hi.max(1e-300) {
+            break;
+        }
+    }
+    let lambda = 0.5 * (lo + hi);
+    let rates: Vec<f64> = pages.iter().map(|p| rate_for_lambda(lambda, p.mu, p.delta)).collect();
+    let objective = pages
+        .iter()
+        .zip(&rates)
+        .map(|(p, &xi)| g_freshness(xi, p.mu, p.delta))
+        .sum();
+    let thresholds = rates.iter().map(|&xi| if xi > 0.0 { 1.0 / xi } else { f64::INFINITY }).collect();
+    Ok(ContinuousSolution { rates, thresholds, lambda, objective })
+}
+
+/// Solve the general noisy-CIS problem (4)/Theorem 1 for a normalized
+/// instance with derived parameters `envs` (one per page).
+///
+/// `terms` selects the value-function approximation level
+/// (`MAX_TERMS` = exact GREEDY-NCIS).
+pub fn solve_with_cis(
+    inst: &Instance,
+    envs: &[DerivedParams],
+    terms: u32,
+) -> Result<ContinuousSolution> {
+    let r = inst.bandwidth;
+    if envs.is_empty() || r <= 0.0 {
+        return Err(Error::Solver("empty instance or non-positive bandwidth".into()));
+    }
+    // sup_ι V(ι; E) = μ̃/Δ, so Λ ∈ (0, max μ̃/Δ).
+    let lam_hi0 = envs
+        .iter()
+        .filter(|d| d.mu > 0.0)
+        .map(|d| d.mu / d.delta)
+        .fold(0.0f64, f64::max);
+    if lam_hi0 <= 0.0 {
+        return Err(Error::Solver("all pages have zero importance".into()));
+    }
+    let freq_for_lambda = |lam: f64, d: &DerivedParams| -> f64 {
+        match value::inverse_value(lam, d, terms) {
+            None => 0.0, // V < Λ everywhere: never crawl
+            Some(iota) => value::frequency(iota, d, terms),
+        }
+    };
+    let total = |lam: f64| -> f64 { envs.iter().map(|d| freq_for_lambda(lam, d)).sum() };
+    let mut hi = lam_hi0 * (1.0 - 1e-12);
+    let mut lo = lam_hi0 * 1e-15;
+    if total(lo) < r {
+        hi = lo;
+    }
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if total(mid) > r {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi - lo) <= 1e-12 * hi.max(1e-300) {
+            break;
+        }
+    }
+    let lambda = 0.5 * (lo + hi);
+    let thresholds: Vec<f64> = envs
+        .iter()
+        .map(|d| value::inverse_value(lambda, d, terms).unwrap_or(f64::INFINITY))
+        .collect();
+    let rates: Vec<f64> = envs
+        .iter()
+        .zip(&thresholds)
+        .map(|(d, &iota)| value::frequency(iota, d, terms))
+        .collect();
+    let objective = envs
+        .iter()
+        .zip(&thresholds)
+        .map(|(d, &iota)| value::objective(iota, d, terms))
+        .sum();
+    Ok(ContinuousSolution { rates, thresholds, lambda, objective })
+}
+
+/// Convenience: BASELINE accuracy of the paper's experiment sections —
+/// the optimal continuous no-CIS policy on a normalized instance.
+pub fn baseline_accuracy(inst: &Instance) -> Result<f64> {
+    Ok(solve_no_cis(&inst.normalized())?.objective)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::PageParams;
+    use crate::rngkit::Rng;
+
+    fn uniform_instance(m: usize, r: f64, seed: u64) -> Instance {
+        let mut rng = Rng::new(seed);
+        let pages = (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(1e-3, 1.0),
+                mu: rng.range(1e-3, 1.0),
+                lam: 0.0,
+                nu: 0.0,
+            })
+            .collect();
+        Instance { pages, bandwidth: r }
+    }
+
+    #[test]
+    fn no_cis_budget_is_spent() {
+        let inst = uniform_instance(200, 100.0, 1).normalized();
+        let sol = solve_no_cis(&inst).unwrap();
+        let total: f64 = sol.rates.iter().sum();
+        assert!((total - 100.0).abs() < 0.1, "total={total}");
+    }
+
+    #[test]
+    fn no_cis_kkt_conditions() {
+        let inst = uniform_instance(50, 25.0, 2).normalized();
+        let sol = solve_no_cis(&inst).unwrap();
+        for (p, &xi) in inst.pages.iter().zip(&sol.rates) {
+            if xi > 0.0 {
+                let v = g_freshness_deriv(xi, p.mu, p.delta);
+                assert!(
+                    (v - sol.lambda).abs() < 1e-6 * sol.lambda,
+                    "dG/dxi={v} lambda={}",
+                    sol.lambda
+                );
+            } else {
+                // abandoned page: sup dG/dξ = μ̃/Δ < Λ
+                assert!(p.mu / p.delta <= sol.lambda + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn no_cis_objective_in_unit_interval() {
+        let inst = uniform_instance(300, 100.0, 3).normalized();
+        let sol = solve_no_cis(&inst).unwrap();
+        assert!(sol.objective > 0.0 && sol.objective <= 1.0, "{}", sol.objective);
+    }
+
+    #[test]
+    fn more_bandwidth_cannot_hurt() {
+        let base = uniform_instance(100, 0.0, 4);
+        let mut prev = 0.0;
+        for &r in &[10.0, 30.0, 100.0, 300.0] {
+            let inst = Instance { pages: base.pages.clone(), bandwidth: r }.normalized();
+            let sol = solve_no_cis(&inst).unwrap();
+            assert!(sol.objective >= prev - 1e-9, "r={r}");
+            prev = sol.objective;
+        }
+    }
+
+    fn cis_instance(m: usize, r: f64, seed: u64) -> Instance {
+        let mut rng = Rng::new(seed);
+        let pages = (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(1e-2, 1.0),
+                mu: rng.range(1e-2, 1.0),
+                lam: crate::rngkit::beta(&mut rng, 0.25, 0.25),
+                nu: rng.range(0.1, 0.6),
+            })
+            .collect();
+        Instance { pages, bandwidth: r }
+    }
+
+    #[test]
+    fn with_cis_budget_is_spent() {
+        let inst = cis_instance(100, 40.0, 5).normalized();
+        let envs = inst.derived().unwrap();
+        let sol = solve_with_cis(&inst, &envs, MAX_TERMS).unwrap();
+        let total: f64 = sol.rates.iter().sum();
+        assert!((total - 40.0).abs() < 0.2, "total={total}");
+    }
+
+    #[test]
+    fn with_cis_kkt_value_equals_lambda() {
+        let inst = cis_instance(60, 20.0, 6).normalized();
+        let envs = inst.derived().unwrap();
+        let sol = solve_with_cis(&inst, &envs, MAX_TERMS).unwrap();
+        for (d, &iota) in envs.iter().zip(&sol.thresholds) {
+            if iota.is_finite() {
+                let v = value::value_ncis(iota, d, MAX_TERMS);
+                assert!(
+                    (v - sol.lambda).abs() < 1e-5 * sol.lambda.max(1e-12),
+                    "V={v} lambda={}",
+                    sol.lambda
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cis_solution_beats_or_matches_no_cis_objective() {
+        // With CIS information the achievable continuous objective can
+        // only improve (the no-CIS policy is in the feasible set).
+        let inst = cis_instance(80, 25.0, 7).normalized();
+        let envs = inst.derived().unwrap();
+        let with = solve_with_cis(&inst, &envs, MAX_TERMS).unwrap();
+        // evaluate the same thresholds ignoring CIS: compare to no-CIS optimum
+        let no_cis_inst = Instance {
+            pages: inst.pages.iter().map(|p| PageParams { lam: 0.0, nu: 0.0, ..*p }).collect(),
+            bandwidth: inst.bandwidth,
+        };
+        let without = solve_no_cis(&no_cis_inst).unwrap();
+        assert!(
+            with.objective >= without.objective - 5e-3,
+            "with={} without={}",
+            with.objective,
+            without.objective
+        );
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        let inst = Instance { pages: vec![], bandwidth: 10.0 };
+        assert!(solve_no_cis(&inst).is_err());
+        let inst = uniform_instance(10, 0.0, 8);
+        assert!(solve_no_cis(&inst).is_err());
+    }
+}

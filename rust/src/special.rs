@@ -1,0 +1,351 @@
+//! Special functions underlying the crawl-value formulas.
+//!
+//! Everything in Theorem 1 is built from the *normalized residual of the
+//! i-th Taylor approximation of exp*:
+//!
+//! ```text
+//! R^i(x) = (exp(x) - Σ_{j≤i} x^j/j!) / exp(x)
+//!        = 1 - exp(-x) Σ_{j≤i} x^j/j!
+//!        = P(i+1, x)                 (regularized lower incomplete gamma)
+//! ```
+//!
+//! [`exp_residual`] mirrors the Python oracle (`python/compile/kernels/
+//! ref.py::exp_residual`) branch-for-branch so rust-vs-python golden
+//! tests agree to f64 accuracy; [`gamma_p`] is an independent general
+//! implementation (series + continued fraction, Numerical-Recipes style)
+//! used to cross-check it.
+
+/// Natural log of the gamma function (Lanczos approximation, |err| < 2e-10).
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos g=7, n=9 coefficients.
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma `P(a, x)`.
+///
+/// Series expansion for `x < a + 1`, Lentz continued fraction otherwise.
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0, "gamma_p requires a > 0, got {a}");
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series: P(a,x) = x^a e^-x / Γ(a) Σ_{n>=0} x^n / (a (a+1) ... (a+n))
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-16 {
+                break;
+            }
+        }
+        (sum * (-x + a * x.ln() - ln_gamma(a)).exp()).clamp(0.0, 1.0)
+    } else {
+        // continued fraction for Q(a,x), then P = 1 - Q (modified Lentz)
+        let fpmin = 1e-300;
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / fpmin;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < fpmin {
+                d = fpmin;
+            }
+            c = b + an / c;
+            if c.abs() < fpmin {
+                c = fpmin;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-16 {
+                break;
+            }
+        }
+        let q = (-x + a * x.ln() - ln_gamma(a)).exp() * h;
+        (1.0 - q).clamp(0.0, 1.0)
+    }
+}
+
+/// Reciprocals 1/j for the residual inner loops (a divide per term would
+/// dominate the scheduler hot path; see EXPERIMENTS.md §Perf).
+const INV: [f64; 96] = {
+    let mut t = [0.0f64; 96];
+    let mut j = 1usize;
+    while j < 96 {
+        t[j] = 1.0 / j as f64;
+        j += 1;
+    }
+    t
+};
+
+/// `R^i(x)`: normalized residual of the i-th Taylor approximation of exp.
+///
+/// Two-branch scheme identical to the Python oracle: direct
+/// `1 - e^{-x} Σ_{j≤i} x^j/j!` for `x ≥ 0.5`, 12-term tail series below
+/// (avoids catastrophic cancellation for small `x`). Negative `x` (which
+/// arises only from masked-out terms upstream) returns 0.
+pub fn exp_residual(i: u32, x: f64) -> f64 {
+    if x < 0.0 {
+        return 0.0;
+    }
+    if x >= 0.5 {
+        // large-x early out: for x ≥ 2i + 60 the Poisson left tail
+        // Q(i+1, x) = P[Pois(x) ≤ i] ≤ e^{-x}(ex/i)^i < 1e-20, i.e.
+        // R^i(x) = 1 to f64 accuracy — and, crucially, the direct sum
+        // below would overflow (x^i/i! → ∞, times e^{-x} → 0·∞ = NaN)
+        // for the huge effective times produced by λ → 1 pages.
+        if x > 2.0 * i as f64 + 60.0 {
+            return 1.0;
+        }
+        let mut term = 1.0;
+        let mut s = 1.0;
+        for j in 1..=i as usize {
+            term *= x * INV[j];
+            s += term;
+        }
+        (1.0 - (-x).exp() * s).clamp(0.0, 1.0)
+    } else {
+        // R^i(x) = e^{-x} x^{i+1}/(i+1)! (1 + x/(i+2) + x^2/((i+2)(i+3)) + ...)
+        let mut fact = 1.0;
+        for j in 1..=(i + 1) {
+            fact *= j as f64;
+        }
+        let lead = x.powi(i as i32 + 1) / fact;
+        let mut ser = 0.0;
+        let mut t = 1.0;
+        for k in 0..12usize {
+            if k > 0 {
+                t *= x * INV[i as usize + 1 + k];
+            }
+            ser += t;
+        }
+        ((-x).exp() * lead * ser).clamp(0.0, 1.0)
+    }
+}
+
+/// Fused pair `(R^i(x), R^i(y))` — one inner loop with two accumulators
+/// for the crawl-value hot path, where every term needs the residual at
+/// both `γ·off` and `(α+γ)·off`. Semantics identical to two
+/// [`exp_residual`] calls.
+#[inline]
+pub fn exp_residual_pair(i: u32, x: f64, y: f64) -> (f64, f64) {
+    // fall back to the scalar path when either argument is outside the
+    // shared direct-branch regime
+    let bound = 2.0 * i as f64 + 60.0;
+    if x < 0.5 || y < 0.5 || x > bound || y > bound {
+        return (exp_residual(i, x), exp_residual(i, y));
+    }
+    let mut tx = 1.0;
+    let mut ty = 1.0;
+    let mut sx = 1.0;
+    let mut sy = 1.0;
+    for j in 1..=i as usize {
+        tx *= x * INV[j];
+        ty *= y * INV[j];
+        sx += tx;
+        sy += ty;
+    }
+    (
+        (1.0 - (-x).exp() * sx).clamp(0.0, 1.0),
+        (1.0 - (-y).exp() * sy).clamp(0.0, 1.0),
+    )
+}
+
+/// Sum of residuals with a SHARED argument:
+/// `Σ_{i=0}^{n-1} c_i R^i(x)` for geometric coefficients `c_i = c₀ rᶦ`,
+/// using one `exp` and one running partial sum (the β = 0 fast path of
+/// the crawl value — pages whose signals carry no information, λ = 0,
+/// hit every term with the same argument).
+///
+/// Returns `(Σ c_i R^i(x), Σ R^i(x))` — the w-style and ψ-style sums.
+pub fn exp_residual_geom_sum(n: u32, x: f64, c0: f64, r: f64, y: f64) -> (f64, f64) {
+    // w-sum uses argument y, psi-sum uses argument x (they differ:
+    // ψ terms take γι, w terms take (α+γ)ι).
+    debug_assert!(x >= 0.0 && y >= 0.0);
+    let n = n as usize;
+    let ex = (-x).exp();
+    let ey = (-y).exp();
+    let mut sx = 0.0; // partial sum Σ_{j≤i} x^j/j!
+    let mut sy = 0.0;
+    let mut tx = 1.0;
+    let mut ty = 1.0;
+    let mut psi = 0.0;
+    let mut w = 0.0;
+    let mut coef = c0;
+    for i in 0..n {
+        if i > 0 {
+            tx *= x * INV[i];
+            ty *= y * INV[i];
+        }
+        sx += tx;
+        sy += ty;
+        // R^i = 1 - e^{-x} S_i, computed stably via the clamp (the
+        // small-x cancellation regime matters little here because the
+        // terms are *summed* against O(1) siblings)
+        let rx = (1.0 - ex * sx).clamp(0.0, 1.0);
+        let ry = (1.0 - ey * sy).clamp(0.0, 1.0);
+        psi += rx;
+        w += coef * ry;
+        coef *= r;
+    }
+    (w, psi)
+}
+
+/// Derivative of `R^i` from identity (3): `d/dx R^i(x) = x^i e^{-x} / i!`.
+pub fn exp_residual_deriv(i: u32, x: f64) -> f64 {
+    if x < 0.0 {
+        return 0.0;
+    }
+    let mut fact = 1.0;
+    for j in 1..=i {
+        fact *= j as f64;
+    }
+    x.powi(i as i32) * (-x).exp() / fact
+}
+
+/// Inverse of `R^1` (strictly increasing on `[0, ∞)` onto `[0, 1)`),
+/// solved by bisection. Used by the no-CIS continuous solver where the
+/// KKT condition reads `R^1(Δ/ξ) = ΛΔ/μ`.
+pub fn inv_exp_residual1(y: f64) -> f64 {
+    assert!((0.0..1.0).contains(&y), "inv_exp_residual1 domain: {y}");
+    if y == 0.0 {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    while exp_residual(1, hi) < y {
+        hi *= 2.0;
+        if hi > 1e12 {
+            return hi;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if exp_residual(1, mid) < y {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-14 * hi.max(1.0) {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn residual_matches_gamma_p() {
+        for i in 0..8u32 {
+            for &x in &[1e-6, 1e-3, 0.1, 0.4999, 0.5, 0.5001, 1.0, 5.0, 30.0] {
+                let r = exp_residual(i, x);
+                let p = gamma_p(i as f64 + 1.0, x);
+                assert!(
+                    (r - p).abs() < 1e-10,
+                    "R^{i}({x}) = {r} vs P = {p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residual_bounds_and_monotonicity() {
+        for i in 0..6u32 {
+            let mut prev = 0.0;
+            for k in 0..200 {
+                let x = k as f64 * 0.25;
+                let r = exp_residual(i, x);
+                assert!((0.0..=1.0).contains(&r));
+                assert!(r + 1e-12 >= prev, "R^{i} must be nondecreasing");
+                prev = r;
+                // decreasing in order
+                assert!(exp_residual(i + 1, x) <= r + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_derivative_identity() {
+        for i in 0..5u32 {
+            for &x in &[0.05f64, 0.3, 0.7, 2.0, 10.0] {
+                let h = 1e-6 * x.max(1.0);
+                let num = (exp_residual(i, x + h) - exp_residual(i, x - h)) / (2.0 * h);
+                let exact = exp_residual_deriv(i, x);
+                assert!(
+                    (num - exact).abs() < 1e-5 * exact.max(1e-8),
+                    "i={i} x={x}: {num} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residual_closed_forms() {
+        // R^0(x) = 1 - e^-x
+        for &x in &[0.1, 1.0, 4.0] {
+            assert!((exp_residual(0, x) - (1.0 - (-x).exp())).abs() < 1e-12);
+        }
+        // R^1(x) = 1 - e^-x (1 + x)
+        for &x in &[0.6f64, 2.0] {
+            let want = 1.0 - (-x).exp() * (1.0 + x);
+            assert!((exp_residual(1, x) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn small_x_no_cancellation() {
+        // direct f64 evaluation of R^1(1e-8) would lose ~8 digits
+        let r = exp_residual(1, 1e-8);
+        let exact = 0.5e-16; // x^2/2 to leading order
+        assert!((r - exact).abs() < 1e-19, "{r}");
+    }
+
+    #[test]
+    fn inverse_residual_roundtrip() {
+        for &y in &[1e-6, 1e-3, 0.1, 0.5, 0.9, 0.999] {
+            let x = inv_exp_residual1(y);
+            assert!((exp_residual(1, x) - y).abs() < 1e-9, "y={y} x={x}");
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Small statistics toolkit: running moments, standard errors over
+//! experiment repetitions, and (weighted) histograms for the Figure-1
+//! style CIS-quality plots.
+
+/// Mean / stderr summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    /// Sample size.
+    pub n: usize,
+    /// Sample mean.
+    pub mean: f64,
+    /// Standard error of the mean (0 for n < 2).
+    pub stderr: f64,
+}
+
+/// Summarize a slice of repetition results.
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary { n: 0, mean: f64::NAN, stderr: f64::NAN };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if n < 2 {
+        return Summary { n, mean, stderr: 0.0 };
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0);
+    Summary { n, mean, stderr: (var / n as f64).sqrt() }
+}
+
+/// Weighted histogram over `[lo, hi]` with `bins` equal-width buckets,
+/// normalized to total weight 1 (the paper's importance-weighted
+/// precision/recall histograms of Figure 1).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Inclusive lower bound of the support.
+    pub lo: f64,
+    /// Inclusive upper bound of the support.
+    pub hi: f64,
+    /// Normalized bucket masses.
+    pub mass: Vec<f64>,
+}
+
+impl Histogram {
+    /// Build from (value, weight) pairs; out-of-range values clamp to the
+    /// boundary buckets.
+    pub fn weighted(values: &[f64], weights: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        assert_eq!(values.len(), weights.len());
+        assert!(bins > 0 && hi > lo);
+        let mut mass = vec![0.0; bins];
+        let mut total = 0.0;
+        for (&v, &w) in values.iter().zip(weights) {
+            let frac = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+            let b = ((frac * bins as f64) as usize).min(bins - 1);
+            mass[b] += w;
+            total += w;
+        }
+        if total > 0.0 {
+            for m in &mut mass {
+                *m /= total;
+            }
+        }
+        Self { lo, hi, mass }
+    }
+
+    /// Bucket midpoints.
+    pub fn midpoints(&self) -> Vec<f64> {
+        let bins = self.mass.len();
+        let width = (self.hi - self.lo) / bins as f64;
+        (0..bins).map(|b| self.lo + (b as f64 + 0.5) * width).collect()
+    }
+
+    /// Weighted quantile (inverse CDF over bucket masses).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let mut acc = 0.0;
+        let bins = self.mass.len();
+        let width = (self.hi - self.lo) / bins as f64;
+        for (b, &m) in self.mass.iter().enumerate() {
+            if acc + m >= q {
+                let frac = if m > 0.0 { (q - acc) / m } else { 0.5 };
+                return self.lo + (b as f64 + frac) * width;
+            }
+            acc += m;
+        }
+        self.hi
+    }
+}
+
+/// Pearson correlation (used to compare empirical vs optimal rates in the
+/// Figure 7/12/13/14 scatter summaries).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return f64::NAN;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        // sample var = 5/3, stderr = sqrt(5/12)
+        assert!((s.stderr - (5.0f64 / 12.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_degenerate() {
+        assert!(summarize(&[]).mean.is_nan());
+        let s = summarize(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.stderr, 0.0);
+    }
+
+    #[test]
+    fn histogram_masses_sum_to_one() {
+        let v = [0.1, 0.5, 0.9, 0.9];
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let h = Histogram::weighted(&v, &w, 0.0, 1.0, 10);
+        assert!((h.mass.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((h.mass[9] - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_monotone() {
+        let v: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let w = vec![1.0; 100];
+        let h = Histogram::weighted(&v, &w, 0.0, 1.0, 20);
+        let q25 = h.quantile(0.25);
+        let q75 = h.quantile(0.75);
+        assert!(q25 < q75);
+        assert!((q25 - 0.25).abs() < 0.06);
+        assert!((q75 - 0.75).abs() < 0.06);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 4.0, 6.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [-2.0, -4.0, -6.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,89 @@
+//! Mini property-testing kit + shared fixtures (the image has no
+//! `proptest`; this provides the same invariant-checking workflow:
+//! seeded random case generation, failure reporting with the offending
+//! case, and a fixed regression corpus).
+
+use crate::params::{Instance, PageParams};
+use crate::rngkit::{self, Rng};
+
+/// Run `prop` on `cases` random inputs from `gen`. Panics with the seed
+/// and debug dump of the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> std::result::Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut crng = rng.split(case as u64);
+        let input = gen(&mut crng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Random page parameters covering the degenerate corners.
+pub fn arb_page(rng: &mut Rng) -> PageParams {
+    let corner = rng.below(8);
+    PageParams {
+        delta: rng.range(1e-2, 2.0),
+        mu: rng.range(0.0, 1.0),
+        lam: match corner {
+            0 => 0.0,
+            1 => 1.0,
+            _ => rng.f64(),
+        },
+        nu: match corner {
+            0 | 2 => 0.0,
+            _ => rng.range(0.0, 1.0),
+        },
+    }
+}
+
+/// Random instance in the paper's §6.1 style.
+pub fn arb_instance(rng: &mut Rng, m: usize, bandwidth: f64, with_cis: bool) -> Instance {
+    let pages = (0..m)
+        .map(|_| PageParams {
+            delta: rng.range(1e-3, 1.0),
+            mu: rng.range(1e-3, 1.0),
+            lam: if with_cis { rngkit::beta(rng, 0.25, 0.25) } else { 0.0 },
+            nu: if with_cis { rng.range(0.1, 0.6) } else { 0.0 },
+        })
+        .collect();
+    Instance { pages, bandwidth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall(
+            "pages validate",
+            1,
+            200,
+            arb_page,
+            |p| p.validate().map_err(|e| e.to_string()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn forall_reports_failures() {
+        forall("always fails", 2, 10, |r| r.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn arb_instance_shape() {
+        let mut rng = Rng::new(3);
+        let inst = arb_instance(&mut rng, 50, 10.0, true);
+        assert_eq!(inst.pages.len(), 50);
+        assert!(inst.pages.iter().all(|p| p.validate().is_ok()));
+    }
+}

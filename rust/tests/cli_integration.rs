@@ -1,0 +1,95 @@
+//! In-process integration tests of the CLI surface.
+
+use ncis_crawl::cli::Args;
+use ncis_crawl::run_cli;
+
+fn run(line: &str) -> ncis_crawl::Result<()> {
+    let args = Args::parse(line.split_whitespace().map(String::from))?;
+    run_cli(&args)
+}
+
+#[test]
+fn simulate_small() {
+    run("simulate --m 20 --r 5 --horizon 40 --reps 2 --policy GREEDY-NCIS --cis --fp").unwrap();
+}
+
+#[test]
+fn simulate_all_policies() {
+    for p in ["GREEDY", "GREEDY-CIS", "G-NCIS-APPROX-2", "GREEDY-CIS+", "LDS"] {
+        run(&format!("simulate --m 15 --r 4 --horizon 30 --reps 1 --policy {p} --cis")).unwrap();
+    }
+}
+
+#[test]
+fn solve_reports() {
+    run("solve --m 50 --r 20 --cis --fp").unwrap();
+}
+
+#[test]
+fn dataset_describe() {
+    run("dataset --n 5000").unwrap();
+}
+
+#[test]
+fn estimate_runs() {
+    run("estimate --precision 0.5 --recall 0.6").unwrap();
+}
+
+#[test]
+fn serve_shards_small() {
+    run("serve-shards --m 200 --shards 2 --r 50 --horizon 5").unwrap();
+}
+
+#[test]
+fn experiment_from_config_file() {
+    let dir = std::env::temp_dir().join("ncis_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+title = "itest"
+reps = 1
+policies = ["GREEDY", "GREEDY-NCIS"]
+
+[instance]
+m = 20
+bandwidth = 5.0
+horizon = 30.0
+lambda_beta = [0.25, 0.25]
+nu_range = [0.1, 0.6]
+"#,
+    )
+    .unwrap();
+    run(&format!("experiment --config {}", path.display())).unwrap();
+}
+
+#[test]
+fn experiment_requires_config() {
+    assert!(run("experiment").is_err());
+}
+
+#[test]
+fn experiment_missing_file_fails() {
+    assert!(run("experiment --config /nonexistent/nope.toml").is_err());
+}
+
+#[test]
+fn figure_unknown_id_fails() {
+    assert!(run("figure 99").is_err());
+}
+
+#[test]
+fn figure_six_runs_fast() {
+    run("figure 6").unwrap();
+}
+
+#[test]
+fn unknown_command_fails() {
+    assert!(run("frobnicate").is_err());
+}
+
+#[test]
+fn unknown_policy_fails() {
+    assert!(run("simulate --policy NOPE").is_err());
+}

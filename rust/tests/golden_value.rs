@@ -1,0 +1,90 @@
+//! Cross-language golden test: the rust-native f64 value function must
+//! match the Python oracle (`ref.py`) on the vectors `aot.py` wrote to
+//! `artifacts/golden_value.csv`. Skips (with a notice) when artifacts
+//! have not been built — run `make artifacts` first.
+
+use ncis_crawl::params::PageParams;
+use ncis_crawl::policy::value;
+
+struct GoldenRow {
+    iota: f64,
+    delta: f64,
+    mu: f64,
+    lam: f64,
+    nu: f64,
+    terms: u32,
+    value: f64,
+    psi: f64,
+    w: f64,
+}
+
+fn load_golden() -> Option<Vec<GoldenRow>> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_value.csv");
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut rows = Vec::new();
+    for line in text.lines().skip(1) {
+        let c: Vec<&str> = line.split(',').collect();
+        if c.len() != 9 {
+            continue;
+        }
+        rows.push(GoldenRow {
+            iota: c[0].parse().ok()?,
+            delta: c[1].parse().ok()?,
+            mu: c[2].parse().ok()?,
+            lam: c[3].parse().ok()?,
+            nu: c[4].parse().ok()?,
+            terms: c[5].parse().ok()?,
+            value: c[6].parse().ok()?,
+            psi: c[7].parse().ok()?,
+            w: c[8].parse().ok()?,
+        });
+    }
+    Some(rows)
+}
+
+#[test]
+fn native_value_matches_python_oracle() {
+    let Some(rows) = load_golden() else {
+        eprintln!("SKIP: artifacts/golden_value.csv missing (run `make artifacts`)");
+        return;
+    };
+    assert!(rows.len() >= 3 * 256, "unexpectedly few golden rows: {}", rows.len());
+    let mut worst: f64 = 0.0;
+    for (i, r) in rows.iter().enumerate() {
+        let p = PageParams { delta: r.delta, mu: r.mu, lam: r.lam, nu: r.nu };
+        let d = p.derive().unwrap();
+        let got = value::value_ncis(r.iota, &d, r.terms);
+        let scale = r.value.abs().max(1e-9);
+        let err = (got - r.value).abs() / scale;
+        worst = worst.max(err);
+        assert!(
+            err < 1e-8,
+            "row {i}: V({:.6}; Δ={:.4} μ={:.4} λ={:.4} ν={:.4}, J={}) = {got:.12e}, oracle {:.12e}",
+            r.iota, r.delta, r.mu, r.lam, r.nu, r.terms, r.value
+        );
+    }
+    eprintln!("golden value: worst relative error {worst:.3e} over {} rows", rows.len());
+}
+
+#[test]
+fn native_psi_w_match_python_oracle() {
+    let Some(rows) = load_golden() else {
+        eprintln!("SKIP: artifacts/golden_value.csv missing (run `make artifacts`)");
+        return;
+    };
+    for (i, r) in rows.iter().enumerate() {
+        let p = PageParams { delta: r.delta, mu: r.mu, lam: r.lam, nu: r.nu };
+        let d = p.derive().unwrap();
+        let (psi, w) = value::psi_w(r.iota, &d, r.terms);
+        assert!(
+            (psi - r.psi).abs() / r.psi.abs().max(1e-9) < 1e-8,
+            "row {i}: psi {psi} vs {}",
+            r.psi
+        );
+        assert!(
+            (w - r.w).abs() / r.w.abs().max(1e-9) < 1e-8,
+            "row {i}: w {w} vs {}",
+            r.w
+        );
+    }
+}

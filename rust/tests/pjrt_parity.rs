@@ -1,0 +1,201 @@
+//! PJRT engine vs rust-native parity — the request-path correctness
+//! gate: the AOT Pallas kernel running under the `xla` crate must agree
+//! with the native f64 implementation (within f32 tolerance) on random
+//! batches, including the degenerate corners and padded sentinels.
+//!
+//! Skips when `artifacts/` has not been built (`make artifacts`).
+
+use std::path::Path;
+
+use ncis_crawl::params::PageParams;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::runtime::{NativeEngine, PjrtEngine, ValueBatch};
+
+// The xla PJRT client is !Send, so each test loads its own engine
+// (compilation of the text HLO artifacts is fast).
+fn engine() -> Option<PjrtEngine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtEngine::load(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP: cannot load artifacts ({err}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn random_batch(rng: &mut Rng, n: usize) -> ValueBatch {
+    let mut b = ValueBatch::with_capacity(n);
+    for k in 0..n {
+        let corner = k % 8;
+        let p = PageParams {
+            delta: rng.range(0.01, 2.0),
+            mu: rng.range(0.01, 1.0),
+            lam: match corner {
+                0 => 0.0,
+                1 => 1.0,
+                _ => rng.f64(),
+            },
+            nu: if corner <= 1 { 0.0 } else { rng.range(0.0, 1.0) },
+        };
+        let d = p.derive().unwrap();
+        let iota = 10f64.powf(rng.range(-2.0, 1.5));
+        b.push(iota, &d);
+    }
+    b
+}
+
+#[test]
+fn crawl_values_match_native() {
+    let Some(eng) = engine() else { return };
+    let native = NativeEngine;
+    let mut rng = Rng::new(1);
+    for &(terms, n) in &[(2u32, 512usize), (8, 2048), (8, 3000), (2, 20000)] {
+        let batch = random_batch(&mut rng, n);
+        let got = eng.crawl_values(terms, &batch).unwrap();
+        let want = native.crawl_values(terms, &batch);
+        assert_eq!(got.len(), n);
+        for i in 0..n {
+            // absolute floor 1e-3: values below it are freshly-crawled
+            // pages whose f32 small-x rounding is irrelevant to argmax
+            let scale = want[i].abs().max(1e-3);
+            assert!(
+                (got[i] - want[i]).abs() / scale < 2e-3,
+                "terms={terms} n={n} i={i}: pjrt {} vs native {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn argmax_matches_native_top_value() {
+    let Some(eng) = engine() else { return };
+    let native = NativeEngine;
+    let mut rng = Rng::new(2);
+    for rep in 0..5 {
+        let batch = random_batch(&mut rng, 2048);
+        let (_, pj_idx, pj_best) = eng.crawl_values_argmax(8, &batch).unwrap();
+        let (nat_values, _, nat_best) = native.crawl_values_argmax(8, &batch);
+        // indices may differ on near-ties in f32; the selected *value*
+        // must be within f32 noise of the true max
+        assert!(
+            (pj_best - nat_best).abs() / nat_best.abs().max(1e-4) < 2e-3,
+            "rep {rep}: pjrt best {pj_best} vs native {nat_best}"
+        );
+        let at_pj = nat_values[pj_idx];
+        assert!(
+            (at_pj - nat_best).abs() / nat_best.abs().max(1e-4) < 5e-3,
+            "rep {rep}: pjrt argmax picks value {at_pj}, true max {nat_best}"
+        );
+    }
+}
+
+#[test]
+fn padded_batch_sentinels_never_win() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let mut batch = random_batch(&mut rng, 100); // will pad to 2048
+    batch.pad_to(100); // no-op, keep 100 real pages
+    let (values, idx, _) = eng.crawl_values_argmax(8, &batch).unwrap();
+    assert_eq!(values.len(), 100);
+    assert!(idx < 100);
+}
+
+#[test]
+fn freshness_matches_native() {
+    let Some(eng) = engine() else { return };
+    let native = NativeEngine;
+    let mut rng = Rng::new(4);
+    let n = 1000;
+    let tau: Vec<f32> = (0..n).map(|_| rng.range(0.0, 10.0) as f32).collect();
+    let ncis: Vec<f32> = (0..n).map(|_| rng.below(5) as f32).collect();
+    let alpha: Vec<f32> = (0..n).map(|_| rng.range(0.01, 1.0) as f32).collect();
+    let logr: Vec<f32> = (0..n).map(|_| -rng.range(0.0, 3.0) as f32).collect();
+    let got = eng.freshness(&tau, &ncis, &alpha, &logr).unwrap();
+    let want = native.freshness(&tau, &ncis, &alpha, &logr);
+    for i in 0..n {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-5,
+            "i={i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn mle_fit_recovers_parameters() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let (alpha, beta) = (0.4f64, 1.2f64);
+    let n = 4096;
+    let mut obs = Vec::with_capacity(n);
+    let mut z = Vec::with_capacity(n);
+    for _ in 0..n {
+        let tau = rng.range(0.5, 4.0);
+        let ncis = ncis_crawl::rngkit::poisson(&mut rng, 1.0) as f64;
+        let p_change = 1.0 - (-(alpha * tau + alpha * beta * ncis)).exp();
+        obs.push((tau, ncis));
+        z.push(if rng.bernoulli(p_change) { 1.0 } else { 0.0 });
+    }
+    let (a_hat, k_hat) = eng.mle_fit(&obs, &z, 50).unwrap();
+    assert!((a_hat - alpha).abs() < 0.1, "alpha {a_hat} vs {alpha}");
+    assert!((k_hat - alpha * beta).abs() < 0.15, "kappa {k_hat} vs {}", alpha * beta);
+}
+
+#[test]
+fn scheduler_with_pjrt_backend_matches_native_accuracy() {
+    use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
+    use ncis_crawl::policy::PolicyKind;
+    use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
+    use std::sync::Arc;
+    let Some(eng) = engine() else { return };
+    let eng = Arc::new(eng);
+    let mut rng = Rng::new(77);
+    let pages: Vec<PageParams> = (0..60)
+        .map(|_| PageParams {
+            delta: rng.range(0.05, 1.0),
+            mu: rng.range(0.05, 1.0),
+            lam: rng.f64(),
+            nu: rng.range(0.1, 0.6),
+        })
+        .collect();
+    let horizon = 80.0;
+    let cfg = SimConfig::new(5.0, horizon);
+    for kind in [PolicyKind::Greedy, PolicyKind::GreedyCis, PolicyKind::GreedyNcis] {
+        let mut acc_native = 0.0;
+        let mut acc_pjrt = 0.0;
+        for rep in 0..2u64 {
+            let mut trng = Rng::new(500 + rep);
+            let traces = generate_traces(&pages, horizon, CisDelay::None, &mut trng);
+            let mut nat = GreedyScheduler::new(kind, &pages, ValueBackend::Native);
+            let mut pj = GreedyScheduler::new(
+                kind,
+                &pages,
+                ValueBackend::Pjrt { engine: Arc::clone(&eng), terms: 8 },
+            );
+            acc_native += simulate(&traces, &cfg, &mut nat).accuracy;
+            acc_pjrt += simulate(&traces, &cfg, &mut pj).accuracy;
+        }
+        // identical traces; only the value backend differs (f32 vs f64,
+        // NCIS projection vs closed forms) — accuracies must be close
+        assert!(
+            (acc_native - acc_pjrt).abs() / 2.0 < 0.03,
+            "{}: native {} vs pjrt {}",
+            kind.name(),
+            acc_native / 2.0,
+            acc_pjrt / 2.0
+        );
+    }
+}
+
+#[test]
+fn manifest_exposes_expected_configs() {
+    let Some(eng) = engine() else { return };
+    let configs = eng.crawl_configs();
+    assert!(configs.contains(&(2, 2048)));
+    assert!(configs.contains(&(8, 2048)));
+    assert!(configs.contains(&(8, 16384)));
+}

@@ -1,0 +1,365 @@
+//! Cross-module property tests (testkit::forall — the proptest stand-in).
+
+use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
+use ncis_crawl::coordinator::shard::{rebalance, ShardPlan};
+use ncis_crawl::lds::LdsScheduler;
+use ncis_crawl::params::DerivedParams;
+use ncis_crawl::policy::{value, PolicyKind};
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
+use ncis_crawl::solver;
+use ncis_crawl::testkit::{arb_instance, arb_page, forall};
+
+#[test]
+fn prop_value_monotone_in_effective_time() {
+    forall(
+        "V monotone in iota",
+        11,
+        300,
+        |rng| (arb_page(rng), rng.range(0.01, 20.0), rng.range(0.01, 5.0)),
+        |(p, iota, step)| {
+            let d = p.derive().map_err(|e| e.to_string())?;
+            let v1 = value::value_ncis(*iota, &d, value::MAX_TERMS);
+            let v2 = value::value_ncis(iota + step, &d, value::MAX_TERMS);
+            if v2 + 1e-12 < v1 {
+                return Err(format!("V({}) = {v2} < V({iota}) = {v1}", iota + step));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_value_bounded_by_mu_over_delta() {
+    forall(
+        "V ≤ μ/Δ",
+        12,
+        300,
+        |rng| (arb_page(rng), rng.range(0.01, 50.0), rng.below(6) as u32),
+        |(p, tau, n_cis)| {
+            let d = p.derive().map_err(|e| e.to_string())?;
+            for kind in [
+                PolicyKind::Greedy,
+                PolicyKind::GreedyCis,
+                PolicyKind::GreedyNcis,
+                PolicyKind::NcisApprox(2),
+                PolicyKind::GreedyCisPlus,
+            ] {
+                let v = kind.crawl_value(p, &d, *tau, *n_cis);
+                let ub = p.mu / p.delta + 1e-9;
+                if v > ub {
+                    return Err(format!("{}: V = {v} > μ/Δ = {ub}", kind.name()));
+                }
+                if v < 0.0 {
+                    return Err(format!("{}: V = {v} < 0", kind.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_frequency_inverse_of_psi() {
+    forall(
+        "f = 1/ψ",
+        13,
+        200,
+        |rng| (arb_page(rng), rng.range(0.05, 20.0)),
+        |(p, iota)| {
+            let d = p.derive().map_err(|e| e.to_string())?;
+            let (psi, _) = value::psi_w(*iota, &d, value::MAX_TERMS);
+            let f = value::frequency(*iota, &d, value::MAX_TERMS);
+            if (f * psi - 1.0).abs() > 1e-9 {
+                return Err(format!("f·ψ = {}", f * psi));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_solver_spends_budget_and_satisfies_kkt() {
+    forall(
+        "solver KKT",
+        14,
+        12,
+        |rng| {
+            let m = 20 + rng.below(100) as usize;
+            let r = rng.range(5.0, 60.0);
+            arb_instance(rng, m, r, true).normalized()
+        },
+        |inst| {
+            let envs = inst.derived().map_err(|e| e.to_string())?;
+            let sol =
+                solver::solve_with_cis(inst, &envs, value::MAX_TERMS).map_err(|e| e.to_string())?;
+            let total: f64 = sol.rates.iter().sum();
+            if (total - inst.bandwidth).abs() > 0.02 * inst.bandwidth {
+                return Err(format!("budget {total} vs R {}", inst.bandwidth));
+            }
+            for (d, &iota) in envs.iter().zip(&sol.thresholds) {
+                if iota.is_finite() {
+                    let v = value::value_ncis(iota, d, value::MAX_TERMS);
+                    if (v - sol.lambda).abs() > 1e-4 * sol.lambda.max(1e-12) {
+                        return Err(format!("V(ι*) = {v} ≠ Λ = {}", sol.lambda));
+                    }
+                } else if d.mu / d.delta > sol.lambda + 1e-9 {
+                    return Err("abandoned page with sup V > Λ".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lds_discrepancy_bounded() {
+    forall(
+        "LDS discrepancy ≤ 2",
+        15,
+        25,
+        |rng| {
+            let k = 2 + rng.below(8) as usize;
+            let rates: Vec<f64> = (0..k).map(|_| rng.range(0.05, 1.0)).collect();
+            rates
+        },
+        |rates| {
+            let total: f64 = rates.iter().sum();
+            let mut lds = LdsScheduler::new(rates);
+            let n = 2000;
+            let mut counts = vec![0f64; rates.len()];
+            for j in 0..n {
+                let i = lds.next().ok_or("no page")?;
+                counts[i] += 1.0;
+                let _ = j;
+            }
+            for (i, &c) in counts.iter().enumerate() {
+                let want = rates[i] / total * n as f64;
+                if (c - want).abs() > 2.0 {
+                    return Err(format!("page {i}: count {c} vs ideal {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_budget_never_exceeded() {
+    // the discrete policy must schedule exactly one crawl per tick and
+    // ticks must respect the bandwidth over ANY prefix (the paper's
+    // "no spikes over any time interval" property)
+    forall(
+        "discrete budget per interval",
+        16,
+        6,
+        |rng| {
+            let m = 10 + rng.below(40) as usize;
+            let r = rng.range(2.0, 10.0);
+            let inst = arb_instance(rng, m, r, true).normalized();
+            let seed = rng.next_u64();
+            (inst, seed)
+        },
+        |(inst, seed)| {
+            let horizon = 40.0;
+            let mut rng = Rng::new(*seed);
+            let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut rng);
+            let cfg = SimConfig::new(inst.bandwidth, horizon);
+            let mut sched =
+                GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+            let res = simulate(&traces, &cfg, &mut sched);
+            let total: u64 = res.crawl_counts.iter().map(|&c| c as u64).sum();
+            if total != res.ticks {
+                return Err(format!("crawls {total} ≠ ticks {}", res.ticks));
+            }
+            let max_ticks = (inst.bandwidth * horizon).ceil() as u64;
+            if res.ticks > max_ticks {
+                return Err(format!("ticks {} exceed budget {max_ticks}", res.ticks));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_plans_conserve_pages() {
+    forall(
+        "shard conservation",
+        17,
+        50,
+        |rng| {
+            let m = 1 + rng.below(500) as usize;
+            let shards = 1 + rng.below(16) as usize;
+            let loads: Vec<f64> = (0..m).map(|_| rng.range(0.0, 1.0)).collect();
+            (loads, shards)
+        },
+        |(loads, shards)| {
+            for plan in [ShardPlan::round_robin(loads.len(), *shards), rebalance(loads, *shards)] {
+                let members = plan.shard_members();
+                let mut seen = vec![false; loads.len()];
+                for mem in &members {
+                    for &i in mem {
+                        if seen[i] {
+                            return Err(format!("page {i} assigned twice"));
+                        }
+                        seen[i] = true;
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("page lost in sharding".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_estimation_quality_roundtrip() {
+    // quality_from_theta must invert the (alpha, beta, gamma) derivation
+    // for any valid page with CIS
+    forall(
+        "estimation quality roundtrip",
+        19,
+        200,
+        |rng| {
+            let delta = rng.range(0.05, 2.0);
+            let precision = rng.range(0.05, 0.99);
+            let recall = rng.range(0.05, 0.99);
+            (delta, precision, recall)
+        },
+        |&(delta, precision, recall)| {
+            let p = ncis_crawl::params::PageParams::from_quality(delta, 0.1, precision, recall);
+            let d = p.derive().map_err(|e| e.to_string())?;
+            let kappa = d.alpha * d.beta;
+            let (pe, re) = ncis_crawl::estimation::quality_from_theta(d.alpha, kappa, d.gamma);
+            if (pe - precision).abs() > 1e-4 {
+                return Err(format!("precision {pe} vs {precision}"));
+            }
+            if (re - recall).abs() > 1e-3 {
+                return Err(format!("recall {re} vs {recall}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dataset_corruption_is_bounded_mixture() {
+    // corrupted quality stays in [min((1-p)q, ..), (1-p)q + p]
+    forall(
+        "corruption bounds",
+        20,
+        20,
+        |rng| (rng.range(0.0, 0.5), rng.next_u64()),
+        |&(p, seed)| {
+            let recs = ncis_crawl::dataset::generate(&ncis_crawl::dataset::DatasetConfig {
+                n_urls: 500,
+                seed,
+                ..Default::default()
+            });
+            let mut rng = Rng::new(seed ^ 1);
+            let c = ncis_crawl::dataset::corrupt(&recs, p, &mut rng);
+            for (a, b) in recs.iter().zip(&c) {
+                if !a.has_cis {
+                    if b.precision != a.precision {
+                        return Err("corruption touched a CIS-less page".into());
+                    }
+                    continue;
+                }
+                let lo = (1.0 - p) * a.precision;
+                let hi = (1.0 - p) * a.precision + p;
+                if b.precision < lo - 1e-12 || b.precision > hi + 1e-12 {
+                    return Err(format!("precision {} outside [{lo}, {hi}]", b.precision));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_deterministic_per_seed() {
+    forall(
+        "simulation determinism",
+        21,
+        5,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let inst = arb_instance(&mut r1, 30, 5.0, true).normalized();
+            let inst2 = arb_instance(&mut r2, 30, 5.0, true).normalized();
+            let mut t1 = Rng::new(seed ^ 2);
+            let mut t2 = Rng::new(seed ^ 2);
+            let tr1 = generate_traces(&inst.pages, 40.0, CisDelay::None, &mut t1);
+            let tr2 = generate_traces(&inst2.pages, 40.0, CisDelay::None, &mut t2);
+            let cfg = SimConfig::new(5.0, 40.0);
+            let mut s1 = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+            let mut s2 = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst2.pages, ValueBackend::Native);
+            let a = simulate(&tr1, &cfg, &mut s1);
+            let b = simulate(&tr2, &cfg, &mut s2);
+            if a.accuracy != b.accuracy || a.crawl_counts != b.crawl_counts {
+                return Err("same seed produced different runs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_solver_rates_monotone_in_importance() {
+    // at the optimum, raising only a page's importance cannot reduce
+    // its allocated rate (no-CIS problem)
+    forall(
+        "rate monotone in mu",
+        22,
+        10,
+        |rng| {
+            let inst = arb_instance(rng, 40, 10.0, false);
+            let page = rng.below(40) as usize;
+            (inst, page)
+        },
+        |(inst, page)| {
+            let base = inst.normalized();
+            let sol1 = solver::solve_no_cis(&base).map_err(|e| e.to_string())?;
+            let mut boosted = inst.clone();
+            boosted.pages[*page].mu *= 3.0;
+            let sol2 = solver::solve_no_cis(&boosted.normalized()).map_err(|e| e.to_string())?;
+            if sol2.rates[*page] + 1e-9 < sol1.rates[*page] {
+                return Err(format!(
+                    "rate fell from {} to {} after importance boost",
+                    sol1.rates[*page], sol2.rates[*page]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_effective_time_consistent_with_freshness() {
+    // exp(-alpha * tau_eff) must equal the closed-form freshness (eq. 1)
+    forall(
+        "τ_EFF ↔ freshness",
+        18,
+        300,
+        |rng| {
+            let p = arb_page(rng);
+            let tau = rng.range(0.0, 10.0);
+            // pages with no CIS process (γ = 0) can never receive a signal
+            let gamma = p.lam * p.delta + p.nu;
+            let n = if gamma > 0.0 { rng.below(4) as u32 } else { 0 };
+            (p, tau, n)
+        },
+        |(p, tau, n)| {
+            let d = DerivedParams::from_raw(p);
+            let via_eff = (-d.alpha * d.effective_time(*tau, *n)).exp();
+            let via_eq1 = d.freshness(*tau, *n);
+            if (via_eff - via_eq1).abs() > 1e-9 {
+                return Err(format!("{via_eff} vs {via_eq1}"));
+            }
+            Ok(())
+        },
+    );
+}
