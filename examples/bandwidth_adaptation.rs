@@ -13,7 +13,7 @@ use ncis_crawl::rngkit::Rng;
 use ncis_crawl::sim::engine::{BandwidthSchedule, SimConfig};
 use ncis_crawl::sim::{generate_traces, simulate, CisDelay};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ncis_crawl::Result<()> {
     let spec = ExperimentSpec::section6(1000, 1);
     let mut rng = Rng::new(spec.seed);
     let inst = spec.gen_instance(&mut rng).normalized();

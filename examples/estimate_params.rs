@@ -16,7 +16,7 @@ use ncis_crawl::params::PageParams;
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::runtime::PjrtEngine;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ncis_crawl::Result<()> {
     let mut rng = Rng::new(11);
     println!("{:>10} {:>10} | {:>10} {:>10} | {:>10} {:>10}",
              "true_prec", "true_rec", "naive_prec", "naive_rec", "mle_prec", "mle_rec");

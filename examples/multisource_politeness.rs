@@ -12,7 +12,7 @@ use ncis_crawl::policy::PolicyKind;
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ncis_crawl::Result<()> {
     // --- multi-source CIS: a sitemap (precise, low recall) + a CDN ping
     // (noisy, high recall) merge into one equivalent observation process
     let page = MultiSourcePage {

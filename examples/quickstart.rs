@@ -13,7 +13,7 @@ use ncis_crawl::rngkit::{self, Rng};
 use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
 use ncis_crawl::solver;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ncis_crawl::Result<()> {
     // 1. A problem instance: 200 pages, Δ, μ ~ U[0,1], noisy CIS with
     //    bimodal observability (the paper's §6.6 setting).
     let mut rng = Rng::new(42);

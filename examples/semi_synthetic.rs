@@ -16,7 +16,7 @@
 
 use ncis_crawl::figures::semisynth::{fig05, SemiSynthSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ncis_crawl::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     let spec = if full {
         SemiSynthSpec { n_urls: 100_000, budget: 5_000.0, steps: 200.0, reps: 10, ..Default::default() }

@@ -13,7 +13,7 @@ use ncis_crawl::policy::PolicyKind;
 use ncis_crawl::rngkit::{self, Rng};
 use ncis_crawl::runtime::{PjrtEngine, ValueBatch};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ncis_crawl::Result<()> {
     let m = 20_000;
     let horizon = 10.0;
     let bandwidth = 2_000.0;

@@ -20,7 +20,11 @@ fn main() {
         all.iter().copied().filter(|id| args.iter().any(|a| a == id)).collect()
     };
     let r = reps();
-    println!("figure bench: ids={ids:?} reps={r} (NCIS_REPS to override)");
+    println!(
+        "figure bench: ids={ids:?} reps={r} (NCIS_REPS to override; cells fan reps \
+         across {} threads, NCIS_THREADS to override)",
+        ncis_crawl::figures::common::default_rep_threads()
+    );
     for id in ids {
         let t0 = std::time::Instant::now();
         match ncis_crawl::figures::run_figure(id, r) {

@@ -4,19 +4,35 @@
 //! - batched crawl values: PJRT (AOT Pallas kernel) vs native, by batch
 //! - scheduler tick cost: exact argmax vs the §5.2 lazy scheduler
 //! - end-to-end simulation throughput
-//! - approximation-level ablation (J ∈ {1, 2, 4, 8})
+//! - experiment-cell wall clock: pre-change serial merged-sort engine vs
+//!   the streaming engine + parallel repetition driver (the acceptance
+//!   lane: m=1000, R=100, T=1000, 8 reps, GREEDY + LAZY)
+//!
+//! Every lane is also recorded into `BENCH_perf.json` (via
+//! `benchkit::BenchJson`) so future PRs have a machine-readable perf
+//! trajectory. Scale the acceptance cell down on small machines with
+//! `NCIS_PERF_M` / `NCIS_PERF_T` / `NCIS_PERF_REPS`.
 
-use ncis_crawl::benchkit::{measure, report};
+use std::time::Instant;
+
+use ncis_crawl::benchkit::{measure, report, BenchJson};
 use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
 use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
-use ncis_crawl::figures::common::ExperimentSpec;
+use ncis_crawl::figures::common::{
+    default_rep_threads, make_scheduler, run_cell_with_threads, ExperimentSpec, PolicyUnderTest,
+};
 use ncis_crawl::params::DerivedParams;
 use ncis_crawl::policy::{value, PolicyKind};
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::runtime::{NativeEngine, PjrtEngine, ValueBatch};
-use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
+use ncis_crawl::sim::metrics::RepAccumulator;
+use ncis_crawl::sim::{generate_traces, simulate, simulate_reference, CisDelay, SimConfig};
 
-fn bench_value_functions() {
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn bench_value_functions(json: &mut BenchJson) {
     println!("\n-- value-function evaluation (native f64) --");
     let mut rng = Rng::new(1);
     let envs: Vec<DerivedParams> = (0..1024)
@@ -44,10 +60,14 @@ fn bench_value_functions() {
             0.05,
         );
         report(&format!("value_ncis terms={terms}"), &m);
+        json.lane(
+            &format!("value_ncis_terms_{terms}"),
+            &[("ns_per_eval", m.mean_s * 1e9), ("evals_per_s", m.per_second(1.0))],
+        );
     }
 }
 
-fn bench_batched_values() {
+fn bench_batched_values(json: &mut BenchJson) {
     println!("\n-- batched crawl values: PJRT vs native --");
     let engine = PjrtEngine::load(std::path::Path::new("artifacts")).ok();
     if engine.is_none() {
@@ -78,6 +98,10 @@ fn bench_batched_values() {
             );
             report(&format!("native  batch={n} terms={terms}"), &m);
             println!("{:>46} {:.1}M pages/s", "", m.per_second(n as f64) / 1e6);
+            json.lane(
+                &format!("native_batch_{n}_terms_{terms}"),
+                &[("pages_per_s", m.per_second(n as f64))],
+            );
             if let Some(eng) = &engine {
                 let m = measure(
                     || {
@@ -88,12 +112,16 @@ fn bench_batched_values() {
                 );
                 report(&format!("pjrt    batch={n} terms={terms}"), &m);
                 println!("{:>46} {:.1}M pages/s", "", m.per_second(n as f64) / 1e6);
+                json.lane(
+                    &format!("pjrt_batch_{n}_terms_{terms}"),
+                    &[("pages_per_s", m.per_second(n as f64))],
+                );
             }
         }
     }
 }
 
-fn bench_schedulers() {
+fn bench_schedulers(json: &mut BenchJson) {
     println!("\n-- scheduler tick cost: exact vs lazy (m=5000) --");
     let spec = ExperimentSpec::section6(5000, 1).with_partial_cis().with_false_positives();
     let mut rng = Rng::new(3);
@@ -106,7 +134,8 @@ fn bench_schedulers() {
 
     let m_exact = measure(
         || {
-            let mut s = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+            let mut s =
+                GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
             std::hint::black_box(simulate(&traces, &cfg, &mut s));
         },
         3,
@@ -128,6 +157,14 @@ fn bench_schedulers() {
         2000.0 / m_exact.mean_s,
         2000.0 / m_lazy.mean_s
     );
+    json.lane(
+        "sched_exact_m5000",
+        &[("seconds_per_rep", m_exact.mean_s), ("ticks_per_s", 2000.0 / m_exact.mean_s)],
+    );
+    json.lane(
+        "sched_lazy_m5000",
+        &[("seconds_per_rep", m_lazy.mean_s), ("ticks_per_s", 2000.0 / m_lazy.mean_s)],
+    );
     // eval-count diagnostic
     let mut s = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages);
     simulate(&traces, &cfg, &mut s);
@@ -136,15 +173,21 @@ fn bench_schedulers() {
         s.evals as f64 / s.ticks as f64,
         inst.pages.len()
     );
+    json.lane(
+        "sched_lazy_m5000_evals",
+        &[("evals_per_tick", s.evals as f64 / s.ticks as f64)],
+    );
 }
 
-fn bench_end_to_end() {
+fn bench_end_to_end(json: &mut BenchJson) {
     println!("\n-- end-to-end simulation throughput (m=1000, R=100, T=100) --");
     let spec = ExperimentSpec::section6(1000, 1).with_partial_cis().with_false_positives();
     let mut rng = Rng::new(5);
     let inst = spec.gen_instance(&mut rng).normalized();
     let mut trng = Rng::new(6);
     let traces = generate_traces(&inst.pages, 100.0, CisDelay::None, &mut trng);
+    let (c, s_, r_) = traces.counts();
+    let events = (c + s_ + r_) as f64;
     let cfg = SimConfig::new(100.0, 100.0);
     let m = measure(
         || {
@@ -156,12 +199,132 @@ fn bench_end_to_end() {
     );
     report("lazy GREEDY-NCIS full rep (10k ticks)", &m);
     println!("{:>46} {:.0}k ticks/s", "", 10.0 / m.mean_s);
+    json.lane(
+        "sim_e2e_lazy_m1000",
+        &[
+            ("seconds_per_rep", m.mean_s),
+            ("ticks_per_s", 10_000.0 / m.mean_s),
+            ("events_per_s", events / m.mean_s),
+        ],
+    );
+}
+
+/// The pre-change `run_cell`, verbatim: instance generation, baseline
+/// solve, merged-sort `simulate_reference`, serial repetitions, and the
+/// same per-rep accuracy/rate accumulation — so the timed work is
+/// symmetric with the `run_cell_with_threads` lane and the recorded
+/// speedup isolates engine + driver, not measurement scope. Returns
+/// (mean accuracy, wall seconds).
+fn run_cell_reference(spec: &ExperimentSpec, put: PolicyUnderTest) -> (f64, f64) {
+    let t0 = Instant::now();
+    let mut irng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let baseline = ncis_crawl::solver::baseline_accuracy(&inst).unwrap_or(f64::NAN);
+    std::hint::black_box(baseline);
+    let mut acc = RepAccumulator::new(inst.pages.len());
+    for rep in 0..spec.reps {
+        let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
+        let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
+        let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon);
+        cfg.cis_discard_window = spec.discard_window;
+        let mut sched = make_scheduler(put, &inst, &[]);
+        let res = simulate_reference(&traces, &cfg, sched.as_mut());
+        acc.push(res.accuracy, &res.empirical_rates(spec.horizon));
+    }
+    (acc.accuracy().mean, t0.elapsed().as_secs_f64())
+}
+
+fn bench_cell_engines(json: &mut BenchJson) {
+    let m = env_usize("NCIS_PERF_M", 1000);
+    let horizon = env_usize("NCIS_PERF_T", 1000) as f64;
+    let reps = env_usize("NCIS_PERF_REPS", 8);
+    let threads = default_rep_threads();
+    println!(
+        "\n-- experiment cell: serial merged-sort engine vs parallel streaming \
+         (m={m}, R=100, T={horizon}, reps={reps}, {threads} threads) --"
+    );
+    let spec = ExperimentSpec {
+        horizon,
+        ..ExperimentSpec::section6(m, reps)
+    }
+    .with_partial_cis()
+    .with_false_positives();
+    // total events processed per engine pass (untimed pre-pass, same seeds)
+    let mut irng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let mut events = 0f64;
+    for rep in 0..spec.reps {
+        let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
+        let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
+        let (c, s, r) = traces.counts();
+        events += (c + s + r) as f64;
+    }
+    let ticks = spec.bandwidth * spec.horizon * spec.reps as f64;
+
+    for (label, put) in [
+        ("greedy", PolicyUnderTest::Greedy(PolicyKind::Greedy)),
+        ("lazy_ncis", PolicyUnderTest::Lazy(PolicyKind::GreedyNcis)),
+    ] {
+        let (acc_ref, sec_ref) = run_cell_reference(&spec, put);
+        let t0 = Instant::now();
+        let cell = run_cell_with_threads(&spec, put, threads);
+        let sec_new = t0.elapsed().as_secs_f64();
+        let speedup = sec_ref / sec_new.max(1e-12);
+        println!(
+            "{:<12} reference serial {sec_ref:8.2}s | streaming parallel {sec_new:8.2}s \
+             | speedup {speedup:5.2}x (accuracy {acc_ref:.4} vs {:.4})",
+            put.name(),
+            cell.mean
+        );
+        json.lane(
+            &format!("cell_{label}_serial_reference"),
+            &[
+                ("seconds", sec_ref),
+                ("reps", spec.reps as f64),
+                ("m", m as f64),
+                ("horizon", spec.horizon),
+                ("bandwidth", spec.bandwidth),
+                ("ticks_per_s", ticks / sec_ref),
+                ("events_per_s", events / sec_ref),
+                ("accuracy_mean", acc_ref),
+            ],
+        );
+        json.lane(
+            &format!("cell_{label}_parallel_streaming"),
+            &[
+                ("seconds", sec_new),
+                ("reps", spec.reps as f64),
+                ("m", m as f64),
+                ("horizon", spec.horizon),
+                ("bandwidth", spec.bandwidth),
+                ("threads", threads as f64),
+                ("ticks_per_s", ticks / sec_new),
+                ("events_per_s", events / sec_new),
+                ("accuracy_mean", cell.mean),
+            ],
+        );
+        json.lane(&format!("cell_{label}_speedup"), &[("x", speedup)]);
+    }
 }
 
 fn main() {
     println!("perf bench (see EXPERIMENTS.md §Perf)");
-    bench_value_functions();
-    bench_batched_values();
-    bench_schedulers();
-    bench_end_to_end();
+    let mut json = BenchJson::new("perf");
+    json.lane(
+        "meta",
+        &[("rep_threads", default_rep_threads() as f64)],
+    );
+    bench_value_functions(&mut json);
+    bench_batched_values(&mut json);
+    bench_schedulers(&mut json);
+    bench_end_to_end(&mut json);
+    bench_cell_engines(&mut json);
+    // cargo runs bench binaries with cwd = the package dir (rust/);
+    // write to the workspace root so the perf trajectory lives in one
+    // stable place across invocation styles
+    let out_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    match json.finish_in(&out_dir) {
+        Ok(path) => println!("\nmachine-readable results -> {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
+    }
 }

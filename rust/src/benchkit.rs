@@ -1,8 +1,10 @@
 //! Measurement harness for `benches/` (the image has no `criterion`).
 //!
-//! Provides warmup + repeated-sample timing with mean ± stderr, and a
+//! Provides warmup + repeated-sample timing with mean ± stderr, a
 //! figure-output helper that writes the regenerated paper series as CSV
-//! under `target/figures/` plus an aligned text table to stdout.
+//! under `target/figures/` plus an aligned text table to stdout, and
+//! [`BenchJson`], a machine-readable results writer (`BENCH_<name>.json`)
+//! so successive PRs have a perf trajectory to compare against.
 
 use std::io::Write;
 use std::time::Instant;
@@ -143,6 +145,100 @@ impl FigureOutput {
     }
 }
 
+/// Machine-readable bench results: named lanes of numeric fields,
+/// serialized to `BENCH_<name>.json` (hand-rolled JSON — no `serde` in
+/// the image). Non-finite values serialize as `null`.
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    name: String,
+    lanes: Vec<(String, Vec<(String, f64)>)>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        // Debug formatting gives the shortest round-trip representation
+        // (valid JSON: `0.25`, `1e300`, ...)
+        format!("{v:?}")
+    } else {
+        "null".into()
+    }
+}
+
+impl BenchJson {
+    /// New result set; `name` becomes the `BENCH_<name>.json` file stem.
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), lanes: Vec::new() }
+    }
+
+    /// Append one lane of `(field, value)` measurements. Re-using a lane
+    /// name appends a second object under a suffixed key.
+    pub fn lane(&mut self, lane: &str, fields: &[(&str, f64)]) {
+        let mut name = lane.to_string();
+        let n = self.lanes.iter().filter(|(l, _)| l == lane || l.starts_with(&format!("{lane}#"))).count();
+        if n > 0 {
+            name = format!("{lane}#{n}");
+        }
+        self.lanes.push((
+            name,
+            fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    /// Serialize to a JSON string.
+    pub fn render(&self) -> String {
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.name)));
+        out.push_str(&format!("  \"generated_unix\": {unix},\n"));
+        out.push_str("  \"lanes\": {\n");
+        for (li, (lane, fields)) in self.lanes.iter().enumerate() {
+            out.push_str(&format!("    \"{}\": {{", json_escape(lane)));
+            for (fi, (k, v)) in fields.iter().enumerate() {
+                if fi > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("\"{}\": {}", json_escape(k), json_num(*v)));
+            }
+            out.push_str(if li + 1 < self.lanes.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path.
+    pub fn finish_in(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory (under
+    /// `cargo bench` that is the *package* dir, not the workspace root —
+    /// pass `finish_in(CARGO_MANIFEST_DIR/..)` for a stable location);
+    /// returns the path.
+    pub fn finish(&self) -> std::io::Result<std::path::PathBuf> {
+        self.finish_in(std::path::Path::new("."))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +275,30 @@ mod tests {
     fn arity_mismatch_panics() {
         let mut fig = FigureOutput::new("bad", &["a", "b"]);
         fig.rowf(&[1.0]);
+    }
+
+    #[test]
+    fn bench_json_roundtrip() {
+        let mut j = BenchJson::new("unit_test");
+        j.lane("alpha", &[("mean_s", 0.25), ("per_s", 4.0)]);
+        j.lane("beta", &[("speedup_x", 3.5), ("bad", f64::NAN)]);
+        j.lane("beta", &[("speedup_x", 1.0)]); // duplicate -> suffixed
+        let text = j.render();
+        assert!(text.contains("\"bench\": \"unit_test\""));
+        assert!(text.contains("\"alpha\": {\"mean_s\": 0.25, \"per_s\": 4.0}"));
+        assert!(text.contains("\"bad\": null"));
+        assert!(text.contains("\"beta#1\""));
+        let dir = std::env::temp_dir().join("ncis_benchjson_test");
+        let path = j.finish_in(&dir).unwrap();
+        let disk = std::fs::read_to_string(&path).unwrap();
+        assert!(disk.starts_with('{') && disk.trim_end().ends_with('}'));
+        assert_eq!(path.file_name().unwrap(), "BENCH_unit_test.json");
+    }
+
+    #[test]
+    fn json_escaping_and_numbers() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_num(1e300), "1e300");
+        assert_eq!(json_num(f64::INFINITY), "null");
     }
 }

@@ -35,21 +35,7 @@ use crate::coordinator::crawler::belief_params;
 use crate::params::{DerivedParams, PageParams};
 use crate::policy::{value, PolicyKind};
 use crate::sim::engine::{PageState, Scheduler};
-
-/// Ordered f64 for heap keys.
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct OrdF64(f64);
-impl Eq for OrdF64 {}
-impl PartialOrd for OrdF64 {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for OrdF64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
-    }
-}
+use crate::util::OrdF64;
 
 /// Max refreshes per tick before we accept the best value seen so far.
 const MAX_REFRESH: usize = 24;

@@ -1,33 +1,88 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the image has no `thiserror`);
+//! the XLA conversion only exists when the `pjrt` feature brings the
+//! `xla` crate into the build.
 
 /// Errors surfaced by the ncis-crawl library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid page / environment parameters.
-    #[error("invalid parameter: {0}")]
     InvalidParam(String),
     /// The continuous solver could not bracket or converge.
-    #[error("solver failure: {0}")]
     Solver(String),
     /// PJRT / artifact problems.
-    #[error("runtime: {0}")]
     Runtime(String),
     /// Artifact manifest problems.
-    #[error("artifact manifest: {0}")]
     Manifest(String),
     /// Configuration file problems.
-    #[error("config: {0}")]
     Config(String),
     /// CLI usage problems.
-    #[error("usage: {0}")]
     Usage(String),
-    /// Underlying XLA error.
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    /// Underlying XLA error (stringified; only produced with `pjrt`).
+    Xla(String),
     /// I/O error.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidParam(s) => write!(f, "invalid parameter: {s}"),
+            Error::Solver(s) => write!(f, "solver failure: {s}"),
+            Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Manifest(s) => write!(f, "artifact manifest: {s}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+            Error::Usage(s) => write!(f, "usage: {s}"),
+            Error::Xla(s) => write!(f, "xla: {s}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        assert_eq!(Error::Usage("bad flag".into()).to_string(), "usage: bad flag");
+        assert!(Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x"))
+            .to_string()
+            .starts_with("io: "));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        fn fails() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "nope"))?;
+            Ok(())
+        }
+        assert!(matches!(fails(), Err(Error::Io(_))));
+    }
+}

@@ -1,4 +1,15 @@
 //! Shared experiment machinery for the figure harness.
+//!
+//! [`run_cell`] fans the repetitions of one experiment cell across
+//! worker threads (same scoped-thread idiom as `coordinator/shard.rs`):
+//! every repetition keeps its deterministic seed
+//! `spec.seed ^ (0xC0FFEE + rep)` and results are merged in repetition
+//! order, so the parallel output is bit-identical to a serial run
+//! ([`run_cell_serial`]; the `parallel_cell_matches_serial_exactly` test
+//! asserts it). Each worker owns a reusable [`SimWorkspace`], so a cell
+//! performs O(threads) scratch allocations instead of O(reps).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::coordinator::crawler::{GreedyScheduler, LdsAdapter, ValueBackend};
 use crate::coordinator::lazy::LazyGreedyScheduler;
@@ -7,7 +18,7 @@ use crate::policy::PolicyKind;
 use crate::rngkit::{self, Rng};
 use crate::sim::engine::{Scheduler, SimConfig};
 use crate::sim::metrics::RepAccumulator;
-use crate::sim::{generate_traces, simulate, CisDelay};
+use crate::sim::{generate_traces, simulate_with, CisDelay, SimWorkspace};
 use crate::solver;
 
 /// §6.1 problem-instance specification.
@@ -120,7 +131,11 @@ pub struct CellResult {
     pub instance: Instance,
 }
 
-fn make_scheduler(
+/// Construct the scheduler a cell lane runs (shared with
+/// `benches/perf.rs` so bench lanes measure exactly what [`run_cell`]
+/// constructs). `no_cis_rates` feeds the LDS adapter and is ignored by
+/// the greedy/lazy lanes.
+pub fn make_scheduler(
     put: PolicyUnderTest,
     inst: &Instance,
     no_cis_rates: &[f64],
@@ -134,9 +149,59 @@ fn make_scheduler(
     }
 }
 
+/// Worker threads [`run_cell`] uses to fan repetitions across cores.
+/// `NCIS_THREADS` overrides; defaults to the machine's parallelism.
+pub fn default_rep_threads() -> usize {
+    std::env::var("NCIS_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// One repetition of a cell: deterministic per-rep seed, fresh scheduler,
+/// streaming engine over the worker's reusable workspace.
+fn run_rep(
+    spec: &ExperimentSpec,
+    put: PolicyUnderTest,
+    inst: &Instance,
+    no_cis_rates: &[f64],
+    rep: usize,
+    ws: &mut SimWorkspace,
+) -> (f64, Vec<f64>) {
+    let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
+    let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
+    let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon);
+    cfg.cis_discard_window = spec.discard_window;
+    let mut sched = make_scheduler(put, inst, no_cis_rates);
+    let res = simulate_with(ws, &traces, &cfg, sched.as_mut());
+    (res.accuracy, res.empirical_rates(spec.horizon))
+}
+
 /// Run one experiment cell: a fixed instance (drawn from `spec` with
 /// `spec.seed`), `spec.reps` trace realizations, one accuracy per rep.
+/// Repetitions run in parallel (see [`run_cell_with_threads`]).
 pub fn run_cell(spec: &ExperimentSpec, put: PolicyUnderTest) -> CellResult {
+    run_cell_with_threads(spec, put, default_rep_threads())
+}
+
+/// [`run_cell`] pinned to one worker — the serial reference the parallel
+/// driver is tested bit-identical against.
+pub fn run_cell_serial(spec: &ExperimentSpec, put: PolicyUnderTest) -> CellResult {
+    run_cell_with_threads(spec, put, 1)
+}
+
+/// Run one experiment cell with an explicit worker-thread count.
+///
+/// Work distribution is dynamic (an atomic rep counter), but every
+/// repetition is fully determined by its seed and the results are merged
+/// into the [`RepAccumulator`] in repetition order, so the outcome is
+/// identical for every thread count.
+pub fn run_cell_with_threads(
+    spec: &ExperimentSpec,
+    put: PolicyUnderTest,
+    threads: usize,
+) -> CellResult {
     let mut irng = Rng::new(spec.seed);
     let inst = spec.gen_instance(&mut irng).normalized();
     let baseline = solver::baseline_accuracy(&inst).unwrap_or(f64::NAN);
@@ -144,15 +209,46 @@ pub fn run_cell(spec: &ExperimentSpec, put: PolicyUnderTest) -> CellResult {
         PolicyUnderTest::Lds => solver::solve_no_cis(&inst).map(|s| s.rates).unwrap_or_default(),
         _ => Vec::new(),
     };
+    let threads = threads.clamp(1, spec.reps.max(1));
+    let mut results: Vec<Option<(f64, Vec<f64>)>> = vec![None; spec.reps];
+    if threads <= 1 {
+        let mut ws = SimWorkspace::new();
+        for (rep, slot) in results.iter_mut().enumerate() {
+            *slot = Some(run_rep(spec, put, &inst, &no_cis_rates, rep, &mut ws));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let next_ref = &next;
+        let inst_ref = &inst;
+        let rates_ref = no_cis_rates.as_slice();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut ws = SimWorkspace::new();
+                        let mut out: Vec<(usize, (f64, Vec<f64>))> = Vec::new();
+                        loop {
+                            let rep = next_ref.fetch_add(1, Ordering::Relaxed);
+                            if rep >= spec.reps {
+                                break;
+                            }
+                            out.push((rep, run_rep(spec, put, inst_ref, rates_ref, rep, &mut ws)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (rep, r) in h.join().expect("rep worker panicked") {
+                    results[rep] = Some(r);
+                }
+            }
+        });
+    }
     let mut acc = RepAccumulator::new(inst.pages.len());
-    for rep in 0..spec.reps {
-        let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
-        let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
-        let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon);
-        cfg.cis_discard_window = spec.discard_window;
-        let mut sched = make_scheduler(put, &inst, &no_cis_rates);
-        let res = simulate(&traces, &cfg, sched.as_mut());
-        acc.push(res.accuracy, &res.empirical_rates(spec.horizon));
+    for r in results {
+        let (accuracy, rates) = r.expect("repetition not executed");
+        acc.push(accuracy, &rates);
     }
     let s = acc.accuracy();
     CellResult {
@@ -191,6 +287,54 @@ mod tests {
         };
         let r = run_cell(&spec, PolicyUnderTest::Lds);
         assert!((0.0..=1.0).contains(&r.mean));
+    }
+
+    #[test]
+    fn parallel_cell_matches_serial_exactly() {
+        let spec = ExperimentSpec {
+            horizon: 40.0,
+            bandwidth: 6.0,
+            ..ExperimentSpec::section6(30, 5)
+        }
+        .with_partial_cis()
+        .with_false_positives();
+        for put in [
+            PolicyUnderTest::Greedy(PolicyKind::GreedyNcis),
+            PolicyUnderTest::Lazy(PolicyKind::GreedyNcis),
+            PolicyUnderTest::Lds,
+        ] {
+            let serial = run_cell_serial(&spec, put);
+            let parallel = run_cell_with_threads(&spec, put, 4);
+            assert_eq!(
+                serial.mean.to_bits(),
+                parallel.mean.to_bits(),
+                "{}: mean {} vs {}",
+                put.name(),
+                serial.mean,
+                parallel.mean
+            );
+            assert_eq!(serial.stderr.to_bits(), parallel.stderr.to_bits(), "{}", put.name());
+            assert_eq!(serial.mean_rates.len(), parallel.mean_rates.len());
+            for (i, (a, b)) in serial.mean_rates.iter().zip(&parallel.mean_rates).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: rate[{i}]", put.name());
+            }
+            assert_eq!(serial.baseline.to_bits(), parallel.baseline.to_bits());
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let spec = ExperimentSpec {
+            horizon: 30.0,
+            bandwidth: 5.0,
+            ..ExperimentSpec::section6(20, 7)
+        };
+        let reference = run_cell_serial(&spec, PolicyUnderTest::Greedy(PolicyKind::Greedy));
+        for threads in [2usize, 3, 16] {
+            let got =
+                run_cell_with_threads(&spec, PolicyUnderTest::Greedy(PolicyKind::Greedy), threads);
+            assert_eq!(reference.mean.to_bits(), got.mean.to_bits(), "threads={threads}");
+        }
     }
 
     #[test]

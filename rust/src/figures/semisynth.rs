@@ -9,7 +9,7 @@ use crate::policy::PolicyKind;
 use crate::rngkit::Rng;
 use crate::sim::engine::SimConfig;
 use crate::sim::metrics::RepAccumulator;
-use crate::sim::{generate_traces, CisDelay};
+use crate::sim::{generate_traces, simulate_with, CisDelay, SimWorkspace};
 use crate::Result;
 
 /// Figure 1: importance-weighted precision/recall histograms of the
@@ -62,11 +62,12 @@ fn run_policy(
 ) -> (f64, f64) {
     let cfg = SimConfig::new(spec.budget, spec.steps);
     let mut acc = RepAccumulator::new(true_inst.pages.len());
+    let mut ws = SimWorkspace::new();
     for rep in 0..spec.reps {
         let mut rng = Rng::new(spec.seed ^ (0xABCD + rep as u64));
         let traces = generate_traces(&true_inst.pages, spec.steps, CisDelay::None, &mut rng);
         let mut sched = LazyGreedyScheduler::new(kind, believed_pages);
-        let res = crate::sim::simulate(&traces, &cfg, &mut sched);
+        let res = simulate_with(&mut ws, &traces, &cfg, &mut sched);
         acc.push(res.accuracy, &res.empirical_rates(spec.steps));
     }
     let s = acc.accuracy();

@@ -52,6 +52,7 @@ pub mod solver;
 pub mod special;
 pub mod stats;
 pub mod testkit;
+pub mod util;
 
 pub use error::{Error, Result};
 pub use params::{DerivedParams, PageParams};

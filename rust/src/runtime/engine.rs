@@ -5,268 +5,369 @@
 //! the coordinator's hot path. Pattern follows
 //! `/opt/xla-example/load_hlo/`: `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! The `xla` crate is not part of the default dependency-free build: the
+//! real engine only compiles under the `pjrt` cargo feature (which
+//! expects a vendored `xla` crate, see EXPERIMENTS.md §PJRT). Without it
+//! a stub with the same API is substituted whose `load` always fails, so
+//! every call site (benches, examples, the `artifacts` CLI command, the
+//! parity tests) takes its existing "artifacts unavailable" fallback and
+//! the native f64 engine serves the hot path.
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod xla_engine {
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use crate::error::{Error, Result};
-use crate::runtime::artifacts::Manifest;
-use crate::runtime::ValueBatch;
+    use crate::error::{Error, Result};
+    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::ValueBatch;
 
-struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
-    batch: usize,
-}
-
-/// PJRT engine over the AOT artifacts.
-pub struct PjrtEngine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    /// crawl_value executables keyed by (terms, batch).
-    crawl: HashMap<(u32, usize), LoadedExec>,
-    freshness: Option<LoadedExec>,
-    mle: Option<LoadedExec>,
-    manifest: Manifest,
-}
-
-impl std::fmt::Debug for PjrtEngine {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PjrtEngine")
-            .field("crawl_execs", &self.crawl.len())
-            .field("freshness", &self.freshness.is_some())
-            .field("mle", &self.mle.is_some())
-            .finish()
+    struct LoadedExec {
+        exe: xla::PjRtLoadedExecutable,
+        batch: usize,
     }
-}
 
-impl PjrtEngine {
-    /// Load + compile every artifact under `dir` (expects
-    /// `dir/manifest.txt`).
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut crawl = HashMap::new();
-        let mut freshness = None;
-        let mut mle = None;
-        for spec in &manifest.specs {
-            let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            let loaded = LoadedExec { exe, batch: spec.batch };
-            match spec.kind.as_str() {
-                "crawl_value" => {
-                    let terms = spec
-                        .terms
-                        .ok_or_else(|| Error::Manifest(format!("{}: missing terms", spec.name)))?;
-                    crawl.insert((terms, spec.batch), loaded);
+    /// PJRT engine over the AOT artifacts.
+    pub struct PjrtEngine {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        /// crawl_value executables keyed by (terms, batch).
+        crawl: HashMap<(u32, usize), LoadedExec>,
+        freshness: Option<LoadedExec>,
+        mle: Option<LoadedExec>,
+        manifest: Manifest,
+    }
+
+    impl std::fmt::Debug for PjrtEngine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("PjrtEngine")
+                .field("crawl_execs", &self.crawl.len())
+                .field("freshness", &self.freshness.is_some())
+                .field("mle", &self.mle.is_some())
+                .finish()
+        }
+    }
+
+    impl PjrtEngine {
+        /// Load + compile every artifact under `dir` (expects
+        /// `dir/manifest.txt`).
+        pub fn load(dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            let mut crawl = HashMap::new();
+            let mut freshness = None;
+            let mut mle = None;
+            for spec in &manifest.specs {
+                let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                let loaded = LoadedExec { exe, batch: spec.batch };
+                match spec.kind.as_str() {
+                    "crawl_value" => {
+                        let terms = spec.terms.ok_or_else(|| {
+                            Error::Manifest(format!("{}: missing terms", spec.name))
+                        })?;
+                        crawl.insert((terms, spec.batch), loaded);
+                    }
+                    "freshness" => freshness = Some(loaded),
+                    "mle_step" => mle = Some(loaded),
+                    other => {
+                        return Err(Error::Manifest(format!("unknown artifact kind {other}")));
+                    }
                 }
-                "freshness" => freshness = Some(loaded),
-                "mle_step" => mle = Some(loaded),
-                other => {
-                    return Err(Error::Manifest(format!("unknown artifact kind {other}")));
-                }
             }
+            Ok(Self { client, crawl, freshness, mle, manifest })
         }
-        Ok(Self { client, crawl, freshness, mle, manifest })
-    }
 
-    /// Artifact manifest that was loaded.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Available (terms, batch) crawl-value configurations.
-    pub fn crawl_configs(&self) -> Vec<(u32, usize)> {
-        let mut v: Vec<(u32, usize)> = self.crawl.keys().copied().collect();
-        v.sort_unstable();
-        v
-    }
-
-    fn pick_crawl(&self, terms: u32, n: usize) -> Result<&LoadedExec> {
-        // smallest batch that fits n, else the largest (chunked execution)
-        let mut best: Option<&LoadedExec> = None;
-        let mut largest: Option<&LoadedExec> = None;
-        for ((t, b), le) in &self.crawl {
-            if *t != terms {
-                continue;
-            }
-            if largest.map_or(true, |l| *b > l.batch) {
-                largest = Some(le);
-            }
-            if *b >= n && best.map_or(true, |x| *b < x.batch) {
-                best = Some(le);
-            }
+        /// Artifact manifest that was loaded.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        best.or(largest)
-            .ok_or_else(|| Error::Runtime(format!("no crawl_value artifact with terms={terms}")))
-    }
 
-    /// Batched crawl values. Executes in chunks of the artifact batch
-    /// size (padding the tail with μ=0 sentinels) and returns exactly
-    /// `batch.len()` values.
-    pub fn crawl_values(&self, terms: u32, batch: &ValueBatch) -> Result<Vec<f32>> {
-        let n = batch.len();
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        let le = self.pick_crawl(terms, n)?;
-        let b = le.batch;
-        let mut out = Vec::with_capacity(n);
-        let mut chunk = ValueBatch::with_capacity(b);
-        let mut start = 0;
-        while start < n {
-            let end = (start + b).min(n);
-            chunk.clear();
-            chunk.iota.extend_from_slice(&batch.iota[start..end]);
-            chunk.alpha.extend_from_slice(&batch.alpha[start..end]);
-            chunk.beta.extend_from_slice(&batch.beta[start..end]);
-            chunk.gamma.extend_from_slice(&batch.gamma[start..end]);
-            chunk.nu.extend_from_slice(&batch.nu[start..end]);
-            chunk.delta.extend_from_slice(&batch.delta[start..end]);
-            chunk.mu.extend_from_slice(&batch.mu[start..end]);
-            chunk.pad_to(b);
-            let (values, _, _) = self.execute_crawl(le, &chunk)?;
-            out.extend_from_slice(&values[..end - start]);
-            start = end;
-        }
-        Ok(out)
-    }
-
-    /// Batched crawl values plus the argmax (index into `batch`). For a
-    /// single-chunk batch the argmax comes fused from the device; for
-    /// chunked batches it is reduced across chunk maxima host-side.
-    pub fn crawl_values_argmax(
-        &self,
-        terms: u32,
-        batch: &ValueBatch,
-    ) -> Result<(Vec<f32>, usize, f32)> {
-        let n = batch.len();
-        if n == 0 {
-            return Err(Error::Runtime("empty batch".into()));
-        }
-        let le = self.pick_crawl(terms, n)?;
-        if n <= le.batch {
-            let mut chunk;
-            let cref = if n == le.batch {
-                batch
-            } else {
-                chunk = batch.clone();
-                chunk.pad_to(le.batch);
-                &chunk
-            };
-            let (values, idx, best) = self.execute_crawl(le, cref)?;
-            let idx = idx.min(n - 1);
-            return Ok((values[..n].to_vec(), idx, best));
-        }
-        let values = self.crawl_values(terms, batch)?;
-        let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
-        for (i, &v) in values.iter().enumerate() {
-            if v > bv {
-                bv = v;
-                bi = i;
-            }
-        }
-        Ok((values, bi, bv))
-    }
-
-    fn execute_crawl(&self, le: &LoadedExec, chunk: &ValueBatch) -> Result<(Vec<f32>, usize, f32)> {
-        debug_assert_eq!(chunk.len(), le.batch);
-        let args = [
-            xla::Literal::vec1(&chunk.iota),
-            xla::Literal::vec1(&chunk.alpha),
-            xla::Literal::vec1(&chunk.beta),
-            xla::Literal::vec1(&chunk.gamma),
-            xla::Literal::vec1(&chunk.nu),
-            xla::Literal::vec1(&chunk.delta),
-            xla::Literal::vec1(&chunk.mu),
-        ];
-        let result = le.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (values_l, idx_l, best_l) = result.to_tuple3()?;
-        let values = values_l.to_vec::<f32>()?;
-        let idx = idx_l.to_vec::<i32>()?[0] as usize;
-        let best = best_l.to_vec::<f32>()?[0];
-        Ok((values, idx, best))
-    }
-
-    /// Batched freshness probabilities (eq. 1): inputs are per-page
-    /// `tau_elap`, `n_cis`, `alpha`, `log(ν/γ)`.
-    pub fn freshness(
-        &self,
-        tau_elap: &[f32],
-        n_cis: &[f32],
-        alpha: &[f32],
-        log_fp_ratio: &[f32],
-    ) -> Result<Vec<f32>> {
-        let le = self
-            .freshness
-            .as_ref()
-            .ok_or_else(|| Error::Runtime("no freshness artifact".into()))?;
-        let n = tau_elap.len();
-        let b = le.batch;
-        let mut out = Vec::with_capacity(n);
-        let pad = |s: &[f32], fill: f32| -> Vec<f32> {
-            let mut v = s.to_vec();
-            v.resize(b, fill);
+        /// Available (terms, batch) crawl-value configurations.
+        pub fn crawl_configs(&self) -> Vec<(u32, usize)> {
+            let mut v: Vec<(u32, usize)> = self.crawl.keys().copied().collect();
+            v.sort_unstable();
             v
-        };
-        let mut start = 0;
-        while start < n {
-            let end = (start + b).min(n);
+        }
+
+        fn pick_crawl(&self, terms: u32, n: usize) -> Result<&LoadedExec> {
+            // smallest batch that fits n, else the largest (chunked execution)
+            let mut best: Option<&LoadedExec> = None;
+            let mut largest: Option<&LoadedExec> = None;
+            for ((t, b), le) in &self.crawl {
+                if *t != terms {
+                    continue;
+                }
+                if largest.map_or(true, |l| *b > l.batch) {
+                    largest = Some(le);
+                }
+                if *b >= n && best.map_or(true, |x| *b < x.batch) {
+                    best = Some(le);
+                }
+            }
+            best.or(largest).ok_or_else(|| {
+                Error::Runtime(format!("no crawl_value artifact with terms={terms}"))
+            })
+        }
+
+        /// Batched crawl values. Executes in chunks of the artifact batch
+        /// size (padding the tail with μ=0 sentinels) and returns exactly
+        /// `batch.len()` values.
+        pub fn crawl_values(&self, terms: u32, batch: &ValueBatch) -> Result<Vec<f32>> {
+            let n = batch.len();
+            if n == 0 {
+                return Ok(Vec::new());
+            }
+            let le = self.pick_crawl(terms, n)?;
+            let b = le.batch;
+            let mut out = Vec::with_capacity(n);
+            let mut chunk = ValueBatch::with_capacity(b);
+            let mut start = 0;
+            while start < n {
+                let end = (start + b).min(n);
+                chunk.clear();
+                chunk.iota.extend_from_slice(&batch.iota[start..end]);
+                chunk.alpha.extend_from_slice(&batch.alpha[start..end]);
+                chunk.beta.extend_from_slice(&batch.beta[start..end]);
+                chunk.gamma.extend_from_slice(&batch.gamma[start..end]);
+                chunk.nu.extend_from_slice(&batch.nu[start..end]);
+                chunk.delta.extend_from_slice(&batch.delta[start..end]);
+                chunk.mu.extend_from_slice(&batch.mu[start..end]);
+                chunk.pad_to(b);
+                let (values, _, _) = self.execute_crawl(le, &chunk)?;
+                out.extend_from_slice(&values[..end - start]);
+                start = end;
+            }
+            Ok(out)
+        }
+
+        /// Batched crawl values plus the argmax (index into `batch`). For a
+        /// single-chunk batch the argmax comes fused from the device; for
+        /// chunked batches it is reduced across chunk maxima host-side.
+        pub fn crawl_values_argmax(
+            &self,
+            terms: u32,
+            batch: &ValueBatch,
+        ) -> Result<(Vec<f32>, usize, f32)> {
+            let n = batch.len();
+            if n == 0 {
+                return Err(Error::Runtime("empty batch".into()));
+            }
+            let le = self.pick_crawl(terms, n)?;
+            if n <= le.batch {
+                let mut chunk;
+                let cref = if n == le.batch {
+                    batch
+                } else {
+                    chunk = batch.clone();
+                    chunk.pad_to(le.batch);
+                    &chunk
+                };
+                let (values, idx, best) = self.execute_crawl(le, cref)?;
+                let idx = idx.min(n - 1);
+                return Ok((values[..n].to_vec(), idx, best));
+            }
+            let values = self.crawl_values(terms, batch)?;
+            let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+            for (i, &v) in values.iter().enumerate() {
+                if v > bv {
+                    bv = v;
+                    bi = i;
+                }
+            }
+            Ok((values, bi, bv))
+        }
+
+        fn execute_crawl(
+            &self,
+            le: &LoadedExec,
+            chunk: &ValueBatch,
+        ) -> Result<(Vec<f32>, usize, f32)> {
+            debug_assert_eq!(chunk.len(), le.batch);
             let args = [
-                xla::Literal::vec1(&pad(&tau_elap[start..end], 0.0)),
-                xla::Literal::vec1(&pad(&n_cis[start..end], 0.0)),
-                xla::Literal::vec1(&pad(&alpha[start..end], 1.0)),
-                xla::Literal::vec1(&pad(&log_fp_ratio[start..end], 0.0)),
+                xla::Literal::vec1(&chunk.iota),
+                xla::Literal::vec1(&chunk.alpha),
+                xla::Literal::vec1(&chunk.beta),
+                xla::Literal::vec1(&chunk.gamma),
+                xla::Literal::vec1(&chunk.nu),
+                xla::Literal::vec1(&chunk.delta),
+                xla::Literal::vec1(&chunk.mu),
             ];
             let result = le.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-            let fr = result.to_tuple1()?.to_vec::<f32>()?;
-            out.extend_from_slice(&fr[..end - start]);
-            start = end;
+            let (values_l, idx_l, best_l) = result.to_tuple3()?;
+            let values = values_l.to_vec::<f32>()?;
+            let idx = idx_l.to_vec::<i32>()?[0] as usize;
+            let best = best_l.to_vec::<f32>()?[0];
+            Ok((values, idx, best))
         }
-        Ok(out)
-    }
 
-    /// Fit the Appendix-E model by iterating the AOT Newton step.
-    /// `obs` rows are `(tau_elap, n_cis)`, `z` ∈ {0,1} marks observed
-    /// changes. Returns `theta = (alpha, alpha*beta)`.
-    pub fn mle_fit(&self, obs: &[(f64, f64)], z: &[f64], iters: usize) -> Result<(f64, f64)> {
-        let le = self
-            .mle
-            .as_ref()
-            .ok_or_else(|| Error::Runtime("no mle_step artifact".into()))?;
-        let b = le.batch;
-        if obs.len() != z.len() {
-            return Err(Error::Runtime("obs/z length mismatch".into()));
+        /// Batched freshness probabilities (eq. 1): inputs are per-page
+        /// `tau_elap`, `n_cis`, `alpha`, `log(ν/γ)`.
+        pub fn freshness(
+            &self,
+            tau_elap: &[f32],
+            n_cis: &[f32],
+            alpha: &[f32],
+            log_fp_ratio: &[f32],
+        ) -> Result<Vec<f32>> {
+            let le = self
+                .freshness
+                .as_ref()
+                .ok_or_else(|| Error::Runtime("no freshness artifact".into()))?;
+            let n = tau_elap.len();
+            let b = le.batch;
+            let mut out = Vec::with_capacity(n);
+            let pad = |s: &[f32], fill: f32| -> Vec<f32> {
+                let mut v = s.to_vec();
+                v.resize(b, fill);
+                v
+            };
+            let mut start = 0;
+            while start < n {
+                let end = (start + b).min(n);
+                let args = [
+                    xla::Literal::vec1(&pad(&tau_elap[start..end], 0.0)),
+                    xla::Literal::vec1(&pad(&n_cis[start..end], 0.0)),
+                    xla::Literal::vec1(&pad(&alpha[start..end], 1.0)),
+                    xla::Literal::vec1(&pad(&log_fp_ratio[start..end], 0.0)),
+                ];
+                let result = le.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+                let fr = result.to_tuple1()?.to_vec::<f32>()?;
+                out.extend_from_slice(&fr[..end - start]);
+                start = end;
+            }
+            Ok(out)
         }
-        // pack (truncating to one batch: callers subsample; weight-0 pads)
-        let n = obs.len().min(b);
-        let mut x = vec![0f32; b * 2];
-        let mut zz = vec![0f32; b];
-        let mut w = vec![0f32; b];
-        for i in 0..n {
-            x[i * 2] = obs[i].0 as f32;
-            x[i * 2 + 1] = obs[i].1 as f32;
-            zz[i] = z[i] as f32;
-            w[i] = 1.0;
+
+        /// Fit the Appendix-E model by iterating the AOT Newton step.
+        /// `obs` rows are `(tau_elap, n_cis)`, `z` ∈ {0,1} marks observed
+        /// changes. Returns `theta = (alpha, alpha*beta)`.
+        pub fn mle_fit(&self, obs: &[(f64, f64)], z: &[f64], iters: usize) -> Result<(f64, f64)> {
+            let le = self
+                .mle
+                .as_ref()
+                .ok_or_else(|| Error::Runtime("no mle_step artifact".into()))?;
+            let b = le.batch;
+            if obs.len() != z.len() {
+                return Err(Error::Runtime("obs/z length mismatch".into()));
+            }
+            // pack (truncating to one batch: callers subsample; weight-0 pads)
+            let n = obs.len().min(b);
+            let mut x = vec![0f32; b * 2];
+            let mut zz = vec![0f32; b];
+            let mut w = vec![0f32; b];
+            for i in 0..n {
+                x[i * 2] = obs[i].0 as f32;
+                x[i * 2 + 1] = obs[i].1 as f32;
+                zz[i] = z[i] as f32;
+                w[i] = 1.0;
+            }
+            let x_lit = xla::Literal::vec1(&x).reshape(&[b as i64, 2])?;
+            let z_lit = xla::Literal::vec1(&zz);
+            let w_lit = xla::Literal::vec1(&w);
+            let mut theta = [0.5f32, 0.5f32];
+            for _ in 0..iters {
+                let t_lit = xla::Literal::vec1(&theta[..]);
+                let args = [t_lit, x_lit.clone(), z_lit.clone(), w_lit.clone()];
+                let result = le.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+                let (t_new, _nll) = result.to_tuple2()?;
+                let tv = t_new.to_vec::<f32>()?;
+                theta = [tv[0], tv[1]];
+            }
+            Ok((theta[0] as f64, theta[1] as f64))
         }
-        let x_lit = xla::Literal::vec1(&x).reshape(&[b as i64, 2])?;
-        let z_lit = xla::Literal::vec1(&zz);
-        let w_lit = xla::Literal::vec1(&w);
-        let mut theta = [0.5f32, 0.5f32];
-        for _ in 0..iters {
-            let t_lit = xla::Literal::vec1(&theta[..]);
-            let args = [t_lit, x_lit.clone(), z_lit.clone(), w_lit.clone()];
-            let result = le.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-            let (t_new, _nll) = result.to_tuple2()?;
-            let tv = t_new.to_vec::<f32>()?;
-            theta = [tv[0], tv[1]];
-        }
-        Ok((theta[0] as f64, theta[1] as f64))
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use xla_engine::PjrtEngine;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::error::{Error, Result};
+    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::ValueBatch;
+
+    /// Stub PJRT engine: the API of the real engine with a `load` that
+    /// always fails, so it can never be instantiated. Callers uniformly
+    /// treat a failed `load` as "artifacts unavailable" and fall back to
+    /// [`crate::runtime::NativeEngine`].
+    #[derive(Debug)]
+    pub struct PjrtEngine {
+        manifest: Manifest,
+    }
+
+    const DISABLED: &str =
+        "ncis_crawl was built without the `pjrt` feature; declare a vendored \
+         `xla` crate in rust/Cargo.toml and rebuild with `--features pjrt` \
+         (EXPERIMENTS.md §PJRT)";
+
+    impl PjrtEngine {
+        /// Always fails: PJRT support is not compiled in.
+        pub fn load(_dir: &Path) -> Result<Self> {
+            Err(Error::Runtime(DISABLED.into()))
+        }
+
+        /// Artifact manifest that was loaded.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Available (terms, batch) crawl-value configurations.
+        pub fn crawl_configs(&self) -> Vec<(u32, usize)> {
+            Vec::new()
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn crawl_values(&self, _terms: u32, _batch: &ValueBatch) -> Result<Vec<f32>> {
+            Err(Error::Runtime(DISABLED.into()))
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn crawl_values_argmax(
+            &self,
+            _terms: u32,
+            _batch: &ValueBatch,
+        ) -> Result<(Vec<f32>, usize, f32)> {
+            Err(Error::Runtime(DISABLED.into()))
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn freshness(
+            &self,
+            _tau_elap: &[f32],
+            _n_cis: &[f32],
+            _alpha: &[f32],
+            _log_fp_ratio: &[f32],
+        ) -> Result<Vec<f32>> {
+            Err(Error::Runtime(DISABLED.into()))
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn mle_fit(&self, _obs: &[(f64, f64)], _z: &[f64], _iters: usize) -> Result<(f64, f64)> {
+            Err(Error::Runtime(DISABLED.into()))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtEngine;
 
 #[cfg(test)]
 mod tests {
     //! Engine tests live in `tests/pjrt_parity.rs` (they need the
-    //! artifacts directory built by `make artifacts`).
+    //! artifacts directory built by `make artifacts` and the `pjrt`
+    //! feature). The stub's load-failure path is exercised there too:
+    //! every parity test SKIPs cleanly when `load` errors.
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_fails_with_guidance() {
+        let err = super::PjrtEngine::load(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
 }

@@ -4,8 +4,32 @@
 //! tick (`t_j = j/R`, with `R` allowed to change over time per the
 //! Appendix-D experiment), exact freshness accounting per request event,
 //! and the Appendix-C CIS discard window.
+//!
+//! ## Streaming engine
+//!
+//! The hot path is a *k-way streaming merge* over the already-sorted
+//! per-page traces: each page keeps three cursors (changes / CIS /
+//! requests) and contributes its next event to a small binary min-heap
+//! keyed by `(time, kind, page)`. No merged global event `Vec` is ever
+//! materialized and nothing is sorted per repetition — the old
+//! `O(E log E)` sort with ~3× peak memory becomes an `O(E log m)`
+//! streaming replay with O(m) state. All per-repetition scratch lives in
+//! a [`SimWorkspace`] that callers reset-and-reuse across repetitions
+//! (the parallel cell driver in `figures::common` gives one to each
+//! worker thread).
+//!
+//! [`simulate_reference`] keeps the straightforward merged-sort
+//! implementation: it is the parity oracle for the streaming engine and
+//! the pre-change baseline lane of `benches/perf.rs`. Both engines apply
+//! simultaneous events in the same total order `(time, kind, page)` with
+//! kinds ordered change < CIS < request, so their outputs are
+//! bit-identical.
 
-use crate::sim::events::EventTraces;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::events::{EventTraces, PageTrace};
+use crate::util::OrdF64;
 
 /// Scheduler-visible state of one page.
 #[derive(Debug, Clone, Copy)]
@@ -53,17 +77,21 @@ impl BandwidthSchedule {
         Self { segments: vec![(0.0, r)] }
     }
 
+    /// Index of the segment in effect at time `t` (the last segment
+    /// whose start is ≤ `t`; segment 0 for `t` before the first start).
+    #[inline]
+    pub fn segment_at(&self, t: f64) -> usize {
+        // binary search instead of the old linear scan from index 0:
+        // callers inside the tick loop additionally keep a monotone
+        // cursor, but one-off queries stay O(log n)
+        let idx = self.segments.partition_point(|&(start, _)| start <= t);
+        idx.saturating_sub(1)
+    }
+
     /// Rate in effect at time `t`.
+    #[inline]
     pub fn rate_at(&self, t: f64) -> f64 {
-        let mut r = self.segments[0].1;
-        for &(start, rate) in &self.segments {
-            if t >= start {
-                r = rate;
-            } else {
-                break;
-            }
-        }
-        r
+        self.segments[self.segment_at(t)].1
     }
 }
 
@@ -118,28 +146,258 @@ impl SimResult {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EventKind {
-    Change,
-    Cis,
-    Request,
+/// Event kinds in merge order: simultaneous events apply change-first,
+/// request-last (a request at the exact instant of a change sees stale
+/// content; both engines share this total order).
+const KIND_CHANGE: u8 = 0;
+const KIND_CIS: u8 = 1;
+const KIND_REQUEST: u8 = 2;
+
+/// Reusable per-repetition scratch of the streaming engine.
+///
+/// Owns every allocation `simulate_with` needs: scheduler-visible page
+/// states, dirty bits, crawl counters, the rolling-accuracy ring and the
+/// k-way merge heap + per-page cursors. `reset` clears without
+/// releasing capacity, so a workspace threaded through `R` repetitions
+/// of an `m`-page cell allocates O(m) once instead of O(E log E) work
+/// and O(E) memory per repetition.
+#[derive(Debug, Default)]
+pub struct SimWorkspace {
+    states: Vec<PageState>,
+    changed: Vec<bool>,
+    crawl_counts: Vec<u32>,
+    ring: Vec<bool>,
+    heap: BinaryHeap<Reverse<(OrdF64, u8, u32)>>,
+    /// Per-page cursors into (changes, cis, requests).
+    cursors: Vec<[usize; 3]>,
+}
+
+impl SimWorkspace {
+    /// Empty workspace; buffers grow on first use and are reused after.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, m: usize) {
+        self.states.clear();
+        self.states.resize(m, PageState { last_crawl: 0.0, n_cis: 0 });
+        self.changed.clear();
+        self.changed.resize(m, false);
+        self.crawl_counts.clear();
+        self.crawl_counts.resize(m, 0);
+        self.ring.clear();
+        self.heap.clear();
+        self.cursors.clear();
+        self.cursors.resize(m, [0, 0, 0]);
+    }
+}
+
+/// Push page `page`'s next pending event (earliest of its three streams,
+/// kind-rank tie-break) onto the merge heap, if any remains.
+#[inline]
+fn push_next(
+    heap: &mut BinaryHeap<Reverse<(OrdF64, u8, u32)>>,
+    p: &PageTrace,
+    cursors: &[usize; 3],
+    page: u32,
+) {
+    let mut best: Option<(f64, u8)> = None;
+    if let Some(&t) = p.changes.get(cursors[0]) {
+        best = Some((t, KIND_CHANGE));
+    }
+    if let Some(&t) = p.cis.get(cursors[1]) {
+        if best.map_or(true, |(bt, bk)| t < bt || (t == bt && KIND_CIS < bk)) {
+            best = Some((t, KIND_CIS));
+        }
+    }
+    if let Some(&t) = p.requests.get(cursors[2]) {
+        if best.map_or(true, |(bt, bk)| t < bt || (t == bt && KIND_REQUEST < bk)) {
+            best = Some((t, KIND_REQUEST));
+        }
+    }
+    if let Some((t, k)) = best {
+        heap.push(Reverse((OrdF64(t), k, page)));
+    }
 }
 
 /// Run one repetition of `scheduler` against `traces`.
+///
+/// Convenience wrapper over [`simulate_with`] with a throwaway
+/// workspace; repetition loops should allocate one [`SimWorkspace`] and
+/// reuse it.
 pub fn simulate(
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scheduler: &mut dyn Scheduler,
+) -> SimResult {
+    let mut ws = SimWorkspace::new();
+    simulate_with(&mut ws, traces, cfg, scheduler)
+}
+
+/// Run one repetition using caller-owned scratch (the streaming engine).
+pub fn simulate_with(
+    ws: &mut SimWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scheduler: &mut dyn Scheduler,
+) -> SimResult {
+    let m = traces.pages.len();
+    ws.reset(m);
+    for (i, p) in traces.pages.iter().enumerate() {
+        // the cursor merge relies on each per-page stream being
+        // time-sorted (the old engine sorted globally and did not care)
+        debug_assert!(
+            p.changes.windows(2).all(|w| w[0] <= w[1])
+                && p.cis.windows(2).all(|w| w[0] <= w[1])
+                && p.requests.windows(2).all(|w| w[0] <= w[1]),
+            "page {i}: per-page event streams must be sorted by time"
+        );
+        push_next(&mut ws.heap, p, &ws.cursors[i], i as u32);
+    }
+
+    let mut fresh_hits = 0u64;
+    let mut requests = 0u64;
+    let mut ticks = 0u64;
+    let mut timeline = Vec::new();
+    // rolling window of request freshness bits
+    let window = cfg.timeline_window.unwrap_or(0);
+    let mut ring_pos = 0usize;
+    let mut ring_fresh = 0usize;
+
+    let segs = &cfg.bandwidth.segments;
+    let mut seg = 0usize; // monotone segment cursor (no rescan per tick)
+    let mut t = 0.0f64;
+    loop {
+        while seg + 1 < segs.len() && segs[seg + 1].0 <= t {
+            seg += 1;
+        }
+        let r = segs[seg].1;
+        let next_tick = t + 1.0 / r;
+        if next_tick > cfg.horizon {
+            break;
+        }
+        // apply events up to (and including) the tick time
+        while let Some(&Reverse((OrdF64(et), kind, page))) = ws.heap.peek() {
+            if et > next_tick {
+                break;
+            }
+            ws.heap.pop();
+            let i = page as usize;
+            match kind {
+                KIND_CHANGE => {
+                    ws.changed[i] = true;
+                    ws.cursors[i][0] += 1;
+                }
+                KIND_REQUEST => {
+                    requests += 1;
+                    let fresh = !ws.changed[i];
+                    if fresh {
+                        fresh_hits += 1;
+                    }
+                    if window > 0 {
+                        if ws.ring.len() < window {
+                            ws.ring.push(fresh);
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                        } else {
+                            if ws.ring[ring_pos] {
+                                ring_fresh -= 1;
+                            }
+                            ws.ring[ring_pos] = fresh;
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                            ring_pos = (ring_pos + 1) % window;
+                        }
+                    }
+                    ws.cursors[i][2] += 1;
+                }
+                _ => {
+                    // KIND_CIS
+                    let keep = match cfg.cis_discard_window {
+                        Some(w) => et - ws.states[i].last_crawl >= w,
+                        None => true,
+                    };
+                    if keep {
+                        ws.states[i].n_cis = ws.states[i].n_cis.saturating_add(1);
+                        scheduler.on_cis(i, et, &ws.states);
+                    }
+                    ws.cursors[i][1] += 1;
+                }
+            }
+            push_next(&mut ws.heap, &traces.pages[i], &ws.cursors[i], page);
+        }
+        // crawl at the tick
+        t = next_tick;
+        ticks += 1;
+        if let Some(i) = scheduler.select(t, &ws.states) {
+            debug_assert!(i < m);
+            ws.changed[i] = false;
+            ws.states[i] = PageState { last_crawl: t, n_cis: 0 };
+            ws.crawl_counts[i] += 1;
+            scheduler.on_crawl(i, t, &ws.states);
+        }
+        if window > 0 && !ws.ring.is_empty() {
+            timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
+        }
+    }
+    // drain remaining request/change events after the final tick
+    while let Some(Reverse((OrdF64(_), kind, page))) = ws.heap.pop() {
+        let i = page as usize;
+        match kind {
+            KIND_CHANGE => {
+                ws.changed[i] = true;
+                ws.cursors[i][0] += 1;
+            }
+            KIND_REQUEST => {
+                requests += 1;
+                if !ws.changed[i] {
+                    fresh_hits += 1;
+                }
+                ws.cursors[i][2] += 1;
+            }
+            _ => {
+                ws.cursors[i][1] += 1;
+            }
+        }
+        push_next(&mut ws.heap, &traces.pages[i], &ws.cursors[i], page);
+    }
+
+    SimResult {
+        accuracy: if requests > 0 { fresh_hits as f64 / requests as f64 } else { f64::NAN },
+        requests,
+        fresh_hits,
+        crawl_counts: ws.crawl_counts.clone(),
+        ticks,
+        timeline,
+    }
+}
+
+/// Straightforward reference engine: materialize the merged, time-sorted
+/// event list (stable total order `(time, kind, page)`) and replay it.
+///
+/// This is the pre-change implementation, kept as (a) the parity oracle
+/// the streaming engine is tested bit-identical against and (b) the
+/// baseline lane of `benches/perf.rs`.
+pub fn simulate_reference(
     traces: &EventTraces,
     cfg: &SimConfig,
     scheduler: &mut dyn Scheduler,
 ) -> SimResult {
     let m = traces.pages.len();
     // Build the merged, time-sorted event list once.
-    let mut events: Vec<(f64, EventKind, u32)> = Vec::new();
+    let mut events: Vec<(f64, u8, u32)> = Vec::new();
     for (i, p) in traces.pages.iter().enumerate() {
-        events.extend(p.changes.iter().map(|&t| (t, EventKind::Change, i as u32)));
-        events.extend(p.cis.iter().map(|&t| (t, EventKind::Cis, i as u32)));
-        events.extend(p.requests.iter().map(|&t| (t, EventKind::Request, i as u32)));
+        events.extend(p.changes.iter().map(|&t| (t, KIND_CHANGE, i as u32)));
+        events.extend(p.cis.iter().map(|&t| (t, KIND_CIS, i as u32)));
+        events.extend(p.requests.iter().map(|&t| (t, KIND_REQUEST, i as u32)));
     }
-    events.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // the key is a total order, so an unstable sort is equivalent — and
+    // keeps this baseline's cost honest vs the true pre-change engine
+    events.sort_unstable_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
 
     let mut states = vec![PageState { last_crawl: 0.0, n_cis: 0 }; m];
     let mut changed = vec![false; m];
@@ -148,7 +406,6 @@ pub fn simulate(
     let mut requests = 0u64;
     let mut ticks = 0u64;
     let mut timeline = Vec::new();
-    // rolling window of request freshness bits
     let window = cfg.timeline_window.unwrap_or(0);
     let mut ring: Vec<bool> = Vec::with_capacity(window);
     let mut ring_pos = 0usize;
@@ -162,13 +419,12 @@ pub fn simulate(
         if next_tick > cfg.horizon {
             break;
         }
-        // apply events up to (and including) the tick time
         while ev < events.len() && events[ev].0 <= next_tick {
             let (et, kind, page) = events[ev];
             let i = page as usize;
             match kind {
-                EventKind::Change => changed[i] = true,
-                EventKind::Request => {
+                KIND_CHANGE => changed[i] = true,
+                KIND_REQUEST => {
                     requests += 1;
                     let fresh = !changed[i];
                     if fresh {
@@ -192,7 +448,7 @@ pub fn simulate(
                         }
                     }
                 }
-                EventKind::Cis => {
+                _ => {
                     let keep = match cfg.cis_discard_window {
                         Some(w) => et - states[i].last_crawl >= w,
                         None => true,
@@ -205,7 +461,6 @@ pub fn simulate(
             }
             ev += 1;
         }
-        // crawl at the tick
         t = next_tick;
         ticks += 1;
         if let Some(i) = scheduler.select(t, &states) {
@@ -219,15 +474,14 @@ pub fn simulate(
             timeline.push((t, ring_fresh as f64 / ring.len() as f64));
         }
     }
-    // drain remaining request events after the final tick
     while ev < events.len() {
         let (_, kind, page) = events[ev];
-        if kind == EventKind::Request {
+        if kind == KIND_REQUEST {
             requests += 1;
             if !changed[page as usize] {
                 fresh_hits += 1;
             }
-        } else if kind == EventKind::Change {
+        } else if kind == KIND_CHANGE {
             changed[page as usize] = true;
         }
         ev += 1;
@@ -246,7 +500,9 @@ pub fn simulate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::events::PageTrace;
+    use crate::params::PageParams;
+    use crate::rngkit::Rng;
+    use crate::sim::events::{generate_traces, CisDelay};
 
     /// Round-robin scheduler for engine-level tests.
     struct RoundRobin {
@@ -361,6 +617,20 @@ mod tests {
     }
 
     #[test]
+    fn rate_at_piecewise_constant_semantics() {
+        let s = BandwidthSchedule { segments: vec![(0.0, 1.0), (5.0, 10.0), (8.0, 2.0)] };
+        // before / at / inside / boundary-inclusive / past-the-end
+        assert_eq!(s.rate_at(-1.0), 1.0); // clamps to the first segment
+        assert_eq!(s.rate_at(0.0), 1.0);
+        assert_eq!(s.rate_at(4.999), 1.0);
+        assert_eq!(s.rate_at(5.0), 10.0); // boundary belongs to the new segment
+        assert_eq!(s.rate_at(7.9), 10.0);
+        assert_eq!(s.rate_at(8.0), 2.0);
+        assert_eq!(s.rate_at(1e9), 2.0);
+        assert_eq!(BandwidthSchedule::constant(3.0).rate_at(42.0), 3.0);
+    }
+
+    #[test]
     fn timeline_rolls_over_requests() {
         let tr = traces_from(
             vec![PageTrace {
@@ -390,5 +660,142 @@ mod tests {
         let mut s = RoundRobin { m: 1, next: 0 };
         let res = simulate(&tr, &cfg, &mut s);
         assert_eq!(res.accuracy, 1.0);
+    }
+
+    // ---- streaming vs reference parity ----
+
+    /// Deterministic state-dependent scheduler: exercises tau_elap and
+    /// n_cis so any divergence in event application order or state
+    /// bookkeeping cascades into different crawl choices.
+    struct StateScore;
+    impl Scheduler for StateScore {
+        fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+            let mut best = f64::NEG_INFINITY;
+            let mut arg = None;
+            for (i, s) in states.iter().enumerate() {
+                let v = s.tau_elap(t) + 3.7 * s.n_cis as f64;
+                if v > best {
+                    best = v;
+                    arg = Some(i);
+                }
+            }
+            arg
+        }
+    }
+
+    fn random_traces(seed: u64, m: usize, horizon: f64, delay: CisDelay) -> EventTraces {
+        let mut rng = Rng::new(seed);
+        let pages: Vec<PageParams> = (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.5),
+                mu: rng.range(0.05, 1.5),
+                lam: rng.f64(),
+                nu: rng.range(0.0, 0.8),
+            })
+            .collect();
+        let mut trng = Rng::new(seed ^ 0xDEAD);
+        generate_traces(&pages, horizon, delay, &mut trng)
+    }
+
+    fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{ctx}: accuracy");
+        assert_eq!(a.requests, b.requests, "{ctx}: requests");
+        assert_eq!(a.fresh_hits, b.fresh_hits, "{ctx}: fresh_hits");
+        assert_eq!(a.crawl_counts, b.crawl_counts, "{ctx}: crawl_counts");
+        assert_eq!(a.ticks, b.ticks, "{ctx}: ticks");
+        assert_eq!(a.timeline.len(), b.timeline.len(), "{ctx}: timeline length");
+        for (k, (x, y)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: timeline[{k}].t");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: timeline[{k}].acc");
+        }
+    }
+
+    #[test]
+    fn streaming_matches_reference_on_randomized_traces() {
+        for seed in 0..6u64 {
+            let horizon = 40.0;
+            let delay = if seed % 2 == 0 {
+                CisDelay::None
+            } else {
+                CisDelay::Exponential { mean: 0.3 }
+            };
+            let tr = random_traces(seed, 25, horizon, delay);
+            let mut cfg = SimConfig::new(4.0, horizon);
+            if seed % 3 == 0 {
+                cfg.cis_discard_window = Some(0.15);
+            }
+            cfg.timeline_window = Some(16);
+            let a = simulate(&tr, &cfg, &mut StateScore);
+            let b = simulate_reference(&tr, &cfg, &mut StateScore);
+            assert_bit_identical(&a, &b, &format!("seed {seed}"));
+        }
+    }
+
+    #[test]
+    fn streaming_matches_reference_under_bandwidth_schedule() {
+        let tr = random_traces(77, 30, 30.0, CisDelay::None);
+        let cfg = SimConfig {
+            bandwidth: BandwidthSchedule { segments: vec![(0.0, 3.0), (10.0, 9.0), (20.0, 2.0)] },
+            horizon: 30.0,
+            cis_discard_window: Some(0.1),
+            timeline_window: Some(8),
+        };
+        let a = simulate(&tr, &cfg, &mut StateScore);
+        let b = simulate_reference(&tr, &cfg, &mut StateScore);
+        assert_bit_identical(&a, &b, "schedule");
+    }
+
+    #[test]
+    fn streaming_matches_reference_with_lazy_scheduler() {
+        use crate::coordinator::lazy::LazyGreedyScheduler;
+        use crate::policy::PolicyKind;
+        let mut rng = Rng::new(5);
+        let pages: Vec<PageParams> = (0..60)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.1, 0.6),
+            })
+            .collect();
+        let mut trng = Rng::new(6);
+        let tr = generate_traces(&pages, 60.0, CisDelay::None, &mut trng);
+        let cfg = SimConfig::new(5.0, 60.0);
+        let mut s1 = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &pages);
+        let mut s2 = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &pages);
+        let a = simulate(&tr, &cfg, &mut s1);
+        let b = simulate_reference(&tr, &cfg, &mut s2);
+        assert_bit_identical(&a, &b, "lazy scheduler");
+    }
+
+    #[test]
+    fn workspace_reuse_is_equivalent_to_fresh() {
+        let mut ws = SimWorkspace::new();
+        for seed in [1u64, 2, 3] {
+            // different sizes per rep: reset must fully re-dimension
+            let m = 10 + 7 * seed as usize;
+            let tr = random_traces(seed, m, 25.0, CisDelay::None);
+            let mut cfg = SimConfig::new(3.0, 25.0);
+            cfg.timeline_window = Some(12);
+            let reused = simulate_with(&mut ws, &tr, &cfg, &mut StateScore);
+            let fresh = simulate(&tr, &cfg, &mut StateScore);
+            assert_bit_identical(&reused, &fresh, &format!("reuse seed {seed}"));
+        }
+    }
+
+    #[test]
+    fn simultaneous_events_apply_change_before_request() {
+        // change and request at the exact same time: the request must see
+        // stale content in BOTH engines (shared (time, kind, page) order)
+        let tr = traces_from(
+            vec![PageTrace { changes: vec![1.0], cis: vec![1.0], requests: vec![1.0] }],
+            2.0,
+        );
+        let cfg = SimConfig::new(0.25, 2.0); // no tick before t=2 -> no crawl before events
+        let a = simulate(&tr, &cfg, &mut StateScore);
+        let b = simulate_reference(&tr, &cfg, &mut StateScore);
+        assert_eq!(a.requests, 1);
+        assert_eq!(a.fresh_hits, 0);
+        assert_bit_identical(&a, &b, "simultaneous");
     }
 }

@@ -6,10 +6,18 @@
 //! (supporting the Appendix-D bandwidth schedule changes) and accounts
 //! freshness per request; [`metrics`] aggregates accuracy and empirical
 //! crawl rates across repetitions.
+//!
+//! The engine is a streaming k-way merge over the per-page traces with
+//! all scratch in a reusable [`SimWorkspace`]; [`simulate_reference`]
+//! keeps the merged-sort implementation as the parity oracle and bench
+//! baseline.
 
 pub mod engine;
 pub mod events;
 pub mod metrics;
 
-pub use engine::{PageState, Scheduler, SimConfig, SimResult, simulate};
+pub use engine::{
+    PageState, Scheduler, SimConfig, SimResult, SimWorkspace, simulate, simulate_reference,
+    simulate_with,
+};
 pub use events::{CisDelay, EventTraces, generate_traces};

@@ -1,0 +1,61 @@
+//! Small shared utilities.
+
+/// Total-ordered `f64` wrapper for heap/sort keys.
+///
+/// Comparison falls back to `Equal` on NaN, which is safe for every
+/// in-tree use: heap keys are event times, wake times and crawl values,
+/// all of which are NaN-free by construction (the lazy scheduler
+/// `debug_assert`s it; event traces come from finite samplers). Shared
+/// by the §5.2 lazy scheduler's wake/hot heaps and the streaming sim
+/// engine's k-way merge heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn orders_like_f64() {
+        assert!(OrdF64(1.0) < OrdF64(2.0));
+        assert!(OrdF64(-1.0) < OrdF64(0.0));
+        assert_eq!(OrdF64(3.5), OrdF64(3.5));
+        assert!(OrdF64(f64::NEG_INFINITY) < OrdF64(f64::INFINITY));
+    }
+
+    #[test]
+    fn works_as_min_heap_key() {
+        let mut h = BinaryHeap::new();
+        for x in [3.0, 1.0, 2.0] {
+            h.push(Reverse((OrdF64(x), 0u8)));
+        }
+        let order: Vec<f64> = std::iter::from_fn(|| h.pop().map(|Reverse((OrdF64(x), _))| x))
+            .collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn tuple_tie_break_by_second_field() {
+        let mut h = BinaryHeap::new();
+        h.push(Reverse((OrdF64(1.0), 2u8)));
+        h.push(Reverse((OrdF64(1.0), 1u8)));
+        let Reverse((_, k)) = h.pop().unwrap();
+        assert_eq!(k, 1);
+    }
+}
