@@ -6,12 +6,12 @@
 //! cargo run --release --example bandwidth_adaptation
 //! ```
 
-use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
 use ncis_crawl::figures::common::ExperimentSpec;
 use ncis_crawl::policy::PolicyKind;
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::sim::engine::{BandwidthSchedule, SimConfig};
 use ncis_crawl::sim::{generate_traces, simulate, CisDelay};
+use ncis_crawl::{CrawlerBuilder, Strategy};
 
 fn main() -> ncis_crawl::Result<()> {
     let spec = ExperimentSpec::section6(1000, 1);
@@ -29,8 +29,12 @@ fn main() -> ncis_crawl::Result<()> {
     };
     let mut trng = Rng::new(9);
     let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
-    let mut sched = GreedyScheduler::new(PolicyKind::Greedy, &inst.pages, ValueBackend::Native);
-    let res = simulate(&traces, &cfg, &mut sched);
+    let mut sched = CrawlerBuilder::new()
+        .policy(PolicyKind::Greedy)
+        .strategy(Strategy::Exact)
+        .pages(&inst.pages)
+        .build()?;
+    let res = simulate(&traces, &cfg, sched.as_mut());
 
     println!("bandwidth schedule: 100 -> 150 @ t=133 -> 100 @ t=266  (m=1000)");
     println!("rolling accuracy over the last 1000 requests:\n");

@@ -5,12 +5,12 @@
 //! cargo run --release --example multisource_politeness
 //! ```
 
-use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
 use ncis_crawl::coordinator::hosts::{zipf_host_sizes, HostMap, PoliteScheduler};
 use ncis_crawl::policy::multisource::{CisSource, MultiSourcePage};
 use ncis_crawl::policy::PolicyKind;
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
+use ncis_crawl::{CrawlerBuilder, Strategy};
 
 fn main() -> ncis_crawl::Result<()> {
     // --- multi-source CIS: a sitemap (precise, low recall) + a CDN ping
@@ -51,11 +51,15 @@ fn main() -> ncis_crawl::Result<()> {
     let mut trng = Rng::new(7);
     let traces = generate_traces(&pages, horizon, CisDelay::None, &mut trng);
 
-    let mut plain = GreedyScheduler::new(PolicyKind::GreedyNcis, &pages, ValueBackend::Native);
-    let acc_plain = simulate(&traces, &cfg, &mut plain).accuracy;
+    let crawler = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Exact)
+        .pages(&pages);
+    let mut plain = crawler.build()?;
+    let acc_plain = simulate(&traces, &cfg, plain.as_mut()).accuracy;
     for min_interval in [0.0, 0.2, 1.0] {
         let map = HostMap::from_sizes(&sizes, min_interval);
-        let inner = GreedyScheduler::new(PolicyKind::GreedyNcis, &pages, ValueBackend::Native);
+        let inner = crawler.build()?;
         let mut polite = PoliteScheduler::new(inner, map);
         let res = simulate(&traces, &cfg, &mut polite);
         println!(

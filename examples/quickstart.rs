@@ -6,12 +6,13 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
+use ncis_crawl::coordinator::crawler::ValueBackend;
 use ncis_crawl::params::{Instance, PageParams};
 use ncis_crawl::policy::PolicyKind;
 use ncis_crawl::rngkit::{self, Rng};
 use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
 use ncis_crawl::solver;
+use ncis_crawl::{CrawlerBuilder, Strategy};
 
 fn main() -> ncis_crawl::Result<()> {
     // 1. A problem instance: 200 pages, Δ, μ ~ U[0,1], noisy CIS with
@@ -35,13 +36,20 @@ fn main() -> ncis_crawl::Result<()> {
     let horizon = 500.0;
     let cfg = SimConfig::new(inst.bandwidth, horizon);
     for kind in [PolicyKind::Greedy, PolicyKind::GreedyCis, PolicyKind::GreedyNcis] {
+        // every strategy/backend combination is built through the same
+        // facade; swap Strategy::Lazy or a PJRT backend freely
+        let mut sched = CrawlerBuilder::new()
+            .policy(kind)
+            .strategy(Strategy::Exact)
+            .backend(ValueBackend::Native)
+            .pages(&inst.pages)
+            .build()?;
         let mut total = 0.0;
         let reps = 5;
         for rep in 0..reps {
             let mut trng = Rng::new(1000 + rep);
             let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
-            let mut sched = GreedyScheduler::new(kind, &inst.pages, ValueBackend::Native);
-            total += simulate(&traces, &cfg, &mut sched).accuracy;
+            total += simulate(&traces, &cfg, sched.as_mut()).accuracy;
         }
         println!("{:<14} accuracy: {:.4}", kind.name(), total / reps as f64);
     }

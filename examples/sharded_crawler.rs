@@ -12,6 +12,7 @@ use ncis_crawl::params::DerivedParams;
 use ncis_crawl::policy::PolicyKind;
 use ncis_crawl::rngkit::{self, Rng};
 use ncis_crawl::runtime::{PjrtEngine, ValueBatch};
+use ncis_crawl::{CrawlerBuilder, Strategy};
 
 fn main() -> ncis_crawl::Result<()> {
     let m = 20_000;
@@ -32,9 +33,14 @@ fn main() -> ncis_crawl::Result<()> {
     cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     println!("pages={m} cis_events={} horizon={horizon}s R={bandwidth}/s", cis.len());
 
+    // per-shard schedulers are stamped from one builder template: swap
+    // the strategy or backend here and every shard follows
+    let scheduler = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy);
     for shards in [1usize, 2, 4, 8] {
         let cfg = PipelineConfig { shards, queue_depth: 128, bandwidth, horizon };
-        let report = run_pipeline(&inst.pages, PolicyKind::GreedyNcis, &cis, &cfg);
+        let report = run_pipeline(&inst.pages, &scheduler, &cis, &cfg)?;
         println!(
             "shards={shards}: crawls={} stalls={} wall={:?} ({:.0} crawls/s real time)",
             report.total_crawls,

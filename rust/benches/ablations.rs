@@ -1,4 +1,4 @@
-//! Ablation benches for the design choices DESIGN.md §6 calls out:
+//! Ablation benches for the design choices DESIGN.md calls out:
 //!   (a) lazy-scheduler margin sweep (accuracy vs evaluations),
 //!   (b) approximation level J (accuracy vs per-eval cost),
 //!   (c) shard count (accuracy loss from the 1/N bandwidth split),
@@ -7,7 +7,6 @@
 //! `cargo bench --bench ablations` — series land in target/figures/.
 
 use ncis_crawl::benchkit::FigureOutput;
-use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
 use ncis_crawl::coordinator::hosts::{HostMap, PoliteScheduler};
 use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
 use ncis_crawl::coordinator::shard::{run_sharded, ShardPlan};
@@ -15,6 +14,7 @@ use ncis_crawl::figures::common::ExperimentSpec;
 use ncis_crawl::policy::PolicyKind;
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig};
+use ncis_crawl::{CrawlerBuilder, Strategy};
 
 fn main() {
     let spec = ExperimentSpec::section6(800, 1).with_partial_cis().with_false_positives();
@@ -26,15 +26,21 @@ fn main() {
     let mut trng = Rng::new(99);
     let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
 
-    // (a) margin sweep
+    // (a) margin sweep (concrete type: the eval counters are diagnostics
+    // the trait object does not expose)
     let mut fig = FigureOutput::new("ablation_lazy_margin", &["margin", "accuracy", "evals_per_tick"]);
     for &margin in &[0.3, 0.5, 0.7, 0.9, 1.0] {
         let mut lz = LazyGreedyScheduler::with_margin(PolicyKind::GreedyNcis, &inst.pages, margin);
         let res = simulate(&traces, &cfg, &mut lz);
         fig.rowf(&[margin, res.accuracy, lz.evals as f64 / lz.ticks as f64]);
     }
-    let mut ex = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
-    let res = simulate(&traces, &cfg, &mut ex);
+    let mut ex = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Exact)
+        .pages(&inst.pages)
+        .build()
+        .unwrap();
+    let res = simulate(&traces, &cfg, ex.as_mut());
     fig.rowf(&[f64::NAN, res.accuracy, inst.pages.len() as f64]); // exact reference
     fig.finish().unwrap();
 
@@ -42,8 +48,13 @@ fn main() {
     let mut fig = FigureOutput::new("ablation_terms", &["J", "accuracy"]);
     for &j in &[1u32, 2, 4, 8, 64] {
         let kind = if j >= 64 { PolicyKind::GreedyNcis } else { PolicyKind::NcisApprox(j) };
-        let mut s = GreedyScheduler::new(kind, &inst.pages, ValueBackend::Native);
-        let res = simulate(&traces, &cfg, &mut s);
+        let mut s = CrawlerBuilder::new()
+            .policy(kind)
+            .strategy(Strategy::Exact)
+            .pages(&inst.pages)
+            .build()
+            .unwrap();
+        let res = simulate(&traces, &cfg, s.as_mut());
         fig.rowf(&[j as f64, res.accuracy]);
     }
     fig.finish().unwrap();
@@ -67,7 +78,12 @@ fn main() {
     let mut fig = FigureOutput::new("ablation_politeness", &["min_interval", "accuracy", "vetoes"]);
     for &w in &[0.0, 0.05, 0.2, 0.5, 1.0] {
         let map = HostMap::round_robin(inst.pages.len(), 20, w);
-        let inner = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+        let inner = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Exact)
+            .pages(&inst.pages)
+            .build()
+            .unwrap();
         let mut polite = PoliteScheduler::new(inner, map);
         let res = simulate(&traces, &cfg, &mut polite);
         fig.rowf(&[w, res.accuracy, polite.vetoes as f64]);

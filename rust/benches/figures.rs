@@ -1,4 +1,4 @@
-//! Figure-regeneration bench: one entry per paper figure (DESIGN.md §6).
+//! Figure-regeneration bench: one entry per paper figure (DESIGN.md).
 //!
 //! `cargo bench --bench figures` regenerates every table/figure series
 //! into `target/figures/*.csv`. Repetition counts default to a

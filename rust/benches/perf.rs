@@ -16,7 +16,6 @@
 use std::time::Instant;
 
 use ncis_crawl::benchkit::{measure, report, BenchJson};
-use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
 use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
 use ncis_crawl::figures::common::{
     default_rep_threads, make_scheduler, run_cell_with_threads, ExperimentSpec, PolicyUnderTest,
@@ -27,6 +26,7 @@ use ncis_crawl::rngkit::Rng;
 use ncis_crawl::runtime::{NativeEngine, PjrtEngine, ValueBatch};
 use ncis_crawl::sim::metrics::RepAccumulator;
 use ncis_crawl::sim::{generate_traces, simulate, simulate_reference, CisDelay, SimConfig};
+use ncis_crawl::{CrawlerBuilder, Strategy};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -132,11 +132,15 @@ fn bench_schedulers(json: &mut BenchJson) {
     let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
     let cfg = SimConfig::new(r, horizon);
 
+    let exact_builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Exact)
+        .pages(&inst.pages);
+    let lazy_builder = exact_builder.clone().strategy(Strategy::Lazy);
     let m_exact = measure(
         || {
-            let mut s =
-                GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
-            std::hint::black_box(simulate(&traces, &cfg, &mut s));
+            let mut s = exact_builder.build().unwrap();
+            std::hint::black_box(simulate(&traces, &cfg, s.as_mut()));
         },
         3,
         0.2,
@@ -144,8 +148,8 @@ fn bench_schedulers(json: &mut BenchJson) {
     report("simulate 2000 ticks, exact argmax", &m_exact);
     let m_lazy = measure(
         || {
-            let mut s = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages);
-            std::hint::black_box(simulate(&traces, &cfg, &mut s));
+            let mut s = lazy_builder.build().unwrap();
+            std::hint::black_box(simulate(&traces, &cfg, s.as_mut()));
         },
         3,
         0.2,
@@ -189,10 +193,14 @@ fn bench_end_to_end(json: &mut BenchJson) {
     let (c, s_, r_) = traces.counts();
     let events = (c + s_ + r_) as f64;
     let cfg = SimConfig::new(100.0, 100.0);
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
     let m = measure(
         || {
-            let mut s = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages);
-            std::hint::black_box(simulate(&traces, &cfg, &mut s));
+            let mut s = builder.build().unwrap();
+            std::hint::black_box(simulate(&traces, &cfg, s.as_mut()));
         },
         3,
         0.3,

@@ -4,10 +4,11 @@
 use std::path::Path;
 
 use crate::cli::Args;
+use crate::coordinator::builder::{CrawlerBuilder, Strategy};
 use crate::coordinator::pipeline::{run_pipeline, PipelineConfig};
 use crate::error::{Error, Result};
-use crate::figures::common::{run_cell, ExperimentSpec, PolicyUnderTest};
-use crate::policy::PolicyKind;
+use crate::figures::common::{run_cell, ExperimentSpec};
+use crate::policy::{parse_policy, PolicyKind};
 use crate::rngkit::Rng;
 use crate::solver;
 
@@ -31,37 +32,6 @@ commands:
 policies: GREEDY | GREEDY-CIS | GREEDY-NCIS | G-NCIS-APPROX-1 |
           G-NCIS-APPROX-2 | GREEDY-CIS+ | LDS  (suffix -LAZY for §5.2)
 ";
-
-/// Parse a policy name (as printed in the paper's plots).
-pub fn parse_policy(name: &str) -> Result<PolicyUnderTest> {
-    let (base, lazy) = match name.strip_suffix("-LAZY") {
-        Some(b) => (b, true),
-        None => (name, false),
-    };
-    let kind = match base {
-        "GREEDY" => PolicyKind::Greedy,
-        "GREEDY-CIS" => PolicyKind::GreedyCis,
-        "GREEDY-NCIS" => PolicyKind::GreedyNcis,
-        "GREEDY-CIS+" => PolicyKind::GreedyCisPlus,
-        "LDS" => {
-            if lazy {
-                return Err(Error::Usage("LDS has no lazy variant".into()));
-            }
-            return Ok(PolicyUnderTest::Lds);
-        }
-        other => {
-            if let Some(j) = other.strip_prefix("G-NCIS-APPROX-") {
-                let j: u32 = j
-                    .parse()
-                    .map_err(|_| Error::Usage(format!("bad approximation level in {other}")))?;
-                PolicyKind::NcisApprox(j)
-            } else {
-                return Err(Error::Usage(format!("unknown policy `{other}`")));
-            }
-        }
-    };
-    Ok(if lazy { PolicyUnderTest::Lazy(kind) } else { PolicyUnderTest::Greedy(kind) })
-}
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let mut spec = ExperimentSpec::section6(
@@ -161,7 +131,11 @@ fn cmd_serve_shards(args: &Args) -> Result<()> {
     }
     cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     let cfg = PipelineConfig { shards, queue_depth: 256, bandwidth: r, horizon };
-    let report = run_pipeline(&inst.pages, PolicyKind::GreedyNcis, &cis, &cfg);
+    // per-shard schedulers are stamped from this template
+    let scheduler = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy);
+    let report = run_pipeline(&inst.pages, &scheduler, &cis, &cfg)?;
     println!(
         "shards={} crawls={} cis={} backpressure_stalls={} wall={:?}",
         shards, report.total_crawls, report.cis_applied, report.backpressure_stalls, report.wall
@@ -271,29 +245,5 @@ pub fn run_cli(args: &Args) -> Result<()> {
             println!("{USAGE}");
             Ok(())
         }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn parse_all_policy_names() {
-        for name in [
-            "GREEDY",
-            "GREEDY-CIS",
-            "GREEDY-NCIS",
-            "G-NCIS-APPROX-1",
-            "G-NCIS-APPROX-2",
-            "GREEDY-CIS+",
-            "LDS",
-            "GREEDY-NCIS-LAZY",
-        ] {
-            parse_policy(name).unwrap();
-        }
-        assert!(parse_policy("NOPE").is_err());
-        assert!(parse_policy("G-NCIS-APPROX-x").is_err());
-        assert!(parse_policy("LDS-LAZY").is_err());
     }
 }

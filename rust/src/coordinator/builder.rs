@@ -1,0 +1,356 @@
+//! One entry point for constructing crawl schedulers.
+//!
+//! [`CrawlerBuilder`] wires any policy × strategy × value-backend
+//! combination behind the event-driven
+//! [`CrawlScheduler`](crate::sched::CrawlScheduler) trait:
+//!
+//! ```
+//! use ncis_crawl::{CrawlScheduler, CrawlerBuilder, PolicyKind, Strategy};
+//! use ncis_crawl::coordinator::crawler::ValueBackend;
+//! # let pages = vec![ncis_crawl::PageParams { delta: 0.5, mu: 0.5, lam: 0.3, nu: 0.1 }];
+//!
+//! let mut crawler = CrawlerBuilder::new()
+//!     .policy(PolicyKind::GreedyNcis)
+//!     .strategy(Strategy::Lazy)
+//!     .backend(ValueBackend::Native)
+//!     .pages(&pages)
+//!     .build()
+//!     .unwrap();
+//! # let _ = crawler.select(1.0);
+//! ```
+//!
+//! Every scheduling strategy — exact argmax, §5.2 lazy, N-way sharded —
+//! accepts either backend (native f64 or the batched PJRT engine), so a
+//! backend swap never forces a strategy change and vice versa. The
+//! builder is `Clone`: drivers that construct one scheduler per shard
+//! or per repetition (`figures::common::run_cell`, the streaming
+//! pipeline) keep a pages-less template and stamp `pages(..)` per use.
+
+use crate::coordinator::crawler::{GreedyScheduler, LdsAdapter, ValueBackend};
+use crate::coordinator::lazy::{LazyGreedyScheduler, DEFAULT_MARGIN};
+use crate::coordinator::shard::ShardedScheduler;
+use crate::error::Error;
+use crate::params::PageParams;
+use crate::policy::{PolicyKind, PolicyUnderTest};
+use crate::sched::CrawlScheduler;
+use crate::Result;
+
+/// Which scheduling strategy drives the policy's value function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// Algorithm 1 with an exact argmax over all pages at every tick.
+    Exact,
+    /// The §5.2 lazy/tiered scheduler (default hot/cold margin).
+    Lazy,
+    /// Lazy with an explicit hot/cold margin in (0, 1].
+    LazyWithMargin(f64),
+    /// N-way sharded lazy scheduling: ticks fan round-robin, each shard
+    /// sees 1/N of the bandwidth (the single-process analogue of the
+    /// threaded pipeline).
+    Sharded {
+        /// Number of shards.
+        shards: usize,
+    },
+    /// Low-discrepancy schedule over precomputed continuous rates
+    /// (requires [`CrawlerBuilder::lds_rates`]).
+    Lds,
+}
+
+/// Builder facade over every scheduler in the coordinator layer.
+#[derive(Debug, Clone)]
+pub struct CrawlerBuilder {
+    policy: PolicyKind,
+    strategy: Strategy,
+    backend: ValueBackend,
+    pages: Vec<PageParams>,
+    lds_rates: Vec<f64>,
+}
+
+/// Shared construction body of [`CrawlerBuilder::build`] and
+/// [`CrawlerBuilder::build_local`]: each match arm's box coerces to the
+/// caller's return type (`+ Send` or not), keeping the two entry points
+/// in lockstep without duplicating validation.
+macro_rules! construct_scheduler {
+    ($b:expr) => {{
+        let b = $b;
+        if b.pages.is_empty() && !matches!(b.strategy, Strategy::Lds) {
+            return Err(Error::Usage("CrawlerBuilder: pages(..) must be non-empty".into()));
+        }
+        Ok(match b.strategy {
+            Strategy::Exact => {
+                Box::new(GreedyScheduler::new(b.policy, &b.pages, b.backend.clone()))
+            }
+            Strategy::Lazy => Box::new(LazyGreedyScheduler::with_backend(
+                b.policy,
+                &b.pages,
+                DEFAULT_MARGIN,
+                b.backend.clone(),
+            )),
+            Strategy::LazyWithMargin(margin) => {
+                if !(margin > 0.0 && margin <= 1.0) {
+                    return Err(Error::Usage(format!(
+                        "CrawlerBuilder: lazy margin must be in (0, 1], got {margin}"
+                    )));
+                }
+                Box::new(LazyGreedyScheduler::with_backend(
+                    b.policy,
+                    &b.pages,
+                    margin,
+                    b.backend.clone(),
+                ))
+            }
+            Strategy::Sharded { shards } => {
+                if shards == 0 {
+                    return Err(Error::Usage(
+                        "CrawlerBuilder: at least one shard required".into(),
+                    ));
+                }
+                Box::new(ShardedScheduler::new(b.policy, &b.pages, shards, b.backend.clone()))
+            }
+            Strategy::Lds => {
+                if b.lds_rates.is_empty() {
+                    return Err(Error::Usage(
+                        "CrawlerBuilder: Strategy::Lds requires lds_rates(..)".into(),
+                    ));
+                }
+                Box::new(LdsAdapter::new(&b.lds_rates))
+            }
+        })
+    }};
+}
+
+impl Default for CrawlerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CrawlerBuilder {
+    /// Defaults: GREEDY-NCIS policy, exact strategy, native backend.
+    pub fn new() -> Self {
+        Self {
+            policy: PolicyKind::GreedyNcis,
+            strategy: Strategy::Exact,
+            backend: ValueBackend::Native,
+            pages: Vec::new(),
+            lds_rates: Vec::new(),
+        }
+    }
+
+    /// Crawl-value policy (ignored by [`Strategy::Lds`]).
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Scheduling strategy.
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Value backend (native f64 or batched PJRT), honoured by every
+    /// strategy.
+    pub fn backend(mut self, backend: ValueBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Page population (raw parameters; importance should be normalized).
+    pub fn pages(mut self, pages: &[PageParams]) -> Self {
+        self.pages = pages.to_vec();
+        self
+    }
+
+    /// Continuous per-page rates for the LDS strategy.
+    pub fn lds_rates(mut self, rates: &[f64]) -> Self {
+        self.lds_rates = rates.to_vec();
+        self
+    }
+
+    /// Apply a [`PolicyUnderTest`] (policy + strategy in one value, as
+    /// parsed from the CLI / experiment configs).
+    pub fn policy_under_test(mut self, put: PolicyUnderTest) -> Self {
+        match put {
+            PolicyUnderTest::Greedy(kind) => {
+                self.policy = kind;
+                self.strategy = Strategy::Exact;
+            }
+            PolicyUnderTest::Lazy(kind) => {
+                self.policy = kind;
+                self.strategy = Strategy::Lazy;
+            }
+            PolicyUnderTest::Lds => {
+                self.strategy = Strategy::Lds;
+            }
+        }
+        self
+    }
+
+    /// Construct the scheduler as a `Send` trait object, so drivers can
+    /// ship it across threads (pipeline shard workers, rep workers).
+    ///
+    /// This requires the value backend to be `Send`. The native backend
+    /// and the default (stub) PJRT engine are; a vendored XLA client
+    /// that is not `Send` must be wrapped `Send` at vendoring time (see
+    /// EXPERIMENTS.md §PJRT) — single-thread drivers can then take
+    /// [`Self::build_local`] instead.
+    pub fn build(&self) -> Result<Box<dyn CrawlScheduler + Send>> {
+        construct_scheduler!(self)
+    }
+
+    /// [`Self::build`] without the `Send` bound — for single-thread
+    /// drivers whose backend engine cannot cross threads. Independent
+    /// construction path (not a coercion of `build`), so it stays
+    /// usable when `build` must be feature-gated away for a non-`Send`
+    /// engine.
+    pub fn build_local(&self) -> Result<Box<dyn CrawlScheduler>> {
+        construct_scheduler!(self)
+    }
+
+    /// Stamp a shard-local copy of this template over the members of
+    /// one shard: selects `pages[i]` for each member and — for an
+    /// [`Strategy::Lds`] template — the matching slice of its global
+    /// `lds_rates`, so per-shard scheduler indices stay local. An Lds
+    /// template whose rates don't cover every member is left rate-less
+    /// (its `build` then reports the misconfiguration as `Err`).
+    pub fn shard_template(&self, pages: &[PageParams], members: &[usize]) -> CrawlerBuilder {
+        let pages_s: Vec<PageParams> = members.iter().map(|&i| pages[i]).collect();
+        let rates_s: Vec<f64> = members
+            .iter()
+            .filter_map(|&i| self.lds_rates.get(i).copied())
+            .collect();
+        let mut stamped = self.clone().pages(&pages_s);
+        stamped.lds_rates =
+            if rates_s.len() == members.len() { rates_s } else { Vec::new() };
+        stamped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::Rng;
+    use crate::sim::{generate_traces, simulate, CisDelay, SimConfig};
+
+    fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.1, 0.6),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builds_every_strategy() {
+        let ps = pages(24, 1);
+        for (strategy, suffix) in [
+            (Strategy::Exact, ""),
+            (Strategy::Lazy, "-LAZY"),
+            (Strategy::LazyWithMargin(0.5), "-LAZY"),
+            (Strategy::Sharded { shards: 3 }, "-SHARDED3"),
+        ] {
+            let mut sched = CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(strategy)
+                .pages(&ps)
+                .build()
+                .unwrap();
+            assert_eq!(sched.name(), format!("GREEDY-NCIS{suffix}"));
+            let mut rng = Rng::new(2);
+            let traces = generate_traces(&ps, 20.0, CisDelay::None, &mut rng);
+            let cfg = SimConfig::new(4.0, 20.0);
+            let res = simulate(&traces, &cfg, sched.as_mut());
+            assert!((0.0..=1.0).contains(&res.accuracy), "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn builds_lds_from_rates() {
+        let rates = [2.0, 1.0, 1.0];
+        let mut sched =
+            CrawlerBuilder::new().strategy(Strategy::Lds).lds_rates(&rates).build().unwrap();
+        assert_eq!(sched.name(), "LDS");
+        assert!(sched.select(0.0).is_some());
+    }
+
+    #[test]
+    fn rejects_invalid_configurations() {
+        let ps = pages(4, 3);
+        assert!(CrawlerBuilder::new().build().is_err(), "no pages");
+        assert!(
+            CrawlerBuilder::new().strategy(Strategy::Lds).build().is_err(),
+            "LDS without rates"
+        );
+        assert!(
+            CrawlerBuilder::new()
+                .strategy(Strategy::Sharded { shards: 0 })
+                .pages(&ps)
+                .build()
+                .is_err(),
+            "zero shards"
+        );
+        assert!(
+            CrawlerBuilder::new()
+                .strategy(Strategy::LazyWithMargin(1.5))
+                .pages(&ps)
+                .build()
+                .is_err(),
+            "margin out of range"
+        );
+    }
+
+    #[test]
+    fn policy_under_test_maps_to_strategy() {
+        let ps = pages(10, 4);
+        let g = CrawlerBuilder::new()
+            .policy_under_test(PolicyUnderTest::Greedy(PolicyKind::Greedy))
+            .pages(&ps)
+            .build()
+            .unwrap();
+        assert_eq!(g.name(), "GREEDY");
+        let l = CrawlerBuilder::new()
+            .policy_under_test(PolicyUnderTest::Lazy(PolicyKind::GreedyCis))
+            .pages(&ps)
+            .build()
+            .unwrap();
+        assert_eq!(l.name(), "GREEDY-CIS-LAZY");
+        let d = CrawlerBuilder::new()
+            .policy_under_test(PolicyUnderTest::Lds)
+            .lds_rates(&[1.0, 1.0])
+            .build()
+            .unwrap();
+        assert_eq!(d.name(), "LDS");
+    }
+
+    #[test]
+    fn build_local_mirrors_build() {
+        let ps = pages(8, 7);
+        let mut local = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .pages(&ps)
+            .build_local()
+            .unwrap();
+        assert_eq!(local.name(), "GREEDY-NCIS-LAZY");
+        local.on_start(ps.len());
+        assert!(local.select(1.0).is_some());
+    }
+
+    #[test]
+    fn template_reuse_stamps_pages_per_build() {
+        // the pipeline idiom: one pages-less template, one build per shard
+        let template = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy);
+        let a = pages(6, 5);
+        let b = pages(9, 6);
+        let sa = template.clone().pages(&a).build().unwrap();
+        let sb = template.clone().pages(&b).build().unwrap();
+        assert_eq!(sa.name(), sb.name());
+    }
+}

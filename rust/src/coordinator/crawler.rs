@@ -1,14 +1,23 @@
 //! Exact discrete greedy crawler (Algorithm 1) and the LDS adapter.
+//!
+//! Both implement the event-driven [`CrawlScheduler`] API: the greedy
+//! crawler owns its per-page state in a [`PageTracker`] (updated from
+//! `on_cis`/`on_crawl`) and projects beliefs through a shared
+//! [`BeliefModel`], so the same scheduler runs on the native f64 path
+//! or the batched PJRT path by swapping the [`ValueBackend`].
 
 use std::sync::Arc;
 
 use crate::lds::LdsScheduler;
-use crate::params::{DerivedParams, PageParams};
-use crate::policy::PolicyKind;
+use crate::params::PageParams;
+use crate::policy::{BeliefModel, PolicyKind};
 use crate::runtime::{PjrtEngine, ValueBatch};
-use crate::sim::engine::{PageState, Scheduler};
+use crate::sched::{CrawlScheduler, PageTracker};
+
+pub use crate::policy::belief::belief_params;
 
 /// Where crawl values are computed.
+#[derive(Clone)]
 pub enum ValueBackend {
     /// Pure-rust f64 evaluation (exact; per-page).
     Native,
@@ -31,49 +40,18 @@ impl std::fmt::Debug for ValueBackend {
     }
 }
 
-/// Project a policy's *beliefs* about the CIS process onto the general
-/// NCIS parametrization the kernel evaluates (§5.1 special cases):
-/// GREEDY believes there is no CIS process at all; GREEDY-CIS believes
-/// signals are noiseless (β = ∞, α̂ = Δ − γ); NCIS variants use the true
-/// derived parameters.
-pub fn belief_params(policy: PolicyKind, raw: &PageParams, d: &DerivedParams) -> DerivedParams {
-    match policy {
-        PolicyKind::Greedy => DerivedParams {
-            alpha: d.delta,
-            beta: f64::INFINITY,
-            gamma: 0.0,
-            nu: 0.0,
-            delta: d.delta,
-            mu: d.mu,
-        },
-        PolicyKind::GreedyCis => DerivedParams {
-            alpha: (d.delta - d.gamma).max(1e-6 * d.delta),
-            beta: f64::INFINITY,
-            gamma: d.gamma,
-            nu: 0.0,
-            delta: d.delta,
-            mu: d.mu,
-        },
-        PolicyKind::GreedyCisPlus => {
-            if raw.precision() > 0.7 && raw.recall() > 0.6 {
-                belief_params(PolicyKind::GreedyCis, raw, d)
-            } else {
-                belief_params(PolicyKind::Greedy, raw, d)
-            }
-        }
-        PolicyKind::GreedyNcis | PolicyKind::NcisApprox(_) => *d,
-    }
-}
-
 /// Algorithm 1 with an exact argmax over all pages at every tick.
 pub struct GreedyScheduler {
-    policy: PolicyKind,
-    raw: Vec<PageParams>,
-    envs: Vec<DerivedParams>,
-    /// Per-page belief projection (what the kernel is fed).
-    beliefs: Vec<DerivedParams>,
+    model: BeliefModel,
     backend: ValueBackend,
+    tracker: PageTracker,
     batch: ValueBatch,
+    /// Tick time of each page's last politeness veto: pages vetoed at
+    /// the CURRENT tick are masked out of the argmax so a decorator's
+    /// retry reaches the next-best page instead of re-picking.
+    veto_tick: Vec<f64>,
+    /// Newest veto tick (cheap "any veto active at t?" probe).
+    last_veto_t: f64,
     /// Crawl values computed at the last tick (exposed for rate plots).
     pub last_values: Vec<f64>,
     /// EMA of selected crawl values — the paper's estimate of the
@@ -84,30 +62,35 @@ pub struct GreedyScheduler {
 impl GreedyScheduler {
     /// Build from raw page parameters (importance should be normalized).
     pub fn new(policy: PolicyKind, pages: &[PageParams], backend: ValueBackend) -> Self {
-        let envs: Vec<DerivedParams> = pages.iter().map(DerivedParams::from_raw).collect();
-        let beliefs = pages
-            .iter()
-            .zip(&envs)
-            .map(|(p, d)| belief_params(policy, p, d))
-            .collect();
+        let model = BeliefModel::new(policy, pages);
+        let m = model.len();
         Self {
-            policy,
-            raw: pages.to_vec(),
-            envs,
-            beliefs,
+            model,
             backend,
-            batch: ValueBatch::with_capacity(pages.len()),
-            last_values: vec![0.0; pages.len()],
+            tracker: PageTracker::new(m),
+            batch: ValueBatch::with_capacity(m),
+            veto_tick: vec![f64::NEG_INFINITY; m],
+            last_veto_t: f64::NEG_INFINITY,
+            last_values: vec![0.0; m],
             lambda_estimate: 0.0,
         }
     }
 
-    fn select_native(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+    /// The policy whose value function drives the argmax.
+    pub fn policy(&self) -> PolicyKind {
+        self.model.policy()
+    }
+
+    fn select_native(&mut self, t: f64) -> Option<usize> {
+        let masked = self.last_veto_t == t;
         let mut best = f64::NEG_INFINITY;
         let mut arg = None;
-        for (i, (d, p)) in self.envs.iter().zip(&self.raw).enumerate() {
-            let v = self.policy.crawl_value(p, d, states[i].tau_elap(t), states[i].n_cis);
+        for i in 0..self.model.len() {
+            let v = self.model.value(i, self.tracker.tau_elap(i, t), self.tracker.n_cis(i));
             self.last_values[i] = v;
+            if masked && self.veto_tick[i] == t {
+                continue; // vetoed at this tick: next-best instead
+            }
             if v > best {
                 best = v;
                 arg = Some(i);
@@ -119,13 +102,37 @@ impl GreedyScheduler {
         arg
     }
 
-    fn select_pjrt(&mut self, engine: &PjrtEngine, terms: u32, t: f64, states: &[PageState]) -> Option<usize> {
+    fn select_pjrt(&mut self, engine: &PjrtEngine, terms: u32, t: f64) -> Option<usize> {
         self.batch.clear();
-        for (i, b) in self.beliefs.iter().enumerate() {
+        for i in 0..self.model.len() {
             // effective time under the policy's OWN beliefs: a pending
             // CIS saturates a noiseless-belief page (β̂ = ∞ → capped)
-            let iota = b.effective_time(states[i].tau_elap(t), states[i].n_cis);
-            self.batch.push(iota, b);
+            let iota =
+                self.model.effective_time(i, self.tracker.tau_elap(i, t), self.tracker.n_cis(i));
+            self.batch.push(iota, self.model.belief(i));
+        }
+        if self.last_veto_t == t {
+            // veto-aware path: fetch the batch values and argmax on the
+            // host, skipping pages vetoed at this tick
+            let values = engine
+                .crawl_values(terms, &self.batch)
+                .expect("pjrt crawl value execution failed");
+            let mut best = f32::NEG_INFINITY;
+            let mut arg = None;
+            for (i, &v) in values.iter().enumerate() {
+                self.last_values[i] = v as f64;
+                if self.veto_tick[i] == t {
+                    continue;
+                }
+                if v > best {
+                    best = v;
+                    arg = Some(i);
+                }
+            }
+            if let Some(i) = arg {
+                self.update_lambda(self.last_values[i]);
+            }
+            return arg;
         }
         let (values, idx, best) = engine
             .crawl_values_argmax(terms, &self.batch)
@@ -147,37 +154,65 @@ impl GreedyScheduler {
     }
 }
 
-impl Scheduler for GreedyScheduler {
-    fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+impl CrawlScheduler for GreedyScheduler {
+    fn on_start(&mut self, m: usize) {
+        debug_assert_eq!(m, self.model.len(), "page count changed between runs");
+        self.tracker.reset(self.model.len());
+        self.veto_tick.iter_mut().for_each(|v| *v = f64::NEG_INFINITY);
+        self.last_veto_t = f64::NEG_INFINITY;
+        self.last_values.iter_mut().for_each(|v| *v = 0.0);
+        self.lambda_estimate = 0.0;
+    }
+
+    fn on_cis(&mut self, page: usize, _t: f64) {
+        self.tracker.on_cis(page);
+    }
+
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.tracker.on_crawl(page, t);
+    }
+
+    fn on_veto(&mut self, page: usize, t: f64) {
+        self.veto_tick[page] = t;
+        self.last_veto_t = t;
+    }
+
+    fn select(&mut self, t: f64) -> Option<usize> {
         match &self.backend {
-            ValueBackend::Native => self.select_native(t, states),
+            ValueBackend::Native => self.select_native(t),
             ValueBackend::Pjrt { engine, terms } => {
                 let engine = Arc::clone(engine);
                 let terms = *terms;
-                self.select_pjrt(&engine, terms, t, states)
+                self.select_pjrt(&engine, terms, t)
             }
         }
     }
 
     fn name(&self) -> String {
-        self.policy.name()
+        self.model.policy().name()
     }
 }
 
-/// Adapter: drives the precomputed LDS schedule as a [`Scheduler`].
+/// Adapter: drives the precomputed LDS schedule as a [`CrawlScheduler`].
 pub struct LdsAdapter {
+    rates: Vec<f64>,
     inner: LdsScheduler,
 }
 
 impl LdsAdapter {
     /// From continuous per-page rates (the solver's output).
     pub fn new(rates: &[f64]) -> Self {
-        Self { inner: LdsScheduler::new(rates) }
+        Self { rates: rates.to_vec(), inner: LdsScheduler::new(rates) }
     }
 }
 
-impl Scheduler for LdsAdapter {
-    fn select(&mut self, _t: f64, _states: &[PageState]) -> Option<usize> {
+impl CrawlScheduler for LdsAdapter {
+    fn on_start(&mut self, _m: usize) {
+        // restart the low-discrepancy sequence from its initial phase
+        self.inner = LdsScheduler::new(&self.rates);
+    }
+
+    fn select(&mut self, _t: f64) -> Option<usize> {
         self.inner.next()
     }
 
@@ -263,15 +298,49 @@ mod tests {
     }
 
     #[test]
+    fn veto_masks_page_for_the_current_tick_only() {
+        let ps = pages(10, 7, true);
+        let mut s = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+        s.on_start(ps.len());
+        let t = 2.0;
+        let first = s.select(t).unwrap();
+        s.on_veto(first, t);
+        let second = s.select(t).unwrap();
+        assert_ne!(first, second, "retry after veto re-picked the vetoed page");
+        // the mask expires with the tick: immediately after (no crawl
+        // happened, values essentially unchanged) the page is eligible
+        // again and wins the argmax
+        let next = s.select(t + 1e-6).unwrap();
+        assert_eq!(next, first, "veto must not outlive its tick");
+        // vetoing every page idles the tick instead of looping
+        let t2 = 3.0;
+        for k in 0..ps.len() {
+            let p = s.select(t2).unwrap_or_else(|| panic!("pick {k} missing"));
+            s.on_veto(p, t2);
+        }
+        assert_eq!(s.select(t2), None, "all pages vetoed: tick must idle");
+    }
+
+    #[test]
     fn lds_adapter_respects_rates() {
         let rates = [4.0, 1.0];
         let mut a = LdsAdapter::new(&rates);
         let mut counts = [0usize; 2];
         for j in 0..500 {
-            let i = a.select(j as f64, &[]).unwrap();
+            let i = a.select(j as f64).unwrap();
             counts[i] += 1;
         }
         assert!((counts[0] as f64 - 400.0).abs() <= 2.0, "{counts:?}");
+    }
+
+    #[test]
+    fn lds_adapter_restarts_on_start() {
+        let rates = [3.0, 1.0];
+        let mut a = LdsAdapter::new(&rates);
+        let first: Vec<Option<usize>> = (0..20).map(|j| a.select(j as f64)).collect();
+        a.on_start(2);
+        let second: Vec<Option<usize>> = (0..20).map(|j| a.select(j as f64)).collect();
+        assert_eq!(first, second);
     }
 
     #[test]

@@ -4,13 +4,11 @@
 //! whose populations are drawn per *host*) cannot hammer a single web
 //! host even when its pages dominate the crawl values: politeness
 //! demands a per-host minimum interval between fetches. This module
-//! groups pages into hosts and wraps any inner [`Scheduler`] with a
-//! politeness filter that skips hosts inside their cool-down window,
+//! groups pages into hosts and wraps any inner [`CrawlScheduler`] with
+//! a politeness filter that skips hosts inside their cool-down window,
 //! falling back to the next-best candidate.
 
-use std::collections::HashMap;
-
-use crate::sim::engine::{PageState, Scheduler};
+use crate::sched::CrawlScheduler;
 
 /// Page → host assignment plus per-host politeness interval.
 #[derive(Debug, Clone)]
@@ -44,12 +42,13 @@ impl HostMap {
 /// A scheduler decorator enforcing per-host politeness.
 ///
 /// Selection: ask the inner scheduler for its pick; if the pick's host
-/// is cooling down, temporarily mask the page... but an arbitrary inner
-/// scheduler has no masking interface, so the decorator instead retries
-/// the inner selection a bounded number of times while remembering
-/// vetoed pages, and finally falls back to the best *allowed* page seen.
-/// With the [`crate::coordinator::crawler::GreedyScheduler`] the retry
-/// naturally yields the next-highest crawl value.
+/// is cooling down, notify the inner scheduler via `on_veto` and retry
+/// a bounded number of times — both the exact argmax (tick-scoped veto
+/// mask) and the lazy scheduler (hot-heap sideline) then yield their
+/// next-best candidate. A vetoed pick never receives `on_crawl`, so
+/// the inner scheduler's event-driven state stays consistent with a
+/// "skip" and the page is re-eligible at the next tick; a fully-vetoed
+/// tick idles (see the politeness ablation for the freshness cost).
 pub struct PoliteScheduler<S> {
     inner: S,
     map: HostMap,
@@ -60,7 +59,7 @@ pub struct PoliteScheduler<S> {
     pub idle_ticks: u64,
 }
 
-impl<S: Scheduler> PoliteScheduler<S> {
+impl<S: CrawlScheduler> PoliteScheduler<S> {
     /// Wrap `inner` with the host map.
     pub fn new(inner: S, map: HostMap) -> Self {
         let hosts = map.hosts;
@@ -84,34 +83,41 @@ impl<S: Scheduler> PoliteScheduler<S> {
     }
 }
 
-impl<S: Scheduler> Scheduler for PoliteScheduler<S> {
-    fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+impl<S: CrawlScheduler> CrawlScheduler for PoliteScheduler<S> {
+    fn on_start(&mut self, m: usize) {
+        self.inner.on_start(m);
+        self.last_host_crawl.iter_mut().for_each(|t| *t = f64::NEG_INFINITY);
+        self.vetoes = 0;
+        self.idle_ticks = 0;
+    }
+
+    fn select(&mut self, t: f64) -> Option<usize> {
         const MAX_RETRIES: usize = 8;
-        // The inner scheduler believes each returned page was crawled
-        // (greedy variants reset their bookkeeping on_crawl); to veto we
-        // simply do not report the crawl to the engine but DO notify the
-        // inner scheduler so its internal state stays consistent with a
-        // "skip". For the greedy/lazy schedulers on_crawl is a no-op
-        // (the engine's state array is the source of truth), so a vetoed
-        // pick is safely re-eligible next tick.
         for _ in 0..MAX_RETRIES {
-            let pick = self.inner.select(t, states)?;
+            let pick = self.inner.select(t)?;
             if self.allowed(pick, t) {
                 self.last_host_crawl[self.map.host[pick]] = t;
                 return Some(pick);
             }
             self.vetoes += 1;
+            // tell the inner scheduler so a retry yields its next-best
+            // candidate (the lazy scheduler sidelines the page)
+            self.inner.on_veto(pick, t);
         }
         self.idle_ticks += 1;
         None
     }
 
-    fn on_cis(&mut self, page: usize, t: f64, states: &[PageState]) {
-        self.inner.on_cis(page, t, states);
+    fn on_cis(&mut self, page: usize, t: f64) {
+        self.inner.on_cis(page, t);
     }
 
-    fn on_crawl(&mut self, page: usize, t: f64, states: &[PageState]) {
-        self.inner.on_crawl(page, t, states);
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.inner.on_crawl(page, t);
+    }
+
+    fn on_veto(&mut self, page: usize, t: f64) {
+        self.inner.on_veto(page, t);
     }
 
     fn name(&self) -> String {
@@ -228,6 +234,50 @@ mod tests {
         let acc_polite = simulate(&traces, &cfg, &mut polite).accuracy;
         assert_eq!(acc_plain, acc_polite);
         assert_eq!(polite.vetoes, 0);
+    }
+
+    #[test]
+    fn lazy_inner_yields_next_best_after_veto() {
+        use crate::coordinator::lazy::LazyGreedyScheduler;
+        // drive the hooks directly: after a veto the lazy scheduler
+        // must surface a DIFFERENT page on immediate retry, and the
+        // vetoed page must not be orphaned (it gets crawled later)
+        let ps = pages(6);
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        lz.on_start(ps.len());
+        let t = 1.0;
+        let first = lz.select(t).expect("non-empty population");
+        lz.on_veto(first, t);
+        let second = lz.select(t).expect("retry must yield a pick");
+        assert_ne!(first, second, "retry after veto re-picked the vetoed page");
+        // no orphaning: the vetoed page had the top crawl value, so it
+        // must come back and get crawled within the next few ticks
+        let mut crawled = vec![false; ps.len()];
+        crawled[second] = true;
+        lz.on_crawl(second, t);
+        for j in 2..50 {
+            let tj = j as f64;
+            let pick = lz.select(tj).expect("lazy always crawls");
+            crawled[pick] = true;
+            lz.on_crawl(pick, tj);
+        }
+        assert!(crawled[first], "vetoed page was orphaned");
+    }
+
+    #[test]
+    fn boxed_inner_scheduler_works() {
+        // decorators compose with builder-produced trait objects
+        let ps = pages(12);
+        let map = HostMap::round_robin(12, 3, 0.1);
+        let inner: Box<dyn CrawlScheduler + Send> =
+            Box::new(GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native));
+        let mut polite = PoliteScheduler::new(inner, map);
+        let mut rng = Rng::new(9);
+        let traces = generate_traces(&ps, 20.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(4.0, 20.0);
+        let res = simulate(&traces, &cfg, &mut polite);
+        assert!((0.0..=1.0).contains(&res.accuracy));
+        assert!(polite.name().ends_with("-POLITE"));
     }
 
     #[test]

@@ -27,27 +27,39 @@
 //! scheduler is *approximate* only through bound staleness; the
 //! `lazy_parity` test and the `perf` bench quantify the accuracy parity
 //! and the per-tick evaluation savings.
+//!
+//! The scheduler is event-driven ([`CrawlScheduler`]): per-page state
+//! lives in its own [`PageTracker`], and single-page evaluations go
+//! through the configured [`ValueBackend`] — native f64 by default, or
+//! the batched PJRT engine (one-page batches; the batch path exists for
+//! API parity and device-resident deployments, not single-eval speed).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::coordinator::crawler::belief_params;
-use crate::params::{DerivedParams, PageParams};
-use crate::policy::{value, PolicyKind};
-use crate::sim::engine::{PageState, Scheduler};
+use crate::coordinator::crawler::ValueBackend;
+use crate::params::PageParams;
+use crate::policy::{value, BeliefModel, PolicyKind};
+use crate::runtime::ValueBatch;
+use crate::sched::{CrawlScheduler, PageTracker};
 use crate::util::OrdF64;
 
 /// Max refreshes per tick before we accept the best value seen so far.
 const MAX_REFRESH: usize = 24;
 
-/// Lazy Algorithm-1 scheduler (native value backend).
+/// Default hot/cold margin (see [`LazyGreedyScheduler::with_margin`]).
+pub const DEFAULT_MARGIN: f64 = 0.7;
+
+/// Lazy Algorithm-1 scheduler with a pluggable value backend.
 pub struct LazyGreedyScheduler {
-    policy: PolicyKind,
-    raw: Vec<PageParams>,
-    envs: Vec<DerivedParams>,
-    /// per-page BELIEF projection (what wake-time inversion must use:
-    /// a GREEDY scheduler's value follows V_GREEDY, not V_NCIS)
-    beliefs: Vec<DerivedParams>,
+    /// Shared belief projection (native values + wake-time inversion).
+    model: BeliefModel,
+    /// Where single-page value evaluations run.
+    backend: ValueBackend,
+    /// Incremental per-page crawl state (event-driven).
+    tracker: PageTracker,
+    /// Scratch for PJRT one-page evaluations.
+    batch: ValueBatch,
     /// min-heap of (wake time, version, page) — cold pages
     wakes: BinaryHeap<Reverse<(OrdF64, u32, usize)>>,
     /// max-heap of (stored value, version, page) — hot pages
@@ -58,6 +70,10 @@ pub struct LazyGreedyScheduler {
     wake_at: Vec<f64>,
     /// whether the page currently belongs to the hot heap
     is_hot: Vec<bool>,
+    /// tick time of the page's last politeness veto: the force-wake
+    /// fallback skips pages vetoed at the CURRENT tick so a retry
+    /// progresses to a different candidate instead of re-popping them
+    veto_tick: Vec<f64>,
     /// running threshold estimate Λ̂ (EMA of selected values)
     lambda: f64,
     /// hot/cold margin in (0, 1]
@@ -83,32 +99,41 @@ pub struct LazyGreedyScheduler {
 }
 
 impl LazyGreedyScheduler {
-    /// Build with the default margin (0.7).
+    /// Build with the default margin and the native backend.
     pub fn new(policy: PolicyKind, pages: &[PageParams]) -> Self {
-        Self::with_margin(policy, pages, 0.7)
+        Self::with_backend(policy, pages, DEFAULT_MARGIN, ValueBackend::Native)
     }
 
-    /// Build with an explicit hot/cold margin in (0, 1].
+    /// Build with an explicit hot/cold margin in (0, 1] (native backend).
     pub fn with_margin(policy: PolicyKind, pages: &[PageParams], margin: f64) -> Self {
+        Self::with_backend(policy, pages, margin, ValueBackend::Native)
+    }
+
+    /// Build with an explicit margin and value backend.
+    pub fn with_backend(
+        policy: PolicyKind,
+        pages: &[PageParams],
+        margin: f64,
+        backend: ValueBackend,
+    ) -> Self {
         assert!(margin > 0.0 && margin <= 1.0);
-        let envs: Vec<DerivedParams> = pages.iter().map(DerivedParams::from_raw).collect();
-        let beliefs: Vec<DerivedParams> =
-            pages.iter().zip(&envs).map(|(p, d)| belief_params(policy, p, d)).collect();
-        let m = pages.len();
+        let model = BeliefModel::new(policy, pages);
+        let m = model.len();
         let mut wakes = BinaryHeap::with_capacity(m);
         for i in 0..m {
             wakes.push(Reverse((OrdF64(0.0), 0, i)));
         }
         Self {
-            policy,
-            raw: pages.to_vec(),
-            envs,
-            beliefs,
+            model,
+            backend,
+            tracker: PageTracker::new(m),
+            batch: ValueBatch::with_capacity(1),
             wakes,
             hot: BinaryHeap::with_capacity(m),
             version: vec![0; m],
             wake_at: vec![0.0; m],
             is_hot: vec![false; m],
+            veto_tick: vec![f64::NEG_INFINITY; m],
             lambda: 0.0,
             margin,
             rekey_period: 32,
@@ -122,11 +147,28 @@ impl LazyGreedyScheduler {
         }
     }
 
+    /// The policy whose value function drives the threshold logic.
+    pub fn policy(&self) -> PolicyKind {
+        self.model.policy()
+    }
+
     #[inline]
-    fn value(&mut self, i: usize, t: f64, states: &[PageState]) -> f64 {
+    fn value(&mut self, i: usize, t: f64) -> f64 {
         self.evals += 1;
-        let v = self.policy
-            .crawl_value(&self.raw[i], &self.envs[i], states[i].tau_elap(t), states[i].n_cis);
+        let tau = self.tracker.tau_elap(i, t);
+        let n = self.tracker.n_cis(i);
+        let v = match &self.backend {
+            ValueBackend::Native => self.model.value(i, tau, n),
+            ValueBackend::Pjrt { engine, terms } => {
+                self.batch.clear();
+                let iota = self.model.effective_time(i, tau, n);
+                self.batch.push(iota, self.model.belief(i));
+                let values = engine
+                    .crawl_values(*terms, &self.batch)
+                    .expect("pjrt crawl value execution failed");
+                values[0] as f64
+            }
+        };
         debug_assert!(!v.is_nan(), "NaN crawl value for page {i}");
         v
     }
@@ -138,16 +180,13 @@ impl LazyGreedyScheduler {
 
     /// Earliest time page `i` could reach `target` (monotone inverse in
     /// effective time; CIS jumps handled by `on_cis` re-queues).
-    fn wake_time(&self, i: usize, t: f64, states: &[PageState], target: f64) -> f64 {
+    fn wake_time(&self, i: usize, t: f64, target: f64) -> f64 {
         // invert the value function the policy actually uses: the BELIEF
         // projection (V_GREEDY for GREEDY, V_CIS for GREEDY-CIS, ...)
-        let d = &self.beliefs[i];
-        let iota_now = d.effective_time(states[i].tau_elap(t), states[i].n_cis);
-        let terms = match self.policy {
-            PolicyKind::NcisApprox(j) => j,
-            _ => value::MAX_TERMS,
-        };
-        match value::inverse_value(target, d, terms) {
+        let d = self.model.belief(i);
+        let iota_now =
+            self.model.effective_time(i, self.tracker.tau_elap(i, t), self.tracker.n_cis(i));
+        match value::inverse_value(target, d, self.model.terms()) {
             // target unreachable (sup V < target): nap until the value
             // has saturated anyway, then re-check the (moving) threshold
             None => t + 8.0 / d.delta,
@@ -170,11 +209,11 @@ impl LazyGreedyScheduler {
     /// at V ≈ Λ̂ clears the promotion bar comfortably, so each
     /// sleep/wake cycle costs exactly one evaluation instead of
     /// oscillating with the EMA drift of Λ̂.
-    fn demote(&mut self, i: usize, t: f64, states: &[PageState]) {
+    fn demote(&mut self, i: usize, t: f64) {
         self.version[i] = self.version[i].wrapping_add(1);
         self.is_hot[i] = false;
         let target = self.lambda.max(1e-12);
-        let wt = self.wake_time(i, t, states, target);
+        let wt = self.wake_time(i, t, target);
         self.demotes += 1;
         if wt <= t + 1e-6 {
             self.immediate_wakes += 1;
@@ -185,7 +224,7 @@ impl LazyGreedyScheduler {
     }
 
     /// Promote due pages from the wake calendar.
-    fn process_wakes(&mut self, t: f64, states: &[PageState]) {
+    fn process_wakes(&mut self, t: f64) {
         while let Some(&Reverse((OrdF64(wt), ver, i))) = self.wakes.peek() {
             if wt > t {
                 break;
@@ -194,23 +233,21 @@ impl LazyGreedyScheduler {
             if ver != self.version[i] || self.is_hot[i] {
                 continue; // stale entry
             }
-            let v = self.value(i, t, states);
+            let v = self.value(i, t);
             self.wake_evals += 1;
             if v >= self.threshold() || self.lambda == 0.0 {
                 self.promote(i, v);
             } else {
-                self.demote(i, t, states);
+                self.demote(i, t);
             }
         }
     }
-}
 
-impl LazyGreedyScheduler {
     /// Recompute every hot page's heap key (bulk re-keying): stored keys
     /// are lower bounds that only a CIS event would otherwise refresh,
     /// so policies that ignore CIS (or noiseless environments) would
     /// starve growing pages without this.
-    fn rekey_hot(&mut self, t: f64, states: &[PageState]) {
+    fn rekey_hot(&mut self, t: f64) {
         let hot_pages: Vec<usize> =
             (0..self.is_hot.len()).filter(|&i| self.is_hot[i]).collect();
         if hot_pages.is_empty() {
@@ -218,20 +255,43 @@ impl LazyGreedyScheduler {
         }
         self.hot.clear();
         for i in hot_pages {
-            let v = self.value(i, t, states);
+            let v = self.value(i, t);
             self.version[i] = self.version[i].wrapping_add(1);
             self.hot.push((OrdF64(v), self.version[i], i));
         }
     }
 }
 
-impl Scheduler for LazyGreedyScheduler {
-    fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+impl CrawlScheduler for LazyGreedyScheduler {
+    fn on_start(&mut self, m: usize) {
+        debug_assert_eq!(m, self.model.len(), "page count changed between runs");
+        let m = self.model.len();
+        self.tracker.reset(m);
+        self.wakes.clear();
+        for i in 0..m {
+            self.wakes.push(Reverse((OrdF64(0.0), 0, i)));
+        }
+        self.hot.clear();
+        self.version.iter_mut().for_each(|v| *v = 0);
+        self.wake_at.iter_mut().for_each(|w| *w = 0.0);
+        self.is_hot.iter_mut().for_each(|h| *h = false);
+        self.veto_tick.iter_mut().for_each(|v| *v = f64::NEG_INFINITY);
+        self.lambda = 0.0;
+        self.evals = 0;
+        self.wake_evals = 0;
+        self.cis_evals = 0;
+        self.refresh_evals = 0;
+        self.ticks = 0;
+        self.demotes = 0;
+        self.immediate_wakes = 0;
+    }
+
+    fn select(&mut self, t: f64) -> Option<usize> {
         self.ticks += 1;
         if self.ticks % self.rekey_period == 0 {
-            self.rekey_hot(t, states);
+            self.rekey_hot(t);
         }
-        self.process_wakes(t, states);
+        self.process_wakes(t);
         // lazy re-evaluation over the hot heap
         let mut best: Option<(f64, usize)> = None;
         let mut refreshes = 0usize;
@@ -252,12 +312,12 @@ impl Scheduler for LazyGreedyScheduler {
                 }
             }
             self.hot.pop();
-            let v = self.value(i, t, states);
+            let v = self.value(i, t);
             self.refresh_evals += 1;
             refreshes += 1;
             if v < self.threshold() {
                 // fell below the (risen) threshold: back to the calendar
-                self.demote(i, t, states);
+                self.demote(i, t);
                 continue;
             }
             // re-insert with the refreshed value
@@ -270,55 +330,84 @@ impl Scheduler for LazyGreedyScheduler {
         }
         // fallback: nothing hot — force-wake the earliest calendar entries
         if best.is_none() {
-            while let Some(Reverse((_, ver, i))) = self.wakes.pop() {
+            // entries vetoed at THIS tick are kept queued but skipped,
+            // so a politeness retry reaches a different candidate (and
+            // returns None once only just-vetoed pages remain)
+            let mut deferred: Vec<Reverse<(OrdF64, u32, usize)>> = Vec::new();
+            while let Some(entry) = self.wakes.pop() {
+                let Reverse((_, ver, i)) = entry;
                 if ver != self.version[i] || self.is_hot[i] {
                     continue;
                 }
-                let v = self.value(i, t, states);
+                if self.veto_tick[i] == t {
+                    deferred.push(entry);
+                    continue;
+                }
+                let v = self.value(i, t);
                 best = Some((v, i));
                 break;
             }
+            for entry in deferred {
+                self.wakes.push(entry);
+            }
         }
         let (bv, bi) = best?;
-        // threshold update + reset the crawled page
+        // threshold update; the driver fires on_crawl next, which resets
+        // the page and schedules its wake from the zero state
         const A: f64 = 0.05;
         self.lambda = if self.lambda == 0.0 { bv } else { (1.0 - A) * self.lambda + A * bv };
-        // the engine resets the page state right after select; schedule
-        // its wake from the zero state
-        self.version[bi] = self.version[bi].wrapping_add(1);
-        self.is_hot[bi] = false;
-        let d = &self.beliefs[bi];
-        let target = self.lambda.max(1e-12);
-        let terms = match self.policy {
-            PolicyKind::NcisApprox(j) => j,
-            _ => value::MAX_TERMS,
-        };
-        let iota_target = value::inverse_value(target, d, terms).unwrap_or(8.0 / d.delta);
-        let wake = t + iota_target.max(1e-9);
-        self.wake_at[bi] = wake;
-        self.wakes.push(Reverse((OrdF64(wake), self.version[bi], bi)));
         Some(bi)
     }
 
-    fn on_cis(&mut self, page: usize, t: f64, states: &[PageState]) {
-        if !self.policy.uses_cis() {
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.tracker.on_crawl(page, t);
+        // the page restarts from the zero state: leave the hot heap and
+        // sleep until its value could reach the threshold again
+        self.version[page] = self.version[page].wrapping_add(1);
+        self.is_hot[page] = false;
+        let d = *self.model.belief(page);
+        let target = self.lambda.max(1e-12);
+        let iota_target =
+            value::inverse_value(target, &d, self.model.terms()).unwrap_or(8.0 / d.delta);
+        let wake = t + iota_target.max(1e-9);
+        self.wake_at[page] = wake;
+        self.wakes.push(Reverse((OrdF64(wake), self.version[page], page)));
+    }
+
+    fn on_veto(&mut self, page: usize, t: f64) {
+        // a decorator (politeness) rejected the pick: take it out of
+        // the hot heap so an immediate retry yields the next-best page
+        // (the pre-redesign lazy sidelined the pick inside select as a
+        // side effect of scheduling its wake). demote inverts from the
+        // page's CURRENT state, so a high-value page re-wakes promptly.
+        // Unconditional: a pick surfaced by the force-wake fallback is
+        // cold with its calendar entry consumed — demote re-queues it,
+        // so a vetoed fallback pick is never orphaned. veto_tick makes
+        // the fallback skip it for the remainder of THIS tick.
+        self.veto_tick[page] = t;
+        self.demote(page, t);
+    }
+
+    fn on_cis(&mut self, page: usize, t: f64) {
+        self.tracker.on_cis(page);
+        if !self.model.policy().uses_cis() {
             return;
         }
         if self.is_hot[page] {
             // its stored value is now a stale lower bound; refresh so the
             // jump is visible to the selection loop promptly
             self.cis_evals += 1;
-            let v = self.value(page, t, states);
+            let v = self.value(page, t);
             self.promote(page, v);
         } else {
             // a CIS advances the effective time by exactly β, so the
             // (monotone) value reaches its wake target β earlier — shift
             // the wake without evaluating anything (O(log) push). Uses
             // the BELIEF β (the GREEDY belief has γ = 0: no shift at all).
-            if self.beliefs[page].gamma <= 0.0 {
+            if self.model.belief(page).gamma <= 0.0 {
                 return;
             }
-            let beta = self.beliefs[page].beta;
+            let beta = self.model.belief(page).beta;
             let new_wake = if beta.is_finite() {
                 (self.wake_at[page] - beta).max(t + 1e-9)
             } else {
@@ -333,14 +422,14 @@ impl Scheduler for LazyGreedyScheduler {
     }
 
     fn name(&self) -> String {
-        format!("{}-LAZY", self.policy.name())
+        format!("{}-LAZY", self.model.policy().name())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::crawler::{GreedyScheduler, ValueBackend};
+    use crate::coordinator::crawler::GreedyScheduler;
     use crate::rngkit::Rng;
     use crate::sim::{generate_traces, simulate, CisDelay, SimConfig};
 
@@ -446,6 +535,45 @@ mod tests {
             let mut lz = LazyGreedyScheduler::new(kind, &ps);
             let res = simulate(&traces, &cfg, &mut lz);
             assert!((0.0..=1.0).contains(&res.accuracy), "{}", lz.name());
+        }
+    }
+
+    #[test]
+    fn vetoing_every_page_idles_the_tick_without_orphaning() {
+        use crate::sched::CrawlScheduler;
+        // veto every pick at one tick: each retry must surface a NEW
+        // page (never a just-vetoed one, even via the force-wake
+        // fallback); once all pages are vetoed the tick idles; and at
+        // the next tick the pages come back (nothing is orphaned)
+        let ps = pages(3, 11);
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        lz.on_start(ps.len());
+        let t = 1.0;
+        let mut seen = [false; 3];
+        for k in 0..3 {
+            let pick = lz.select(t).unwrap_or_else(|| panic!("pick {k} missing"));
+            assert!(!seen[pick], "retry {k} re-surfaced vetoed page {pick}");
+            seen[pick] = true;
+            lz.on_veto(pick, t);
+        }
+        assert_eq!(lz.select(t), None, "all pages vetoed: tick must idle");
+        assert!(lz.select(2.0).is_some(), "vetoed pages were orphaned");
+    }
+
+    #[test]
+    fn reuse_across_runs_matches_fresh() {
+        // on_start must fully reset the calendar/heap/threshold state
+        let ps = pages(60, 8);
+        let cfg = SimConfig::new(5.0, 60.0);
+        let mut reused = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        for rep in 0..3u64 {
+            let mut rng = Rng::new(70 + rep);
+            let traces = generate_traces(&ps, 60.0, CisDelay::None, &mut rng);
+            let mut fresh = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+            let a = simulate(&traces, &cfg, &mut reused);
+            let b = simulate(&traces, &cfg, &mut fresh);
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "rep {rep}");
+            assert_eq!(a.crawl_counts, b.crawl_counts, "rep {rep}");
         }
     }
 }

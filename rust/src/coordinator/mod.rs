@@ -1,21 +1,29 @@
 //! The Layer-3 coordination contribution: drivers of Algorithm 1.
 //!
+//! Every driver here implements (or constructs) the event-driven
+//! [`crate::sched::CrawlScheduler`] trait; [`builder::CrawlerBuilder`]
+//! is the single entry point that wires policy × strategy × backend:
+//!
+//! - [`builder`] — the `CrawlerBuilder` facade (and [`builder::Strategy`]).
 //! - [`crawler`] — the exact discrete greedy policy (`argmax_i V`), with
 //!   pluggable value backends (native f64 or the PJRT batched engine).
 //! - [`lazy`] — the §5.2 production scheduler: threshold tracking + wake
 //!   calendar so most pages are *not* re-evaluated at every tick.
-//! - [`shard`] — N-way sharding with 1/N bandwidth per shard (§5.2) and
-//!   load rebalancing.
+//! - [`shard`] — N-way sharding with 1/N bandwidth per shard (§5.2),
+//!   load rebalancing, and the [`shard::ShardedScheduler`] composite.
 //! - [`pipeline`] — a threaded streaming orchestrator (event ingestion,
 //!   bounded queues / backpressure, worker shards) used by the
 //!   `serve-shards` CLI and the Appendix-G scale experiment.
+//! - [`hosts`] — per-host politeness decoration over any scheduler.
 
+pub mod builder;
 pub mod crawler;
 pub mod hosts;
 pub mod lazy;
 pub mod pipeline;
 pub mod shard;
 
-pub use crawler::{GreedyScheduler, LdsAdapter, ValueBackend};
+pub use builder::{CrawlerBuilder, Strategy};
+pub use crawler::{belief_params, GreedyScheduler, LdsAdapter, ValueBackend};
 pub use lazy::LazyGreedyScheduler;
-pub use shard::{rebalance, ShardPlan, ShardedRun};
+pub use shard::{rebalance, ShardPlan, ShardedRun, ShardedScheduler};

@@ -7,15 +7,20 @@
 //! (backpressure: a slow shard throttles ingestion rather than dropping
 //! signals), and reports shard-level throughput metrics.
 //!
+//! Shard workers drive any `Box<dyn CrawlScheduler + Send>`; per-shard
+//! schedulers are stamped from a [`CrawlerBuilder`] template, so every
+//! strategy × backend combination (lazy native, exact PJRT, …) can run
+//! the streaming topology — nothing is hard-coded to one scheduler.
+//!
 //! Used by the `serve-shards` CLI command and the Appendix-G scale bench.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 
+use crate::coordinator::builder::CrawlerBuilder;
 use crate::params::PageParams;
-use crate::policy::PolicyKind;
-use crate::sim::engine::{PageState, Scheduler};
+use crate::sched::{CrawlScheduler, IdleScheduler};
 
 /// A message into a shard worker.
 #[derive(Debug, Clone, Copy)]
@@ -47,27 +52,25 @@ pub struct PipelineMetrics {
     pub backpressure_stalls: AtomicU64,
 }
 
-/// One shard worker: owns scheduler + state, consumes its queue.
+/// One shard worker: owns its event-driven scheduler, consumes its queue.
 fn shard_worker(
     rx: Receiver<ShardMsg>,
-    mut scheduler: Box<dyn Scheduler + Send>,
+    mut scheduler: Box<dyn CrawlScheduler + Send>,
     m: usize,
     metrics: Arc<PipelineMetrics>,
 ) -> Vec<u32> {
-    let mut states = vec![PageState { last_crawl: 0.0, n_cis: 0 }; m];
+    scheduler.on_start(m);
     let mut crawl_counts = vec![0u32; m];
     while let Ok(msg) = rx.recv() {
         match msg {
             ShardMsg::Cis { page, t } => {
-                states[page].n_cis = states[page].n_cis.saturating_add(1);
-                scheduler.on_cis(page, t, &states);
+                scheduler.on_cis(page, t);
                 metrics.cis_applied.fetch_add(1, Ordering::Relaxed);
             }
             ShardMsg::Tick { t } => {
-                if let Some(i) = scheduler.select(t, &states) {
-                    states[i] = PageState { last_crawl: t, n_cis: 0 };
+                if let Some(i) = scheduler.select(t) {
                     crawl_counts[i] += 1;
-                    scheduler.on_crawl(i, t, &states);
+                    scheduler.on_crawl(i, t);
                     metrics.crawls.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -127,14 +130,21 @@ pub struct PipelineReport {
 
 /// Drive a full streaming run: pages are round-robin sharded, a CIS
 /// stream (precomputed event times) and the tick clock are multiplexed
-/// into per-shard bounded queues in simulated-time order.
+/// into per-shard bounded queues in simulated-time order. Each shard's
+/// scheduler is stamped from the `scheduler` builder template (its
+/// `pages(..)` are overridden with the shard's members); an invalid
+/// template surfaces as `Err` before any worker thread spawns.
 pub fn run_pipeline(
     pages: &[PageParams],
-    policy: PolicyKind,
+    scheduler: &CrawlerBuilder,
     cis_events: &[(f64, usize)], // (time, global page), sorted by time
     cfg: &PipelineConfig,
-) -> PipelineReport {
-    assert!(cfg.shards > 0);
+) -> crate::Result<PipelineReport> {
+    if cfg.shards == 0 {
+        return Err(crate::Error::Usage(
+            "run_pipeline: at least one shard required".into(),
+        ));
+    }
     let metrics = Arc::new(PipelineMetrics::default());
     let plan = crate::coordinator::shard::ShardPlan::round_robin(pages.len(), cfg.shards);
     let members = plan.shard_members();
@@ -145,19 +155,29 @@ pub fn run_pipeline(
             local_index[gi] = li;
         }
     }
+    // stamp every shard scheduler up front: template errors return Err
+    // here, before any thread exists; shards > pages leaves some shards
+    // empty and they idle their ticks away instead of failing validation.
+    // shard_template remaps pages AND (for Lds templates) global rates
+    // to shard-local indices, so workers always see local picks.
+    let mut scheds: Vec<Box<dyn CrawlScheduler + Send>> = Vec::with_capacity(cfg.shards);
+    for member in &members {
+        scheds.push(if member.is_empty() {
+            Box::new(IdleScheduler)
+        } else {
+            scheduler.shard_template(pages, member).build()?
+        });
+    }
     let start = std::time::Instant::now();
     let mut crawls_per_shard = vec![0u64; cfg.shards];
     std::thread::scope(|scope| {
         let mut senders: Vec<SyncSender<ShardMsg>> = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
-        for member in &members {
+        for (member, sched) in members.iter().zip(scheds) {
             let (tx, rx) = sync_channel::<ShardMsg>(cfg.queue_depth);
             senders.push(tx);
-            let pages_s: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
-            let mcount = pages_s.len();
+            let mcount = member.len();
             let metrics = Arc::clone(&metrics);
-            let sched: Box<dyn Scheduler + Send> =
-                Box::new(crate::coordinator::lazy::LazyGreedyScheduler::new(policy, &pages_s));
             handles.push(scope.spawn(move || shard_worker(rx, sched, mcount, metrics)));
         }
         // multiplex: ticks round-robin across shards at global rate R
@@ -200,18 +220,20 @@ pub fn run_pipeline(
             crawls_per_shard[s] = counts.iter().map(|&c| c as u64).sum();
         }
     });
-    PipelineReport {
+    Ok(PipelineReport {
         total_crawls: crawls_per_shard.iter().sum(),
         crawls_per_shard,
         cis_applied: metrics.cis_applied.load(Ordering::Relaxed),
         backpressure_stalls: metrics.backpressure_stalls.load(Ordering::Relaxed),
         wall: start.elapsed(),
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::builder::Strategy;
+    use crate::policy::PolicyKind;
     use crate::rngkit::Rng;
 
     fn pages(m: usize) -> Vec<PageParams> {
@@ -226,11 +248,15 @@ mod tests {
             .collect()
     }
 
+    fn lazy_ncis() -> CrawlerBuilder {
+        CrawlerBuilder::new().policy(PolicyKind::GreedyNcis).strategy(Strategy::Lazy)
+    }
+
     #[test]
     fn pipeline_executes_all_ticks() {
         let ps = pages(64);
         let cfg = PipelineConfig { shards: 4, queue_depth: 16, bandwidth: 20.0, horizon: 50.0 };
-        let report = run_pipeline(&ps, PolicyKind::GreedyNcis, &[], &cfg);
+        let report = run_pipeline(&ps, &lazy_ncis(), &[], &cfg).unwrap();
         // 20 ticks/sec * 50s = 1000 ticks total
         assert_eq!(report.total_crawls, 1000);
         // round-robin across 4 shards => 250 each
@@ -246,7 +272,7 @@ mod tests {
             .collect();
         cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let cfg = PipelineConfig { shards: 2, queue_depth: 8, bandwidth: 10.0, horizon: 40.0 };
-        let report = run_pipeline(&ps, PolicyKind::GreedyNcis, &cis, &cfg);
+        let report = run_pipeline(&ps, &lazy_ncis(), &cis, &cfg).unwrap();
         assert_eq!(report.cis_applied, 500);
         assert_eq!(report.total_crawls, 400);
     }
@@ -260,8 +286,64 @@ mod tests {
             .collect();
         cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let cfg = PipelineConfig { shards: 2, queue_depth: 2, bandwidth: 50.0, horizon: 10.0 };
-        let report = run_pipeline(&ps, PolicyKind::GreedyNcis, &cis, &cfg);
+        let report = run_pipeline(&ps, &lazy_ncis(), &cis, &cfg).unwrap();
         assert_eq!(report.cis_applied, 5_000, "no CIS may be dropped");
         assert_eq!(report.total_crawls, 500);
+    }
+
+    #[test]
+    fn more_shards_than_pages_idles_empty_shards() {
+        // 3 pages over 8 shards: shards 3..7 are empty and must idle
+        // their ticks rather than panic at construction
+        let ps = pages(3);
+        let cfg = PipelineConfig { shards: 8, queue_depth: 4, bandwidth: 8.0, horizon: 10.0 };
+        let report = run_pipeline(&ps, &lazy_ncis(), &[], &cfg).unwrap();
+        // 80 ticks round-robin over 8 shards; only the 3 populated
+        // shards crawl (10 ticks each)
+        assert_eq!(report.total_crawls, 30);
+        assert!(report.crawls_per_shard[3..].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn lds_template_rates_are_remapped_per_shard() {
+        // an Lds template carries GLOBAL rates; each shard must get its
+        // members' slice so worker-local indices stay in range
+        let ps = pages(12);
+        let rates: Vec<f64> = (0..12).map(|i| 1.0 + (i % 4) as f64).collect();
+        let lds = CrawlerBuilder::new().strategy(Strategy::Lds).lds_rates(&rates);
+        let cfg = PipelineConfig { shards: 3, queue_depth: 8, bandwidth: 12.0, horizon: 10.0 };
+        let report = run_pipeline(&ps, &lds, &[], &cfg).unwrap();
+        // LDS always has a next pick, so every tick crawls
+        assert_eq!(report.total_crawls, 120);
+        assert!(report.crawls_per_shard.iter().all(|&c| c == 40));
+    }
+
+    #[test]
+    fn zero_shards_is_an_error_not_a_panic() {
+        let ps = pages(4);
+        let cfg = PipelineConfig { shards: 0, queue_depth: 4, bandwidth: 5.0, horizon: 1.0 };
+        assert!(run_pipeline(&ps, &lazy_ncis(), &[], &cfg).is_err());
+    }
+
+    #[test]
+    fn invalid_template_errs_before_spawning() {
+        // an Lds template without rates cannot build per shard: the
+        // error must surface as Err, not a panic inside thread::scope
+        let ps = pages(8);
+        let bad = CrawlerBuilder::new().strategy(Strategy::Lds);
+        let cfg = PipelineConfig { shards: 2, queue_depth: 4, bandwidth: 5.0, horizon: 1.0 };
+        assert!(run_pipeline(&ps, &bad, &[], &cfg).is_err());
+    }
+
+    #[test]
+    fn pipeline_runs_exact_strategy_too() {
+        // the topology is scheduler-agnostic: exact argmax per shard
+        let ps = pages(24);
+        let exact = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Exact);
+        let cfg = PipelineConfig { shards: 3, queue_depth: 8, bandwidth: 12.0, horizon: 10.0 };
+        let report = run_pipeline(&ps, &exact, &[], &cfg).unwrap();
+        assert_eq!(report.total_crawls, 120);
     }
 }

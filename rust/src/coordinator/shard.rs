@@ -1,10 +1,20 @@
 //! §5.2 sharding: split pages into N shards, give each 1/N of the
 //! bandwidth, schedule independently in parallel, and rebalance by
 //! estimated load.
+//!
+//! [`ShardedScheduler`] is the single-process composite: N per-shard
+//! lazy schedulers behind one [`CrawlScheduler`] face, ticks fanned
+//! round-robin (each shard sees 1/N of the ticks — the same topology
+//! the threaded `pipeline` runs across worker threads). It is what
+//! `CrawlerBuilder::strategy(Strategy::Sharded {..})` constructs, with
+//! any [`ValueBackend`] plugged into every shard.
 
+use crate::coordinator::crawler::ValueBackend;
+use crate::coordinator::lazy::{LazyGreedyScheduler, DEFAULT_MARGIN};
 use crate::params::PageParams;
 use crate::policy::PolicyKind;
 use crate::rngkit::Rng;
+use crate::sched::CrawlScheduler;
 use crate::sim::engine::{SimConfig, SimResult};
 use crate::sim::{generate_traces, simulate, CisDelay};
 
@@ -56,6 +66,115 @@ pub fn rebalance(loads: &[f64], shards: usize) -> ShardPlan {
     ShardPlan { assignment, shards }
 }
 
+/// N independently-scheduled shards behind one scheduler face.
+///
+/// Ticks are fanned round-robin, one shard per tick — the same 1/N
+/// bandwidth split as the threaded pipeline, with empty or idling
+/// shards forfeiting their tick. CIS and crawl events are routed by the
+/// shard plan; picks are translated back to global page indices.
+/// Per-shard scheduling runs through the §5.2 lazy scheduler with the
+/// given value backend.
+pub struct ShardedScheduler {
+    inner: Vec<LazyGreedyScheduler>,
+    plan: ShardPlan,
+    /// Per-shard global-page-index lists (`members[s][local] = global`).
+    members: Vec<Vec<usize>>,
+    /// Local index of each global page within its shard.
+    local_index: Vec<usize>,
+    next_shard: usize,
+}
+
+impl ShardedScheduler {
+    /// Round-robin shard the pages and build one lazy scheduler (with
+    /// `backend`) per non-trivial shard.
+    pub fn new(
+        policy: PolicyKind,
+        pages: &[PageParams],
+        shards: usize,
+        backend: ValueBackend,
+    ) -> Self {
+        assert!(shards > 0, "at least one shard required");
+        let plan = ShardPlan::round_robin(pages.len(), shards);
+        let members = plan.shard_members();
+        let mut local_index = vec![0usize; pages.len()];
+        for member in &members {
+            for (li, &gi) in member.iter().enumerate() {
+                local_index[gi] = li;
+            }
+        }
+        let inner = members
+            .iter()
+            .map(|member| {
+                let pages_s: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
+                LazyGreedyScheduler::with_backend(
+                    policy,
+                    &pages_s,
+                    DEFAULT_MARGIN,
+                    backend.clone(),
+                )
+            })
+            .collect();
+        Self { inner, plan, members, local_index, next_shard: 0 }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.plan.shards
+    }
+
+    /// The page → shard assignment in use.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+}
+
+impl CrawlScheduler for ShardedScheduler {
+    fn on_start(&mut self, m: usize) {
+        debug_assert_eq!(m, self.local_index.len(), "page count changed between runs");
+        self.next_shard = 0;
+        for (s, inner) in self.inner.iter_mut().enumerate() {
+            inner.on_start(self.members[s].len());
+        }
+    }
+
+    fn on_cis(&mut self, page: usize, t: f64) {
+        let s = self.plan.assignment[page];
+        self.inner[s].on_cis(self.local_index[page], t);
+    }
+
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        let s = self.plan.assignment[page];
+        self.inner[s].on_crawl(self.local_index[page], t);
+    }
+
+    fn on_veto(&mut self, page: usize, t: f64) {
+        let s = self.plan.assignment[page];
+        self.inner[s].on_veto(self.local_index[page], t);
+    }
+
+    fn select(&mut self, t: f64) -> Option<usize> {
+        // one tick → one shard, round-robin — exactly the threaded
+        // pipeline's topology: every shard gets 1/N of the ticks and an
+        // empty or idling shard forfeits its tick (so the two drivers
+        // measure the same bandwidth allocation)
+        let s = self.next_shard;
+        self.next_shard = (self.next_shard + 1) % self.inner.len();
+        if self.members[s].is_empty() {
+            return None;
+        }
+        self.inner[s].select(t).map(|local| self.members[s][local])
+    }
+
+    fn name(&self) -> String {
+        let policy = self
+            .inner
+            .first()
+            .map(|s| s.policy().name())
+            .unwrap_or_else(|| "EMPTY".into());
+        format!("{policy}-SHARDED{}", self.plan.shards)
+    }
+}
+
 /// Result of a sharded simulation run.
 #[derive(Debug, Clone)]
 pub struct ShardedRun {
@@ -66,7 +185,9 @@ pub struct ShardedRun {
 }
 
 /// Simulate all shards (each with bandwidth `R/N` and its own trace
-/// stream) in parallel via scoped threads, and merge accuracy.
+/// stream) in parallel via scoped threads, and merge accuracy. Per-shard
+/// schedulers are constructed through [`crate::CrawlerBuilder`] (lazy
+/// strategy, native backend).
 pub fn run_sharded(
     pages: &[PageParams],
     plan: &ShardPlan,
@@ -89,9 +210,13 @@ pub fn run_sharded(
                 let mut rng = Rng::new(seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
                 let traces = generate_traces(&pages_s, horizon, CisDelay::None, &mut rng);
                 let cfg = SimConfig::new(shard_r, horizon);
-                let mut sched =
-                    crate::coordinator::lazy::LazyGreedyScheduler::new(policy, &pages_s);
-                Some(simulate(&traces, &cfg, &mut sched))
+                let mut sched = crate::coordinator::builder::CrawlerBuilder::new()
+                    .policy(policy)
+                    .strategy(crate::coordinator::builder::Strategy::Lazy)
+                    .pages(&pages_s)
+                    .build()
+                    .expect("shard scheduler construction");
+                Some(simulate(&traces, &cfg, sched.as_mut()))
             }));
         }
         for (s, h) in handles.into_iter().enumerate() {
@@ -141,17 +266,21 @@ mod tests {
         assert!(max - min <= biggest + 1e-9, "spread {} > {}", max - min, biggest);
     }
 
-    #[test]
-    fn sharded_accuracy_close_to_single() {
-        let mut rng = Rng::new(2);
-        let pages: Vec<PageParams> = (0..120)
+    fn test_pages(m: usize, seed: u64) -> Vec<PageParams> {
+        let mut rng = Rng::new(seed);
+        (0..m)
             .map(|_| PageParams {
                 delta: rng.range(0.05, 1.0),
                 mu: rng.range(0.05, 1.0),
                 lam: 0.5,
                 nu: 0.2,
             })
-            .collect();
+            .collect()
+    }
+
+    #[test]
+    fn sharded_accuracy_close_to_single() {
+        let pages = test_pages(120, 2);
         let single = run_sharded(
             &pages,
             &ShardPlan::round_robin(pages.len(), 1),
@@ -174,5 +303,60 @@ mod tests {
             single.accuracy,
             sharded.accuracy
         );
+    }
+
+    #[test]
+    fn sharded_scheduler_crawls_every_tick_and_spreads_load() {
+        let pages = test_pages(64, 3);
+        let mut sched =
+            ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 4, ValueBackend::Native);
+        assert_eq!(sched.shards(), 4);
+        let mut rng = Rng::new(4);
+        let traces = generate_traces(&pages, 50.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(20.0, 50.0);
+        let res = simulate(&traces, &cfg, &mut sched);
+        let total: u64 = res.crawl_counts.iter().map(|&c| c as u64).sum();
+        assert_eq!(total, res.ticks, "every tick must crawl");
+        // round-robin tick fan-out: per-shard crawl totals within one
+        let members = sched.plan().shard_members();
+        let per_shard: Vec<u64> = members
+            .iter()
+            .map(|m| m.iter().map(|&i| res.crawl_counts[i] as u64).sum())
+            .collect();
+        let min = per_shard.iter().min().unwrap();
+        let max = per_shard.iter().max().unwrap();
+        assert!(max - min <= 1, "unbalanced tick fan-out: {per_shard:?}");
+    }
+
+    #[test]
+    fn sharded_scheduler_accuracy_close_to_unsharded_lazy() {
+        let pages = test_pages(100, 5);
+        let horizon = 120.0;
+        let cfg = SimConfig::new(10.0, horizon);
+        let mut rng = Rng::new(6);
+        let traces = generate_traces(&pages, horizon, CisDelay::None, &mut rng);
+        let mut lazy = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &pages);
+        let a = simulate(&traces, &cfg, &mut lazy).accuracy;
+        let mut rng = Rng::new(6);
+        let traces = generate_traces(&pages, horizon, CisDelay::None, &mut rng);
+        let mut sharded =
+            ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 4, ValueBackend::Native);
+        let b = simulate(&traces, &cfg, &mut sharded).accuracy;
+        assert!((a - b).abs() < 0.05, "lazy {a} vs sharded {b}");
+    }
+
+    #[test]
+    fn more_shards_than_pages_idles_like_the_pipeline() {
+        // 3 pages over 8 shards: the 5 empty shards forfeit their tick
+        // share, exactly as the threaded pipeline's round-robin does
+        let pages = test_pages(3, 7);
+        let mut sched =
+            ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 8, ValueBackend::Native);
+        let mut rng = Rng::new(8);
+        let traces = generate_traces(&pages, 20.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(2.0, 20.0);
+        let res = simulate(&traces, &cfg, &mut sched);
+        let total: u64 = res.crawl_counts.iter().map(|&c| c as u64).sum();
+        assert_eq!(total, res.ticks * 3 / 8, "populated shards keep 3/8 of ticks");
     }
 }

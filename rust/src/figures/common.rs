@@ -8,18 +8,23 @@
 //! ([`run_cell_serial`]; the `parallel_cell_matches_serial_exactly` test
 //! asserts it). Each worker owns a reusable [`SimWorkspace`], so a cell
 //! performs O(threads) scratch allocations instead of O(reps).
+//!
+//! Schedulers are constructed through [`CrawlerBuilder`], so cells,
+//! benches and the CLI all measure exactly the same construction path.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-use crate::coordinator::crawler::{GreedyScheduler, LdsAdapter, ValueBackend};
-use crate::coordinator::lazy::LazyGreedyScheduler;
+use crate::coordinator::builder::CrawlerBuilder;
 use crate::params::{Instance, PageParams};
-use crate::policy::PolicyKind;
 use crate::rngkit::{self, Rng};
-use crate::sim::engine::{Scheduler, SimConfig};
+use crate::sched::{CrawlScheduler, IdleScheduler};
+use crate::sim::engine::SimConfig;
 use crate::sim::metrics::RepAccumulator;
 use crate::sim::{generate_traces, simulate_with, CisDelay, SimWorkspace};
 use crate::solver;
+
+pub use crate::policy::PolicyUnderTest;
 
 /// §6.1 problem-instance specification.
 #[derive(Debug, Clone)]
@@ -92,28 +97,6 @@ impl ExperimentSpec {
     }
 }
 
-/// Which discrete policy implementation an experiment cell runs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PolicyUnderTest {
-    /// Algorithm 1 with the given value function (exact argmax).
-    Greedy(PolicyKind),
-    /// Algorithm 1 via the §5.2 lazy scheduler.
-    Lazy(PolicyKind),
-    /// LDS over the no-CIS continuous optimum (Azar et al.).
-    Lds,
-}
-
-impl PolicyUnderTest {
-    /// Display name.
-    pub fn name(&self) -> String {
-        match self {
-            PolicyUnderTest::Greedy(k) => k.name(),
-            PolicyUnderTest::Lazy(k) => format!("{}-LAZY", k.name()),
-            PolicyUnderTest::Lds => "LDS".into(),
-        }
-    }
-}
-
 /// Outcome of one experiment cell.
 #[derive(Debug, Clone)]
 pub struct CellResult {
@@ -127,8 +110,9 @@ pub struct CellResult {
     pub mean_rates: Vec<f64>,
     /// BASELINE (optimal continuous no-CIS) analytical accuracy.
     pub baseline: f64,
-    /// The instance the cell ran on (normalized importance).
-    pub instance: Instance,
+    /// The instance the cell ran on (normalized importance), shared —
+    /// not cloned per cell — so large-m sweeps don't copy page vectors.
+    pub instance: Arc<Instance>,
 }
 
 /// Construct the scheduler a cell lane runs (shared with
@@ -139,14 +123,19 @@ pub fn make_scheduler(
     put: PolicyUnderTest,
     inst: &Instance,
     no_cis_rates: &[f64],
-) -> Box<dyn Scheduler> {
-    match put {
-        PolicyUnderTest::Greedy(kind) => {
-            Box::new(GreedyScheduler::new(kind, &inst.pages, ValueBackend::Native))
-        }
-        PolicyUnderTest::Lazy(kind) => Box::new(LazyGreedyScheduler::new(kind, &inst.pages)),
-        PolicyUnderTest::Lds => Box::new(LdsAdapter::new(no_cis_rates)),
+) -> Box<dyn CrawlScheduler + Send> {
+    // degraded LDS path: if the continuous solver failed, the cell runs
+    // the shared idle scheduler (no crawls) rather than aborting the
+    // sweep — the builder itself rejects an empty-rate Lds as misuse
+    if put == PolicyUnderTest::Lds && no_cis_rates.is_empty() {
+        return Box::new(IdleScheduler);
     }
+    CrawlerBuilder::new()
+        .policy_under_test(put)
+        .pages(&inst.pages)
+        .lds_rates(no_cis_rates)
+        .build()
+        .expect("cell scheduler construction")
 }
 
 /// Worker threads [`run_cell`] uses to fan repetitions across cores.
@@ -159,22 +148,23 @@ pub fn default_rep_threads() -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
-/// One repetition of a cell: deterministic per-rep seed, fresh scheduler,
-/// streaming engine over the worker's reusable workspace.
+/// One repetition of a cell: deterministic per-rep seed, streaming
+/// engine over the worker's reusable workspace. The worker's scheduler
+/// is reused across repetitions — `simulate_with` fires `on_start`,
+/// which fully resets it (reuse == fresh is parity-tested), so a cell
+/// pays scheduler construction once per worker instead of once per rep.
 fn run_rep(
     spec: &ExperimentSpec,
-    put: PolicyUnderTest,
     inst: &Instance,
-    no_cis_rates: &[f64],
     rep: usize,
     ws: &mut SimWorkspace,
+    sched: &mut dyn CrawlScheduler,
 ) -> (f64, Vec<f64>) {
     let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
     let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
     let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon);
     cfg.cis_discard_window = spec.discard_window;
-    let mut sched = make_scheduler(put, inst, no_cis_rates);
-    let res = simulate_with(ws, &traces, &cfg, sched.as_mut());
+    let res = simulate_with(ws, &traces, &cfg, sched);
     (res.accuracy, res.empirical_rates(spec.horizon))
 }
 
@@ -203,7 +193,7 @@ pub fn run_cell_with_threads(
     threads: usize,
 ) -> CellResult {
     let mut irng = Rng::new(spec.seed);
-    let inst = spec.gen_instance(&mut irng).normalized();
+    let inst = Arc::new(spec.gen_instance(&mut irng).normalized());
     let baseline = solver::baseline_accuracy(&inst).unwrap_or(f64::NAN);
     let no_cis_rates = match put {
         PolicyUnderTest::Lds => solver::solve_no_cis(&inst).map(|s| s.rates).unwrap_or_default(),
@@ -213,26 +203,28 @@ pub fn run_cell_with_threads(
     let mut results: Vec<Option<(f64, Vec<f64>)>> = vec![None; spec.reps];
     if threads <= 1 {
         let mut ws = SimWorkspace::new();
+        let mut sched = make_scheduler(put, &inst, &no_cis_rates);
         for (rep, slot) in results.iter_mut().enumerate() {
-            *slot = Some(run_rep(spec, put, &inst, &no_cis_rates, rep, &mut ws));
+            *slot = Some(run_rep(spec, &inst, rep, &mut ws, sched.as_mut()));
         }
     } else {
         let next = AtomicUsize::new(0);
         let next_ref = &next;
-        let inst_ref = &inst;
+        let inst_ref = &*inst;
         let rates_ref = no_cis_rates.as_slice();
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..threads)
                 .map(|_| {
                     scope.spawn(move || {
                         let mut ws = SimWorkspace::new();
+                        let mut sched = make_scheduler(put, inst_ref, rates_ref);
                         let mut out: Vec<(usize, (f64, Vec<f64>))> = Vec::new();
                         loop {
                             let rep = next_ref.fetch_add(1, Ordering::Relaxed);
                             if rep >= spec.reps {
                                 break;
                             }
-                            out.push((rep, run_rep(spec, put, inst_ref, rates_ref, rep, &mut ws)));
+                            out.push((rep, run_rep(spec, inst_ref, rep, &mut ws, sched.as_mut())));
                         }
                         out
                     })
@@ -264,6 +256,7 @@ pub fn run_cell_with_threads(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::PolicyKind;
 
     #[test]
     fn cell_runs_and_reports() {
@@ -276,6 +269,7 @@ mod tests {
         assert!((0.0..=1.0).contains(&r.mean), "{}", r.mean);
         assert!((0.0..=1.0).contains(&r.baseline));
         assert_eq!(r.mean_rates.len(), 30);
+        assert_eq!(r.instance.pages.len(), 30);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! R: 100 → 150 → 100 vs the constant-R references.
 
 use crate::benchkit::FigureOutput;
-use crate::coordinator::crawler::{GreedyScheduler, ValueBackend};
+use crate::coordinator::builder::{CrawlerBuilder, Strategy};
 use crate::figures::common::ExperimentSpec;
 use crate::policy::PolicyKind;
 use crate::rngkit::Rng;
@@ -25,8 +25,13 @@ fn timeline(
         cis_discard_window: None,
         timeline_window: Some(1000),
     };
-    let mut sched = GreedyScheduler::new(PolicyKind::Greedy, inst_pages, ValueBackend::Native);
-    simulate(&traces, &cfg, &mut sched).timeline
+    let mut sched = CrawlerBuilder::new()
+        .policy(PolicyKind::Greedy)
+        .strategy(Strategy::Exact)
+        .pages(inst_pages)
+        .build()
+        .expect("fig09 scheduler construction");
+    simulate(&traces, &cfg, sched.as_mut()).timeline
 }
 
 /// Resample a timeline onto a regular grid (nearest earlier sample).

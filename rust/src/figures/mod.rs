@@ -1,4 +1,4 @@
-//! Regeneration of every figure in the paper (see DESIGN.md §6).
+//! Regeneration of every figure in the paper (inventory in DESIGN.md).
 //!
 //! Each `figNN` function runs the corresponding experiment and writes
 //! its series via [`crate::benchkit::FigureOutput`] (CSV under

@@ -2,7 +2,7 @@
 //! semi-synthetic experiment with corrupted precision/recall).
 
 use crate::benchkit::FigureOutput;
-use crate::coordinator::lazy::LazyGreedyScheduler;
+use crate::coordinator::builder::{CrawlerBuilder, Strategy};
 use crate::dataset::{self, DatasetConfig};
 use crate::params::{Instance, PageParams};
 use crate::policy::PolicyKind;
@@ -63,11 +63,18 @@ fn run_policy(
     let cfg = SimConfig::new(spec.budget, spec.steps);
     let mut acc = RepAccumulator::new(true_inst.pages.len());
     let mut ws = SimWorkspace::new();
+    // one scheduler reused across reps: on_start resets it (the
+    // scheduler_parity suite asserts reuse == fresh construction)
+    let mut sched = CrawlerBuilder::new()
+        .policy(kind)
+        .strategy(Strategy::Lazy)
+        .pages(believed_pages)
+        .build()
+        .expect("fig05 scheduler construction");
     for rep in 0..spec.reps {
         let mut rng = Rng::new(spec.seed ^ (0xABCD + rep as u64));
         let traces = generate_traces(&true_inst.pages, spec.steps, CisDelay::None, &mut rng);
-        let mut sched = LazyGreedyScheduler::new(kind, believed_pages);
-        let res = simulate_with(&mut ws, &traces, &cfg, &mut sched);
+        let res = simulate_with(&mut ws, &traces, &cfg, sched.as_mut());
         acc.push(res.accuracy, &res.empirical_rates(spec.steps));
     }
     let s = acc.accuracy();

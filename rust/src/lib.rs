@@ -11,7 +11,16 @@
 //! executes the AOT-compiled JAX/Pallas crawl-value graphs from
 //! `artifacts/` on the hot path.
 //!
-//! Architecture map (see `DESIGN.md` for the full inventory):
+//! Scheduling is event-driven: every driver (sim engine, streaming
+//! pipeline, sharded coordinator) speaks the [`sched::CrawlScheduler`]
+//! trait — `on_start` / `on_cis` / `on_crawl` lifecycle hooks plus
+//! `select(t)` — and schedulers own their incremental per-page state
+//! ([`sched::PageTracker`]). Construction goes through one facade,
+//! [`CrawlerBuilder`]: `policy(..) × strategy(Exact|Lazy|Sharded|Lds)
+//! × backend(Native|Pjrt) × pages(..)`.
+//!
+//! Architecture map (see `DESIGN.md` at the repository root for the
+//! full inventory and the API-migration notes):
 //!
 //! - [`special`] — stable evaluation of the exp Taylor residual
 //!   `R^i(x) = P(i+1, x)` underlying every crawl-value formula.
@@ -19,16 +28,23 @@
 //!   (xoshiro256++, exponential/Poisson/beta/Pareto samplers).
 //! - [`params`] — page parametrization `(Δ, μ̃, λ, ν) → (α, β, γ)`.
 //! - [`policy`] — crawl-value functions `V_GREEDY`, `V_GREEDY_CIS`,
-//!   `V_GREEDY_NCIS`, `V_G_NCIS-APPROX-J` and the thresholded policy.
+//!   `V_GREEDY_NCIS`, `V_G_NCIS-APPROX-J`, the [`policy::BeliefModel`]
+//!   projection shared by the native and batched value paths, and the
+//!   round-trippable policy names ([`PolicyKind`] /
+//!   [`policy::PolicyUnderTest`]).
+//! - [`sched`] — the event-driven [`sched::CrawlScheduler`] API and the
+//!   [`sched::PageTracker`] state bookkeeping.
 //! - [`solver`] — optimal continuous policies via Lagrange line search.
 //! - [`lds`] — the low-discrepancy discrete scheduler of Azar et al.
-//! - [`sim`] — Poisson event streams, the discrete-tick simulator and
+//! - [`sim`] — Poisson event streams, the discrete-tick simulator
+//!   (streaming k-way merge + merged-sort parity oracle) and
 //!   accuracy/rate metrics.
 //! - [`estimation`] — Appendix-E estimators for CIS precision/recall.
 //! - [`dataset`] — semi-synthetic stand-in for the (non-public)
 //!   Kolobov et al. dataset.
-//! - [`coordinator`] — Algorithm-1 crawler drivers: exact argmax, the
-//!   §5.2 lazy/tiered scheduler, sharding, streaming pipeline.
+//! - [`coordinator`] — Algorithm-1 crawler drivers behind
+//!   [`CrawlerBuilder`]: exact argmax, the §5.2 lazy/tiered scheduler,
+//!   N-way sharding, the threaded streaming pipeline, politeness.
 //! - [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
 //! - [`figures`] — regeneration of every figure in the paper.
 
@@ -47,6 +63,7 @@ pub mod policy;
 pub mod report;
 pub mod rngkit;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod solver;
 pub mod special;
@@ -54,9 +71,11 @@ pub mod stats;
 pub mod testkit;
 pub mod util;
 
+pub use coordinator::{CrawlerBuilder, Strategy};
 pub use error::{Error, Result};
 pub use params::{DerivedParams, PageParams};
-pub use policy::PolicyKind;
+pub use policy::{PolicyKind, PolicyUnderTest};
+pub use sched::{CrawlScheduler, PageTracker};
 
 mod app;
 pub use app::run_cli;

@@ -1,0 +1,200 @@
+//! Belief projection: one model of "what this policy thinks the CIS
+//! process is", shared by the native f64 and PJRT/batched value paths.
+//!
+//! Pre-redesign this logic lived twice — once inside
+//! `PolicyKind::crawl_value` (native, per-page dispatch) and once as
+//! `belief_params` in `coordinator/crawler.rs` (the projection the
+//! batched kernel is fed). [`BeliefModel`] owns both: it precomputes
+//! the true derived environments *and* the per-policy belief
+//! projections at construction, serves native values through the exact
+//! `crawl_value` dispatch, and hands the batched backends the projected
+//! `DerivedParams` the kernel evaluates.
+
+use crate::params::{DerivedParams, PageParams};
+use crate::policy::{cis_plus_trusts, value, PolicyKind};
+
+/// Project a policy's *beliefs* about the CIS process onto the general
+/// NCIS parametrization the batched kernel evaluates (§5.1 special
+/// cases): GREEDY believes there is no CIS process at all; GREEDY-CIS
+/// believes signals are noiseless (β = ∞, α̂ = Δ − γ); NCIS variants use
+/// the true derived parameters.
+pub fn belief_params(policy: PolicyKind, raw: &PageParams, d: &DerivedParams) -> DerivedParams {
+    match policy {
+        PolicyKind::Greedy => DerivedParams {
+            alpha: d.delta,
+            beta: f64::INFINITY,
+            gamma: 0.0,
+            nu: 0.0,
+            delta: d.delta,
+            mu: d.mu,
+        },
+        PolicyKind::GreedyCis => DerivedParams {
+            alpha: (d.delta - d.gamma).max(1e-6 * d.delta),
+            beta: f64::INFINITY,
+            gamma: d.gamma,
+            nu: 0.0,
+            delta: d.delta,
+            mu: d.mu,
+        },
+        PolicyKind::GreedyCisPlus => {
+            if cis_plus_trusts(raw) {
+                belief_params(PolicyKind::GreedyCis, raw, d)
+            } else {
+                belief_params(PolicyKind::Greedy, raw, d)
+            }
+        }
+        PolicyKind::GreedyNcis | PolicyKind::NcisApprox(_) => *d,
+    }
+}
+
+/// A policy's per-page view of the environment: the true derived
+/// parameters (what the native value dispatch consumes) plus the belief
+/// projection (what batched backends and wake-time inversion consume).
+#[derive(Debug, Clone)]
+pub struct BeliefModel {
+    policy: PolicyKind,
+    raw: Vec<PageParams>,
+    envs: Vec<DerivedParams>,
+    beliefs: Vec<DerivedParams>,
+}
+
+impl BeliefModel {
+    /// Precompute environments and belief projections for every page.
+    pub fn new(policy: PolicyKind, pages: &[PageParams]) -> Self {
+        let envs: Vec<DerivedParams> = pages.iter().map(DerivedParams::from_raw).collect();
+        let beliefs = pages
+            .iter()
+            .zip(&envs)
+            .map(|(p, d)| belief_params(policy, p, d))
+            .collect();
+        Self { policy, raw: pages.to_vec(), envs, beliefs }
+    }
+
+    /// Number of pages.
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// Is the model empty?
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// The policy whose beliefs are modeled.
+    pub fn policy(&self) -> PolicyKind {
+        self.policy
+    }
+
+    /// Raw parameters of page `i`.
+    pub fn raw(&self, i: usize) -> &PageParams {
+        &self.raw[i]
+    }
+
+    /// True derived environment of page `i`.
+    pub fn env(&self, i: usize) -> &DerivedParams {
+        &self.envs[i]
+    }
+
+    /// Belief projection of page `i` (feed this to batched kernels).
+    pub fn belief(&self, i: usize) -> &DerivedParams {
+        &self.beliefs[i]
+    }
+
+    /// Crawl value of page `i` in scheduler state `(tau_elap, n_cis)`
+    /// — the exact native f64 path.
+    #[inline]
+    pub fn value(&self, i: usize, tau_elap: f64, n_cis: u32) -> f64 {
+        self.policy.crawl_value(&self.raw[i], &self.envs[i], tau_elap, n_cis)
+    }
+
+    /// Effective elapsed time of page `i` under the policy's OWN
+    /// beliefs: a pending CIS saturates a noiseless-belief page
+    /// (β̂ = ∞ → capped), while a GREEDY belief (γ̂ = 0) ignores it.
+    #[inline]
+    pub fn effective_time(&self, i: usize, tau_elap: f64, n_cis: u32) -> f64 {
+        self.beliefs[i].effective_time(tau_elap, n_cis)
+    }
+
+    /// Upper bound on page `i`'s crawl value (`μ̃/Δ`).
+    pub fn value_upper_bound(&self, i: usize) -> f64 {
+        self.policy.value_upper_bound(&self.envs[i])
+    }
+
+    /// Approximation level for sum-based evaluations of this policy
+    /// (`j` for `G-NCIS-APPROX-j`, [`value::MAX_TERMS`] otherwise).
+    pub fn terms(&self) -> u32 {
+        match self.policy {
+            PolicyKind::NcisApprox(j) => j,
+            _ => value::MAX_TERMS,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::Rng;
+
+    fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.0, 0.6),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_value_matches_crawl_value_dispatch() {
+        let ps = pages(20, 1);
+        for kind in [
+            PolicyKind::Greedy,
+            PolicyKind::GreedyCis,
+            PolicyKind::GreedyNcis,
+            PolicyKind::NcisApprox(2),
+            PolicyKind::GreedyCisPlus,
+        ] {
+            let model = BeliefModel::new(kind, &ps);
+            for (i, p) in ps.iter().enumerate() {
+                let d = DerivedParams::from_raw(p);
+                for (tau, n) in [(0.5, 0u32), (2.0, 1), (7.5, 3)] {
+                    let want = kind.crawl_value(p, &d, tau, n);
+                    let got = model.value(i, tau, n);
+                    assert_eq!(want.to_bits(), got.to_bits(), "{kind:?} page {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_belief_ignores_cis() {
+        let ps = pages(5, 2);
+        let model = BeliefModel::new(PolicyKind::Greedy, &ps);
+        for i in 0..ps.len() {
+            assert_eq!(model.belief(i).gamma, 0.0);
+            assert_eq!(model.effective_time(i, 3.0, 4), 3.0);
+        }
+    }
+
+    #[test]
+    fn cis_plus_belief_splits_on_quality() {
+        let hi = PageParams::from_quality(0.8, 0.5, 0.9, 0.8);
+        let lo = PageParams::from_quality(0.8, 0.5, 0.2, 0.3);
+        let model = BeliefModel::new(PolicyKind::GreedyCisPlus, &[hi, lo]);
+        // trusted page projects to the GREEDY-CIS belief (γ̂ carried over)
+        assert!(model.belief(0).gamma > 0.0);
+        assert!(model.belief(0).beta.is_infinite());
+        // untrusted page projects to the plain GREEDY belief
+        assert_eq!(model.belief(1).gamma, 0.0);
+    }
+
+    #[test]
+    fn terms_reflect_approximation_level() {
+        let ps = pages(3, 3);
+        assert_eq!(BeliefModel::new(PolicyKind::NcisApprox(4), &ps).terms(), 4);
+        assert_eq!(BeliefModel::new(PolicyKind::GreedyNcis, &ps).terms(), value::MAX_TERMS);
+    }
+}

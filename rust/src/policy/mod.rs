@@ -5,12 +5,35 @@
 //! [`PolicyKind`] selects which *beliefs* a discrete greedy policy holds
 //! about the CIS process (the paper's GREEDY / GREEDY-CIS / GREEDY-NCIS /
 //! G-NCIS-APPROX-J / GREEDY-CIS+ line-up), and maps scheduler state
-//! (elapsed time + CIS count) to a crawl value.
+//! (elapsed time + CIS count) to a crawl value. [`belief::BeliefModel`]
+//! carries the per-page belief projection shared by the native and
+//! batched (PJRT) value paths, and [`PolicyUnderTest`] names a full
+//! policy-under-test configuration (value function × scheduling
+//! strategy) with a round-trippable textual form.
 
+pub mod belief;
 pub mod multisource;
 pub mod value;
 
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::Error;
 use crate::params::{DerivedParams, PageParams};
+
+pub use belief::{belief_params, BeliefModel};
+
+/// GREEDY-CIS+ trusts a page's signals only above this precision (§6.7).
+pub const CIS_PLUS_MIN_PRECISION: f64 = 0.7;
+/// GREEDY-CIS+ trusts a page's signals only above this recall (§6.7).
+pub const CIS_PLUS_MIN_RECALL: f64 = 0.6;
+
+/// Does GREEDY-CIS+ treat this page's CIS as trustworthy?
+/// (precision > 0.7 and recall > 0.6, the §6.7 thresholds.)
+#[inline]
+pub fn cis_plus_trusts(raw: &PageParams) -> bool {
+    raw.precision() > CIS_PLUS_MIN_PRECISION && raw.recall() > CIS_PLUS_MIN_RECALL
+}
 
 /// Which crawl-value function a discrete greedy policy uses (§5.1, §6.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,21 +48,15 @@ pub enum PolicyKind {
     GreedyNcis,
     /// `V_G_NCIS-APPROX-J`: truncate the sum at `j` terms (Appendix A.1).
     NcisApprox(u32),
-    /// GREEDY-CIS+ (§6.7): GREEDY-CIS for high-quality-CIS pages
-    /// (precision > 0.7 and recall > 0.6), plain GREEDY otherwise.
+    /// GREEDY-CIS+ (§6.7): GREEDY-CIS for high-quality-CIS pages (see
+    /// [`cis_plus_trusts`]), plain GREEDY otherwise.
     GreedyCisPlus,
 }
 
 impl PolicyKind {
     /// Human-readable name matching the paper's plots.
     pub fn name(&self) -> String {
-        match self {
-            PolicyKind::Greedy => "GREEDY".into(),
-            PolicyKind::GreedyCis => "GREEDY-CIS".into(),
-            PolicyKind::GreedyNcis => "GREEDY-NCIS".into(),
-            PolicyKind::NcisApprox(j) => format!("G-NCIS-APPROX-{j}"),
-            PolicyKind::GreedyCisPlus => "GREEDY-CIS+".into(),
-        }
+        self.to_string()
     }
 
     /// Does this policy consume CIS events at all?
@@ -70,7 +87,7 @@ impl PolicyKind {
                 value::value_ncis(iota, d, *j)
             }
             PolicyKind::GreedyCisPlus => {
-                if raw.precision() > 0.7 && raw.recall() > 0.6 {
+                if cis_plus_trusts(raw) {
                     value::value_cis_state(d, tau_elap, n_cis)
                 } else {
                     value::value_greedy(tau_elap, d.delta, d.mu)
@@ -85,6 +102,95 @@ impl PolicyKind {
     pub fn value_upper_bound(&self, d: &DerivedParams) -> f64 {
         d.mu / d.delta
     }
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PolicyKind::Greedy => write!(f, "GREEDY"),
+            PolicyKind::GreedyCis => write!(f, "GREEDY-CIS"),
+            PolicyKind::GreedyNcis => write!(f, "GREEDY-NCIS"),
+            PolicyKind::NcisApprox(j) => write!(f, "G-NCIS-APPROX-{j}"),
+            PolicyKind::GreedyCisPlus => write!(f, "GREEDY-CIS+"),
+        }
+    }
+}
+
+impl FromStr for PolicyKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        match s {
+            "GREEDY" => Ok(PolicyKind::Greedy),
+            "GREEDY-CIS" => Ok(PolicyKind::GreedyCis),
+            "GREEDY-NCIS" => Ok(PolicyKind::GreedyNcis),
+            "GREEDY-CIS+" => Ok(PolicyKind::GreedyCisPlus),
+            other => {
+                if let Some(j) = other.strip_prefix("G-NCIS-APPROX-") {
+                    let j: u32 = j.parse().map_err(|_| {
+                        Error::Usage(format!("bad approximation level in {other}"))
+                    })?;
+                    Ok(PolicyKind::NcisApprox(j))
+                } else {
+                    Err(Error::Usage(format!("unknown policy `{other}`")))
+                }
+            }
+        }
+    }
+}
+
+/// Which discrete policy implementation an experiment cell runs: a
+/// value function plus the scheduling strategy that drives it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyUnderTest {
+    /// Algorithm 1 with the given value function (exact argmax).
+    Greedy(PolicyKind),
+    /// Algorithm 1 via the §5.2 lazy scheduler.
+    Lazy(PolicyKind),
+    /// LDS over the no-CIS continuous optimum (Azar et al.).
+    Lds,
+}
+
+impl PolicyUnderTest {
+    /// Display name (as printed in the paper's plots).
+    pub fn name(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl fmt::Display for PolicyUnderTest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PolicyUnderTest::Greedy(k) => write!(f, "{k}"),
+            PolicyUnderTest::Lazy(k) => write!(f, "{k}-LAZY"),
+            PolicyUnderTest::Lds => write!(f, "LDS"),
+        }
+    }
+}
+
+impl FromStr for PolicyUnderTest {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        let (base, lazy) = match s.strip_suffix("-LAZY") {
+            Some(b) => (b, true),
+            None => (s, false),
+        };
+        if base == "LDS" {
+            if lazy {
+                return Err(Error::Usage("LDS has no lazy variant".into()));
+            }
+            return Ok(PolicyUnderTest::Lds);
+        }
+        let kind: PolicyKind = base.parse()?;
+        Ok(if lazy { PolicyUnderTest::Lazy(kind) } else { PolicyUnderTest::Greedy(kind) })
+    }
+}
+
+/// Parse a policy name (as printed in the paper's plots); thin wrapper
+/// over the [`FromStr`] impl for call sites that prefer a function.
+pub fn parse_policy(name: &str) -> crate::Result<PolicyUnderTest> {
+    name.parse()
 }
 
 #[cfg(test)]
@@ -138,15 +244,32 @@ mod tests {
         // high quality: precision 0.9, recall 0.8
         let hp = PageParams::from_quality(0.8, 0.5, 0.9, 0.8);
         let hd = hp.derive().unwrap();
+        assert!(cis_plus_trusts(&hp));
         let v_plus = PolicyKind::GreedyCisPlus.crawl_value(&hp, &hd, 1.0, 1);
         let v_cis = PolicyKind::GreedyCis.crawl_value(&hp, &hd, 1.0, 1);
         assert_eq!(v_plus, v_cis);
         // low quality falls back to GREEDY
         let lp = PageParams::from_quality(0.8, 0.5, 0.1, 0.3);
         let ld = lp.derive().unwrap();
+        assert!(!cis_plus_trusts(&lp));
         let v_plus = PolicyKind::GreedyCisPlus.crawl_value(&lp, &ld, 1.0, 4);
         let v_greedy = PolicyKind::Greedy.crawl_value(&lp, &ld, 1.0, 0);
         assert_eq!(v_plus, v_greedy);
+    }
+
+    #[test]
+    fn quality_thresholds_are_the_shared_consts() {
+        // just above both thresholds: trusted; at a threshold: not
+        // (strict inequalities, as in §6.7)
+        let above = PageParams::from_quality(
+            0.8,
+            0.5,
+            CIS_PLUS_MIN_PRECISION + 0.01,
+            CIS_PLUS_MIN_RECALL + 0.01,
+        );
+        assert!(cis_plus_trusts(&above));
+        let at = PageParams::from_quality(0.8, 0.5, CIS_PLUS_MIN_PRECISION, CIS_PLUS_MIN_RECALL);
+        assert!(!cis_plus_trusts(&at));
     }
 
     #[test]
@@ -159,5 +282,49 @@ mod tests {
                 assert!(v <= ub + 1e-9, "V={v} > ub={ub} at n={n} k={k}");
             }
         }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        // every policy name the CLI accepts must round-trip through
+        // FromStr -> Display, including -LAZY suffixes and the
+        // G-NCIS-APPROX-j family
+        for name in [
+            "GREEDY",
+            "GREEDY-CIS",
+            "GREEDY-NCIS",
+            "GREEDY-CIS+",
+            "G-NCIS-APPROX-1",
+            "G-NCIS-APPROX-2",
+            "G-NCIS-APPROX-7",
+            "G-NCIS-APPROX-64",
+            "LDS",
+            "GREEDY-LAZY",
+            "GREEDY-CIS-LAZY",
+            "GREEDY-NCIS-LAZY",
+            "GREEDY-CIS+-LAZY",
+            "G-NCIS-APPROX-3-LAZY",
+        ] {
+            let put: PolicyUnderTest = name.parse().unwrap();
+            assert_eq!(put.to_string(), name, "round trip of {name}");
+            assert_eq!(put.name(), name);
+            // parse_policy is the same parser
+            assert_eq!(parse_policy(name).unwrap(), put);
+        }
+        // PolicyKind round-trips on its own for the non-strategy names
+        for name in ["GREEDY", "GREEDY-CIS", "GREEDY-NCIS", "GREEDY-CIS+", "G-NCIS-APPROX-5"] {
+            let kind: PolicyKind = name.parse().unwrap();
+            assert_eq!(kind.to_string(), name);
+            assert_eq!(kind.name(), name);
+        }
+    }
+
+    #[test]
+    fn bad_policy_names_rejected() {
+        assert!("NOPE".parse::<PolicyUnderTest>().is_err());
+        assert!("G-NCIS-APPROX-x".parse::<PolicyUnderTest>().is_err());
+        assert!("LDS-LAZY".parse::<PolicyUnderTest>().is_err());
+        assert!("greedy".parse::<PolicyKind>().is_err());
+        assert!("".parse::<PolicyUnderTest>().is_err());
     }
 }

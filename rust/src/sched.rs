@@ -1,0 +1,258 @@
+//! The event-driven scheduling API every crawl driver speaks.
+//!
+//! Pre-redesign, the simulator handed each policy the full
+//! `&[PageState]` slice on every call — an O(m)-per-tick contract that
+//! hard-wired full rescans into every implementation and blocked the
+//! lazy/sharded paths from being truly incremental. [`CrawlScheduler`]
+//! inverts that: the *driver* (sim engine, streaming pipeline, sharded
+//! coordinator) pushes lifecycle events and each scheduler owns exactly
+//! the per-page state it needs:
+//!
+//! - [`CrawlScheduler::on_start`] — a run begins over `m` pages; reset
+//!   all mutable state (schedulers are reusable across repetitions).
+//! - [`CrawlScheduler::on_cis`] — a change-indicating signal for `page`
+//!   was delivered at time `t` (drivers apply any discard window first).
+//! - [`CrawlScheduler::on_crawl`] — `page` was crawled at time `t`
+//!   (always fired by the driver right after a `select` pick is acted
+//!   on; schedulers reset their per-page beliefs here).
+//! - [`CrawlScheduler::select`] — pick the page to crawl at tick `t`.
+//!
+//! [`PageTracker`] is the shared bookkeeping every stateful scheduler
+//! embeds: last-crawl times and pending-CIS counts, updated from the
+//! hooks with exactly the semantics the pre-redesign engine used for
+//! its `PageState` slice (the `scheduler_parity` integration suite
+//! asserts bit-identical behavior).
+//!
+//! Construction goes through [`crate::CrawlerBuilder`], which wires any
+//! policy × strategy × value-backend combination behind this trait.
+
+/// A discrete crawling policy driven by lifecycle events.
+///
+/// Implementations own their per-page state (usually a [`PageTracker`])
+/// and update it incrementally from the hooks; no driver ever hands
+/// them a global state slice.
+pub trait CrawlScheduler {
+    /// A run over `m` pages begins. Implementations must reset every
+    /// piece of mutable state so one scheduler instance can be reused
+    /// across repetitions. Drivers call this exactly once per run,
+    /// before any other hook.
+    fn on_start(&mut self, m: usize) {
+        let _ = m;
+    }
+
+    /// A CIS for `page` was delivered at time `t` (after the driver's
+    /// discard window, if any, was applied).
+    fn on_cis(&mut self, page: usize, t: f64) {
+        let _ = (page, t);
+    }
+
+    /// `page` was crawled at time `t`. Fired by the driver immediately
+    /// after it acts on a `select` pick.
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        let _ = (page, t);
+    }
+
+    /// A `select` pick was rejected by a decorator (e.g. politeness
+    /// cool-down) and will NOT be crawled this tick. Schedulers with
+    /// internal candidate queues should sideline the page so an
+    /// immediate retry yields the next-best pick.
+    fn on_veto(&mut self, page: usize, t: f64) {
+        let _ = (page, t);
+    }
+
+    /// Page to crawl at tick time `t` (`None` = idle tick).
+    fn select(&mut self, t: f64) -> Option<usize>;
+
+    /// Policy name for reports.
+    fn name(&self) -> String {
+        "scheduler".into()
+    }
+}
+
+/// Boxed schedulers are schedulers (the pipeline ships
+/// `Box<dyn CrawlScheduler + Send>` into shard workers; decorators like
+/// `PoliteScheduler` wrap the box directly).
+impl<S: CrawlScheduler + ?Sized> CrawlScheduler for Box<S> {
+    fn on_start(&mut self, m: usize) {
+        (**self).on_start(m)
+    }
+    fn on_cis(&mut self, page: usize, t: f64) {
+        (**self).on_cis(page, t)
+    }
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        (**self).on_crawl(page, t)
+    }
+    fn on_veto(&mut self, page: usize, t: f64) {
+        (**self).on_veto(page, t)
+    }
+    fn select(&mut self, t: f64) -> Option<usize> {
+        (**self).select(t)
+    }
+    fn name(&self) -> String {
+        (**self).name()
+    }
+}
+
+/// The scheduler that never crawls: every tick idles.
+///
+/// Degraded-mode stand-in shared by the drivers — the streaming
+/// pipeline runs it on empty shards (shards > pages) and the figure
+/// harness runs it when a baseline solver yields no schedulable rates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdleScheduler;
+
+impl CrawlScheduler for IdleScheduler {
+    fn select(&mut self, _t: f64) -> Option<usize> {
+        None
+    }
+
+    fn name(&self) -> String {
+        "IDLE".into()
+    }
+}
+
+/// Incremental per-page crawl state: last-crawl time and the number of
+/// CIS delivered since (the two inputs of every crawl-value function).
+///
+/// Semantics mirror the pre-redesign engine slice exactly: pages start
+/// fresh at `last_crawl = 0`, CIS counts saturate instead of wrapping,
+/// and a crawl resets the count to zero.
+#[derive(Debug, Clone, Default)]
+pub struct PageTracker {
+    last_crawl: Vec<f64>,
+    n_cis: Vec<u32>,
+}
+
+impl PageTracker {
+    /// Tracker over `m` pages, all fresh at t = 0.
+    pub fn new(m: usize) -> Self {
+        let mut tracker = Self::default();
+        tracker.reset(m);
+        tracker
+    }
+
+    /// Re-dimension to `m` pages and clear all state (the `on_start`
+    /// contract); capacity is retained.
+    pub fn reset(&mut self, m: usize) {
+        self.last_crawl.clear();
+        self.last_crawl.resize(m, 0.0);
+        self.n_cis.clear();
+        self.n_cis.resize(m, 0);
+    }
+
+    /// Number of tracked pages.
+    pub fn len(&self) -> usize {
+        self.last_crawl.len()
+    }
+
+    /// Is the tracker empty?
+    pub fn is_empty(&self) -> bool {
+        self.last_crawl.is_empty()
+    }
+
+    /// Record a delivered CIS (saturating, like the engine of old).
+    #[inline]
+    pub fn on_cis(&mut self, page: usize) {
+        self.n_cis[page] = self.n_cis[page].saturating_add(1);
+    }
+
+    /// Record a crawl: the page is fresh again and its CIS count clears.
+    #[inline]
+    pub fn on_crawl(&mut self, page: usize, t: f64) {
+        self.last_crawl[page] = t;
+        self.n_cis[page] = 0;
+    }
+
+    /// Elapsed time since `page` was last crawled.
+    #[inline]
+    pub fn tau_elap(&self, page: usize, t: f64) -> f64 {
+        t - self.last_crawl[page]
+    }
+
+    /// CIS delivered to `page` since its last crawl.
+    #[inline]
+    pub fn n_cis(&self, page: usize) -> u32 {
+        self.n_cis[page]
+    }
+
+    /// Time of `page`'s last crawl (0 if never crawled).
+    #[inline]
+    pub fn last_crawl(&self, page: usize) -> f64 {
+        self.last_crawl[page]
+    }
+
+    /// Test hook: seed a CIS count directly (saturation is unreachable
+    /// through `on_cis` alone within a test's budget).
+    #[cfg(test)]
+    fn set_n_cis(&mut self, page: usize, n: u32) {
+        self.n_cis[page] = n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_lifecycle() {
+        let mut tr = PageTracker::new(3);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.tau_elap(1, 2.5), 2.5);
+        tr.on_cis(1);
+        tr.on_cis(1);
+        assert_eq!(tr.n_cis(1), 2);
+        assert_eq!(tr.n_cis(0), 0);
+        tr.on_crawl(1, 3.0);
+        assert_eq!(tr.n_cis(1), 0);
+        assert_eq!(tr.last_crawl(1), 3.0);
+        assert_eq!(tr.tau_elap(1, 4.0), 1.0);
+    }
+
+    #[test]
+    fn reset_clears_and_redimensions() {
+        let mut tr = PageTracker::new(2);
+        tr.on_cis(0);
+        tr.on_crawl(1, 9.0);
+        tr.reset(4);
+        assert_eq!(tr.len(), 4);
+        for i in 0..4 {
+            assert_eq!(tr.n_cis(i), 0);
+            assert_eq!(tr.last_crawl(i), 0.0);
+        }
+    }
+
+    #[test]
+    fn cis_count_saturates_at_u32_max() {
+        let mut tr = PageTracker::new(1);
+        for k in 1..=3 {
+            tr.on_cis(0);
+            assert_eq!(tr.n_cis(0), k);
+        }
+        // the actual saturation semantics: at the ceiling, further CIS
+        // must pin at u32::MAX (a plain `+ 1` would overflow here)
+        tr.set_n_cis(0, u32::MAX - 1);
+        tr.on_cis(0);
+        assert_eq!(tr.n_cis(0), u32::MAX);
+        tr.on_cis(0);
+        assert_eq!(tr.n_cis(0), u32::MAX, "count must saturate, not wrap");
+        // a crawl still clears a saturated count
+        tr.on_crawl(0, 5.0);
+        assert_eq!(tr.n_cis(0), 0);
+    }
+
+    #[test]
+    fn boxed_scheduler_is_a_scheduler() {
+        struct Fixed(usize);
+        impl CrawlScheduler for Fixed {
+            fn select(&mut self, _t: f64) -> Option<usize> {
+                Some(self.0)
+            }
+            fn name(&self) -> String {
+                "FIXED".into()
+            }
+        }
+        let mut boxed: Box<dyn CrawlScheduler + Send> = Box::new(Fixed(7));
+        assert_eq!(boxed.select(0.0), Some(7));
+        assert_eq!(boxed.name(), "FIXED");
+    }
+}

@@ -1,9 +1,14 @@
 //! Discrete-tick crawl simulator.
 //!
-//! Replays generated event traces against a [`Scheduler`]: one crawl per
-//! tick (`t_j = j/R`, with `R` allowed to change over time per the
+//! Replays generated event traces against a
+//! [`CrawlScheduler`](crate::sched::CrawlScheduler): one crawl per tick
+//! (`t_j = j/R`, with `R` allowed to change over time per the
 //! Appendix-D experiment), exact freshness accounting per request event,
-//! and the Appendix-C CIS discard window.
+//! and the Appendix-C CIS discard window. The engine is purely a
+//! *driver*: it pushes `on_start` / `on_cis` / `on_crawl` lifecycle
+//! events and asks `select(t)` at each tick — schedulers own their own
+//! per-page state (see [`crate::sched`]), the engine only keeps what
+//! freshness accounting and the discard window need.
 //!
 //! ## Streaming engine
 //!
@@ -28,40 +33,9 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::sched::CrawlScheduler;
 use crate::sim::events::{EventTraces, PageTrace};
 use crate::util::OrdF64;
-
-/// Scheduler-visible state of one page.
-#[derive(Debug, Clone, Copy)]
-pub struct PageState {
-    /// Time of the last crawl (0 initially; all pages start fresh).
-    pub last_crawl: f64,
-    /// CIS delivered since the last crawl (after the discard window).
-    pub n_cis: u32,
-}
-
-impl PageState {
-    /// Elapsed time since the last crawl.
-    #[inline]
-    pub fn tau_elap(&self, t: f64) -> f64 {
-        t - self.last_crawl
-    }
-}
-
-/// A discrete crawling policy driven by the simulator.
-pub trait Scheduler {
-    /// Page to crawl at tick time `t` (None = idle tick).
-    fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize>;
-    /// Notification: a CIS for `page` was delivered at time `t` (after
-    /// the engine's discard window was applied).
-    fn on_cis(&mut self, _page: usize, _t: f64, _states: &[PageState]) {}
-    /// Notification: `page` was crawled at time `t`.
-    fn on_crawl(&mut self, _page: usize, _t: f64, _states: &[PageState]) {}
-    /// Policy name for reports.
-    fn name(&self) -> String {
-        "scheduler".into()
-    }
-}
 
 /// A bandwidth schedule: piecewise-constant R over time.
 #[derive(Debug, Clone)]
@@ -155,15 +129,17 @@ const KIND_REQUEST: u8 = 2;
 
 /// Reusable per-repetition scratch of the streaming engine.
 ///
-/// Owns every allocation `simulate_with` needs: scheduler-visible page
-/// states, dirty bits, crawl counters, the rolling-accuracy ring and the
-/// k-way merge heap + per-page cursors. `reset` clears without
-/// releasing capacity, so a workspace threaded through `R` repetitions
-/// of an `m`-page cell allocates O(m) once instead of O(E log E) work
-/// and O(E) memory per repetition.
+/// Owns every allocation `simulate_with` needs: the engine-side
+/// freshness state (dirty bits + last-crawl times for the discard
+/// window), crawl counters, the rolling-accuracy ring and the k-way
+/// merge heap + per-page cursors. `reset` clears without releasing
+/// capacity, so a workspace threaded through `R` repetitions of an
+/// `m`-page cell allocates O(m) once instead of O(E log E) work and
+/// O(E) memory per repetition.
 #[derive(Debug, Default)]
 pub struct SimWorkspace {
-    states: Vec<PageState>,
+    /// Last crawl time per page (drives the Appendix-C discard window).
+    last_crawl: Vec<f64>,
     changed: Vec<bool>,
     crawl_counts: Vec<u32>,
     ring: Vec<bool>,
@@ -179,8 +155,8 @@ impl SimWorkspace {
     }
 
     fn reset(&mut self, m: usize) {
-        self.states.clear();
-        self.states.resize(m, PageState { last_crawl: 0.0, n_cis: 0 });
+        self.last_crawl.clear();
+        self.last_crawl.resize(m, 0.0);
         self.changed.clear();
         self.changed.resize(m, false);
         self.crawl_counts.clear();
@@ -228,7 +204,7 @@ fn push_next(
 pub fn simulate(
     traces: &EventTraces,
     cfg: &SimConfig,
-    scheduler: &mut dyn Scheduler,
+    scheduler: &mut dyn CrawlScheduler,
 ) -> SimResult {
     let mut ws = SimWorkspace::new();
     simulate_with(&mut ws, traces, cfg, scheduler)
@@ -239,10 +215,11 @@ pub fn simulate_with(
     ws: &mut SimWorkspace,
     traces: &EventTraces,
     cfg: &SimConfig,
-    scheduler: &mut dyn Scheduler,
+    scheduler: &mut dyn CrawlScheduler,
 ) -> SimResult {
     let m = traces.pages.len();
     ws.reset(m);
+    scheduler.on_start(m);
     for (i, p) in traces.pages.iter().enumerate() {
         // the cursor merge relies on each per-page stream being
         // time-sorted (the old engine sorted globally and did not care)
@@ -316,12 +293,11 @@ pub fn simulate_with(
                 _ => {
                     // KIND_CIS
                     let keep = match cfg.cis_discard_window {
-                        Some(w) => et - ws.states[i].last_crawl >= w,
+                        Some(w) => et - ws.last_crawl[i] >= w,
                         None => true,
                     };
                     if keep {
-                        ws.states[i].n_cis = ws.states[i].n_cis.saturating_add(1);
-                        scheduler.on_cis(i, et, &ws.states);
+                        scheduler.on_cis(i, et);
                     }
                     ws.cursors[i][1] += 1;
                 }
@@ -331,12 +307,12 @@ pub fn simulate_with(
         // crawl at the tick
         t = next_tick;
         ticks += 1;
-        if let Some(i) = scheduler.select(t, &ws.states) {
+        if let Some(i) = scheduler.select(t) {
             debug_assert!(i < m);
             ws.changed[i] = false;
-            ws.states[i] = PageState { last_crawl: t, n_cis: 0 };
+            ws.last_crawl[i] = t;
             ws.crawl_counts[i] += 1;
-            scheduler.on_crawl(i, t, &ws.states);
+            scheduler.on_crawl(i, t);
         }
         if window > 0 && !ws.ring.is_empty() {
             timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
@@ -383,9 +359,10 @@ pub fn simulate_with(
 pub fn simulate_reference(
     traces: &EventTraces,
     cfg: &SimConfig,
-    scheduler: &mut dyn Scheduler,
+    scheduler: &mut dyn CrawlScheduler,
 ) -> SimResult {
     let m = traces.pages.len();
+    scheduler.on_start(m);
     // Build the merged, time-sorted event list once.
     let mut events: Vec<(f64, u8, u32)> = Vec::new();
     for (i, p) in traces.pages.iter().enumerate() {
@@ -399,7 +376,7 @@ pub fn simulate_reference(
         a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
     });
 
-    let mut states = vec![PageState { last_crawl: 0.0, n_cis: 0 }; m];
+    let mut last_crawl = vec![0.0f64; m];
     let mut changed = vec![false; m];
     let mut crawl_counts = vec![0u32; m];
     let mut fresh_hits = 0u64;
@@ -450,12 +427,11 @@ pub fn simulate_reference(
                 }
                 _ => {
                     let keep = match cfg.cis_discard_window {
-                        Some(w) => et - states[i].last_crawl >= w,
+                        Some(w) => et - last_crawl[i] >= w,
                         None => true,
                     };
                     if keep {
-                        states[i].n_cis = states[i].n_cis.saturating_add(1);
-                        scheduler.on_cis(i, et, &states);
+                        scheduler.on_cis(i, et);
                     }
                 }
             }
@@ -463,12 +439,12 @@ pub fn simulate_reference(
         }
         t = next_tick;
         ticks += 1;
-        if let Some(i) = scheduler.select(t, &states) {
+        if let Some(i) = scheduler.select(t) {
             debug_assert!(i < m);
             changed[i] = false;
-            states[i] = PageState { last_crawl: t, n_cis: 0 };
+            last_crawl[i] = t;
             crawl_counts[i] += 1;
-            scheduler.on_crawl(i, t, &states);
+            scheduler.on_crawl(i, t);
         }
         if window > 0 && !ring.is_empty() {
             timeline.push((t, ring_fresh as f64 / ring.len() as f64));
@@ -502,6 +478,7 @@ mod tests {
     use super::*;
     use crate::params::PageParams;
     use crate::rngkit::Rng;
+    use crate::sched::PageTracker;
     use crate::sim::events::{generate_traces, CisDelay};
 
     /// Round-robin scheduler for engine-level tests.
@@ -509,8 +486,12 @@ mod tests {
         m: usize,
         next: usize,
     }
-    impl Scheduler for RoundRobin {
-        fn select(&mut self, _t: f64, _s: &[PageState]) -> Option<usize> {
+    impl CrawlScheduler for RoundRobin {
+        fn on_start(&mut self, m: usize) {
+            self.m = m;
+            self.next = 0;
+        }
+        fn select(&mut self, _t: f64) -> Option<usize> {
             let i = self.next;
             self.next = (self.next + 1) % self.m;
             Some(i)
@@ -551,23 +532,41 @@ mod tests {
         assert_eq!(res.fresh_hits, 2);
     }
 
+    /// Crawls page 0 every tick, recording its pending-CIS count first
+    /// (exercises the event-driven on_cis/on_crawl bookkeeping).
+    struct Capture {
+        tracker: PageTracker,
+        seen: Vec<u32>,
+    }
+    impl Capture {
+        fn new() -> Self {
+            Self { tracker: PageTracker::default(), seen: vec![] }
+        }
+    }
+    impl CrawlScheduler for Capture {
+        fn on_start(&mut self, m: usize) {
+            self.tracker.reset(m);
+        }
+        fn on_cis(&mut self, page: usize, _t: f64) {
+            self.tracker.on_cis(page);
+        }
+        fn on_crawl(&mut self, page: usize, t: f64) {
+            self.tracker.on_crawl(page, t);
+        }
+        fn select(&mut self, _t: f64) -> Option<usize> {
+            self.seen.push(self.tracker.n_cis(0));
+            Some(0)
+        }
+    }
+
     #[test]
     fn cis_resets_on_crawl() {
-        struct Capture {
-            seen: Vec<u32>,
-        }
-        impl Scheduler for Capture {
-            fn select(&mut self, _t: f64, s: &[PageState]) -> Option<usize> {
-                self.seen.push(s[0].n_cis);
-                Some(0)
-            }
-        }
         let tr = traces_from(
             vec![PageTrace { changes: vec![], cis: vec![0.4, 0.9, 1.4], requests: vec![] }],
             3.0,
         );
         let cfg = SimConfig::new(1.0, 3.0);
-        let mut s = Capture { seen: vec![] };
+        let mut s = Capture::new();
         let res = simulate(&tr, &cfg, &mut s);
         // tick at t=1: cis 0.4, 0.9 delivered -> n=2; crawl resets
         // tick at t=2: cis 1.4 -> n=1; tick at t=3: none -> 0
@@ -577,15 +576,6 @@ mod tests {
 
     #[test]
     fn discard_window_drops_fresh_cis() {
-        struct Capture {
-            seen: Vec<u32>,
-        }
-        impl Scheduler for Capture {
-            fn select(&mut self, _t: f64, s: &[PageState]) -> Option<usize> {
-                self.seen.push(s[0].n_cis);
-                Some(0)
-            }
-        }
         // crawl happens at t=1,2,3; cis at 1.05 (within 0.2 of crawl@1 ->
         // dropped), cis at 2.5 (kept)
         let tr = traces_from(
@@ -594,7 +584,7 @@ mod tests {
         );
         let mut cfg = SimConfig::new(1.0, 4.0);
         cfg.cis_discard_window = Some(0.2);
-        let mut s = Capture { seen: vec![] };
+        let mut s = Capture::new();
         simulate(&tr, &cfg, &mut s);
         assert_eq!(s.seen, vec![0, 0, 1, 0]);
     }
@@ -667,13 +657,29 @@ mod tests {
     /// Deterministic state-dependent scheduler: exercises tau_elap and
     /// n_cis so any divergence in event application order or state
     /// bookkeeping cascades into different crawl choices.
-    struct StateScore;
-    impl Scheduler for StateScore {
-        fn select(&mut self, t: f64, states: &[PageState]) -> Option<usize> {
+    struct StateScore {
+        tracker: PageTracker,
+    }
+    impl StateScore {
+        fn new() -> Self {
+            Self { tracker: PageTracker::default() }
+        }
+    }
+    impl CrawlScheduler for StateScore {
+        fn on_start(&mut self, m: usize) {
+            self.tracker.reset(m);
+        }
+        fn on_cis(&mut self, page: usize, _t: f64) {
+            self.tracker.on_cis(page);
+        }
+        fn on_crawl(&mut self, page: usize, t: f64) {
+            self.tracker.on_crawl(page, t);
+        }
+        fn select(&mut self, t: f64) -> Option<usize> {
             let mut best = f64::NEG_INFINITY;
             let mut arg = None;
-            for (i, s) in states.iter().enumerate() {
-                let v = s.tau_elap(t) + 3.7 * s.n_cis as f64;
+            for i in 0..self.tracker.len() {
+                let v = self.tracker.tau_elap(i, t) + 3.7 * self.tracker.n_cis(i) as f64;
                 if v > best {
                     best = v;
                     arg = Some(i);
@@ -725,8 +731,8 @@ mod tests {
                 cfg.cis_discard_window = Some(0.15);
             }
             cfg.timeline_window = Some(16);
-            let a = simulate(&tr, &cfg, &mut StateScore);
-            let b = simulate_reference(&tr, &cfg, &mut StateScore);
+            let a = simulate(&tr, &cfg, &mut StateScore::new());
+            let b = simulate_reference(&tr, &cfg, &mut StateScore::new());
             assert_bit_identical(&a, &b, &format!("seed {seed}"));
         }
     }
@@ -740,8 +746,8 @@ mod tests {
             cis_discard_window: Some(0.1),
             timeline_window: Some(8),
         };
-        let a = simulate(&tr, &cfg, &mut StateScore);
-        let b = simulate_reference(&tr, &cfg, &mut StateScore);
+        let a = simulate(&tr, &cfg, &mut StateScore::new());
+        let b = simulate_reference(&tr, &cfg, &mut StateScore::new());
         assert_bit_identical(&a, &b, "schedule");
     }
 
@@ -777,9 +783,24 @@ mod tests {
             let tr = random_traces(seed, m, 25.0, CisDelay::None);
             let mut cfg = SimConfig::new(3.0, 25.0);
             cfg.timeline_window = Some(12);
-            let reused = simulate_with(&mut ws, &tr, &cfg, &mut StateScore);
-            let fresh = simulate(&tr, &cfg, &mut StateScore);
+            let reused = simulate_with(&mut ws, &tr, &cfg, &mut StateScore::new());
+            let fresh = simulate(&tr, &cfg, &mut StateScore::new());
             assert_bit_identical(&reused, &fresh, &format!("reuse seed {seed}"));
+        }
+    }
+
+    #[test]
+    fn scheduler_reuse_is_equivalent_to_fresh() {
+        // the on_start contract: one scheduler instance reused across
+        // repetitions must behave exactly like a fresh one
+        let mut reused = StateScore::new();
+        for seed in [4u64, 5, 6] {
+            let m = 8 + 5 * seed as usize;
+            let tr = random_traces(seed, m, 20.0, CisDelay::None);
+            let cfg = SimConfig::new(3.0, 20.0);
+            let a = simulate(&tr, &cfg, &mut reused);
+            let b = simulate(&tr, &cfg, &mut StateScore::new());
+            assert_bit_identical(&a, &b, &format!("scheduler reuse seed {seed}"));
         }
     }
 
@@ -792,8 +813,8 @@ mod tests {
             2.0,
         );
         let cfg = SimConfig::new(0.25, 2.0); // no tick before t=2 -> no crawl before events
-        let a = simulate(&tr, &cfg, &mut StateScore);
-        let b = simulate_reference(&tr, &cfg, &mut StateScore);
+        let a = simulate(&tr, &cfg, &mut StateScore::new());
+        let b = simulate_reference(&tr, &cfg, &mut StateScore::new());
         assert_eq!(a.requests, 1);
         assert_eq!(a.fresh_hits, 0);
         assert_bit_identical(&a, &b, "simultaneous");

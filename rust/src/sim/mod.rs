@@ -2,8 +2,9 @@
 //!
 //! [`events`] generates per-page change / request / CIS event traces
 //! (with optional CIS delivery delays, Appendix C); [`engine`] replays
-//! them against a [`engine::Scheduler`] at tick times `t_j = j/R`
-//! (supporting the Appendix-D bandwidth schedule changes) and accounts
+//! them against a [`crate::sched::CrawlScheduler`] at tick times
+//! `t_j = j/R` (supporting the Appendix-D bandwidth schedule changes),
+//! pushing `on_cis`/`on_crawl` lifecycle events and accounting
 //! freshness per request; [`metrics`] aggregates accuracy and empirical
 //! crawl rates across repetitions.
 //!
@@ -17,7 +18,7 @@ pub mod events;
 pub mod metrics;
 
 pub use engine::{
-    PageState, Scheduler, SimConfig, SimResult, SimWorkspace, simulate, simulate_reference,
-    simulate_with,
+    simulate, simulate_reference, simulate_with, BandwidthSchedule, SimConfig, SimResult,
+    SimWorkspace,
 };
-pub use events::{CisDelay, EventTraces, generate_traces};
+pub use events::{generate_traces, CisDelay, EventTraces};
