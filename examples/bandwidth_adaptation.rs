@@ -20,7 +20,7 @@ fn main() -> ncis_crawl::Result<()> {
     let horizon = 400.0;
 
     let schedule =
-        BandwidthSchedule { segments: vec![(0.0, 100.0), (133.0, 150.0), (266.0, 100.0)] };
+        BandwidthSchedule::new(vec![(0.0, 100.0), (133.0, 150.0), (266.0, 100.0)])?;
     let cfg = SimConfig {
         bandwidth: schedule,
         horizon,

@@ -2,6 +2,10 @@
 //!
 //! - value-function evaluation throughput (native f64)
 //! - batched crawl values: PJRT (AOT Pallas kernel) vs native, by batch
+//! - select-heavy argmax: the scalar full-scan reference vs the
+//!   batched/bound-pruned columnar path at m ∈ {1e4, 1e5} (the
+//!   columnar-hot-path acceptance lane)
+//! - wake calendar: `BinaryHeap` vs the hierarchical `TimingWheel`
 //! - scheduler tick cost: exact argmax vs the §5.2 lazy scheduler
 //! - end-to-end simulation throughput
 //! - experiment-cell wall clock: pre-change serial merged-sort engine vs
@@ -11,11 +15,14 @@
 //! Every lane is also recorded into `BENCH_perf.json` (via
 //! `benchkit::BenchJson`) so future PRs have a machine-readable perf
 //! trajectory. Scale the acceptance cell down on small machines with
-//! `NCIS_PERF_M` / `NCIS_PERF_T` / `NCIS_PERF_REPS`.
+//! `NCIS_PERF_M` / `NCIS_PERF_T` / `NCIS_PERF_REPS`, or pass `--smoke`
+//! (`cargo bench --bench perf -- --smoke`) for the CI-sized run that
+//! exercises every lane at tiny m.
 
 use std::time::Instant;
 
 use ncis_crawl::benchkit::{measure, report, BenchJson};
+use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
 use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
 use ncis_crawl::figures::common::{
     default_rep_threads, make_scheduler, run_cell_with_threads, ExperimentSpec, PolicyUnderTest,
@@ -24,8 +31,11 @@ use ncis_crawl::params::DerivedParams;
 use ncis_crawl::policy::{value, PolicyKind};
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::runtime::{NativeEngine, PjrtEngine, ValueBatch};
+use ncis_crawl::sched::wheel::TimingWheel;
+use ncis_crawl::sched::CrawlScheduler;
 use ncis_crawl::sim::metrics::RepAccumulator;
 use ncis_crawl::sim::{generate_traces, simulate, simulate_reference, CisDelay, SimConfig};
+use ncis_crawl::util::OrdF64;
 use ncis_crawl::{CrawlerBuilder, Strategy};
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -121,9 +131,148 @@ fn bench_batched_values(json: &mut BenchJson) {
     }
 }
 
-fn bench_schedulers(json: &mut BenchJson) {
-    println!("\n-- scheduler tick cost: exact vs lazy (m=5000) --");
-    let spec = ExperimentSpec::section6(5000, 1).with_partial_cis().with_false_positives();
+/// Select-heavy argmax lanes: the acceptance criterion of the columnar
+/// hot-path PR. Both lanes drive the SAME scheduler state transitions
+/// (select → crawl the pick → advance one tick), differing only in the
+/// evaluation path: `select_scalar_reference` is the pre-columnar full
+/// O(m) scalar scan kept in-tree as the oracle; `select` is the batched
+/// columnar kernel + bound-pruned fused argmax.
+fn bench_select_argmax(json: &mut BenchJson, smoke: bool) {
+    let ms: &[usize] = if smoke { &[1024] } else { &[10_000, 100_000] };
+    for &m in ms {
+        println!("\n-- select-heavy argmax: scalar reference vs batched (m={m}) --");
+        let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+        let mut rng = Rng::new(11);
+        let inst = spec.gen_instance(&mut rng).normalized();
+        let dt = 0.01; // R = 100 tick spacing
+        let mut lanes = Vec::new();
+        for scalar in [true, false] {
+            let mut s =
+                GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
+            s.on_start(inst.pages.len());
+            // warm into steady state (same path as the timed loop)
+            let mut t = 0.0;
+            for _ in 0..64 {
+                t += dt;
+                let pick = if scalar { s.select_scalar_reference(t) } else { s.select(t) };
+                if let Some(i) = pick {
+                    s.on_crawl(i, t);
+                }
+            }
+            let meas = measure(
+                || {
+                    t += dt;
+                    let pick = if scalar { s.select_scalar_reference(t) } else { s.select(t) };
+                    if let Some(i) = pick {
+                        s.on_crawl(i, t);
+                    }
+                },
+                5,
+                0.1,
+            );
+            let label = if scalar { "scalar" } else { "batched" };
+            report(&format!("{label:>8} select m={m}"), &meas);
+            println!("{:>46} {:.1}k selects/s", "", meas.per_second(1.0) / 1e3);
+            json.lane(
+                &format!("select_{label}_m{m}"),
+                &[("seconds_per_select", meas.mean_s), ("selects_per_s", meas.per_second(1.0))],
+            );
+            lanes.push(meas.mean_s);
+        }
+        let speedup = lanes[0] / lanes[1].max(1e-12);
+        println!("batched argmax speedup at m={m}: {speedup:.1}x");
+        json.lane(&format!("select_speedup_m{m}"), &[("x", speedup)]);
+    }
+}
+
+/// Wake-calendar lanes: `BinaryHeap` vs the hierarchical `TimingWheel`
+/// on the lazy scheduler's workload shape — schedule a population of
+/// wakes, then repeatedly advance time, drain the due set and reschedule
+/// each drained entry into the future.
+fn bench_calendar(json: &mut BenchJson, smoke: bool) {
+    let n: usize = if smoke { 2_048 } else { 65_536 };
+    let steps: usize = if smoke { 64 } else { 256 };
+    println!("\n-- wake calendar: BinaryHeap vs TimingWheel (n={n}, {steps} drains/pass) --");
+    // pre-generate the deterministic wake offsets both calendars replay
+    let mut rng = Rng::new(17);
+    let offsets: Vec<f64> = (0..n * 4).map(|_| 10f64.powf(rng.range(-1.5, 2.5))).collect();
+    let dt = 0.25f64;
+
+    let m_heap = {
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(OrdF64, u32, u32)>> =
+            std::collections::BinaryHeap::new();
+        let mut oi = 0usize;
+        measure(
+            || {
+                heap.clear();
+                let mut t = 0.0f64;
+                let mut ver = 0u32;
+                for p in 0..n as u32 {
+                    heap.push(std::cmp::Reverse((OrdF64(offsets[oi % offsets.len()]), ver, p)));
+                    oi += 1;
+                }
+                for _ in 0..steps {
+                    t += dt;
+                    while let Some(&std::cmp::Reverse((OrdF64(wt), _, p))) = heap.peek() {
+                        if wt > t {
+                            break;
+                        }
+                        heap.pop();
+                        ver = ver.wrapping_add(1);
+                        let off = offsets[oi % offsets.len()];
+                        oi += 1;
+                        heap.push(std::cmp::Reverse((OrdF64(t + off), ver, p)));
+                    }
+                }
+                std::hint::black_box(heap.len());
+            },
+            5,
+            0.1,
+        )
+    };
+    report("calendar: BinaryHeap", &m_heap);
+    json.lane("calendar_heap", &[("seconds_per_pass", m_heap.mean_s)]);
+
+    let m_wheel = {
+        let mut wheel = TimingWheel::new(1.0 / 64.0);
+        let mut due = Vec::new();
+        let mut oi = 0usize;
+        measure(
+            || {
+                wheel.reset();
+                let mut t = 0.0f64;
+                let mut ver = 0u32;
+                for p in 0..n as u32 {
+                    wheel.schedule(offsets[oi % offsets.len()], ver, p);
+                    oi += 1;
+                }
+                for _ in 0..steps {
+                    t += dt;
+                    due.clear();
+                    wheel.drain_due_into(t, &mut due);
+                    for e in &due {
+                        ver = ver.wrapping_add(1);
+                        let off = offsets[oi % offsets.len()];
+                        oi += 1;
+                        wheel.schedule(t + off, ver, e.page);
+                    }
+                }
+                std::hint::black_box(wheel.len());
+            },
+            5,
+            0.1,
+        )
+    };
+    report("calendar: TimingWheel", &m_wheel);
+    json.lane("calendar_wheel", &[("seconds_per_pass", m_wheel.mean_s)]);
+    println!("wheel speedup: {:.2}x", m_heap.mean_s / m_wheel.mean_s.max(1e-12));
+    json.lane("calendar_speedup", &[("x", m_heap.mean_s / m_wheel.mean_s.max(1e-12))]);
+}
+
+fn bench_schedulers(json: &mut BenchJson, smoke: bool) {
+    let m = if smoke { 400 } else { 5000 };
+    println!("\n-- scheduler tick cost: exact vs lazy (m={m}) --");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
     let mut rng = Rng::new(3);
     let inst = spec.gen_instance(&mut rng).normalized();
     let horizon = 20.0;
@@ -162,11 +311,11 @@ fn bench_schedulers(json: &mut BenchJson) {
         2000.0 / m_lazy.mean_s
     );
     json.lane(
-        "sched_exact_m5000",
+        &format!("sched_exact_m{m}"),
         &[("seconds_per_rep", m_exact.mean_s), ("ticks_per_s", 2000.0 / m_exact.mean_s)],
     );
     json.lane(
-        "sched_lazy_m5000",
+        &format!("sched_lazy_m{m}"),
         &[("seconds_per_rep", m_lazy.mean_s), ("ticks_per_s", 2000.0 / m_lazy.mean_s)],
     );
     // eval-count diagnostic
@@ -178,14 +327,15 @@ fn bench_schedulers(json: &mut BenchJson) {
         inst.pages.len()
     );
     json.lane(
-        "sched_lazy_m5000_evals",
+        &format!("sched_lazy_m{m}_evals"),
         &[("evals_per_tick", s.evals as f64 / s.ticks as f64)],
     );
 }
 
-fn bench_end_to_end(json: &mut BenchJson) {
-    println!("\n-- end-to-end simulation throughput (m=1000, R=100, T=100) --");
-    let spec = ExperimentSpec::section6(1000, 1).with_partial_cis().with_false_positives();
+fn bench_end_to_end(json: &mut BenchJson, smoke: bool) {
+    let m = if smoke { 200 } else { 1000 };
+    println!("\n-- end-to-end simulation throughput (m={m}, R=100, T=100) --");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
     let mut rng = Rng::new(5);
     let inst = spec.gen_instance(&mut rng).normalized();
     let mut trng = Rng::new(6);
@@ -242,10 +392,11 @@ fn run_cell_reference(spec: &ExperimentSpec, put: PolicyUnderTest) -> (f64, f64)
     (acc.accuracy().mean, t0.elapsed().as_secs_f64())
 }
 
-fn bench_cell_engines(json: &mut BenchJson) {
-    let m = env_usize("NCIS_PERF_M", 1000);
-    let horizon = env_usize("NCIS_PERF_T", 1000) as f64;
-    let reps = env_usize("NCIS_PERF_REPS", 8);
+fn bench_cell_engines(json: &mut BenchJson, smoke: bool) {
+    let (def_m, def_t, def_reps) = if smoke { (128, 60, 2) } else { (1000, 1000, 8) };
+    let m = env_usize("NCIS_PERF_M", def_m);
+    let horizon = env_usize("NCIS_PERF_T", def_t) as f64;
+    let reps = env_usize("NCIS_PERF_REPS", def_reps);
     let threads = default_rep_threads();
     println!(
         "\n-- experiment cell: serial merged-sort engine vs parallel streaming \
@@ -316,17 +467,26 @@ fn bench_cell_engines(json: &mut BenchJson) {
 }
 
 fn main() {
-    println!("perf bench (see EXPERIMENTS.md §Perf)");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "perf bench (see EXPERIMENTS.md §Perf){}",
+        if smoke { " [--smoke: CI-sized lanes]" } else { "" }
+    );
     let mut json = BenchJson::new("perf");
     json.lane(
         "meta",
-        &[("rep_threads", default_rep_threads() as f64)],
+        &[
+            ("rep_threads", default_rep_threads() as f64),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
     );
     bench_value_functions(&mut json);
     bench_batched_values(&mut json);
-    bench_schedulers(&mut json);
-    bench_end_to_end(&mut json);
-    bench_cell_engines(&mut json);
+    bench_select_argmax(&mut json, smoke);
+    bench_calendar(&mut json, smoke);
+    bench_schedulers(&mut json, smoke);
+    bench_end_to_end(&mut json, smoke);
+    bench_cell_engines(&mut json, smoke);
     // cargo runs bench binaries with cwd = the package dir (rust/);
     // write to the workspace root so the perf trajectory lives in one
     // stable place across invocation styles

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use crate::lds::LdsScheduler;
 use crate::params::PageParams;
+use crate::policy::belief::VALUE_CHUNK;
 use crate::policy::{BeliefModel, PolicyKind};
 use crate::runtime::{PjrtEngine, ValueBatch};
 use crate::sched::{CrawlScheduler, PageTracker};
@@ -41,6 +42,17 @@ impl std::fmt::Debug for ValueBackend {
 }
 
 /// Algorithm 1 with an exact argmax over all pages at every tick.
+///
+/// The native path is a *batched, bound-pruned* argmax: pages are
+/// visited in descending order of their static value upper bound
+/// `μ̃/Δ`, evaluated in [`VALUE_CHUNK`]-wide chunks through the columnar
+/// kernel ([`BeliefModel::values_into`]), and the scan stops as soon as
+/// the next chunk's best possible value cannot beat the best value
+/// already measured. The pick is provably identical to the full O(m)
+/// scalar scan ([`Self::select_scalar_reference`], kept in-tree as the
+/// parity oracle and bench baseline): skipped pages satisfy
+/// `V_i ≤ ub_safe_i < best`, and ties resolve to the smallest index
+/// exactly as the ascending scan does.
 pub struct GreedyScheduler {
     model: BeliefModel,
     backend: ValueBackend,
@@ -52,7 +64,19 @@ pub struct GreedyScheduler {
     veto_tick: Vec<f64>,
     /// Newest veto tick (cheap "any veto active at t?" probe).
     last_veto_t: f64,
+    /// Page indices sorted by descending upper bound (ties: ascending
+    /// index) — the pruned argmax's visit order.
+    by_ub: Vec<u32>,
+    /// Numerically safe per-page value upper bounds: `μ̃/Δ` inflated by
+    /// 1e-9 relative + 1e-12 absolute. The value formulas stay below
+    /// `μ̃/Δ` to within a few ulps (~1e-14 relative; the property suite
+    /// pins `V ≤ μ̃/Δ + 1e-9`), so the inflation makes `V_i ≤ ub_safe_i`
+    /// unconditional while costing no measurable pruning power.
+    ub_safe: Vec<f64>,
     /// Crawl values computed at the last tick (exposed for rate plots).
+    /// With the pruned native argmax only *evaluated* pages refresh;
+    /// entries for pruned pages keep their last computed value (a lower
+    /// bound — values only grow between crawls).
     pub last_values: Vec<f64>,
     /// EMA of selected crawl values — the paper's estimate of the
     /// stationary threshold Λ (exposed for diagnostics / lazy parity).
@@ -64,6 +88,12 @@ impl GreedyScheduler {
     pub fn new(policy: PolicyKind, pages: &[PageParams], backend: ValueBackend) -> Self {
         let model = BeliefModel::new(policy, pages);
         let m = model.len();
+        let ub: Vec<f64> = (0..m).map(|i| model.value_upper_bound(i)).collect();
+        let mut by_ub: Vec<u32> = (0..m as u32).collect();
+        by_ub.sort_by(|&a, &b| {
+            ub[b as usize].total_cmp(&ub[a as usize]).then(a.cmp(&b))
+        });
+        let ub_safe: Vec<f64> = ub.iter().map(|u| u + (u * 1e-9 + 1e-12)).collect();
         Self {
             model,
             backend,
@@ -71,6 +101,8 @@ impl GreedyScheduler {
             batch: ValueBatch::with_capacity(m),
             veto_tick: vec![f64::NEG_INFINITY; m],
             last_veto_t: f64::NEG_INFINITY,
+            by_ub,
+            ub_safe,
             last_values: vec![0.0; m],
             lambda_estimate: 0.0,
         }
@@ -81,7 +113,65 @@ impl GreedyScheduler {
         self.model.policy()
     }
 
+    /// Batched native argmax (see the type docs for the equivalence
+    /// argument). Chunks gather `(τ_ELAP, n_CIS)` into stack scratch,
+    /// evaluate through the columnar kernel, and fuse the veto-masked
+    /// argmax; the scan breaks once the next chunk's largest safe upper
+    /// bound is below the best measured value.
     fn select_native(&mut self, t: f64) -> Option<usize> {
+        let masked = self.last_veto_t == t;
+        let mut best = f64::NEG_INFINITY;
+        let mut best_i = usize::MAX;
+        let mut tau = [0.0f64; VALUE_CHUNK];
+        let mut ncis = [0u32; VALUE_CHUNK];
+        let mut vals = [0.0f64; VALUE_CHUNK];
+        for chunk in self.by_ub.chunks(VALUE_CHUNK) {
+            // chunk[0] carries the chunk's largest bound (sorted order):
+            // once it cannot beat `best`, no later page can win or tie
+            if self.ub_safe[chunk[0] as usize] < best {
+                break;
+            }
+            let n = chunk.len();
+            for (j, &ip) in chunk.iter().enumerate() {
+                let i = ip as usize;
+                tau[j] = self.tracker.tau_elap(i, t);
+                ncis[j] = self.tracker.n_cis(i);
+            }
+            self.model.values_into(chunk, &tau[..n], &ncis[..n], &mut vals[..n]);
+            for (j, &ip) in chunk.iter().enumerate() {
+                let i = ip as usize;
+                let v = vals[j];
+                debug_assert!(
+                    v <= self.ub_safe[i],
+                    "crawl value {v} above safe bound {} for page {i}",
+                    self.ub_safe[i]
+                );
+                self.last_values[i] = v;
+                if masked && self.veto_tick[i] == t {
+                    continue; // vetoed at this tick: next-best instead
+                }
+                // first-max semantics of the ascending reference scan:
+                // strictly greater wins; an exact tie goes to the
+                // smaller page index
+                if v > best || (v == best && i < best_i) {
+                    best = v;
+                    best_i = i;
+                }
+            }
+        }
+        if best_i == usize::MAX {
+            return None;
+        }
+        self.update_lambda(best);
+        Some(best_i)
+    }
+
+    /// The pre-columnar native argmax, verbatim: a full O(m) scalar
+    /// scan through the per-page value dispatch. Kept as the in-tree
+    /// parity oracle (`tests/columnar_parity.rs` pins pick-for-pick
+    /// equality with the batched path) and as the reference lane of
+    /// `benches/perf.rs`.
+    pub fn select_scalar_reference(&mut self, t: f64) -> Option<usize> {
         let masked = self.last_veto_t == t;
         let mut best = f64::NEG_INFINITY;
         let mut arg = None;
@@ -109,7 +199,7 @@ impl GreedyScheduler {
             // CIS saturates a noiseless-belief page (β̂ = ∞ → capped)
             let iota =
                 self.model.effective_time(i, self.tracker.tau_elap(i, t), self.tracker.n_cis(i));
-            self.batch.push(iota, self.model.belief(i));
+            self.batch.push(iota, &self.model.belief(i));
         }
         if self.last_veto_t == t {
             // veto-aware path: fetch the batch values and argmax on the
@@ -319,6 +409,59 @@ mod tests {
             s.on_veto(p, t2);
         }
         assert_eq!(s.select(t2), None, "all pages vetoed: tick must idle");
+    }
+
+    #[test]
+    fn batched_argmax_matches_scalar_reference_per_tick() {
+        // drive both paths on identical state through a synthetic event
+        // stream and compare every single pick (incl. veto retries)
+        for kind in [
+            PolicyKind::Greedy,
+            PolicyKind::GreedyCis,
+            PolicyKind::GreedyNcis,
+            PolicyKind::NcisApprox(2),
+            PolicyKind::GreedyCisPlus,
+        ] {
+            let ps = pages(150, 21, true);
+            let mut fast = GreedyScheduler::new(kind, &ps, ValueBackend::Native);
+            let mut slow = GreedyScheduler::new(kind, &ps, ValueBackend::Native);
+            fast.on_start(ps.len());
+            slow.on_start(ps.len());
+            let mut rng = Rng::new(22);
+            for step in 1..=400 {
+                let t = step as f64 * 0.25;
+                if rng.f64() < 0.4 {
+                    let p = (rng.f64() * ps.len() as f64) as usize;
+                    fast.on_cis(p, t);
+                    slow.on_cis(p, t);
+                }
+                let a = fast.select(t);
+                let b = slow.select_scalar_reference(t);
+                assert_eq!(a, b, "{kind:?} step {step}: pick diverged");
+                assert_eq!(
+                    fast.lambda_estimate.to_bits(),
+                    slow.lambda_estimate.to_bits(),
+                    "{kind:?} step {step}: lambda diverged"
+                );
+                if let Some(i) = a {
+                    if rng.f64() < 0.1 {
+                        // politeness veto: both must re-pick identically
+                        fast.on_veto(i, t);
+                        slow.on_veto(i, t);
+                        let a2 = fast.select(t);
+                        let b2 = slow.select_scalar_reference(t);
+                        assert_eq!(a2, b2, "{kind:?} step {step}: retry diverged");
+                        if let Some(j) = a2 {
+                            fast.on_crawl(j, t);
+                            slow.on_crawl(j, t);
+                        }
+                    } else {
+                        fast.on_crawl(i, t);
+                        slow.on_crawl(i, t);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!   reach `margin·Λ̂` is found by inverting the monotone `V`
 //!   (`policy::value::inverse_value`); the page is not touched again
 //!   until then. CIS arrivals jump the value, so they re-queue an
-//!   immediate wake.
+//!   immediate wake. The calendar is a hierarchical
+//!   [`TimingWheel`](crate::sched::wheel::TimingWheel) — O(1) amortized
+//!   schedule/advance with version-stamped lazy deletion — instead of a
+//!   `BinaryHeap` with O(log m) churn per operation.
 //! - **Hot pages** live in a max-heap keyed by their *last computed*
 //!   value (a lower bound — values only grow). Selection pops the heap
 //!   top, recomputes its exact value, and accepts it once it dominates
@@ -34,13 +37,13 @@
 //! the batched PJRT engine (one-page batches; the batch path exists for
 //! API parity and device-resident deployments, not single-eval speed).
 
-use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::coordinator::crawler::ValueBackend;
 use crate::params::PageParams;
 use crate::policy::{value, BeliefModel, PolicyKind};
 use crate::runtime::ValueBatch;
+use crate::sched::wheel::{TimingWheel, WheelEntry};
 use crate::sched::{CrawlScheduler, PageTracker};
 use crate::util::OrdF64;
 
@@ -49,6 +52,11 @@ const MAX_REFRESH: usize = 24;
 
 /// Default hot/cold margin (see [`LazyGreedyScheduler::with_margin`]).
 pub const DEFAULT_MARGIN: f64 = 0.7;
+
+/// Level-0 bucket width of the wake calendar. Sized so a sim tick at
+/// the bench bandwidths advances O(1) buckets; correctness does not
+/// depend on the choice (due-ness is checked against exact times).
+const WHEEL_TICK: f64 = 1.0 / 64.0;
 
 /// Lazy Algorithm-1 scheduler with a pluggable value backend.
 pub struct LazyGreedyScheduler {
@@ -60,8 +68,20 @@ pub struct LazyGreedyScheduler {
     tracker: PageTracker,
     /// Scratch for PJRT one-page evaluations.
     batch: ValueBatch,
-    /// min-heap of (wake time, version, page) — cold pages
-    wakes: BinaryHeap<Reverse<(OrdF64, u32, usize)>>,
+    /// Wake calendar (timing wheel) of (wake time, version, page) —
+    /// cold pages; stale entries are version-skipped on drain.
+    wakes: TimingWheel,
+    /// Reusable drain scratch for `process_wakes`.
+    due: Vec<WheelEntry>,
+    /// Reusable veto-deferral scratch for the force-wake fallback
+    /// (was a per-`select` allocation).
+    deferred: Vec<WheelEntry>,
+    /// Reusable hot-page gather + batched-evaluation scratch for
+    /// `rekey_hot` (was a per-call `Vec` collect).
+    rekey_pages: Vec<u32>,
+    rekey_tau: Vec<f64>,
+    rekey_ncis: Vec<u32>,
+    rekey_vals: Vec<f64>,
     /// max-heap of (stored value, version, page) — hot pages
     hot: BinaryHeap<(OrdF64, u32, usize)>,
     /// entry version per page (stale heap entries are skipped)
@@ -119,9 +139,9 @@ impl LazyGreedyScheduler {
         assert!(margin > 0.0 && margin <= 1.0);
         let model = BeliefModel::new(policy, pages);
         let m = model.len();
-        let mut wakes = BinaryHeap::with_capacity(m);
+        let mut wakes = TimingWheel::new(WHEEL_TICK);
         for i in 0..m {
-            wakes.push(Reverse((OrdF64(0.0), 0, i)));
+            wakes.schedule(0.0, 0, i as u32);
         }
         Self {
             model,
@@ -129,6 +149,12 @@ impl LazyGreedyScheduler {
             tracker: PageTracker::new(m),
             batch: ValueBatch::with_capacity(1),
             wakes,
+            due: Vec::new(),
+            deferred: Vec::new(),
+            rekey_pages: Vec::new(),
+            rekey_tau: Vec::new(),
+            rekey_ncis: Vec::new(),
+            rekey_vals: Vec::new(),
             hot: BinaryHeap::with_capacity(m),
             version: vec![0; m],
             wake_at: vec![0.0; m],
@@ -162,7 +188,7 @@ impl LazyGreedyScheduler {
             ValueBackend::Pjrt { engine, terms } => {
                 self.batch.clear();
                 let iota = self.model.effective_time(i, tau, n);
-                self.batch.push(iota, self.model.belief(i));
+                self.batch.push(iota, &self.model.belief(i));
                 let values = engine
                     .crawl_values(*terms, &self.batch)
                     .expect("pjrt crawl value execution failed");
@@ -186,7 +212,7 @@ impl LazyGreedyScheduler {
         let d = self.model.belief(i);
         let iota_now =
             self.model.effective_time(i, self.tracker.tau_elap(i, t), self.tracker.n_cis(i));
-        match value::inverse_value(target, d, self.model.terms()) {
+        match value::inverse_value(target, &d, self.model.terms()) {
             // target unreachable (sup V < target): nap until the value
             // has saturated anyway, then re-check the (moving) threshold
             None => t + 8.0 / d.delta,
@@ -220,18 +246,22 @@ impl LazyGreedyScheduler {
         }
         let wake = wt.max(t + 1e-9);
         self.wake_at[i] = wake;
-        self.wakes.push(Reverse((OrdF64(wake), self.version[i], i)));
+        self.wakes.schedule(wake, self.version[i], i as u32);
     }
 
-    /// Promote due pages from the wake calendar.
+    /// Promote due pages from the wake calendar. Entries scheduled
+    /// during processing (demotes) land strictly after `t`, so a single
+    /// drain sees every due page; processing is order-independent
+    /// (promote/demote touch only the entry's own page and `Λ̂` is not
+    /// updated here), so the wheel's bucket yield order is fine.
     fn process_wakes(&mut self, t: f64) {
-        while let Some(&Reverse((OrdF64(wt), ver, i))) = self.wakes.peek() {
-            if wt > t {
-                break;
-            }
-            self.wakes.pop();
-            if ver != self.version[i] || self.is_hot[i] {
-                continue; // stale entry
+        self.due.clear();
+        let mut due = std::mem::take(&mut self.due);
+        self.wakes.drain_due_into(t, &mut due);
+        for e in &due {
+            let i = e.page as usize;
+            if e.version != self.version[i] || self.is_hot[i] {
+                continue; // stale entry (lazy deletion)
             }
             let v = self.value(i, t);
             self.wake_evals += 1;
@@ -241,23 +271,62 @@ impl LazyGreedyScheduler {
                 self.demote(i, t);
             }
         }
+        due.clear();
+        self.due = due; // hand the scratch back for reuse
     }
 
     /// Recompute every hot page's heap key (bulk re-keying): stored keys
     /// are lower bounds that only a CIS event would otherwise refresh,
     /// so policies that ignore CIS (or noiseless environments) would
-    /// starve growing pages without this.
+    /// starve growing pages without this. The native backend re-keys
+    /// through the batched columnar kernel over reusable scratch (one
+    /// gather + one `values_into` for the whole hot set, no per-call
+    /// allocation after warm-up).
     fn rekey_hot(&mut self, t: f64) {
-        let hot_pages: Vec<usize> =
-            (0..self.is_hot.len()).filter(|&i| self.is_hot[i]).collect();
-        if hot_pages.is_empty() {
+        self.rekey_pages.clear();
+        for i in 0..self.is_hot.len() {
+            if self.is_hot[i] {
+                self.rekey_pages.push(i as u32);
+            }
+        }
+        if self.rekey_pages.is_empty() {
             return;
         }
         self.hot.clear();
-        for i in hot_pages {
-            let v = self.value(i, t);
-            self.version[i] = self.version[i].wrapping_add(1);
-            self.hot.push((OrdF64(v), self.version[i], i));
+        if matches!(self.backend, ValueBackend::Native) {
+            let n = self.rekey_pages.len();
+            self.rekey_tau.clear();
+            self.rekey_ncis.clear();
+            let tracker = &self.tracker;
+            for &ip in &self.rekey_pages {
+                let i = ip as usize;
+                self.rekey_tau.push(tracker.tau_elap(i, t));
+                self.rekey_ncis.push(tracker.n_cis(i));
+            }
+            self.rekey_vals.clear();
+            self.rekey_vals.resize(n, 0.0);
+            self.model.values_into(
+                &self.rekey_pages,
+                &self.rekey_tau,
+                &self.rekey_ncis,
+                &mut self.rekey_vals,
+            );
+            self.evals += n as u64;
+            for (&ip, &v) in self.rekey_pages.iter().zip(&self.rekey_vals) {
+                let i = ip as usize;
+                self.version[i] = self.version[i].wrapping_add(1);
+                self.hot.push((OrdF64(v), self.version[i], i));
+            }
+        } else {
+            // PJRT: one-page device evaluations (self.value needs &mut
+            // self, so the gather list is walked by index)
+            #[allow(clippy::needless_range_loop)]
+            for k in 0..self.rekey_pages.len() {
+                let i = self.rekey_pages[k] as usize;
+                let v = self.value(i, t);
+                self.version[i] = self.version[i].wrapping_add(1);
+                self.hot.push((OrdF64(v), self.version[i], i));
+            }
         }
     }
 }
@@ -267,10 +336,12 @@ impl CrawlScheduler for LazyGreedyScheduler {
         debug_assert_eq!(m, self.model.len(), "page count changed between runs");
         let m = self.model.len();
         self.tracker.reset(m);
-        self.wakes.clear();
+        self.wakes.reset();
         for i in 0..m {
-            self.wakes.push(Reverse((OrdF64(0.0), 0, i)));
+            self.wakes.schedule(0.0, 0, i as u32);
         }
+        self.due.clear();
+        self.deferred.clear();
         self.hot.clear();
         self.version.iter_mut().for_each(|v| *v = 0);
         self.wake_at.iter_mut().for_each(|w| *w = 0.0);
@@ -332,24 +403,28 @@ impl CrawlScheduler for LazyGreedyScheduler {
         if best.is_none() {
             // entries vetoed at THIS tick are kept queued but skipped,
             // so a politeness retry reaches a different candidate (and
-            // returns None once only just-vetoed pages remain)
-            let mut deferred: Vec<Reverse<(OrdF64, u32, usize)>> = Vec::new();
-            while let Some(entry) = self.wakes.pop() {
-                let Reverse((_, ver, i)) = entry;
-                if ver != self.version[i] || self.is_hot[i] {
+            // returns None once only just-vetoed pages remain); the
+            // deferral buffer is reusable struct scratch, not a
+            // per-select allocation
+            self.deferred.clear();
+            while let Some(entry) = self.wakes.pop_earliest() {
+                let i = entry.page as usize;
+                if entry.version != self.version[i] || self.is_hot[i] {
                     continue;
                 }
                 if self.veto_tick[i] == t {
-                    deferred.push(entry);
+                    self.deferred.push(entry);
                     continue;
                 }
                 let v = self.value(i, t);
                 best = Some((v, i));
                 break;
             }
-            for entry in deferred {
-                self.wakes.push(entry);
+            let (deferred, wakes) = (&self.deferred, &mut self.wakes);
+            for e in deferred {
+                wakes.schedule(e.time, e.version, e.page);
             }
+            self.deferred.clear();
         }
         let (bv, bi) = best?;
         // threshold update; the driver fires on_crawl next, which resets
@@ -365,13 +440,13 @@ impl CrawlScheduler for LazyGreedyScheduler {
         // sleep until its value could reach the threshold again
         self.version[page] = self.version[page].wrapping_add(1);
         self.is_hot[page] = false;
-        let d = *self.model.belief(page);
+        let d = self.model.belief(page);
         let target = self.lambda.max(1e-12);
         let iota_target =
             value::inverse_value(target, &d, self.model.terms()).unwrap_or(8.0 / d.delta);
         let wake = t + iota_target.max(1e-9);
         self.wake_at[page] = wake;
-        self.wakes.push(Reverse((OrdF64(wake), self.version[page], page)));
+        self.wakes.schedule(wake, self.version[page], page as u32);
     }
 
     fn on_veto(&mut self, page: usize, t: f64) {
@@ -416,7 +491,7 @@ impl CrawlScheduler for LazyGreedyScheduler {
             if new_wake < self.wake_at[page] {
                 self.version[page] = self.version[page].wrapping_add(1);
                 self.wake_at[page] = new_wake;
-                self.wakes.push(Reverse((OrdF64(new_wake), self.version[page], page)));
+                self.wakes.schedule(new_wake, self.version[page], page as u32);
             }
         }
     }

@@ -55,7 +55,8 @@ pub fn fig09(_reps: usize) -> Result<()> {
     let mut rng = Rng::new(spec.seed);
     let inst = spec.gen_instance(&mut rng).normalized();
     let horizon = 400.0;
-    let dynamic = BandwidthSchedule { segments: vec![(0.0, 100.0), (133.0, 150.0), (266.0, 100.0)] };
+    let dynamic =
+        BandwidthSchedule::new(vec![(0.0, 100.0), (133.0, 150.0), (266.0, 100.0)])?;
     let const100 = BandwidthSchedule::constant(100.0);
     let const150 = BandwidthSchedule::constant(150.0);
     let tl_dyn = timeline(&inst.pages, dynamic, horizon, 77);

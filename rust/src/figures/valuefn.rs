@@ -2,12 +2,18 @@
 //! approximations, with the ι → ∞ asymptote μ̃/Δ.
 
 use crate::benchkit::FigureOutput;
-use crate::params::PageParams;
+use crate::params::{PageParams, ParamColumns};
 use crate::policy::value;
 use crate::Result;
 
 /// Figure 6: V exact vs APPROX-{1,2,3} over an ι grid for a fixed,
 /// strongly-signalled environment (small β ⇒ many active terms).
+///
+/// The sweep runs through the batched columnar kernel
+/// ([`value::values_ncis_into`]) — the same evaluation path the native
+/// schedulers use — with the single environment broadcast across the ι
+/// grid via the page-gather indices (bit-identical to the scalar
+/// `value_ncis` per point).
 pub fn fig06() -> Result<()> {
     let p = PageParams { delta: 1.0, mu: 1.0, lam: 0.5, nu: 0.8 };
     let d = p.derive().unwrap();
@@ -17,17 +23,22 @@ pub fn fig06() -> Result<()> {
         &["iota", "V_exact", "V_approx1", "V_approx2", "V_approx3", "asymptote"],
     );
     let max_iota = 8.0 * d.beta.min(10.0);
-    let steps = 200;
-    for k in 0..=steps {
-        let iota = k as f64 / steps as f64 * max_iota;
-        fig.rowf(&[
-            iota,
-            value::value_ncis(iota, &d, value::MAX_TERMS),
-            value::value_ncis(iota, &d, 1),
-            value::value_ncis(iota, &d, 2),
-            value::value_ncis(iota, &d, 3),
-            asymptote,
-        ]);
+    let steps = 200usize;
+    let iotas: Vec<f64> = (0..=steps).map(|k| k as f64 / steps as f64 * max_iota).collect();
+    let mut cols = ParamColumns::with_capacity(1);
+    cols.push(&d);
+    let pages = vec![0u32; iotas.len()]; // broadcast the one environment
+    let mut curves = [
+        vec![0.0; iotas.len()],
+        vec![0.0; iotas.len()],
+        vec![0.0; iotas.len()],
+        vec![0.0; iotas.len()],
+    ];
+    for (out, terms) in curves.iter_mut().zip([value::MAX_TERMS, 1, 2, 3]) {
+        value::values_ncis_into(out, &iotas, &pages, &cols, terms);
+    }
+    for (k, &iota) in iotas.iter().enumerate() {
+        fig.rowf(&[iota, curves[0][k], curves[1][k], curves[2][k], curves[3][k], asymptote]);
     }
     fig.finish()?;
     Ok(())

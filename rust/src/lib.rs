@@ -32,8 +32,9 @@
 //!   projection shared by the native and batched value paths, and the
 //!   round-trippable policy names ([`PolicyKind`] /
 //!   [`policy::PolicyUnderTest`]).
-//! - [`sched`] — the event-driven [`sched::CrawlScheduler`] API and the
-//!   [`sched::PageTracker`] state bookkeeping.
+//! - [`sched`] — the event-driven [`sched::CrawlScheduler`] API, the
+//!   [`sched::PageTracker`] state bookkeeping and the hierarchical
+//!   [`sched::wheel::TimingWheel`] wake calendar.
 //! - [`solver`] — optimal continuous policies via Lagrange line search.
 //! - [`lds`] — the low-discrepancy discrete scheduler of Azar et al.
 //! - [`sim`] — Poisson event streams, the discrete-tick simulator

@@ -150,6 +150,95 @@ impl DerivedParams {
     }
 }
 
+/// Struct-of-arrays storage for derived parameters: one flat `f64`
+/// column per field, so batched evaluations stream six cache-friendly
+/// columns instead of pointer-hopping a `Vec<DerivedParams>` of
+/// interleaved structs. `get(i)` reconstructs the exact `DerivedParams`
+/// that was pushed (fields are stored verbatim), so any scalar value
+/// function evaluated on `get(i)` is bit-identical to one evaluated on
+/// the original struct — the property the columnar-parity suite pins.
+#[derive(Debug, Clone, Default)]
+pub struct ParamColumns {
+    /// Unsignalled change rates α.
+    pub alpha: Vec<f64>,
+    /// CIS time-equivalents β.
+    pub beta: Vec<f64>,
+    /// Observed CIS rates γ.
+    pub gamma: Vec<f64>,
+    /// False-positive rates ν.
+    pub nu: Vec<f64>,
+    /// Change rates Δ.
+    pub delta: Vec<f64>,
+    /// Normalized importance weights μ̃.
+    pub mu: Vec<f64>,
+}
+
+impl ParamColumns {
+    /// Empty columns with capacity for `n` pages.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            alpha: Vec::with_capacity(n),
+            beta: Vec::with_capacity(n),
+            gamma: Vec::with_capacity(n),
+            nu: Vec::with_capacity(n),
+            delta: Vec::with_capacity(n),
+            mu: Vec::with_capacity(n),
+        }
+    }
+
+    /// Columnarize a slice of derived parameters.
+    pub fn from_derived(envs: &[DerivedParams]) -> Self {
+        let mut cols = Self::with_capacity(envs.len());
+        for d in envs {
+            cols.push(d);
+        }
+        cols
+    }
+
+    /// Number of pages.
+    pub fn len(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// Are the columns empty?
+    pub fn is_empty(&self) -> bool {
+        self.alpha.is_empty()
+    }
+
+    /// Append one page's parameters.
+    pub fn push(&mut self, d: &DerivedParams) {
+        self.alpha.push(d.alpha);
+        self.beta.push(d.beta);
+        self.gamma.push(d.gamma);
+        self.nu.push(d.nu);
+        self.delta.push(d.delta);
+        self.mu.push(d.mu);
+    }
+
+    /// Reconstruct page `i`'s parameters (bit-identical to the push).
+    #[inline]
+    pub fn get(&self, i: usize) -> DerivedParams {
+        DerivedParams {
+            alpha: self.alpha[i],
+            beta: self.beta[i],
+            gamma: self.gamma[i],
+            nu: self.nu[i],
+            delta: self.delta[i],
+            mu: self.mu[i],
+        }
+    }
+
+    /// Clear all columns (capacity preserved).
+    pub fn clear(&mut self) {
+        self.alpha.clear();
+        self.beta.clear();
+        self.gamma.clear();
+        self.nu.clear();
+        self.delta.clear();
+        self.mu.clear();
+    }
+}
+
 /// A full problem instance: one entry per page plus the global bandwidth.
 #[derive(Debug, Clone)]
 pub struct Instance {
@@ -247,6 +336,33 @@ mod tests {
         let d = PageParams { delta: 0.8, mu: 0.1, lam: 0.6, nu: 0.3 }.derive().unwrap();
         let want = (-d.alpha * 2.0f64).exp() * (0.3f64 / d.gamma).powi(2);
         assert!((d.freshness(2.0, 2) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn param_columns_round_trip_bit_identical() {
+        let envs: Vec<DerivedParams> = [
+            PageParams { delta: 1.0, mu: 0.5, lam: 0.6, nu: 0.3 },
+            PageParams { delta: 0.7, mu: 0.1, lam: 0.0, nu: 0.0 }, // γ = 0, β = ∞
+            PageParams { delta: 1.0, mu: 0.1, lam: 0.8, nu: 0.0 }, // noiseless β = ∞
+            PageParams { delta: 0.4, mu: 0.9, lam: 0.0, nu: 0.2 }, // β = 0
+        ]
+        .iter()
+        .map(|p| p.derive().unwrap())
+        .collect();
+        let cols = ParamColumns::from_derived(&envs);
+        assert_eq!(cols.len(), envs.len());
+        for (i, d) in envs.iter().enumerate() {
+            let got = cols.get(i);
+            assert_eq!(got.alpha.to_bits(), d.alpha.to_bits(), "alpha[{i}]");
+            assert_eq!(got.beta.to_bits(), d.beta.to_bits(), "beta[{i}]");
+            assert_eq!(got.gamma.to_bits(), d.gamma.to_bits(), "gamma[{i}]");
+            assert_eq!(got.nu.to_bits(), d.nu.to_bits(), "nu[{i}]");
+            assert_eq!(got.delta.to_bits(), d.delta.to_bits(), "delta[{i}]");
+            assert_eq!(got.mu.to_bits(), d.mu.to_bits(), "mu[{i}]");
+        }
+        let mut cols = cols;
+        cols.clear();
+        assert!(cols.is_empty());
     }
 
     #[test]

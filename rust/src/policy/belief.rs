@@ -10,7 +10,7 @@
 //! `crawl_value` dispatch, and hands the batched backends the projected
 //! `DerivedParams` the kernel evaluates.
 
-use crate::params::{DerivedParams, PageParams};
+use crate::params::{DerivedParams, PageParams, ParamColumns};
 use crate::policy::{cis_plus_trusts, value, PolicyKind};
 
 /// Project a policy's *beliefs* about the CIS process onto the general
@@ -47,27 +47,67 @@ pub fn belief_params(policy: PolicyKind, raw: &PageParams, d: &DerivedParams) ->
     }
 }
 
+/// Per-page value dispatch, resolved once at construction so the
+/// batched path never re-matches on `PolicyKind` per page (GREEDY-CIS+
+/// is the only policy whose dispatch genuinely varies by page).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ValueKind {
+    /// `value_greedy(τ_ELAP, Δ, μ̃)` — ignores CIS.
+    Greedy,
+    /// `value_cis_state` — noiseless-CIS belief, saturates on a signal.
+    CisState,
+    /// `value_ncis(ι_EFF, E, terms)` — the general noisy-CIS value.
+    Ncis,
+}
+
+/// Chunk width of the batched value paths: small enough that the gather
+/// scratch lives on the stack, large enough to amortize dispatch.
+pub const VALUE_CHUNK: usize = 64;
+
 /// A policy's per-page view of the environment: the true derived
 /// parameters (what the native value dispatch consumes) plus the belief
 /// projection (what batched backends and wake-time inversion consume).
+///
+/// Storage is columnar (struct-of-arrays, [`ParamColumns`]): the
+/// schedulers' batched hot paths ([`Self::values_into`]) stream flat
+/// `f64` columns instead of pointer-hopping `Vec<DerivedParams>`.
+/// `env(i)` / `belief(i)` reconstruct the exact structs that were
+/// pushed, so every scalar path stays bit-identical to the
+/// pre-columnar layout.
 #[derive(Debug, Clone)]
 pub struct BeliefModel {
     policy: PolicyKind,
     raw: Vec<PageParams>,
-    envs: Vec<DerivedParams>,
-    beliefs: Vec<DerivedParams>,
+    envs: ParamColumns,
+    beliefs: ParamColumns,
+    /// Per-page resolved value dispatch (varies only for GREEDY-CIS+).
+    kinds: Vec<ValueKind>,
 }
 
 impl BeliefModel {
     /// Precompute environments and belief projections for every page.
     pub fn new(policy: PolicyKind, pages: &[PageParams]) -> Self {
-        let envs: Vec<DerivedParams> = pages.iter().map(DerivedParams::from_raw).collect();
-        let beliefs = pages
-            .iter()
-            .zip(&envs)
-            .map(|(p, d)| belief_params(policy, p, d))
-            .collect();
-        Self { policy, raw: pages.to_vec(), envs, beliefs }
+        let mut envs = ParamColumns::with_capacity(pages.len());
+        let mut beliefs = ParamColumns::with_capacity(pages.len());
+        let mut kinds = Vec::with_capacity(pages.len());
+        for p in pages {
+            let d = DerivedParams::from_raw(p);
+            beliefs.push(&belief_params(policy, p, &d));
+            envs.push(&d);
+            kinds.push(match policy {
+                PolicyKind::Greedy => ValueKind::Greedy,
+                PolicyKind::GreedyCis => ValueKind::CisState,
+                PolicyKind::GreedyNcis | PolicyKind::NcisApprox(_) => ValueKind::Ncis,
+                PolicyKind::GreedyCisPlus => {
+                    if cis_plus_trusts(p) {
+                        ValueKind::CisState
+                    } else {
+                        ValueKind::Greedy
+                    }
+                }
+            });
+        }
+        Self { policy, raw: pages.to_vec(), envs, beliefs, kinds }
     }
 
     /// Number of pages.
@@ -90,21 +130,105 @@ impl BeliefModel {
         &self.raw[i]
     }
 
-    /// True derived environment of page `i`.
-    pub fn env(&self, i: usize) -> &DerivedParams {
-        &self.envs[i]
+    /// True derived environment of page `i` (reconstructed from the
+    /// columns, bit-identical to the original derivation).
+    #[inline]
+    pub fn env(&self, i: usize) -> DerivedParams {
+        self.envs.get(i)
     }
 
     /// Belief projection of page `i` (feed this to batched kernels).
-    pub fn belief(&self, i: usize) -> &DerivedParams {
-        &self.beliefs[i]
+    #[inline]
+    pub fn belief(&self, i: usize) -> DerivedParams {
+        self.beliefs.get(i)
+    }
+
+    /// The true-environment columns (the batched native kernel's input).
+    pub fn env_columns(&self) -> &ParamColumns {
+        &self.envs
+    }
+
+    /// The belief-projection columns.
+    pub fn belief_columns(&self) -> &ParamColumns {
+        &self.beliefs
     }
 
     /// Crawl value of page `i` in scheduler state `(tau_elap, n_cis)`
     /// — the exact native f64 path.
     #[inline]
     pub fn value(&self, i: usize, tau_elap: f64, n_cis: u32) -> f64 {
-        self.policy.crawl_value(&self.raw[i], &self.envs[i], tau_elap, n_cis)
+        self.policy.crawl_value(&self.raw[i], &self.envs.get(i), tau_elap, n_cis)
+    }
+
+    /// Batched crawl values through the columnar native kernel:
+    /// `out[k] = self.value(pages[k], tau_elap[k], n_cis[k])`,
+    /// **bit-identically** (the scalar dispatch is the parity oracle —
+    /// `tests/columnar_parity.rs` pins the equality per policy and edge
+    /// regime). `pages` is a gather: callers pass an arbitrary subset —
+    /// the exact scheduler's pruned argmax chunks, the lazy scheduler's
+    /// hot-set re-key — and own all buffers, so the hot path allocates
+    /// nothing.
+    pub fn values_into(&self, pages: &[u32], tau_elap: &[f64], n_cis: &[u32], out: &mut [f64]) {
+        assert_eq!(pages.len(), out.len(), "values_into: pages/out length mismatch");
+        assert_eq!(tau_elap.len(), out.len(), "values_into: tau/out length mismatch");
+        assert_eq!(n_cis.len(), out.len(), "values_into: n_cis/out length mismatch");
+        match self.policy {
+            PolicyKind::Greedy => {
+                for ((o, &tau), &ip) in out.iter_mut().zip(tau_elap).zip(pages) {
+                    let i = ip as usize;
+                    *o = value::value_greedy(tau, self.envs.delta[i], self.envs.mu[i]);
+                }
+            }
+            PolicyKind::GreedyCis => {
+                for (((o, &tau), &n), &ip) in
+                    out.iter_mut().zip(tau_elap).zip(n_cis).zip(pages)
+                {
+                    let d = self.envs.get(ip as usize);
+                    *o = value::value_cis_state(&d, tau, n);
+                }
+            }
+            PolicyKind::GreedyNcis | PolicyKind::NcisApprox(_) => {
+                let terms = self.terms();
+                let mut iot = [0.0f64; VALUE_CHUNK];
+                for (((chunk, tau_c), n_c), out_c) in pages
+                    .chunks(VALUE_CHUNK)
+                    .zip(tau_elap.chunks(VALUE_CHUNK))
+                    .zip(n_cis.chunks(VALUE_CHUNK))
+                    .zip(out.chunks_mut(VALUE_CHUNK))
+                {
+                    let n = chunk.len();
+                    for (j, (&ip, (&tau, &nc))) in
+                        chunk.iter().zip(tau_c.iter().zip(n_c)).enumerate()
+                    {
+                        let i = ip as usize;
+                        // inline DerivedParams::effective_time on the
+                        // true-env columns (same operations, same bits)
+                        iot[j] = if nc == 0 || self.envs.gamma[i] <= 0.0 {
+                            tau
+                        } else if self.envs.beta[i].is_finite() {
+                            tau + self.envs.beta[i] * nc as f64
+                        } else {
+                            f64::INFINITY
+                        };
+                    }
+                    value::values_ncis_into(out_c, &iot[..n], chunk, &self.envs, terms);
+                }
+            }
+            PolicyKind::GreedyCisPlus => {
+                for (((o, &tau), &n), &ip) in
+                    out.iter_mut().zip(tau_elap).zip(n_cis).zip(pages)
+                {
+                    let i = ip as usize;
+                    *o = match self.kinds[i] {
+                        ValueKind::CisState => {
+                            let d = self.envs.get(i);
+                            value::value_cis_state(&d, tau, n)
+                        }
+                        _ => value::value_greedy(tau, self.envs.delta[i], self.envs.mu[i]),
+                    };
+                }
+            }
+        }
     }
 
     /// Effective elapsed time of page `i` under the policy's OWN
@@ -112,12 +236,12 @@ impl BeliefModel {
     /// (β̂ = ∞ → capped), while a GREEDY belief (γ̂ = 0) ignores it.
     #[inline]
     pub fn effective_time(&self, i: usize, tau_elap: f64, n_cis: u32) -> f64 {
-        self.beliefs[i].effective_time(tau_elap, n_cis)
+        self.beliefs.get(i).effective_time(tau_elap, n_cis)
     }
 
     /// Upper bound on page `i`'s crawl value (`μ̃/Δ`).
     pub fn value_upper_bound(&self, i: usize) -> f64 {
-        self.policy.value_upper_bound(&self.envs[i])
+        self.policy.value_upper_bound(&self.envs.get(i))
     }
 
     /// Approximation level for sum-based evaluations of this policy
@@ -165,6 +289,31 @@ mod tests {
                     let got = model.value(i, tau, n);
                     assert_eq!(want.to_bits(), got.to_bits(), "{kind:?} page {i}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_values_into_matches_scalar_dispatch() {
+        // spans more than one chunk so the chunked NCIS arm is exercised
+        let ps = pages(3 * VALUE_CHUNK + 7, 4);
+        let mut rng = Rng::new(5);
+        for kind in [
+            PolicyKind::Greedy,
+            PolicyKind::GreedyCis,
+            PolicyKind::GreedyNcis,
+            PolicyKind::NcisApprox(3),
+            PolicyKind::GreedyCisPlus,
+        ] {
+            let model = BeliefModel::new(kind, &ps);
+            let pages_idx: Vec<u32> = (0..ps.len() as u32).rev().collect(); // gather order
+            let tau: Vec<f64> = pages_idx.iter().map(|_| rng.range(0.0, 20.0)).collect();
+            let n: Vec<u32> = pages_idx.iter().map(|_| (rng.f64() * 4.0) as u32).collect();
+            let mut out = vec![0.0; ps.len()];
+            model.values_into(&pages_idx, &tau, &n, &mut out);
+            for (k, &v) in out.iter().enumerate() {
+                let want = model.value(pages_idx[k] as usize, tau[k], n[k]);
+                assert_eq!(want.to_bits(), v.to_bits(), "{kind:?} k={k}");
             }
         }
     }

@@ -5,7 +5,7 @@
 //! accuracy. The native implementations here are also the fallback value
 //! engine when PJRT artifacts are not available.
 
-use crate::params::DerivedParams;
+use crate::params::{DerivedParams, ParamColumns};
 use crate::special::exp_residual;
 
 /// Hard cap on the number of residual terms: `R^i(x)` for `i ≥ 64` is
@@ -160,6 +160,39 @@ pub fn value_ncis(iota: f64, d: &DerivedParams, terms: u32) -> f64 {
         }
     }
     d.mu * (w - ea * psi)
+}
+
+/// Batched crawl values over columnar parameters (the native hot-path
+/// kernel): for every `k`,
+///
+/// ```text
+/// out[k] = value_ncis(iotas[k], &cols.get(pages[k]), terms)
+/// ```
+///
+/// **bit-identically** — the scalar [`value_ncis`] is the parity oracle
+/// (see `tests/columnar_parity.rs`), and each page runs the exact same
+/// operation sequence, including the per-page early-termination tail
+/// bound. The batched form buys the schedulers column-gather locality
+/// and a branch-predictable chunk loop with zero per-call allocation
+/// (callers own `out`); the transcendental core stays scalar precisely
+/// so the oracle equality holds to the last bit.
+///
+/// `pages[k]` indexes into `cols` (a gather), so callers can evaluate
+/// an arbitrary subset — the exact scheduler's pruned argmax chunks and
+/// the lazy scheduler's hot-set re-key both do.
+pub fn values_ncis_into(
+    out: &mut [f64],
+    iotas: &[f64],
+    pages: &[u32],
+    cols: &ParamColumns,
+    terms: u32,
+) {
+    assert_eq!(out.len(), iotas.len(), "values_ncis_into: out/iotas length mismatch");
+    assert_eq!(out.len(), pages.len(), "values_ncis_into: out/pages length mismatch");
+    for ((o, &iota), &p) in out.iter_mut().zip(iotas).zip(pages) {
+        let d = cols.get(p as usize);
+        *o = value_ncis(iota, &d, terms);
+    }
 }
 
 /// Expected objective contribution `o(ι; E) = μ̃ · w(ι) · f(ι)` — the
@@ -375,6 +408,45 @@ mod tests {
             let err = (value_ncis(iota, &d, j) - exact).abs();
             assert!(err <= prev_err + 1e-15, "j={j}");
             prev_err = err;
+        }
+    }
+
+    #[test]
+    fn batched_kernel_is_bit_identical_to_scalar() {
+        // edge regimes on purpose: γ = 0, β = 0, β = ∞, plus a generic
+        // noisy page; iotas include 0, tiny, large and ∞
+        let envs: Vec<DerivedParams> = [
+            (0.8, 0.5, 0.0, 0.0), // γ = 0 (GREEDY limit)
+            (0.4, 0.9, 0.0, 0.2), // β = 0 (λ = 0, ν > 0)
+            (1.0, 0.5, 0.6, 0.0), // β = ∞ (noiseless CIS)
+            (0.8, 0.5, 0.6, 0.3), // generic noisy CIS
+        ]
+        .iter()
+        .map(|&(delta, mu, lam, nu)| PageParams { delta, mu, lam, nu }.derive().unwrap())
+        .collect();
+        let cols = ParamColumns::from_derived(&envs);
+        let iotas = [0.0, 1e-9, 0.3, 2.0, 40.0, f64::INFINITY];
+        for terms in [1u32, 2, 8, MAX_TERMS] {
+            let mut flat_iotas = Vec::new();
+            let mut flat_pages = Vec::new();
+            for (i, _) in envs.iter().enumerate() {
+                for &iota in &iotas {
+                    flat_iotas.push(iota);
+                    flat_pages.push(i as u32);
+                }
+            }
+            let mut out = vec![0.0; flat_iotas.len()];
+            values_ncis_into(&mut out, &flat_iotas, &flat_pages, &cols, terms);
+            for (k, &got) in out.iter().enumerate() {
+                let want = value_ncis(flat_iotas[k], &envs[flat_pages[k] as usize], terms);
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "terms={terms} page={} iota={}",
+                    flat_pages[k],
+                    flat_iotas[k]
+                );
+            }
         }
     }
 

@@ -25,6 +25,15 @@
 //!
 //! Construction goes through [`crate::CrawlerBuilder`], which wires any
 //! policy × strategy × value-backend combination behind this trait.
+//!
+//! [`wheel::TimingWheel`] is the shared wake-calendar substrate: a
+//! hierarchical, tick-bucketed timer wheel with O(1) amortized
+//! schedule/advance and version-stamped lazy deletion, used by the lazy
+//! scheduler's cold-page calendar in place of a `BinaryHeap`.
+
+pub mod wheel;
+
+pub use wheel::{TimingWheel, WheelEntry};
 
 /// A discrete crawling policy driven by lifecycle events.
 ///

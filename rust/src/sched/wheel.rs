@@ -1,0 +1,500 @@
+//! Hierarchical timing wheel — the wake-calendar substrate of the §5.2
+//! lazy scheduler.
+//!
+//! The lazy scheduler's cold-page calendar was a
+//! `BinaryHeap<Reverse<(time, version, page)>>`: O(log m) per
+//! schedule/pop with comparison-heavy sift churn on the hottest
+//! scheduler loop. Discrete-event cores (the kernel timer wheel;
+//! dslab-style simulators) use *tick-bucketed* calendars instead: time
+//! is quantized into slots, scheduling is an O(1) bucket push, and
+//! advancing drains whole buckets. [`TimingWheel`] is the hierarchical
+//! variant: `LEVELS` wheels of `SLOTS` buckets each, level `L` covering
+//! `SLOTS^L` base ticks per bucket, so a far-future wake costs the same
+//! O(1) as a near one and cascades down a level at most `LEVELS - 1`
+//! times over its lifetime (O(1) amortized). Entries beyond the top
+//! level's span live in an overflow bin that is re-filed as the wheel
+//! turns.
+//!
+//! Deletion is *lazy and version-stamped*, exactly like the heap it
+//! replaces: the owner bumps a per-page version to invalidate an entry
+//! and stale entries are dropped when their bucket drains. Due-entry
+//! yield order within a bucket is insertion order (the lazy scheduler's
+//! wake processing is order-independent); [`TimingWheel::pop_earliest`]
+//! is canonical — strict `(time, version, page)` order, matching the
+//! `BinaryHeap` tie-break bit-for-bit so the randomized heap-vs-wheel
+//! equivalence suite can compare pops exactly.
+
+/// Slots per level (power of two; `SLOT_BITS = log2(SLOTS)`).
+const SLOTS: usize = 64;
+const SLOT_BITS: u32 = 6;
+/// Hierarchy depth. With a base tick of `1/64` the levels span
+/// 1, 64, 4096 and 262144 time units; farther wakes overflow-bin.
+const LEVELS: usize = 4;
+
+/// One scheduled wake: `(time, version, page)`. The version stamp
+/// realizes lazy deletion — the owner bumps its per-page version and
+/// the stale entry is dropped when encountered.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WheelEntry {
+    /// Absolute wake time.
+    pub time: f64,
+    /// Version stamp at scheduling time.
+    pub version: u32,
+    /// Page index.
+    pub page: u32,
+}
+
+impl WheelEntry {
+    /// Canonical `(time, version, page)` order — the `BinaryHeap`
+    /// tie-break the wheel's `pop_earliest` reproduces.
+    #[inline]
+    fn key(&self) -> (f64, u32, u32) {
+        (self.time, self.version, self.page)
+    }
+}
+
+/// Hierarchical tick-bucketed timer wheel (see module docs).
+///
+/// Invariants: `cur` is monotone within a run (advances clamp below);
+/// every stored entry was filed at the smallest level whose remaining
+/// window covered it, so level-`L > 0` entries never sit in that
+/// level's *current* slot and each level's first nonempty slot holds
+/// the level minimum.
+#[derive(Debug, Clone)]
+pub struct TimingWheel {
+    /// Level-0 slot width in time units.
+    tick: f64,
+    /// Current time (high-water of `drain_due_into` targets).
+    cur: f64,
+    /// Absolute slot index of `cur` per level:
+    /// `cur_slot[L] == cur_slot[0] >> (SLOT_BITS * L)`.
+    cur_slot: [u64; LEVELS],
+    /// `LEVELS × SLOTS` buckets, flattened.
+    slots: Vec<Vec<WheelEntry>>,
+    /// Entries beyond the top level's span; re-filed as the wheel turns.
+    overflow: Vec<WheelEntry>,
+    /// Reusable cascade buffer (swapped with a bucket, then re-filed).
+    cascade_scratch: Vec<WheelEntry>,
+    len: usize,
+}
+
+impl TimingWheel {
+    /// Wheel with the given level-0 slot width.
+    pub fn new(tick: f64) -> Self {
+        assert!(tick > 0.0 && tick.is_finite(), "wheel tick must be positive, got {tick}");
+        Self {
+            tick,
+            cur: 0.0,
+            cur_slot: [0; LEVELS],
+            slots: vec![Vec::new(); LEVELS * SLOTS],
+            overflow: Vec::new(),
+            cascade_scratch: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of stored entries (including stale ones not yet dropped).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the wheel empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Current time floor.
+    pub fn now(&self) -> f64 {
+        self.cur
+    }
+
+    /// Clear all entries and rewind to t = 0 (capacity preserved).
+    pub fn reset(&mut self) {
+        for s in &mut self.slots {
+            s.clear();
+        }
+        self.overflow.clear();
+        self.cur = 0.0;
+        self.cur_slot = [0; LEVELS];
+        self.len = 0;
+    }
+
+    /// Absolute level-0 slot of time `t` (saturating; `t ≥ 0`).
+    #[inline]
+    fn abs_slot0(&self, t: f64) -> u64 {
+        (t / self.tick) as u64 // f64→u64 casts saturate, NaN → 0
+    }
+
+    /// Schedule a wake. O(1): one bucket push at the smallest level
+    /// whose remaining window covers the time (times at or before the
+    /// current slot clamp into it and come due on the next advance).
+    pub fn schedule(&mut self, time: f64, version: u32, page: u32) {
+        self.len += 1;
+        let e = WheelEntry { time, version, page };
+        self.file(e);
+    }
+
+    /// File an entry without touching `len` (shared by `schedule`,
+    /// cascading and overflow re-filing).
+    fn file(&mut self, e: WheelEntry) {
+        let s0 = self.abs_slot0(e.time).max(self.cur_slot[0]);
+        for l in 0..LEVELS {
+            let sl = s0 >> (SLOT_BITS * l as u32);
+            if sl < self.cur_slot[l] + SLOTS as u64 {
+                self.slots[l * SLOTS + (sl % SLOTS as u64) as usize].push(e);
+                return;
+            }
+        }
+        self.overflow.push(e);
+    }
+
+    /// Advance the wheel to `t` (clamped monotone) and append every due
+    /// entry (`time ≤ t`) to `out`. Whole past buckets — at *every*
+    /// level — drain wholesale (a level-`L` bucket strictly before the
+    /// level-`L` target slot lies entirely at or before `t`), cursors
+    /// jump directly, newly-entered higher-level buckets cascade down,
+    /// and the current partial level-0 bucket is filtered. Worst case
+    /// O(`LEVELS·SLOTS` + due + cascaded) per call regardless of how far
+    /// `t` jumps; O(1) amortized per entry lifecycle. Yield order is
+    /// bucket order with insertion order within a bucket (the due *set*
+    /// is what the calendar contract specifies; the lazy scheduler's
+    /// wake processing is order-independent and the equivalence suite
+    /// compares sorted sets).
+    pub fn drain_due_into(&mut self, t: f64, out: &mut Vec<WheelEntry>) {
+        let t = if t > self.cur { t } else { self.cur };
+        let target0 = self.abs_slot0(t);
+        let old = self.cur_slot;
+        if target0 > old[0] {
+            // 1) drain whole past buckets per level: bucket `s < target_L`
+            //    at level L spans times < (s+1)·w_L ≤ target_L·w_L ≤ t,
+            //    so everything in it is due. Each level has only SLOTS
+            //    live buckets, which bounds the walk.
+            for l in 0..LEVELS {
+                let shift = SLOT_BITS * l as u32;
+                let target_l = target0 >> shift;
+                let to = target_l.min(old[l] + SLOTS as u64);
+                for s in old[l]..to {
+                    let idx = l * SLOTS + (s % SLOTS as u64) as usize;
+                    if !self.slots[idx].is_empty() {
+                        self.len -= self.slots[idx].len();
+                        out.append(&mut self.slots[idx]);
+                    }
+                }
+                self.cur_slot[l] = target_l;
+            }
+            // 2) cascade newly-entered current buckets top-down: their
+            //    entries re-file strictly below their old level (an entry
+            //    inside the current level-L bucket always fits in level
+            //    L-1's window), so one top-down pass settles everything.
+            for l in (1..LEVELS).rev() {
+                if self.cur_slot[l] == old[l] {
+                    continue;
+                }
+                let idx = l * SLOTS + (self.cur_slot[l] % SLOTS as u64) as usize;
+                if self.slots[idx].is_empty() {
+                    continue;
+                }
+                std::mem::swap(&mut self.cascade_scratch, &mut self.slots[idx]);
+                while let Some(e) = self.cascade_scratch.pop() {
+                    self.file(e);
+                }
+            }
+            // 3) the top cursor moved ⇒ far-future entries may now be in
+            //    range; re-file the eligible ones
+            if self.cur_slot[LEVELS - 1] != old[LEVELS - 1] && !self.overflow.is_empty() {
+                let top_shift = SLOT_BITS * (LEVELS - 1) as u32;
+                let mut k = 0;
+                while k < self.overflow.len() {
+                    let e = self.overflow[k];
+                    let st = (self.abs_slot0(e.time).max(self.cur_slot[0])) >> top_shift;
+                    if st < self.cur_slot[LEVELS - 1] + SLOTS as u64 {
+                        self.overflow.swap_remove(k);
+                        self.file(e);
+                    } else {
+                        k += 1;
+                    }
+                }
+            }
+        }
+        // current (partial) level-0 bucket: extract due, retain the rest
+        let idx = (self.cur_slot[0] % SLOTS as u64) as usize;
+        let mut k = 0;
+        while k < self.slots[idx].len() {
+            if self.slots[idx][k].time <= t {
+                out.push(self.slots[idx].swap_remove(k));
+                self.len -= 1;
+            } else {
+                k += 1;
+            }
+        }
+        self.cur = t;
+    }
+
+    /// Remove and return the globally earliest entry in canonical
+    /// `(time, version, page)` order, due or not — the force-wake
+    /// fallback of the lazy scheduler.
+    ///
+    /// Cost: an O(SLOTS) empty-bucket walk per level, plus a scan of
+    /// the first nonempty bucket per level it cannot rule out. In the
+    /// common case (the earliest entry lives in a near-future level-0
+    /// bucket that provably precedes every higher level's window) the
+    /// scan short-circuits after that one bucket. Worst case is the
+    /// population of one coarse bucket — a wheel trades the heap's
+    /// globally-sorted O(log n) pop for O(1) inserts, so calendars
+    /// whose entries cluster inside one coarse bucket pay a linear
+    /// min-scan there. The lazy scheduler only reaches this path when
+    /// its hot heap is empty (idle/fallback ticks), never on the
+    /// process-wakes fast path.
+    pub fn pop_earliest(&mut self) -> Option<WheelEntry> {
+        let mut best: Option<(usize, usize)> = None; // (bucket index, position)
+        let mut best_key = (f64::INFINITY, u32::MAX, u32::MAX);
+        let mut scan_overflow = true;
+        'levels: for l in 0..LEVELS {
+            // within a level, buckets are time-ordered from the current
+            // slot forward: the first nonempty bucket holds the level min
+            for s in 0..SLOTS as u64 {
+                let abs = self.cur_slot[l] + s;
+                let idx = l * SLOTS + (abs % SLOTS as u64) as usize;
+                if self.slots[idx].is_empty() {
+                    continue;
+                }
+                for (pos, e) in self.slots[idx].iter().enumerate() {
+                    let key = e.key();
+                    if best.is_none() || key < best_key {
+                        best = Some((idx, pos));
+                        best_key = key;
+                    }
+                }
+                // short-circuit: if this bucket ends at or before the
+                // earliest slot any higher level (or the overflow bin —
+                // later still) can populate, the minimum is already in
+                // hand. `(cur_slot[L]+1)·w_L` grows with L, so beating
+                // level l+1 beats everything above it.
+                if l + 1 < LEVELS {
+                    let shift = SLOT_BITS * l as u32;
+                    let end0 = (abs + 1) << shift;
+                    let next0 =
+                        (self.cur_slot[l + 1] + 1) << (SLOT_BITS * (l + 1) as u32);
+                    if end0 <= next0 {
+                        scan_overflow = false;
+                        break 'levels;
+                    }
+                }
+                break; // rest of this level is strictly later
+            }
+        }
+        if scan_overflow {
+            for (pos, e) in self.overflow.iter().enumerate() {
+                let key = e.key();
+                if best.is_none() || key < best_key {
+                    best = Some((usize::MAX, pos));
+                    best_key = key;
+                }
+            }
+        }
+        let (idx, pos) = best?;
+        self.len -= 1;
+        Some(if idx == usize::MAX {
+            self.overflow.swap_remove(pos)
+        } else {
+            self.slots[idx].swap_remove(pos)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::Rng;
+    use crate::util::OrdF64;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    const TICK: f64 = 1.0 / 64.0;
+
+    fn key_sorted(mut v: Vec<WheelEntry>) -> Vec<(u64, u32, u32)> {
+        v.sort_by(|a, b| {
+            a.time.partial_cmp(&b.time).unwrap().then(a.version.cmp(&b.version)).then(
+                a.page.cmp(&b.page),
+            )
+        });
+        v.into_iter().map(|e| (e.time.to_bits(), e.version, e.page)).collect()
+    }
+
+    #[test]
+    fn due_exactly_when_time_leq_t() {
+        let mut w = TimingWheel::new(TICK);
+        w.schedule(0.5, 1, 0);
+        w.schedule(1.5, 2, 1);
+        w.schedule(1.5000001, 3, 2);
+        let mut out = Vec::new();
+        w.drain_due_into(1.5, &mut out);
+        assert_eq!(key_sorted(out), vec![(0.5f64.to_bits(), 1, 0), (1.5f64.to_bits(), 2, 1)]);
+        assert_eq!(w.len(), 1);
+        let mut out = Vec::new();
+        w.drain_due_into(2.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].page, 2);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn past_times_come_due_immediately() {
+        let mut w = TimingWheel::new(TICK);
+        let mut out = Vec::new();
+        w.drain_due_into(10.0, &mut out);
+        assert!(out.is_empty());
+        // scheduled "in the past" relative to the wheel's current time
+        w.schedule(3.0, 7, 4);
+        let mut out = Vec::new();
+        w.drain_due_into(10.0, &mut out); // t does not even advance
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].version, out[0].page), (7, 4));
+    }
+
+    #[test]
+    fn far_future_overflow_entries_eventually_drain() {
+        let mut w = TimingWheel::new(TICK);
+        // beyond the top level's span (tick * 64^4 = 262144)
+        let far = 300000.0;
+        w.schedule(far, 1, 9);
+        w.schedule(0.25, 1, 1);
+        let mut out = Vec::new();
+        w.drain_due_into(1.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].page, 1);
+        // jump most of the way in big steps, then cross the wake
+        let mut out = Vec::new();
+        w.drain_due_into(far + 1.0, &mut out);
+        assert_eq!(out.len(), 1, "overflow entry never drained");
+        assert_eq!(out[0].page, 9);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn pop_earliest_matches_heap_order_including_ties() {
+        let mut w = TimingWheel::new(TICK);
+        let mut h: BinaryHeap<Reverse<(OrdF64, u32, u32)>> = BinaryHeap::new();
+        let entries = [
+            (5.0, 3, 2),
+            (5.0, 1, 7), // time tie → version breaks
+            (5.0, 1, 3), // version tie → page breaks
+            (0.125, 9, 0),
+            (700.0, 0, 5),   // level ≥ 2
+            (300000.0, 2, 6), // overflow
+        ];
+        for &(t, v, p) in &entries {
+            w.schedule(t, v, p);
+            h.push(Reverse((OrdF64(t), v, p)));
+        }
+        while let Some(Reverse((OrdF64(t), v, p))) = h.pop() {
+            let e = w.pop_earliest().expect("wheel ran dry before heap");
+            assert_eq!((e.time.to_bits(), e.version, e.page), (t.to_bits(), v, p));
+        }
+        assert!(w.pop_earliest().is_none());
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut w = TimingWheel::new(TICK);
+        w.schedule(1.0, 1, 1);
+        w.schedule(1e6, 1, 2);
+        let mut out = Vec::new();
+        w.drain_due_into(0.5, &mut out);
+        w.reset();
+        assert!(w.is_empty());
+        assert_eq!(w.now(), 0.0);
+        assert!(w.pop_earliest().is_none());
+        // usable after reset, including times "before" the old cursor
+        w.schedule(0.25, 2, 3);
+        let mut out = Vec::new();
+        w.drain_due_into(0.5, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].page, 3);
+    }
+
+    /// The satellite acceptance test: randomized schedule/advance/pop
+    /// op-sequences must behave exactly like the `BinaryHeap` calendar
+    /// the wheel replaces — identical due-sets at every advance and
+    /// identical `(time, version, page)` pop order.
+    #[test]
+    fn randomized_equivalence_with_binary_heap_calendar() {
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(100 + seed);
+            let mut w = TimingWheel::new(TICK);
+            let mut h: BinaryHeap<Reverse<(OrdF64, u32, u32)>> = BinaryHeap::new();
+            let mut t = 0.0f64;
+            let mut version = 0u32;
+            for step in 0..400 {
+                // a burst of schedules across every level of the wheel
+                for _ in 0..(1 + (rng.f64() * 6.0) as usize) {
+                    let horizon = match (rng.f64() * 4.0) as usize {
+                        0 => rng.range(0.0, 0.9),        // level 0
+                        1 => rng.range(0.9, 60.0),       // level 1
+                        2 => rng.range(60.0, 4000.0),    // levels 2-3
+                        _ => rng.range(4000.0, 400000.0), // top + overflow
+                    };
+                    let time = t + horizon;
+                    version = version.wrapping_add(1);
+                    let page = (rng.f64() * 64.0) as u32;
+                    w.schedule(time, version, page);
+                    h.push(Reverse((OrdF64(time), version, page)));
+                }
+                // occasionally pop the earliest like the force-wake path
+                if step % 7 == 3 {
+                    let want = h.pop().map(|Reverse((OrdF64(x), v, p))| (x.to_bits(), v, p));
+                    let got = w.pop_earliest().map(|e| (e.time.to_bits(), e.version, e.page));
+                    assert_eq!(want, got, "seed {seed} step {step}: pop_earliest");
+                }
+                // advance by a random (occasionally large) jump
+                t += match (rng.f64() * 8.0) as usize {
+                    0 => rng.range(0.0, TICK),      // sub-slot
+                    7 => rng.range(100.0, 5000.0),  // multi-level jump
+                    _ => rng.range(0.0, 3.0),
+                };
+                let mut due = Vec::new();
+                w.drain_due_into(t, &mut due);
+                let mut heap_due = Vec::new();
+                while let Some(&Reverse((OrdF64(x), v, p))) = h.peek() {
+                    if x > t {
+                        break;
+                    }
+                    h.pop();
+                    heap_due.push(WheelEntry { time: x, version: v, page: p });
+                }
+                assert_eq!(
+                    key_sorted(heap_due),
+                    key_sorted(due),
+                    "seed {seed} step {step}: due-set at t={t}"
+                );
+                assert_eq!(w.len(), h.len(), "seed {seed} step {step}: len");
+            }
+            // drain to the end: both calendars must agree on the tail
+            let mut due = Vec::new();
+            w.drain_due_into(t + 500000.0, &mut due);
+            let mut heap_due = Vec::new();
+            while let Some(Reverse((OrdF64(x), v, p))) = h.pop() {
+                heap_due.push(WheelEntry { time: x, version: v, page: p });
+            }
+            assert_eq!(key_sorted(heap_due), key_sorted(due), "seed {seed}: final drain");
+            assert!(w.is_empty());
+        }
+    }
+
+    #[test]
+    fn len_tracks_through_all_paths() {
+        let mut w = TimingWheel::new(TICK);
+        assert!(w.is_empty());
+        w.schedule(0.1, 1, 0);
+        w.schedule(100.0, 1, 1);
+        w.schedule(999999.0, 1, 2);
+        assert_eq!(w.len(), 3);
+        assert!(w.pop_earliest().is_some());
+        assert_eq!(w.len(), 2);
+        let mut out = Vec::new();
+        w.drain_due_into(200.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(w.len(), 1);
+    }
+}

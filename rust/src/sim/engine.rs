@@ -33,22 +33,75 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::error::Error;
 use crate::sched::CrawlScheduler;
 use crate::sim::events::{EventTraces, PageTrace};
 use crate::util::OrdF64;
 
 /// A bandwidth schedule: piecewise-constant R over time.
+///
+/// The segment invariants (first segment starts at 0, starts strictly
+/// sorted, every rate positive and finite) are *enforced at
+/// construction* — [`BandwidthSchedule::new`] returns `Err` on a bad
+/// schedule instead of leaving the tick loop to divide by zero or run
+/// backwards. The segment list is private so no caller can bypass the
+/// check.
 #[derive(Debug, Clone)]
 pub struct BandwidthSchedule {
     /// `(start_time, rate)` segments, sorted by start time; the first
-    /// segment must start at 0.
-    pub segments: Vec<(f64, f64)>,
+    /// segment starts at 0 (validated invariants).
+    segments: Vec<(f64, f64)>,
 }
 
 impl BandwidthSchedule {
-    /// Constant bandwidth.
+    /// Validated construction from `(start_time, rate)` segments.
+    ///
+    /// Errors unless: the list is non-empty, the first start is exactly
+    /// 0, starts are strictly increasing and finite, and every rate is
+    /// positive and finite.
+    pub fn new(segments: Vec<(f64, f64)>) -> crate::Result<Self> {
+        if segments.is_empty() {
+            return Err(Error::InvalidParam(
+                "bandwidth schedule needs at least one segment".into(),
+            ));
+        }
+        if segments[0].0 != 0.0 {
+            return Err(Error::InvalidParam(format!(
+                "first bandwidth segment must start at 0, got {}",
+                segments[0].0
+            )));
+        }
+        for (k, &(start, rate)) in segments.iter().enumerate() {
+            if !start.is_finite() {
+                return Err(Error::InvalidParam(format!(
+                    "bandwidth segment {k} start must be finite, got {start}"
+                )));
+            }
+            if rate.is_nan() || rate <= 0.0 || !rate.is_finite() {
+                return Err(Error::InvalidParam(format!(
+                    "bandwidth segment {k} rate must be > 0 and finite, got {rate}"
+                )));
+            }
+            if k > 0 && start <= segments[k - 1].0 {
+                return Err(Error::InvalidParam(format!(
+                    "bandwidth segment starts must be strictly increasing: \
+                     segment {k} starts at {start} after {}",
+                    segments[k - 1].0
+                )));
+            }
+        }
+        Ok(Self { segments })
+    }
+
+    /// Constant bandwidth (`r` must be positive and finite).
     pub fn constant(r: f64) -> Self {
+        assert!(r > 0.0 && r.is_finite(), "bandwidth must be > 0 and finite, got {r}");
         Self { segments: vec![(0.0, r)] }
+    }
+
+    /// The validated `(start_time, rate)` segments.
+    pub fn segments(&self) -> &[(f64, f64)] {
+        &self.segments
     }
 
     /// Index of the segment in effect at time `t` (the last segment
@@ -593,9 +646,7 @@ mod tests {
     fn bandwidth_schedule_changes_tick_density() {
         let tr = traces_from(vec![PageTrace::default()], 10.0);
         let cfg = SimConfig {
-            bandwidth: BandwidthSchedule {
-                segments: vec![(0.0, 1.0), (5.0, 10.0)],
-            },
+            bandwidth: BandwidthSchedule::new(vec![(0.0, 1.0), (5.0, 10.0)]).unwrap(),
             horizon: 10.0,
             cis_discard_window: None,
             timeline_window: None,
@@ -607,8 +658,32 @@ mod tests {
     }
 
     #[test]
+    fn bandwidth_schedule_validation_rejects_bad_inputs() {
+        // the doc-comment invariants are now construction-time errors
+        assert!(BandwidthSchedule::new(vec![]).is_err(), "empty");
+        assert!(BandwidthSchedule::new(vec![(1.0, 5.0)]).is_err(), "first start nonzero");
+        assert!(
+            BandwidthSchedule::new(vec![(0.0, 5.0), (3.0, 2.0), (3.0, 4.0)]).is_err(),
+            "duplicate start"
+        );
+        assert!(
+            BandwidthSchedule::new(vec![(0.0, 5.0), (4.0, 2.0), (2.0, 4.0)]).is_err(),
+            "unsorted starts"
+        );
+        assert!(BandwidthSchedule::new(vec![(0.0, 0.0)]).is_err(), "zero rate");
+        assert!(BandwidthSchedule::new(vec![(0.0, -1.0)]).is_err(), "negative rate");
+        assert!(BandwidthSchedule::new(vec![(0.0, f64::NAN)]).is_err(), "NaN rate");
+        assert!(
+            BandwidthSchedule::new(vec![(0.0, 1.0), (f64::INFINITY, 2.0)]).is_err(),
+            "infinite start"
+        );
+        let ok = BandwidthSchedule::new(vec![(0.0, 1.0), (5.0, 10.0)]).unwrap();
+        assert_eq!(ok.segments(), &[(0.0, 1.0), (5.0, 10.0)]);
+    }
+
+    #[test]
     fn rate_at_piecewise_constant_semantics() {
-        let s = BandwidthSchedule { segments: vec![(0.0, 1.0), (5.0, 10.0), (8.0, 2.0)] };
+        let s = BandwidthSchedule::new(vec![(0.0, 1.0), (5.0, 10.0), (8.0, 2.0)]).unwrap();
         // before / at / inside / boundary-inclusive / past-the-end
         assert_eq!(s.rate_at(-1.0), 1.0); // clamps to the first segment
         assert_eq!(s.rate_at(0.0), 1.0);
@@ -741,7 +816,8 @@ mod tests {
     fn streaming_matches_reference_under_bandwidth_schedule() {
         let tr = random_traces(77, 30, 30.0, CisDelay::None);
         let cfg = SimConfig {
-            bandwidth: BandwidthSchedule { segments: vec![(0.0, 3.0), (10.0, 9.0), (20.0, 2.0)] },
+            bandwidth: BandwidthSchedule::new(vec![(0.0, 3.0), (10.0, 9.0), (20.0, 2.0)])
+                .unwrap(),
             horizon: 30.0,
             cis_discard_window: Some(0.1),
             timeline_window: Some(8),

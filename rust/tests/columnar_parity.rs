@@ -1,0 +1,195 @@
+//! Columnar hot-path parity suite.
+//!
+//! The batched native value kernel (`policy::value::values_ncis_into` +
+//! `BeliefModel::values_into`) and the bound-pruned batched argmax
+//! (`GreedyScheduler::select`, native backend) are *exact* rewrites of
+//! the scalar paths, not approximations. This suite pins that:
+//!
+//! 1. the batched kernel is **bit-identical** to scalar `value_ncis`
+//!    across every `PolicyKind` and the edge regimes γ = 0, β = 0,
+//!    β = ∞ and ι = ∞ (tolerance: none — equality is on the bits);
+//! 2. full simulations through the batched argmax are bit-identical to
+//!    the in-tree scalar reference scan (`select_scalar_reference`);
+//! 3. the lazy scheduler on the timing-wheel calendar keeps its
+//!    accuracy parity with the exact scheduler (the §5.2 guarantee),
+//!    randomized across seeds and policies. The op-level randomized
+//!    heap-vs-wheel equivalence lives with the wheel
+//!    (`sched::wheel::tests::randomized_equivalence_with_binary_heap_calendar`).
+
+use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
+use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
+use ncis_crawl::params::{PageParams, ParamColumns};
+use ncis_crawl::policy::{value, BeliefModel, PolicyKind};
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::sched::CrawlScheduler;
+use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig, SimResult};
+
+const ALL_POLICIES: [PolicyKind; 5] = [
+    PolicyKind::Greedy,
+    PolicyKind::GreedyCis,
+    PolicyKind::GreedyNcis,
+    PolicyKind::NcisApprox(2),
+    PolicyKind::GreedyCisPlus,
+];
+
+/// Pages covering the §5.1 special cases plus a random noisy population.
+fn edge_and_random_pages(m: usize, seed: u64) -> Vec<PageParams> {
+    let mut ps = vec![
+        PageParams { delta: 0.8, mu: 0.5, lam: 0.0, nu: 0.0 }, // γ = 0 (no CIS)
+        PageParams { delta: 0.4, mu: 0.9, lam: 0.0, nu: 0.2 }, // β = 0 (worthless signals)
+        PageParams { delta: 1.0, mu: 0.5, lam: 0.7, nu: 0.0 }, // β = ∞ → ι = ∞ on CIS
+        PageParams { delta: 1.0, mu: 0.5, lam: 1.0, nu: 0.2 }, // λ = 1 clamp
+        PageParams { delta: 1e-3, mu: 1.0, lam: 0.5, nu: 0.3 }, // slow page, huge μ̃/Δ
+    ];
+    let mut rng = Rng::new(seed);
+    ps.extend((0..m).map(|_| PageParams {
+        delta: rng.range(0.01, 1.0),
+        mu: rng.range(0.01, 1.0),
+        lam: rng.f64(),
+        nu: rng.range(0.0, 0.6),
+    }));
+    ps
+}
+
+#[test]
+fn batched_kernel_bit_identical_to_scalar_value_ncis() {
+    let ps = edge_and_random_pages(60, 1);
+    let envs: Vec<_> = ps.iter().map(|p| p.derive().unwrap()).collect();
+    let cols = ParamColumns::from_derived(&envs);
+    // ι grid includes 0, sub-cancellation, generic, huge and ∞
+    let iotas = [0.0, 1e-9, 0.4, 2.5, 50.0, 1e6, f64::INFINITY];
+    for terms in [1u32, 2, 8, value::MAX_TERMS] {
+        let mut flat_iotas = Vec::new();
+        let mut flat_pages = Vec::new();
+        for i in 0..envs.len() {
+            for &iota in &iotas {
+                flat_iotas.push(iota);
+                flat_pages.push(i as u32);
+            }
+        }
+        let mut out = vec![0.0; flat_iotas.len()];
+        value::values_ncis_into(&mut out, &flat_iotas, &flat_pages, &cols, terms);
+        for (k, &got) in out.iter().enumerate() {
+            let want = value::value_ncis(flat_iotas[k], &envs[flat_pages[k] as usize], terms);
+            assert_eq!(
+                want.to_bits(),
+                got.to_bits(),
+                "terms={terms} page={} iota={}: {want} vs {got}",
+                flat_pages[k],
+                flat_iotas[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn belief_model_batched_values_bit_identical_for_every_policy() {
+    let ps = edge_and_random_pages(200, 2);
+    let mut rng = Rng::new(3);
+    for kind in ALL_POLICIES {
+        let model = BeliefModel::new(kind, &ps);
+        let pages: Vec<u32> = (0..ps.len() as u32).collect();
+        // states include n_cis = 0 (ι = τ) and n_cis > 0 (β = ∞ pages
+        // saturate to ι = ∞ under NCIS beliefs)
+        for pass in 0..4 {
+            let tau: Vec<f64> = pages.iter().map(|_| rng.range(0.0, 30.0)).collect();
+            let n: Vec<u32> = pages
+                .iter()
+                .map(|_| if pass == 0 { 0 } else { (rng.f64() * 5.0) as u32 })
+                .collect();
+            let mut out = vec![0.0; ps.len()];
+            model.values_into(&pages, &tau, &n, &mut out);
+            for (k, &got) in out.iter().enumerate() {
+                let want = model.value(k, tau[k], n[k]);
+                assert_eq!(want.to_bits(), got.to_bits(), "{kind:?} page {k} pass {pass}");
+            }
+        }
+    }
+}
+
+/// `GreedyScheduler` driven through the in-tree scalar reference scan —
+/// the pre-columnar evaluation path, verbatim.
+struct ScalarGreedy(GreedyScheduler);
+
+impl CrawlScheduler for ScalarGreedy {
+    fn on_start(&mut self, m: usize) {
+        self.0.on_start(m);
+    }
+    fn on_cis(&mut self, page: usize, t: f64) {
+        self.0.on_cis(page, t);
+    }
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.0.on_crawl(page, t);
+    }
+    fn on_veto(&mut self, page: usize, t: f64) {
+        self.0.on_veto(page, t);
+    }
+    fn select(&mut self, t: f64) -> Option<usize> {
+        self.0.select_scalar_reference(t)
+    }
+    fn name(&self) -> String {
+        self.0.name()
+    }
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{ctx}: accuracy");
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.fresh_hits, b.fresh_hits, "{ctx}: fresh_hits");
+    assert_eq!(a.crawl_counts, b.crawl_counts, "{ctx}: crawl_counts");
+    assert_eq!(a.ticks, b.ticks, "{ctx}: ticks");
+}
+
+#[test]
+fn batched_argmax_simulations_bit_identical_to_scalar_reference() {
+    for (seed, kind) in ALL_POLICIES.iter().enumerate().map(|(s, k)| (s as u64, *k)) {
+        let ps = edge_and_random_pages(80, 30 + seed);
+        let horizon = 50.0;
+        let mut trng = Rng::new(40 + seed);
+        let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
+        let mut cfg = SimConfig::new(6.0, horizon);
+        if seed % 2 == 0 {
+            cfg.cis_discard_window = Some(0.1);
+        }
+        let mut fast = GreedyScheduler::new(kind, &ps, ValueBackend::Native);
+        let mut slow = ScalarGreedy(GreedyScheduler::new(kind, &ps, ValueBackend::Native));
+        let a = simulate(&traces, &cfg, &mut fast);
+        let b = simulate(&traces, &cfg, &mut slow);
+        assert_bit_identical(&a, &b, &format!("{kind:?}"));
+        assert_eq!(
+            fast.lambda_estimate.to_bits(),
+            slow.0.lambda_estimate.to_bits(),
+            "{kind:?}: lambda estimate"
+        );
+    }
+}
+
+#[test]
+fn lazy_on_wheel_calendar_keeps_parity_with_exact() {
+    // the §5.2 acceptance property, re-pinned on the timing-wheel
+    // calendar across seeds and CIS-consuming policies
+    for (seed, kind) in
+        [(0u64, PolicyKind::GreedyNcis), (1, PolicyKind::GreedyCis), (2, PolicyKind::GreedyNcis)]
+    {
+        let ps = edge_and_random_pages(200, 50 + seed);
+        let horizon = 150.0;
+        let cfg = SimConfig::new(8.0, horizon);
+        let mut acc_exact = 0.0;
+        let mut acc_lazy = 0.0;
+        let reps = 3u64;
+        for rep in 0..reps {
+            let mut rng = Rng::new(60 + 10 * seed + rep);
+            let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+            let mut ex = GreedyScheduler::new(kind, &ps, ValueBackend::Native);
+            let mut lz = LazyGreedyScheduler::new(kind, &ps);
+            acc_exact += simulate(&traces, &cfg, &mut ex).accuracy;
+            acc_lazy += simulate(&traces, &cfg, &mut lz).accuracy;
+        }
+        acc_exact /= reps as f64;
+        acc_lazy /= reps as f64;
+        assert!(
+            (acc_exact - acc_lazy).abs() < 0.03,
+            "{kind:?} seed {seed}: exact {acc_exact} vs lazy-on-wheel {acc_lazy}"
+        );
+    }
+}

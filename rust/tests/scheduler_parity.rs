@@ -160,7 +160,7 @@ fn event_driven_exact_greedy_reproduces_pre_redesign_under_schedule() {
     let mut trng = Rng::new(43);
     let traces = generate_traces(&ps, horizon, CisDelay::Exponential { mean: 0.2 }, &mut trng);
     let cfg = SimConfig {
-        bandwidth: BandwidthSchedule { segments: vec![(0.0, 4.0), (15.0, 9.0), (30.0, 3.0)] },
+        bandwidth: BandwidthSchedule::new(vec![(0.0, 4.0), (15.0, 9.0), (30.0, 3.0)]).unwrap(),
         horizon,
         cis_discard_window: Some(0.2),
         timeline_window: Some(8),
