@@ -13,7 +13,8 @@ fn reps() -> usize {
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let all = ["1", "2", "3", "6", "7", "8", "9", "10", "11", "12", "14", "4", "5", "appg"];
+    let all =
+        ["1", "2", "3", "6", "7", "8", "9", "10", "11", "12", "14", "4", "5", "appg", "scenario"];
     let ids: Vec<&str> = if args.is_empty() {
         all.to_vec()
     } else {

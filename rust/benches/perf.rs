@@ -7,6 +7,9 @@
 //!   columnar-hot-path acceptance lane)
 //! - wake calendar: `BinaryHeap` vs the hierarchical `TimingWheel`
 //! - scheduler tick cost: exact argmax vs the §5.2 lazy scheduler
+//! - dynamic-world cost: the `scenario_churn` lanes — lazy
+//!   select+advance under steady page churn (ρ sweep at m = 1e5) vs
+//!   the static-world engine (acceptance: ≤ 2× at ρ = 1%)
 //! - end-to-end simulation throughput
 //! - experiment-cell wall clock: pre-change serial merged-sort engine vs
 //!   the streaming engine + parallel repetition driver (the acceptance
@@ -31,10 +34,15 @@ use ncis_crawl::params::DerivedParams;
 use ncis_crawl::policy::{value, PolicyKind};
 use ncis_crawl::rngkit::Rng;
 use ncis_crawl::runtime::{NativeEngine, PjrtEngine, ValueBatch};
+use ncis_crawl::scenario::generators::{add_steady_churn, BornPageSpec};
+use ncis_crawl::scenario::{simulate_scenario_with, Scenario, ScenarioWorkspace};
 use ncis_crawl::sched::wheel::TimingWheel;
 use ncis_crawl::sched::CrawlScheduler;
 use ncis_crawl::sim::metrics::RepAccumulator;
-use ncis_crawl::sim::{generate_traces, simulate, simulate_reference, CisDelay, SimConfig};
+use ncis_crawl::sim::{
+    generate_traces, simulate, simulate_reference, simulate_with, CisDelay, SimConfig,
+    SimWorkspace,
+};
 use ncis_crawl::util::OrdF64;
 use ncis_crawl::{CrawlerBuilder, Strategy};
 
@@ -332,6 +340,122 @@ fn bench_schedulers(json: &mut BenchJson, smoke: bool) {
     );
 }
 
+/// Dynamic-world lanes: the lazy scheduler's select+advance cost under
+/// steady churn, against the static-world cost at the same scale. Four
+/// lanes per m: the static engine (`simulate_with`), the scenario
+/// engine on an EMPTY timeline (isolates the merge-loop overhead), and
+/// steady churn at ρ ∈ {0.1%, 1%} of pages per unit time (retire +
+/// birth pairs, worst-case slot recycling). The acceptance bar is the
+/// `scenario_churn_overhead` lane: churn at ρ = 1% within 2× of the
+/// static-world lane. Trace generation is pre-pass (untimed) in every
+/// lane; world-event stream regeneration is necessarily in-loop — it
+/// IS the cost being measured.
+fn bench_scenario_churn(json: &mut BenchJson, smoke: bool) {
+    let m: usize = if smoke { 2_048 } else { 100_000 };
+    let horizon = 10.0;
+    let r = if smoke { 200.0 } else { 2_000.0 };
+    println!("\n-- scenario_churn: lazy select+advance, static vs dynamic world (m={m}) --");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(23);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let mut trng = Rng::new(24);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(r, horizon);
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+
+    // Every lane constructs its scheduler INSIDE the timed closure
+    // (the bench_schedulers idiom): a reused scheduler would pay the
+    // world-mutated rebuild only in the churn lanes, biasing the
+    // overhead ratio with cost that is not churn. Fresh construction
+    // is a symmetric offset in numerator and denominator.
+
+    // static-world baseline: the plain streaming engine
+    let secs_static = {
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_with(&mut ws, &traces, &cfg, sched.as_mut()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("static engine        m={m}"), &meas);
+        json.lane(
+            &format!("scenario_static_m{m}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        meas.mean_s
+    };
+
+    // scenario engine, empty timeline: merge-loop overhead only
+    {
+        let sc = Scenario::new(inst.pages.clone(), 25);
+        let mut ws = ScenarioWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_scenario_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    &sc,
+                    sched.as_mut(),
+                ));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("scenario empty       m={m}"), &meas);
+        json.lane(
+            &format!("scenario_empty_m{m}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+    }
+
+    // steady churn: ρ · m page turnovers per unit time
+    let mut churn_1pct = f64::NAN;
+    for (label, rho) in [("rho0_1pct", 0.001), ("rho1pct", 0.01)] {
+        let mut sc = Scenario::new(inst.pages.clone(), 25);
+        add_steady_churn(&mut sc, rho, horizon, &BornPageSpec::default(), 26);
+        let events = sc.events().len();
+        let mut ws = ScenarioWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_scenario_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    &sc,
+                    sched.as_mut(),
+                ));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("churn rho={rho:<7} m={m}"), &meas);
+        println!("{:>46} {events} world events/rep", "");
+        json.lane(
+            &format!("scenario_churn_m{m}_{label}"),
+            &[
+                ("seconds_per_rep", meas.mean_s),
+                ("ticks_per_s", r * horizon / meas.mean_s),
+                ("world_events", events as f64),
+            ],
+        );
+        if rho == 0.01 {
+            churn_1pct = meas.mean_s;
+        }
+    }
+    let overhead = churn_1pct / secs_static.max(1e-12);
+    println!("churn(1%)/static overhead: {overhead:.2}x (acceptance: <= 2x)");
+    json.lane(&format!("scenario_churn_overhead_m{m}"), &[("x", overhead)]);
+}
+
 fn bench_end_to_end(json: &mut BenchJson, smoke: bool) {
     let m = if smoke { 200 } else { 1000 };
     println!("\n-- end-to-end simulation throughput (m={m}, R=100, T=100) --");
@@ -485,6 +609,7 @@ fn main() {
     bench_select_argmax(&mut json, smoke);
     bench_calendar(&mut json, smoke);
     bench_schedulers(&mut json, smoke);
+    bench_scenario_churn(&mut json, smoke);
     bench_end_to_end(&mut json, smoke);
     bench_cell_engines(&mut json, smoke);
     // cargo runs bench binaries with cwd = the package dir (rust/);

@@ -32,7 +32,11 @@ use crate::coordinator::shard::ShardedScheduler;
 use crate::error::Error;
 use crate::params::PageParams;
 use crate::policy::{PolicyKind, PolicyUnderTest};
+use crate::rngkit::Rng;
+use crate::scenario::{simulate_scenario_with, Scenario, ScenarioWorkspace};
 use crate::sched::CrawlScheduler;
+use crate::sim::engine::{SimConfig, SimResult};
+use crate::sim::generate_traces;
 use crate::Result;
 
 /// Which scheduling strategy drives the policy's value function.
@@ -64,6 +68,7 @@ pub struct CrawlerBuilder {
     backend: ValueBackend,
     pages: Vec<PageParams>,
     lds_rates: Vec<f64>,
+    scenario: Option<Scenario>,
 }
 
 /// Shared construction body of [`CrawlerBuilder::build`] and
@@ -134,6 +139,7 @@ impl CrawlerBuilder {
             backend: ValueBackend::Native,
             pages: Vec::new(),
             lds_rates: Vec::new(),
+            scenario: None,
         }
     }
 
@@ -166,6 +172,61 @@ impl CrawlerBuilder {
     pub fn lds_rates(mut self, rates: &[f64]) -> Self {
         self.lds_rates = rates.to_vec();
         self
+    }
+
+    /// Run against a dynamic world: the scenario's initial population
+    /// becomes the builder's `pages(..)` (so `build()` constructs a
+    /// scheduler over it) and [`Self::run_scenario`] drives the
+    /// scripted timeline. Every policy × strategy × backend combination
+    /// the builder can construct runs the dynamic world through the
+    /// same entry point.
+    pub fn with_scenario(mut self, scenario: Scenario) -> Self {
+        self.pages = scenario.initial_pages().to_vec();
+        self.scenario = Some(scenario);
+        self
+    }
+
+    /// The configured scenario, if any.
+    pub fn scenario(&self) -> Option<&Scenario> {
+        self.scenario.as_ref()
+    }
+
+    /// Build the scheduler and run one repetition against the
+    /// configured scenario: initial traces are generated from
+    /// `trace_seed` (exactly as a static run would), the world evolves
+    /// per the scenario script. Requires [`Self::with_scenario`].
+    pub fn run_scenario(&self, cfg: &SimConfig, trace_seed: u64) -> Result<SimResult> {
+        let mut ws = ScenarioWorkspace::new();
+        self.run_scenario_with(&mut ws, cfg, trace_seed)
+    }
+
+    /// [`Self::run_scenario`] with caller-owned scratch (repetition
+    /// loops reuse one workspace; `ws.stats` reports what the world
+    /// did afterwards).
+    pub fn run_scenario_with(
+        &self,
+        ws: &mut ScenarioWorkspace,
+        cfg: &SimConfig,
+        trace_seed: u64,
+    ) -> Result<SimResult> {
+        let scenario = self.scenario.as_ref().ok_or_else(|| {
+            Error::Usage("CrawlerBuilder: run_scenario requires with_scenario(..)".into())
+        })?;
+        // a later .pages(..) call must not silently desynchronize the
+        // scheduler from the world it is about to run (the engine
+        // would deliver events for pages the scheduler never had)
+        if self.pages != scenario.initial_pages() {
+            return Err(Error::Usage(
+                "CrawlerBuilder: pages(..) diverged from the scenario's initial \
+                 population — call with_scenario(..) last, or drop the pages(..) override"
+                    .into(),
+            ));
+        }
+        let mut sched = self.build()?;
+        let mut rng = Rng::new(trace_seed);
+        let traces =
+            generate_traces(scenario.initial_pages(), cfg.horizon, scenario.delay(), &mut rng);
+        Ok(simulate_scenario_with(ws, &traces, cfg, scenario, sched.as_mut()))
     }
 
     /// Apply a [`PolicyUnderTest`] (policy + strategy in one value, as
@@ -339,6 +400,32 @@ mod tests {
         assert_eq!(local.name(), "GREEDY-NCIS-LAZY");
         local.on_start(ps.len());
         assert!(local.select(1.0).is_some());
+    }
+
+    #[test]
+    fn with_scenario_runs_every_strategy() {
+        use crate::scenario::generators::{add_steady_churn, BornPageSpec};
+        use crate::scenario::Scenario;
+        let ps = pages(30, 9);
+        let mut sc = Scenario::new(ps, 41);
+        add_steady_churn(&mut sc, 0.01, 30.0, &BornPageSpec::default(), 42);
+        for strategy in [
+            Strategy::Exact,
+            Strategy::Lazy,
+            Strategy::Sharded { shards: 3 },
+        ] {
+            let builder = CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(strategy)
+                .with_scenario(sc.clone());
+            let cfg = crate::sim::SimConfig::new(5.0, 30.0);
+            let res = builder.run_scenario(&cfg, 43).unwrap();
+            assert!((0.0..=1.0).contains(&res.accuracy), "{strategy:?}");
+            assert_eq!(res.ticks, 150);
+        }
+        // without a scenario, run_scenario is a usage error
+        let bare = CrawlerBuilder::new().pages(&pages(4, 10));
+        assert!(bare.run_scenario(&crate::sim::SimConfig::new(1.0, 1.0), 1).is_err());
     }
 
     #[test]

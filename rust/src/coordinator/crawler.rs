@@ -64,8 +64,10 @@ pub struct GreedyScheduler {
     veto_tick: Vec<f64>,
     /// Newest veto tick (cheap "any veto active at t?" probe).
     last_veto_t: f64,
-    /// Page indices sorted by descending upper bound (ties: ascending
-    /// index) — the pruned argmax's visit order.
+    /// LIVE page indices sorted by descending upper bound (ties:
+    /// ascending index) — the pruned argmax's visit order. Rebuilt
+    /// lazily (`dirty`) after dynamic-world membership/parameter
+    /// changes, so the argmax always scans exactly the live set.
     by_ub: Vec<u32>,
     /// Numerically safe per-page value upper bounds: `μ̃/Δ` inflated by
     /// 1e-9 relative + 1e-12 absolute. The value formulas stay below
@@ -73,6 +75,20 @@ pub struct GreedyScheduler {
     /// pins `V ≤ μ̃/Δ + 1e-9`), so the inflation makes `V_i ≤ ub_safe_i`
     /// unconditional while costing no measurable pruning power.
     ub_safe: Vec<f64>,
+    /// Liveness per slot (dynamic worlds retire/recycle slots; static
+    /// runs never clear a flag).
+    live: Vec<bool>,
+    /// Retired-slot count (fast "anything dead?" probe for the PJRT
+    /// argmax path).
+    dead: usize,
+    /// Visit order / bounds stale after a dynamic-world hook.
+    dirty: bool,
+    /// Pristine construction-time population, snapshotted lazily at
+    /// the FIRST dynamic-world hook (static runs never pay the copy)
+    /// so `on_start` can rebuild after a dynamic run mutated the model.
+    initial_pages: Vec<PageParams>,
+    /// Any dynamic-world hook fired since construction/reset.
+    world_mutated: bool,
     /// Crawl values computed at the last tick (exposed for rate plots).
     /// With the pruned native argmax only *evaluated* pages refresh;
     /// entries for pruned pages keep their last computed value (a lower
@@ -88,23 +104,33 @@ impl GreedyScheduler {
     pub fn new(policy: PolicyKind, pages: &[PageParams], backend: ValueBackend) -> Self {
         let model = BeliefModel::new(policy, pages);
         let m = model.len();
-        let ub: Vec<f64> = (0..m).map(|i| model.value_upper_bound(i)).collect();
-        let mut by_ub: Vec<u32> = (0..m as u32).collect();
-        by_ub.sort_by(|&a, &b| {
-            ub[b as usize].total_cmp(&ub[a as usize]).then(a.cmp(&b))
-        });
-        let ub_safe: Vec<f64> = ub.iter().map(|u| u + (u * 1e-9 + 1e-12)).collect();
-        Self {
+        let mut s = Self {
             model,
             backend,
             tracker: PageTracker::new(m),
             batch: ValueBatch::with_capacity(m),
             veto_tick: vec![f64::NEG_INFINITY; m],
             last_veto_t: f64::NEG_INFINITY,
-            by_ub,
-            ub_safe,
+            by_ub: Vec::with_capacity(m),
+            ub_safe: vec![0.0; m],
+            live: vec![true; m],
+            dead: 0,
+            dirty: false,
+            initial_pages: Vec::new(),
+            world_mutated: false,
             last_values: vec![0.0; m],
             lambda_estimate: 0.0,
+        };
+        s.rebuild_order();
+        s
+    }
+
+    /// First dynamic-world hook of a run: snapshot the still-pristine
+    /// population before mutating anything, so `on_start` can rebuild.
+    fn note_world_mutation(&mut self) {
+        if !self.world_mutated {
+            self.initial_pages = self.model.raw_pages().to_vec();
+            self.world_mutated = true;
         }
     }
 
@@ -113,12 +139,46 @@ impl GreedyScheduler {
         self.model.policy()
     }
 
+    /// The belief model backing the argmax (diagnostics / audits).
+    pub fn model(&self) -> &BeliefModel {
+        &self.model
+    }
+
+    /// Is slot `page` currently live?
+    pub fn is_live(&self, page: usize) -> bool {
+        self.live[page]
+    }
+
+    /// Recompute the safe bounds of the live pages and re-sort the
+    /// visit order over exactly the live set. The inflation map
+    /// `u ↦ u + (u·1e-9 + 1e-12)` is strictly increasing, so sorting
+    /// by the safe bound yields the same permutation the raw-`μ̃/Δ`
+    /// sort did.
+    fn rebuild_order(&mut self) {
+        self.by_ub.clear();
+        for i in 0..self.model.len() {
+            if self.live[i] {
+                let u = self.model.value_upper_bound(i);
+                self.ub_safe[i] = u + (u * 1e-9 + 1e-12);
+                self.by_ub.push(i as u32);
+            }
+        }
+        let ub_safe = &self.ub_safe;
+        self.by_ub.sort_by(|&a, &b| {
+            ub_safe[b as usize].total_cmp(&ub_safe[a as usize]).then(a.cmp(&b))
+        });
+        self.dirty = false;
+    }
+
     /// Batched native argmax (see the type docs for the equivalence
     /// argument). Chunks gather `(τ_ELAP, n_CIS)` into stack scratch,
     /// evaluate through the columnar kernel, and fuse the veto-masked
     /// argmax; the scan breaks once the next chunk's largest safe upper
     /// bound is below the best measured value.
     fn select_native(&mut self, t: f64) -> Option<usize> {
+        if self.dirty {
+            self.rebuild_order();
+        }
         let masked = self.last_veto_t == t;
         let mut best = f64::NEG_INFINITY;
         let mut best_i = usize::MAX;
@@ -172,10 +232,16 @@ impl GreedyScheduler {
     /// equality with the batched path) and as the reference lane of
     /// `benches/perf.rs`.
     pub fn select_scalar_reference(&mut self, t: f64) -> Option<usize> {
+        if self.dirty {
+            self.rebuild_order();
+        }
         let masked = self.last_veto_t == t;
         let mut best = f64::NEG_INFINITY;
         let mut arg = None;
         for i in 0..self.model.len() {
+            if !self.live[i] {
+                continue; // retired slot: not a candidate
+            }
             let v = self.model.value(i, self.tracker.tau_elap(i, t), self.tracker.n_cis(i));
             self.last_values[i] = v;
             if masked && self.veto_tick[i] == t {
@@ -201,15 +267,19 @@ impl GreedyScheduler {
                 self.model.effective_time(i, self.tracker.tau_elap(i, t), self.tracker.n_cis(i));
             self.batch.push(iota, &self.model.belief(i));
         }
-        if self.last_veto_t == t {
-            // veto-aware path: fetch the batch values and argmax on the
-            // host, skipping pages vetoed at this tick
+        if self.last_veto_t == t || self.dead > 0 {
+            // masked path: fetch the batch values and argmax on the
+            // host, skipping pages vetoed at this tick and retired
+            // slots (the device-side argmax cannot mask either)
             let values = engine
                 .crawl_values(terms, &self.batch)
                 .expect("pjrt crawl value execution failed");
             let mut best = f32::NEG_INFINITY;
             let mut arg = None;
             for (i, &v) in values.iter().enumerate() {
+                if !self.live[i] {
+                    continue;
+                }
                 self.last_values[i] = v as f64;
                 if self.veto_tick[i] == t {
                     continue;
@@ -246,6 +316,15 @@ impl GreedyScheduler {
 
 impl CrawlScheduler for GreedyScheduler {
     fn on_start(&mut self, m: usize) {
+        if self.world_mutated {
+            // a dynamic run grew/retired/drifted the model: rebuild
+            // from the pristine construction-time population, exactly
+            // as a fresh scheduler would be (reuse == fresh)
+            let policy = self.model.policy();
+            let backend = self.backend.clone();
+            let pages = std::mem::take(&mut self.initial_pages);
+            *self = Self::new(policy, &pages, backend);
+        }
         debug_assert_eq!(m, self.model.len(), "page count changed between runs");
         self.tracker.reset(self.model.len());
         self.veto_tick.iter_mut().for_each(|v| *v = f64::NEG_INFINITY);
@@ -265,6 +344,43 @@ impl CrawlScheduler for GreedyScheduler {
     fn on_veto(&mut self, page: usize, t: f64) {
         self.veto_tick[page] = t;
         self.last_veto_t = t;
+    }
+
+    fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.note_world_mutation();
+        if page == self.model.len() {
+            // growth: one past the end
+            self.model.push_page(params);
+            self.live.push(true);
+            self.veto_tick.push(f64::NEG_INFINITY);
+            self.last_values.push(0.0);
+            self.ub_safe.push(0.0); // filled by the next rebuild
+        } else {
+            // recycling: the slot must currently be dead
+            debug_assert!(!self.live[page], "on_page_added into a live slot {page}");
+            self.model.set_page(page, params);
+            self.live[page] = true;
+            self.dead -= 1;
+            self.veto_tick[page] = f64::NEG_INFINITY;
+            self.last_values[page] = 0.0;
+        }
+        self.tracker.add_page(page, t);
+        self.dirty = true;
+    }
+
+    fn on_page_removed(&mut self, page: usize, _t: f64) {
+        self.note_world_mutation();
+        debug_assert!(self.live[page], "on_page_removed for a dead slot {page}");
+        self.live[page] = false;
+        self.dead += 1;
+        self.tracker.remove_page(page);
+        self.dirty = true;
+    }
+
+    fn on_params_changed(&mut self, page: usize, params: &PageParams, _t: f64) {
+        self.note_world_mutation();
+        self.model.set_page(page, params);
+        self.dirty = true; // the page's μ̃/Δ bound (and sort slot) moved
     }
 
     fn select(&mut self, t: f64) -> Option<usize> {
@@ -460,6 +576,124 @@ mod tests {
                         slow.on_crawl(i, t);
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_hooks_keep_batched_and_scalar_argmax_in_lockstep() {
+        // drive births, retirements and drifts through both argmax
+        // paths on identical state: picks must stay equal and retired
+        // slots must never be selected by either
+        let ps = pages(60, 31, true);
+        let mut fast = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+        let mut slow = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+        fast.on_start(ps.len());
+        slow.on_start(ps.len());
+        let mut rng = Rng::new(32);
+        let mut live: Vec<bool> = vec![true; ps.len()];
+        let mut next_new = ps.len();
+        for step in 1..=300 {
+            let t = step as f64 * 0.2;
+            match (rng.f64() * 10.0) as usize {
+                0 => {
+                    // retire a random live page
+                    let candidates: Vec<usize> =
+                        (0..live.len()).filter(|&i| live[i]).collect();
+                    if candidates.len() > 1 {
+                        let victim = candidates[(rng.f64() * candidates.len() as f64) as usize];
+                        live[victim] = false;
+                        fast.on_page_removed(victim, t);
+                        slow.on_page_removed(victim, t);
+                    }
+                }
+                1 => {
+                    // birth: recycle a dead slot if any, else grow
+                    let p = PageParams {
+                        delta: rng.range(0.05, 1.0),
+                        mu: rng.range(0.05, 1.0),
+                        lam: rng.f64(),
+                        nu: rng.range(0.1, 0.5),
+                    };
+                    let slot = (0..live.len()).find(|&i| !live[i]).unwrap_or_else(|| {
+                        live.push(false);
+                        next_new += 1;
+                        next_new - 1
+                    });
+                    live[slot] = true;
+                    fast.on_page_added(slot, &p, t);
+                    slow.on_page_added(slot, &p, t);
+                }
+                2 => {
+                    // drift a random live page
+                    let candidates: Vec<usize> =
+                        (0..live.len()).filter(|&i| live[i]).collect();
+                    let page = candidates[(rng.f64() * candidates.len() as f64) as usize];
+                    let p = PageParams {
+                        delta: rng.range(0.05, 1.5),
+                        mu: rng.range(0.05, 1.5),
+                        lam: rng.f64(),
+                        nu: rng.range(0.0, 0.5),
+                    };
+                    fast.on_params_changed(page, &p, t);
+                    slow.on_params_changed(page, &p, t);
+                }
+                _ => {}
+            }
+            if rng.f64() < 0.4 {
+                let candidates: Vec<usize> = (0..live.len()).filter(|&i| live[i]).collect();
+                let p = candidates[(rng.f64() * candidates.len() as f64) as usize];
+                fast.on_cis(p, t);
+                slow.on_cis(p, t);
+            }
+            let a = fast.select(t);
+            let b = slow.select_scalar_reference(t);
+            assert_eq!(a, b, "step {step}: dynamic pick diverged");
+            if let Some(i) = a {
+                assert!(live[i], "step {step}: retired slot {i} was selected");
+                fast.on_crawl(i, t);
+                slow.on_crawl(i, t);
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_after_dynamic_run_equals_fresh() {
+        // a scheduler that lived through churn must, after on_start,
+        // behave exactly like a freshly built one
+        let ps = pages(20, 33, true);
+        let mut reused = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+        reused.on_start(ps.len());
+        // simulate a dynamic rep: retire, grow, drift
+        reused.on_page_removed(3, 1.0);
+        reused.on_page_added(3, &PageParams { delta: 0.9, mu: 0.9, lam: 0.2, nu: 0.1 }, 2.0);
+        reused.on_page_added(20, &PageParams { delta: 0.4, mu: 0.8, lam: 0.6, nu: 0.2 }, 3.0);
+        reused.on_params_changed(7, &PageParams { delta: 1.2, mu: 0.1, lam: 0.3, nu: 0.3 }, 4.0);
+        let _ = reused.select(5.0);
+        // next rep: the reused scheduler must match a fresh twin tick
+        // for tick
+        reused.on_start(ps.len());
+        let mut fresh = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
+        fresh.on_start(ps.len());
+        let mut rng = Rng::new(34);
+        for step in 1..=120 {
+            let t = step as f64 * 0.5;
+            if rng.f64() < 0.5 {
+                let p = (rng.f64() * ps.len() as f64) as usize;
+                reused.on_cis(p, t);
+                fresh.on_cis(p, t);
+            }
+            let a = reused.select(t);
+            let b = fresh.select(t);
+            assert_eq!(a, b, "step {step}: reused-after-dynamic diverged from fresh");
+            assert_eq!(
+                reused.lambda_estimate.to_bits(),
+                fresh.lambda_estimate.to_bits(),
+                "step {step}: lambda diverged"
+            );
+            if let Some(i) = a {
+                reused.on_crawl(i, t);
+                fresh.on_crawl(i, t);
             }
         }
     }

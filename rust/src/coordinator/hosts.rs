@@ -120,6 +120,29 @@ impl<S: CrawlScheduler> CrawlScheduler for PoliteScheduler<S> {
         self.inner.on_veto(page, t);
     }
 
+    fn on_page_added(&mut self, page: usize, params: &crate::params::PageParams, t: f64) {
+        // a slot already covered by the map keeps its host: recycled
+        // slots stay put, and a caller with a non-round-robin layout
+        // (e.g. `HostMap::from_sizes` Zipf hosts) can pre-extend
+        // `map.host` past the initial population to control where
+        // births land. Only an UNMAPPED newborn falls back to the
+        // round-robin convention (`page % hosts`), matching
+        // `HostMap::round_robin` and the sharded/pipeline birth
+        // routing.
+        if page == self.map.host.len() {
+            self.map.host.push(page % self.map.hosts);
+        }
+        self.inner.on_page_added(page, params, t);
+    }
+
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        self.inner.on_page_removed(page, t);
+    }
+
+    fn on_params_changed(&mut self, page: usize, params: &crate::params::PageParams, t: f64) {
+        self.inner.on_params_changed(page, params, t);
+    }
+
     fn name(&self) -> String {
         format!("{}-POLITE", self.inner.name())
     }

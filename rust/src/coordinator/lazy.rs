@@ -90,6 +90,11 @@ pub struct LazyGreedyScheduler {
     wake_at: Vec<f64>,
     /// whether the page currently belongs to the hot heap
     is_hot: Vec<bool>,
+    /// whether the slot holds a live page (dynamic worlds retire
+    /// slots; a retired slot must ignore stray events — a late CIS
+    /// routed by a driver without liveness tracking must not resurrect
+    /// it via the cold-path wake reschedule)
+    live: Vec<bool>,
     /// tick time of the page's last politeness veto: the force-wake
     /// fallback skips pages vetoed at the CURRENT tick so a retry
     /// progresses to a different candidate instead of re-popping them
@@ -98,6 +103,12 @@ pub struct LazyGreedyScheduler {
     lambda: f64,
     /// hot/cold margin in (0, 1]
     margin: f64,
+    /// Pristine construction-time population, snapshotted lazily at
+    /// the FIRST dynamic-world hook (static runs never pay the copy)
+    /// so `on_start` can rebuild after a dynamic run mutated the model.
+    initial_pages: Vec<PageParams>,
+    /// Any dynamic-world hook fired since construction/reset.
+    world_mutated: bool,
     /// diagnostics: value evaluations performed
     pub evals: u64,
     /// diagnostics: evaluations from wake processing
@@ -159,9 +170,12 @@ impl LazyGreedyScheduler {
             version: vec![0; m],
             wake_at: vec![0.0; m],
             is_hot: vec![false; m],
+            live: vec![true; m],
             veto_tick: vec![f64::NEG_INFINITY; m],
             lambda: 0.0,
             margin,
+            initial_pages: Vec::new(),
+            world_mutated: false,
             rekey_period: 32,
             evals: 0,
             demotes: 0,
@@ -176,6 +190,15 @@ impl LazyGreedyScheduler {
     /// The policy whose value function drives the threshold logic.
     pub fn policy(&self) -> PolicyKind {
         self.model.policy()
+    }
+
+    /// First dynamic-world hook of a run: snapshot the still-pristine
+    /// population before mutating anything, so `on_start` can rebuild.
+    fn note_world_mutation(&mut self) {
+        if !self.world_mutated {
+            self.initial_pages = self.model.raw_pages().to_vec();
+            self.world_mutated = true;
+        }
     }
 
     #[inline]
@@ -333,6 +356,17 @@ impl LazyGreedyScheduler {
 
 impl CrawlScheduler for LazyGreedyScheduler {
     fn on_start(&mut self, m: usize) {
+        if self.world_mutated {
+            // a dynamic run grew/retired/drifted the model: rebuild
+            // wholesale from the pristine construction-time population
+            // (reuse == fresh; the wheel, tracker slots and scratch all
+            // re-dimension through the constructor)
+            let policy = self.model.policy();
+            let backend = self.backend.clone();
+            let margin = self.margin;
+            let pages = std::mem::take(&mut self.initial_pages);
+            *self = Self::with_backend(policy, &pages, margin, backend);
+        }
         debug_assert_eq!(m, self.model.len(), "page count changed between runs");
         let m = self.model.len();
         self.tracker.reset(m);
@@ -346,6 +380,7 @@ impl CrawlScheduler for LazyGreedyScheduler {
         self.version.iter_mut().for_each(|v| *v = 0);
         self.wake_at.iter_mut().for_each(|w| *w = 0.0);
         self.is_hot.iter_mut().for_each(|h| *h = false);
+        self.live.iter_mut().for_each(|l| *l = true);
         self.veto_tick.iter_mut().for_each(|v| *v = f64::NEG_INFINITY);
         self.lambda = 0.0;
         self.evals = 0;
@@ -463,7 +498,75 @@ impl CrawlScheduler for LazyGreedyScheduler {
         self.demote(page, t);
     }
 
+    fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.note_world_mutation();
+        if page == self.model.len() {
+            // growth: one past the end
+            self.model.push_page(params);
+            self.version.push(0);
+            self.wake_at.push(t);
+            self.is_hot.push(false);
+            self.live.push(true);
+            self.veto_tick.push(f64::NEG_INFINITY);
+        } else {
+            // recycling: scrub every trace of the previous occupant —
+            // the version bump stales any calendar/heap entry it left
+            // (including one resident in the wheel's overflow bin)
+            self.model.set_page(page, params);
+            self.version[page] = self.version[page].wrapping_add(1);
+            self.is_hot[page] = false;
+            self.live[page] = true;
+            self.veto_tick[page] = f64::NEG_INFINITY;
+            self.wake_at[page] = t;
+        }
+        self.tracker.add_page(page, t);
+        // the newcomer gets evaluated at the next tick and then finds
+        // its own hot/cold tier
+        self.wakes.schedule(t, self.version[page], page as u32);
+    }
+
+    fn on_page_removed(&mut self, page: usize, _t: f64) {
+        self.note_world_mutation();
+        // version bump = lazy deletion from both the timing wheel and
+        // the hot heap; `live` guards the event hooks so a stray CIS
+        // (a driver without liveness tracking) can never re-schedule
+        // the dead slot — it ceases to exist for the selection loop
+        self.version[page] = self.version[page].wrapping_add(1);
+        self.is_hot[page] = false;
+        self.live[page] = false;
+        self.tracker.remove_page(page);
+    }
+
+    fn on_params_changed(&mut self, page: usize, params: &PageParams, t: f64) {
+        if !self.live[page] {
+            return; // stray event for a retired slot
+        }
+        self.note_world_mutation();
+        // belief re-projection: truth columns, belief projection and
+        // value dispatch all recompute under the new parameters
+        self.model.set_page(page, params);
+        if self.is_hot[page] {
+            // the stored heap key was computed under the old belief —
+            // re-key immediately so the jump (either way) is visible
+            let v = self.value(page, t);
+            self.promote(page, v);
+        } else {
+            // cold: the old wake time inverted the old value curve;
+            // wake immediately and let one evaluation re-tier the page
+            self.version[page] = self.version[page].wrapping_add(1);
+            self.wake_at[page] = t;
+            self.wakes.schedule(t, self.version[page], page as u32);
+        }
+    }
+
     fn on_cis(&mut self, page: usize, t: f64) {
+        if !self.live[page] {
+            // a stray CIS for a retired slot must not touch the
+            // tracker or re-schedule a wake: the cold-path reschedule
+            // below would otherwise stamp a CURRENT-version calendar
+            // entry and resurrect the dead page into the selection loop
+            return;
+        }
         self.tracker.on_cis(page);
         if !self.model.policy().uses_cis() {
             return;
@@ -633,6 +736,127 @@ mod tests {
         }
         assert_eq!(lz.select(t), None, "all pages vetoed: tick must idle");
         assert!(lz.select(2.0).is_some(), "vetoed pages were orphaned");
+    }
+
+    #[test]
+    fn dynamic_lifecycle_drives_selection_correctly() {
+        // retire the running scheduler's pages one by one; the retired
+        // ones must never surface again, and a newcomer recycled into a
+        // dead slot must get picked up by the selection loop
+        let ps = pages(6, 20);
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        lz.on_start(ps.len());
+        for step in 1..=10 {
+            let t = step as f64;
+            if let Some(i) = lz.select(t) {
+                lz.on_crawl(i, t);
+            }
+        }
+        lz.on_page_removed(2, 10.5);
+        lz.on_page_removed(4, 10.5);
+        for step in 11..=40 {
+            let t = step as f64;
+            if let Some(i) = lz.select(t) {
+                assert!(i != 2 && i != 4, "retired page {i} selected at t={t}");
+                lz.on_crawl(i, t);
+            }
+        }
+        // rebirth into slot 2 with a dominant page: it must win soon
+        let hot = PageParams { delta: 0.9, mu: 50.0, lam: 0.0, nu: 0.0 };
+        lz.on_page_added(2, &hot, 40.5);
+        let mut crawled_newcomer = false;
+        for step in 41..=60 {
+            let t = step as f64;
+            if let Some(i) = lz.select(t) {
+                assert_ne!(i, 4, "still-dead page selected");
+                if i == 2 {
+                    crawled_newcomer = true;
+                }
+                lz.on_crawl(i, t);
+            }
+        }
+        assert!(crawled_newcomer, "recycled newcomer was never crawled");
+    }
+
+    #[test]
+    fn stray_events_after_retirement_do_not_resurrect() {
+        // a driver without liveness tracking (the streaming pipeline
+        // forwards CIS by index alone) may deliver events for a slot
+        // the scheduler already retired: they must be inert — the
+        // cold-path CIS wake reschedule would otherwise stamp a
+        // current-version calendar entry and bring the dead page back
+        let ps = pages(4, 22);
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        lz.on_start(ps.len());
+        for step in 1..=5 {
+            let t = step as f64;
+            if let Some(i) = lz.select(t) {
+                lz.on_crawl(i, t);
+            }
+        }
+        lz.on_page_removed(1, 5.5);
+        lz.on_cis(1, 6.0);
+        lz.on_params_changed(1, &ps[0], 6.5);
+        for step in 7..=40 {
+            let t = step as f64;
+            if let Some(i) = lz.select(t) {
+                assert_ne!(i, 1, "stray post-retirement event resurrected the page at t={t}");
+                lz.on_crawl(i, t);
+            }
+        }
+    }
+
+    #[test]
+    fn params_change_reprojects_beliefs_promptly() {
+        // two pages; page 1 starts negligible, then drifts to dominate:
+        // the scheduler must start crawling it without a CIS nudge
+        let ps = vec![
+            PageParams { delta: 0.5, mu: 0.5, lam: 0.0, nu: 0.0 },
+            PageParams { delta: 0.5, mu: 0.001, lam: 0.0, nu: 0.0 },
+        ];
+        let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        lz.on_start(ps.len());
+        for step in 1..=20 {
+            let t = step as f64 * 0.5;
+            if let Some(i) = lz.select(t) {
+                lz.on_crawl(i, t);
+            }
+        }
+        lz.on_params_changed(1, &PageParams { delta: 0.5, mu: 50.0, lam: 0.0, nu: 0.0 }, 10.2);
+        let mut picked = 0u32;
+        for step in 21..=40 {
+            let t = step as f64 * 0.5;
+            if let Some(i) = lz.select(t) {
+                if i == 1 {
+                    picked += 1;
+                }
+                lz.on_crawl(i, t);
+            }
+        }
+        assert!(picked >= 10, "drifted page picked only {picked}/20 times");
+    }
+
+    #[test]
+    fn reuse_after_dynamic_run_matches_fresh() {
+        // a lazy scheduler that lived through churn must reset to the
+        // pristine population on on_start (reuse == fresh, bit-exact)
+        let ps = pages(40, 21);
+        let cfg = SimConfig::new(5.0, 40.0);
+        let mut reused = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        // dynamic episode outside any engine: grow, retire, drift
+        reused.on_start(ps.len());
+        reused.on_page_added(40, &PageParams { delta: 0.7, mu: 0.7, lam: 0.3, nu: 0.1 }, 1.0);
+        reused.on_page_removed(5, 2.0);
+        reused.on_params_changed(9, &PageParams { delta: 1.3, mu: 0.2, lam: 0.5, nu: 0.2 }, 3.0);
+        let _ = reused.select(4.0);
+        // a plain static rep afterwards must equal a fresh scheduler
+        let mut rng = Rng::new(90);
+        let traces = generate_traces(&ps, 40.0, CisDelay::None, &mut rng);
+        let mut fresh = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
+        let a = simulate(&traces, &cfg, &mut reused);
+        let b = simulate(&traces, &cfg, &mut fresh);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.crawl_counts, b.crawl_counts);
     }
 
     #[test]

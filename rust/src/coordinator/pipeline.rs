@@ -37,8 +37,61 @@ pub enum ShardMsg {
         /// Tick time.
         t: f64,
     },
+    /// A page was born into this shard (local slot `page`).
+    Born {
+        /// Local page index within the shard (== current shard size
+        /// for growth).
+        page: usize,
+        /// Raw parameters of the newborn.
+        params: PageParams,
+        /// Birth time.
+        t: f64,
+    },
+    /// Local page `page` was retired.
+    Retired {
+        /// Local page index within the shard.
+        page: usize,
+        /// Retirement time.
+        t: f64,
+    },
+    /// Local page `page` drifted to new parameters.
+    Params {
+        /// Local page index within the shard.
+        page: usize,
+        /// The new raw parameters.
+        params: PageParams,
+        /// Shift time.
+        t: f64,
+    },
     /// Drain and stop.
     Shutdown,
+}
+
+/// A dynamic-world event for the streaming pipeline, named by *global*
+/// page index. Births append to the global population (the pipeline
+/// does not recycle indices — the scenario engine does; here a new
+/// page is simply the next index) and route to shard
+/// `index % shards`, consistent with the round-robin plan and
+/// [`crate::coordinator::shard::ShardedScheduler`].
+#[derive(Debug, Clone, Copy)]
+pub enum WorldMsg {
+    /// A new page joins the crawl frontier.
+    PageBorn {
+        /// Raw parameters of the newborn.
+        params: PageParams,
+    },
+    /// Global page `page` is retired.
+    PageRetired {
+        /// Global page index.
+        page: usize,
+    },
+    /// Global page `page` drifted.
+    ParamsChanged {
+        /// Global page index.
+        page: usize,
+        /// The new raw parameters.
+        params: PageParams,
+    },
 }
 
 /// Counters shared with the driver.
@@ -48,6 +101,8 @@ pub struct PipelineMetrics {
     pub crawls: AtomicU64,
     /// CIS messages applied.
     pub cis_applied: AtomicU64,
+    /// World (lifecycle) messages applied by shard workers.
+    pub world_applied: AtomicU64,
     /// Ingestion stalls caused by a full shard queue (backpressure).
     pub backpressure_stalls: AtomicU64,
 }
@@ -73,6 +128,21 @@ fn shard_worker(
                     scheduler.on_crawl(i, t);
                     metrics.crawls.fetch_add(1, Ordering::Relaxed);
                 }
+            }
+            ShardMsg::Born { page, params, t } => {
+                if page == crawl_counts.len() {
+                    crawl_counts.push(0);
+                }
+                scheduler.on_page_added(page, &params, t);
+                metrics.world_applied.fetch_add(1, Ordering::Relaxed);
+            }
+            ShardMsg::Retired { page, t } => {
+                scheduler.on_page_removed(page, t);
+                metrics.world_applied.fetch_add(1, Ordering::Relaxed);
+            }
+            ShardMsg::Params { page, params, t } => {
+                scheduler.on_params_changed(page, &params, t);
+                metrics.world_applied.fetch_add(1, Ordering::Relaxed);
             }
             ShardMsg::Shutdown => break,
         }
@@ -122,6 +192,8 @@ pub struct PipelineReport {
     pub total_crawls: u64,
     /// CIS applied.
     pub cis_applied: u64,
+    /// World (lifecycle) events applied by shard workers.
+    pub world_applied: u64,
     /// Backpressure stalls observed.
     pub backpressure_stalls: u64,
     /// Wall-clock duration of the run.
@@ -140,6 +212,26 @@ pub fn run_pipeline(
     cis_events: &[(f64, usize)], // (time, global page), sorted by time
     cfg: &PipelineConfig,
 ) -> crate::Result<PipelineReport> {
+    run_pipeline_with_world(pages, scheduler, cis_events, &[], cfg)
+}
+
+/// [`run_pipeline`] over a dynamic world: `world_events` (sorted by
+/// time, global page indices) are multiplexed into the shard queues in
+/// simulated-time order — before CIS and ticks at the same instant —
+/// and routed consistently: a birth takes the next global index and
+/// lands on shard `index % shards` (the round-robin plan extended),
+/// retirements/drifts follow the page's existing shard. Limitations,
+/// by design of the streaming topology: global indices are never
+/// recycled here (that is the scenario engine's job), and a shard that
+/// starts empty (`shards > pages`) runs an [`IdleScheduler`] and stays
+/// idle even if births later route to it.
+pub fn run_pipeline_with_world(
+    pages: &[PageParams],
+    scheduler: &CrawlerBuilder,
+    cis_events: &[(f64, usize)], // (time, global page), sorted by time
+    world_events: &[(f64, WorldMsg)], // sorted by time
+    cfg: &PipelineConfig,
+) -> crate::Result<PipelineReport> {
     if cfg.shards == 0 {
         return Err(crate::Error::Usage(
             "run_pipeline: at least one shard required".into(),
@@ -148,7 +240,10 @@ pub fn run_pipeline(
     let metrics = Arc::new(PipelineMetrics::default());
     let plan = crate::coordinator::shard::ShardPlan::round_robin(pages.len(), cfg.shards);
     let members = plan.shard_members();
-    // local index of each global page within its shard
+    // page → shard and local-slot maps; mutable because births extend
+    // them mid-run
+    let mut assignment = plan.assignment.clone();
+    let mut member_count: Vec<usize> = members.iter().map(|m| m.len()).collect();
     let mut local_index = vec![0usize; pages.len()];
     for member in &members {
         for (li, &gi) in member.iter().enumerate() {
@@ -181,20 +276,63 @@ pub fn run_pipeline(
             handles.push(scope.spawn(move || shard_worker(rx, sched, mcount, metrics)));
         }
         // multiplex: ticks round-robin across shards at global rate R
-        // (integer tick index — accumulating f64 drifts past the horizon)
+        // (integer tick index — accumulating f64 drifts past the
+        // horizon); world events take precedence over CIS and ticks at
+        // the same instant so lifecycle state is in place before the
+        // events that depend on it
         let tick_dt = 1.0 / cfg.bandwidth;
         let total_ticks = (cfg.horizon * cfg.bandwidth).round() as u64;
         let mut tick_idx = 1u64;
         let mut tick_shard = 0usize;
         let mut ev = 0usize;
-        while tick_idx <= total_ticks || ev < cis_events.len() {
+        let mut wev = 0usize;
+        while tick_idx <= total_ticks || ev < cis_events.len() || wev < world_events.len() {
             let next_tick =
                 if tick_idx <= total_ticks { tick_idx as f64 * tick_dt } else { f64::INFINITY };
             let next_cis = cis_events.get(ev).map(|e| e.0).unwrap_or(f64::INFINITY);
-            if next_cis <= next_tick && ev < cis_events.len() {
-                let (t, gpage) = cis_events[ev];
+            let next_world = world_events.get(wev).map(|e| e.0).unwrap_or(f64::INFINITY);
+            if wev < world_events.len() && next_world <= next_cis && next_world <= next_tick {
+                let (t, msg) = world_events[wev];
                 if t <= cfg.horizon {
-                    let s = plan.assignment[gpage];
+                    match msg {
+                        WorldMsg::PageBorn { params } => {
+                            let g = assignment.len();
+                            let s = g % cfg.shards;
+                            assignment.push(s);
+                            let local = member_count[s];
+                            member_count[s] += 1;
+                            local_index.push(local);
+                            send_backpressured(
+                                &senders[s],
+                                ShardMsg::Born { page: local, params, t },
+                                &metrics,
+                            );
+                        }
+                        WorldMsg::PageRetired { page } if page < assignment.len() => {
+                            let s = assignment[page];
+                            send_backpressured(
+                                &senders[s],
+                                ShardMsg::Retired { page: local_index[page], t },
+                                &metrics,
+                            );
+                        }
+                        WorldMsg::ParamsChanged { page, params } if page < assignment.len() => {
+                            let s = assignment[page];
+                            send_backpressured(
+                                &senders[s],
+                                ShardMsg::Params { page: local_index[page], params, t },
+                                &metrics,
+                            );
+                        }
+                        // out-of-range page: a script bug, dropped
+                        WorldMsg::PageRetired { .. } | WorldMsg::ParamsChanged { .. } => {}
+                    }
+                }
+                wev += 1;
+            } else if ev < cis_events.len() && next_cis <= next_tick {
+                let (t, gpage) = cis_events[ev];
+                if t <= cfg.horizon && gpage < assignment.len() {
+                    let s = assignment[gpage];
                     send_backpressured(
                         &senders[s],
                         ShardMsg::Cis { page: local_index[gpage], t },
@@ -224,6 +362,7 @@ pub fn run_pipeline(
         total_crawls: crawls_per_shard.iter().sum(),
         crawls_per_shard,
         cis_applied: metrics.cis_applied.load(Ordering::Relaxed),
+        world_applied: metrics.world_applied.load(Ordering::Relaxed),
         backpressure_stalls: metrics.backpressure_stalls.load(Ordering::Relaxed),
         wall: start.elapsed(),
     })
@@ -333,6 +472,27 @@ mod tests {
         let bad = CrawlerBuilder::new().strategy(Strategy::Lds);
         let cfg = PipelineConfig { shards: 2, queue_depth: 4, bandwidth: 5.0, horizon: 1.0 };
         assert!(run_pipeline(&ps, &bad, &[], &cfg).is_err());
+    }
+
+    #[test]
+    fn world_events_route_and_apply_in_order() {
+        // 8 pages over 2 shards; births at t=2 and t=3 land on shards
+        // 0 and 1 (global indices 8, 9), a retirement and a drift
+        // route to the pages' existing shards — all without losing a
+        // single tick
+        let ps = pages(8);
+        let newcomer = PageParams { delta: 0.8, mu: 2.0, lam: 0.5, nu: 0.2 };
+        let world = vec![
+            (2.0, WorldMsg::PageBorn { params: newcomer }),
+            (3.0, WorldMsg::PageBorn { params: newcomer }),
+            (4.0, WorldMsg::PageRetired { page: 3 }),
+            (5.0, WorldMsg::ParamsChanged { page: 2, params: newcomer }),
+        ];
+        let cfg = PipelineConfig { shards: 2, queue_depth: 8, bandwidth: 10.0, horizon: 20.0 };
+        let report = run_pipeline_with_world(&ps, &lazy_ncis(), &[], &world, &cfg).unwrap();
+        assert_eq!(report.world_applied, 4, "every world event must reach its worker");
+        assert_eq!(report.total_crawls, 200, "world routing must not cost ticks");
+        assert_eq!(report.crawls_per_shard, vec![100, 100]);
     }
 
     #[test]

@@ -82,6 +82,15 @@ pub struct ShardedScheduler {
     /// Local index of each global page within its shard.
     local_index: Vec<usize>,
     next_shard: usize,
+    /// Construction-time inputs, kept so `on_start` can rebuild after
+    /// a dynamic-world run changed the membership. Unlike the
+    /// per-scheduler lazy snapshots (Greedy/Lazy snapshot their model's
+    /// raw pages at the first mutation), the composite must keep the
+    /// global population eagerly — it owns no model to recover it from.
+    policy: PolicyKind,
+    backend: ValueBackend,
+    initial_pages: Vec<PageParams>,
+    world_mutated: bool,
 }
 
 impl ShardedScheduler {
@@ -114,7 +123,17 @@ impl ShardedScheduler {
                 )
             })
             .collect();
-        Self { inner, plan, members, local_index, next_shard: 0 }
+        Self {
+            inner,
+            plan,
+            members,
+            local_index,
+            next_shard: 0,
+            policy,
+            backend,
+            initial_pages: pages.to_vec(),
+            world_mutated: false,
+        }
     }
 
     /// Number of shards.
@@ -130,6 +149,15 @@ impl ShardedScheduler {
 
 impl CrawlScheduler for ShardedScheduler {
     fn on_start(&mut self, m: usize) {
+        if self.world_mutated {
+            // a dynamic run grew the membership: rebuild the plan and
+            // every shard scheduler from the pristine population
+            let policy = self.policy;
+            let backend = self.backend.clone();
+            let shards = self.plan.shards;
+            let pages = std::mem::take(&mut self.initial_pages);
+            *self = Self::new(policy, &pages, shards, backend);
+        }
         debug_assert_eq!(m, self.local_index.len(), "page count changed between runs");
         self.next_shard = 0;
         for (s, inner) in self.inner.iter_mut().enumerate() {
@@ -150,6 +178,39 @@ impl CrawlScheduler for ShardedScheduler {
     fn on_veto(&mut self, page: usize, t: f64) {
         let s = self.plan.assignment[page];
         self.inner[s].on_veto(self.local_index[page], t);
+    }
+
+    fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.world_mutated = true;
+        if page == self.plan.assignment.len() {
+            // growth: route consistently with the round-robin plan
+            // (`page % shards`), so any driver — this composite, the
+            // threaded pipeline, a future distributed router — sends
+            // the same newborn to the same shard
+            let s = page % self.plan.shards;
+            self.plan.assignment.push(s);
+            let local = self.members[s].len();
+            self.members[s].push(page);
+            self.local_index.push(local);
+            self.inner[s].on_page_added(local, params, t);
+        } else {
+            // recycled slot: its shard and local slot persist, the
+            // shard scheduler recycles its local slot in turn
+            let s = self.plan.assignment[page];
+            self.inner[s].on_page_added(self.local_index[page], params, t);
+        }
+    }
+
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        self.world_mutated = true;
+        let s = self.plan.assignment[page];
+        self.inner[s].on_page_removed(self.local_index[page], t);
+    }
+
+    fn on_params_changed(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.world_mutated = true;
+        let s = self.plan.assignment[page];
+        self.inner[s].on_params_changed(self.local_index[page], params, t);
     }
 
     fn select(&mut self, t: f64) -> Option<usize> {
@@ -343,6 +404,58 @@ mod tests {
             ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 4, ValueBackend::Native);
         let b = simulate(&traces, &cfg, &mut sharded).accuracy;
         assert!((a - b).abs() < 0.05, "lazy {a} vs sharded {b}");
+    }
+
+    #[test]
+    fn births_route_round_robin_consistently() {
+        let pages = test_pages(8, 9);
+        let mut sched =
+            ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 4, ValueBackend::Native);
+        sched.on_start(pages.len());
+        // growth: global indices 8, 9, 10 land on shards 0, 1, 2 —
+        // exactly the round-robin plan extended
+        for k in 0..3usize {
+            let g = 8 + k;
+            sched.on_page_added(g, &pages[k], 1.0);
+            assert_eq!(sched.plan().assignment[g], g % 4, "birth routed off-plan");
+        }
+        // retire + recycle: the slot keeps its shard
+        sched.on_page_removed(5, 2.0);
+        sched.on_page_added(5, &pages[1], 3.0);
+        assert_eq!(sched.plan().assignment[5], 5 % 4);
+        // selection still maps local picks back to global indices
+        let mut any = false;
+        for step in 0..40 {
+            let t = 4.0 + step as f64;
+            if let Some(i) = sched.select(t) {
+                assert!(i < 11, "pick {i} outside the grown population");
+                sched.on_crawl(i, t);
+                any = true;
+            }
+        }
+        assert!(any, "grown sharded scheduler never crawled");
+    }
+
+    #[test]
+    fn reuse_after_dynamic_run_matches_fresh() {
+        let pages = test_pages(30, 11);
+        let cfg = SimConfig::new(5.0, 30.0);
+        let mut reused =
+            ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 3, ValueBackend::Native);
+        reused.on_start(pages.len());
+        reused.on_page_added(30, &pages[0], 1.0); // grow
+        reused.on_page_removed(4, 2.0);
+        reused.on_params_changed(7, &pages[1], 3.0);
+        let _ = reused.select(4.0);
+        // a plain static rep afterwards must equal a fresh scheduler
+        let mut rng = Rng::new(12);
+        let traces = generate_traces(&pages, 30.0, CisDelay::None, &mut rng);
+        let mut fresh =
+            ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 3, ValueBackend::Native);
+        let a = simulate(&traces, &cfg, &mut reused);
+        let b = simulate(&traces, &cfg, &mut fresh);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.crawl_counts, b.crawl_counts);
     }
 
     #[test]

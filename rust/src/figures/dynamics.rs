@@ -35,7 +35,8 @@ fn timeline(
 }
 
 /// Resample a timeline onto a regular grid (nearest earlier sample).
-fn resample(tl: &[(f64, f64)], grid: &[f64]) -> Vec<f64> {
+/// Shared with the dynamic-world figure (`figures::scenario`).
+pub(crate) fn resample(tl: &[(f64, f64)], grid: &[f64]) -> Vec<f64> {
     let mut out = Vec::with_capacity(grid.len());
     let mut j = 0usize;
     for &t in grid {

@@ -11,6 +11,7 @@ pub mod dynamics;
 pub mod estimators;
 pub mod rates;
 pub mod scale;
+pub mod scenario;
 pub mod semisynth;
 pub mod valuefn;
 
@@ -38,8 +39,9 @@ pub fn run_figure(id: &str, reps: usize) -> crate::Result<()> {
         "12" | "13" => rates::fig12_13(reps),
         "14" => rates::fig14(reps),
         "appg" => scale::appg(20_000, 60.0, 4),
+        "scenario" => scenario::fig_scenario(reps),
         other => Err(crate::Error::Usage(format!(
-            "unknown figure `{other}` (valid: 1-14, appg)"
+            "unknown figure `{other}` (valid: 1-14, appg, scenario)"
         ))),
     }
 }

@@ -1,0 +1,97 @@
+//! Dynamic-world accuracy experiment (no paper counterpart — the
+//! scenario-engine extension of the Figure-9 adaptivity story).
+//!
+//! GREEDY-NCIS vs. the change-agnostic baselines under **churn + CIS
+//! outage**: a §6.3-style population with partially-observable, noisy
+//! CIS runs a world with steady page churn (ρ = 0.5% of pages per unit
+//! time) and a full CIS blackout over the middle of the horizon.
+//! Rolling accuracy timelines show (a) all policies absorbing churn
+//! without re-planning — newborn pages enter the argmax as soon as
+//! their hook fires — and (b) the NCIS lift collapsing onto GREEDY
+//! while the feed is dark and recovering after it returns, with a
+//! static-world GREEDY-NCIS lane quantifying the total dynamics cost.
+
+use crate::benchkit::FigureOutput;
+use crate::coordinator::builder::{CrawlerBuilder, Strategy};
+use crate::figures::common::ExperimentSpec;
+use crate::figures::dynamics::resample;
+use crate::policy::PolicyKind;
+use crate::rngkit::Rng;
+use crate::scenario::generators::{add_steady_churn, BornPageSpec};
+use crate::scenario::{PageSet, Scenario, WorldEvent};
+use crate::sim::SimConfig;
+use crate::Result;
+
+/// Horizon of the experiment.
+const HORIZON: f64 = 400.0;
+/// Outage window (all pages): the middle quarter of the horizon.
+const OUTAGE_START: f64 = 150.0;
+const OUTAGE_LEN: f64 = 100.0;
+/// Steady churn rate: fraction of the population turning over per unit
+/// time.
+const CHURN_RHO: f64 = 0.005;
+
+fn mean_timeline(
+    builder: &CrawlerBuilder,
+    cfg: &SimConfig,
+    grid: &[f64],
+    reps: usize,
+) -> Vec<f64> {
+    let mut acc = vec![0.0f64; grid.len()];
+    for rep in 0..reps {
+        let res = builder
+            .run_scenario(cfg, 0xD1CE ^ rep as u64)
+            .expect("scenario figure run");
+        for (a, v) in acc.iter_mut().zip(resample(&res.timeline, grid)) {
+            *a += v;
+        }
+    }
+    acc.iter().map(|a| a / reps as f64).collect()
+}
+
+/// The churn + outage figure: m = 1000, R = 100, T = 400; rolling
+/// accuracy (window 1000 requests) for GREEDY-NCIS / GREEDY-CIS /
+/// GREEDY under the dynamic world, plus GREEDY-NCIS in the matching
+/// static world. CSV: `target/figures/fig_scenario_churn_outage.csv`.
+pub fn fig_scenario(reps: usize) -> Result<()> {
+    let reps = reps.clamp(1, 10);
+    let spec = ExperimentSpec::section6(1000, 1).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+
+    // the dynamic world: steady churn for the whole run + a total CIS
+    // blackout over [150, 250)
+    let mut dynamic = Scenario::new(inst.pages.clone(), 0x5CE7);
+    add_steady_churn(&mut dynamic, CHURN_RHO, HORIZON, &BornPageSpec::default(), 0x5CE8);
+    dynamic.push(
+        OUTAGE_START,
+        WorldEvent::CisOutage { pages: PageSet::All, duration: OUTAGE_LEN },
+    );
+    let static_world = Scenario::new(inst.pages.clone(), 0x5CE7);
+
+    let mut cfg = SimConfig::new(spec.bandwidth, HORIZON);
+    cfg.timeline_window = Some(1000);
+    let grid: Vec<f64> = (1..=HORIZON as usize).map(|k| k as f64).collect();
+
+    let lane = |policy: PolicyKind, sc: &Scenario| {
+        let b = CrawlerBuilder::new()
+            .policy(policy)
+            .strategy(Strategy::Exact)
+            .with_scenario(sc.clone());
+        mean_timeline(&b, &cfg, &grid, reps)
+    };
+    let ncis = lane(PolicyKind::GreedyNcis, &dynamic);
+    let cis = lane(PolicyKind::GreedyCis, &dynamic);
+    let greedy = lane(PolicyKind::Greedy, &dynamic);
+    let ncis_static = lane(PolicyKind::GreedyNcis, &static_world);
+
+    let mut fig = FigureOutput::new(
+        "fig_scenario_churn_outage",
+        &["t", "greedy_ncis", "greedy_cis", "greedy", "greedy_ncis_static"],
+    );
+    for (k, &t) in grid.iter().enumerate() {
+        fig.rowf(&[t, ncis[k], cis[k], greedy[k], ncis_static[k]]);
+    }
+    fig.finish()?;
+    Ok(())
+}

@@ -40,6 +40,11 @@
 //! - [`sim`] — Poisson event streams, the discrete-tick simulator
 //!   (streaming k-way merge + merged-sort parity oracle) and
 //!   accuracy/rate metrics.
+//! - [`scenario`] — the dynamic-world engine: scripted timelines of
+//!   page churn, parameter drift, CIS outages and bandwidth shifts
+//!   ([`Scenario`] / [`WorldEvent`]), merged into the streaming
+//!   simulator with slot recycling + generation counters, plus
+//!   composable stress-pattern generators.
 //! - [`estimation`] — Appendix-E estimators for CIS precision/recall.
 //! - [`dataset`] — semi-synthetic stand-in for the (non-public)
 //!   Kolobov et al. dataset.
@@ -64,6 +69,7 @@ pub mod policy;
 pub mod report;
 pub mod rngkit;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod solver;
@@ -76,6 +82,7 @@ pub use coordinator::{CrawlerBuilder, Strategy};
 pub use error::{Error, Result};
 pub use params::{DerivedParams, PageParams};
 pub use policy::{PolicyKind, PolicyUnderTest};
+pub use scenario::{Scenario, WorldEvent};
 pub use sched::{CrawlScheduler, PageTracker};
 
 mod app;

@@ -215,6 +215,19 @@ impl ParamColumns {
         self.mu.push(d.mu);
     }
 
+    /// Overwrite page `i`'s parameters in place (the dynamic-world
+    /// mutation path: parameter drift re-projects a page's columns
+    /// without disturbing its neighbours or the column capacity).
+    #[inline]
+    pub fn set(&mut self, i: usize, d: &DerivedParams) {
+        self.alpha[i] = d.alpha;
+        self.beta[i] = d.beta;
+        self.gamma[i] = d.gamma;
+        self.nu[i] = d.nu;
+        self.delta[i] = d.delta;
+        self.mu[i] = d.mu;
+    }
+
     /// Reconstruct page `i`'s parameters (bit-identical to the push).
     #[inline]
     pub fn get(&self, i: usize) -> DerivedParams {
@@ -363,6 +376,26 @@ mod tests {
         let mut cols = cols;
         cols.clear();
         assert!(cols.is_empty());
+    }
+
+    #[test]
+    fn param_columns_set_overwrites_in_place() {
+        let a = PageParams { delta: 1.0, mu: 0.5, lam: 0.6, nu: 0.3 }.derive().unwrap();
+        let b = PageParams { delta: 0.2, mu: 0.9, lam: 0.1, nu: 0.05 }.derive().unwrap();
+        let mut cols = ParamColumns::from_derived(&[a, a, a]);
+        cols.set(1, &b);
+        // target slot carries the new values bit-exactly...
+        let got = cols.get(1);
+        assert_eq!(got.alpha.to_bits(), b.alpha.to_bits());
+        assert_eq!(got.beta.to_bits(), b.beta.to_bits());
+        assert_eq!(got.gamma.to_bits(), b.gamma.to_bits());
+        assert_eq!(got.mu.to_bits(), b.mu.to_bits());
+        // ...and the neighbours are untouched
+        for i in [0usize, 2] {
+            assert_eq!(cols.get(i).alpha.to_bits(), a.alpha.to_bits(), "slot {i}");
+            assert_eq!(cols.get(i).delta.to_bits(), a.delta.to_bits(), "slot {i}");
+        }
+        assert_eq!(cols.len(), 3);
     }
 
     #[test]

@@ -84,6 +84,23 @@ pub struct BeliefModel {
     kinds: Vec<ValueKind>,
 }
 
+/// Resolve the per-page value dispatch for `policy` (only GREEDY-CIS+
+/// genuinely varies by page).
+fn resolve_kind(policy: PolicyKind, p: &PageParams) -> ValueKind {
+    match policy {
+        PolicyKind::Greedy => ValueKind::Greedy,
+        PolicyKind::GreedyCis => ValueKind::CisState,
+        PolicyKind::GreedyNcis | PolicyKind::NcisApprox(_) => ValueKind::Ncis,
+        PolicyKind::GreedyCisPlus => {
+            if cis_plus_trusts(p) {
+                ValueKind::CisState
+            } else {
+                ValueKind::Greedy
+            }
+        }
+    }
+}
+
 impl BeliefModel {
     /// Precompute environments and belief projections for every page.
     pub fn new(policy: PolicyKind, pages: &[PageParams]) -> Self {
@@ -94,20 +111,32 @@ impl BeliefModel {
             let d = DerivedParams::from_raw(p);
             beliefs.push(&belief_params(policy, p, &d));
             envs.push(&d);
-            kinds.push(match policy {
-                PolicyKind::Greedy => ValueKind::Greedy,
-                PolicyKind::GreedyCis => ValueKind::CisState,
-                PolicyKind::GreedyNcis | PolicyKind::NcisApprox(_) => ValueKind::Ncis,
-                PolicyKind::GreedyCisPlus => {
-                    if cis_plus_trusts(p) {
-                        ValueKind::CisState
-                    } else {
-                        ValueKind::Greedy
-                    }
-                }
-            });
+            kinds.push(resolve_kind(policy, p));
         }
         Self { policy, raw: pages.to_vec(), envs, beliefs, kinds }
+    }
+
+    /// Append one page (dynamic-world growth): derives the true
+    /// environment, re-projects the policy belief and resolves the
+    /// value dispatch exactly as construction does, so a model grown
+    /// page-by-page is indistinguishable from one built in one shot.
+    pub fn push_page(&mut self, p: &PageParams) {
+        let d = DerivedParams::from_raw(p);
+        self.beliefs.push(&belief_params(self.policy, p, &d));
+        self.envs.push(&d);
+        self.kinds.push(resolve_kind(self.policy, p));
+        self.raw.push(*p);
+    }
+
+    /// Overwrite page `i` in place (dynamic-world parameter drift or
+    /// slot recycling): truth columns, belief projection and value
+    /// dispatch are all recomputed from the new raw parameters.
+    pub fn set_page(&mut self, i: usize, p: &PageParams) {
+        let d = DerivedParams::from_raw(p);
+        self.beliefs.set(i, &belief_params(self.policy, p, &d));
+        self.envs.set(i, &d);
+        self.kinds[i] = resolve_kind(self.policy, p);
+        self.raw[i] = *p;
     }
 
     /// Number of pages.
@@ -128,6 +157,13 @@ impl BeliefModel {
     /// Raw parameters of page `i`.
     pub fn raw(&self, i: usize) -> &PageParams {
         &self.raw[i]
+    }
+
+    /// Raw parameters of every page (reflects in-place mutations; a
+    /// scheduler that needs the pristine construction-time population
+    /// snapshots this before its first mutation).
+    pub fn raw_pages(&self) -> &[PageParams] {
+        &self.raw
     }
 
     /// True derived environment of page `i` (reconstructed from the
@@ -338,6 +374,52 @@ mod tests {
         assert!(model.belief(0).beta.is_infinite());
         // untrusted page projects to the plain GREEDY belief
         assert_eq!(model.belief(1).gamma, 0.0);
+    }
+
+    #[test]
+    fn grown_and_mutated_model_matches_one_shot_construction() {
+        let ps = pages(10, 7);
+        let extra = pages(3, 8);
+        let drift = PageParams { delta: 1.7, mu: 0.33, lam: 0.9, nu: 0.02 };
+        for kind in [
+            PolicyKind::Greedy,
+            PolicyKind::GreedyCis,
+            PolicyKind::GreedyNcis,
+            PolicyKind::NcisApprox(2),
+            PolicyKind::GreedyCisPlus,
+        ] {
+            // grow page-by-page, then drift one page in place
+            let mut grown = BeliefModel::new(kind, &ps);
+            for p in &extra {
+                grown.push_page(p);
+            }
+            grown.set_page(4, &drift);
+            // the one-shot equivalent population
+            let mut all = ps.clone();
+            all.extend_from_slice(&extra);
+            all[4] = drift;
+            let oneshot = BeliefModel::new(kind, &all);
+            assert_eq!(grown.len(), oneshot.len());
+            for i in 0..all.len() {
+                for (tau, n) in [(0.5, 0u32), (3.0, 2)] {
+                    assert_eq!(
+                        grown.value(i, tau, n).to_bits(),
+                        oneshot.value(i, tau, n).to_bits(),
+                        "{kind:?} page {i}"
+                    );
+                }
+                assert_eq!(
+                    grown.belief(i).gamma.to_bits(),
+                    oneshot.belief(i).gamma.to_bits(),
+                    "{kind:?} belief γ page {i}"
+                );
+                assert_eq!(
+                    grown.value_upper_bound(i).to_bits(),
+                    oneshot.value_upper_bound(i).to_bits(),
+                    "{kind:?} ub page {i}"
+                );
+            }
+        }
     }
 
     #[test]

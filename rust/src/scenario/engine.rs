@@ -1,0 +1,851 @@
+//! The dynamic-world simulation driver.
+//!
+//! [`simulate_scenario_with`] is the streaming k-way merge of
+//! [`crate::sim::engine::simulate_with`] extended with a fourth input
+//! stream: the scenario's [`WorldEvent`] timeline. Trace events apply
+//! in the same `(time, kind, page)` total order as the static engine;
+//! world events at time `t` apply before any trace event at `t`
+//! (script order among themselves). With an empty timeline every
+//! operation — heap arithmetic, freshness accounting, timeline ring —
+//! degenerates to the static engine's, so an empty scenario is
+//! **bit-identical** to `simulate_with` (pinned by
+//! `tests/scenario_parity.rs`).
+//!
+//! ## Slots, recycling, and stream versions
+//!
+//! The workspace owns a mutable copy of the per-page event streams.
+//! Page slots carry two counters:
+//!
+//! - a **generation** counter (incremented on every retire and every
+//!   rebirth) — the audit trail proving a recycled slot never aliases
+//!   its previous occupant's state;
+//! - a **stream version**, stamped into every merge-heap entry. Any
+//!   mutation that invalidates a page's pending heap entry (retirement,
+//!   future-stream regeneration) bumps the version; stale entries are
+//!   discarded on pop without advancing cursors, so the one-valid-entry
+//!   -per-live-page merge invariant survives arbitrary churn.
+//!
+//! Retirement truncates the unapplied stream tails and frees the slot
+//! (LIFO); a birth recycles the most recently freed slot or grows the
+//! population. Regeneration (parameter drift / CIS-quality shifts)
+//! replaces only the *future*: applied history is never rewritten.
+//!
+//! `SimResult::crawl_counts` under a dynamic world counts crawls of
+//! each slot's **current occupant** (a birth zeroes the slot's count),
+//! so `empirical_rates` stays meaningful per page, not per slot.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::rngkit::Rng;
+use crate::scenario::{PageSet, Scenario, TimedEvent, WorldEvent};
+use crate::sched::CrawlScheduler;
+use crate::sim::engine::{BandwidthSchedule, SimConfig, SimResult};
+use crate::sim::engine::{KIND_CHANGE, KIND_CIS, KIND_REQUEST};
+use crate::sim::events::{generate_page_trace_from, EventTraces, PageTrace};
+use crate::util::OrdF64;
+
+/// Heap entry: `(time, kind, page, stream version)`. The version is a
+/// pure validity stamp — it only breaks ties between a stale and a
+/// fresh entry of the *same* page, where yield order is immaterial
+/// (the stale one is discarded either way) — so the effective total
+/// order is the static engine's `(time, kind, page)`.
+type MergeEntry = Reverse<(OrdF64, u8, u32, u32)>;
+
+/// Counters of what the world did to one run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScenarioStats {
+    /// Pages born (fresh slots + recycled).
+    pub births: u64,
+    /// Pages retired.
+    pub retirements: u64,
+    /// Parameter shifts applied.
+    pub param_shifts: u64,
+    /// CIS-quality shifts applied.
+    pub quality_shifts: u64,
+    /// Outage windows opened.
+    pub outages: u64,
+    /// CIS deliveries suppressed by an outage window.
+    pub cis_suppressed: u64,
+    /// Events that named a dead/out-of-range page (no-ops).
+    pub skipped_events: u64,
+    /// Scheduler picks of a retired slot (the tick is forfeited).
+    /// Stays 0 for hook-aware schedulers (the parity suite asserts
+    /// it); counts wasted crawls for hook-less baselines whose plan
+    /// predates the churn (e.g. LDS) — a static schedule fetching a
+    /// dead URL.
+    pub stale_picks: u64,
+}
+
+/// Reusable scratch + world state of the scenario engine. Mirrors
+/// [`crate::sim::SimWorkspace`] and adds the slot registry (liveness,
+/// generations, free list), per-page stream versions and the outage
+/// windows. `reset` clears without releasing capacity.
+#[derive(Debug, Default)]
+pub struct ScenarioWorkspace {
+    /// Mutable copy of the per-page event streams (grows on births).
+    pages: Vec<PageTrace>,
+    live: Vec<bool>,
+    generation: Vec<u32>,
+    stream_ver: Vec<u32>,
+    /// Retired slots available for recycling (LIFO).
+    free: Vec<usize>,
+    /// CIS deliveries before this time are suppressed (outages).
+    cis_off_until: Vec<f64>,
+    /// High-water of `PageSet::All` outage windows: pages born while a
+    /// global blackout is active inherit it (a dark feed is dark for
+    /// newcomers too); host-targeted outages list explicit slots and
+    /// cannot name pages that do not exist yet.
+    global_off_until: f64,
+    last_crawl: Vec<f64>,
+    changed: Vec<bool>,
+    crawl_counts: Vec<u32>,
+    ring: Vec<bool>,
+    heap: BinaryHeap<MergeEntry>,
+    cursors: Vec<[usize; 3]>,
+    /// What the world did during the last run.
+    pub stats: ScenarioStats,
+}
+
+impl ScenarioWorkspace {
+    /// Empty workspace; buffers grow on first use and are reused after.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, traces: &[PageTrace]) {
+        let m = traces.len();
+        self.pages.clear();
+        self.pages.extend(traces.iter().cloned());
+        self.live.clear();
+        self.live.resize(m, true);
+        self.generation.clear();
+        self.generation.resize(m, 0);
+        self.stream_ver.clear();
+        self.stream_ver.resize(m, 0);
+        self.free.clear();
+        self.cis_off_until.clear();
+        self.cis_off_until.resize(m, f64::NEG_INFINITY);
+        self.global_off_until = f64::NEG_INFINITY;
+        self.last_crawl.clear();
+        self.last_crawl.resize(m, 0.0);
+        self.changed.clear();
+        self.changed.resize(m, false);
+        self.crawl_counts.clear();
+        self.crawl_counts.resize(m, 0);
+        self.ring.clear();
+        self.heap.clear();
+        self.cursors.clear();
+        self.cursors.resize(m, [0, 0, 0]);
+        self.stats = ScenarioStats::default();
+    }
+
+    /// Append one empty slot; returns its index.
+    fn grow_one(&mut self) -> usize {
+        self.pages.push(PageTrace::default());
+        self.live.push(false);
+        self.generation.push(0);
+        self.stream_ver.push(0);
+        self.cis_off_until.push(f64::NEG_INFINITY);
+        self.last_crawl.push(0.0);
+        self.changed.push(false);
+        self.crawl_counts.push(0);
+        self.cursors.push([0, 0, 0]);
+        self.pages.len() - 1
+    }
+
+    /// Current slot count (live + retired).
+    pub fn population(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Is slot `page` currently live?
+    pub fn is_live(&self, page: usize) -> bool {
+        self.live[page]
+    }
+
+    /// Lifecycle generation of slot `page` (audit hook: +1 per
+    /// retirement and per rebirth).
+    pub fn generation(&self, page: usize) -> u32 {
+        self.generation[page]
+    }
+}
+
+/// Deterministic per-world-event RNG: replaying the same scenario
+/// (same seed, same event index) regenerates identical streams.
+fn event_rng(seed: u64, idx: usize) -> Rng {
+    Rng::new(seed ^ (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Push page `page`'s next pending event onto the merge heap, stamped
+/// with its current stream version (the 4-field analogue of the static
+/// engine's `push_next`).
+#[inline]
+fn push_next(
+    heap: &mut BinaryHeap<MergeEntry>,
+    p: &PageTrace,
+    cursors: &[usize; 3],
+    page: u32,
+    ver: u32,
+) {
+    let mut best: Option<(f64, u8)> = None;
+    if let Some(&t) = p.changes.get(cursors[0]) {
+        best = Some((t, KIND_CHANGE));
+    }
+    if let Some(&t) = p.cis.get(cursors[1]) {
+        if best.map_or(true, |(bt, bk)| t < bt || (t == bt && KIND_CIS < bk)) {
+            best = Some((t, KIND_CIS));
+        }
+    }
+    if let Some(&t) = p.requests.get(cursors[2]) {
+        if best.map_or(true, |(bt, bk)| t < bt || (t == bt && KIND_REQUEST < bk)) {
+            best = Some((t, KIND_REQUEST));
+        }
+    }
+    if let Some((t, k)) = best {
+        heap.push(Reverse((OrdF64(t), k, page, ver)));
+    }
+}
+
+/// Splice the scenario's `BandwidthChange` directives into the base
+/// schedule: both streams are directives sorted by time, the latest
+/// one wins at any instant (a scenario directive overrides a base
+/// segment starting at the same time). No changes → the base schedule,
+/// verbatim.
+fn effective_bandwidth(base: &BandwidthSchedule, events: &[TimedEvent]) -> BandwidthSchedule {
+    let changes: Vec<(f64, f64)> = events
+        .iter()
+        .filter_map(|e| match e.event {
+            WorldEvent::BandwidthChange { rate } => Some((e.t, rate)),
+            _ => None,
+        })
+        .collect();
+    if changes.is_empty() {
+        return base.clone();
+    }
+    // (time, source rank, source order, rate): base before scenario at
+    // equal times so the scenario directive overwrites it below
+    let mut dirs: Vec<(f64, u8, usize, f64)> = Vec::new();
+    for (k, &(t, r)) in base.segments().iter().enumerate() {
+        dirs.push((t, 0, k, r));
+    }
+    for (k, &(t, r)) in changes.iter().enumerate() {
+        dirs.push((t, 1, k, r));
+    }
+    dirs.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    let mut segs: Vec<(f64, f64)> = Vec::new();
+    for (t, _, _, r) in dirs {
+        match segs.last_mut() {
+            Some(last) if last.0 == t => last.1 = r, // later directive wins
+            _ => segs.push((t, r)),
+        }
+    }
+    BandwidthSchedule::new(segs)
+        .expect("validated directives merge into a valid schedule")
+}
+
+/// Apply one world event at its time `ev.t`. `idx` is the event's
+/// timeline index (drives the deterministic regeneration RNG).
+fn apply_world(
+    ws: &mut ScenarioWorkspace,
+    scheduler: &mut dyn CrawlScheduler,
+    ev: &TimedEvent,
+    idx: usize,
+    scenario: &Scenario,
+    horizon: f64,
+) {
+    let tw = ev.t;
+    match &ev.event {
+        WorldEvent::PageBorn { params } => {
+            let slot = match ws.free.pop() {
+                Some(s) => {
+                    ws.generation[s] = ws.generation[s].wrapping_add(1);
+                    s
+                }
+                None => ws.grow_one(),
+            };
+            ws.live[slot] = true;
+            ws.stream_ver[slot] = ws.stream_ver[slot].wrapping_add(1);
+            ws.cursors[slot] = [0, 0, 0];
+            ws.changed[slot] = false;
+            ws.last_crawl[slot] = tw;
+            // crawl_counts describe the slot's CURRENT occupant: the
+            // previous occupant's crawls must not pollute the
+            // newcomer's empirical rate
+            ws.crawl_counts[slot] = 0;
+            // a global blackout covers newcomers; host-level outages
+            // (explicit slot lists) cannot name the unborn
+            ws.cis_off_until[slot] = ws.global_off_until;
+            let mut rng = event_rng(scenario.seed(), idx);
+            ws.pages[slot] =
+                generate_page_trace_from(params, tw, horizon, scenario.delay(), &mut rng);
+            ws.stats.births += 1;
+            scheduler.on_page_added(slot, params, tw);
+            push_next(
+                &mut ws.heap,
+                &ws.pages[slot],
+                &ws.cursors[slot],
+                slot as u32,
+                ws.stream_ver[slot],
+            );
+        }
+        WorldEvent::PageRetired { page } => {
+            let i = *page;
+            if i >= ws.live.len() || !ws.live[i] {
+                ws.stats.skipped_events += 1;
+                return;
+            }
+            ws.live[i] = false;
+            ws.generation[i] = ws.generation[i].wrapping_add(1);
+            // the pending heap entry dies with the version; the
+            // unapplied tails can never replay, so drop them
+            ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
+            let c = ws.cursors[i];
+            ws.pages[i].changes.truncate(c[0]);
+            ws.pages[i].cis.truncate(c[1]);
+            ws.pages[i].requests.truncate(c[2]);
+            ws.free.push(i);
+            ws.stats.retirements += 1;
+            scheduler.on_page_removed(i, tw);
+        }
+        WorldEvent::ParamsChanged { page, params } => {
+            let i = *page;
+            if i >= ws.live.len() || !ws.live[i] {
+                ws.stats.skipped_events += 1;
+                return;
+            }
+            let c = ws.cursors[i];
+            ws.pages[i].changes.truncate(c[0]);
+            ws.pages[i].cis.truncate(c[1]);
+            ws.pages[i].requests.truncate(c[2]);
+            let mut rng = event_rng(scenario.seed(), idx);
+            let fresh = generate_page_trace_from(params, tw, horizon, scenario.delay(), &mut rng);
+            ws.pages[i].changes.extend(fresh.changes);
+            ws.pages[i].cis.extend(fresh.cis);
+            ws.pages[i].requests.extend(fresh.requests);
+            ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
+            ws.stats.param_shifts += 1;
+            scheduler.on_params_changed(i, params, tw);
+            push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], i as u32, ws.stream_ver[i]);
+        }
+        WorldEvent::CisQualityShift { page, lam, nu } => {
+            let i = *page;
+            if i >= ws.live.len() || !ws.live[i] {
+                ws.stats.skipped_events += 1;
+                return;
+            }
+            // re-draw future CIS against the EXISTING future change
+            // realization; in-flight deliveries of the old feed drop
+            let mut rng = event_rng(scenario.seed(), idx);
+            let mut cis: Vec<f64> = Vec::new();
+            for &ct in &ws.pages[i].changes[ws.cursors[i][0]..] {
+                if rng.bernoulli(*lam) {
+                    let d = ct + scenario.delay().sample(&mut rng);
+                    if d < horizon {
+                        cis.push(d);
+                    }
+                }
+            }
+            for t in crate::rngkit::poisson_process(&mut rng, *nu, horizon - tw) {
+                let d = tw + t + scenario.delay().sample(&mut rng);
+                if d < horizon {
+                    cis.push(d);
+                }
+            }
+            cis.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            ws.pages[i].cis.truncate(ws.cursors[i][1]);
+            ws.pages[i].cis.extend(cis);
+            ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
+            ws.stats.quality_shifts += 1;
+            // the scheduler is NOT notified: its beliefs go stale
+            push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], i as u32, ws.stream_ver[i]);
+        }
+        WorldEvent::CisOutage { pages, duration } => {
+            let until = tw + duration;
+            match pages {
+                PageSet::All => {
+                    ws.global_off_until = ws.global_off_until.max(until);
+                    for i in 0..ws.live.len() {
+                        if ws.live[i] {
+                            ws.cis_off_until[i] = ws.cis_off_until[i].max(until);
+                        }
+                    }
+                }
+                PageSet::Pages(list) => {
+                    for &i in list {
+                        if i < ws.live.len() && ws.live[i] {
+                            ws.cis_off_until[i] = ws.cis_off_until[i].max(until);
+                        } else {
+                            ws.stats.skipped_events += 1;
+                        }
+                    }
+                }
+            }
+            ws.stats.outages += 1;
+        }
+        // folded into the effective bandwidth schedule before the run
+        WorldEvent::BandwidthChange { .. } => {}
+    }
+}
+
+/// Run one repetition of `scheduler` against `traces` under the
+/// scripted `scenario` (throwaway workspace — repetition loops should
+/// allocate one [`ScenarioWorkspace`] and reuse it).
+pub fn simulate_scenario(
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    scheduler: &mut dyn CrawlScheduler,
+) -> SimResult {
+    let mut ws = ScenarioWorkspace::new();
+    simulate_scenario_with(&mut ws, traces, cfg, scenario, scheduler)
+}
+
+/// Run one repetition under a dynamic world, using caller-owned
+/// scratch. `traces` covers the scenario's *initial* population
+/// (generate them exactly as for the static engine); everything the
+/// world spawns afterwards is generated internally from the scenario
+/// seed.
+pub fn simulate_scenario_with(
+    ws: &mut ScenarioWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    scheduler: &mut dyn CrawlScheduler,
+) -> SimResult {
+    let m0 = traces.pages.len();
+    assert_eq!(
+        m0,
+        scenario.initial_pages().len(),
+        "traces must cover the scenario's initial population"
+    );
+    ws.reset(&traces.pages);
+    scheduler.on_start(m0);
+    for (i, p) in ws.pages.iter().enumerate() {
+        debug_assert!(
+            p.changes.windows(2).all(|w| w[0] <= w[1])
+                && p.cis.windows(2).all(|w| w[0] <= w[1])
+                && p.requests.windows(2).all(|w| w[0] <= w[1]),
+            "page {i}: per-page event streams must be sorted by time"
+        );
+    }
+    for i in 0..m0 {
+        push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], i as u32, ws.stream_ver[i]);
+    }
+
+    let world = scenario.events();
+    let mut wc = 0usize; // world-event cursor
+
+    let mut fresh_hits = 0u64;
+    let mut requests = 0u64;
+    let mut ticks = 0u64;
+    let mut timeline = Vec::new();
+    let window = cfg.timeline_window.unwrap_or(0);
+    let mut ring_pos = 0usize;
+    let mut ring_fresh = 0usize;
+
+    let effective = effective_bandwidth(&cfg.bandwidth, world);
+    let segs = effective.segments();
+    let mut seg = 0usize; // monotone segment cursor
+    let mut t = 0.0f64;
+    loop {
+        while seg + 1 < segs.len() && segs[seg + 1].0 <= t {
+            seg += 1;
+        }
+        let r = segs[seg].1;
+        let next_tick = t + 1.0 / r;
+        if next_tick > cfg.horizon {
+            break;
+        }
+        // apply world + trace events up to (and including) the tick
+        // time, in time order; world events precede trace events at
+        // equal times (and keep script order among themselves)
+        loop {
+            let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
+            let te = match ws.heap.peek() {
+                Some(&Reverse((OrdF64(x), _, _, _))) => x,
+                None => f64::INFINITY,
+            };
+            if tw <= next_tick && tw <= te {
+                apply_world(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+                wc += 1;
+                continue;
+            }
+            if te > next_tick {
+                break;
+            }
+            let Reverse((OrdF64(et), kind, page, ver)) = ws.heap.pop().unwrap();
+            let i = page as usize;
+            if ver != ws.stream_ver[i] {
+                continue; // stale entry: the page retired or regenerated
+            }
+            match kind {
+                KIND_CHANGE => {
+                    ws.changed[i] = true;
+                    ws.cursors[i][0] += 1;
+                }
+                KIND_REQUEST => {
+                    requests += 1;
+                    let fresh = !ws.changed[i];
+                    if fresh {
+                        fresh_hits += 1;
+                    }
+                    if window > 0 {
+                        if ws.ring.len() < window {
+                            ws.ring.push(fresh);
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                        } else {
+                            if ws.ring[ring_pos] {
+                                ring_fresh -= 1;
+                            }
+                            ws.ring[ring_pos] = fresh;
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                            ring_pos = (ring_pos + 1) % window;
+                        }
+                    }
+                    ws.cursors[i][2] += 1;
+                }
+                _ => {
+                    // KIND_CIS
+                    let keep = match cfg.cis_discard_window {
+                        Some(w) => et - ws.last_crawl[i] >= w,
+                        None => true,
+                    };
+                    if keep {
+                        if et < ws.cis_off_until[i] {
+                            ws.stats.cis_suppressed += 1;
+                        } else {
+                            scheduler.on_cis(i, et);
+                        }
+                    }
+                    ws.cursors[i][1] += 1;
+                }
+            }
+            push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], page, ver);
+        }
+        // crawl at the tick
+        t = next_tick;
+        ticks += 1;
+        if let Some(i) = scheduler.select(t) {
+            debug_assert!(i < ws.live.len());
+            if ws.live[i] {
+                ws.changed[i] = false;
+                ws.last_crawl[i] = t;
+                ws.crawl_counts[i] += 1;
+                scheduler.on_crawl(i, t);
+            } else {
+                // the pick names a retired slot: forfeit the tick. A
+                // hook-aware scheduler never does this (the parity
+                // suite asserts stale_picks == 0); a hook-less one
+                // (e.g. the LDS baseline, whose schedule predates the
+                // churn) simply wastes the crawl — exactly what a
+                // static plan does against a dead URL in production.
+                ws.stats.stale_picks += 1;
+            }
+        }
+        if window > 0 && !ws.ring.is_empty() {
+            timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
+        }
+    }
+    // drain remaining events after the final tick: the world keeps
+    // evolving UP TO the horizon (late births still contribute
+    // requests); events scripted beyond it never happened in this run
+    // — no hooks fire, no stats move
+    loop {
+        let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
+        let te = match ws.heap.peek() {
+            Some(&Reverse((OrdF64(x), _, _, _))) => x,
+            None => f64::INFINITY,
+        };
+        if wc < world.len() && tw <= te {
+            if tw <= cfg.horizon {
+                apply_world(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+            }
+            wc += 1;
+            continue;
+        }
+        let Some(Reverse((OrdF64(_), kind, page, ver))) = ws.heap.pop() else { break };
+        let i = page as usize;
+        if ver != ws.stream_ver[i] {
+            continue;
+        }
+        match kind {
+            KIND_CHANGE => {
+                ws.changed[i] = true;
+                ws.cursors[i][0] += 1;
+            }
+            KIND_REQUEST => {
+                requests += 1;
+                if !ws.changed[i] {
+                    fresh_hits += 1;
+                }
+                ws.cursors[i][2] += 1;
+            }
+            _ => {
+                ws.cursors[i][1] += 1;
+            }
+        }
+        push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], page, ver);
+    }
+
+    SimResult {
+        accuracy: if requests > 0 { fresh_hits as f64 / requests as f64 } else { f64::NAN },
+        requests,
+        fresh_hits,
+        crawl_counts: ws.crawl_counts.clone(),
+        ticks,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::PageParams;
+    use crate::rngkit::Rng;
+    use crate::sched::PageTracker;
+    use crate::sim::{generate_traces, simulate, CisDelay};
+
+    fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.1, 0.5),
+            })
+            .collect()
+    }
+
+    /// Deterministic state-dependent scheduler with full dynamic-hook
+    /// support (mirrors the engine tests' `StateScore`).
+    struct StateScore {
+        tracker: PageTracker,
+        live: Vec<bool>,
+    }
+    impl StateScore {
+        fn new() -> Self {
+            Self { tracker: PageTracker::default(), live: Vec::new() }
+        }
+    }
+    impl CrawlScheduler for StateScore {
+        fn on_start(&mut self, m: usize) {
+            self.tracker.reset(m);
+            self.live.clear();
+            self.live.resize(m, true);
+        }
+        fn on_cis(&mut self, page: usize, _t: f64) {
+            self.tracker.on_cis(page);
+        }
+        fn on_crawl(&mut self, page: usize, t: f64) {
+            self.tracker.on_crawl(page, t);
+        }
+        fn on_page_added(&mut self, page: usize, _params: &PageParams, t: f64) {
+            self.tracker.add_page(page, t);
+            if page == self.live.len() {
+                self.live.push(true);
+            } else {
+                self.live[page] = true;
+            }
+        }
+        fn on_page_removed(&mut self, page: usize, _t: f64) {
+            self.tracker.remove_page(page);
+            self.live[page] = false;
+        }
+        fn select(&mut self, t: f64) -> Option<usize> {
+            let mut best = f64::NEG_INFINITY;
+            let mut arg = None;
+            for i in 0..self.tracker.len() {
+                if !self.live[i] {
+                    continue;
+                }
+                let v = self.tracker.tau_elap(i, t) + 3.7 * self.tracker.n_cis(i) as f64;
+                if v > best {
+                    best = v;
+                    arg = Some(i);
+                }
+            }
+            arg
+        }
+    }
+
+    #[test]
+    fn empty_scenario_matches_static_engine() {
+        let ps = pages(25, 1);
+        let mut rng = Rng::new(2);
+        let traces = generate_traces(&ps, 40.0, CisDelay::None, &mut rng);
+        let mut cfg = SimConfig::new(4.0, 40.0);
+        cfg.timeline_window = Some(16);
+        cfg.cis_discard_window = Some(0.15);
+        let sc = Scenario::new(ps, 9);
+        let a = simulate(&traces, &cfg, &mut StateScore::new());
+        let b = simulate_scenario(&traces, &cfg, &sc, &mut StateScore::new());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.crawl_counts, b.crawl_counts);
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.timeline, b.timeline);
+    }
+
+    #[test]
+    fn retirement_frees_and_birth_recycles_with_generation_bumps() {
+        let ps = pages(4, 3);
+        let newcomer = PageParams { delta: 0.9, mu: 0.9, lam: 0.5, nu: 0.1 };
+        let sc = Scenario::new(ps.clone(), 7)
+            .at(5.0, WorldEvent::PageRetired { page: 2 })
+            .at(10.0, WorldEvent::PageBorn { params: newcomer });
+        let mut rng = Rng::new(4);
+        let traces = generate_traces(&ps, 20.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(2.0, 20.0);
+        let mut ws = ScenarioWorkspace::new();
+        let res = simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut StateScore::new());
+        assert_eq!(ws.stats.births, 1);
+        assert_eq!(ws.stats.retirements, 1);
+        assert_eq!(ws.stats.skipped_events, 0);
+        assert_eq!(ws.stats.stale_picks, 0);
+        // LIFO recycling: the birth reuses slot 2, two transitions deep
+        assert_eq!(ws.population(), 4, "birth must recycle the freed slot");
+        assert!(ws.is_live(2));
+        assert_eq!(ws.generation(2), 2);
+        assert!((0.0..=1.0).contains(&res.accuracy));
+    }
+
+    #[test]
+    fn outage_suppresses_cis_only_inside_window() {
+        // one page, CIS guaranteed by lam=1, outage [5, 10)
+        let ps = vec![PageParams { delta: 1.0, mu: 0.3, lam: 1.0, nu: 0.5 }];
+        let sc = Scenario::new(ps.clone(), 11).at(
+            5.0,
+            WorldEvent::CisOutage { pages: PageSet::All, duration: 5.0 },
+        );
+        let mut rng = Rng::new(5);
+        let traces = generate_traces(&ps, 20.0, CisDelay::None, &mut rng);
+        let in_window =
+            traces.pages[0].cis.iter().filter(|&&c| (5.0..10.0).contains(&c)).count() as u64;
+        let total = traces.pages[0].cis.len() as u64;
+        assert!(in_window > 0, "test needs CIS inside the window");
+
+        struct CountCis(u64);
+        impl CrawlScheduler for CountCis {
+            fn on_cis(&mut self, _page: usize, _t: f64) {
+                self.0 += 1;
+            }
+            fn select(&mut self, _t: f64) -> Option<usize> {
+                Some(0)
+            }
+        }
+        let cfg = SimConfig::new(1.0, 20.0);
+        let mut ws = ScenarioWorkspace::new();
+        let mut s = CountCis(0);
+        simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut s);
+        assert_eq!(ws.stats.cis_suppressed, in_window);
+        assert_eq!(s.0, total - in_window, "outside-window CIS must still deliver");
+    }
+
+    #[test]
+    fn newborn_inherits_an_active_global_blackout() {
+        // blackout over [5, 15); a CIS-firehose page is born at t=8:
+        // its deliveries stay dark until the blackout lifts
+        let ps = vec![PageParams { delta: 0.2, mu: 0.2, lam: 0.0, nu: 0.0 }];
+        let loud = PageParams { delta: 1.0, mu: 0.2, lam: 1.0, nu: 1.0 };
+        let sc = Scenario::new(ps.clone(), 31)
+            .at(5.0, WorldEvent::CisOutage { pages: PageSet::All, duration: 10.0 })
+            .at(8.0, WorldEvent::PageBorn { params: loud });
+        struct CisLog(Vec<(usize, f64)>);
+        impl CrawlScheduler for CisLog {
+            fn on_cis(&mut self, page: usize, t: f64) {
+                self.0.push((page, t));
+            }
+            fn select(&mut self, _t: f64) -> Option<usize> {
+                None
+            }
+        }
+        let mut rng = Rng::new(32);
+        let traces = generate_traces(&ps, 30.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(1.0, 30.0);
+        let mut ws = ScenarioWorkspace::new();
+        let mut s = CisLog(Vec::new());
+        simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut s);
+        let newborn_cis: Vec<f64> =
+            s.0.iter().filter(|&&(p, _)| p == 1).map(|&(_, t)| t).collect();
+        assert!(!newborn_cis.is_empty(), "the firehose must deliver after the blackout");
+        assert!(
+            newborn_cis.iter().all(|&t| t >= 15.0),
+            "newborn CIS leaked through the blackout: {newborn_cis:?}"
+        );
+        assert!(ws.stats.cis_suppressed > 0, "the blackout must have suppressed something");
+    }
+
+    #[test]
+    fn params_changed_regenerates_only_the_future() {
+        // page becomes a non-changer at t=10: all post-shift requests
+        // hit fresh content once the page is crawled after the shift
+        let ps = vec![PageParams { delta: 2.0, mu: 2.0, lam: 0.0, nu: 0.0 }];
+        let frozen = PageParams { delta: 1e-9, mu: 2.0, lam: 0.0, nu: 0.0 };
+        let sc = Scenario::new(ps.clone(), 13)
+            .at(10.0, WorldEvent::ParamsChanged { page: 0, params: frozen });
+        let mut rng = Rng::new(6);
+        let traces = generate_traces(&ps, 40.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(1.0, 40.0);
+        let mut ws = ScenarioWorkspace::new();
+        let res = simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut StateScore::new());
+        assert_eq!(ws.stats.param_shifts, 1);
+        // with Δ ≈ 0 after t=10 and a crawl every tick, the page is
+        // permanently fresh shortly after the shift
+        assert!(res.accuracy > 0.5, "accuracy {}", res.accuracy);
+    }
+
+    #[test]
+    fn bandwidth_change_splices_into_schedule() {
+        let ps = pages(2, 8);
+        let sc = Scenario::new(ps.clone(), 17)
+            .at(5.0, WorldEvent::BandwidthChange { rate: 10.0 });
+        let mut rng = Rng::new(9);
+        let traces = generate_traces(&ps, 10.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(1.0, 10.0);
+        let res = simulate_scenario(&traces, &cfg, &sc, &mut StateScore::new());
+        // ~5 ticks at R=1, then ~50 at R=10
+        assert!((res.ticks as i64 - 55).abs() <= 2, "{}", res.ticks);
+    }
+
+    #[test]
+    fn events_on_dead_pages_are_counted_noops() {
+        let ps = pages(2, 10);
+        let sc = Scenario::new(ps.clone(), 21)
+            .at(2.0, WorldEvent::PageRetired { page: 1 })
+            .at(3.0, WorldEvent::PageRetired { page: 1 }) // already dead
+            .at(4.0, WorldEvent::ParamsChanged { page: 1, params: ps[0] })
+            .at(5.0, WorldEvent::CisQualityShift { page: 9, lam: 0.5, nu: 0.1 });
+        let mut rng = Rng::new(11);
+        let traces = generate_traces(&ps, 10.0, CisDelay::None, &mut rng);
+        let cfg = SimConfig::new(2.0, 10.0);
+        let mut ws = ScenarioWorkspace::new();
+        simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut StateScore::new());
+        assert_eq!(ws.stats.retirements, 1);
+        assert_eq!(ws.stats.skipped_events, 3);
+    }
+
+    #[test]
+    fn effective_bandwidth_latest_directive_wins() {
+        let base = BandwidthSchedule::new(vec![(0.0, 1.0), (10.0, 4.0)]).unwrap();
+        let sc = Scenario::new(pages(1, 12), 1)
+            .at(5.0, WorldEvent::BandwidthChange { rate: 2.0 })
+            .at(10.0, WorldEvent::BandwidthChange { rate: 8.0 });
+        let eff = effective_bandwidth(&base, sc.events());
+        assert_eq!(eff.rate_at(1.0), 1.0);
+        assert_eq!(eff.rate_at(6.0), 2.0);
+        // at t=10 both a base segment and a scenario change start: the
+        // scenario directive wins
+        assert_eq!(eff.rate_at(10.0), 8.0);
+        // no changes → the base schedule verbatim
+        let none = Scenario::new(pages(1, 12), 1);
+        assert_eq!(effective_bandwidth(&base, none.events()).segments(), base.segments());
+    }
+}

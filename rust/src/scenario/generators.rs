@@ -1,0 +1,288 @@
+//! Composable generators for canonical dynamic-world stress patterns.
+//!
+//! Each `add_*` function appends a deterministic event pattern to an
+//! existing [`Scenario`] (its own RNG stream, seeded by the caller), so
+//! patterns compose: churn + a correlated outage + a flash crowd is
+//! three calls on one scenario. The churn generator models the
+//! engine's LIFO slot recycling to always retire a *live* page; add
+//! churn before other generators that reference page indices, and
+//! check [`super::ScenarioStats::skipped_events`] stayed 0 when
+//! composing aggressively.
+
+use crate::params::PageParams;
+use crate::rngkit::{self, Rng};
+use crate::scenario::{PageSet, Scenario, WorldEvent};
+
+/// Parameter distribution for pages born by the churn generator —
+/// mirrors `figures::common::ExperimentSpec`'s §6.3 draws.
+#[derive(Debug, Clone, Copy)]
+pub struct BornPageSpec {
+    /// Δ, μ ~ U(lo, hi).
+    pub delta_range: (f64, f64),
+    /// Importance range.
+    pub mu_range: (f64, f64),
+    /// λ ~ Beta(a, b) when set, else λ = 0.
+    pub lam_beta: Option<(f64, f64)>,
+    /// ν ~ U(lo, hi) when set, else ν = 0.
+    pub nu_range: Option<(f64, f64)>,
+}
+
+impl Default for BornPageSpec {
+    fn default() -> Self {
+        Self {
+            delta_range: (1e-4, 1.0),
+            mu_range: (1e-4, 1.0),
+            lam_beta: Some((0.25, 0.25)),
+            nu_range: Some((0.1, 0.6)),
+        }
+    }
+}
+
+impl BornPageSpec {
+    /// Draw one page.
+    pub fn sample(&self, rng: &mut Rng) -> PageParams {
+        PageParams {
+            delta: rng.range(self.delta_range.0, self.delta_range.1),
+            mu: rng.range(self.mu_range.0, self.mu_range.1),
+            lam: match self.lam_beta {
+                Some((a, b)) => rngkit::beta(rng, a, b),
+                None => 0.0,
+            },
+            nu: match self.nu_range {
+                Some((lo, hi)) => rng.range(lo, hi),
+                None => 0.0,
+            },
+        }
+    }
+}
+
+/// Steady page churn at rate `rho` (fraction of the initial population
+/// per unit time): churn events arrive as a Poisson process with rate
+/// `rho · m₀` over `[0, horizon)`; each retires one uniformly-random
+/// live page and births a replacement drawn from `born`, so the
+/// population stays at `m₀` while its identity turns over. Retirement
+/// precedes the birth at the same instant, so with the engine's LIFO
+/// free list every churn birth recycles the just-freed slot —
+/// maximizing pressure on the generation-counter audit.
+pub fn add_steady_churn(
+    sc: &mut Scenario,
+    rho: f64,
+    horizon: f64,
+    born: &BornPageSpec,
+    seed: u64,
+) {
+    assert!(rho >= 0.0 && rho.is_finite(), "churn rate must be >= 0, got {rho}");
+    let m0 = sc.initial_pages().len();
+    let mut rng = Rng::new(seed);
+    let times = rngkit::poisson_process(&mut rng, rho * m0 as f64, horizon);
+    // model the engine's slot assignment: retire-then-birth at the
+    // same time means the birth always recycles the retired slot, so
+    // the live set is always exactly {0, .., m0-1}
+    let mut batch = Vec::with_capacity(2 * times.len());
+    for t in times {
+        let victim = rng.below(m0 as u64) as usize;
+        batch.push((t, WorldEvent::PageRetired { page: victim }));
+        batch.push((t, WorldEvent::PageBorn { params: born.sample(&mut rng) }));
+    }
+    sc.push_many(batch);
+}
+
+/// A flash crowd: at `t0` a random `frac` of the initial pages see
+/// their request rate multiplied by `mu_factor` (and optionally their
+/// change rate by `delta_factor` — breaking news changes *and* is
+/// demanded more); at `t0 + duration` the affected pages revert to
+/// their original parameters. Emitted as paired `ParamsChanged`
+/// events, so schedulers are told (a surge is observable).
+pub fn add_flash_crowd(
+    sc: &mut Scenario,
+    t0: f64,
+    duration: f64,
+    frac: f64,
+    mu_factor: f64,
+    delta_factor: f64,
+    seed: u64,
+) {
+    assert!((0.0..=1.0).contains(&frac), "frac must be in [0,1], got {frac}");
+    assert!(duration > 0.0, "duration must be > 0");
+    let initial = sc.initial_pages().to_vec();
+    let mut rng = Rng::new(seed);
+    let k = ((initial.len() as f64) * frac).round() as usize;
+    let chosen = rng.sample_indices(initial.len(), k.min(initial.len()));
+    let mut batch = Vec::with_capacity(2 * chosen.len());
+    for i in chosen {
+        let base = initial[i];
+        let surged = PageParams {
+            mu: base.mu * mu_factor,
+            delta: base.delta * delta_factor,
+            ..base
+        };
+        batch.push((t0, WorldEvent::ParamsChanged { page: i, params: surged }));
+        batch.push((t0 + duration, WorldEvent::ParamsChanged { page: i, params: base }));
+    }
+    sc.push_many(batch);
+}
+
+/// Diurnal drift: every `period / samples_per_cycle`, the change rates
+/// of a random `frac` of the initial pages are re-pinned to
+/// `Δᵢ · (1 + amplitude · sin(2π t / period))` — the day/night rhythm
+/// of real corpora, piecewise-constant at the sample resolution.
+/// Emitted as `ParamsChanged` (observable drift, as a re-estimation
+/// pipeline would surface it).
+pub fn add_diurnal_drift(
+    sc: &mut Scenario,
+    period: f64,
+    amplitude: f64,
+    samples_per_cycle: usize,
+    frac: f64,
+    horizon: f64,
+    seed: u64,
+) {
+    assert!(period > 0.0 && samples_per_cycle > 0);
+    assert!(amplitude > -1.0 && amplitude < 1.0, "amplitude must keep Δ > 0");
+    let initial = sc.initial_pages().to_vec();
+    let mut rng = Rng::new(seed);
+    let k = ((initial.len() as f64) * frac).round() as usize;
+    let chosen = rng.sample_indices(initial.len(), k.min(initial.len()));
+    let dt = period / samples_per_cycle as f64;
+    let mut batch = Vec::new();
+    let mut t = dt;
+    while t < horizon {
+        let scale = 1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period).sin();
+        for &i in &chosen {
+            let base = initial[i];
+            batch.push((
+                t,
+                WorldEvent::ParamsChanged {
+                    page: i,
+                    params: PageParams { delta: base.delta * scale, ..base },
+                },
+            ));
+        }
+        t += dt;
+    }
+    sc.push_many(batch);
+}
+
+/// Correlated host-level CIS outages: pages are grouped into `hosts`
+/// round-robin hosts (`page % hosts`, the
+/// [`HostMap::round_robin`](crate::coordinator::hosts::HostMap::round_robin)
+/// convention), and `n_outages` outage windows
+/// (uniform start over the horizon, Exp(1/mean_duration) length) each
+/// darken one whole host's ping feed at once — the realistic failure
+/// unit: a sitemap endpoint or ping relay dies per site, not per URL.
+pub fn add_correlated_outages(
+    sc: &mut Scenario,
+    hosts: usize,
+    n_outages: usize,
+    mean_duration: f64,
+    horizon: f64,
+    seed: u64,
+) {
+    assert!(hosts > 0 && mean_duration > 0.0);
+    let m0 = sc.initial_pages().len();
+    let mut rng = Rng::new(seed);
+    let mut batch = Vec::with_capacity(n_outages);
+    for _ in 0..n_outages {
+        let t = rng.range(0.0, horizon);
+        let h = rng.below(hosts as u64) as usize;
+        let members: Vec<usize> = (0..m0).filter(|i| i % hosts == h).collect();
+        let duration = rngkit::exponential(&mut rng, 1.0 / mean_duration);
+        batch.push((t, WorldEvent::CisOutage { pages: PageSet::Pages(members), duration }));
+    }
+    sc.push_many(batch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn initial(m: usize) -> Vec<PageParams> {
+        let mut rng = Rng::new(1);
+        (0..m)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: 0.5,
+                nu: 0.2,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn churn_pairs_retire_then_birth_and_replay_identically() {
+        let mut a = Scenario::new(initial(50), 3);
+        add_steady_churn(&mut a, 0.02, 100.0, &BornPageSpec::default(), 7);
+        let mut b = Scenario::new(initial(50), 3);
+        add_steady_churn(&mut b, 0.02, 100.0, &BornPageSpec::default(), 7);
+        assert!(!a.is_static(), "expected churn events (rate 1/unit over 100 units)");
+        assert_eq!(a.events().len(), b.events().len());
+        for (x, y) in a.events().iter().zip(b.events()) {
+            assert_eq!(x.t.to_bits(), y.t.to_bits());
+            assert_eq!(x.event, y.event, "replay must be bit-identical");
+        }
+        // events come in retire/birth pairs at identical times
+        let evs = a.events();
+        assert_eq!(evs.len() % 2, 0);
+        for pair in evs.chunks(2) {
+            assert_eq!(pair[0].t.to_bits(), pair[1].t.to_bits());
+            assert!(matches!(pair[0].event, WorldEvent::PageRetired { .. }));
+            assert!(matches!(pair[1].event, WorldEvent::PageBorn { .. }));
+        }
+    }
+
+    #[test]
+    fn flash_crowd_reverts_exactly() {
+        let init = initial(40);
+        let mut sc = Scenario::new(init.clone(), 5);
+        add_flash_crowd(&mut sc, 10.0, 5.0, 0.25, 8.0, 2.0, 9);
+        let surges: Vec<_> =
+            sc.events().iter().filter(|e| e.t == 10.0).collect();
+        let reverts: Vec<_> =
+            sc.events().iter().filter(|e| e.t == 15.0).collect();
+        assert_eq!(surges.len(), 10);
+        assert_eq!(reverts.len(), 10);
+        for r in reverts {
+            let WorldEvent::ParamsChanged { page, params } = &r.event else {
+                panic!("flash crowd must emit ParamsChanged");
+            };
+            assert_eq!(*params, init[*page], "revert must restore the original page");
+        }
+    }
+
+    #[test]
+    fn diurnal_drift_oscillates_delta() {
+        let init = initial(10);
+        let mut sc = Scenario::new(init.clone(), 6);
+        add_diurnal_drift(&mut sc, 40.0, 0.5, 4, 1.0, 80.0, 3);
+        assert!(!sc.is_static());
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for e in sc.events() {
+            let WorldEvent::ParamsChanged { page, params } = &e.event else {
+                panic!("drift must emit ParamsChanged");
+            };
+            let ratio = params.delta / init[*page].delta;
+            lo = lo.min(ratio);
+            hi = hi.max(ratio);
+            assert!(params.delta > 0.0);
+        }
+        assert!(lo < 0.75 && hi > 1.25, "drift never oscillated: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn correlated_outages_cover_whole_hosts() {
+        let mut sc = Scenario::new(initial(24), 8);
+        add_correlated_outages(&mut sc, 4, 6, 3.0, 50.0, 11);
+        assert_eq!(sc.events().len(), 6);
+        for e in sc.events() {
+            let WorldEvent::CisOutage { pages: PageSet::Pages(members), duration } = &e.event
+            else {
+                panic!("outage generator must emit host page lists");
+            };
+            assert!(*duration > 0.0);
+            assert_eq!(members.len(), 6, "24 pages over 4 hosts = 6 per host");
+            let h = members[0] % 4;
+            assert!(members.iter().all(|&i| i % 4 == h), "outage must cover one host");
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Dynamic-world scenario engine: scripted page churn, parameter
+//! drift, CIS outages and bandwidth shifts over the streaming
+//! simulator.
+//!
+//! Every other simulation in the crate runs a *frozen* world: a fixed
+//! page population with stationary `(Δ, μ, λ, ν)` for the whole
+//! horizon. The paper's adaptivity claim — the crawler "automatically
+//! adapts to the new optimal solution … without centralized
+//! computation" — is only exercised there for bandwidth steps. This
+//! module makes the harsher production regimes first-class,
+//! reproducible workloads:
+//!
+//! - a [`Scenario`] is a deterministic, seedable timeline of
+//!   [`WorldEvent`]s over an initial population;
+//! - [`engine::simulate_scenario_with`] merges that world-event stream
+//!   into the simulator's k-way event merge, regenerating per-page
+//!   event streams when truth parameters change mid-run and recycling
+//!   page slots with generation counters (an empty scenario is pinned
+//!   **bit-identical** to the static engine — `tests/scenario_parity.rs`);
+//! - [`generators`] provides composable canonical stress patterns:
+//!   steady churn at rate ρ, flash-crowd bursts, diurnal drift and
+//!   correlated host-level CIS outages;
+//! - schedulers participate through the three dynamic lifecycle hooks
+//!   on [`crate::sched::CrawlScheduler`] (`on_page_added`,
+//!   `on_page_removed`, `on_params_changed`), and
+//!   [`crate::CrawlerBuilder::with_scenario`] runs any policy ×
+//!   strategy × backend combination against a dynamic world.
+//!
+//! ## Information contract
+//!
+//! Not every world event is visible to the crawler, by design:
+//!
+//! | event | scheduler notified? | rationale |
+//! |---|---|---|
+//! | [`WorldEvent::PageBorn`] | yes (`on_page_added`) | frontier discovery is observable |
+//! | [`WorldEvent::PageRetired`] | yes (`on_page_removed`) | dead URLs are observable (404s) |
+//! | [`WorldEvent::ParamsChanged`] | yes (`on_params_changed`) | models a re-estimation pipeline surfacing new parameters |
+//! | [`WorldEvent::CisQualityShift`] | **no** | a silently degrading ping feed — beliefs go stale, exactly the stress motivating online re-estimation |
+//! | [`WorldEvent::CisOutage`] | **no** | a dark feed delivers nothing; the crawler cannot distinguish "no signals" from "no changes" |
+//! | [`WorldEvent::BandwidthChange`] | no (drives tick spacing) | same observability as the Appendix-D experiment |
+
+pub mod engine;
+pub mod generators;
+
+pub use engine::{simulate_scenario, simulate_scenario_with, ScenarioStats, ScenarioWorkspace};
+
+use crate::params::PageParams;
+use crate::sim::CisDelay;
+
+/// A set of page slots a world event applies to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PageSet {
+    /// Every page live at the event time.
+    All,
+    /// An explicit list of slot indices (dead slots are skipped).
+    Pages(Vec<usize>),
+}
+
+impl PageSet {
+    /// Does the set name `page` (membership only — liveness is the
+    /// engine's concern)?
+    pub fn contains(&self, page: usize) -> bool {
+        match self {
+            PageSet::All => true,
+            PageSet::Pages(v) => v.contains(&page),
+        }
+    }
+}
+
+/// One scripted change to the world, applied at its [`TimedEvent`]
+/// time in `(time, script order)` order, *before* any trace event at
+/// the same time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorldEvent {
+    /// A page is born. The engine assigns it the most recently retired
+    /// slot (LIFO recycling) or grows the population by one; its event
+    /// streams are generated over `[t, horizon)` from the scenario
+    /// seed, and `on_page_added` fires with the assigned slot.
+    PageBorn {
+        /// Raw parameters of the new page.
+        params: PageParams,
+    },
+    /// Slot `page` dies: its remaining events are discarded, it can
+    /// never be crawled again, and the slot becomes recyclable.
+    PageRetired {
+        /// Slot to retire.
+        page: usize,
+    },
+    /// The true parameters of `page` shift: its *future* event streams
+    /// are regenerated under `params` (the realization changes, the
+    /// past does not) and `on_params_changed` fires.
+    ParamsChanged {
+        /// Slot whose parameters shift.
+        page: usize,
+        /// The new raw parameters.
+        params: PageParams,
+    },
+    /// The CIS feed quality of `page` shifts: future CIS are re-drawn
+    /// with recall `lam` and false-positive rate `nu` against the
+    /// page's *existing* future change realization (changes and
+    /// requests are untouched). The scheduler is NOT notified — its
+    /// beliefs silently go stale.
+    CisQualityShift {
+        /// Slot whose feed degrades/improves.
+        page: usize,
+        /// New recall λ ∈ [0, 1].
+        lam: f64,
+        /// New false-positive rate ν ≥ 0.
+        nu: f64,
+    },
+    /// The CIS feed for `pages` goes dark for `duration`: every CIS
+    /// delivery in the window is dropped before reaching the scheduler
+    /// (overlapping outages extend the window). A [`PageSet::All`]
+    /// blackout also covers pages born while it is active; a
+    /// [`PageSet::Pages`] outage affects exactly the listed live slots.
+    /// Silent.
+    CisOutage {
+        /// Affected pages.
+        pages: PageSet,
+        /// Outage length.
+        duration: f64,
+    },
+    /// Crawl bandwidth changes to `rate` from this time on, spliced
+    /// into the run's [`crate::sim::engine::BandwidthSchedule`] with
+    /// latest-directive-wins semantics.
+    BandwidthChange {
+        /// New tick rate R (> 0, finite).
+        rate: f64,
+    },
+}
+
+/// A world event with its application time.
+#[derive(Debug, Clone)]
+pub struct TimedEvent {
+    /// Application time (≥ 0, finite).
+    pub t: f64,
+    /// The event.
+    pub event: WorldEvent,
+}
+
+/// A deterministic, seedable timeline of world events over an initial
+/// population. Events are kept sorted by time with stable script order
+/// among equal times; the `seed` drives every event stream the engine
+/// regenerates (births, drifts, quality shifts), so a scenario
+/// replayed from the same seed is bit-identical.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    initial: Vec<PageParams>,
+    events: Vec<TimedEvent>,
+    seed: u64,
+    delay: CisDelay,
+}
+
+impl Scenario {
+    /// A scenario over `initial` pages with no events yet. `seed`
+    /// drives all regenerated event streams.
+    pub fn new(initial: Vec<PageParams>, seed: u64) -> Self {
+        Self { initial, events: Vec::new(), seed, delay: CisDelay::None }
+    }
+
+    /// CIS delivery-delay model applied to regenerated streams
+    /// (default: [`CisDelay::None`]). Pass the same model to the
+    /// initial-trace generation for a uniform world.
+    pub fn with_delay(mut self, delay: CisDelay) -> Self {
+        self.delay = delay;
+        self
+    }
+
+    /// Append an event at time `t`, keeping the timeline sorted
+    /// (stable: equal times preserve push order). Panics on a
+    /// non-finite/negative time or a non-positive bandwidth rate —
+    /// scenarios are scripts, and a malformed directive is a bug at
+    /// the script site, not a runtime condition.
+    pub fn push(&mut self, t: f64, event: WorldEvent) {
+        Self::validate_event(t, &event);
+        // stable upper-bound insertion: equal-time events keep push order
+        let at = self.events.partition_point(|e| e.t <= t);
+        self.events.insert(at, TimedEvent { t, event });
+    }
+
+    /// Append a whole batch in one pass: every event is validated,
+    /// appended, and the timeline is re-sorted with one stable sort —
+    /// O((n+k)·log(n+k)) instead of the O(n·k) of repeated
+    /// [`Self::push`] inserts. Equal-time semantics match `push`:
+    /// existing events keep their order, batch events land after them
+    /// and keep batch order. Generators emitting thousands of events
+    /// go through here.
+    pub fn push_many(&mut self, batch: impl IntoIterator<Item = (f64, WorldEvent)>) {
+        for (t, event) in batch {
+            Self::validate_event(t, &event);
+            self.events.push(TimedEvent { t, event });
+        }
+        // stable: preserves existing order and batch order at equal times
+        self.events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    }
+
+    fn validate_event(t: f64, event: &WorldEvent) {
+        assert!(t.is_finite() && t >= 0.0, "world event time must be finite and >= 0, got {t}");
+        match event {
+            WorldEvent::BandwidthChange { rate } => assert!(
+                *rate > 0.0 && rate.is_finite(),
+                "bandwidth change rate must be > 0 and finite, got {rate}"
+            ),
+            WorldEvent::CisOutage { duration, .. } => assert!(
+                *duration > 0.0 && duration.is_finite(),
+                "outage duration must be > 0 and finite, got {duration}"
+            ),
+            WorldEvent::PageBorn { params } | WorldEvent::ParamsChanged { params, .. } => {
+                if let Err(e) = params.validate() {
+                    panic!("world event page params invalid: {e}");
+                }
+            }
+            WorldEvent::CisQualityShift { lam, nu, .. } => {
+                assert!(
+                    (0.0..=1.0).contains(lam),
+                    "quality shift recall must be in [0,1], got {lam}"
+                );
+                assert!(
+                    *nu >= 0.0 && nu.is_finite(),
+                    "quality shift false-positive rate must be >= 0 and finite, got {nu}"
+                );
+            }
+            WorldEvent::PageRetired { .. } => {}
+        }
+    }
+
+    /// Builder-style [`Self::push`].
+    pub fn at(mut self, t: f64, event: WorldEvent) -> Self {
+        self.push(t, event);
+        self
+    }
+
+    /// The initial page population.
+    pub fn initial_pages(&self) -> &[PageParams] {
+        &self.initial
+    }
+
+    /// The sorted event timeline.
+    pub fn events(&self) -> &[TimedEvent] {
+        &self.events
+    }
+
+    /// Seed driving regenerated event streams.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// CIS delay model for regenerated streams.
+    pub fn delay(&self) -> CisDelay {
+        self.delay
+    }
+
+    /// Does the timeline contain no events (a static world)?
+    pub fn is_static(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page() -> PageParams {
+        PageParams { delta: 0.5, mu: 0.5, lam: 0.3, nu: 0.1 }
+    }
+
+    #[test]
+    fn timeline_stays_sorted_with_stable_ties() {
+        let sc = Scenario::new(vec![page()], 1)
+            .at(5.0, WorldEvent::PageRetired { page: 0 })
+            .at(1.0, WorldEvent::BandwidthChange { rate: 2.0 })
+            .at(5.0, WorldEvent::PageBorn { params: page() })
+            .at(3.0, WorldEvent::CisOutage { pages: PageSet::All, duration: 1.0 });
+        let times: Vec<f64> = sc.events().iter().map(|e| e.t).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0, 5.0]);
+        // equal-time events preserve push order: retire before birth
+        assert!(matches!(sc.events()[2].event, WorldEvent::PageRetired { .. }));
+        assert!(matches!(sc.events()[3].event, WorldEvent::PageBorn { .. }));
+    }
+
+    #[test]
+    #[should_panic(expected = "world event time")]
+    fn rejects_bad_event_time() {
+        Scenario::new(vec![page()], 1).push(f64::NAN, WorldEvent::PageRetired { page: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth change rate")]
+    fn rejects_bad_bandwidth_rate() {
+        Scenario::new(vec![page()], 1).push(1.0, WorldEvent::BandwidthChange { rate: 0.0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "page params invalid")]
+    fn rejects_invalid_born_page_params() {
+        let bad = PageParams { delta: 0.0, mu: 0.5, lam: 0.3, nu: 0.1 };
+        Scenario::new(vec![page()], 1).push(1.0, WorldEvent::PageBorn { params: bad });
+    }
+
+    #[test]
+    #[should_panic(expected = "quality shift recall")]
+    fn rejects_out_of_range_quality_shift() {
+        Scenario::new(vec![page()], 1)
+            .push(1.0, WorldEvent::CisQualityShift { page: 0, lam: 1.3, nu: 0.1 });
+    }
+
+    #[test]
+    fn page_set_membership() {
+        assert!(PageSet::All.contains(7));
+        let s = PageSet::Pages(vec![1, 3]);
+        assert!(s.contains(3) && !s.contains(2));
+    }
+}

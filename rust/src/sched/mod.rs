@@ -17,6 +17,19 @@
 //!   on; schedulers reset their per-page beliefs here).
 //! - [`CrawlScheduler::select`] — pick the page to crawl at tick `t`.
 //!
+//! Dynamic worlds (the [`crate::scenario`] engine) add three more
+//! lifecycle hooks, default no-ops so static schedulers are untouched:
+//!
+//! - [`CrawlScheduler::on_page_added`] — slot `page` now holds a live
+//!   page with the given parameters (a fresh slot or a recycled one; a
+//!   recycled slot must be treated as brand new — no state of the
+//!   previous occupant may survive).
+//! - [`CrawlScheduler::on_page_removed`] — slot `page` was retired; the
+//!   scheduler must never select it again until a new occupant arrives.
+//! - [`CrawlScheduler::on_params_changed`] — the true parameters of
+//!   `page` shifted (drift, rate shift); schedulers that model beliefs
+//!   re-project them here.
+//!
 //! [`PageTracker`] is the shared bookkeeping every stateful scheduler
 //! embeds: last-crawl times and pending-CIS counts, updated from the
 //! hooks with exactly the semantics the pre-redesign engine used for
@@ -34,6 +47,8 @@
 pub mod wheel;
 
 pub use wheel::{TimingWheel, WheelEntry};
+
+use crate::params::PageParams;
 
 /// A discrete crawling policy driven by lifecycle events.
 ///
@@ -69,6 +84,29 @@ pub trait CrawlScheduler {
         let _ = (page, t);
     }
 
+    /// Slot `page` now holds a live page with parameters `params`
+    /// (born at time `t`). `page` is either one past the current
+    /// population (growth) or a previously-retired slot (recycling);
+    /// either way the slot must start from a completely fresh state.
+    /// Default: no-op (static schedulers never see dynamic worlds).
+    fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
+        let _ = (page, params, t);
+    }
+
+    /// Slot `page` was retired at time `t`: drop it from all candidate
+    /// structures and never select it again (until a new occupant
+    /// arrives via [`Self::on_page_added`]). Default: no-op.
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        let _ = (page, t);
+    }
+
+    /// The true parameters of `page` shifted to `params` at time `t`
+    /// (drift / rate shift, as surfaced by re-estimation). Schedulers
+    /// that precompute beliefs re-project them here. Default: no-op.
+    fn on_params_changed(&mut self, page: usize, params: &PageParams, t: f64) {
+        let _ = (page, params, t);
+    }
+
     /// Page to crawl at tick time `t` (`None` = idle tick).
     fn select(&mut self, t: f64) -> Option<usize>;
 
@@ -93,6 +131,15 @@ impl<S: CrawlScheduler + ?Sized> CrawlScheduler for Box<S> {
     }
     fn on_veto(&mut self, page: usize, t: f64) {
         (**self).on_veto(page, t)
+    }
+    fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
+        (**self).on_page_added(page, params, t)
+    }
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        (**self).on_page_removed(page, t)
+    }
+    fn on_params_changed(&mut self, page: usize, params: &PageParams, t: f64) {
+        (**self).on_params_changed(page, params, t)
     }
     fn select(&mut self, t: f64) -> Option<usize> {
         (**self).select(t)
@@ -126,10 +173,19 @@ impl CrawlScheduler for IdleScheduler {
 /// Semantics mirror the pre-redesign engine slice exactly: pages start
 /// fresh at `last_crawl = 0`, CIS counts saturate instead of wrapping,
 /// and a crawl resets the count to zero.
+///
+/// Dynamic worlds recycle slots: [`Self::add_page`] /
+/// [`Self::remove_page`] manage the lifecycle with a per-slot
+/// *generation counter* that increments on every transition, so a
+/// recycled index can never alias the previous occupant's state — the
+/// counter proves the slot was scrubbed (`add_page` resets both fields
+/// unconditionally) and lets holders of stale references detect that
+/// their page is gone.
 #[derive(Debug, Clone, Default)]
 pub struct PageTracker {
     last_crawl: Vec<f64>,
     n_cis: Vec<u32>,
+    generation: Vec<u32>,
 }
 
 impl PageTracker {
@@ -141,12 +197,47 @@ impl PageTracker {
     }
 
     /// Re-dimension to `m` pages and clear all state (the `on_start`
-    /// contract); capacity is retained.
+    /// contract — including the slot generations, so a run's dynamic
+    /// history never leaks into the next repetition); capacity is
+    /// retained.
     pub fn reset(&mut self, m: usize) {
         self.last_crawl.clear();
         self.last_crawl.resize(m, 0.0);
         self.n_cis.clear();
         self.n_cis.resize(m, 0);
+        self.generation.clear();
+        self.generation.resize(m, 0);
+    }
+
+    /// A page was born into slot `page` at time `t`: either one past
+    /// the current population (the tracker grows) or a retired slot
+    /// (recycled). Both fields are scrubbed unconditionally and the
+    /// slot generation is bumped, so no state of a previous occupant
+    /// can survive into the new page's lifetime.
+    pub fn add_page(&mut self, page: usize, t: f64) {
+        if page == self.last_crawl.len() {
+            self.last_crawl.push(t);
+            self.n_cis.push(0);
+            self.generation.push(0);
+        } else {
+            assert!(page < self.last_crawl.len(), "add_page: slot {page} out of range");
+            self.last_crawl[page] = t;
+            self.n_cis[page] = 0;
+            self.generation[page] = self.generation[page].wrapping_add(1);
+        }
+    }
+
+    /// Slot `page` was retired: bump its generation so stale references
+    /// are detectable. State is scrubbed again on the next `add_page`.
+    pub fn remove_page(&mut self, page: usize) {
+        self.generation[page] = self.generation[page].wrapping_add(1);
+    }
+
+    /// Lifecycle generation of slot `page` (0 for the original
+    /// occupant; +1 per retirement and per rebirth).
+    #[inline]
+    pub fn generation(&self, page: usize) -> u32 {
+        self.generation[page]
     }
 
     /// Number of tracked pages.
@@ -247,6 +338,33 @@ mod tests {
         // a crawl still clears a saturated count
         tr.on_crawl(0, 5.0);
         assert_eq!(tr.n_cis(0), 0);
+    }
+
+    #[test]
+    fn recycled_slot_never_aliases_stale_state() {
+        let mut tr = PageTracker::new(3);
+        // slot 1 accumulates dynamic state, then retires
+        tr.on_cis(1);
+        tr.on_cis(1);
+        tr.on_crawl(1, 4.0);
+        tr.on_cis(1);
+        assert_eq!(tr.generation(1), 0);
+        tr.remove_page(1);
+        assert_eq!(tr.generation(1), 1);
+        // rebirth into the recycled slot at t = 9: brand-new state
+        tr.add_page(1, 9.0);
+        assert_eq!(tr.generation(1), 2, "each transition bumps the generation");
+        assert_eq!(tr.n_cis(1), 0, "recycled slot inherited a stale CIS count");
+        assert_eq!(tr.last_crawl(1), 9.0, "recycled slot starts fresh at its birth time");
+        assert_eq!(tr.tau_elap(1, 11.5), 2.5);
+        // growth path: add one past the end
+        tr.add_page(3, 2.0);
+        assert_eq!(tr.len(), 4);
+        assert_eq!(tr.generation(3), 0);
+        assert_eq!(tr.last_crawl(3), 2.0);
+        // reset clears generations along with everything else
+        tr.reset(4);
+        assert_eq!(tr.generation(1), 0);
     }
 
     #[test]

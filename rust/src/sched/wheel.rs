@@ -483,6 +483,114 @@ mod tests {
     }
 
     #[test]
+    fn overflow_repromotes_across_advances_larger_than_the_span() {
+        // the wheel spans tick · 64^4 = 262144 time units; park entries
+        // far beyond it and advance in jumps each LARGER than the whole
+        // span — every entry must surface exactly once, at the first
+        // advance whose target crosses its wake time
+        let span = TICK * 64f64.powi(4);
+        let mut w = TimingWheel::new(TICK);
+        let far: Vec<f64> = (1..=6).map(|k| k as f64 * 1.7 * span + 13.5).collect();
+        for (k, &t) in far.iter().enumerate() {
+            w.schedule(t, k as u32, k as u32);
+        }
+        assert_eq!(w.len(), far.len());
+        let mut seen = vec![0u32; far.len()];
+        let mut t = 0.0;
+        while !w.is_empty() {
+            t += 2.0 * span; // every jump crosses the full span
+            let mut due = Vec::new();
+            w.drain_due_into(t, &mut due);
+            for e in due {
+                assert!(e.time <= t, "entry surfaced before it was due");
+                assert!(
+                    e.time > t - 2.0 * span,
+                    "entry {} should have surfaced in an earlier advance",
+                    e.page
+                );
+                seen[e.page as usize] += 1;
+            }
+        }
+        assert_eq!(seen, vec![1; far.len()], "each overflow entry must drain exactly once");
+    }
+
+    #[test]
+    fn schedule_in_the_past_clamps_and_comes_due_immediately() {
+        let mut w = TimingWheel::new(TICK);
+        let mut out = Vec::new();
+        w.drain_due_into(1000.0, &mut out); // move the cursor far forward
+        assert!(out.is_empty());
+        // schedule at t = 0, mid-past, one tick behind, and (the
+        // degenerate misuse) a negative time: all clamp into the
+        // current slot and surface on the very next drain with their
+        // ORIGINAL times intact
+        w.schedule(0.0, 1, 0);
+        w.schedule(500.0, 2, 1);
+        w.schedule(1000.0 - TICK, 3, 2);
+        w.schedule(-7.5, 4, 3);
+        assert_eq!(w.len(), 4);
+        // pop_earliest sees them in true (time, version, page) order
+        let first = w.pop_earliest().unwrap();
+        assert_eq!((first.time, first.version, first.page), (-7.5, 4, 3));
+        w.schedule(-7.5, 4, 3); // put it back
+        let mut due = Vec::new();
+        w.drain_due_into(1000.0, &mut due); // t does not even advance
+        assert_eq!(due.len(), 4, "past entries must come due immediately");
+        assert!(w.is_empty());
+        let mut pages: Vec<u32> = due.iter().map(|e| e.page).collect();
+        pages.sort_unstable();
+        assert_eq!(pages, vec![0, 1, 2, 3]);
+        // times are reported verbatim, not clamped
+        assert!(due.iter().any(|e| e.time == -7.5));
+        assert!(due.iter().any(|e| e.time == 0.0));
+    }
+
+    #[test]
+    fn version_stamp_cancels_page_retired_while_in_overflow() {
+        // the lazy-scheduler retirement idiom: a page parks a far-future
+        // wake in the overflow bin, is retired (owner bumps its version),
+        // and the slot is recycled with a new wake. The wheel still
+        // yields BOTH entries — deletion is lazy — but the version
+        // stamps let the owner drop the stale one, and `len` stays
+        // consistent through the whole lifecycle.
+        let mut w = TimingWheel::new(TICK);
+        let span = TICK * 64f64.powi(4);
+        let mut version = vec![0u32; 8];
+        // page 5 sleeps ~2 spans out (overflow bin), version 1
+        version[5] = 1;
+        w.schedule(2.0 * span, version[5], 5);
+        // a near wake for another page keeps the wheel busy
+        w.schedule(1.0, 1, 6);
+        // retirement: the owner bumps the version; the entry stays
+        version[5] = 2;
+        // rebirth: the recycled slot schedules its own far wake
+        version[5] = 3;
+        w.schedule(2.5 * span, version[5], 5);
+        assert_eq!(w.len(), 3);
+        // advance across everything: the stale overflow entry and the
+        // live one both surface; version filtering keeps exactly the live
+        let mut due = Vec::new();
+        w.drain_due_into(3.0 * span, &mut due);
+        assert_eq!(due.len(), 3);
+        assert!(w.is_empty());
+        let live: Vec<&WheelEntry> =
+            due.iter().filter(|e| e.page != 5 || e.version == version[5]).collect();
+        assert_eq!(live.len(), 2, "exactly one page-5 entry survives the version filter");
+        assert!(live.iter().any(|e| e.page == 5 && e.time == 2.5 * span));
+        let stale: Vec<&WheelEntry> =
+            due.iter().filter(|e| e.page == 5 && e.version != version[5]).collect();
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].version, 1, "the cancelled occupant's stamp survives verbatim");
+        // pop_earliest honours the same contract for overflow residents
+        w.schedule(4.0 * span, 7, 5); // back into overflow
+        version[5] = 8; // retire again before it drains
+        let e = w.pop_earliest().unwrap();
+        assert_eq!((e.page, e.version), (5, 7));
+        assert_ne!(e.version, version[5], "stale by stamp: the owner drops it");
+        assert!(w.is_empty());
+    }
+
+    #[test]
     fn len_tracks_through_all_paths() {
         let mut w = TimingWheel::new(TICK);
         assert!(w.is_empty());

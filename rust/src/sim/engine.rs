@@ -175,10 +175,14 @@ impl SimResult {
 
 /// Event kinds in merge order: simultaneous events apply change-first,
 /// request-last (a request at the exact instant of a change sees stale
-/// content; both engines share this total order).
-const KIND_CHANGE: u8 = 0;
-const KIND_CIS: u8 = 1;
-const KIND_REQUEST: u8 = 2;
+/// content; both engines share this total order). `pub(crate)` because
+/// the dynamic-world engine (`crate::scenario::engine`) extends the
+/// same k-way merge with a world-event stream and must apply trace
+/// events in the identical total order — its empty-scenario run is
+/// pinned bit-identical to [`simulate_with`].
+pub(crate) const KIND_CHANGE: u8 = 0;
+pub(crate) const KIND_CIS: u8 = 1;
+pub(crate) const KIND_REQUEST: u8 = 2;
 
 /// Reusable per-repetition scratch of the streaming engine.
 ///

@@ -21,4 +21,4 @@ pub use engine::{
     simulate, simulate_reference, simulate_with, BandwidthSchedule, SimConfig, SimResult,
     SimWorkspace,
 };
-pub use events::{generate_traces, CisDelay, EventTraces};
+pub use events::{generate_page_trace_from, generate_traces, CisDelay, EventTraces, PageTrace};

@@ -279,6 +279,81 @@ fn prop_dataset_corruption_is_bounded_mixture() {
 }
 
 #[test]
+fn prop_corruption_preserves_unit_interval_marginals() {
+    // q ← (1−p)q + p·ξ with ξ ~ U(0,1): every corrupted quality stays
+    // a probability, for any mixing weight p ∈ [0,1] — including the
+    // endpoints (identity and full replacement) — and the population
+    // mean moves to the exact mixture (1−p)·mean(q) + p/2.
+    forall(
+        "corruption [0,1] marginals",
+        27,
+        12,
+        |rng| (rng.f64(), rng.next_u64()),
+        |&(p, seed)| {
+            let recs = ncis_crawl::dataset::generate(&ncis_crawl::dataset::DatasetConfig {
+                n_urls: 4000,
+                seed,
+                ..Default::default()
+            });
+            let mut rng = Rng::new(seed ^ 2);
+            let c = ncis_crawl::dataset::corrupt(&recs, p, &mut rng);
+            let (mut n, mut mean_before, mut mean_after) = (0usize, 0.0, 0.0);
+            for (a, b) in recs.iter().zip(&c) {
+                if !a.has_cis {
+                    continue;
+                }
+                for q in [b.precision, b.recall] {
+                    if !(0.0..=1.0).contains(&q) {
+                        return Err(format!("corrupted quality {q} left [0,1] (p={p})"));
+                    }
+                }
+                n += 1;
+                mean_before += a.precision;
+                mean_after += b.precision;
+            }
+            mean_before /= n as f64;
+            mean_after /= n as f64;
+            let want = (1.0 - p) * mean_before + p * 0.5;
+            // ξ-mean sampling error at n ≈ 600 CIS pages: 4σ ≈ 0.05·p
+            if (mean_after - want).abs() > 0.05 * p + 1e-9 {
+                return Err(format!(
+                    "precision mean {mean_after} vs mixture {want} (p={p}, n={n})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dataset_declared_split_is_exact_at_population_scale() {
+    // the frac_declared split must be EXACT (round(n·frac) members, a
+    // true subset of has_cis), not merely approximate, at the §6.7
+    // population scale n = 1e5
+    for frac in [0.05, 0.033, 0.5] {
+        let n_urls = 100_000usize;
+        let recs = ncis_crawl::dataset::generate(&ncis_crawl::dataset::DatasetConfig {
+            n_urls,
+            seed: 0xF00D,
+            frac_declared: frac,
+            ..Default::default()
+        });
+        let want = (n_urls as f64 * frac).round() as usize;
+        let declared = recs.iter().filter(|r| r.declared).count();
+        assert_eq!(declared, want, "frac={frac}: split must be exact");
+        assert!(
+            recs.iter().all(|r| !r.declared || r.has_cis),
+            "declared must be a subset of has_cis"
+        );
+        // declared pages carry the upper-tail quality by construction
+        assert!(recs
+            .iter()
+            .filter(|r| r.declared)
+            .all(|r| r.precision >= 0.7 && r.recall >= 0.6));
+    }
+}
+
+#[test]
 fn prop_simulator_deterministic_per_seed() {
     forall(
         "simulation determinism",

@@ -1,0 +1,387 @@
+//! Dynamic-world acceptance suite (the scenario-engine contract):
+//!
+//! 1. an EMPTY scenario is bit-identical to the static engine for
+//!    every Strategy × policy combination (the scenario engine is the
+//!    same k-way merge, just with a fourth input stream);
+//! 2. a churn scenario replayed from the same seed is bit-identical
+//!    (scenarios are deterministic, seedable workloads);
+//! 3. retiring a page mid-run never yields a post-retirement crawl of
+//!    it, and a recycled slot never inherits stale belief/tracker
+//!    state (generation-counter audit);
+//! 4. a scheduler REUSED across repetitions of a dynamic world is
+//!    bit-identical to a fresh one (on_start fully resets the timing
+//!    wheel, tracker slots and scratch — the dynamic-state reset
+//!    satellite).
+
+use ncis_crawl::coordinator::builder::{CrawlerBuilder, Strategy};
+use ncis_crawl::params::PageParams;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::scenario::generators::{
+    add_correlated_outages, add_steady_churn, BornPageSpec,
+};
+use ncis_crawl::scenario::{
+    simulate_scenario, simulate_scenario_with, Scenario, ScenarioWorkspace, WorldEvent,
+};
+use ncis_crawl::sched::{CrawlScheduler, PageTracker};
+use ncis_crawl::sim::{generate_traces, simulate, CisDelay, SimConfig, SimResult};
+
+fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| PageParams {
+            delta: rng.range(0.05, 1.0),
+            mu: rng.range(0.05, 1.0),
+            lam: rng.f64(),
+            nu: rng.range(0.1, 0.5),
+        })
+        .collect()
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{ctx}: accuracy");
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.fresh_hits, b.fresh_hits, "{ctx}: fresh_hits");
+    assert_eq!(a.crawl_counts, b.crawl_counts, "{ctx}: crawl_counts");
+    assert_eq!(a.ticks, b.ticks, "{ctx}: ticks");
+    assert_eq!(a.timeline.len(), b.timeline.len(), "{ctx}: timeline length");
+    for (k, (x, y)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: timeline[{k}].t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: timeline[{k}].acc");
+    }
+}
+
+/// Decorator recording every `(t, pick)` — lets the suite compare
+/// pick-for-pick behavior and check liveness windows. Forwards every
+/// lifecycle hook (including the dynamic ones) to the inner scheduler.
+struct Recorder<S> {
+    inner: S,
+    picks: Vec<(f64, usize)>,
+}
+
+impl<S> Recorder<S> {
+    fn new(inner: S) -> Self {
+        Self { inner, picks: Vec::new() }
+    }
+}
+
+impl<S: CrawlScheduler> CrawlScheduler for Recorder<S> {
+    fn on_start(&mut self, m: usize) {
+        self.picks.clear();
+        self.inner.on_start(m);
+    }
+    fn on_cis(&mut self, page: usize, t: f64) {
+        self.inner.on_cis(page, t);
+    }
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.inner.on_crawl(page, t);
+    }
+    fn on_veto(&mut self, page: usize, t: f64) {
+        self.inner.on_veto(page, t);
+    }
+    fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.inner.on_page_added(page, params, t);
+    }
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        self.inner.on_page_removed(page, t);
+    }
+    fn on_params_changed(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.inner.on_params_changed(page, params, t);
+    }
+    fn select(&mut self, t: f64) -> Option<usize> {
+        let pick = self.inner.select(t);
+        if let Some(i) = pick {
+            self.picks.push((t, i));
+        }
+        pick
+    }
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+}
+
+/// A churn + outage + drift scenario over `ps`.
+fn dynamic_scenario(ps: &[PageParams], seed: u64, horizon: f64) -> Scenario {
+    let mut sc = Scenario::new(ps.to_vec(), seed);
+    add_steady_churn(&mut sc, 0.01, horizon, &BornPageSpec::default(), seed ^ 0xA);
+    add_correlated_outages(&mut sc, 4, 3, horizon / 10.0, horizon, seed ^ 0xB);
+    sc
+}
+
+// ---- 1. empty scenario == static engine, every strategy × policy ----
+
+#[test]
+fn empty_scenario_is_bit_identical_to_static_engine_for_all_combos() {
+    let m = 40;
+    let horizon = 30.0;
+    let ps = pages(m, 1);
+    let mut rng = Rng::new(2);
+    let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+    let mut cfg = SimConfig::new(4.0, horizon);
+    cfg.timeline_window = Some(16);
+    cfg.cis_discard_window = Some(0.1);
+    let empty = Scenario::new(ps.clone(), 99);
+
+    let policies = [
+        PolicyKind::Greedy,
+        PolicyKind::GreedyCis,
+        PolicyKind::GreedyNcis,
+        PolicyKind::NcisApprox(2),
+        PolicyKind::GreedyCisPlus,
+    ];
+    let strategies = [
+        Strategy::Exact,
+        Strategy::Lazy,
+        Strategy::LazyWithMargin(0.5),
+        Strategy::Sharded { shards: 3 },
+    ];
+    for policy in policies {
+        for strategy in strategies {
+            let builder = CrawlerBuilder::new()
+                .policy(policy)
+                .strategy(strategy)
+                .pages(&ps);
+            let mut s1 = builder.build().unwrap();
+            let mut s2 = builder.build().unwrap();
+            let a = simulate(&traces, &cfg, s1.as_mut());
+            let b = simulate_scenario(&traces, &cfg, &empty, s2.as_mut());
+            assert_bit_identical(&a, &b, &format!("{policy:?} × {strategy:?}"));
+        }
+    }
+    // the LDS lane (policy-independent; rates must cover the pages)
+    let builder = CrawlerBuilder::new()
+        .strategy(Strategy::Lds)
+        .pages(&ps)
+        .lds_rates(&vec![1.0; m]);
+    let mut s1 = builder.build().unwrap();
+    let mut s2 = builder.build().unwrap();
+    let a = simulate(&traces, &cfg, s1.as_mut());
+    let b = simulate_scenario(&traces, &cfg, &empty, s2.as_mut());
+    assert_bit_identical(&a, &b, "LDS");
+}
+
+// ---- 2. same-seed replay is bit-identical ----
+
+#[test]
+fn churn_scenario_replay_is_bit_identical() {
+    let horizon = 60.0;
+    let ps = pages(60, 3);
+    let cfg = SimConfig::new(5.0, horizon);
+    for strategy in [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }] {
+        let run = || {
+            // everything rebuilt from scratch: scenario, traces,
+            // scheduler, workspace — only the seeds are shared
+            let sc = dynamic_scenario(&ps, 1234, horizon);
+            let mut trng = Rng::new(77);
+            let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
+            let mut sched = Recorder::new(
+                CrawlerBuilder::new()
+                    .policy(PolicyKind::GreedyNcis)
+                    .strategy(strategy)
+                    .pages(&ps)
+                    .build()
+                    .unwrap(),
+            );
+            let mut ws = ScenarioWorkspace::new();
+            let res = simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut sched);
+            (res, sched.picks, ws.stats)
+        };
+        let (r1, p1, s1) = run();
+        let (r2, p2, s2) = run();
+        assert_bit_identical(&r1, &r2, &format!("{strategy:?} replay"));
+        assert_eq!(p1, p2, "{strategy:?}: pick streams diverged between replays");
+        assert_eq!(s1, s2, "{strategy:?}: world stats diverged between replays");
+        assert!(s1.births > 0, "{strategy:?}: churn scenario produced no births");
+        assert_eq!(s1.stale_picks, 0, "{strategy:?}: scheduler picked a retired slot");
+        assert_eq!(s1.skipped_events, 0, "{strategy:?}: generator emitted a dead-page event");
+    }
+}
+
+// ---- 3. retirement + recycling audits ----
+
+#[test]
+fn retired_page_is_never_crawled_after_retirement() {
+    let horizon = 80.0;
+    let ps = pages(30, 5);
+    // retire three pages at t=20 with NO rebirth: their slots stay
+    // dead for the remaining 60 time units
+    let mut sc = Scenario::new(ps.clone(), 50);
+    for &victim in &[3usize, 11, 27] {
+        sc.push(20.0, WorldEvent::PageRetired { page: victim });
+    }
+    let cfg = SimConfig::new(4.0, horizon);
+    for strategy in [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }] {
+        let mut trng = Rng::new(51);
+        let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
+        let mut sched = Recorder::new(
+            CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(strategy)
+                .pages(&ps)
+                .build()
+                .unwrap(),
+        );
+        let mut ws = ScenarioWorkspace::new();
+        simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut sched);
+        assert_eq!(ws.stats.stale_picks, 0, "{strategy:?}");
+        for &(t, pick) in &sched.picks {
+            if t > 20.0 {
+                assert!(
+                    ![3, 11, 27].contains(&pick),
+                    "{strategy:?}: retired page {pick} crawled at t={t}"
+                );
+            }
+        }
+        // the retired pages were crawlable before t=20 (sanity: the
+        // test would pass vacuously if they were never candidates)
+        assert!(
+            sched.picks.iter().any(|&(t, p)| t <= 20.0 && [3, 11, 27].contains(&p)),
+            "{strategy:?}: victims were never crawled pre-retirement"
+        );
+    }
+}
+
+/// Scheduler that loves stale state: it selects the page with the most
+/// pending CIS (ties → smallest index). If a recycled slot inherited
+/// the previous occupant's CIS count, the newcomer would dominate the
+/// argmax forever — the audit below would see it crawled.
+struct CisHungry {
+    tracker: PageTracker,
+    live: Vec<bool>,
+    /// (slot, generation) observed at every on_page_added.
+    added: Vec<(usize, u32)>,
+}
+
+impl CisHungry {
+    fn new() -> Self {
+        Self { tracker: PageTracker::default(), live: Vec::new(), added: Vec::new() }
+    }
+}
+
+impl CrawlScheduler for CisHungry {
+    fn on_start(&mut self, m: usize) {
+        self.tracker.reset(m);
+        self.live.clear();
+        self.live.resize(m, true);
+    }
+    fn on_cis(&mut self, page: usize, _t: f64) {
+        self.tracker.on_cis(page);
+    }
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.tracker.on_crawl(page, t);
+    }
+    fn on_page_added(&mut self, page: usize, _params: &PageParams, t: f64) {
+        // the slot-recycling contract: the tracker scrubs the slot and
+        // bumps its generation
+        self.tracker.add_page(page, t);
+        assert_eq!(self.tracker.n_cis(page), 0, "recycled slot kept a stale CIS count");
+        assert_eq!(
+            self.tracker.last_crawl(page),
+            t,
+            "recycled slot kept a stale last-crawl time"
+        );
+        self.added.push((page, self.tracker.generation(page)));
+        if page == self.live.len() {
+            self.live.push(true);
+        } else {
+            self.live[page] = true;
+        }
+    }
+    fn on_page_removed(&mut self, page: usize, _t: f64) {
+        self.tracker.remove_page(page);
+        self.live[page] = false;
+    }
+    fn select(&mut self, _t: f64) -> Option<usize> {
+        let mut best = None;
+        let mut best_n = 0u32;
+        for i in 0..self.tracker.len() {
+            if !self.live[i] {
+                continue;
+            }
+            let n = self.tracker.n_cis(i);
+            if best.is_none() || n > best_n {
+                best = Some(i);
+                best_n = n;
+            }
+        }
+        best
+    }
+}
+
+#[test]
+fn recycled_slot_never_inherits_stale_tracker_state() {
+    // page 2 is a CIS firehose (λ=1, high Δ, high ν); pages 0/1 have
+    // no CIS at all. It is retired at t=10 and the slot is reborn at
+    // t=20 as a CIS-less page. A stale CIS count would make the
+    // CIS-hungry scheduler crawl slot 2 forever after rebirth; a clean
+    // slot means it is never crawled again (no CIS can ever arrive).
+    let ps = vec![
+        PageParams { delta: 0.3, mu: 0.5, lam: 0.0, nu: 0.0 },
+        PageParams { delta: 0.3, mu: 0.5, lam: 0.0, nu: 0.0 },
+        PageParams { delta: 2.0, mu: 0.5, lam: 1.0, nu: 1.0 },
+    ];
+    let silent = PageParams { delta: 0.5, mu: 0.5, lam: 0.0, nu: 0.0 };
+    let sc = Scenario::new(ps.clone(), 60)
+        .at(10.0, WorldEvent::PageRetired { page: 2 })
+        .at(20.0, WorldEvent::PageBorn { params: silent });
+    let mut trng = Rng::new(61);
+    let traces = generate_traces(&ps, 60.0, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(2.0, 60.0);
+    let mut sched = Recorder::new(CisHungry::new());
+    let mut ws = ScenarioWorkspace::new();
+    simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut sched);
+    // the firehose dominated before retirement...
+    assert!(
+        sched.picks.iter().any(|&(t, p)| t <= 10.0 && p == 2),
+        "firehose was never crawled pre-retirement"
+    );
+    // ...took CIS right up to its retirement...
+    assert!(ws.stats.retirements == 1 && ws.stats.births == 1);
+    // ...and the reborn slot (recycled index 2) is never crawled: a
+    // CIS-less newcomer only wins the hungry argmax via leaked state
+    for &(t, p) in &sched.picks {
+        if t > 20.0 {
+            assert_ne!(p, 2, "recycled slot crawled at t={t}: stale state leaked");
+        }
+    }
+    // generation audit: engine and tracker agree the slot is on its
+    // second occupant (retire +1, rebirth +1)
+    assert_eq!(ws.generation(2), 2);
+    assert_eq!(sched.inner.added, vec![(2, 2)]);
+    assert_eq!(ws.stats.stale_picks, 0);
+}
+
+// ---- 4. reused scheduler across dynamic repetitions == fresh ----
+
+#[test]
+fn two_rep_dynamic_reuse_is_bit_identical_to_fresh() {
+    let horizon = 50.0;
+    let ps = pages(50, 7);
+    let sc = dynamic_scenario(&ps, 4321, horizon);
+    let cfg = SimConfig::new(5.0, horizon);
+    for strategy in [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }] {
+        let builder = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(strategy)
+            .pages(&ps);
+        let mut t1 = Rng::new(70);
+        let traces1 = generate_traces(&ps, horizon, CisDelay::None, &mut t1);
+        let mut t2 = Rng::new(71);
+        let traces2 = generate_traces(&ps, horizon, CisDelay::None, &mut t2);
+        // rep 1 + rep 2 on one reused scheduler (and reused workspace)
+        let mut reused = Recorder::new(builder.build().unwrap());
+        let mut ws = ScenarioWorkspace::new();
+        let _ = simulate_scenario_with(&mut ws, &traces1, &cfg, &sc, &mut reused);
+        let a = simulate_scenario_with(&mut ws, &traces2, &cfg, &sc, &mut reused);
+        // rep 2 alone on a fresh scheduler + fresh workspace
+        let mut fresh = Recorder::new(builder.build().unwrap());
+        let mut ws2 = ScenarioWorkspace::new();
+        let b = simulate_scenario_with(&mut ws2, &traces2, &cfg, &sc, &mut fresh);
+        assert_bit_identical(&a, &b, &format!("{strategy:?} reuse"));
+        assert_eq!(
+            reused.picks, fresh.picks,
+            "{strategy:?}: reused scheduler diverged pick-for-pick from fresh"
+        );
+        assert_eq!(ws.stats, ws2.stats, "{strategy:?}: stats diverged");
+    }
+}
