@@ -47,7 +47,7 @@ fn main() -> ncis_crawl::Result<()> {
         })
         .collect();
     let horizon = 200.0;
-    let cfg = SimConfig::new(20.0, horizon);
+    let cfg = SimConfig::new(20.0, horizon)?;
     let mut trng = Rng::new(7);
     let traces = generate_traces(&pages, horizon, CisDelay::None, &mut trng);
 

@@ -34,7 +34,7 @@ fn main() -> ncis_crawl::Result<()> {
 
     // 3. Simulate the discrete policies over 5 trace realizations.
     let horizon = 500.0;
-    let cfg = SimConfig::new(inst.bandwidth, horizon);
+    let cfg = SimConfig::new(inst.bandwidth, horizon)?;
     for kind in [PolicyKind::Greedy, PolicyKind::GreedyCis, PolicyKind::GreedyNcis] {
         // every strategy/backend combination is built through the same
         // facade; swap Strategy::Lazy or a PJRT backend freely

@@ -22,7 +22,7 @@ fn main() {
     let inst = spec.gen_instance(&mut rng).normalized();
     let horizon = 200.0;
     let r = 50.0;
-    let cfg = SimConfig::new(r, horizon);
+    let cfg = SimConfig::new(r, horizon).unwrap();
     let mut trng = Rng::new(99);
     let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
 

@@ -14,16 +14,26 @@
 //! - experiment-cell wall clock: pre-change serial merged-sort engine vs
 //!   the streaming engine + parallel repetition driver (the acceptance
 //!   lane: m=1000, R=100, T=1000, 8 reps, GREEDY + LAZY)
+//! - event sourcing: materialized vs streamed generation peak memory
+//!   (`gen_*` lanes, counting-allocator live-bytes high-water;
+//!   acceptance: streamed ≤ 10% at the largest m), replay-vs-streamed
+//!   simulation throughput (`sim_{materialized,streamed}_*`;
+//!   acceptance: ≤ 1.2× at m=1e5), and one full streamed repetition at
+//!   m=1e6 (`sim_streamed_m1000000`)
 //!
 //! Every lane is also recorded into `BENCH_perf.json` (via
 //! `benchkit::BenchJson`) so future PRs have a machine-readable perf
-//! trajectory. Scale the acceptance cell down on small machines with
-//! `NCIS_PERF_M` / `NCIS_PERF_T` / `NCIS_PERF_REPS`, or pass `--smoke`
+//! trajectory, and `main` fails (non-zero exit, so CI fails the job)
+//! if any declared acceptance lane is missing from the file. Scale the
+//! acceptance cell down on small machines with `NCIS_PERF_M` /
+//! `NCIS_PERF_T` / `NCIS_PERF_REPS` and the memory lanes with
+//! `NCIS_GEN_M` / `NCIS_GEN_T`, or pass `--smoke`
 //! (`cargo bench --bench perf -- --smoke`) for the CI-sized run that
 //! exercises every lane at tiny m.
 
 use std::time::Instant;
 
+use ncis_crawl::benchkit::mem::{self, MemSpan};
 use ncis_crawl::benchkit::{measure, report, BenchJson};
 use ncis_crawl::coordinator::crawler::{GreedyScheduler, ValueBackend};
 use ncis_crawl::coordinator::lazy::LazyGreedyScheduler;
@@ -40,11 +50,16 @@ use ncis_crawl::sched::wheel::TimingWheel;
 use ncis_crawl::sched::CrawlScheduler;
 use ncis_crawl::sim::metrics::RepAccumulator;
 use ncis_crawl::sim::{
-    generate_traces, simulate, simulate_reference, simulate_with, CisDelay, SimConfig,
-    SimWorkspace,
+    generate_traces, simulate, simulate_reference, simulate_streamed_with, simulate_with,
+    CisDelay, EventSource, SimConfig, SimWorkspace, StreamedSource, TraceMode,
 };
 use ncis_crawl::util::OrdF64;
 use ncis_crawl::{CrawlerBuilder, Strategy};
+
+// The memory lanes (`gen_*`) need real allocation accounting: install
+// the counting allocator for the whole bench binary.
+#[global_allocator]
+static COUNTING_ALLOC: mem::CountingAlloc = mem::CountingAlloc;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -287,7 +302,7 @@ fn bench_schedulers(json: &mut BenchJson, smoke: bool) {
     let r = 100.0;
     let mut trng = Rng::new(4);
     let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
-    let cfg = SimConfig::new(r, horizon);
+    let cfg = SimConfig::new(r, horizon).unwrap();
 
     let exact_builder = CrawlerBuilder::new()
         .policy(PolicyKind::GreedyNcis)
@@ -360,7 +375,7 @@ fn bench_scenario_churn(json: &mut BenchJson, smoke: bool) {
     let inst = spec.gen_instance(&mut rng).normalized();
     let mut trng = Rng::new(24);
     let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
-    let cfg = SimConfig::new(r, horizon);
+    let cfg = SimConfig::new(r, horizon).unwrap();
     let builder = CrawlerBuilder::new()
         .policy(PolicyKind::GreedyNcis)
         .strategy(Strategy::Lazy)
@@ -466,7 +481,7 @@ fn bench_end_to_end(json: &mut BenchJson, smoke: bool) {
     let traces = generate_traces(&inst.pages, 100.0, CisDelay::None, &mut trng);
     let (c, s_, r_) = traces.counts();
     let events = (c + s_ + r_) as f64;
-    let cfg = SimConfig::new(100.0, 100.0);
+    let cfg = SimConfig::new(100.0, 100.0).unwrap();
     let builder = CrawlerBuilder::new()
         .policy(PolicyKind::GreedyNcis)
         .strategy(Strategy::Lazy)
@@ -507,7 +522,7 @@ fn run_cell_reference(spec: &ExperimentSpec, put: PolicyUnderTest) -> (f64, f64)
     for rep in 0..spec.reps {
         let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
         let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
-        let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon);
+        let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon).unwrap();
         cfg.cis_discard_window = spec.discard_window;
         let mut sched = make_scheduler(put, &inst, &[]);
         let res = simulate_reference(&traces, &cfg, sched.as_mut());
@@ -526,12 +541,16 @@ fn bench_cell_engines(json: &mut BenchJson, smoke: bool) {
         "\n-- experiment cell: serial merged-sort engine vs parallel streaming \
          (m={m}, R=100, T={horizon}, reps={reps}, {threads} threads) --"
     );
+    // pinned Materialized: this lane's meaning is "engine + driver,
+    // same realization as the serial merged-sort reference" — the
+    // streamed generation path has its own lanes (bench_event_sourcing)
     let spec = ExperimentSpec {
         horizon,
         ..ExperimentSpec::section6(m, reps)
     }
     .with_partial_cis()
-    .with_false_positives();
+    .with_false_positives()
+    .with_trace_mode(TraceMode::Materialized);
     // total events processed per engine pass (untimed pre-pass, same seeds)
     let mut irng = Rng::new(spec.seed);
     let inst = spec.gen_instance(&mut irng).normalized();
@@ -590,6 +609,236 @@ fn bench_cell_engines(json: &mut BenchJson, smoke: bool) {
     }
 }
 
+/// Event-sourcing lanes (the zero-materialization acceptance bars):
+///
+/// - `gen_{materialized,streamed}_m*`: full-horizon event generation —
+///   `generate_traces` (stores every event) vs `StreamedSource`
+///   construction + a full drain (stores nothing). Peak memory is the
+///   counting allocator's live-bytes high-water over the lane;
+///   acceptance: streamed ≤ 10% of materialized at the largest m.
+/// - `sim_{materialized,streamed}_m*`: end-to-end repetition
+///   throughput under the lazy GREEDY-NCIS scheduler. The materialized
+///   lane replays pre-built traces (generation untimed — the best case
+///   for the old path); the streamed lane pays generation in-loop.
+///   Acceptance: streamed/materialized ≤ 1.2× at m=1e5.
+/// - `sim_streamed_m<big>`: the lane the old path cannot run at scale —
+///   one full streamed repetition at the largest population.
+///
+/// Returns the lane names it declared (the required-lane self-check in
+/// `main` fails the job if any is missing from BENCH_perf.json).
+fn bench_event_sourcing(json: &mut BenchJson, smoke: bool) -> Vec<String> {
+    let mut declared: Vec<String> = Vec::new();
+    let gen_ms: Vec<usize> = if smoke {
+        vec![512]
+    } else {
+        vec![env_usize("NCIS_GEN_M_SMALL", 100_000), env_usize("NCIS_GEN_M", 1_000_000)]
+    };
+    let horizon = if smoke { 20.0 } else { env_usize("NCIS_GEN_T", 100) as f64 };
+    println!("\n-- event sourcing: materialized vs streamed generation (T={horizon}) --");
+    if !smoke {
+        println!(
+            "(the materialized lane at m=1e6, T=100 allocates ~1.5 GB; \
+             scale with NCIS_GEN_M / NCIS_GEN_T)"
+        );
+    }
+    for &m in &gen_ms {
+        let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+        let mut irng = Rng::new(31);
+        let inst = spec.gen_instance(&mut irng).normalized();
+
+        // materialized: every event realized and stored
+        let (mat_peak, mat_events, mat_secs) = {
+            let span = MemSpan::begin();
+            let mut trng = Rng::new(32);
+            let t0 = Instant::now();
+            let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+            let secs = t0.elapsed().as_secs_f64();
+            let peak = span.peak_delta();
+            let (c, s, r) = traces.counts();
+            (peak, (c + s + r) as f64, secs)
+        };
+        let lane = format!("gen_materialized_m{m}");
+        println!(
+            "{lane:<34} {mat_secs:8.3}s  {:9.1}k ev  peak {:8.1} MB ({:.0} B/page)",
+            mat_events / 1e3,
+            mat_peak as f64 / 1e6,
+            mat_peak as f64 / m as f64
+        );
+        json.lane(
+            &lane,
+            &[
+                ("seconds", mat_secs),
+                ("events", mat_events),
+                ("events_per_s", mat_events / mat_secs.max(1e-12)),
+                ("peak_bytes", mat_peak as f64),
+                ("bytes_per_page", mat_peak as f64 / m as f64),
+            ],
+        );
+        declared.push(lane);
+
+        // streamed: same master seed (seed-paired at the per-page
+        // level), construct the sources and drain every event without
+        // storing any
+        let (st_peak, st_events, st_secs, st_allocs) = {
+            let span = MemSpan::begin();
+            let mut trng = Rng::new(32);
+            let t0 = Instant::now();
+            let mut src =
+                StreamedSource::new(&inst.pages, horizon, CisDelay::None, &mut trng)
+                    .expect("valid delay");
+            let mut n = 0u64;
+            for i in 0..src.len() {
+                let mut ev = src.first(i);
+                while let Some((_, k)) = ev {
+                    n += 1;
+                    ev = src.advance(i, k);
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            (span.peak_delta(), n as f64, secs, span.allocs())
+        };
+        let lane = format!("gen_streamed_m{m}");
+        println!(
+            "{lane:<34} {st_secs:8.3}s  {:9.1}k ev  peak {:8.1} MB ({:.0} B/page, {} allocs)",
+            st_events / 1e3,
+            st_peak as f64 / 1e6,
+            st_peak as f64 / m as f64,
+            st_allocs
+        );
+        json.lane(
+            &lane,
+            &[
+                ("seconds", st_secs),
+                ("events", st_events),
+                ("events_per_s", st_events / st_secs.max(1e-12)),
+                ("peak_bytes", st_peak as f64),
+                ("bytes_per_page", st_peak as f64 / m as f64),
+                ("allocs", st_allocs as f64),
+            ],
+        );
+        declared.push(lane);
+
+        let ratio = st_peak as f64 / (mat_peak as f64).max(1.0);
+        println!(
+            "streamed/materialized peak memory at m={m}: {:.1}% (acceptance at largest m: <= 10%)",
+            ratio * 100.0
+        );
+        let lane = format!("gen_mem_ratio_m{m}");
+        json.lane(&lane, &[("streamed_over_materialized", ratio)]);
+        declared.push(lane);
+    }
+    if let Some(rss) = mem::peak_rss_bytes() {
+        json.lane("gen_peak_rss", &[("process_vmhwm_bytes", rss as f64)]);
+    }
+
+    // --- simulation throughput: replay vs streamed, lazy GREEDY-NCIS ---
+    let m_sim: usize = if smoke { 512 } else { 100_000 };
+    let sim_horizon = 10.0;
+    let r = if smoke { 200.0 } else { 2_000.0 };
+    println!("\n-- event sourcing: simulation throughput, replay vs streamed (m={m_sim}) --");
+    let spec = ExperimentSpec::section6(m_sim, 1).with_partial_cis().with_false_positives();
+    let mut irng = Rng::new(33);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let cfg = SimConfig::new(r, sim_horizon).expect("valid bench bandwidth");
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+
+    // materialized lane: generation is an untimed pre-pass — the most
+    // favourable accounting for the old path
+    let secs_mat = {
+        let mut trng = Rng::new(34);
+        let traces = generate_traces(&inst.pages, sim_horizon, CisDelay::None, &mut trng);
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_with(&mut ws, &traces, &cfg, sched.as_mut()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("replay engine        m={m_sim}"), &meas);
+        json.lane(
+            &format!("sim_materialized_m{m_sim}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * sim_horizon / meas.mean_s)],
+        );
+        meas.mean_s
+    };
+    declared.push(format!("sim_materialized_m{m_sim}"));
+
+    // streamed lane: source construction (the generation work) is paid
+    // inside the timed repetition, as it is in a real streamed cell
+    let secs_st = {
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut trng = Rng::new(34);
+                let src =
+                    StreamedSource::new(&inst.pages, sim_horizon, CisDelay::None, &mut trng)
+                        .expect("valid delay");
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_streamed_with(&mut ws, src, &cfg, sched.as_mut()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("streamed engine      m={m_sim}"), &meas);
+        json.lane(
+            &format!("sim_streamed_m{m_sim}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * sim_horizon / meas.mean_s)],
+        );
+        meas.mean_s
+    };
+    declared.push(format!("sim_streamed_m{m_sim}"));
+    let overhead = secs_st / secs_mat.max(1e-12);
+    println!("streamed/replay throughput overhead: {overhead:.2}x (acceptance: <= 1.2x)");
+    let lane = format!("sim_mode_ratio_m{m_sim}");
+    json.lane(&lane, &[("streamed_over_materialized", overhead)]);
+    declared.push(lane);
+
+    // the lane the materialized path cannot run at scale: one full
+    // streamed repetition at the largest population (O(m) memory)
+    let m_big: usize = if smoke { 1_024 } else { env_usize("NCIS_GEN_M", 1_000_000) };
+    let big_horizon = 2.0;
+    let big_r = if smoke { 200.0 } else { 1_000.0 };
+    println!("\n-- event sourcing: streamed repetition at m={m_big} --");
+    let spec = ExperimentSpec::section6(m_big, 1).with_partial_cis().with_false_positives();
+    let mut irng = Rng::new(35);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let cfg = SimConfig::new(big_r, big_horizon).expect("valid bench bandwidth");
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+    let span = MemSpan::begin();
+    let mut ws = SimWorkspace::new();
+    let meas = measure(
+        || {
+            let mut trng = Rng::new(36);
+            let src = StreamedSource::new(&inst.pages, big_horizon, CisDelay::None, &mut trng)
+                .expect("valid delay");
+            let mut sched = builder.build().unwrap();
+            std::hint::black_box(simulate_streamed_with(&mut ws, src, &cfg, sched.as_mut()));
+        },
+        3,
+        0.2,
+    );
+    report(&format!("streamed rep        m={m_big}"), &meas);
+    let lane = format!("sim_streamed_m{m_big}");
+    json.lane(
+        &lane,
+        &[
+            ("seconds_per_rep", meas.mean_s),
+            ("ticks_per_s", big_r * big_horizon / meas.mean_s),
+            ("peak_bytes", span.peak_delta() as f64),
+        ],
+    );
+    declared.push(lane);
+    declared
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -612,6 +861,20 @@ fn main() {
     bench_scenario_churn(&mut json, smoke);
     bench_end_to_end(&mut json, smoke);
     bench_cell_engines(&mut json, smoke);
+    let mut declared = bench_event_sourcing(&mut json, smoke);
+
+    // declared-lane manifest: the acceptance-critical lanes every run
+    // of this bench must record, in both --smoke and full mode. CI
+    // fails the job when BENCH_perf.json is missing any of them.
+    for m in if smoke { vec![1024usize] } else { vec![10_000, 100_000] } {
+        declared.push(format!("select_speedup_m{m}"));
+    }
+    declared.push("calendar_speedup".into());
+    declared.push(format!("scenario_churn_overhead_m{}", if smoke { 2_048 } else { 100_000 }));
+    declared.push("sim_e2e_lazy_m1000".into());
+    declared.push("cell_greedy_speedup".into());
+    declared.push("cell_lazy_ncis_speedup".into());
+
     // cargo runs bench binaries with cwd = the package dir (rust/);
     // write to the workspace root so the perf trajectory lives in one
     // stable place across invocation styles
@@ -620,4 +883,10 @@ fn main() {
         Ok(path) => println!("\nmachine-readable results -> {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
     }
+    let missing: Vec<&String> = declared.iter().filter(|l| !json.has_lane(l)).collect();
+    if !missing.is_empty() {
+        eprintln!("BENCH_perf.json is missing declared lanes: {missing:?}");
+        std::process::exit(1);
+    }
+    println!("declared-lane check: all {} acceptance lanes recorded", declared.len());
 }

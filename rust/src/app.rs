@@ -5,7 +5,7 @@ use std::path::Path;
 
 use crate::cli::Args;
 use crate::coordinator::builder::{CrawlerBuilder, Strategy};
-use crate::coordinator::pipeline::{run_pipeline, PipelineConfig};
+use crate::coordinator::pipeline::{run_pipeline_streamed, CisFeed, PipelineConfig};
 use crate::error::{Error, Result};
 use crate::figures::common::{run_cell, ExperimentSpec};
 use crate::policy::{parse_policy, PolicyKind};
@@ -121,21 +121,15 @@ fn cmd_serve_shards(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.u64_or("seed", 42)?);
     let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
     let inst = spec.gen_instance(&mut rng).normalized();
-    // pre-draw a CIS stream for the pipeline
-    let mut cis: Vec<(f64, usize)> = Vec::new();
-    for (i, p) in inst.pages.iter().enumerate() {
-        let gamma = p.lam * p.delta + p.nu;
-        for t in crate::rngkit::poisson_process(&mut rng, gamma, horizon) {
-            cis.push((t, i));
-        }
-    }
-    cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // lazy CIS feed: O(m) state, generative per-page signals (coins +
+    // false positives) instead of a pre-drawn hazard-rate stream
+    let feed = CisFeed::new(&inst.pages, horizon, crate::sim::CisDelay::None, &mut rng)?;
     let cfg = PipelineConfig { shards, queue_depth: 256, bandwidth: r, horizon };
     // per-shard schedulers are stamped from this template
     let scheduler = CrawlerBuilder::new()
         .policy(PolicyKind::GreedyNcis)
         .strategy(Strategy::Lazy);
-    let report = run_pipeline(&inst.pages, &scheduler, &cis, &cfg)?;
+    let report = run_pipeline_streamed(&inst.pages, &scheduler, feed, &[], &cfg)?;
     println!(
         "shards={} crawls={} cis={} backpressure_stalls={} wall={:?}",
         shards, report.total_crawls, report.cis_applied, report.backpressure_stalls, report.wall

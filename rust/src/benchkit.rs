@@ -11,6 +11,189 @@ use std::time::Instant;
 
 use crate::stats::{summarize, Summary};
 
+pub mod mem {
+    //! Peak-memory and allocation instrumentation for the memory
+    //! benches (`gen_{materialized,streamed}` lanes).
+    //!
+    //! [`CountingAlloc`] is a [`System`]-wrapping global allocator
+    //! that tracks live bytes, a resettable live-bytes peak, and
+    //! allocation counters. It is *not* installed by the library —
+    //! a bench binary opts in with
+    //! `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
+    //! (see `benches/perf.rs`); without that, the counters simply stay
+    //! at zero. [`peak_rss_bytes`] additionally reads the process
+    //! high-water RSS (`VmHWM`, Linux) — process-lifetime, not
+    //! resettable, reported alongside the per-lane counters.
+
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    static CURRENT: AtomicUsize = AtomicUsize::new(0);
+    static PEAK: AtomicUsize = AtomicUsize::new(0);
+    static TOTAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static TOTAL_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    #[inline]
+    fn record_alloc(size: usize) {
+        TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        TOTAL_BYTES.fetch_add(size as u64, Ordering::Relaxed);
+        let live = CURRENT.fetch_add(size, Ordering::Relaxed) + size;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn record_dealloc(size: usize) {
+        // saturating: a foreign free racing a reset can never wrap the
+        // live counter negative
+        let mut cur = CURRENT.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(size);
+            match CURRENT.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Counting wrapper around the system allocator.
+    pub struct CountingAlloc;
+
+    // SAFETY: defers every allocation to `System` verbatim; the
+    // counters are side effects only.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() {
+                record_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc_zeroed(layout);
+            if !p.is_null() {
+                record_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            record_dealloc(layout.size());
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() {
+                record_dealloc(layout.size());
+                record_alloc(new_size);
+            }
+            p
+        }
+    }
+
+    /// Bytes currently live (allocated − freed since process start).
+    pub fn live_bytes() -> usize {
+        CURRENT.load(Ordering::Relaxed)
+    }
+
+    /// High-water of [`live_bytes`] since the last [`reset_peak`].
+    pub fn peak_bytes() -> usize {
+        PEAK.load(Ordering::Relaxed)
+    }
+
+    /// Reset the live-bytes peak to the current live level.
+    pub fn reset_peak() {
+        PEAK.store(CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Total allocation calls since process start (monotone).
+    pub fn alloc_count() -> u64 {
+        TOTAL_ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes ever allocated since process start (monotone).
+    pub fn alloc_bytes_total() -> u64 {
+        TOTAL_BYTES.load(Ordering::Relaxed)
+    }
+
+    /// Measurement span: captures the live level (and resets the peak)
+    /// at construction so a lane can report *its own* peak allocation
+    /// footprint and allocation count.
+    #[derive(Debug, Clone, Copy)]
+    pub struct MemSpan {
+        start_live: usize,
+        start_allocs: u64,
+    }
+
+    impl MemSpan {
+        /// Begin a span (resets the peak to the current live level).
+        pub fn begin() -> Self {
+            reset_peak();
+            Self { start_live: live_bytes(), start_allocs: alloc_count() }
+        }
+
+        /// Peak bytes the span added above its starting live level.
+        pub fn peak_delta(&self) -> usize {
+            peak_bytes().saturating_sub(self.start_live)
+        }
+
+        /// Allocation calls since the span began.
+        pub fn allocs(&self) -> u64 {
+            alloc_count() - self.start_allocs
+        }
+    }
+
+    /// Process peak RSS (`VmHWM` from `/proc/self/status`), if the
+    /// platform exposes it. Process-lifetime — pair with [`MemSpan`]
+    /// for per-lane numbers.
+    pub fn peak_rss_bytes() -> Option<u64> {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+                return Some(kb * 1024);
+            }
+        }
+        None
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn counter_math_tracks_live_and_peak() {
+            // drive the recorders directly (the test binary does not
+            // install the allocator, so these statics are ours alone)
+            let base = live_bytes();
+            reset_peak();
+            record_alloc(1000);
+            record_alloc(500);
+            assert_eq!(live_bytes(), base + 1500);
+            assert!(peak_bytes() >= base + 1500);
+            record_dealloc(500);
+            assert_eq!(live_bytes(), base + 1000);
+            assert!(peak_bytes() >= base + 1500, "peak must not shrink on free");
+            let span = MemSpan::begin();
+            assert_eq!(span.peak_delta(), 0);
+            record_alloc(2000);
+            record_dealloc(2000);
+            assert_eq!(span.peak_delta(), 2000, "span peak sees the transient");
+            assert_eq!(span.allocs(), 1);
+            record_dealloc(1000); // restore balance for other tests
+        }
+
+        #[cfg(target_os = "linux")]
+        #[test]
+        fn peak_rss_reads_proc_status() {
+            let rss = peak_rss_bytes().expect("VmHWM should exist on Linux");
+            assert!(rss > 0);
+        }
+    }
+}
+
 /// One timing measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct Measurement {
@@ -198,6 +381,13 @@ impl BenchJson {
         ));
     }
 
+    /// Does a lane of exactly this name exist? (Used by the bench
+    /// binaries' declared-lane self-check: CI fails if an acceptance
+    /// lane was skipped.)
+    pub fn has_lane(&self, lane: &str) -> bool {
+        self.lanes.iter().any(|(l, _)| l == lane)
+    }
+
     /// Serialize to a JSON string.
     pub fn render(&self) -> String {
         let unix = std::time::SystemTime::now()
@@ -275,6 +465,15 @@ mod tests {
     fn arity_mismatch_panics() {
         let mut fig = FigureOutput::new("bad", &["a", "b"]);
         fig.rowf(&[1.0]);
+    }
+
+    #[test]
+    fn has_lane_matches_exact_names() {
+        let mut j = BenchJson::new("t");
+        j.lane("gen_streamed_m1000", &[("x", 1.0)]);
+        assert!(j.has_lane("gen_streamed_m1000"));
+        assert!(!j.has_lane("gen_streamed_m100"));
+        assert!(!j.has_lane("gen_streamed"));
     }
 
     #[test]

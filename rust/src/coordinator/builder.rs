@@ -33,10 +33,12 @@ use crate::error::Error;
 use crate::params::PageParams;
 use crate::policy::{PolicyKind, PolicyUnderTest};
 use crate::rngkit::Rng;
-use crate::scenario::{simulate_scenario_with, Scenario, ScenarioWorkspace};
+use crate::scenario::{
+    simulate_scenario_streamed_with, simulate_scenario_with, Scenario, ScenarioWorkspace,
+};
 use crate::sched::CrawlScheduler;
 use crate::sim::engine::{SimConfig, SimResult};
-use crate::sim::generate_traces;
+use crate::sim::{generate_traces, TraceMode};
 use crate::Result;
 
 /// Which scheduling strategy drives the policy's value function.
@@ -69,6 +71,7 @@ pub struct CrawlerBuilder {
     pages: Vec<PageParams>,
     lds_rates: Vec<f64>,
     scenario: Option<Scenario>,
+    trace_mode: TraceMode,
 }
 
 /// Shared construction body of [`CrawlerBuilder::build`] and
@@ -140,7 +143,18 @@ impl CrawlerBuilder {
             pages: Vec::new(),
             lds_rates: Vec::new(),
             scenario: None,
+            trace_mode: TraceMode::default(),
         }
+    }
+
+    /// How [`Self::run_scenario`] produces per-repetition event
+    /// streams: [`TraceMode::Streamed`] (the default — lazy per-page
+    /// sources, `O(m)` memory) or [`TraceMode::Materialized`] (the
+    /// pre-built-trace oracle path, a different seed-keyed realization
+    /// of the same process).
+    pub fn trace_mode(mut self, mode: TraceMode) -> Self {
+        self.trace_mode = mode;
+        self
     }
 
     /// Crawl-value policy (ignored by [`Strategy::Lds`]).
@@ -222,11 +236,26 @@ impl CrawlerBuilder {
                     .into(),
             ));
         }
+        // reject a bad delay identically in both trace modes (the
+        // streamed engine validates internally; the materialized
+        // generator assumes validity)
+        scenario.delay().validate()?;
         let mut sched = self.build()?;
-        let mut rng = Rng::new(trace_seed);
-        let traces =
-            generate_traces(scenario.initial_pages(), cfg.horizon, scenario.delay(), &mut rng);
-        Ok(simulate_scenario_with(ws, &traces, cfg, scenario, sched.as_mut()))
+        match self.trace_mode {
+            TraceMode::Streamed => {
+                simulate_scenario_streamed_with(ws, cfg, scenario, trace_seed, sched.as_mut())
+            }
+            TraceMode::Materialized => {
+                let mut rng = Rng::new(trace_seed);
+                let traces = generate_traces(
+                    scenario.initial_pages(),
+                    cfg.horizon,
+                    scenario.delay(),
+                    &mut rng,
+                );
+                Ok(simulate_scenario_with(ws, &traces, cfg, scenario, sched.as_mut()))
+            }
+        }
     }
 
     /// Apply a [`PolicyUnderTest`] (policy + strategy in one value, as
@@ -324,7 +353,7 @@ mod tests {
             assert_eq!(sched.name(), format!("GREEDY-NCIS{suffix}"));
             let mut rng = Rng::new(2);
             let traces = generate_traces(&ps, 20.0, CisDelay::None, &mut rng);
-            let cfg = SimConfig::new(4.0, 20.0);
+            let cfg = SimConfig::new(4.0, 20.0).unwrap();
             let res = simulate(&traces, &cfg, sched.as_mut());
             assert!((0.0..=1.0).contains(&res.accuracy), "{strategy:?}");
         }
@@ -418,14 +447,43 @@ mod tests {
                 .policy(PolicyKind::GreedyNcis)
                 .strategy(strategy)
                 .with_scenario(sc.clone());
-            let cfg = crate::sim::SimConfig::new(5.0, 30.0);
+            let cfg = crate::sim::SimConfig::new(5.0, 30.0).unwrap();
             let res = builder.run_scenario(&cfg, 43).unwrap();
             assert!((0.0..=1.0).contains(&res.accuracy), "{strategy:?}");
             assert_eq!(res.ticks, 150);
         }
         // without a scenario, run_scenario is a usage error
         let bare = CrawlerBuilder::new().pages(&pages(4, 10));
-        assert!(bare.run_scenario(&crate::sim::SimConfig::new(1.0, 1.0), 1).is_err());
+        assert!(bare.run_scenario(&crate::sim::SimConfig::new(1.0, 1.0).unwrap(), 1).is_err());
+    }
+
+    #[test]
+    fn trace_mode_knob_selects_the_engine() {
+        use crate::scenario::{simulate_scenario_with, Scenario, ScenarioWorkspace};
+        use crate::sim::TraceMode;
+        let ps = pages(20, 11);
+        let sc = Scenario::new(ps.clone(), 51);
+        let cfg = crate::sim::SimConfig::new(4.0, 25.0).unwrap();
+        let base = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .with_scenario(sc.clone());
+        // both modes run; same tick clock, different realizations
+        let streamed = base.clone().run_scenario(&cfg, 7).unwrap();
+        let materialized =
+            base.clone().trace_mode(TraceMode::Materialized).run_scenario(&cfg, 7).unwrap();
+        assert_eq!(streamed.ticks, materialized.ticks);
+        assert!((0.0..=1.0).contains(&streamed.accuracy));
+        assert!((0.0..=1.0).contains(&materialized.accuracy));
+        // the materialized knob reproduces the direct materialized
+        // entry point bit-for-bit
+        let mut rng = Rng::new(7);
+        let traces = generate_traces(&ps, cfg.horizon, sc.delay(), &mut rng);
+        let mut ws = ScenarioWorkspace::new();
+        let mut sched = base.build().unwrap();
+        let direct = simulate_scenario_with(&mut ws, &traces, &cfg, &sc, sched.as_mut());
+        assert_eq!(materialized.accuracy.to_bits(), direct.accuracy.to_bits());
+        assert_eq!(materialized.crawl_counts, direct.crawl_counts);
     }
 
     #[test]

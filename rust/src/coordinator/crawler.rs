@@ -450,7 +450,7 @@ mod tests {
         let ps = pages(20, 1, false);
         let mut rng = Rng::new(2);
         let traces = generate_traces(&ps, 50.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(5.0, 50.0);
+        let cfg = SimConfig::new(5.0, 50.0).unwrap();
         let mut sched = GreedyScheduler::new(PolicyKind::Greedy, &ps, ValueBackend::Native);
         let res = simulate(&traces, &cfg, &mut sched);
         assert_eq!(res.crawl_counts.iter().map(|&c| c as u64).sum::<u64>(), res.ticks);
@@ -466,7 +466,7 @@ mod tests {
         ];
         let mut rng = Rng::new(3);
         let traces = generate_traces(&ps, 200.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(2.0, 200.0);
+        let cfg = SimConfig::new(2.0, 200.0).unwrap();
         let mut sched = GreedyScheduler::new(PolicyKind::Greedy, &ps, ValueBackend::Native);
         let res = simulate(&traces, &cfg, &mut sched);
         assert!(res.crawl_counts[0] > res.crawl_counts[1] * 2);
@@ -485,7 +485,7 @@ mod tests {
             })
             .collect();
         let horizon = 300.0;
-        let cfg = SimConfig::new(5.0, horizon);
+        let cfg = SimConfig::new(5.0, horizon).unwrap();
         let mut acc = [0.0f64; 2];
         for rep in 0..5 {
             let mut trng = Rng::new(100 + rep);
@@ -725,7 +725,7 @@ mod tests {
         let ps = pages(30, 5, true);
         let mut rng = Rng::new(6);
         let traces = generate_traces(&ps, 100.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(5.0, 100.0);
+        let cfg = SimConfig::new(5.0, 100.0).unwrap();
         let mut sched = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
         simulate(&traces, &cfg, &mut sched);
         assert!(sched.lambda_estimate > 0.0);

@@ -207,7 +207,7 @@ mod tests {
         let mut polite = PoliteScheduler::new(inner, map.clone());
         let mut rng = Rng::new(2);
         let traces = generate_traces(&ps, 50.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(10.0, 50.0);
+        let cfg = SimConfig::new(10.0, 50.0).unwrap();
         // track host crawl times through the simulation result
         let res = simulate(&traces, &cfg, &mut polite);
         // re-derive: with min_interval=1.0 and R=10, each host can absorb
@@ -233,7 +233,7 @@ mod tests {
         let mut polite = PoliteScheduler::new(inner, map);
         let mut rng = Rng::new(3);
         let traces = generate_traces(&ps, 30.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(5.0, 30.0);
+        let cfg = SimConfig::new(5.0, 30.0).unwrap();
         let res = simulate(&traces, &cfg, &mut polite);
         assert!(polite.vetoes + polite.idle_ticks > 0);
         let total: u32 = res.crawl_counts.iter().sum();
@@ -249,7 +249,7 @@ mod tests {
         let map = HostMap::round_robin(20, 4, 0.0);
         let mut rng = Rng::new(4);
         let traces = generate_traces(&ps, 30.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(5.0, 30.0);
+        let cfg = SimConfig::new(5.0, 30.0).unwrap();
         let mut plain = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
         let acc_plain = simulate(&traces, &cfg, &mut plain).accuracy;
         let inner = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
@@ -297,7 +297,7 @@ mod tests {
         let mut polite = PoliteScheduler::new(inner, map);
         let mut rng = Rng::new(9);
         let traces = generate_traces(&ps, 20.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(4.0, 20.0);
+        let cfg = SimConfig::new(4.0, 20.0).unwrap();
         let res = simulate(&traces, &cfg, &mut polite);
         assert!((0.0..=1.0).contains(&res.accuracy));
         assert!(polite.name().ends_with("-POLITE"));

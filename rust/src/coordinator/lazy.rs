@@ -627,7 +627,7 @@ mod tests {
     fn lazy_parity_with_exact() {
         let ps = pages(150, 1);
         let horizon = 200.0;
-        let cfg = SimConfig::new(10.0, horizon);
+        let cfg = SimConfig::new(10.0, horizon).unwrap();
         let mut acc_exact = 0.0;
         let mut acc_lazy = 0.0;
         let reps = 4;
@@ -652,7 +652,7 @@ mod tests {
         // the regime that previously degenerated: many pages, few crawls
         let ps = pages(800, 9);
         let horizon = 100.0;
-        let cfg = SimConfig::new(5.0, horizon);
+        let cfg = SimConfig::new(5.0, horizon).unwrap();
         let mut rng = Rng::new(10);
         let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
         let mut ex = GreedyScheduler::new(PolicyKind::GreedyNcis, &ps, ValueBackend::Native);
@@ -666,7 +666,7 @@ mod tests {
     fn lazy_saves_evaluations() {
         let ps = pages(400, 2);
         let horizon = 100.0;
-        let cfg = SimConfig::new(10.0, horizon);
+        let cfg = SimConfig::new(10.0, horizon).unwrap();
         let mut rng = Rng::new(3);
         let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
         let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
@@ -688,7 +688,7 @@ mod tests {
     #[test]
     fn every_tick_crawls_something() {
         let ps = pages(30, 4);
-        let cfg = SimConfig::new(5.0, 50.0);
+        let cfg = SimConfig::new(5.0, 50.0).unwrap();
         let mut rng = Rng::new(5);
         let traces = generate_traces(&ps, 50.0, CisDelay::None, &mut rng);
         let mut lz = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
@@ -700,7 +700,7 @@ mod tests {
     #[test]
     fn works_for_all_policy_kinds() {
         let ps = pages(40, 6);
-        let cfg = SimConfig::new(4.0, 40.0);
+        let cfg = SimConfig::new(4.0, 40.0).unwrap();
         for kind in [
             PolicyKind::Greedy,
             PolicyKind::GreedyCis,
@@ -841,7 +841,7 @@ mod tests {
         // a lazy scheduler that lived through churn must reset to the
         // pristine population on on_start (reuse == fresh, bit-exact)
         let ps = pages(40, 21);
-        let cfg = SimConfig::new(5.0, 40.0);
+        let cfg = SimConfig::new(5.0, 40.0).unwrap();
         let mut reused = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
         // dynamic episode outside any engine: grow, retire, drift
         reused.on_start(ps.len());
@@ -863,7 +863,7 @@ mod tests {
     fn reuse_across_runs_matches_fresh() {
         // on_start must fully reset the calendar/heap/threshold state
         let ps = pages(60, 8);
-        let cfg = SimConfig::new(5.0, 60.0);
+        let cfg = SimConfig::new(5.0, 60.0).unwrap();
         let mut reused = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &ps);
         for rep in 0..3u64 {
             let mut rng = Rng::new(70 + rep);

@@ -14,13 +14,19 @@
 //!
 //! Used by the `serve-shards` CLI command and the Appendix-G scale bench.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 
 use crate::coordinator::builder::CrawlerBuilder;
 use crate::params::PageParams;
+use crate::rngkit::Rng;
 use crate::sched::{CrawlScheduler, IdleScheduler};
+use crate::sim::engine::KIND_CIS;
+use crate::sim::{CisDelay, PageEventSource};
+use crate::util::OrdF64;
 
 /// A message into a shard worker.
 #[derive(Debug, Clone, Copy)]
@@ -170,6 +176,84 @@ fn send_backpressured(
     }
 }
 
+/// Lazy CIS supply for the streaming pipeline: one [`PageEventSource`]
+/// per page, restricted to its CIS channel (changes are consumed
+/// internally to drive signalled deliveries, and the request process
+/// is built with μ = 0 — the pipeline has no freshness accounting, so
+/// only deliveries leave the feed), merged through a small binary heap.
+/// `O(m)` state instead of a pre-drawn `O(total events)` vector, and
+/// the deliveries come from the *generative* model (per-change
+/// Bernoulli(λ) signals + Poisson(ν) false positives + delivery
+/// delays), not a collapsed hazard-rate approximation.
+///
+/// Iterate it (`Iterator<Item = (time, page)>`) — deliveries arrive in
+/// global time order.
+#[derive(Debug)]
+pub struct CisFeed {
+    sources: Vec<PageEventSource>,
+    heap: BinaryHeap<Reverse<(OrdF64, u32)>>,
+    horizon: f64,
+    delay: CisDelay,
+}
+
+/// Advance `s` past non-CIS events to its next CIS delivery, if any.
+fn next_cis_of(s: &mut PageEventSource, horizon: f64, delay: CisDelay) -> Option<f64> {
+    loop {
+        let (t, k) = s.next(horizon, delay)?;
+        if k == KIND_CIS {
+            return Some(t);
+        }
+        s.consume(k, horizon, delay);
+    }
+}
+
+impl CisFeed {
+    /// Build the per-page sources over `[0, horizon)` (same per-page
+    /// master keying as `generate_traces` / `StreamedSource`).
+    pub fn new(
+        pages: &[PageParams],
+        horizon: f64,
+        delay: CisDelay,
+        rng: &mut Rng,
+    ) -> crate::Result<Self> {
+        delay.validate()?;
+        let mut sources: Vec<PageEventSource> = pages
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut prng = rng.split(i as u64);
+                // μ = 0: requests ride their own substream, so turning
+                // them off leaves the change/CIS realization
+                // bit-identical while skipping ~m·T·μ wasted draws the
+                // feed would only discard
+                let cis_only = PageParams { mu: 0.0, ..*p };
+                PageEventSource::new(&cis_only, 0.0, horizon, delay, &mut prng)
+            })
+            .collect();
+        let mut heap = BinaryHeap::with_capacity(sources.len());
+        for (i, s) in sources.iter_mut().enumerate() {
+            if let Some(t) = next_cis_of(s, horizon, delay) {
+                heap.push(Reverse((OrdF64(t), i as u32)));
+            }
+        }
+        Ok(Self { sources, heap, horizon, delay })
+    }
+}
+
+impl Iterator for CisFeed {
+    type Item = (f64, usize);
+
+    fn next(&mut self) -> Option<(f64, usize)> {
+        let Reverse((OrdF64(t), page)) = self.heap.pop()?;
+        let s = &mut self.sources[page as usize];
+        s.consume(KIND_CIS, self.horizon, self.delay);
+        if let Some(nt) = next_cis_of(s, self.horizon, self.delay) {
+            self.heap.push(Reverse((OrdF64(nt), page)));
+        }
+        Some((t, page as usize))
+    }
+}
+
 /// Configuration of a streaming run.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -232,6 +316,31 @@ pub fn run_pipeline_with_world(
     world_events: &[(f64, WorldMsg)], // sorted by time
     cfg: &PipelineConfig,
 ) -> crate::Result<PipelineReport> {
+    run_pipeline_events(pages, scheduler, cis_events.iter().copied(), world_events, cfg)
+}
+
+/// [`run_pipeline_with_world`] fed by a lazy [`CisFeed`] instead of a
+/// pre-drawn event vector: the multiplexer pulls each CIS delivery on
+/// demand, so a serve run holds `O(m)` state however long the horizon.
+pub fn run_pipeline_streamed(
+    pages: &[PageParams],
+    scheduler: &CrawlerBuilder,
+    feed: CisFeed,
+    world_events: &[(f64, WorldMsg)], // sorted by time
+    cfg: &PipelineConfig,
+) -> crate::Result<PipelineReport> {
+    run_pipeline_events(pages, scheduler, feed, world_events, cfg)
+}
+
+/// Shared driver: the multiplexer consumes any time-sorted CIS
+/// iterator (a materialized slice or the lazy feed).
+fn run_pipeline_events<I: Iterator<Item = (f64, usize)>>(
+    pages: &[PageParams],
+    scheduler: &CrawlerBuilder,
+    cis_events: I,
+    world_events: &[(f64, WorldMsg)], // sorted by time
+    cfg: &PipelineConfig,
+) -> crate::Result<PipelineReport> {
     if cfg.shards == 0 {
         return Err(crate::Error::Usage(
             "run_pipeline: at least one shard required".into(),
@@ -284,12 +393,12 @@ pub fn run_pipeline_with_world(
         let total_ticks = (cfg.horizon * cfg.bandwidth).round() as u64;
         let mut tick_idx = 1u64;
         let mut tick_shard = 0usize;
-        let mut ev = 0usize;
+        let mut cis = cis_events.peekable();
         let mut wev = 0usize;
-        while tick_idx <= total_ticks || ev < cis_events.len() || wev < world_events.len() {
+        while tick_idx <= total_ticks || cis.peek().is_some() || wev < world_events.len() {
             let next_tick =
                 if tick_idx <= total_ticks { tick_idx as f64 * tick_dt } else { f64::INFINITY };
-            let next_cis = cis_events.get(ev).map(|e| e.0).unwrap_or(f64::INFINITY);
+            let next_cis = cis.peek().map(|e| e.0).unwrap_or(f64::INFINITY);
             let next_world = world_events.get(wev).map(|e| e.0).unwrap_or(f64::INFINITY);
             if wev < world_events.len() && next_world <= next_cis && next_world <= next_tick {
                 let (t, msg) = world_events[wev];
@@ -329,8 +438,8 @@ pub fn run_pipeline_with_world(
                     }
                 }
                 wev += 1;
-            } else if ev < cis_events.len() && next_cis <= next_tick {
-                let (t, gpage) = cis_events[ev];
+            } else if next_cis.is_finite() && next_cis <= next_tick {
+                let (t, gpage) = cis.next().expect("peeked CIS must exist");
                 if t <= cfg.horizon && gpage < assignment.len() {
                     let s = assignment[gpage];
                     send_backpressured(
@@ -339,7 +448,6 @@ pub fn run_pipeline_with_world(
                         &metrics,
                     );
                 }
-                ev += 1;
             } else {
                 if tick_idx > total_ticks {
                     break;
@@ -493,6 +601,53 @@ mod tests {
         assert_eq!(report.world_applied, 4, "every world event must reach its worker");
         assert_eq!(report.total_crawls, 200, "world routing must not cost ticks");
         assert_eq!(report.crawls_per_shard, vec![100, 100]);
+    }
+
+    #[test]
+    fn cis_feed_is_time_ordered_and_complete() {
+        let ps = pages(24);
+        let horizon = 50.0;
+        let mut rng = Rng::new(7);
+        let feed = CisFeed::new(&ps, horizon, CisDelay::None, &mut rng).unwrap();
+        let events: Vec<(f64, usize)> = feed.collect();
+        assert!(!events.is_empty());
+        assert!(events.windows(2).all(|w| w[0].0 <= w[1].0), "feed must be time-sorted");
+        assert!(events.iter().all(|&(t, p)| (0.0..horizon).contains(&t) && p < ps.len()));
+        // scale sanity: E[cis] = Σ (λΔ + ν) · T
+        let expect: f64 = ps.iter().map(|p| (p.lam * p.delta + p.nu) * horizon).sum();
+        let n = events.len() as f64;
+        assert!(
+            (n - expect).abs() < 5.0 * expect.sqrt().max(1.0),
+            "feed count {n} far from expectation {expect}"
+        );
+        // determinism
+        let mut rng2 = Rng::new(7);
+        let feed2 = CisFeed::new(&ps, horizon, CisDelay::None, &mut rng2).unwrap();
+        let events2: Vec<(f64, usize)> = feed2.collect();
+        assert_eq!(events.len(), events2.len());
+        assert!(events
+            .iter()
+            .zip(&events2)
+            .all(|(a, b)| a.0.to_bits() == b.0.to_bits() && a.1 == b.1));
+    }
+
+    #[test]
+    fn streamed_pipeline_matches_slice_pipeline() {
+        // the same feed, pre-collected into a slice vs pulled lazily,
+        // must drive identical pipeline outcomes
+        let ps = pages(16);
+        let horizon = 30.0;
+        let mut rng = Rng::new(9);
+        let collected: Vec<(f64, usize)> =
+            CisFeed::new(&ps, horizon, CisDelay::None, &mut rng).unwrap().collect();
+        let mut rng2 = Rng::new(9);
+        let feed = CisFeed::new(&ps, horizon, CisDelay::None, &mut rng2).unwrap();
+        let cfg = PipelineConfig { shards: 2, queue_depth: 8, bandwidth: 10.0, horizon };
+        let a = run_pipeline(&ps, &lazy_ncis(), &collected, &cfg).unwrap();
+        let b = run_pipeline_streamed(&ps, &lazy_ncis(), feed, &[], &cfg).unwrap();
+        assert_eq!(a.cis_applied, b.cis_applied);
+        assert_eq!(a.total_crawls, b.total_crawls);
+        assert_eq!(a.crawls_per_shard, b.crawls_per_shard);
     }
 
     #[test]

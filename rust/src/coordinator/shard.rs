@@ -270,7 +270,8 @@ pub fn run_sharded(
                 }
                 let mut rng = Rng::new(seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
                 let traces = generate_traces(&pages_s, horizon, CisDelay::None, &mut rng);
-                let cfg = SimConfig::new(shard_r, horizon);
+                let cfg = SimConfig::new(shard_r, horizon)
+                    .expect("per-shard bandwidth R/N must be positive and finite");
                 let mut sched = crate::coordinator::builder::CrawlerBuilder::new()
                     .policy(policy)
                     .strategy(crate::coordinator::builder::Strategy::Lazy)
@@ -374,7 +375,7 @@ mod tests {
         assert_eq!(sched.shards(), 4);
         let mut rng = Rng::new(4);
         let traces = generate_traces(&pages, 50.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(20.0, 50.0);
+        let cfg = SimConfig::new(20.0, 50.0).unwrap();
         let res = simulate(&traces, &cfg, &mut sched);
         let total: u64 = res.crawl_counts.iter().map(|&c| c as u64).sum();
         assert_eq!(total, res.ticks, "every tick must crawl");
@@ -393,7 +394,7 @@ mod tests {
     fn sharded_scheduler_accuracy_close_to_unsharded_lazy() {
         let pages = test_pages(100, 5);
         let horizon = 120.0;
-        let cfg = SimConfig::new(10.0, horizon);
+        let cfg = SimConfig::new(10.0, horizon).unwrap();
         let mut rng = Rng::new(6);
         let traces = generate_traces(&pages, horizon, CisDelay::None, &mut rng);
         let mut lazy = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &pages);
@@ -439,7 +440,7 @@ mod tests {
     #[test]
     fn reuse_after_dynamic_run_matches_fresh() {
         let pages = test_pages(30, 11);
-        let cfg = SimConfig::new(5.0, 30.0);
+        let cfg = SimConfig::new(5.0, 30.0).unwrap();
         let mut reused =
             ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 3, ValueBackend::Native);
         reused.on_start(pages.len());
@@ -467,7 +468,7 @@ mod tests {
             ShardedScheduler::new(PolicyKind::GreedyNcis, &pages, 8, ValueBackend::Native);
         let mut rng = Rng::new(8);
         let traces = generate_traces(&pages, 20.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(2.0, 20.0);
+        let cfg = SimConfig::new(2.0, 20.0).unwrap();
         let res = simulate(&traces, &cfg, &mut sched);
         let total: u64 = res.crawl_counts.iter().map(|&c| c as u64).sum();
         assert_eq!(total, res.ticks * 3 / 8, "populated shards keep 3/8 of ticks");

@@ -44,7 +44,7 @@ pub fn generate_observations(
         }
     }
     cis.extend(rngkit::poisson_process(rng, page.nu, horizon));
-    cis.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    cis.sort_unstable_by(f64::total_cmp);
     let period = 1.0 / crawl_rate;
     let mut out = Vec::new();
     let mut t_prev = 0.0;

@@ -21,7 +21,10 @@ use crate::rngkit::{self, Rng};
 use crate::sched::{CrawlScheduler, IdleScheduler};
 use crate::sim::engine::SimConfig;
 use crate::sim::metrics::RepAccumulator;
-use crate::sim::{generate_traces, simulate_with, CisDelay, SimWorkspace};
+use crate::sim::{
+    generate_traces, simulate_streamed_with, simulate_with, CisDelay, SimWorkspace,
+    StreamedSource, TraceMode,
+};
 use crate::solver;
 
 pub use crate::policy::PolicyUnderTest;
@@ -47,6 +50,12 @@ pub struct ExperimentSpec {
     pub delay: CisDelay,
     /// Appendix-C discard window.
     pub discard_window: Option<f64>,
+    /// How per-repetition event streams are produced. Default
+    /// [`TraceMode::Streamed`]: cell workers sample events lazily in
+    /// `O(m)` memory; [`TraceMode::Materialized`] keeps the pre-built
+    /// traces of the oracle path (a different — seed-paired at the
+    /// master level, but distinct — realization of the same process).
+    pub trace_mode: TraceMode,
 }
 
 impl ExperimentSpec {
@@ -62,7 +71,15 @@ impl ExperimentSpec {
             seed: 0x5EED,
             delay: CisDelay::None,
             discard_window: None,
+            trace_mode: TraceMode::default(),
         }
+    }
+
+    /// Override how event streams are produced (cells default to the
+    /// streamed, `O(m)`-memory path).
+    pub fn with_trace_mode(mut self, mode: TraceMode) -> Self {
+        self.trace_mode = mode;
+        self
     }
 
     /// Enable §6.5-style partially-observable CIS (λ ~ Beta(.25,.25)).
@@ -149,10 +166,13 @@ pub fn default_rep_threads() -> usize {
 }
 
 /// One repetition of a cell: deterministic per-rep seed, streaming
-/// engine over the worker's reusable workspace. The worker's scheduler
-/// is reused across repetitions — `simulate_with` fires `on_start`,
-/// which fully resets it (reuse == fresh is parity-tested), so a cell
-/// pays scheduler construction once per worker instead of once per rep.
+/// engine over the worker's reusable workspace. `spec.trace_mode`
+/// picks the event path — streamed (default: lazy per-page sources,
+/// `O(m)` memory) or materialized (pre-built traces through the replay
+/// adapter). The worker's scheduler is reused across repetitions — the
+/// engine fires `on_start`, which fully resets it (reuse == fresh is
+/// parity-tested), so a cell pays scheduler construction once per
+/// worker instead of once per rep.
 fn run_rep(
     spec: &ExperimentSpec,
     inst: &Instance,
@@ -161,10 +181,24 @@ fn run_rep(
     sched: &mut dyn CrawlScheduler,
 ) -> (f64, Vec<f64>) {
     let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
-    let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
-    let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon);
+    let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon)
+        .expect("experiment spec bandwidth must be positive and finite");
     cfg.cis_discard_window = spec.discard_window;
-    let res = simulate_with(ws, &traces, &cfg, sched);
+    // both trace modes must reject a bad delay the same way (the
+    // streamed constructor validates internally; the materialized
+    // generator assumes validity)
+    spec.delay.validate().expect("experiment spec delay must be valid");
+    let res = match spec.trace_mode {
+        TraceMode::Materialized => {
+            let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
+            simulate_with(ws, &traces, &cfg, sched)
+        }
+        TraceMode::Streamed => {
+            let source = StreamedSource::new(&inst.pages, spec.horizon, spec.delay, &mut trng)
+                .expect("experiment spec delay must be valid");
+            simulate_streamed_with(ws, source, &cfg, sched)
+        }
+    };
     (res.accuracy, res.empirical_rates(spec.horizon))
 }
 

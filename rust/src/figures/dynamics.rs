@@ -58,8 +58,8 @@ pub fn fig09(_reps: usize) -> Result<()> {
     let horizon = 400.0;
     let dynamic =
         BandwidthSchedule::new(vec![(0.0, 100.0), (133.0, 150.0), (266.0, 100.0)])?;
-    let const100 = BandwidthSchedule::constant(100.0);
-    let const150 = BandwidthSchedule::constant(150.0);
+    let const100 = BandwidthSchedule::constant(100.0)?;
+    let const150 = BandwidthSchedule::constant(150.0)?;
     let tl_dyn = timeline(&inst.pages, dynamic, horizon, 77);
     let tl_100 = timeline(&inst.pages, const100, horizon, 77);
     let tl_150 = timeline(&inst.pages, const150, horizon, 77);

@@ -69,7 +69,7 @@ pub fn fig_scenario(reps: usize) -> Result<()> {
     );
     let static_world = Scenario::new(inst.pages.clone(), 0x5CE7);
 
-    let mut cfg = SimConfig::new(spec.bandwidth, HORIZON);
+    let mut cfg = SimConfig::new(spec.bandwidth, HORIZON)?;
     cfg.timeline_window = Some(1000);
     let grid: Vec<f64> = (1..=HORIZON as usize).map(|k| k as f64).collect();
 

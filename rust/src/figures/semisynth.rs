@@ -60,7 +60,8 @@ fn run_policy(
     kind: PolicyKind,
     spec: &SemiSynthSpec,
 ) -> (f64, f64) {
-    let cfg = SimConfig::new(spec.budget, spec.steps);
+    let cfg = SimConfig::new(spec.budget, spec.steps)
+        .expect("semi-synth budget must be a positive finite crawl rate");
     let mut acc = RepAccumulator::new(true_inst.pages.len());
     let mut ws = SimWorkspace::new();
     // one scheduler reused across reps: on_start resets it (the

@@ -1,18 +1,26 @@
 //! Distribution samplers used across the simulator and dataset generator.
+//!
+//! Everything is generic over [`RandomSource`] so the same sampler
+//! code drives the crate-wide [`Rng`] and the compact `SplitMix64`
+//! substreams of the lazy event sources; with a concrete [`Rng`] the
+//! draws are bit-identical to the pre-trait implementations.
 
+use super::RandomSource;
+
+#[cfg(test)]
 use super::Rng;
 
 /// Exponential with rate `lambda` (mean `1/lambda`), via inverse CDF.
 /// Inter-arrival times of the paper's Poisson processes.
 #[inline]
-pub fn exponential(rng: &mut Rng, lambda: f64) -> f64 {
+pub fn exponential<R: RandomSource>(rng: &mut R, lambda: f64) -> f64 {
     debug_assert!(lambda > 0.0);
     -rng.f64_open().ln() / lambda
 }
 
 /// Standard normal via Box–Muller (one value; we waste the twin for
 /// statelessness — this is nowhere near a hot path).
-pub fn normal(rng: &mut Rng, mean: f64, std: f64) -> f64 {
+pub fn normal<R: RandomSource>(rng: &mut R, mean: f64, std: f64) -> f64 {
     let u1 = rng.f64_open();
     let u2 = rng.f64();
     let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
@@ -24,7 +32,7 @@ pub fn normal(rng: &mut Rng, mean: f64, std: f64) -> f64 {
 /// Knuth multiplication below 30, normal approximation with continuity
 /// correction above (used only for large-mean delay models / counts, where
 /// the approximation error is irrelevant to the experiments).
-pub fn poisson(rng: &mut Rng, lambda: f64) -> u64 {
+pub fn poisson<R: RandomSource>(rng: &mut R, lambda: f64) -> u64 {
     debug_assert!(lambda >= 0.0);
     if lambda == 0.0 {
         return 0;
@@ -47,7 +55,7 @@ pub fn poisson(rng: &mut Rng, lambda: f64) -> u64 {
 }
 
 /// Gamma(shape `a`, scale 1) via Marsaglia–Tsang, with the `a < 1` boost.
-pub fn gamma(rng: &mut Rng, a: f64) -> f64 {
+pub fn gamma<R: RandomSource>(rng: &mut R, a: f64) -> f64 {
     debug_assert!(a > 0.0);
     if a < 1.0 {
         // boost: Gamma(a) = Gamma(a+1) * U^{1/a}
@@ -75,7 +83,7 @@ pub fn gamma(rng: &mut Rng, a: f64) -> f64 {
 
 /// Beta(a, b) via two gammas. `Beta(0.25, 0.25)` is the paper's bimodal
 /// observability prior (§6.5).
-pub fn beta(rng: &mut Rng, a: f64, b: f64) -> f64 {
+pub fn beta<R: RandomSource>(rng: &mut R, a: f64, b: f64) -> f64 {
     let x = gamma(rng, a);
     let y = gamma(rng, b);
     if x + y == 0.0 {
@@ -86,18 +94,18 @@ pub fn beta(rng: &mut Rng, a: f64, b: f64) -> f64 {
 
 /// Pareto (Lomax-style, support `[x_min, ∞)`) — heavy-tailed importance
 /// weights standing in for PageRank-like distributions.
-pub fn pareto(rng: &mut Rng, x_min: f64, alpha: f64) -> f64 {
+pub fn pareto<R: RandomSource>(rng: &mut R, x_min: f64, alpha: f64) -> f64 {
     debug_assert!(x_min > 0.0 && alpha > 0.0);
     x_min / rng.f64_open().powf(1.0 / alpha)
 }
 
 /// Log-normal.
-pub fn lognormal(rng: &mut Rng, mu: f64, sigma: f64) -> f64 {
+pub fn lognormal<R: RandomSource>(rng: &mut R, mu: f64, sigma: f64) -> f64 {
     normal(rng, mu, sigma).exp()
 }
 
 /// Event times of a Poisson process with rate `lambda` on `[0, horizon)`.
-pub fn poisson_process(rng: &mut Rng, lambda: f64, horizon: f64) -> Vec<f64> {
+pub fn poisson_process<R: RandomSource>(rng: &mut R, lambda: f64, horizon: f64) -> Vec<f64> {
     let mut times = Vec::new();
     if lambda <= 0.0 {
         return times;

@@ -13,4 +13,4 @@ mod distributions;
 mod xoshiro;
 
 pub use distributions::*;
-pub use xoshiro::{Rng, SplitMix64};
+pub use xoshiro::{RandomSource, Rng, SplitMix64};

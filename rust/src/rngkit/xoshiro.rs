@@ -1,6 +1,39 @@
 //! xoshiro256++ PRNG seeded via SplitMix64 (Blackman & Vigna).
 
-/// SplitMix64: used for seeding and for cheap stateless hashing.
+/// Uniform random bits, abstracted over the generator.
+///
+/// The distribution samplers in [`crate::rngkit`] are generic over this
+/// trait so the same code drives both the crate-wide [`Rng`]
+/// (xoshiro256++, 32 bytes of state) and the compact [`SplitMix64`]
+/// (8 bytes) the lazy event sources keep three-per-page. The provided
+/// conversions are byte-for-byte the formulas of [`Rng`]'s inherent
+/// methods, so a generic sampler called with a concrete [`Rng`] draws
+/// exactly what it drew before the trait existed.
+pub trait RandomSource {
+    /// Next 64 uniform bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa).
+    #[inline]
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `(0, 1]` — safe as an argument to `ln`.
+    #[inline]
+    fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Random boolean with probability `p`.
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// SplitMix64: used for seeding, cheap stateless hashing, and as the
+/// compact per-substream generator of the lazy event sources.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
     state: u64,
@@ -19,6 +52,20 @@ impl SplitMix64 {
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
         z ^ (z >> 31)
+    }
+}
+
+impl RandomSource for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        SplitMix64::next_u64(self)
+    }
+}
+
+impl RandomSource for Rng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        Rng::next_u64(self)
     }
 }
 
@@ -54,6 +101,16 @@ impl Rng {
             *v = sm.next_u64();
         }
         Rng { s }
+    }
+
+    /// Derive an independent *compact* child stream (same keying as
+    /// [`Self::split`], but the child is a [`SplitMix64`] with 8 bytes
+    /// of state instead of 32). The lazy event sources keep three of
+    /// these per page, so substream state is 24 bytes per page instead
+    /// of 96.
+    pub fn split64(&mut self, tag: u64) -> SplitMix64 {
+        let a = self.next_u64();
+        SplitMix64::new(a ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
     /// Next 64-bit output.
@@ -187,6 +244,47 @@ mod tests {
         let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
         let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
         assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn split64_streams_differ_and_are_deterministic() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let mut a = r1.split64(0);
+        let mut b = r1.split64(1);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb, "sub-keys must decorrelate");
+        let mut a2 = r2.split64(0);
+        let va2: Vec<u64> = (0..8).map(|_| a2.next_u64()).collect();
+        assert_eq!(va, va2, "same parent state + tag must replay");
+    }
+
+    #[test]
+    fn trait_f64_matches_inherent_f64() {
+        // the generic samplers rely on RandomSource::f64 being
+        // bit-identical to Rng::f64
+        let mut a = Rng::new(33);
+        let mut b = Rng::new(33);
+        for _ in 0..64 {
+            let inherent = a.f64();
+            let via_trait = RandomSource::f64(&mut b);
+            assert_eq!(inherent.to_bits(), via_trait.to_bits());
+        }
+    }
+
+    #[test]
+    fn splitmix_f64_is_uniform_ish() {
+        let mut sm = SplitMix64::new(77);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let x = RandomSource::f64(&mut sm);
+            assert!((0.0..1.0).contains(&x));
+            s += x;
+        }
+        let mean = s / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
     }
 
     #[test]

@@ -42,7 +42,8 @@ use crate::scenario::{PageSet, Scenario, TimedEvent, WorldEvent};
 use crate::sched::CrawlScheduler;
 use crate::sim::engine::{BandwidthSchedule, SimConfig, SimResult};
 use crate::sim::engine::{KIND_CHANGE, KIND_CIS, KIND_REQUEST};
-use crate::sim::events::{generate_page_trace_from, EventTraces, PageTrace};
+use crate::sim::events::{generate_page_trace_from, CisDelay, EventTraces, PageTrace};
+use crate::sim::source::PageEventSource;
 use crate::util::OrdF64;
 
 /// Heap entry: `(time, kind, page, stream version)`. The version is a
@@ -65,7 +66,13 @@ pub struct ScenarioStats {
     pub quality_shifts: u64,
     /// Outage windows opened.
     pub outages: u64,
-    /// CIS deliveries suppressed by an outage window.
+    /// CIS deliveries suppressed by an outage window. Counting differs
+    /// slightly by mode: the materialized engine counts only
+    /// deliveries that passed the Appendix-C discard window (its
+    /// suppression check runs second); the streamed engine filters at
+    /// the source boundary, before the discard window can see the
+    /// delivery, so an in-outage CIS that would also have been
+    /// discarded counts here.
     pub cis_suppressed: u64,
     /// Events that named a dead/out-of-range page (no-ops).
     pub skipped_events: u64,
@@ -83,8 +90,12 @@ pub struct ScenarioStats {
 /// windows. `reset` clears without releasing capacity.
 #[derive(Debug, Default)]
 pub struct ScenarioWorkspace {
-    /// Mutable copy of the per-page event streams (grows on births).
+    /// Mutable copy of the per-page event streams (grows on births;
+    /// materialized mode only).
     pages: Vec<PageTrace>,
+    /// Per-page lazy sources (streamed mode only; births replace, a
+    /// retirement kills the slot's source in place).
+    lazy: Vec<PageEventSource>,
     live: Vec<bool>,
     generation: Vec<u32>,
     stream_ver: Vec<u32>,
@@ -113,10 +124,8 @@ impl ScenarioWorkspace {
         Self::default()
     }
 
-    fn reset(&mut self, traces: &[PageTrace]) {
-        let m = traces.len();
-        self.pages.clear();
-        self.pages.extend(traces.iter().cloned());
+    /// Common slot-state reset for `m` initial pages (both modes).
+    fn reset_slots(&mut self, m: usize) {
         self.live.clear();
         self.live.resize(m, true);
         self.generation.clear();
@@ -140,9 +149,32 @@ impl ScenarioWorkspace {
         self.stats = ScenarioStats::default();
     }
 
-    /// Append one empty slot; returns its index.
-    fn grow_one(&mut self) -> usize {
-        self.pages.push(PageTrace::default());
+    /// Reset for a materialized run over `traces`.
+    fn reset(&mut self, traces: &[PageTrace]) {
+        self.pages.clear();
+        self.pages.extend(traces.iter().cloned());
+        self.lazy.clear();
+        self.reset_slots(traces.len());
+    }
+
+    /// Reset for a streamed run: per-page lazy sources over the
+    /// scenario's initial population, keyed exactly like
+    /// `generate_traces` (`master.split(i)`).
+    fn reset_streamed(&mut self, scenario: &Scenario, horizon: f64, trace_seed: u64) {
+        self.pages.clear();
+        self.lazy.clear();
+        let initial = scenario.initial_pages();
+        let mut master = Rng::new(trace_seed);
+        for (i, p) in initial.iter().enumerate() {
+            let mut prng = master.split(i as u64);
+            self.lazy.push(PageEventSource::new(p, 0.0, horizon, scenario.delay(), &mut prng));
+        }
+        self.reset_slots(initial.len());
+    }
+
+    /// Common slot-column growth (both modes); the caller appends to
+    /// `pages`/`lazy` itself. Returns the new slot index.
+    fn grow_slot_columns(&mut self) -> usize {
         self.live.push(false);
         self.generation.push(0);
         self.stream_ver.push(0);
@@ -151,12 +183,18 @@ impl ScenarioWorkspace {
         self.changed.push(false);
         self.crawl_counts.push(0);
         self.cursors.push([0, 0, 0]);
-        self.pages.len() - 1
+        self.live.len() - 1
+    }
+
+    /// Append one empty slot (materialized mode); returns its index.
+    fn grow_one(&mut self) -> usize {
+        self.pages.push(PageTrace::default());
+        self.grow_slot_columns()
     }
 
     /// Current slot count (live + retired).
     pub fn population(&self) -> usize {
-        self.pages.len()
+        self.live.len()
     }
 
     /// Is slot `page` currently live?
@@ -354,7 +392,7 @@ fn apply_world(
                     cis.push(d);
                 }
             }
-            cis.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            cis.sort_unstable_by(f64::total_cmp);
             ws.pages[i].cis.truncate(ws.cursors[i][1]);
             ws.pages[i].cis.extend(cis);
             ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
@@ -604,6 +642,358 @@ pub fn simulate_scenario_with(
     }
 }
 
+/// Streamed-mode next event of slot `i`, with **source-boundary outage
+/// filtering**: deliveries already known to fall inside an outage
+/// window are consumed and counted here, before they ever enter the
+/// merge heap. (Outages declared *after* an event entered the frontier
+/// are caught by the pop-time check in the main loop — the filter here
+/// is the fast path, the pop-time check is the correctness backstop.)
+#[inline]
+fn next_streamed(
+    ws: &mut ScenarioWorkspace,
+    i: usize,
+    horizon: f64,
+    delay: CisDelay,
+) -> Option<(f64, u8)> {
+    loop {
+        match ws.lazy[i].next(horizon, delay) {
+            Some((t, k)) if k == KIND_CIS && t < ws.cis_off_until[i] => {
+                ws.lazy[i].consume(KIND_CIS, horizon, delay);
+                ws.stats.cis_suppressed += 1;
+            }
+            other => return other,
+        }
+    }
+}
+
+/// Apply one world event in streamed mode: births and parameter drift
+/// **re-seed a [`PageEventSource`]** (from the same deterministic
+/// `event_rng(seed, idx)` as the materialized path) instead of
+/// regenerating a trace; quality shifts re-seed only the CIS substream
+/// against the untouched change/request realization; retirement kills
+/// the slot's source in place.
+fn apply_world_streamed(
+    ws: &mut ScenarioWorkspace,
+    scheduler: &mut dyn CrawlScheduler,
+    ev: &TimedEvent,
+    idx: usize,
+    scenario: &Scenario,
+    horizon: f64,
+) {
+    let tw = ev.t;
+    let delay = scenario.delay();
+    match &ev.event {
+        WorldEvent::PageBorn { params } => {
+            let mut rng = event_rng(scenario.seed(), idx);
+            let source = PageEventSource::new(params, tw, horizon, delay, &mut rng);
+            let slot = match ws.free.pop() {
+                Some(s) => {
+                    ws.generation[s] = ws.generation[s].wrapping_add(1);
+                    ws.lazy[s] = source;
+                    s
+                }
+                None => {
+                    ws.lazy.push(source);
+                    ws.grow_slot_columns()
+                }
+            };
+            ws.live[slot] = true;
+            ws.stream_ver[slot] = ws.stream_ver[slot].wrapping_add(1);
+            ws.changed[slot] = false;
+            ws.last_crawl[slot] = tw;
+            // crawl_counts describe the slot's CURRENT occupant
+            ws.crawl_counts[slot] = 0;
+            // a global blackout covers newcomers; host-level outages
+            // (explicit slot lists) cannot name the unborn
+            ws.cis_off_until[slot] = ws.global_off_until;
+            ws.stats.births += 1;
+            scheduler.on_page_added(slot, params, tw);
+            if let Some((t, k)) = next_streamed(ws, slot, horizon, delay) {
+                ws.heap.push(Reverse((OrdF64(t), k, slot as u32, ws.stream_ver[slot])));
+            }
+        }
+        WorldEvent::PageRetired { page } => {
+            let i = *page;
+            if i >= ws.live.len() || !ws.live[i] {
+                ws.stats.skipped_events += 1;
+                return;
+            }
+            ws.live[i] = false;
+            ws.generation[i] = ws.generation[i].wrapping_add(1);
+            // the pending heap entry dies with the version; the source
+            // can never emit again
+            ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
+            ws.lazy[i].kill();
+            ws.free.push(i);
+            ws.stats.retirements += 1;
+            scheduler.on_page_removed(i, tw);
+        }
+        WorldEvent::ParamsChanged { page, params } => {
+            let i = *page;
+            if i >= ws.live.len() || !ws.live[i] {
+                ws.stats.skipped_events += 1;
+                return;
+            }
+            // the applied past stays applied; the future is a fresh
+            // source under the new parameters
+            let mut rng = event_rng(scenario.seed(), idx);
+            ws.lazy[i] = PageEventSource::new(params, tw, horizon, delay, &mut rng);
+            ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
+            ws.stats.param_shifts += 1;
+            scheduler.on_params_changed(i, params, tw);
+            if let Some((t, k)) = next_streamed(ws, i, horizon, delay) {
+                ws.heap.push(Reverse((OrdF64(t), k, i as u32, ws.stream_ver[i])));
+            }
+        }
+        WorldEvent::CisQualityShift { page, lam, nu } => {
+            let i = *page;
+            if i >= ws.live.len() || !ws.live[i] {
+                ws.stats.skipped_events += 1;
+                return;
+            }
+            // the change/request substreams and their next arrivals
+            // are preserved (the future change realization is
+            // untouched); in-flight deliveries of the old feed drop.
+            // One boundary nuance vs the materialized path: the
+            // already-rolled signal of the next not-yet-arrived change
+            // drops with the buffer instead of being re-coined.
+            let mut rng = event_rng(scenario.seed(), idx);
+            ws.lazy[i].shift_cis_quality(*lam, *nu, tw, horizon, &mut rng);
+            ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
+            ws.stats.quality_shifts += 1;
+            // the scheduler is NOT notified: its beliefs go stale
+            if let Some((t, k)) = next_streamed(ws, i, horizon, delay) {
+                ws.heap.push(Reverse((OrdF64(t), k, i as u32, ws.stream_ver[i])));
+            }
+        }
+        WorldEvent::CisOutage { pages, duration } => {
+            let until = tw + duration;
+            match pages {
+                PageSet::All => {
+                    ws.global_off_until = ws.global_off_until.max(until);
+                    for i in 0..ws.live.len() {
+                        if ws.live[i] {
+                            ws.cis_off_until[i] = ws.cis_off_until[i].max(until);
+                        }
+                    }
+                }
+                PageSet::Pages(list) => {
+                    for &i in list {
+                        if i < ws.live.len() && ws.live[i] {
+                            ws.cis_off_until[i] = ws.cis_off_until[i].max(until);
+                        } else {
+                            ws.stats.skipped_events += 1;
+                        }
+                    }
+                }
+            }
+            ws.stats.outages += 1;
+        }
+        // folded into the effective bandwidth schedule before the run
+        WorldEvent::BandwidthChange { .. } => {}
+    }
+}
+
+/// [`simulate_scenario_streamed_with`] with a throwaway workspace.
+pub fn simulate_scenario_streamed(
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    trace_seed: u64,
+    scheduler: &mut dyn CrawlScheduler,
+) -> crate::Result<SimResult> {
+    let mut ws = ScenarioWorkspace::new();
+    simulate_scenario_streamed_with(&mut ws, cfg, scenario, trace_seed, scheduler)
+}
+
+/// Run one repetition under a dynamic world with **lazy event
+/// sourcing**: the initial population's streams are per-page
+/// [`PageEventSource`]s built from `trace_seed` (same per-page master
+/// keying as the materialized entry point's `generate_traces`), and
+/// world events re-seed sources instead of regenerating traces — the
+/// whole run is `O(population)` memory. The world-event interleaving,
+/// slot recycling, stream versioning and crawl accounting are the same
+/// as [`simulate_scenario_with`]; the realization differs (lazy
+/// substreams), so results are distribution-equal, not bit-equal, to
+/// the materialized path.
+pub fn simulate_scenario_streamed_with(
+    ws: &mut ScenarioWorkspace,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    trace_seed: u64,
+    scheduler: &mut dyn CrawlScheduler,
+) -> crate::Result<SimResult> {
+    scenario.delay().validate()?;
+    let delay = scenario.delay();
+    let m0 = scenario.initial_pages().len();
+    ws.reset_streamed(scenario, cfg.horizon, trace_seed);
+    scheduler.on_start(m0);
+    for i in 0..m0 {
+        if let Some((t, k)) = next_streamed(ws, i, cfg.horizon, delay) {
+            ws.heap.push(Reverse((OrdF64(t), k, i as u32, ws.stream_ver[i])));
+        }
+    }
+
+    let world = scenario.events();
+    let mut wc = 0usize; // world-event cursor
+
+    let mut fresh_hits = 0u64;
+    let mut requests = 0u64;
+    let mut ticks = 0u64;
+    let mut timeline = Vec::new();
+    let window = cfg.timeline_window.unwrap_or(0);
+    let mut ring_pos = 0usize;
+    let mut ring_fresh = 0usize;
+
+    let effective = effective_bandwidth(&cfg.bandwidth, world);
+    let segs = effective.segments();
+    let mut seg = 0usize; // monotone segment cursor
+    let mut t = 0.0f64;
+    loop {
+        while seg + 1 < segs.len() && segs[seg + 1].0 <= t {
+            seg += 1;
+        }
+        let r = segs[seg].1;
+        let next_tick = t + 1.0 / r;
+        if next_tick > cfg.horizon {
+            break;
+        }
+        // world + trace events up to (and including) the tick time, in
+        // time order; world events precede trace events at equal times
+        loop {
+            let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
+            let te = match ws.heap.peek() {
+                Some(&Reverse((OrdF64(x), _, _, _))) => x,
+                None => f64::INFINITY,
+            };
+            if tw <= next_tick && tw <= te {
+                apply_world_streamed(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+                wc += 1;
+                continue;
+            }
+            if te > next_tick {
+                break;
+            }
+            let Reverse((OrdF64(et), kind, page, ver)) = ws.heap.pop().unwrap();
+            let i = page as usize;
+            if ver != ws.stream_ver[i] {
+                continue; // stale entry: the page retired or re-seeded
+            }
+            match kind {
+                KIND_CHANGE => {
+                    ws.changed[i] = true;
+                }
+                KIND_REQUEST => {
+                    requests += 1;
+                    let fresh = !ws.changed[i];
+                    if fresh {
+                        fresh_hits += 1;
+                    }
+                    if window > 0 {
+                        if ws.ring.len() < window {
+                            ws.ring.push(fresh);
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                        } else {
+                            if ws.ring[ring_pos] {
+                                ring_fresh -= 1;
+                            }
+                            ws.ring[ring_pos] = fresh;
+                            if fresh {
+                                ring_fresh += 1;
+                            }
+                            ring_pos = (ring_pos + 1) % window;
+                        }
+                    }
+                }
+                _ => {
+                    // KIND_CIS — pop-time backstop for outages declared
+                    // after this delivery entered the frontier
+                    if et < ws.cis_off_until[i] {
+                        ws.stats.cis_suppressed += 1;
+                    } else {
+                        let keep = match cfg.cis_discard_window {
+                            Some(w) => et - ws.last_crawl[i] >= w,
+                            None => true,
+                        };
+                        if keep {
+                            scheduler.on_cis(i, et);
+                        }
+                    }
+                }
+            }
+            ws.lazy[i].consume(kind, cfg.horizon, delay);
+            if let Some((nt, nk)) = next_streamed(ws, i, cfg.horizon, delay) {
+                ws.heap.push(Reverse((OrdF64(nt), nk, page, ver)));
+            }
+        }
+        // crawl at the tick
+        t = next_tick;
+        ticks += 1;
+        if let Some(i) = scheduler.select(t) {
+            debug_assert!(i < ws.live.len());
+            if ws.live[i] {
+                ws.changed[i] = false;
+                ws.last_crawl[i] = t;
+                ws.crawl_counts[i] += 1;
+                scheduler.on_crawl(i, t);
+            } else {
+                ws.stats.stale_picks += 1;
+            }
+        }
+        if window > 0 && !ws.ring.is_empty() {
+            timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
+        }
+    }
+    // drain remaining events after the final tick: the world keeps
+    // evolving UP TO the horizon; events scripted beyond it never
+    // happened in this run
+    loop {
+        let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
+        let te = match ws.heap.peek() {
+            Some(&Reverse((OrdF64(x), _, _, _))) => x,
+            None => f64::INFINITY,
+        };
+        if wc < world.len() && tw <= te {
+            if tw <= cfg.horizon {
+                apply_world_streamed(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+            }
+            wc += 1;
+            continue;
+        }
+        let Some(Reverse((OrdF64(_), kind, page, ver))) = ws.heap.pop() else { break };
+        let i = page as usize;
+        if ver != ws.stream_ver[i] {
+            continue;
+        }
+        match kind {
+            KIND_CHANGE => {
+                ws.changed[i] = true;
+            }
+            KIND_REQUEST => {
+                requests += 1;
+                if !ws.changed[i] {
+                    fresh_hits += 1;
+                }
+            }
+            _ => {}
+        }
+        ws.lazy[i].consume(kind, cfg.horizon, delay);
+        if let Some((nt, nk)) = next_streamed(ws, i, cfg.horizon, delay) {
+            ws.heap.push(Reverse((OrdF64(nt), nk, page, ver)));
+        }
+    }
+
+    Ok(SimResult {
+        accuracy: if requests > 0 { fresh_hits as f64 / requests as f64 } else { f64::NAN },
+        requests,
+        fresh_hits,
+        crawl_counts: ws.crawl_counts.clone(),
+        ticks,
+        timeline,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -681,7 +1071,7 @@ mod tests {
         let ps = pages(25, 1);
         let mut rng = Rng::new(2);
         let traces = generate_traces(&ps, 40.0, CisDelay::None, &mut rng);
-        let mut cfg = SimConfig::new(4.0, 40.0);
+        let mut cfg = SimConfig::new(4.0, 40.0).unwrap();
         cfg.timeline_window = Some(16);
         cfg.cis_discard_window = Some(0.15);
         let sc = Scenario::new(ps, 9);
@@ -703,7 +1093,7 @@ mod tests {
             .at(10.0, WorldEvent::PageBorn { params: newcomer });
         let mut rng = Rng::new(4);
         let traces = generate_traces(&ps, 20.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(2.0, 20.0);
+        let cfg = SimConfig::new(2.0, 20.0).unwrap();
         let mut ws = ScenarioWorkspace::new();
         let res = simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut StateScore::new());
         assert_eq!(ws.stats.births, 1);
@@ -741,7 +1131,7 @@ mod tests {
                 Some(0)
             }
         }
-        let cfg = SimConfig::new(1.0, 20.0);
+        let cfg = SimConfig::new(1.0, 20.0).unwrap();
         let mut ws = ScenarioWorkspace::new();
         let mut s = CountCis(0);
         simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut s);
@@ -769,7 +1159,7 @@ mod tests {
         }
         let mut rng = Rng::new(32);
         let traces = generate_traces(&ps, 30.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(1.0, 30.0);
+        let cfg = SimConfig::new(1.0, 30.0).unwrap();
         let mut ws = ScenarioWorkspace::new();
         let mut s = CisLog(Vec::new());
         simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut s);
@@ -793,7 +1183,7 @@ mod tests {
             .at(10.0, WorldEvent::ParamsChanged { page: 0, params: frozen });
         let mut rng = Rng::new(6);
         let traces = generate_traces(&ps, 40.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(1.0, 40.0);
+        let cfg = SimConfig::new(1.0, 40.0).unwrap();
         let mut ws = ScenarioWorkspace::new();
         let res = simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut StateScore::new());
         assert_eq!(ws.stats.param_shifts, 1);
@@ -809,7 +1199,7 @@ mod tests {
             .at(5.0, WorldEvent::BandwidthChange { rate: 10.0 });
         let mut rng = Rng::new(9);
         let traces = generate_traces(&ps, 10.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(1.0, 10.0);
+        let cfg = SimConfig::new(1.0, 10.0).unwrap();
         let res = simulate_scenario(&traces, &cfg, &sc, &mut StateScore::new());
         // ~5 ticks at R=1, then ~50 at R=10
         assert!((res.ticks as i64 - 55).abs() <= 2, "{}", res.ticks);
@@ -825,11 +1215,122 @@ mod tests {
             .at(5.0, WorldEvent::CisQualityShift { page: 9, lam: 0.5, nu: 0.1 });
         let mut rng = Rng::new(11);
         let traces = generate_traces(&ps, 10.0, CisDelay::None, &mut rng);
-        let cfg = SimConfig::new(2.0, 10.0);
+        let cfg = SimConfig::new(2.0, 10.0).unwrap();
         let mut ws = ScenarioWorkspace::new();
         simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut StateScore::new());
         assert_eq!(ws.stats.retirements, 1);
         assert_eq!(ws.stats.skipped_events, 3);
+    }
+
+    #[test]
+    fn streamed_scenario_is_deterministic_under_full_churn() {
+        // births + retirements + drift + quality shift + outage, all
+        // through the lazy path: stats must replay bit-identically and
+        // the slot audit must hold
+        let ps = pages(20, 40);
+        let newcomer = PageParams { delta: 0.9, mu: 0.9, lam: 0.5, nu: 0.1 };
+        let sc = Scenario::new(ps.clone(), 41)
+            .at(3.0, WorldEvent::PageRetired { page: 5 })
+            .at(6.0, WorldEvent::PageBorn { params: newcomer })
+            .at(8.0, WorldEvent::ParamsChanged { page: 2, params: newcomer })
+            .at(10.0, WorldEvent::CisQualityShift { page: 3, lam: 0.9, nu: 0.05 })
+            .at(12.0, WorldEvent::CisOutage { pages: PageSet::All, duration: 4.0 })
+            .at(20.0, WorldEvent::PageBorn { params: newcomer });
+        let cfg = SimConfig::new(3.0, 40.0).unwrap();
+        let run = || {
+            let mut ws = ScenarioWorkspace::new();
+            let res = simulate_scenario_streamed_with(
+                &mut ws,
+                &cfg,
+                &sc,
+                77,
+                &mut StateScore::new(),
+            )
+            .unwrap();
+            (res, ws.stats)
+        };
+        let (r1, s1) = run();
+        let (r2, s2) = run();
+        assert_eq!(r1.accuracy.to_bits(), r2.accuracy.to_bits());
+        assert_eq!(r1.requests, r2.requests);
+        assert_eq!(r1.crawl_counts, r2.crawl_counts);
+        assert_eq!(s1, s2, "streamed world stats diverged between replays");
+        assert_eq!(s1.births, 2);
+        assert_eq!(s1.retirements, 1);
+        assert_eq!(s1.param_shifts, 1);
+        assert_eq!(s1.quality_shifts, 1);
+        assert_eq!(s1.outages, 1);
+        assert_eq!(s1.stale_picks, 0);
+        assert_eq!(s1.skipped_events, 0);
+        assert!((0.0..=1.0).contains(&r1.accuracy));
+        // LIFO recycling: the first birth reuses the retired slot 5
+        let mut ws = ScenarioWorkspace::new();
+        let _ =
+            simulate_scenario_streamed_with(&mut ws, &cfg, &sc, 77, &mut StateScore::new())
+                .unwrap();
+        assert_eq!(ws.population(), 21, "second birth must grow the population");
+        assert!(ws.is_live(5));
+        assert_eq!(ws.generation(5), 2);
+    }
+
+    #[test]
+    fn streamed_outage_filters_at_the_source() {
+        // one guaranteed-signal page, outage [5, 10): nothing may be
+        // delivered inside the window, deliveries resume after
+        let ps = vec![PageParams { delta: 1.0, mu: 0.3, lam: 1.0, nu: 0.5 }];
+        let sc = Scenario::new(ps.clone(), 11).at(
+            5.0,
+            WorldEvent::CisOutage { pages: PageSet::All, duration: 5.0 },
+        );
+        struct CisLog(Vec<f64>);
+        impl CrawlScheduler for CisLog {
+            fn on_cis(&mut self, _page: usize, t: f64) {
+                self.0.push(t);
+            }
+            fn select(&mut self, _t: f64) -> Option<usize> {
+                Some(0)
+            }
+        }
+        let cfg = SimConfig::new(1.0, 20.0).unwrap();
+        let mut ws = ScenarioWorkspace::new();
+        let mut s = CisLog(Vec::new());
+        simulate_scenario_streamed_with(&mut ws, &cfg, &sc, 13, &mut s).unwrap();
+        assert!(!s.0.is_empty(), "deliveries outside the window expected");
+        assert!(
+            s.0.iter().all(|&t| !(5.0..10.0).contains(&t)),
+            "CIS leaked through the outage window: {:?}",
+            s.0
+        );
+        assert!(s.0.iter().any(|&t| t >= 10.0), "feed must resume after the outage");
+        assert!(ws.stats.cis_suppressed > 0, "the window must have suppressed something");
+    }
+
+    #[test]
+    fn streamed_quality_shift_preserves_changes_and_requests() {
+        // λ: 0 → 1 at t=10 with ν staying 0: before the shift no CIS
+        // at all, after it (almost) every change signals instantly
+        let ps = vec![PageParams { delta: 1.0, mu: 0.5, lam: 0.0, nu: 0.0 }];
+        let sc = Scenario::new(ps.clone(), 19)
+            .at(10.0, WorldEvent::CisQualityShift { page: 0, lam: 1.0, nu: 0.0 });
+        struct CisLog(Vec<f64>);
+        impl CrawlScheduler for CisLog {
+            fn on_cis(&mut self, _page: usize, t: f64) {
+                self.0.push(t);
+            }
+            fn select(&mut self, _t: f64) -> Option<usize> {
+                None
+            }
+        }
+        let cfg = SimConfig::new(1.0, 60.0).unwrap();
+        let mut ws = ScenarioWorkspace::new();
+        let mut s = CisLog(Vec::new());
+        let res = simulate_scenario_streamed_with(&mut ws, &cfg, &sc, 23, &mut s).unwrap();
+        assert_eq!(ws.stats.quality_shifts, 1);
+        assert!(s.0.iter().all(|&t| t >= 10.0), "λ=0 before the shift: {:?}", s.0);
+        assert!(!s.0.is_empty(), "λ=1 after the shift must deliver signals");
+        // requests kept flowing the whole run (their substream is
+        // untouched by the shift)
+        assert!(res.requests > 0);
     }
 
     #[test]

@@ -42,7 +42,10 @@
 pub mod engine;
 pub mod generators;
 
-pub use engine::{simulate_scenario, simulate_scenario_with, ScenarioStats, ScenarioWorkspace};
+pub use engine::{
+    simulate_scenario, simulate_scenario_streamed, simulate_scenario_streamed_with,
+    simulate_scenario_with, ScenarioStats, ScenarioWorkspace,
+};
 
 use crate::params::PageParams;
 use crate::sim::CisDelay;

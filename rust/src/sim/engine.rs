@@ -10,32 +10,52 @@
 //! per-page state (see [`crate::sched`]), the engine only keeps what
 //! freshness accounting and the discard window need.
 //!
-//! ## Streaming engine
+//! ## Streaming engine and the merge frontier
 //!
-//! The hot path is a *k-way streaming merge* over the already-sorted
-//! per-page traces: each page keeps three cursors (changes / CIS /
-//! requests) and contributes its next event to a small binary min-heap
-//! keyed by `(time, kind, page)`. No merged global event `Vec` is ever
-//! materialized and nothing is sorted per repetition — the old
-//! `O(E log E)` sort with ~3× peak memory becomes an `O(E log m)`
-//! streaming replay with O(m) state. All per-repetition scratch lives in
-//! a [`SimWorkspace`] that callers reset-and-reuse across repetitions
-//! (the parallel cell driver in `figures::common` gives one to each
-//! worker thread).
+//! The hot path is a *k-way streaming merge* over per-page event
+//! sources ([`crate::sim::source::EventSource`]): each page has
+//! exactly one live entry in a small binary min-heap keyed by `(time,
+//! kind, page)`, regenerated only when it is popped (the engine
+//! consumes the event, asks the page's source for its next one and
+//! re-pushes) — the per-event work is one `advance` on the page's
+//! source instead of re-deriving a minimum over three trace cursors.
+//! The workspace additionally keeps a flat SoA **merge frontier**
+//! (per-page pending `(time, kind)`) as debug-mode bookkeeping: debug
+//! builds assert every popped entry against it, pinning the
+//! one-live-entry-per-page invariant; release builds elide the stores
+//! since heap entries carry the same pair. No merged global event
+//! `Vec` is ever materialized and nothing is sorted per repetition.
+//! All per-repetition scratch lives in a [`SimWorkspace`] that callers
+//! reset-and-reuse across repetitions (the parallel cell driver in
+//! `figures::common` gives one to each worker thread).
+//!
+//! Two sources drive the same loop:
+//!
+//! - [`simulate_with`] replays pre-materialized traces through a
+//!   [`crate::sim::source::ReplaySource`] — bit-identical to the
+//!   pre-frontier engine (same per-page emission order, same heap
+//!   total order);
+//! - [`simulate_streamed_with`] runs a
+//!   [`crate::sim::source::StreamedSource`] that samples each page's
+//!   next arrival on demand — `O(m)` memory for the whole repetition,
+//!   however long the horizon.
 //!
 //! [`simulate_reference`] keeps the straightforward merged-sort
 //! implementation: it is the parity oracle for the streaming engine and
-//! the pre-change baseline lane of `benches/perf.rs`. Both engines apply
+//! the pre-change baseline lane of `benches/perf.rs`. All engines apply
 //! simultaneous events in the same total order `(time, kind, page)` with
-//! kinds ordered change < CIS < request, so their outputs are
-//! bit-identical.
+//! kinds ordered change < CIS < request, so replay outputs are
+//! bit-identical across all three.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::error::Error;
+use crate::params::PageParams;
+use crate::rngkit::Rng;
 use crate::sched::CrawlScheduler;
-use crate::sim::events::{EventTraces, PageTrace};
+use crate::sim::events::{CisDelay, EventTraces};
+use crate::sim::source::{EventSource, ReplaySource, StreamedSource};
 use crate::util::OrdF64;
 
 /// A bandwidth schedule: piecewise-constant R over time.
@@ -93,10 +113,11 @@ impl BandwidthSchedule {
         Ok(Self { segments })
     }
 
-    /// Constant bandwidth (`r` must be positive and finite).
-    pub fn constant(r: f64) -> Self {
-        assert!(r > 0.0 && r.is_finite(), "bandwidth must be > 0 and finite, got {r}");
-        Self { segments: vec![(0.0, r)] }
+    /// Constant bandwidth. Errors unless `r` is positive and finite —
+    /// the same validated construction as [`Self::new`] (this used to
+    /// be the sim layer's last panic-on-bad-input constructor).
+    pub fn constant(r: f64) -> crate::Result<Self> {
+        Self::new(vec![(0.0, r)])
     }
 
     /// The validated `(start_time, rate)` segments.
@@ -138,14 +159,15 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
-    /// Constant-rate config with no extras.
-    pub fn new(r: f64, horizon: f64) -> Self {
-        Self {
-            bandwidth: BandwidthSchedule::constant(r),
+    /// Constant-rate config with no extras. Errors when `r` is not a
+    /// valid bandwidth (see [`BandwidthSchedule::constant`]).
+    pub fn new(r: f64, horizon: f64) -> crate::Result<Self> {
+        Ok(Self {
+            bandwidth: BandwidthSchedule::constant(r)?,
             horizon,
             cis_discard_window: None,
             timeline_window: None,
-        }
+        })
     }
 }
 
@@ -176,23 +198,25 @@ impl SimResult {
 /// Event kinds in merge order: simultaneous events apply change-first,
 /// request-last (a request at the exact instant of a change sees stale
 /// content; both engines share this total order). `pub(crate)` because
-/// the dynamic-world engine (`crate::scenario::engine`) extends the
-/// same k-way merge with a world-event stream and must apply trace
-/// events in the identical total order — its empty-scenario run is
-/// pinned bit-identical to [`simulate_with`].
+/// the dynamic-world engine (`crate::scenario::engine`) and the event
+/// sources (`crate::sim::source`) speak the same kind ranks — the
+/// scenario engine extends the identical k-way merge with a
+/// world-event stream and its empty-scenario run is pinned
+/// bit-identical to [`simulate_with`].
 pub(crate) const KIND_CHANGE: u8 = 0;
 pub(crate) const KIND_CIS: u8 = 1;
 pub(crate) const KIND_REQUEST: u8 = 2;
 
 /// Reusable per-repetition scratch of the streaming engine.
 ///
-/// Owns every allocation `simulate_with` needs: the engine-side
+/// Owns every allocation the merge engine needs: the engine-side
 /// freshness state (dirty bits + last-crawl times for the discard
-/// window), crawl counters, the rolling-accuracy ring and the k-way
-/// merge heap + per-page cursors. `reset` clears without releasing
-/// capacity, so a workspace threaded through `R` repetitions of an
-/// `m`-page cell allocates O(m) once instead of O(E log E) work and
-/// O(E) memory per repetition.
+/// window), crawl counters, the rolling-accuracy ring, the k-way merge
+/// heap, the SoA merge frontier (per-page next-event time/kind) and
+/// the cursor pool lent to the replay adapter. `reset` clears without
+/// releasing capacity, so a workspace threaded through `R` repetitions
+/// of an `m`-page cell allocates O(m) once instead of O(E log E) work
+/// and O(E) memory per repetition.
 #[derive(Debug, Default)]
 pub struct SimWorkspace {
     /// Last crawl time per page (drives the Appendix-C discard window).
@@ -201,8 +225,16 @@ pub struct SimWorkspace {
     crawl_counts: Vec<u32>,
     ring: Vec<bool>,
     heap: BinaryHeap<Reverse<(OrdF64, u8, u32)>>,
-    /// Per-page cursors into (changes, cis, requests).
-    cursors: Vec<[usize; 3]>,
+    /// Merge frontier, time column: page `i`'s pending event time
+    /// (`INFINITY` = exhausted). Debug-mode bookkeeping only: heap
+    /// entries carry the same `(time, kind)` pair, so release builds
+    /// skip these stores entirely; debug builds use the columns to
+    /// assert the one-live-entry-per-page invariant on every pop.
+    frontier_time: Vec<f64>,
+    /// Merge frontier, kind column (debug-mode bookkeeping, as above).
+    frontier_kind: Vec<u8>,
+    /// Cursor pool lent to [`ReplaySource`] between repetitions.
+    cursor_pool: Vec<[usize; 3]>,
 }
 
 impl SimWorkspace {
@@ -220,36 +252,27 @@ impl SimWorkspace {
         self.crawl_counts.resize(m, 0);
         self.ring.clear();
         self.heap.clear();
-        self.cursors.clear();
-        self.cursors.resize(m, [0, 0, 0]);
+        #[cfg(debug_assertions)]
+        {
+            self.frontier_time.clear();
+            self.frontier_time.resize(m, f64::INFINITY);
+            self.frontier_kind.clear();
+            self.frontier_kind.resize(m, 0);
+        }
     }
-}
 
-/// Push page `page`'s next pending event (earliest of its three streams,
-/// kind-rank tie-break) onto the merge heap, if any remains.
-#[inline]
-fn push_next(
-    heap: &mut BinaryHeap<Reverse<(OrdF64, u8, u32)>>,
-    p: &PageTrace,
-    cursors: &[usize; 3],
-    page: u32,
-) {
-    let mut best: Option<(f64, u8)> = None;
-    if let Some(&t) = p.changes.get(cursors[0]) {
-        best = Some((t, KIND_CHANGE));
-    }
-    if let Some(&t) = p.cis.get(cursors[1]) {
-        if best.map_or(true, |(bt, bk)| t < bt || (t == bt && KIND_CIS < bk)) {
-            best = Some((t, KIND_CIS));
+    /// Record page `i`'s pending frontier event (debug builds only —
+    /// release builds rely on the heap entry alone).
+    #[inline]
+    fn set_frontier(&mut self, i: usize, ev: Option<(f64, u8)>) {
+        #[cfg(debug_assertions)]
+        {
+            let (t, k) = ev.unwrap_or((f64::INFINITY, 0));
+            self.frontier_time[i] = t;
+            self.frontier_kind[i] = k;
         }
-    }
-    if let Some(&t) = p.requests.get(cursors[2]) {
-        if best.map_or(true, |(bt, bk)| t < bt || (t == bt && KIND_REQUEST < bk)) {
-            best = Some((t, KIND_REQUEST));
-        }
-    }
-    if let Some((t, k)) = best {
-        heap.push(Reverse((OrdF64(t), k, page)));
+        #[cfg(not(debug_assertions))]
+        let _ = (i, ev);
     }
 }
 
@@ -267,26 +290,70 @@ pub fn simulate(
     simulate_with(&mut ws, traces, cfg, scheduler)
 }
 
-/// Run one repetition using caller-owned scratch (the streaming engine).
+/// Run one repetition over pre-materialized traces using caller-owned
+/// scratch: the traces replay through a [`ReplaySource`] (borrowing
+/// the workspace's cursor pool), bit-identical to the pre-frontier
+/// streaming engine.
 pub fn simulate_with(
     ws: &mut SimWorkspace,
     traces: &EventTraces,
     cfg: &SimConfig,
     scheduler: &mut dyn CrawlScheduler,
 ) -> SimResult {
-    let m = traces.pages.len();
+    let mut source =
+        ReplaySource::with_cursors(&traces.pages, std::mem::take(&mut ws.cursor_pool));
+    let res = simulate_source_with(ws, &mut source, cfg, scheduler);
+    ws.cursor_pool = source.into_cursors();
+    res
+}
+
+/// Run one repetition over a lazy [`StreamedSource`] (the `O(m)`-memory
+/// path) using caller-owned scratch. The source is single-pass, so it
+/// is taken **by value** — reusing one across repetitions (which would
+/// silently yield a zero-event run) is a compile error; build a fresh
+/// source per repetition (construction is the generation work).
+pub fn simulate_streamed_with(
+    ws: &mut SimWorkspace,
+    mut source: StreamedSource,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+) -> SimResult {
+    simulate_source_with(ws, &mut source, cfg, scheduler)
+}
+
+/// Convenience: build the lazy sources for `pages` from `rng` (same
+/// per-page keying as `generate_traces`) and run one repetition — the
+/// streamed analogue of `generate_traces` + [`simulate`].
+pub fn simulate_streamed(
+    pages: &[PageParams],
+    cfg: &SimConfig,
+    delay: CisDelay,
+    rng: &mut Rng,
+    scheduler: &mut dyn CrawlScheduler,
+) -> crate::Result<SimResult> {
+    let source = StreamedSource::new(pages, cfg.horizon, delay, rng)?;
+    let mut ws = SimWorkspace::new();
+    Ok(simulate_streamed_with(&mut ws, source, cfg, scheduler))
+}
+
+/// The merge engine, generic over the event source: seed the frontier
+/// + heap with each page's first event, then replay in `(time, kind,
+/// page)` order, regenerating a page's heap entry only when its
+/// current entry is popped.
+pub fn simulate_source_with<S: EventSource>(
+    ws: &mut SimWorkspace,
+    source: &mut S,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+) -> SimResult {
+    let m = source.len();
     ws.reset(m);
     scheduler.on_start(m);
-    for (i, p) in traces.pages.iter().enumerate() {
-        // the cursor merge relies on each per-page stream being
-        // time-sorted (the old engine sorted globally and did not care)
-        debug_assert!(
-            p.changes.windows(2).all(|w| w[0] <= w[1])
-                && p.cis.windows(2).all(|w| w[0] <= w[1])
-                && p.requests.windows(2).all(|w| w[0] <= w[1]),
-            "page {i}: per-page event streams must be sorted by time"
-        );
-        push_next(&mut ws.heap, p, &ws.cursors[i], i as u32);
+    for i in 0..m {
+        if let Some((t, k)) = source.first(i) {
+            ws.set_frontier(i, Some((t, k)));
+            ws.heap.push(Reverse((OrdF64(t), k, i as u32)));
+        }
     }
 
     let mut fresh_hits = 0u64;
@@ -317,10 +384,13 @@ pub fn simulate_with(
             }
             ws.heap.pop();
             let i = page as usize;
+            // one live heap entry per page: the popped entry IS the
+            // page's frontier
+            debug_assert_eq!(ws.frontier_time[i].to_bits(), et.to_bits());
+            debug_assert_eq!(ws.frontier_kind[i], kind);
             match kind {
                 KIND_CHANGE => {
                     ws.changed[i] = true;
-                    ws.cursors[i][0] += 1;
                 }
                 KIND_REQUEST => {
                     requests += 1;
@@ -345,7 +415,6 @@ pub fn simulate_with(
                             ring_pos = (ring_pos + 1) % window;
                         }
                     }
-                    ws.cursors[i][2] += 1;
                 }
                 _ => {
                     // KIND_CIS
@@ -356,10 +425,13 @@ pub fn simulate_with(
                     if keep {
                         scheduler.on_cis(i, et);
                     }
-                    ws.cursors[i][1] += 1;
                 }
             }
-            push_next(&mut ws.heap, &traces.pages[i], &ws.cursors[i], page);
+            let next = source.advance(i, kind);
+            ws.set_frontier(i, next);
+            if let Some((nt, nk)) = next {
+                ws.heap.push(Reverse((OrdF64(nt), nk, page)));
+            }
         }
         // crawl at the tick
         t = next_tick;
@@ -381,20 +453,20 @@ pub fn simulate_with(
         match kind {
             KIND_CHANGE => {
                 ws.changed[i] = true;
-                ws.cursors[i][0] += 1;
             }
             KIND_REQUEST => {
                 requests += 1;
                 if !ws.changed[i] {
                     fresh_hits += 1;
                 }
-                ws.cursors[i][2] += 1;
             }
-            _ => {
-                ws.cursors[i][1] += 1;
-            }
+            _ => {}
         }
-        push_next(&mut ws.heap, &traces.pages[i], &ws.cursors[i], page);
+        let next = source.advance(i, kind);
+        ws.set_frontier(i, next);
+        if let Some((nt, nk)) = next {
+            ws.heap.push(Reverse((OrdF64(nt), nk, page)));
+        }
     }
 
     SimResult {
@@ -429,8 +501,10 @@ pub fn simulate_reference(
     }
     // the key is a total order, so an unstable sort is equivalent — and
     // keeps this baseline's cost honest vs the true pre-change engine
+    // (total_cmp orders non-NaN keys exactly like the old
+    // partial_cmp().unwrap(), minus the NaN abort)
     events.sort_unstable_by(|a, b| {
-        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
     });
 
     let mut last_crawl = vec![0.0f64; m];
@@ -536,7 +610,7 @@ mod tests {
     use crate::params::PageParams;
     use crate::rngkit::Rng;
     use crate::sched::PageTracker;
-    use crate::sim::events::{generate_traces, CisDelay};
+    use crate::sim::events::{generate_traces, CisDelay, PageTrace};
 
     /// Round-robin scheduler for engine-level tests.
     struct RoundRobin {
@@ -562,7 +636,7 @@ mod tests {
     #[test]
     fn tick_count_matches_bandwidth() {
         let tr = traces_from(vec![PageTrace::default(); 3], 10.0);
-        let cfg = SimConfig::new(5.0, 10.0);
+        let cfg = SimConfig::new(5.0, 10.0).unwrap();
         let mut s = RoundRobin { m: 3, next: 0 };
         let res = simulate(&tr, &cfg, &mut s);
         assert_eq!(res.ticks, 50);
@@ -582,7 +656,7 @@ mod tests {
             }],
             5.0,
         );
-        let cfg = SimConfig::new(0.5, 5.0);
+        let cfg = SimConfig::new(0.5, 5.0).unwrap();
         let mut s = RoundRobin { m: 1, next: 0 };
         let res = simulate(&tr, &cfg, &mut s);
         assert_eq!(res.requests, 3);
@@ -622,7 +696,7 @@ mod tests {
             vec![PageTrace { changes: vec![], cis: vec![0.4, 0.9, 1.4], requests: vec![] }],
             3.0,
         );
-        let cfg = SimConfig::new(1.0, 3.0);
+        let cfg = SimConfig::new(1.0, 3.0).unwrap();
         let mut s = Capture::new();
         let res = simulate(&tr, &cfg, &mut s);
         // tick at t=1: cis 0.4, 0.9 delivered -> n=2; crawl resets
@@ -639,7 +713,7 @@ mod tests {
             vec![PageTrace { changes: vec![], cis: vec![1.05, 2.5], requests: vec![] }],
             4.0,
         );
-        let mut cfg = SimConfig::new(1.0, 4.0);
+        let mut cfg = SimConfig::new(1.0, 4.0).unwrap();
         cfg.cis_discard_window = Some(0.2);
         let mut s = Capture::new();
         simulate(&tr, &cfg, &mut s);
@@ -686,6 +760,18 @@ mod tests {
     }
 
     #[test]
+    fn constant_validates_like_new() {
+        // the former assert is now an Err (no panic-on-bad-input
+        // constructors left in the sim layer)
+        assert!(BandwidthSchedule::constant(0.0).is_err(), "zero rate");
+        assert!(BandwidthSchedule::constant(-3.0).is_err(), "negative rate");
+        assert!(BandwidthSchedule::constant(f64::NAN).is_err(), "NaN rate");
+        assert!(BandwidthSchedule::constant(f64::INFINITY).is_err(), "infinite rate");
+        assert_eq!(BandwidthSchedule::constant(2.5).unwrap().segments(), &[(0.0, 2.5)]);
+        assert!(SimConfig::new(0.0, 10.0).is_err(), "SimConfig::new propagates");
+    }
+
+    #[test]
     fn rate_at_piecewise_constant_semantics() {
         let s = BandwidthSchedule::new(vec![(0.0, 1.0), (5.0, 10.0), (8.0, 2.0)]).unwrap();
         // before / at / inside / boundary-inclusive / past-the-end
@@ -696,7 +782,7 @@ mod tests {
         assert_eq!(s.rate_at(7.9), 10.0);
         assert_eq!(s.rate_at(8.0), 2.0);
         assert_eq!(s.rate_at(1e9), 2.0);
-        assert_eq!(BandwidthSchedule::constant(3.0).rate_at(42.0), 3.0);
+        assert_eq!(BandwidthSchedule::constant(3.0).unwrap().rate_at(42.0), 3.0);
     }
 
     #[test]
@@ -709,7 +795,7 @@ mod tests {
             }],
             10.0,
         );
-        let mut cfg = SimConfig::new(1.0, 10.0);
+        let mut cfg = SimConfig::new(1.0, 10.0).unwrap();
         cfg.timeline_window = Some(10);
         let mut s = RoundRobin { m: 1, next: 0 };
         let res = simulate(&tr, &cfg, &mut s);
@@ -725,7 +811,7 @@ mod tests {
             vec![PageTrace { changes: vec![], cis: vec![], requests: vec![1.0, 2.0] }],
             5.0,
         );
-        let cfg = SimConfig::new(1.0, 5.0);
+        let cfg = SimConfig::new(1.0, 5.0).unwrap();
         let mut s = RoundRobin { m: 1, next: 0 };
         let res = simulate(&tr, &cfg, &mut s);
         assert_eq!(res.accuracy, 1.0);
@@ -805,7 +891,7 @@ mod tests {
                 CisDelay::Exponential { mean: 0.3 }
             };
             let tr = random_traces(seed, 25, horizon, delay);
-            let mut cfg = SimConfig::new(4.0, horizon);
+            let mut cfg = SimConfig::new(4.0, horizon).unwrap();
             if seed % 3 == 0 {
                 cfg.cis_discard_window = Some(0.15);
             }
@@ -846,7 +932,7 @@ mod tests {
             .collect();
         let mut trng = Rng::new(6);
         let tr = generate_traces(&pages, 60.0, CisDelay::None, &mut trng);
-        let cfg = SimConfig::new(5.0, 60.0);
+        let cfg = SimConfig::new(5.0, 60.0).unwrap();
         let mut s1 = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &pages);
         let mut s2 = LazyGreedyScheduler::new(PolicyKind::GreedyNcis, &pages);
         let a = simulate(&tr, &cfg, &mut s1);
@@ -861,7 +947,7 @@ mod tests {
             // different sizes per rep: reset must fully re-dimension
             let m = 10 + 7 * seed as usize;
             let tr = random_traces(seed, m, 25.0, CisDelay::None);
-            let mut cfg = SimConfig::new(3.0, 25.0);
+            let mut cfg = SimConfig::new(3.0, 25.0).unwrap();
             cfg.timeline_window = Some(12);
             let reused = simulate_with(&mut ws, &tr, &cfg, &mut StateScore::new());
             let fresh = simulate(&tr, &cfg, &mut StateScore::new());
@@ -877,7 +963,7 @@ mod tests {
         for seed in [4u64, 5, 6] {
             let m = 8 + 5 * seed as usize;
             let tr = random_traces(seed, m, 20.0, CisDelay::None);
-            let cfg = SimConfig::new(3.0, 20.0);
+            let cfg = SimConfig::new(3.0, 20.0).unwrap();
             let a = simulate(&tr, &cfg, &mut reused);
             let b = simulate(&tr, &cfg, &mut StateScore::new());
             assert_bit_identical(&a, &b, &format!("scheduler reuse seed {seed}"));
@@ -892,11 +978,72 @@ mod tests {
             vec![PageTrace { changes: vec![1.0], cis: vec![1.0], requests: vec![1.0] }],
             2.0,
         );
-        let cfg = SimConfig::new(0.25, 2.0); // no tick before t=2 -> no crawl before events
+        // no tick before t=2 -> no crawl before events
+        let cfg = SimConfig::new(0.25, 2.0).unwrap();
         let a = simulate(&tr, &cfg, &mut StateScore::new());
         let b = simulate_reference(&tr, &cfg, &mut StateScore::new());
         assert_eq!(a.requests, 1);
         assert_eq!(a.fresh_hits, 0);
         assert_bit_identical(&a, &b, "simultaneous");
+    }
+
+    // ---- streamed (lazy event sourcing) engine ----
+
+    #[test]
+    fn streamed_engine_runs_and_accounts_consistently() {
+        // the lazy path is a different (seed-paired) realization, so no
+        // bit-comparison with the replay engines — but the accounting
+        // invariants and scale must hold
+        let mut rng = Rng::new(41);
+        let pages: Vec<PageParams> = (0..50)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.1, 0.6),
+            })
+            .collect();
+        let mut cfg = SimConfig::new(5.0, 40.0).unwrap();
+        cfg.timeline_window = Some(16);
+        let mut trng = Rng::new(42);
+        let res =
+            simulate_streamed(&pages, &cfg, CisDelay::None, &mut trng, &mut StateScore::new())
+                .unwrap();
+        assert_eq!(res.ticks, 200);
+        assert!(res.fresh_hits <= res.requests);
+        assert!((0.0..=1.0).contains(&res.accuracy));
+        assert_eq!(res.crawl_counts.len(), pages.len());
+        assert_eq!(res.crawl_counts.iter().map(|&c| c as u64).sum::<u64>(), res.ticks);
+        assert!(!res.timeline.is_empty());
+    }
+
+    #[test]
+    fn streamed_engine_is_deterministic_and_reuses_workspace() {
+        let mut rng = Rng::new(43);
+        let pages: Vec<PageParams> = (0..30)
+            .map(|_| PageParams {
+                delta: rng.range(0.05, 1.0),
+                mu: rng.range(0.05, 1.0),
+                lam: rng.f64(),
+                nu: rng.range(0.1, 0.6),
+            })
+            .collect();
+        let cfg = SimConfig::new(4.0, 30.0).unwrap();
+        let delay = CisDelay::Exponential { mean: 0.3 };
+        let run_fresh = |seed: u64| {
+            let mut trng = Rng::new(seed);
+            simulate_streamed(&pages, &cfg, delay, &mut trng, &mut StateScore::new()).unwrap()
+        };
+        let a = run_fresh(7);
+        let b = run_fresh(7);
+        assert_bit_identical(&a, &b, "streamed determinism");
+        // workspace reuse across a replay rep and a streamed rep
+        let mut ws = SimWorkspace::new();
+        let tr = random_traces(9, 30, 30.0, CisDelay::None);
+        let _ = simulate_with(&mut ws, &tr, &cfg, &mut StateScore::new());
+        let mut trng = Rng::new(7);
+        let src = StreamedSource::new(&pages, cfg.horizon, delay, &mut trng).unwrap();
+        let c = simulate_streamed_with(&mut ws, src, &cfg, &mut StateScore::new());
+        assert_bit_identical(&a, &c, "streamed via reused workspace");
     }
 }

@@ -7,8 +7,9 @@
 //! - request events ~ Poisson(μ_i^raw) (raw, unnormalized rates);
 //! - CIS delivery may be delayed (Appendix C).
 
+use crate::error::Error;
 use crate::params::PageParams;
-use crate::rngkit::{self, Rng};
+use crate::rngkit::{self, RandomSource, Rng};
 
 /// CIS delivery-delay model (Appendix C).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -17,26 +18,68 @@ pub enum CisDelay {
     None,
     /// Exponential delay with the given mean.
     Exponential {
-        /// Mean delay.
+        /// Mean delay (must be positive and finite).
         mean: f64,
     },
     /// Poisson-distributed delay: `delay = Poisson(mean) * unit`
     /// (the Appendix-C experiment draws the delay "from the Poisson
     /// distribution with ν=6"; `unit` converts counts to time).
     Poisson {
-        /// Mean of the Poisson count.
+        /// Mean of the Poisson count (must be ≥ 0 and finite).
         mean: f64,
-        /// Time per count unit.
+        /// Time per count unit (must be ≥ 0 and finite).
         unit: f64,
     },
 }
 
 impl CisDelay {
-    pub(crate) fn sample(&self, rng: &mut Rng) -> f64 {
+    /// Check the model's parameters. Every entry point that accepts a
+    /// delay from the outside calls this — the streamed constructors
+    /// ([`crate::sim::StreamedSource::new`], the scenario streamed
+    /// engine, `CisFeed`) and the materialized drivers
+    /// (`figures::common::run_rep`, `CrawlerBuilder::run_scenario`) —
+    /// so a bad mean surfaces as an error on both trace modes instead
+    /// of the silent `mean.max(1e-12)` clamp [`Self::sample`] used to
+    /// apply. Direct [`generate_traces`] callers own the check
+    /// themselves.
+    pub fn validate(&self) -> crate::Result<()> {
+        match *self {
+            CisDelay::None => Ok(()),
+            CisDelay::Exponential { mean } => {
+                if mean > 0.0 && mean.is_finite() {
+                    Ok(())
+                } else {
+                    Err(Error::InvalidParam(format!(
+                        "CisDelay::Exponential mean must be > 0 and finite, got {mean}"
+                    )))
+                }
+            }
+            CisDelay::Poisson { mean, unit } => {
+                if mean >= 0.0 && mean.is_finite() && unit >= 0.0 && unit.is_finite() {
+                    Ok(())
+                } else {
+                    Err(Error::InvalidParam(format!(
+                        "CisDelay::Poisson mean/unit must be ≥ 0 and finite, \
+                         got mean={mean} unit={unit}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Sample one delivery delay. Parameters are assumed valid (see
+    /// [`Self::validate`]); there is no silent clamping.
+    pub(crate) fn sample<R: RandomSource>(&self, rng: &mut R) -> f64 {
         match *self {
             CisDelay::None => 0.0,
-            CisDelay::Exponential { mean } => rngkit::exponential(rng, 1.0 / mean.max(1e-12)),
-            CisDelay::Poisson { mean, unit } => rngkit::poisson(rng, mean) as f64 * unit,
+            CisDelay::Exponential { mean } => {
+                debug_assert!(mean > 0.0 && mean.is_finite());
+                rngkit::exponential(rng, 1.0 / mean)
+            }
+            CisDelay::Poisson { mean, unit } => {
+                debug_assert!(mean >= 0.0 && unit >= 0.0);
+                rngkit::poisson(rng, mean) as f64 * unit
+            }
         }
     }
 }
@@ -139,7 +182,10 @@ pub fn generate_page_trace_from(
             cis.push(d);
         }
     }
-    cis.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN delivery time (impossible with validated delay
+    // params, but this sort must never be the thing that panics) sorts
+    // to the end instead of aborting the repetition
+    cis.sort_unstable_by(f64::total_cmp);
     let mut requests = rngkit::poisson_process(rng, p.mu, span);
     for t in requests.iter_mut() {
         *t += t0;
@@ -201,21 +247,44 @@ mod tests {
 
     #[test]
     fn delay_shifts_cis_later() {
-        let mut rng1 = Rng::new(5);
-        let mut rng2 = Rng::new(5);
-        let pages = [page(1.0, 0.1, 1.0, 0.0)];
-        let t0 = generate_traces(&pages, 100.0, CisDelay::None, &mut rng1);
-        let t1 = generate_traces(
-            &pages,
-            100.0,
-            CisDelay::Poisson { mean: 6.0, unit: 0.01 },
-            &mut rng2,
+        // Seed-paired: the lazy source draws change arrivals and signal
+        // coins on the change substream and every delay on the CIS
+        // substream, so the same seed gives the SAME signalled-change
+        // realization under every delay model. With λ=1, ν=0 the
+        // undelayed CIS are exactly the change times and the delayed
+        // CIS are those same times plus i.i.d. delays — a paired,
+        // strictly-positive mean shift (not the old `mean1 > mean0 - 5`
+        // tautology).
+        use crate::sim::source::StreamedSource;
+        let pages = [page(1.0, 0.0, 1.0, 0.0)];
+        let horizon = 200.0;
+        let delay = CisDelay::Poisson { mean: 6.0, unit: 0.01 }; // E[shift] = 0.06
+        let mut r0 = Rng::new(5);
+        let mut r1 = Rng::new(5);
+        let t0 = StreamedSource::new(&pages, horizon, CisDelay::None, &mut r0)
+            .unwrap()
+            .materialize();
+        let t1 = StreamedSource::new(&pages, horizon, delay, &mut r1).unwrap().materialize();
+        assert_eq!(
+            t0.pages[0].changes, t1.pages[0].changes,
+            "delay draws must not perturb the change substream"
         );
-        // same change process (same seed stream ordering up to delay draws
-        // is not guaranteed) — just check means shift
-        let mean0: f64 = t0.pages[0].cis.iter().sum::<f64>() / t0.pages[0].cis.len() as f64;
-        let mean1: f64 = t1.pages[0].cis.iter().sum::<f64>() / t1.pages[0].cis.len() as f64;
-        assert!(mean1 > mean0 - 5.0);
+        let (a, b) = (&t0.pages[0].cis, &t1.pages[0].cis);
+        assert_eq!(a, &t0.pages[0].changes, "λ=1, no delay: CIS are the change times");
+        // horizon truncation can only drop late deliveries
+        assert!(b.len() <= a.len());
+        assert!(b.len() as f64 >= a.len() as f64 * 0.95, "unexpected truncation");
+        // pointwise domination of order statistics: each delayed
+        // delivery is its change time plus a non-negative delay
+        for (k, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(y >= x, "delayed CIS[{k}] = {y} earlier than undelayed {x}");
+        }
+        let n = b.len();
+        let mean0: f64 = a[..n].iter().sum::<f64>() / n as f64;
+        let mean1: f64 = b.iter().sum::<f64>() / n as f64;
+        let shift = mean1 - mean0;
+        assert!(shift > 0.0, "delay must shift the mean strictly later, got {shift}");
+        assert!((shift - 0.06).abs() < 0.03, "mean shift {shift} far from E[delay]=0.06");
     }
 
     #[test]

@@ -1,24 +1,30 @@
 //! Poisson event substrate and the discrete-tick crawl simulator.
 //!
 //! [`events`] generates per-page change / request / CIS event traces
-//! (with optional CIS delivery delays, Appendix C); [`engine`] replays
-//! them against a [`crate::sched::CrawlScheduler`] at tick times
-//! `t_j = j/R` (supporting the Appendix-D bandwidth schedule changes),
-//! pushing `on_cis`/`on_crawl` lifecycle events and accounting
-//! freshness per request; [`metrics`] aggregates accuracy and empirical
-//! crawl rates across repetitions.
+//! (with optional CIS delivery delays, Appendix C); [`source`] is the
+//! lazy alternative — per-page [`source::PageEventSource`] cursors
+//! that sample each next arrival on demand (`O(m)` memory instead of
+//! `O(total events)`), plus the exact [`source::ReplaySource`] adapter
+//! over pre-built traces; [`engine`] replays either against a
+//! [`crate::sched::CrawlScheduler`] at tick times `t_j = j/R`
+//! (supporting the Appendix-D bandwidth schedule changes), pushing
+//! `on_cis`/`on_crawl` lifecycle events and accounting freshness per
+//! request; [`metrics`] aggregates accuracy and empirical crawl rates
+//! across repetitions.
 //!
-//! The engine is a streaming k-way merge over the per-page traces with
-//! all scratch in a reusable [`SimWorkspace`]; [`simulate_reference`]
-//! keeps the merged-sort implementation as the parity oracle and bench
-//! baseline.
+//! The engine is a streaming k-way merge over a flat per-page merge
+//! frontier with all scratch in a reusable [`SimWorkspace`];
+//! [`simulate_reference`] keeps the merged-sort implementation as the
+//! parity oracle and bench baseline.
 
 pub mod engine;
 pub mod events;
 pub mod metrics;
+pub mod source;
 
 pub use engine::{
-    simulate, simulate_reference, simulate_with, BandwidthSchedule, SimConfig, SimResult,
-    SimWorkspace,
+    simulate, simulate_reference, simulate_source_with, simulate_streamed,
+    simulate_streamed_with, simulate_with, BandwidthSchedule, SimConfig, SimResult, SimWorkspace,
 };
 pub use events::{generate_page_trace_from, generate_traces, CisDelay, EventTraces, PageTrace};
+pub use source::{EventSource, PageEventSource, ReplaySource, StreamedSource, TraceMode};

@@ -1,0 +1,676 @@
+//! Lazy per-page event sourcing.
+//!
+//! The materialized path ([`crate::sim::events::generate_traces`])
+//! realizes every change / CIS / request event for the whole horizon
+//! before a repetition starts — peak memory `O(total events)` ≈
+//! `O(m · T · rate)`. This module replaces that with **event
+//! sourcing**: each page holds a [`PageEventSource`] cursor that
+//! samples its *next* arrival on demand, exploiting the memoryless
+//! property of the Poisson processes, so a repetition runs in `O(m)`
+//! memory no matter the horizon.
+//!
+//! ## Substream keying
+//!
+//! Each page derives three independent compact RNG substreams from its
+//! per-page generator (`master.split(i)`, the same per-page keying as
+//! the materialized generator, then [`crate::rngkit::Rng::split64`]
+//! sub-keys):
+//!
+//! - **changes** ([`SUB_CHANGES`]): change inter-arrivals *and* the
+//!   per-change Bernoulli(λ) signal coins;
+//! - **CIS false positives** ([`SUB_CIS`]): false-positive
+//!   inter-arrivals and *every* delivery-delay draw (signalled and
+//!   false-positive alike);
+//! - **requests** ([`SUB_REQUESTS`]): request inter-arrivals.
+//!
+//! Putting the delay draws on the CIS substream makes the change
+//! realization (arrivals + coins) *seed-paired across delay models*:
+//! two sources built from the same master seed with different
+//! [`CisDelay`]s see identical changes, which is what lets tests pin
+//! "delays shift CIS later" as a paired, strictly-positive mean shift.
+//!
+//! ## The pending-buffer invariant
+//!
+//! Delivery delays can reorder signals: a change at `c₁ < c₂` may
+//! deliver at `c₁ + d₁ > c₂ + d₂`. Deliveries therefore go through a
+//! small per-page min-buffer ([`PendingCis`]) and the source only
+//! emits its minimum once no *future* arrival can deliver earlier:
+//! a delivery `d` is emittable when `d ≤ next_change` (every future
+//! change delivers at or after its own arrival time) and the
+//! false-positive stream has been drained past `d` (every remaining
+//! false positive delivers at or after its arrival ≥ `nf > d`). By
+//! Little's law the buffer holds ~`rate × mean delay` entries — `O(1)`
+//! for every delay model the experiments use, and at most one entry
+//! under [`CisDelay::None`].
+//!
+//! ## Exact replay
+//!
+//! [`ReplaySource`] is the same cursor interface over a pre-built
+//! [`PageTrace`] — it emits exactly the materialized events in exactly
+//! the order the pre-refactor engine merged them, which pins the
+//! frontier-based merge engine bit-identical to its predecessor
+//! (`tests/event_sourcing.rs`).
+
+use crate::params::PageParams;
+use crate::rngkit::{self, RandomSource, Rng, SplitMix64};
+use crate::sim::engine::{KIND_CHANGE, KIND_CIS, KIND_REQUEST};
+use crate::sim::events::{CisDelay, EventTraces, PageTrace};
+
+/// How per-repetition event streams are produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// Pre-materialize every event before the run (the
+    /// parity/distribution oracle; peak memory `O(total events)`).
+    Materialized,
+    /// Lazy per-page event sourcing (`O(m)` memory; the default for
+    /// experiment cells).
+    #[default]
+    Streamed,
+}
+
+/// Sub-key of the change substream (arrivals + signal coins).
+pub const SUB_CHANGES: u64 = 0;
+/// Sub-key of the CIS substream (false-positive arrivals + all delays).
+pub const SUB_CIS: u64 = 1;
+/// Sub-key of the request substream.
+pub const SUB_REQUESTS: u64 = 2;
+
+/// A per-page supplier of simulation events in `(time, kind)` order.
+///
+/// The merge engine ([`crate::sim::engine::simulate_source_with`])
+/// keeps one pending `(time, kind)` pair per page in its SoA merge
+/// frontier; `first` seeds that frontier and `advance` refills it
+/// after the engine consumes an event. Implementations must emit each
+/// page's events in non-decreasing `(time, kind-rank)` order with
+/// kinds ranked change < CIS < request at equal times.
+pub trait EventSource {
+    /// Number of pages.
+    fn len(&self) -> usize;
+
+    /// No pages at all?
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Begin page `i`'s stream and return its first event (`None` if
+    /// the page has no events). Called once per page per run, before
+    /// any `advance` for that page.
+    fn first(&mut self, i: usize) -> Option<(f64, u8)>;
+
+    /// Consume page `i`'s current event (whose kind the engine just
+    /// popped) and return the next one.
+    fn advance(&mut self, i: usize, kind: u8) -> Option<(f64, u8)>;
+}
+
+/// Per-page min-buffer of in-flight CIS deliveries, kept sorted
+/// descending so the minimum is `O(1)` at the tail. Expected occupancy
+/// is `rate × mean delay` (Little's law) — tiny for every experiment's
+/// delay model — so linear insertion beats a heap here.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct PendingCis(Vec<f64>);
+
+impl PendingCis {
+    #[inline]
+    fn push(&mut self, t: f64) {
+        // descending order: the `> t` prefix ends at the insert slot
+        let pos = self.0.partition_point(|&x| x > t);
+        self.0.insert(pos, t);
+    }
+
+    #[inline]
+    fn peek(&self) -> Option<f64> {
+        self.0.last().copied()
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<f64> {
+        self.0.pop()
+    }
+
+    fn clear(&mut self) {
+        self.0.clear();
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+}
+
+/// Next arrival of a rate-`rate` Poisson process after `from`, or
+/// `INFINITY` when the process is off (`rate ≤ 0`) or the arrival
+/// falls at/past the horizon (the stream ends, exactly like the
+/// materialized generator stopping its arrival loop).
+#[inline]
+fn arrival<R: RandomSource>(rng: &mut R, rate: f64, from: f64, horizon: f64) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    let t = from + rngkit::exponential(rng, rate);
+    if t < horizon {
+        t
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Lazy event cursor for one page: three compact RNG substreams, the
+/// next arrival of each process, and the pending delivery buffer.
+/// 112 bytes + the (usually empty) buffer — fixed per page, however
+/// long the horizon.
+#[derive(Debug, Clone)]
+pub struct PageEventSource {
+    ch: SplitMix64,
+    fp: SplitMix64,
+    rq: SplitMix64,
+    delta: f64,
+    mu: f64,
+    lam: f64,
+    nu: f64,
+    /// Next change arrival (`INFINITY` = exhausted).
+    na: f64,
+    /// Next false-positive CIS arrival (`INFINITY` = exhausted).
+    nf: f64,
+    /// Next request arrival (`INFINITY` = exhausted).
+    nr: f64,
+    pending: PendingCis,
+}
+
+impl PageEventSource {
+    /// New source for a page born (or re-parameterized) at `t0`,
+    /// sampling over `[t0, horizon)`. With `t0 = 0` this is the
+    /// whole-horizon stream. `delay` must be valid (the batch
+    /// constructors validate; see [`CisDelay::validate`]).
+    pub fn new(p: &PageParams, t0: f64, horizon: f64, delay: CisDelay, rng: &mut Rng) -> Self {
+        let ch = rng.split64(SUB_CHANGES);
+        let fp = rng.split64(SUB_CIS);
+        let rq = rng.split64(SUB_REQUESTS);
+        let mut src = Self {
+            ch,
+            fp,
+            rq,
+            delta: p.delta,
+            mu: p.mu,
+            lam: p.lam,
+            nu: p.nu,
+            na: f64::INFINITY,
+            nf: f64::INFINITY,
+            nr: f64::INFINITY,
+            pending: PendingCis::default(),
+        };
+        if horizon - t0 > 0.0 {
+            src.na = arrival(&mut src.ch, src.delta, t0, horizon);
+            if src.na.is_finite() {
+                src.roll_signal(horizon, delay);
+            }
+            src.nf = arrival(&mut src.fp, src.nu, t0, horizon);
+            src.nr = arrival(&mut src.rq, src.mu, t0, horizon);
+        }
+        src
+    }
+
+    /// Draw the signal coin for the freshly generated change at
+    /// `self.na` (coin on the change substream, delay on the CIS
+    /// substream) and buffer its delivery if it lands in-horizon.
+    #[inline]
+    fn roll_signal(&mut self, horizon: f64, delay: CisDelay) {
+        if self.ch.bernoulli(self.lam) {
+            let d = self.na + delay.sample(&mut self.fp);
+            if d < horizon {
+                self.pending.push(d);
+            }
+        }
+    }
+
+    /// Current next event of this page, draining false-positive
+    /// arrivals until the pending buffer's minimum is provably safe to
+    /// emit (see the module docs' invariant). Candidates are checked
+    /// in kind order, so equal-time events rank change < CIS < request.
+    pub(crate) fn next(&mut self, horizon: f64, delay: CisDelay) -> Option<(f64, u8)> {
+        loop {
+            let gate = self.na.min(self.nr).min(self.pending.peek().unwrap_or(f64::INFINITY));
+            if self.nf.is_finite() && self.nf <= gate {
+                let arr = self.nf;
+                let d = arr + delay.sample(&mut self.fp);
+                if d < horizon {
+                    self.pending.push(d);
+                }
+                self.nf = arrival(&mut self.fp, self.nu, arr, horizon);
+            } else {
+                break;
+            }
+        }
+        let mut best: Option<(f64, u8)> = None;
+        if self.na.is_finite() {
+            best = Some((self.na, KIND_CHANGE));
+        }
+        if let Some(d) = self.pending.peek() {
+            if best.map_or(true, |(bt, _)| d < bt) {
+                best = Some((d, KIND_CIS));
+            }
+        }
+        if self.nr.is_finite() && best.map_or(true, |(bt, _)| self.nr < bt) {
+            best = Some((self.nr, KIND_REQUEST));
+        }
+        best
+    }
+
+    /// Consume the current event of `kind` (the one [`Self::next`]
+    /// reported), sampling the following arrival of that process.
+    pub(crate) fn consume(&mut self, kind: u8, horizon: f64, delay: CisDelay) {
+        match kind {
+            KIND_CHANGE => {
+                debug_assert!(self.na.is_finite(), "consumed a change with none pending");
+                self.na = arrival(&mut self.ch, self.delta, self.na, horizon);
+                if self.na.is_finite() {
+                    self.roll_signal(horizon, delay);
+                }
+            }
+            KIND_REQUEST => {
+                debug_assert!(self.nr.is_finite(), "consumed a request with none pending");
+                self.nr = arrival(&mut self.rq, self.mu, self.nr, horizon);
+            }
+            _ => {
+                let popped = self.pending.pop();
+                debug_assert!(popped.is_some(), "consumed a CIS with none buffered");
+            }
+        }
+    }
+
+    /// Kill the stream: no further events (scenario retirement).
+    pub(crate) fn kill(&mut self) {
+        self.na = f64::INFINITY;
+        self.nf = f64::INFINITY;
+        self.nr = f64::INFINITY;
+        self.pending.clear();
+    }
+
+    /// Scenario CIS-quality shift at time `t`: the change and request
+    /// realizations are untouched (their substreams and next arrivals
+    /// are preserved), the false-positive substream is re-seeded under
+    /// the new `nu`, and in-flight deliveries of the old feed drop
+    /// (the pending buffer clears — including the already-rolled
+    /// signal of the not-yet-arrived next change; coins for changes
+    /// generated after the shift use the new `lam`).
+    pub(crate) fn shift_cis_quality(
+        &mut self,
+        lam: f64,
+        nu: f64,
+        t: f64,
+        horizon: f64,
+        rng: &mut Rng,
+    ) {
+        self.lam = lam;
+        self.nu = nu;
+        self.fp = rng.split64(SUB_CIS);
+        self.pending.clear();
+        self.nf = arrival(&mut self.fp, self.nu, t, horizon);
+    }
+}
+
+/// Lazy event sourcing over a whole population — the streamed analogue
+/// of [`EventTraces`]. Fixed `O(m)` state: one [`PageEventSource`] per
+/// page.
+#[derive(Debug, Clone)]
+pub struct StreamedSource {
+    sources: Vec<PageEventSource>,
+    horizon: f64,
+    delay: CisDelay,
+}
+
+impl StreamedSource {
+    /// Build the per-page sources for an instance over `[0, horizon)`.
+    /// Uses the same per-page master keying as
+    /// [`crate::sim::events::generate_traces`] (`rng.split(i)`), so a
+    /// caller's master RNG advances identically in both modes.
+    pub fn new(
+        pages: &[PageParams],
+        horizon: f64,
+        delay: CisDelay,
+        rng: &mut Rng,
+    ) -> crate::Result<Self> {
+        delay.validate()?;
+        let sources = pages
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut prng = rng.split(i as u64);
+                PageEventSource::new(p, 0.0, horizon, delay, &mut prng)
+            })
+            .collect();
+        Ok(Self { sources, horizon, delay })
+    }
+
+    /// Horizon the streams cover.
+    pub fn horizon(&self) -> f64 {
+        self.horizon
+    }
+
+    /// Drain every page into materialized traces (consumes the
+    /// source — streams are single-pass). Test/bench helper: the lazy
+    /// path's events in trace form, for distributional comparisons and
+    /// for forcing full generation in the memory benches.
+    pub fn materialize(mut self) -> EventTraces {
+        let horizon = self.horizon;
+        let m = self.len();
+        let mut pages = Vec::with_capacity(m);
+        for i in 0..m {
+            let mut tr = PageTrace::default();
+            let mut ev = self.first(i);
+            while let Some((t, k)) = ev {
+                match k {
+                    KIND_CHANGE => tr.changes.push(t),
+                    KIND_CIS => tr.cis.push(t),
+                    _ => tr.requests.push(t),
+                }
+                ev = self.advance(i, k);
+            }
+            pages.push(tr);
+        }
+        EventTraces { pages, horizon }
+    }
+}
+
+impl EventSource for StreamedSource {
+    fn len(&self) -> usize {
+        self.sources.len()
+    }
+
+    fn first(&mut self, i: usize) -> Option<(f64, u8)> {
+        self.sources[i].next(self.horizon, self.delay)
+    }
+
+    fn advance(&mut self, i: usize, kind: u8) -> Option<(f64, u8)> {
+        let s = &mut self.sources[i];
+        s.consume(kind, self.horizon, self.delay);
+        s.next(self.horizon, self.delay)
+    }
+}
+
+/// Exact replay of pre-built traces through the [`EventSource`]
+/// interface: three cursors per page, advancing whichever stream the
+/// consumed event came from. Emits events in exactly the `(time,
+/// kind-rank)` per-page order of the pre-refactor engine's `push_next`,
+/// pinning the frontier merge bit-identical to it.
+#[derive(Debug)]
+pub struct ReplaySource<'a> {
+    pages: &'a [PageTrace],
+    cursors: Vec<[usize; 3]>,
+}
+
+impl<'a> ReplaySource<'a> {
+    /// Replay source with its own cursor storage.
+    pub fn new(pages: &'a [PageTrace]) -> Self {
+        Self::with_cursors(pages, Vec::new())
+    }
+
+    /// Replay source reusing a caller-owned cursor buffer (the
+    /// workspace lends its pool so repetition loops stay
+    /// allocation-free); reclaim it with [`Self::into_cursors`].
+    pub fn with_cursors(pages: &'a [PageTrace], mut cursors: Vec<[usize; 3]>) -> Self {
+        cursors.clear();
+        cursors.resize(pages.len(), [0, 0, 0]);
+        Self { pages, cursors }
+    }
+
+    /// Recover the cursor buffer for reuse.
+    pub fn into_cursors(self) -> Vec<[usize; 3]> {
+        self.cursors
+    }
+
+    /// Earliest pending event across the page's three streams,
+    /// kind-rank tie-break (candidates checked in kind order, so an
+    /// equal-time later kind never displaces an earlier one).
+    #[inline]
+    fn best(&self, i: usize) -> Option<(f64, u8)> {
+        let p = &self.pages[i];
+        let c = &self.cursors[i];
+        let mut best: Option<(f64, u8)> = None;
+        if let Some(&t) = p.changes.get(c[0]) {
+            best = Some((t, KIND_CHANGE));
+        }
+        if let Some(&t) = p.cis.get(c[1]) {
+            if best.map_or(true, |(bt, _)| t < bt) {
+                best = Some((t, KIND_CIS));
+            }
+        }
+        if let Some(&t) = p.requests.get(c[2]) {
+            if best.map_or(true, |(bt, _)| t < bt) {
+                best = Some((t, KIND_REQUEST));
+            }
+        }
+        best
+    }
+}
+
+impl EventSource for ReplaySource<'_> {
+    fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    fn first(&mut self, i: usize) -> Option<(f64, u8)> {
+        // the cursor merge relies on each per-page stream being
+        // time-sorted
+        let p = &self.pages[i];
+        debug_assert!(
+            p.changes.windows(2).all(|w| w[0] <= w[1])
+                && p.cis.windows(2).all(|w| w[0] <= w[1])
+                && p.requests.windows(2).all(|w| w[0] <= w[1]),
+            "page {i}: per-page event streams must be sorted by time"
+        );
+        self.cursors[i] = [0, 0, 0];
+        self.best(i)
+    }
+
+    fn advance(&mut self, i: usize, kind: u8) -> Option<(f64, u8)> {
+        self.cursors[i][kind as usize] += 1;
+        self.best(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page(delta: f64, mu: f64, lam: f64, nu: f64) -> PageParams {
+        PageParams { delta, mu, lam, nu }
+    }
+
+    fn drain(src: &mut StreamedSource, i: usize) -> Vec<(f64, u8)> {
+        let mut out = Vec::new();
+        let mut ev = src.first(i);
+        while let Some((t, k)) = ev {
+            out.push((t, k));
+            ev = src.advance(i, k);
+        }
+        out
+    }
+
+    #[test]
+    fn pending_buffer_keeps_min_at_tail() {
+        let mut p = PendingCis::default();
+        for &t in &[3.0, 1.0, 2.0, 0.5, 2.5] {
+            p.push(t);
+        }
+        let mut drained = Vec::new();
+        while let Some(t) = p.pop() {
+            drained.push(t);
+        }
+        assert_eq!(drained, vec![0.5, 1.0, 2.0, 2.5, 3.0]);
+        assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn page_source_emits_sorted_events_with_kind_rank_ties() {
+        let mut rng = Rng::new(7);
+        let mut src = StreamedSource::new(
+            &[page(1.0, 1.2, 0.7, 0.5)],
+            80.0,
+            CisDelay::Exponential { mean: 0.4 },
+            &mut rng,
+        )
+        .unwrap();
+        let evs = drain(&mut src, 0);
+        assert!(!evs.is_empty());
+        for w in evs.windows(2) {
+            let (t0, k0) = w[0];
+            let (t1, k1) = w[1];
+            assert!(
+                t0 < t1 || (t0 == t1 && k0 <= k1),
+                "events out of (time, kind) order: ({t0}, {k0}) then ({t1}, {k1})"
+            );
+        }
+        assert!(evs.iter().all(|&(t, _)| (0.0..80.0).contains(&t)));
+    }
+
+    #[test]
+    fn zero_rates_produce_no_events_of_that_kind() {
+        let mut rng = Rng::new(8);
+        let mut src =
+            StreamedSource::new(&[page(0.0, 0.0, 0.5, 0.0)], 100.0, CisDelay::None, &mut rng)
+                .unwrap();
+        assert!(drain(&mut src, 0).is_empty(), "all-off page must be silent");
+        let mut rng = Rng::new(9);
+        let mut src =
+            StreamedSource::new(&[page(2.0, 0.0, 0.0, 0.0)], 100.0, CisDelay::None, &mut rng)
+                .unwrap();
+        let evs = drain(&mut src, 0);
+        assert!(!evs.is_empty());
+        assert!(evs.iter().all(|&(_, k)| k == KIND_CHANGE), "only changes expected");
+    }
+
+    #[test]
+    fn instant_delay_pairs_cis_with_signalled_changes() {
+        // λ=1, ν=0, no delay: every change emits a CIS at the exact
+        // same instant, ordered change-then-CIS
+        let mut rng = Rng::new(10);
+        let mut src =
+            StreamedSource::new(&[page(1.5, 0.0, 1.0, 0.0)], 60.0, CisDelay::None, &mut rng)
+                .unwrap();
+        let evs = drain(&mut src, 0);
+        assert!(!evs.is_empty());
+        assert_eq!(evs.len() % 2, 0, "changes and CIS must pair up");
+        for pair in evs.chunks(2) {
+            assert_eq!(pair[0].1, KIND_CHANGE);
+            assert_eq!(pair[1].1, KIND_CIS);
+            assert_eq!(pair[0].0.to_bits(), pair[1].0.to_bits());
+        }
+    }
+
+    #[test]
+    fn dead_window_is_empty() {
+        let mut rng = Rng::new(11);
+        let p = page(2.0, 2.0, 0.5, 0.5);
+        let mut prng = rng.split(0);
+        let mut s = PageEventSource::new(&p, 50.0, 50.0, CisDelay::None, &mut prng);
+        assert!(s.next(50.0, CisDelay::None).is_none());
+        let mut prng2 = rng.split(1);
+        let mut s2 = PageEventSource::new(&p, 60.0, 50.0, CisDelay::None, &mut prng2);
+        assert!(s2.next(50.0, CisDelay::None).is_none());
+    }
+
+    #[test]
+    fn from_t0_events_live_in_their_window() {
+        let mut rng = Rng::new(12);
+        let p = page(2.0, 1.5, 0.5, 0.4);
+        let mut prng = rng.split(0);
+        let delay = CisDelay::Exponential { mean: 0.2 };
+        let mut s = PageEventSource::new(&p, 30.0, 50.0, delay, &mut prng);
+        let mut prev: Option<(f64, u8)> = None;
+        while let Some((t, k)) = s.next(50.0, delay) {
+            assert!((30.0..50.0).contains(&t), "event at {t} outside [30, 50)");
+            if let Some((pt, pk)) = prev {
+                assert!(pt < t || (pt == t && pk <= k), "out of order");
+            }
+            prev = Some((t, k));
+            s.consume(k, 50.0, delay);
+        }
+        assert!(prev.is_some(), "window should contain events");
+    }
+
+    #[test]
+    fn killed_source_emits_nothing() {
+        let mut rng = Rng::new(13);
+        let mut src =
+            StreamedSource::new(&[page(1.0, 1.0, 0.5, 0.5)], 100.0, CisDelay::None, &mut rng)
+                .unwrap();
+        assert!(src.first(0).is_some());
+        src.sources[0].kill();
+        assert!(src.sources[0].next(100.0, CisDelay::None).is_none());
+    }
+
+    #[test]
+    fn replay_source_walks_traces_in_merge_order() {
+        let tr = PageTrace {
+            changes: vec![1.0, 2.0, 5.0],
+            cis: vec![1.0, 3.0],
+            requests: vec![0.5, 2.0, 2.0, 6.0],
+        };
+        let pages = vec![tr];
+        let mut src = ReplaySource::new(&pages);
+        let mut out = Vec::new();
+        let mut ev = src.first(0);
+        while let Some((t, k)) = ev {
+            out.push((t, k));
+            ev = src.advance(0, k);
+        }
+        assert_eq!(
+            out,
+            vec![
+                (0.5, KIND_REQUEST),
+                (1.0, KIND_CHANGE),
+                (1.0, KIND_CIS),
+                (2.0, KIND_CHANGE),
+                (2.0, KIND_REQUEST),
+                (2.0, KIND_REQUEST),
+                (3.0, KIND_CIS),
+                (5.0, KIND_CHANGE),
+                (6.0, KIND_REQUEST),
+            ]
+        );
+        // cursor pool round-trips
+        let pool = src.into_cursors();
+        assert_eq!(pool.len(), 1);
+        let src2 = ReplaySource::with_cursors(&pages, pool);
+        assert_eq!(src2.cursors[0], [0, 0, 0]);
+    }
+
+    #[test]
+    fn materialize_matches_a_second_drain() {
+        let ps = [page(0.8, 1.0, 0.6, 0.3), page(1.2, 0.4, 0.2, 0.6)];
+        let delay = CisDelay::Poisson { mean: 3.0, unit: 0.05 };
+        let mut r1 = Rng::new(21);
+        let mut r2 = Rng::new(21);
+        let src1 = StreamedSource::new(&ps, 40.0, delay, &mut r1).unwrap();
+        let mut src2 = StreamedSource::new(&ps, 40.0, delay, &mut r2).unwrap();
+        let traces = src1.materialize();
+        assert_eq!(traces.horizon, 40.0);
+        for i in 0..ps.len() {
+            let evs = drain(&mut src2, i);
+            let tr = &traces.pages[i];
+            let total = tr.changes.len() + tr.cis.len() + tr.requests.len();
+            assert_eq!(evs.len(), total, "page {i}");
+            assert!(tr.changes.windows(2).all(|w| w[0] <= w[1]));
+            assert!(tr.cis.windows(2).all(|w| w[0] <= w[1]));
+            assert!(tr.requests.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn invalid_delay_is_rejected_at_construction() {
+        let ps = [page(1.0, 1.0, 0.5, 0.5)];
+        for delay in [
+            CisDelay::Exponential { mean: 0.0 },
+            CisDelay::Exponential { mean: -1.0 },
+            CisDelay::Exponential { mean: f64::NAN },
+            CisDelay::Poisson { mean: -1.0, unit: 0.1 },
+            CisDelay::Poisson { mean: 6.0, unit: f64::NAN },
+        ] {
+            let mut rng = Rng::new(1);
+            assert!(
+                StreamedSource::new(&ps, 10.0, delay, &mut rng).is_err(),
+                "{delay:?} must be rejected"
+            );
+        }
+    }
+}

@@ -147,7 +147,7 @@ fn batched_argmax_simulations_bit_identical_to_scalar_reference() {
         let horizon = 50.0;
         let mut trng = Rng::new(40 + seed);
         let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
-        let mut cfg = SimConfig::new(6.0, horizon);
+        let mut cfg = SimConfig::new(6.0, horizon).unwrap();
         if seed % 2 == 0 {
             cfg.cis_discard_window = Some(0.1);
         }
@@ -173,7 +173,7 @@ fn lazy_on_wheel_calendar_keeps_parity_with_exact() {
     {
         let ps = edge_and_random_pages(200, 50 + seed);
         let horizon = 150.0;
-        let cfg = SimConfig::new(8.0, horizon);
+        let cfg = SimConfig::new(8.0, horizon).unwrap();
         let mut acc_exact = 0.0;
         let mut acc_lazy = 0.0;
         let reps = 3u64;

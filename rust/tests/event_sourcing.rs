@@ -1,0 +1,289 @@
+//! Acceptance suite for zero-materialization event sourcing:
+//!
+//! 1. **Replay bit-identity** — the frontier merge engine driving a
+//!    `ReplaySource` over pre-built traces is bit-identical to the
+//!    merged-sort reference engine for every Strategy × policy
+//!    combination (the merge refactor changed the plumbing, not one
+//!    event application);
+//! 2. **Distributional parity** — the lazy `StreamedSource` realizes
+//!    the same stochastic process as `generate_traces`: per-kind event
+//!    counts, inter-arrival moments and a two-sample KS bound on the
+//!    change inter-arrival distribution all agree across modes, and so
+//!    do full-simulation accuracies;
+//! 3. **Pending-buffer ordering** — under delayed delivery
+//!    (`CisDelay::{Exponential, Poisson}`) every page's event stream
+//!    still leaves the source in `(time, kind-rank)` order, inside the
+//!    horizon (the min-buffer invariant).
+
+use ncis_crawl::coordinator::builder::{CrawlerBuilder, Strategy};
+use ncis_crawl::params::PageParams;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::sim::{
+    generate_traces, simulate, simulate_reference, simulate_streamed, CisDelay, EventSource,
+    SimConfig, SimResult, StreamedSource,
+};
+
+fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| PageParams {
+            delta: rng.range(0.05, 1.0),
+            mu: rng.range(0.05, 1.0),
+            lam: rng.f64(),
+            nu: rng.range(0.1, 0.5),
+        })
+        .collect()
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{ctx}: accuracy");
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.fresh_hits, b.fresh_hits, "{ctx}: fresh_hits");
+    assert_eq!(a.crawl_counts, b.crawl_counts, "{ctx}: crawl_counts");
+    assert_eq!(a.ticks, b.ticks, "{ctx}: ticks");
+    assert_eq!(a.timeline.len(), b.timeline.len(), "{ctx}: timeline length");
+    for (k, (x, y)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: timeline[{k}].t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: timeline[{k}].acc");
+    }
+}
+
+// ---- 1. replay adapter pins the frontier engine to the reference ----
+
+#[test]
+fn replay_engine_is_bit_identical_to_reference_for_all_combos() {
+    let m = 40;
+    let horizon = 30.0;
+    let ps = pages(m, 1);
+    let mut rng = Rng::new(2);
+    let traces = generate_traces(&ps, horizon, CisDelay::Exponential { mean: 0.3 }, &mut rng);
+    let mut cfg = SimConfig::new(4.0, horizon).unwrap();
+    cfg.timeline_window = Some(16);
+    cfg.cis_discard_window = Some(0.1);
+
+    let policies = [
+        PolicyKind::Greedy,
+        PolicyKind::GreedyCis,
+        PolicyKind::GreedyNcis,
+        PolicyKind::NcisApprox(2),
+        PolicyKind::GreedyCisPlus,
+    ];
+    let strategies = [
+        Strategy::Exact,
+        Strategy::Lazy,
+        Strategy::LazyWithMargin(0.5),
+        Strategy::Sharded { shards: 3 },
+    ];
+    for policy in policies {
+        for strategy in strategies {
+            let builder = CrawlerBuilder::new().policy(policy).strategy(strategy).pages(&ps);
+            let mut s1 = builder.build().unwrap();
+            let mut s2 = builder.build().unwrap();
+            let a = simulate(&traces, &cfg, s1.as_mut());
+            let b = simulate_reference(&traces, &cfg, s2.as_mut());
+            assert_bit_identical(&a, &b, &format!("{policy:?} × {strategy:?}"));
+        }
+    }
+    // the LDS lane (policy-independent)
+    let builder =
+        CrawlerBuilder::new().strategy(Strategy::Lds).pages(&ps).lds_rates(&vec![1.0; m]);
+    let mut s1 = builder.build().unwrap();
+    let mut s2 = builder.build().unwrap();
+    let a = simulate(&traces, &cfg, s1.as_mut());
+    let b = simulate_reference(&traces, &cfg, s2.as_mut());
+    assert_bit_identical(&a, &b, "LDS");
+}
+
+// ---- 2. streamed vs materialized distributional parity ----
+
+/// Per-kind totals over the whole population.
+fn totals(tr: &ncis_crawl::sim::EventTraces) -> (f64, f64, f64) {
+    let (c, s, r) = tr.counts();
+    (c as f64, s as f64, r as f64)
+}
+
+#[test]
+fn streamed_counts_match_materialized_and_expectation() {
+    // constant-parameter population so expectations are exact:
+    // E[changes] = mΔT, E[cis] = m(λΔ + ν)T, E[requests] = mμT
+    let m = 60;
+    let horizon = 80.0;
+    let ps: Vec<PageParams> =
+        (0..m).map(|_| PageParams { delta: 0.5, mu: 0.8, lam: 0.6, nu: 0.2 }).collect();
+    let mut r1 = Rng::new(11);
+    let mut r2 = Rng::new(12);
+    let mat = generate_traces(&ps, horizon, CisDelay::None, &mut r1);
+    let st = StreamedSource::new(&ps, horizon, CisDelay::None, &mut r2)
+        .unwrap()
+        .materialize();
+    let (ec, es, er) = (
+        m as f64 * 0.5 * horizon,
+        m as f64 * (0.6 * 0.5 + 0.2) * horizon,
+        m as f64 * 0.8 * horizon,
+    );
+    for (label, expect, a, b) in [
+        ("changes", ec, totals(&mat).0, totals(&st).0),
+        ("cis", es, totals(&mat).1, totals(&st).1),
+        ("requests", er, totals(&mat).2, totals(&st).2),
+    ] {
+        let tol = 5.0 * expect.sqrt();
+        assert!((a - expect).abs() < tol, "{label}: materialized {a} vs E {expect}");
+        assert!((b - expect).abs() < tol, "{label}: streamed {b} vs E {expect}");
+        assert!((a - b).abs() < 2.0 * tol, "{label}: modes diverge ({a} vs {b})");
+    }
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic.
+fn ks_statistic(mut a: Vec<f64>, mut b: Vec<f64>) -> f64 {
+    a.sort_unstable_by(f64::total_cmp);
+    b.sort_unstable_by(f64::total_cmp);
+    let (n, m) = (a.len(), b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d = 0.0f64;
+    while i < n && j < m {
+        if a[i] <= b[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+        let diff = (i as f64 / n as f64 - j as f64 / m as f64).abs();
+        if diff > d {
+            d = diff;
+        }
+    }
+    d
+}
+
+fn inter_arrivals(streams: &[Vec<f64>]) -> Vec<f64> {
+    let mut out = Vec::new();
+    for s in streams {
+        for w in s.windows(2) {
+            out.push(w[1] - w[0]);
+        }
+    }
+    out
+}
+
+#[test]
+fn streamed_interarrivals_match_materialized_ks() {
+    // same Δ for every page → pooled change inter-arrivals are one
+    // Exp(Δ) sample per mode; the two samples must agree (two-sample
+    // KS) and match the analytic mean
+    let m = 40;
+    let horizon = 50.0;
+    let delta = 0.8;
+    let ps: Vec<PageParams> =
+        (0..m).map(|_| PageParams { delta, mu: 0.1, lam: 0.3, nu: 0.1 }).collect();
+    let mut r1 = Rng::new(21);
+    let mut r2 = Rng::new(22);
+    let mat = generate_traces(&ps, horizon, CisDelay::None, &mut r1);
+    let st = StreamedSource::new(&ps, horizon, CisDelay::None, &mut r2)
+        .unwrap()
+        .materialize();
+    let a = inter_arrivals(&mat.pages.iter().map(|p| p.changes.clone()).collect::<Vec<_>>());
+    let b = inter_arrivals(&st.pages.iter().map(|p| p.changes.clone()).collect::<Vec<_>>());
+    assert!(a.len() > 800 && b.len() > 800, "need real sample sizes: {} {}", a.len(), b.len());
+    let mean_a: f64 = a.iter().sum::<f64>() / a.len() as f64;
+    let mean_b: f64 = b.iter().sum::<f64>() / b.len() as f64;
+    // truncation-biased slightly below 1/Δ = 1.25; both modes share
+    // it. ~4.5σ bound on the difference of two n≈1500 sample means —
+    // catches systematic rate errors, never same-distribution noise
+    assert!((mean_a - mean_b).abs() < 0.2, "means diverge: {mean_a} vs {mean_b}");
+    assert!((mean_a - 1.25).abs() < 0.2, "materialized mean far from 1/Δ: {mean_a}");
+    assert!((mean_b - 1.25).abs() < 0.2, "streamed mean far from 1/Δ: {mean_b}");
+    let n_eff = (a.len().min(b.len())) as f64;
+    let d = ks_statistic(a, b);
+    // D_crit(α=0.05) ≈ 1.36·sqrt(2/n); allow ~2× for a hard bound
+    let bound = 2.0 * 1.36 * (2.0 / n_eff).sqrt();
+    assert!(d < bound, "KS statistic {d} above bound {bound}");
+}
+
+#[test]
+fn streamed_accuracy_matches_materialized_across_reps() {
+    // full pipeline: same instance, R reps per mode with per-rep
+    // seeds, mean accuracies must agree within statistical tolerance
+    let ps = pages(50, 31);
+    let cfg = SimConfig::new(5.0, 60.0).unwrap();
+    let reps = 8u64;
+    let builder =
+        CrawlerBuilder::new().policy(PolicyKind::GreedyNcis).strategy(Strategy::Lazy).pages(&ps);
+    let mut acc_mat = 0.0;
+    let mut acc_st = 0.0;
+    for rep in 0..reps {
+        let mut sched = builder.build().unwrap();
+        let mut trng = Rng::new(100 + rep);
+        let traces = generate_traces(&ps, cfg.horizon, CisDelay::None, &mut trng);
+        acc_mat += simulate(&traces, &cfg, sched.as_mut()).accuracy;
+
+        let mut sched = builder.build().unwrap();
+        let mut trng = Rng::new(100 + rep);
+        acc_st += simulate_streamed(&ps, &cfg, CisDelay::None, &mut trng, sched.as_mut())
+            .unwrap()
+            .accuracy;
+    }
+    let (ma, ms) = (acc_mat / reps as f64, acc_st / reps as f64);
+    assert!((0.0..=1.0).contains(&ma) && (0.0..=1.0).contains(&ms));
+    assert!(
+        (ma - ms).abs() < 0.08,
+        "mode accuracies diverge: materialized {ma:.4} vs streamed {ms:.4}"
+    );
+}
+
+// ---- 3. pending-buffer ordering under delayed delivery ----
+
+#[test]
+fn pending_buffer_keeps_order_under_delay_models() {
+    for (seed, delay) in [
+        (41u64, CisDelay::Exponential { mean: 0.5 }),
+        (42, CisDelay::Exponential { mean: 2.0 }),
+        (43, CisDelay::Poisson { mean: 6.0, unit: 0.05 }),
+        (44, CisDelay::Poisson { mean: 2.0, unit: 0.5 }),
+    ] {
+        let horizon = 60.0;
+        let ps = pages(25, seed);
+        let mut rng = Rng::new(seed ^ 0xABC);
+        let mut src = StreamedSource::new(&ps, horizon, delay, &mut rng).unwrap();
+        let mut total = 0usize;
+        for i in 0..src.len() {
+            let mut prev: Option<(f64, u8)> = None;
+            let mut ev = src.first(i);
+            while let Some((t, k)) = ev {
+                assert!(
+                    (0.0..horizon).contains(&t),
+                    "{delay:?} page {i}: event at {t} outside horizon"
+                );
+                if let Some((pt, pk)) = prev {
+                    assert!(
+                        pt < t || (pt == t && pk <= k),
+                        "{delay:?} page {i}: out of order ({pt}, {pk}) -> ({t}, {k})"
+                    );
+                }
+                prev = Some((t, k));
+                total += 1;
+                ev = src.advance(i, k);
+            }
+        }
+        assert!(total > 500, "{delay:?}: suspiciously few events ({total})");
+    }
+}
+
+#[test]
+fn delayed_cis_counts_match_materialized() {
+    // the delay model reorders and horizon-truncates deliveries; both
+    // paths must keep the same delivered-CIS volume
+    let m = 50;
+    let horizon = 60.0;
+    let ps: Vec<PageParams> =
+        (0..m).map(|_| PageParams { delta: 0.7, mu: 0.1, lam: 0.8, nu: 0.3 }).collect();
+    let delay = CisDelay::Poisson { mean: 6.0, unit: 0.1 };
+    let mut r1 = Rng::new(51);
+    let mut r2 = Rng::new(52);
+    let mat = generate_traces(&ps, horizon, delay, &mut r1);
+    let st = StreamedSource::new(&ps, horizon, delay, &mut r2).unwrap().materialize();
+    let a = totals(&mat).1;
+    let b = totals(&st).1;
+    let expect = m as f64 * (0.8 * 0.7 + 0.3) * horizon; // upper bound (pre-truncation)
+    assert!(a > 0.5 * expect && b > 0.5 * expect, "deliveries collapsed: {a} {b}");
+    assert!((a - b).abs() < 10.0 * expect.sqrt(), "modes diverge: {a} vs {b}");
+}

@@ -163,7 +163,7 @@ fn scheduler_with_pjrt_backend_matches_native_accuracy() {
         })
         .collect();
     let horizon = 80.0;
-    let cfg = SimConfig::new(5.0, horizon);
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
     for kind in [PolicyKind::Greedy, PolicyKind::GreedyCis, PolicyKind::GreedyNcis] {
         let mut acc_native = 0.0;
         let mut acc_pjrt = 0.0;

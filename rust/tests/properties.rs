@@ -164,7 +164,7 @@ fn prop_simulator_budget_never_exceeded() {
             let horizon = 40.0;
             let mut rng = Rng::new(*seed);
             let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut rng);
-            let cfg = SimConfig::new(inst.bandwidth, horizon);
+            let cfg = SimConfig::new(inst.bandwidth, horizon).unwrap();
             let mut sched =
                 GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
             let res = simulate(&traces, &cfg, &mut sched);
@@ -369,7 +369,7 @@ fn prop_simulator_deterministic_per_seed() {
             let mut t2 = Rng::new(seed ^ 2);
             let tr1 = generate_traces(&inst.pages, 40.0, CisDelay::None, &mut t1);
             let tr2 = generate_traces(&inst2.pages, 40.0, CisDelay::None, &mut t2);
-            let cfg = SimConfig::new(5.0, 40.0);
+            let cfg = SimConfig::new(5.0, 40.0).unwrap();
             let mut s1 = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst.pages, ValueBackend::Native);
             let mut s2 = GreedyScheduler::new(PolicyKind::GreedyNcis, &inst2.pages, ValueBackend::Native);
             let a = simulate(&tr1, &cfg, &mut s1);

@@ -117,7 +117,7 @@ fn empty_scenario_is_bit_identical_to_static_engine_for_all_combos() {
     let ps = pages(m, 1);
     let mut rng = Rng::new(2);
     let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
-    let mut cfg = SimConfig::new(4.0, horizon);
+    let mut cfg = SimConfig::new(4.0, horizon).unwrap();
     cfg.timeline_window = Some(16);
     cfg.cis_discard_window = Some(0.1);
     let empty = Scenario::new(ps.clone(), 99);
@@ -166,7 +166,7 @@ fn empty_scenario_is_bit_identical_to_static_engine_for_all_combos() {
 fn churn_scenario_replay_is_bit_identical() {
     let horizon = 60.0;
     let ps = pages(60, 3);
-    let cfg = SimConfig::new(5.0, horizon);
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
     for strategy in [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }] {
         let run = || {
             // everything rebuilt from scratch: scenario, traces,
@@ -209,7 +209,7 @@ fn retired_page_is_never_crawled_after_retirement() {
     for &victim in &[3usize, 11, 27] {
         sc.push(20.0, WorldEvent::PageRetired { page: victim });
     }
-    let cfg = SimConfig::new(4.0, horizon);
+    let cfg = SimConfig::new(4.0, horizon).unwrap();
     for strategy in [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }] {
         let mut trng = Rng::new(51);
         let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
@@ -326,7 +326,7 @@ fn recycled_slot_never_inherits_stale_tracker_state() {
         .at(20.0, WorldEvent::PageBorn { params: silent });
     let mut trng = Rng::new(61);
     let traces = generate_traces(&ps, 60.0, CisDelay::None, &mut trng);
-    let cfg = SimConfig::new(2.0, 60.0);
+    let cfg = SimConfig::new(2.0, 60.0).unwrap();
     let mut sched = Recorder::new(CisHungry::new());
     let mut ws = ScenarioWorkspace::new();
     simulate_scenario_with(&mut ws, &traces, &cfg, &sc, &mut sched);
@@ -358,7 +358,7 @@ fn two_rep_dynamic_reuse_is_bit_identical_to_fresh() {
     let horizon = 50.0;
     let ps = pages(50, 7);
     let sc = dynamic_scenario(&ps, 4321, horizon);
-    let cfg = SimConfig::new(5.0, horizon);
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
     for strategy in [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }] {
         let builder = CrawlerBuilder::new()
             .policy(PolicyKind::GreedyNcis)

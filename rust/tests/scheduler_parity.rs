@@ -133,7 +133,7 @@ fn event_driven_exact_greedy_reproduces_pre_redesign() {
         let horizon = 60.0;
         let mut trng = Rng::new(100 + seed);
         let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
-        let mut cfg = SimConfig::new(6.0, horizon);
+        let mut cfg = SimConfig::new(6.0, horizon).unwrap();
         if seed % 2 == 0 {
             cfg.cis_discard_window = Some(0.1);
         }
@@ -229,7 +229,7 @@ fn page_tracker_matches_pre_redesign_engine_slice() {
     let ps = pages(20, 7);
     let mut trng = Rng::new(8);
     let traces = generate_traces(&ps, 50.0, CisDelay::Exponential { mean: 0.3 }, &mut trng);
-    let mut cfg = SimConfig::new(5.0, 50.0);
+    let mut cfg = SimConfig::new(5.0, 50.0).unwrap();
     cfg.cis_discard_window = Some(0.15);
     let mut audit = TrackerAudit {
         tracker: PageTracker::default(),
@@ -266,7 +266,7 @@ fn lds_event_api_matches_raw_sequence() {
 fn builder_output_is_bit_identical_to_hand_construction() {
     let ps = pages(50, 21);
     let horizon = 50.0;
-    let cfg = SimConfig::new(5.0, horizon);
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
     let mut trng = Rng::new(22);
     let traces = generate_traces(&ps, horizon, CisDelay::None, &mut trng);
 
@@ -411,7 +411,7 @@ fn pjrt_backend_constructible_for_every_strategy() {
             .unwrap();
         let mut trng = Rng::new(52);
         let traces = generate_traces(&ps, 10.0, CisDelay::None, &mut trng);
-        let cfg = SimConfig::new(3.0, 10.0);
+        let cfg = SimConfig::new(3.0, 10.0).unwrap();
         let res = simulate(&traces, &cfg, sched.as_mut());
         assert!((0.0..=1.0).contains(&res.accuracy), "{strategy:?}");
     }
