@@ -69,7 +69,8 @@ fn main() {
             r,
             horizon,
             7,
-        );
+        )
+        .unwrap();
         fig.rowf(&[n as f64, run.accuracy]);
     }
     fig.finish().unwrap();

@@ -20,6 +20,10 @@
 //!   simulation throughput (`sim_{materialized,streamed}_*`;
 //!   acceptance: ≤ 1.2× at m=1e5), and one full streamed repetition at
 //!   m=1e6 (`sim_streamed_m1000000`)
+//! - fault layer: the fault engine with the zero-fault model vs the
+//!   plain engine (`fault_overhead_*`; acceptance: ≤ 1.05× at m=1e5)
+//!   and degraded-mode throughput under a heavy fault mix
+//!   (`fault_degraded_*`)
 //!
 //! Every lane is also recorded into `BENCH_perf.json` (via
 //! `benchkit::BenchJson`) so future PRs have a machine-readable perf
@@ -839,6 +843,134 @@ fn bench_event_sourcing(json: &mut BenchJson, smoke: bool) -> Vec<String> {
     declared
 }
 
+/// Fault-layer lanes (the fault-injection acceptance bars):
+///
+/// - `fault_overhead_m*`: the fault engine with the inert
+///   (zero-fault) model vs the plain engine on the same traces and
+///   scheduler — measures the cost of carrying the outcome/retry
+///   machinery when it is disabled. Acceptance: ≤ 1.05× at m=1e5.
+/// - `fault_degraded_m*`: the same cell under a heavy fault mix
+///   (transient + timeout + correlated outages, exponential-backoff
+///   retries) — the wasted-bandwidth fraction and throughput of the
+///   degraded mode, recorded for trajectory rather than gated.
+///
+/// Returns the declared acceptance lane names.
+fn bench_faults(json: &mut BenchJson, smoke: bool) -> Vec<String> {
+    use ncis_crawl::fault::{
+        simulate_faulty_with, FaultConfig, FaultModel, RetryPolicy,
+    };
+    let mut declared = Vec::new();
+    let m: usize = if smoke { 2_048 } else { 100_000 };
+    let horizon = 10.0;
+    let r = if smoke { 200.0 } else { 2_000.0 };
+    println!("\n-- fault layer: inert-model overhead and degraded mode (m={m}) --");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let mut irng = Rng::new(41);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let mut trng = Rng::new(42);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(r, horizon).expect("valid bench bandwidth");
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+
+    // plain engine baseline (same construction idiom as the other lanes)
+    let secs_plain = {
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_with(&mut ws, &traces, &cfg, sched.as_mut()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("plain engine         m={m}"), &meas);
+        json.lane(
+            &format!("fault_baseline_m{m}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        meas.mean_s
+    };
+
+    // fault engine, zero-fault model: the overhead acceptance lane
+    let secs_inert = {
+        let mut ws = SimWorkspace::new();
+        let mut model = FaultModel::inert();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_faulty_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    sched.as_mut(),
+                    &mut model,
+                    RetryPolicy::default(),
+                ));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("fault engine (inert) m={m}"), &meas);
+        json.lane(
+            &format!("fault_inert_m{m}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        meas.mean_s
+    };
+    let overhead = secs_inert / secs_plain.max(1e-12);
+    println!("fault-disabled overhead: {overhead:.3}x (acceptance: <= 1.05x)");
+    let lane = format!("fault_overhead_m{m}");
+    json.lane(&lane, &[("x", overhead)]);
+    declared.push(lane);
+
+    // degraded mode: heavy fault mix with backoff retries
+    {
+        let mut fault_cfg = FaultConfig {
+            transient_prob: 0.2,
+            timeout_prob: 0.05,
+            gone_prob: 0.001,
+            hosts: 50,
+            outages: Vec::new(),
+            seed: 43,
+        };
+        fault_cfg.add_correlated_outages(20, horizon / 20.0, horizon, 44);
+        let mut model = FaultModel::new(fault_cfg).expect("valid bench fault config");
+        let mut ws = SimWorkspace::new();
+        let mut wasted = 0.0;
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                let res = simulate_faulty_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    sched.as_mut(),
+                    &mut model,
+                    RetryPolicy::default(),
+                );
+                wasted = res.faults.wasted_fraction();
+                std::hint::black_box(res);
+            },
+            3,
+            0.2,
+        );
+        report(&format!("fault engine (heavy) m={m}"), &meas);
+        println!("{:>46} wasted-bandwidth fraction {wasted:.3}", "");
+        json.lane(
+            &format!("fault_degraded_m{m}"),
+            &[
+                ("seconds_per_rep", meas.mean_s),
+                ("ticks_per_s", r * horizon / meas.mean_s),
+                ("wasted_fraction", wasted),
+            ],
+        );
+    }
+    declared
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -862,6 +994,7 @@ fn main() {
     bench_end_to_end(&mut json, smoke);
     bench_cell_engines(&mut json, smoke);
     let mut declared = bench_event_sourcing(&mut json, smoke);
+    declared.extend(bench_faults(&mut json, smoke));
 
     // declared-lane manifest: the acceptance-critical lanes every run
     // of this bench must record, in both --smoke and full mode. CI

@@ -273,7 +273,7 @@ impl GreedyScheduler {
             // slots (the device-side argmax cannot mask either)
             let values = engine
                 .crawl_values(terms, &self.batch)
-                .expect("pjrt crawl value execution failed");
+                .unwrap_or_else(|e| panic!("pjrt crawl value execution failed: {e}"));
             let mut best = f32::NEG_INFINITY;
             let mut arg = None;
             for (i, &v) in values.iter().enumerate() {
@@ -296,7 +296,7 @@ impl GreedyScheduler {
         }
         let (values, idx, best) = engine
             .crawl_values_argmax(terms, &self.batch)
-            .expect("pjrt crawl value execution failed");
+            .unwrap_or_else(|e| panic!("pjrt crawl value execution failed: {e}"));
         for (dst, &v) in self.last_values.iter_mut().zip(&values) {
             *dst = v as f64;
         }

@@ -214,7 +214,7 @@ impl LazyGreedyScheduler {
                 self.batch.push(iota, &self.model.belief(i));
                 let values = engine
                     .crawl_values(*terms, &self.batch)
-                    .expect("pjrt crawl value execution failed");
+                    .unwrap_or_else(|e| panic!("pjrt crawl value execution failed: {e}"));
                 values[0] as f64
             }
         };

@@ -111,6 +111,10 @@ pub struct PipelineMetrics {
     pub world_applied: AtomicU64,
     /// Ingestion stalls caused by a full shard queue (backpressure).
     pub backpressure_stalls: AtomicU64,
+    /// Messages dropped because a shard's receiver was gone (the worker
+    /// died mid-run). Nonzero only in degraded runs — the multiplexer
+    /// keeps the surviving shards fed instead of hanging.
+    pub channel_drops: AtomicU64,
 }
 
 /// One shard worker: owns its event-driven scheduler, consumes its queue.
@@ -156,7 +160,11 @@ fn shard_worker(
     crawl_counts
 }
 
-/// Blocking send with backpressure accounting.
+/// Blocking send with backpressure accounting. A disconnected receiver
+/// (its worker died) drops the message — counted in
+/// [`PipelineMetrics::channel_drops`] so degraded runs are visible —
+/// rather than hanging the multiplexer; the dead worker itself surfaces
+/// as [`crate::Error::WorkerFailed`] at join time.
 fn send_backpressured(
     tx: &SyncSender<ShardMsg>,
     msg: ShardMsg,
@@ -171,7 +179,10 @@ fn send_backpressured(
                 m = back;
                 std::thread::yield_now();
             }
-            Err(TrySendError::Disconnected(_)) => return,
+            Err(TrySendError::Disconnected(_)) => {
+                metrics.channel_drops.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
         }
     }
 }
@@ -280,6 +291,8 @@ pub struct PipelineReport {
     pub world_applied: u64,
     /// Backpressure stalls observed.
     pub backpressure_stalls: u64,
+    /// Messages dropped on dead shard channels (degraded runs only).
+    pub channel_drops: u64,
     /// Wall-clock duration of the run.
     pub wall: std::time::Duration,
 }
@@ -346,19 +359,8 @@ fn run_pipeline_events<I: Iterator<Item = (f64, usize)>>(
             "run_pipeline: at least one shard required".into(),
         ));
     }
-    let metrics = Arc::new(PipelineMetrics::default());
     let plan = crate::coordinator::shard::ShardPlan::round_robin(pages.len(), cfg.shards);
     let members = plan.shard_members();
-    // page → shard and local-slot maps; mutable because births extend
-    // them mid-run
-    let mut assignment = plan.assignment.clone();
-    let mut member_count: Vec<usize> = members.iter().map(|m| m.len()).collect();
-    let mut local_index = vec![0usize; pages.len()];
-    for member in &members {
-        for (li, &gi) in member.iter().enumerate() {
-            local_index[gi] = li;
-        }
-    }
     // stamp every shard scheduler up front: template errors return Err
     // here, before any thread exists; shards > pages leaves some shards
     // empty and they idle their ticks away instead of failing validation.
@@ -372,9 +374,52 @@ fn run_pipeline_events<I: Iterator<Item = (f64, usize)>>(
             scheduler.shard_template(pages, member).build()?
         });
     }
+    run_pipeline_with_schedulers(pages, scheds, cis_events, world_events, cfg)
+}
+
+/// The topology with caller-built shard schedulers — one
+/// `Box<dyn CrawlScheduler + Send>` per shard, pages round-robin
+/// sharded as everywhere else. This is the injection point for
+/// resilience tests (and custom decorators the builder doesn't know):
+/// a worker whose scheduler panics is caught at join time and surfaced
+/// as [`crate::Error::WorkerFailed`] carrying the panic payloads plus
+/// the *salvaged* per-shard crawl totals of the surviving shards — the
+/// process never aborts and sibling work is never discarded.
+pub fn run_pipeline_with_schedulers<I: Iterator<Item = (f64, usize)>>(
+    pages: &[PageParams],
+    scheds: Vec<Box<dyn CrawlScheduler + Send>>,
+    cis_events: I,
+    world_events: &[(f64, WorldMsg)], // sorted by time
+    cfg: &PipelineConfig,
+) -> crate::Result<PipelineReport> {
+    if cfg.shards == 0 {
+        return Err(crate::Error::Usage(
+            "run_pipeline: at least one shard required".into(),
+        ));
+    }
+    if scheds.len() != cfg.shards {
+        return Err(crate::Error::Usage(format!(
+            "run_pipeline: {} schedulers for {} shards",
+            scheds.len(),
+            cfg.shards
+        )));
+    }
+    let metrics = Arc::new(PipelineMetrics::default());
+    let plan = crate::coordinator::shard::ShardPlan::round_robin(pages.len(), cfg.shards);
+    let members = plan.shard_members();
+    // page → shard and local-slot maps; mutable because births extend
+    // them mid-run
+    let mut assignment = plan.assignment.clone();
+    let mut member_count: Vec<usize> = members.iter().map(|m| m.len()).collect();
+    let mut local_index = vec![0usize; pages.len()];
+    for member in &members {
+        for (li, &gi) in member.iter().enumerate() {
+            local_index[gi] = li;
+        }
+    }
     let start = std::time::Instant::now();
     let mut crawls_per_shard = vec![0u64; cfg.shards];
-    std::thread::scope(|scope| {
+    let failed: Vec<(usize, String)> = std::thread::scope(|scope| {
         let mut senders: Vec<SyncSender<ShardMsg>> = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
         for (member, sched) in members.iter().zip(scheds) {
@@ -439,14 +484,15 @@ fn run_pipeline_events<I: Iterator<Item = (f64, usize)>>(
                 }
                 wev += 1;
             } else if next_cis.is_finite() && next_cis <= next_tick {
-                let (t, gpage) = cis.next().expect("peeked CIS must exist");
-                if t <= cfg.horizon && gpage < assignment.len() {
-                    let s = assignment[gpage];
-                    send_backpressured(
-                        &senders[s],
-                        ShardMsg::Cis { page: local_index[gpage], t },
-                        &metrics,
-                    );
+                if let Some((t, gpage)) = cis.next() {
+                    if t <= cfg.horizon && gpage < assignment.len() {
+                        let s = assignment[gpage];
+                        send_backpressured(
+                            &senders[s],
+                            ShardMsg::Cis { page: local_index[gpage], t },
+                            &metrics,
+                        );
+                    }
                 }
             } else {
                 if tick_idx > total_ticks {
@@ -461,17 +507,34 @@ fn run_pipeline_events<I: Iterator<Item = (f64, usize)>>(
             let _ = tx.send(ShardMsg::Shutdown);
         }
         drop(senders);
+        // graceful degradation: a panicked worker is recorded (payload
+        // stringified), its siblings' counts are salvaged — never abort
+        let mut failed: Vec<(usize, String)> = Vec::new();
         for (s, h) in handles.into_iter().enumerate() {
-            let counts = h.join().expect("shard worker panicked");
-            crawls_per_shard[s] = counts.iter().map(|&c| c as u64).sum();
+            match h.join() {
+                Ok(counts) => crawls_per_shard[s] = counts.iter().map(|&c| c as u64).sum(),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|m| (*m).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    failed.push((s, msg));
+                }
+            }
         }
+        failed
     });
+    if !failed.is_empty() {
+        return Err(crate::Error::WorkerFailed { failed, crawls_per_shard });
+    }
     Ok(PipelineReport {
         total_crawls: crawls_per_shard.iter().sum(),
         crawls_per_shard,
         cis_applied: metrics.cis_applied.load(Ordering::Relaxed),
         world_applied: metrics.world_applied.load(Ordering::Relaxed),
         backpressure_stalls: metrics.backpressure_stalls.load(Ordering::Relaxed),
+        channel_drops: metrics.channel_drops.load(Ordering::Relaxed),
         wall: start.elapsed(),
     })
 }
@@ -517,7 +580,7 @@ mod tests {
         let mut cis: Vec<(f64, usize)> = (0..500)
             .map(|_| (rng.range(0.0, 40.0), rng.below(16) as usize))
             .collect();
-        cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cis.sort_by(|a, b| a.0.total_cmp(&b.0));
         let cfg = PipelineConfig { shards: 2, queue_depth: 8, bandwidth: 10.0, horizon: 40.0 };
         let report = run_pipeline(&ps, &lazy_ncis(), &cis, &cfg).unwrap();
         assert_eq!(report.cis_applied, 500);
@@ -531,7 +594,7 @@ mod tests {
         let mut cis: Vec<(f64, usize)> = (0..5_000)
             .map(|_| (rng.range(0.0, 10.0), rng.below(32) as usize))
             .collect();
-        cis.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cis.sort_by(|a, b| a.0.total_cmp(&b.0));
         let cfg = PipelineConfig { shards: 2, queue_depth: 2, bandwidth: 50.0, horizon: 10.0 };
         let report = run_pipeline(&ps, &lazy_ncis(), &cis, &cfg).unwrap();
         assert_eq!(report.cis_applied, 5_000, "no CIS may be dropped");
@@ -648,6 +711,85 @@ mod tests {
         assert_eq!(a.cis_applied, b.cis_applied);
         assert_eq!(a.total_crawls, b.total_crawls);
         assert_eq!(a.crawls_per_shard, b.crawls_per_shard);
+    }
+
+    /// Round-robin over local pages; panics at the `fuse` tick if set.
+    struct FusedRoundRobin {
+        m: usize,
+        next: usize,
+        ticks: u64,
+        fuse: Option<u64>,
+    }
+    impl FusedRoundRobin {
+        fn new(fuse: Option<u64>) -> Self {
+            Self { m: 0, next: 0, ticks: 0, fuse }
+        }
+    }
+    impl CrawlScheduler for FusedRoundRobin {
+        fn on_start(&mut self, m: usize) {
+            self.m = m;
+            self.next = 0;
+            self.ticks = 0;
+        }
+        fn select(&mut self, _t: f64) -> Option<usize> {
+            self.ticks += 1;
+            if self.fuse.is_some_and(|f| self.ticks >= f) {
+                panic!("injected shard failure");
+            }
+            let i = self.next;
+            self.next = (self.next + 1) % self.m;
+            Some(i)
+        }
+    }
+
+    #[test]
+    fn injected_worker_panic_yields_err_with_salvage() {
+        // 4 shards, shard 2's scheduler blows up on its 10th tick: the
+        // run must surface Err(WorkerFailed) — not abort — and salvage
+        // the full tick counts of the three surviving shards
+        let ps = pages(16);
+        let cfg = PipelineConfig { shards: 4, queue_depth: 8, bandwidth: 20.0, horizon: 50.0 };
+        let scheds: Vec<Box<dyn CrawlScheduler + Send>> = (0..4)
+            .map(|s| {
+                Box::new(FusedRoundRobin::new((s == 2).then_some(10)))
+                    as Box<dyn CrawlScheduler + Send>
+            })
+            .collect();
+        let err = run_pipeline_with_schedulers(&ps, scheds, std::iter::empty(), &[], &cfg)
+            .expect_err("a panicked worker must surface as Err");
+        match err {
+            crate::Error::WorkerFailed { failed, crawls_per_shard } => {
+                assert_eq!(failed.len(), 1);
+                assert_eq!(failed[0].0, 2);
+                assert!(failed[0].1.contains("injected shard failure"), "{}", failed[0].1);
+                // 1000 ticks round-robin over 4 shards = 250 each; the
+                // dead shard reports 0, siblings keep their full count
+                assert_eq!(crawls_per_shard[0], 250);
+                assert_eq!(crawls_per_shard[1], 250);
+                assert_eq!(crawls_per_shard[3], 250);
+                assert_eq!(crawls_per_shard[2], 0, "failed shard salvages nothing");
+            }
+            other => panic!("expected WorkerFailed, got {other}"),
+        }
+    }
+
+    #[test]
+    fn caller_built_schedulers_run_the_full_topology() {
+        let ps = pages(12);
+        let cfg = PipelineConfig { shards: 3, queue_depth: 8, bandwidth: 12.0, horizon: 10.0 };
+        let scheds: Vec<Box<dyn CrawlScheduler + Send>> = (0..3)
+            .map(|_| Box::new(FusedRoundRobin::new(None)) as Box<dyn CrawlScheduler + Send>)
+            .collect();
+        let report =
+            run_pipeline_with_schedulers(&ps, scheds, std::iter::empty(), &[], &cfg).unwrap();
+        assert_eq!(report.total_crawls, 120);
+        assert_eq!(report.channel_drops, 0, "healthy run drops nothing");
+        // scheduler-count mismatch is a usage error, not a panic
+        let one: Vec<Box<dyn CrawlScheduler + Send>> =
+            vec![Box::new(FusedRoundRobin::new(None))];
+        assert!(
+            run_pipeline_with_schedulers(&ps, one, std::iter::empty(), &[], &cfg).is_err()
+        );
     }
 
     #[test]

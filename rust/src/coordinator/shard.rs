@@ -51,15 +51,16 @@ impl ShardPlan {
 pub fn rebalance(loads: &[f64], shards: usize) -> ShardPlan {
     assert!(shards > 0);
     let mut order: Vec<usize> = (0..loads.len()).collect();
-    order.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap());
+    // total_cmp: a NaN load sorts deterministically instead of aborting
+    order.sort_by(|&a, &b| loads[b].total_cmp(&loads[a]));
     let mut shard_load = vec![0.0f64; shards];
     let mut assignment = vec![0usize; loads.len()];
     for &i in &order {
         let (s, _) = shard_load
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap_or((0, &0.0));
         assignment[i] = s;
         shard_load[s] += loads[i].max(0.0);
     }
@@ -180,6 +181,11 @@ impl CrawlScheduler for ShardedScheduler {
         self.inner[s].on_veto(self.local_index[page], t);
     }
 
+    fn on_crawl_failed(&mut self, page: usize, t: f64, outcome: crate::fault::CrawlOutcome) {
+        let s = self.plan.assignment[page];
+        self.inner[s].on_crawl_failed(self.local_index[page], t, outcome);
+    }
+
     fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
         self.world_mutated = true;
         if page == self.plan.assignment.len() {
@@ -249,6 +255,12 @@ pub struct ShardedRun {
 /// stream) in parallel via scoped threads, and merge accuracy. Per-shard
 /// schedulers are constructed through [`crate::CrawlerBuilder`] (lazy
 /// strategy, native backend).
+///
+/// Construction problems (bad bandwidth, invalid scheduler template)
+/// surface as `Err` *before* any thread spawns; a shard thread that
+/// panics mid-run surfaces as [`crate::Error::WorkerFailed`] with the
+/// surviving shards' crawl totals salvaged — no path aborts the
+/// process.
 pub fn run_sharded(
     pages: &[PageParams],
     plan: &ShardPlan,
@@ -256,42 +268,72 @@ pub fn run_sharded(
     bandwidth: f64,
     horizon: f64,
     seed: u64,
-) -> ShardedRun {
+) -> crate::Result<ShardedRun> {
     let members = plan.shard_members();
     let shard_r = bandwidth / plan.shards as f64;
+    let cfg = SimConfig::new(shard_r, horizon)?;
+    // build every shard's scheduler up front: template errors are Err
+    // here, before any thread exists
+    let mut jobs: Vec<(usize, Vec<PageParams>, Box<dyn CrawlScheduler + Send>)> = Vec::new();
+    for (s, member) in members.iter().enumerate() {
+        let pages_s: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
+        if pages_s.is_empty() {
+            continue;
+        }
+        let sched = crate::coordinator::builder::CrawlerBuilder::new()
+            .policy(policy)
+            .strategy(crate::coordinator::builder::Strategy::Lazy)
+            .pages(&pages_s)
+            .build()?;
+        jobs.push((s, pages_s, sched));
+    }
     let mut results: Vec<Option<SimResult>> = vec![None; plan.shards];
+    let mut failed: Vec<(usize, String)> = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for (s, member) in members.iter().enumerate() {
-            let pages_s: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
-            handles.push(scope.spawn(move || {
-                if pages_s.is_empty() {
-                    return None;
-                }
-                let mut rng = Rng::new(seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
-                let traces = generate_traces(&pages_s, horizon, CisDelay::None, &mut rng);
-                let cfg = SimConfig::new(shard_r, horizon)
-                    .expect("per-shard bandwidth R/N must be positive and finite");
-                let mut sched = crate::coordinator::builder::CrawlerBuilder::new()
-                    .policy(policy)
-                    .strategy(crate::coordinator::builder::Strategy::Lazy)
-                    .pages(&pages_s)
-                    .build()
-                    .expect("shard scheduler construction");
-                Some(simulate(&traces, &cfg, sched.as_mut()))
-            }));
+        for (s, pages_s, mut sched) in jobs {
+            let cfg = &cfg;
+            handles.push((
+                s,
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
+                    let traces = generate_traces(&pages_s, horizon, CisDelay::None, &mut rng);
+                    simulate(&traces, cfg, sched.as_mut())
+                }),
+            ));
         }
-        for (s, h) in handles.into_iter().enumerate() {
-            results[s] = h.join().expect("shard thread panicked");
+        for (s, h) in handles {
+            match h.join() {
+                Ok(r) => results[s] = Some(r),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|m| (*m).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    failed.push((s, msg));
+                }
+            }
         }
     });
+    if !failed.is_empty() {
+        let crawls_per_shard = results
+            .iter()
+            .map(|r| {
+                r.as_ref()
+                    .map(|r| r.crawl_counts.iter().map(|&c| c as u64).sum())
+                    .unwrap_or(0)
+            })
+            .collect();
+        return Err(crate::Error::WorkerFailed { failed, crawls_per_shard });
+    }
     let per_shard: Vec<SimResult> = results.into_iter().flatten().collect();
     let total_req: u64 = per_shard.iter().map(|r| r.requests).sum();
     let fresh: u64 = per_shard.iter().map(|r| r.fresh_hits).sum();
-    ShardedRun {
+    Ok(ShardedRun {
         accuracy: if total_req > 0 { fresh as f64 / total_req as f64 } else { f64::NAN },
         per_shard,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -350,7 +392,8 @@ mod tests {
             10.0,
             150.0,
             7,
-        );
+        )
+        .expect("single-shard run");
         let sharded = run_sharded(
             &pages,
             &ShardPlan::round_robin(pages.len(), 4),
@@ -358,7 +401,8 @@ mod tests {
             10.0,
             150.0,
             7,
-        );
+        )
+        .expect("4-shard run");
         assert!(
             (single.accuracy - sharded.accuracy).abs() < 0.05,
             "single {} vs sharded {}",

@@ -112,9 +112,9 @@ pub fn read_traces(path: &Path, pages: usize) -> Result<EventTraces> {
     // events were written grouped per page and in time order, but be
     // defensive: re-sort
     for p in &mut out.pages {
-        p.changes.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        p.cis.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        p.requests.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        p.changes.sort_unstable_by(f64::total_cmp);
+        p.cis.sort_unstable_by(f64::total_cmp);
+        p.requests.sort_unstable_by(f64::total_cmp);
     }
     Ok(out)
 }

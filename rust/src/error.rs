@@ -21,6 +21,17 @@ pub enum Error {
     Usage(String),
     /// Underlying XLA error (stringified; only produced with `pjrt`).
     Xla(String),
+    /// One or more shard workers of the streaming pipeline panicked.
+    /// The surviving shards' work is salvaged instead of aborting the
+    /// process: `crawls_per_shard` holds per-shard crawl totals (0 for
+    /// the failed shards), `failed` the shard indices with their panic
+    /// payloads.
+    WorkerFailed {
+        /// `(shard index, panic payload)` per failed worker.
+        failed: Vec<(usize, String)>,
+        /// Salvaged per-shard crawl totals (failed shards report 0).
+        crawls_per_shard: Vec<u64>,
+    },
     /// I/O error.
     Io(std::io::Error),
 }
@@ -35,6 +46,13 @@ impl std::fmt::Display for Error {
             Error::Config(s) => write!(f, "config: {s}"),
             Error::Usage(s) => write!(f, "usage: {s}"),
             Error::Xla(s) => write!(f, "xla: {s}"),
+            Error::WorkerFailed { failed, .. } => {
+                write!(f, "{} shard worker(s) panicked:", failed.len())?;
+                for (shard, payload) in failed {
+                    write!(f, " [shard {shard}: {payload}]")?;
+                }
+                Ok(())
+            }
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -75,6 +93,20 @@ mod tests {
         assert!(Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x"))
             .to_string()
             .starts_with("io: "));
+    }
+
+    #[test]
+    fn worker_failed_lists_every_shard_and_keeps_salvage() {
+        let e = Error::WorkerFailed {
+            failed: vec![(1, "boom".into()), (3, "bust".into())],
+            crawls_per_shard: vec![10, 0, 12, 0],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("2 shard worker(s) panicked"), "{msg}");
+        assert!(msg.contains("[shard 1: boom]") && msg.contains("[shard 3: bust]"), "{msg}");
+        if let Error::WorkerFailed { crawls_per_shard, .. } = e {
+            assert_eq!(crawls_per_shard, vec![10, 0, 12, 0], "sibling work salvaged");
+        }
     }
 
     #[test]

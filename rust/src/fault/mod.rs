@@ -1,0 +1,757 @@
+//! Fault injection: fetch failures, retry/backoff, quarantine.
+//!
+//! Every simulated crawl used to succeed instantly — none of the
+//! paper's deployment claims (constant total crawl rate, fair freshness
+//! under noisy signals) were exercised against the failure modes a real
+//! crawler faces: fetches that error or time out, hosts that go dark
+//! for minutes at a time, pages that are permanently gone, and retries
+//! that silently eat the bandwidth budget. This module provides the
+//! failure model and the retry semantics; [`engine`] threads them
+//! through the streaming merge engine.
+//!
+//! - [`FaultModel`] — a deterministic, seedable source of
+//!   [`CrawlOutcome`]s: per-page transient-error and timeout
+//!   probabilities drawn from per-page RNG substreams (same
+//!   `split64` keying discipline as [`crate::sim::source`]),
+//!   permanent-dead pages, and correlated host-level outage windows
+//!   (`page % hosts` round-robin hosts, the
+//!   [`crate::coordinator::hosts::HostMap::round_robin`] /
+//!   [`crate::scenario::generators::add_correlated_outages`]
+//!   convention).
+//! - [`RetryPolicy`] — what happens after a failed fetch: immediate
+//!   re-queue or exponential backoff with deterministic jitter from the
+//!   page's fault substream; after `max_attempts` consecutive failures
+//!   the page is **quarantined** (never fetched again, surfaced to the
+//!   scheduler via `on_page_removed`).
+//! - [`OutageAwareScheduler`] — a politeness-style decorator that
+//!   reroutes picks away from hosts inside a known outage window using
+//!   the existing `on_veto` machinery, so bandwidth is spent on hosts
+//!   that can actually answer.
+//! - [`FaultStats`] — degraded-mode accounting: wasted-bandwidth
+//!   fraction, per-outcome counts, per-host retry histogram.
+//!
+//! The **zero-fault config is free**: [`FaultModel::is_inert`] gates
+//! every draw, so [`engine::simulate_faulty_source_with`] with
+//! [`FaultConfig::none`] performs exactly the state transitions of
+//! [`crate::sim::engine::simulate_source_with`] and is pinned
+//! bit-identical to it (`tests/fault_injection.rs`).
+
+pub mod engine;
+
+pub use engine::{
+    simulate_faulty, simulate_faulty_streamed_with, simulate_faulty_with, FaultSimResult,
+};
+
+use crate::error::Error;
+use crate::rngkit::{self, RandomSource, Rng, SplitMix64};
+use crate::sched::CrawlScheduler;
+
+/// Outcome of one crawl attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrawlOutcome {
+    /// The fetch succeeded: freshness state resets as usual.
+    Success,
+    /// A transient fetch error (5xx, connection reset): worth retrying.
+    TransientError,
+    /// The fetch timed out (slow host or host inside an outage window):
+    /// worth retrying.
+    Timeout,
+    /// The page is permanently gone (hard 404/410): never retry.
+    Gone,
+}
+
+/// A correlated host-level outage: every fetch against `host` during
+/// `[start, end)` times out.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostOutage {
+    /// Host id (`page % hosts` round-robin convention).
+    pub host: usize,
+    /// Window start (inclusive).
+    pub start: f64,
+    /// Window end (exclusive).
+    pub end: f64,
+}
+
+impl HostOutage {
+    /// Is `host` dark at time `t` under this window?
+    #[inline]
+    pub fn covers(&self, host: usize, t: f64) -> bool {
+        self.host == host && t >= self.start && t < self.end
+    }
+}
+
+/// Deterministic, seedable failure-model configuration.
+///
+/// All probabilities are per crawl *attempt*. Validated by
+/// [`FaultModel::new`]; [`FaultConfig::none`] is the canonical
+/// zero-fault config, pinned bit-identical to the fault-free engine.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Probability a fetch fails with [`CrawlOutcome::TransientError`].
+    pub transient_prob: f64,
+    /// Probability a fetch fails with [`CrawlOutcome::Timeout`]
+    /// (evaluated after the transient coin).
+    pub timeout_prob: f64,
+    /// Probability a page is permanently dead (drawn once per page per
+    /// run from its fault substream; every fetch of a dead page returns
+    /// [`CrawlOutcome::Gone`]).
+    pub gone_prob: f64,
+    /// Number of hosts for outage correlation (`page % hosts`).
+    pub hosts: usize,
+    /// Host-level outage windows (fetches inside one time out).
+    pub outages: Vec<HostOutage>,
+    /// Master seed of the per-page fault substreams.
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    /// The zero-fault configuration: every crawl succeeds, no RNG draw
+    /// is ever made, and the fault engine is bit-identical to the
+    /// fault-free one.
+    pub fn none() -> Self {
+        Self {
+            transient_prob: 0.0,
+            timeout_prob: 0.0,
+            gone_prob: 0.0,
+            hosts: 1,
+            outages: Vec::new(),
+            seed: 0,
+        }
+    }
+
+    /// Validate probabilities, host count and outage windows.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (name, p) in [
+            ("transient_prob", self.transient_prob),
+            ("timeout_prob", self.timeout_prob),
+            ("gone_prob", self.gone_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) || p.is_nan() {
+                return Err(Error::InvalidParam(format!(
+                    "fault {name} must be in [0, 1], got {p}"
+                )));
+            }
+        }
+        if self.hosts == 0 {
+            return Err(Error::InvalidParam("fault model needs at least one host".into()));
+        }
+        for (k, o) in self.outages.iter().enumerate() {
+            if o.host >= self.hosts {
+                return Err(Error::InvalidParam(format!(
+                    "outage {k}: host {} out of range (hosts = {})",
+                    o.host, self.hosts
+                )));
+            }
+            if !o.start.is_finite() || !o.end.is_finite() || o.start < 0.0 || o.end <= o.start {
+                return Err(Error::InvalidParam(format!(
+                    "outage {k}: window [{}, {}) must be finite, non-negative and non-empty",
+                    o.start, o.end
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// No fault source is active: no transient/timeout/dead draws and
+    /// no outage windows.
+    pub fn is_inert(&self) -> bool {
+        self.transient_prob == 0.0
+            && self.timeout_prob == 0.0
+            && self.gone_prob == 0.0
+            && self.outages.is_empty()
+    }
+
+    /// Append `n_outages` correlated host-level outage windows, the
+    /// same shape as
+    /// [`crate::scenario::generators::add_correlated_outages`]: uniform
+    /// start over the horizon, exponential duration with the given
+    /// mean, hosts hit round-robin. Deterministic in `seed`.
+    pub fn add_correlated_outages(
+        &mut self,
+        n_outages: usize,
+        mean_duration: f64,
+        horizon: f64,
+        seed: u64,
+    ) {
+        assert!(
+            mean_duration > 0.0 && mean_duration.is_finite(),
+            "mean outage duration must be positive and finite, got {mean_duration}"
+        );
+        let mut rng = Rng::new(seed);
+        for i in 0..n_outages {
+            let start = rng.range(0.0, horizon);
+            let duration = rngkit::exponential(&mut rng, 1.0 / mean_duration);
+            self.outages.push(HostOutage {
+                host: i % self.hosts,
+                start,
+                end: (start + duration).min(horizon),
+            });
+        }
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// What to do after a failed fetch.
+///
+/// Retries consume real bandwidth ticks — the engine never fetches
+/// twice in one tick, so the constant-total-rate invariant survives
+/// every policy here.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RetryPolicy {
+    /// Re-queue the page for the next tick, up to `max_attempts`
+    /// consecutive failures, then quarantine.
+    Immediate {
+        /// Consecutive failures tolerated before quarantine.
+        max_attempts: u32,
+    },
+    /// Exponential backoff: after the `k`-th consecutive failure wait
+    /// `min(base · factor^(k-1), cap)`, jittered by a factor in
+    /// `[0.5, 1.5)` drawn deterministically from the page's fault
+    /// substream; after `max_attempts` failures, quarantine.
+    ExponentialBackoff {
+        /// Delay after the first failure.
+        base: f64,
+        /// Multiplier per additional failure.
+        factor: f64,
+        /// Upper bound on the un-jittered delay.
+        cap: f64,
+        /// Consecutive failures tolerated before quarantine.
+        max_attempts: u32,
+    },
+}
+
+impl RetryPolicy {
+    /// Validate delays and attempt caps.
+    pub fn validate(&self) -> crate::Result<()> {
+        match *self {
+            RetryPolicy::Immediate { max_attempts } => {
+                if max_attempts == 0 {
+                    return Err(Error::InvalidParam(
+                        "retry max_attempts must be at least 1".into(),
+                    ));
+                }
+            }
+            RetryPolicy::ExponentialBackoff { base, factor, cap, max_attempts } => {
+                if max_attempts == 0 {
+                    return Err(Error::InvalidParam(
+                        "retry max_attempts must be at least 1".into(),
+                    ));
+                }
+                for (name, v) in [("base", base), ("factor", factor), ("cap", cap)] {
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(Error::InvalidParam(format!(
+                            "retry {name} must be positive and finite, got {v}"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Delay until the retry that follows the `failures`-th consecutive
+    /// failure (1-based), or `None` when the attempt budget is spent
+    /// and the page must be quarantined. Jitter draws come from `rng`
+    /// (the page's fault substream), so replays are deterministic.
+    pub(crate) fn next_delay<R: RandomSource>(&self, failures: u32, rng: &mut R) -> Option<f64> {
+        match *self {
+            RetryPolicy::Immediate { max_attempts } => {
+                (failures < max_attempts).then_some(0.0)
+            }
+            RetryPolicy::ExponentialBackoff { base, factor, cap, max_attempts } => {
+                if failures >= max_attempts {
+                    return None;
+                }
+                let raw = (base * factor.powi(failures as i32 - 1)).min(cap);
+                let jitter = 0.5 + rng.f64();
+                Some(raw * jitter)
+            }
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    /// Exponential backoff: 1-unit base, doubling, capped at 60 units,
+    /// 4 attempts then quarantine.
+    fn default() -> Self {
+        RetryPolicy::ExponentialBackoff { base: 1.0, factor: 2.0, cap: 60.0, max_attempts: 4 }
+    }
+}
+
+/// Deterministic per-run fault source: validated config + per-page RNG
+/// substreams + the per-run permanent-dead draw.
+///
+/// Reusable across repetitions: [`FaultModel::reset`] (called by the
+/// engine's `on_start` path) re-derives every substream from the master
+/// seed, so one model instance replayed twice produces bit-identical
+/// outcome sequences.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    cfg: FaultConfig,
+    inert: bool,
+    /// Per-page fault substream: outcome coins + retry jitter.
+    streams: Vec<SplitMix64>,
+    /// Per-page permanent-dead flags (drawn once per run).
+    dead: Vec<bool>,
+}
+
+impl FaultModel {
+    /// Validated construction. Substreams are derived lazily by
+    /// [`Self::reset`] at the start of every run.
+    pub fn new(cfg: FaultConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        let inert = cfg.is_inert();
+        Ok(Self { cfg, inert, streams: Vec::new(), dead: Vec::new() })
+    }
+
+    /// The zero-fault model (cannot fail to validate).
+    pub fn inert() -> Self {
+        Self { cfg: FaultConfig::none(), inert: true, streams: Vec::new(), dead: Vec::new() }
+    }
+
+    /// The validated configuration.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// No fault source is active: [`Self::outcome`] is `Success`
+    /// without a single RNG draw.
+    #[inline]
+    pub fn is_inert(&self) -> bool {
+        self.inert
+    }
+
+    /// Host of `page` (round-robin convention).
+    #[inline]
+    pub fn host_of(&self, page: usize) -> usize {
+        page % self.cfg.hosts
+    }
+
+    /// Number of hosts.
+    #[inline]
+    pub fn hosts(&self) -> usize {
+        self.cfg.hosts
+    }
+
+    /// Re-derive the per-page substreams and the permanent-dead draw
+    /// for a run over `m` pages (the same master/per-page `split64`
+    /// keying discipline as the event sources, so fault draws never
+    /// alias trace draws).
+    pub fn reset(&mut self, m: usize) {
+        self.streams.clear();
+        self.dead.clear();
+        if self.inert {
+            return;
+        }
+        let mut master = Rng::new(self.cfg.seed);
+        self.streams.reserve(m);
+        self.dead.reserve(m);
+        for i in 0..m {
+            let mut s = master.split64(i as u64);
+            let dead = self.cfg.gone_prob > 0.0 && s.bernoulli(self.cfg.gone_prob);
+            self.streams.push(s);
+            self.dead.push(dead);
+        }
+    }
+
+    /// Was `page` drawn permanently dead this run?
+    #[inline]
+    pub fn is_dead(&self, page: usize) -> bool {
+        !self.inert && self.dead[page]
+    }
+
+    /// Is `page`'s host inside an outage window at `t`?
+    #[inline]
+    pub fn host_dark(&self, page: usize, t: f64) -> bool {
+        if self.cfg.outages.is_empty() {
+            return false;
+        }
+        let h = self.host_of(page);
+        self.cfg.outages.iter().any(|o| o.covers(h, t))
+    }
+
+    /// Outcome of a crawl attempt against `page` at time `t`.
+    ///
+    /// Draw order is fixed (dead → host-dark → transient coin → timeout
+    /// coin → success) so replays are deterministic; the inert fast
+    /// path returns `Success` without touching any stream.
+    #[inline]
+    pub fn outcome(&mut self, page: usize, t: f64) -> CrawlOutcome {
+        if self.inert {
+            return CrawlOutcome::Success;
+        }
+        if self.dead[page] {
+            return CrawlOutcome::Gone;
+        }
+        if self.host_dark(page, t) {
+            return CrawlOutcome::Timeout;
+        }
+        let s = &mut self.streams[page];
+        if self.cfg.transient_prob > 0.0 && s.bernoulli(self.cfg.transient_prob) {
+            return CrawlOutcome::TransientError;
+        }
+        if self.cfg.timeout_prob > 0.0 && s.bernoulli(self.cfg.timeout_prob) {
+            return CrawlOutcome::Timeout;
+        }
+        CrawlOutcome::Success
+    }
+
+    /// The page's fault substream, for retry-jitter draws.
+    #[inline]
+    pub(crate) fn jitter_stream(&mut self, page: usize) -> &mut SplitMix64 {
+        &mut self.streams[page]
+    }
+}
+
+/// Degraded-mode accounting of one faulty repetition.
+///
+/// The bandwidth-conservation identity every run satisfies (asserted by
+/// the chaos suite): `successes + failures() + forfeited_ticks +
+/// idle_ticks == ticks` — one tick buys at most one fetch attempt, so
+/// no schedule rate is ever exceeded, retries included.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Fetch attempts (successes + failures; retries included).
+    pub attempts: u64,
+    /// Attempts that succeeded.
+    pub successes: u64,
+    /// Attempts lost to transient errors.
+    pub transient_errors: u64,
+    /// Attempts lost to timeouts (incl. host outages).
+    pub timeouts: u64,
+    /// Attempts against permanently-dead pages.
+    pub gone: u64,
+    /// Attempts that were retries scheduled by the [`RetryPolicy`].
+    pub retries: u64,
+    /// Pages quarantined (attempt budget spent, or permanently gone).
+    pub quarantined: u64,
+    /// Ticks forfeited because the scheduler picked a quarantined page.
+    pub forfeited_ticks: u64,
+    /// Ticks where nothing was eligible to crawl.
+    pub idle_ticks: u64,
+    /// Retries per host (round-robin host convention).
+    pub retries_per_host: Vec<u64>,
+}
+
+impl FaultStats {
+    /// Stats sized for a `hosts`-host model.
+    pub fn new(hosts: usize) -> Self {
+        Self { retries_per_host: vec![0; hosts], ..Self::default() }
+    }
+
+    /// Failed attempts (wasted bandwidth ticks).
+    pub fn failures(&self) -> u64 {
+        self.transient_errors + self.timeouts + self.gone
+    }
+
+    /// Fraction of the spent fetch bandwidth that was wasted on failed
+    /// attempts (0 when nothing was attempted).
+    pub fn wasted_fraction(&self) -> f64 {
+        if self.attempts == 0 {
+            0.0
+        } else {
+            self.failures() as f64 / self.attempts as f64
+        }
+    }
+}
+
+/// Politeness-style decorator that reroutes picks away from hosts
+/// inside a *known* outage window (e.g. published maintenance windows
+/// or an operator-fed outage feed): a pick on a dark host is vetoed via
+/// the existing `on_veto` machinery — the inner scheduler then yields
+/// its next-best candidate — a bounded number of times per tick.
+///
+/// Unknown (unannounced) outages still surface as [`CrawlOutcome::Timeout`]
+/// through the [`FaultModel`]; this decorator is the *mitigation* for
+/// the announced subset, measured in `figure faults`.
+pub struct OutageAwareScheduler<S> {
+    inner: S,
+    outages: Vec<HostOutage>,
+    hosts: usize,
+    /// Diagnostics: picks rerouted off dark hosts.
+    pub rerouted: u64,
+    /// Diagnostics: ticks idled because every candidate was dark.
+    pub dark_idle_ticks: u64,
+}
+
+impl<S: CrawlScheduler> OutageAwareScheduler<S> {
+    /// Wrap `inner`, avoiding the given outage windows over a
+    /// `hosts`-host population (`page % hosts` round-robin).
+    pub fn new(inner: S, outages: Vec<HostOutage>, hosts: usize) -> Self {
+        assert!(hosts > 0, "at least one host required");
+        Self { inner, outages, hosts, rerouted: 0, dark_idle_ticks: 0 }
+    }
+
+    fn dark(&self, page: usize, t: f64) -> bool {
+        let h = page % self.hosts;
+        self.outages.iter().any(|o| o.covers(h, t))
+    }
+
+    /// Access the wrapped scheduler.
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl<S: CrawlScheduler> CrawlScheduler for OutageAwareScheduler<S> {
+    fn on_start(&mut self, m: usize) {
+        self.inner.on_start(m);
+        self.rerouted = 0;
+        self.dark_idle_ticks = 0;
+    }
+
+    fn select(&mut self, t: f64) -> Option<usize> {
+        const MAX_RETRIES: usize = 8;
+        for _ in 0..MAX_RETRIES {
+            let pick = self.inner.select(t)?;
+            if !self.dark(pick, t) {
+                return Some(pick);
+            }
+            self.rerouted += 1;
+            self.inner.on_veto(pick, t);
+        }
+        self.dark_idle_ticks += 1;
+        None
+    }
+
+    fn on_cis(&mut self, page: usize, t: f64) {
+        self.inner.on_cis(page, t);
+    }
+
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.inner.on_crawl(page, t);
+    }
+
+    fn on_veto(&mut self, page: usize, t: f64) {
+        self.inner.on_veto(page, t);
+    }
+
+    fn on_crawl_failed(&mut self, page: usize, t: f64, outcome: CrawlOutcome) {
+        self.inner.on_crawl_failed(page, t, outcome);
+    }
+
+    fn on_page_added(&mut self, page: usize, params: &crate::params::PageParams, t: f64) {
+        self.inner.on_page_added(page, params, t);
+    }
+
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        self.inner.on_page_removed(page, t);
+    }
+
+    fn on_params_changed(&mut self, page: usize, params: &crate::params::PageParams, t: f64) {
+        self.inner.on_params_changed(page, params, t);
+    }
+
+    fn name(&self) -> String {
+        format!("{}-OUTAGE-AWARE", self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_bad_inputs() {
+        assert!(FaultConfig::none().validate().is_ok());
+        let bad_p = FaultConfig { transient_prob: 1.5, ..FaultConfig::none() };
+        assert!(bad_p.validate().is_err(), "probability > 1");
+        let nan_p = FaultConfig { timeout_prob: f64::NAN, ..FaultConfig::none() };
+        assert!(nan_p.validate().is_err(), "NaN probability");
+        let neg_p = FaultConfig { gone_prob: -0.1, ..FaultConfig::none() };
+        assert!(neg_p.validate().is_err(), "negative probability");
+        let no_hosts = FaultConfig { hosts: 0, ..FaultConfig::none() };
+        assert!(no_hosts.validate().is_err(), "zero hosts");
+        let bad_outage = FaultConfig {
+            outages: vec![HostOutage { host: 3, start: 0.0, end: 1.0 }],
+            ..FaultConfig::none()
+        };
+        assert!(bad_outage.validate().is_err(), "outage host out of range");
+        let empty_window = FaultConfig {
+            outages: vec![HostOutage { host: 0, start: 2.0, end: 2.0 }],
+            ..FaultConfig::none()
+        };
+        assert!(empty_window.validate().is_err(), "empty outage window");
+    }
+
+    #[test]
+    fn inert_model_never_draws() {
+        let mut m = FaultModel::new(FaultConfig::none()).expect("zero-fault config is valid");
+        assert!(m.is_inert());
+        m.reset(16);
+        for page in 0..16 {
+            for k in 0..10 {
+                assert_eq!(m.outcome(page, k as f64), CrawlOutcome::Success);
+            }
+            assert!(!m.is_dead(page));
+        }
+    }
+
+    #[test]
+    fn outcomes_are_replay_deterministic() {
+        let cfg = FaultConfig {
+            transient_prob: 0.3,
+            timeout_prob: 0.2,
+            gone_prob: 0.05,
+            hosts: 4,
+            outages: vec![HostOutage { host: 1, start: 2.0, end: 5.0 }],
+            seed: 99,
+        };
+        let run = || {
+            let mut m = FaultModel::new(cfg.clone()).expect("valid config");
+            m.reset(32);
+            let mut seq = Vec::new();
+            for k in 0..200 {
+                let page = k % 32;
+                seq.push(m.outcome(page, k as f64 * 0.1));
+            }
+            seq
+        };
+        assert_eq!(run(), run(), "same seed must replay bit-identically");
+    }
+
+    #[test]
+    fn model_reset_restores_the_stream() {
+        let cfg = FaultConfig { transient_prob: 0.4, seed: 7, ..FaultConfig::none() };
+        let mut m = FaultModel::new(cfg).expect("valid config");
+        m.reset(8);
+        let a: Vec<CrawlOutcome> = (0..50).map(|k| m.outcome(k % 8, k as f64)).collect();
+        m.reset(8);
+        let b: Vec<CrawlOutcome> = (0..50).map(|k| m.outcome(k % 8, k as f64)).collect();
+        assert_eq!(a, b, "reset must rewind the fault streams");
+    }
+
+    #[test]
+    fn dead_pages_are_always_gone() {
+        let cfg = FaultConfig { gone_prob: 0.5, seed: 3, ..FaultConfig::none() };
+        let mut m = FaultModel::new(cfg).expect("valid config");
+        m.reset(64);
+        let dead: Vec<usize> = (0..64).filter(|&i| m.is_dead(i)).collect();
+        assert!(!dead.is_empty() && dead.len() < 64, "gone_prob=0.5 should split the pages");
+        for &i in &dead {
+            assert_eq!(m.outcome(i, 1.0), CrawlOutcome::Gone);
+            assert_eq!(m.outcome(i, 2.0), CrawlOutcome::Gone, "gone is permanent");
+        }
+    }
+
+    #[test]
+    fn host_outage_times_out_the_whole_host() {
+        let mut cfg = FaultConfig { hosts: 4, ..FaultConfig::none() };
+        cfg.outages.push(HostOutage { host: 2, start: 10.0, end: 20.0 });
+        let mut m = FaultModel::new(cfg).expect("valid config");
+        m.reset(8);
+        // pages 2 and 6 live on host 2
+        for page in [2usize, 6] {
+            assert_eq!(m.outcome(page, 15.0), CrawlOutcome::Timeout, "dark host must time out");
+            assert_eq!(m.outcome(page, 9.9), CrawlOutcome::Success, "before the window");
+            assert_eq!(m.outcome(page, 20.0), CrawlOutcome::Success, "window end exclusive");
+        }
+        assert_eq!(m.outcome(1, 15.0), CrawlOutcome::Success, "other hosts unaffected");
+    }
+
+    #[test]
+    fn correlated_outage_generator_is_deterministic_and_in_range() {
+        let mut a = FaultConfig { hosts: 5, ..FaultConfig::none() };
+        a.add_correlated_outages(10, 3.0, 100.0, 42);
+        let mut b = FaultConfig { hosts: 5, ..FaultConfig::none() };
+        b.add_correlated_outages(10, 3.0, 100.0, 42);
+        assert_eq!(a.outages, b.outages);
+        assert_eq!(a.outages.len(), 10);
+        for (i, o) in a.outages.iter().enumerate() {
+            assert_eq!(o.host, i % 5, "hosts hit round-robin");
+            assert!(o.start >= 0.0 && o.end <= 100.0 && o.end > o.start);
+        }
+        assert!(a.validate().is_ok());
+    }
+
+    #[test]
+    fn retry_policy_validates_and_caps_attempts() {
+        assert!(RetryPolicy::default().validate().is_ok());
+        assert!(RetryPolicy::Immediate { max_attempts: 0 }.validate().is_err());
+        assert!(RetryPolicy::ExponentialBackoff {
+            base: 0.0,
+            factor: 2.0,
+            cap: 1.0,
+            max_attempts: 3
+        }
+        .validate()
+        .is_err());
+        let mut rng = SplitMix64::new(1);
+        let p = RetryPolicy::Immediate { max_attempts: 3 };
+        assert_eq!(p.next_delay(1, &mut rng), Some(0.0));
+        assert_eq!(p.next_delay(2, &mut rng), Some(0.0));
+        assert_eq!(p.next_delay(3, &mut rng), None, "budget spent → quarantine");
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let p = RetryPolicy::ExponentialBackoff {
+            base: 1.0,
+            factor: 2.0,
+            cap: 5.0,
+            max_attempts: 10,
+        };
+        let mut rng = SplitMix64::new(9);
+        let delays: Vec<f64> =
+            (1..=6).map(|k| p.next_delay(k, &mut rng).expect("within budget")).collect();
+        // jitter is in [0.5, 1.5): delay k lives in [raw/2, 3·raw/2)
+        for (k, d) in delays.iter().enumerate() {
+            let raw = (2.0f64).powi(k as i32).min(5.0);
+            assert!(
+                (raw * 0.5..raw * 1.5).contains(d),
+                "delay {k}: {d} outside jitter band of raw {raw}"
+            );
+        }
+        // deterministic replay from an identically-seeded stream
+        let mut rng2 = SplitMix64::new(9);
+        let replay: Vec<f64> =
+            (1..=6).map(|k| p.next_delay(k, &mut rng2).expect("within budget")).collect();
+        assert_eq!(
+            delays.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            replay.iter().map(|d| d.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn stats_identities_hold() {
+        let mut s = FaultStats::new(3);
+        assert_eq!(s.wasted_fraction(), 0.0, "no attempts → nothing wasted");
+        s.attempts = 10;
+        s.successes = 7;
+        s.transient_errors = 2;
+        s.timeouts = 1;
+        assert_eq!(s.failures(), 3);
+        assert!((s.wasted_fraction() - 0.3).abs() < 1e-12);
+        assert_eq!(s.retries_per_host.len(), 3);
+    }
+
+    #[test]
+    fn outage_aware_decorator_reroutes_off_dark_hosts() {
+        // inner always proposes pages 0, 1, 2, ... in order; host 0
+        // (pages 0, 2) is dark at t = 5 → the decorator must surface
+        // page 1 (host 1) after vetoing page 0
+        struct Seq(usize);
+        impl CrawlScheduler for Seq {
+            fn select(&mut self, _t: f64) -> Option<usize> {
+                let i = self.0;
+                self.0 += 1;
+                Some(i)
+            }
+            fn on_veto(&mut self, _page: usize, _t: f64) {}
+        }
+        let outages = vec![HostOutage { host: 0, start: 0.0, end: 10.0 }];
+        let mut s = OutageAwareScheduler::new(Seq(0), outages.clone(), 2);
+        assert_eq!(s.select(5.0), Some(1), "pick rerouted to the lit host");
+        assert_eq!(s.rerouted, 1);
+        // outside the window the first pick passes through
+        let mut s2 = OutageAwareScheduler::new(Seq(0), outages, 2);
+        assert_eq!(s2.select(20.0), Some(0));
+        assert_eq!(s2.rerouted, 0);
+        assert!(s2.name().ends_with("-OUTAGE-AWARE"));
+    }
+}

@@ -152,7 +152,7 @@ pub fn make_scheduler(
         .pages(&inst.pages)
         .lds_rates(no_cis_rates)
         .build()
-        .expect("cell scheduler construction")
+        .unwrap_or_else(|e| panic!("cell scheduler construction failed: {e}"))
 }
 
 /// Worker threads [`run_cell`] uses to fan repetitions across cores.
@@ -182,12 +182,14 @@ fn run_rep(
 ) -> (f64, Vec<f64>) {
     let mut trng = Rng::new(spec.seed ^ (0xC0FFEE + rep as u64));
     let mut cfg = SimConfig::new(spec.bandwidth, spec.horizon)
-        .expect("experiment spec bandwidth must be positive and finite");
+        .unwrap_or_else(|e| panic!("experiment spec bandwidth must be a valid crawl rate: {e}"));
     cfg.cis_discard_window = spec.discard_window;
     // both trace modes must reject a bad delay the same way (the
     // streamed constructor validates internally; the materialized
     // generator assumes validity)
-    spec.delay.validate().expect("experiment spec delay must be valid");
+    spec.delay
+        .validate()
+        .unwrap_or_else(|e| panic!("experiment spec delay must be valid: {e}"));
     let res = match spec.trace_mode {
         TraceMode::Materialized => {
             let traces = generate_traces(&inst.pages, spec.horizon, spec.delay, &mut trng);
@@ -195,7 +197,7 @@ fn run_rep(
         }
         TraceMode::Streamed => {
             let source = StreamedSource::new(&inst.pages, spec.horizon, spec.delay, &mut trng)
-                .expect("experiment spec delay must be valid");
+                .unwrap_or_else(|e| panic!("experiment spec delay must be valid: {e}"));
             simulate_streamed_with(ws, source, &cfg, sched)
         }
     };
@@ -265,7 +267,10 @@ pub fn run_cell_with_threads(
                 })
                 .collect();
             for h in handles {
-                for (rep, r) in h.join().expect("rep worker panicked") {
+                // a rep worker panic carries the rep's own diagnostic —
+                // surface it verbatim instead of masking it
+                let rows = h.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+                for (rep, r) in rows {
                     results[rep] = Some(r);
                 }
             }
@@ -273,7 +278,9 @@ pub fn run_cell_with_threads(
     }
     let mut acc = RepAccumulator::new(inst.pages.len());
     for r in results {
-        let (accuracy, rates) = r.expect("repetition not executed");
+        let Some((accuracy, rates)) = r else {
+            unreachable!("every repetition index is claimed exactly once");
+        };
         acc.push(accuracy, &rates);
     }
     let s = acc.accuracy();

@@ -16,7 +16,7 @@ fn timeline(
     schedule: BandwidthSchedule,
     horizon: f64,
     seed: u64,
-) -> Vec<(f64, f64)> {
+) -> Result<Vec<(f64, f64)>> {
     let mut rng = Rng::new(seed);
     let traces = generate_traces(inst_pages, horizon, CisDelay::None, &mut rng);
     let cfg = SimConfig {
@@ -29,9 +29,8 @@ fn timeline(
         .policy(PolicyKind::Greedy)
         .strategy(Strategy::Exact)
         .pages(inst_pages)
-        .build()
-        .expect("fig09 scheduler construction");
-    simulate(&traces, &cfg, sched.as_mut()).timeline
+        .build()?;
+    Ok(simulate(&traces, &cfg, sched.as_mut()).timeline)
 }
 
 /// Resample a timeline onto a regular grid (nearest earlier sample).
@@ -60,9 +59,9 @@ pub fn fig09(_reps: usize) -> Result<()> {
         BandwidthSchedule::new(vec![(0.0, 100.0), (133.0, 150.0), (266.0, 100.0)])?;
     let const100 = BandwidthSchedule::constant(100.0)?;
     let const150 = BandwidthSchedule::constant(150.0)?;
-    let tl_dyn = timeline(&inst.pages, dynamic, horizon, 77);
-    let tl_100 = timeline(&inst.pages, const100, horizon, 77);
-    let tl_150 = timeline(&inst.pages, const150, horizon, 77);
+    let tl_dyn = timeline(&inst.pages, dynamic, horizon, 77)?;
+    let tl_100 = timeline(&inst.pages, const100, horizon, 77)?;
+    let tl_150 = timeline(&inst.pages, const150, horizon, 77)?;
     let grid: Vec<f64> = (1..=400).map(|k| k as f64).collect();
     let d = resample(&tl_dyn, &grid);
     let a = resample(&tl_100, &grid);

@@ -1,0 +1,115 @@
+//! Degraded-mode experiment (no paper counterpart — the fault-injection
+//! extension of the robustness story).
+//!
+//! GREEDY-NCIS under increasing fetch-failure severity: transient-error
+//! probability sweeps 0 → 0.5 with a fixed timeout floor and correlated
+//! host outages, once per retry policy (exponential backoff vs
+//! immediate). Reported per severity step: freshness-under-failure
+//! (accuracy the crawler still achieves), the wasted-bandwidth fraction,
+//! the fraction of attempts that were retries, and the mean quarantined
+//! count — the lanes DESIGN.md's failure-model section discusses.
+
+use crate::benchkit::FigureOutput;
+use crate::coordinator::builder::{CrawlerBuilder, Strategy};
+use crate::fault::{simulate_faulty_with, FaultConfig, FaultModel, RetryPolicy};
+use crate::figures::common::ExperimentSpec;
+use crate::policy::PolicyKind;
+use crate::rngkit::Rng;
+use crate::sim::metrics::FaultRepAccumulator;
+use crate::sim::{generate_traces, CisDelay, SimConfig, SimWorkspace};
+use crate::Result;
+
+/// Horizon of the experiment (shorter than §6.3: the sweep runs
+/// 2 policies × 6 severities × reps full simulations).
+const HORIZON: f64 = 200.0;
+/// Bandwidth R.
+const BANDWIDTH: f64 = 50.0;
+/// Pages m.
+const PAGES: usize = 500;
+/// Host count for the round-robin fault topology.
+const HOSTS: usize = 20;
+
+/// The fault figure: per (retry policy, transient severity) cell,
+/// freshness / wasted-bandwidth / retry-fraction / quarantine means
+/// across reps. CSV: `target/figures/fig_faults_degradation.csv`.
+pub fn fig_faults(reps: usize) -> Result<()> {
+    let reps = reps.clamp(1, 10);
+    let spec = ExperimentSpec::section6(PAGES, reps).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let cfg = SimConfig::new(BANDWIDTH, HORIZON)?;
+
+    let policies: [(&str, RetryPolicy); 2] = [
+        ("backoff", RetryPolicy::default()),
+        ("immediate", RetryPolicy::Immediate { max_attempts: 4 }),
+    ];
+    let mut fig = FigureOutput::new(
+        "fig_faults_degradation",
+        &[
+            "transient_prob",
+            "policy_backoff",
+            "accuracy",
+            "accuracy_se",
+            "wasted_fraction",
+            "retry_fraction",
+            "quarantined_mean",
+        ],
+    );
+    for (name, retry) in policies {
+        for &severity in &[0.0, 0.05, 0.1, 0.2, 0.35, 0.5] {
+            let mut fault_cfg = FaultConfig {
+                transient_prob: severity,
+                timeout_prob: 0.02 * severity.min(1.0),
+                gone_prob: 0.0,
+                hosts: HOSTS,
+                outages: Vec::new(),
+                seed: 0xFA17,
+            };
+            // a burst of correlated outages scaled with severity
+            if severity > 0.0 {
+                fault_cfg.add_correlated_outages(
+                    (severity * 10.0).ceil() as usize,
+                    HORIZON / 40.0,
+                    HORIZON,
+                    0xFA18,
+                );
+            }
+            let mut acc = FaultRepAccumulator::new(HOSTS);
+            let mut ws = SimWorkspace::new();
+            let mut sched = CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(Strategy::Exact)
+                .pages(&inst.pages)
+                .build()?;
+            for rep in 0..reps {
+                let mut trng = Rng::new(spec.seed ^ (0xFEE1 + rep as u64));
+                let traces = generate_traces(&inst.pages, HORIZON, CisDelay::None, &mut trng);
+                let mut model = FaultModel::new(FaultConfig {
+                    seed: fault_cfg.seed ^ rep as u64,
+                    ..fault_cfg.clone()
+                })?;
+                let res = simulate_faulty_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    sched.as_mut(),
+                    &mut model,
+                    retry,
+                );
+                acc.push(&res);
+            }
+            let a = acc.accuracy();
+            fig.rowf(&[
+                severity,
+                if name == "backoff" { 1.0 } else { 0.0 },
+                a.mean,
+                a.stderr,
+                acc.wasted_fraction().mean,
+                acc.retry_fraction().mean,
+                acc.quarantined().mean,
+            ]);
+        }
+    }
+    fig.finish()?;
+    Ok(())
+}

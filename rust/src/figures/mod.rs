@@ -9,6 +9,7 @@ pub mod accuracy;
 pub mod common;
 pub mod dynamics;
 pub mod estimators;
+pub mod faults;
 pub mod rates;
 pub mod scale;
 pub mod scenario;
@@ -40,8 +41,9 @@ pub fn run_figure(id: &str, reps: usize) -> crate::Result<()> {
         "14" => rates::fig14(reps),
         "appg" => scale::appg(20_000, 60.0, 4),
         "scenario" => scenario::fig_scenario(reps),
+        "faults" => faults::fig_faults(reps),
         other => Err(crate::Error::Usage(format!(
-            "unknown figure `{other}` (valid: 1-14, appg, scenario)"
+            "unknown figure `{other}` (valid: 1-14, appg, scenario, faults)"
         ))),
     }
 }

@@ -21,9 +21,9 @@ fn accuracy_at(
     horizon: f64,
     shards: usize,
     seed: u64,
-) -> f64 {
+) -> Result<f64> {
     let plan = ShardPlan::round_robin(pages.len(), shards);
-    run_sharded(pages, &plan, policy, bandwidth, horizon, seed).accuracy
+    Ok(run_sharded(pages, &plan, policy, bandwidth, horizon, seed)?.accuracy)
 }
 
 /// Appendix-G scaled experiment. `n_urls` defaults to 50k via the bench.
@@ -32,7 +32,7 @@ pub fn appg(n_urls: usize, horizon: f64, shards: usize) -> Result<()> {
     let inst = dataset::to_instance(&recs, 0.0).normalized();
     // budget/URL ratio as in §6.7
     let r_full = 0.05 * n_urls as f64;
-    let greedy_acc = accuracy_at(&inst.pages, PolicyKind::Greedy, r_full, horizon, shards, 31);
+    let greedy_acc = accuracy_at(&inst.pages, PolicyKind::Greedy, r_full, horizon, shards, 31)?;
     let mut fig = FigureOutput::new(
         "appg_scale",
         &["bandwidth_frac", "greedy_at_full_R", "ncis_accuracy", "saving_achieved"],
@@ -41,7 +41,7 @@ pub fn appg(n_urls: usize, horizon: f64, shards: usize) -> Result<()> {
     let mut saving = 0.0f64;
     for &frac in &[1.0, 0.95, 0.9, 0.85, 0.8, 0.75] {
         let acc =
-            accuracy_at(&inst.pages, PolicyKind::GreedyNcis, frac * r_full, horizon, shards, 31);
+            accuracy_at(&inst.pages, PolicyKind::GreedyNcis, frac * r_full, horizon, shards, 31)?;
         let matched = acc >= greedy_acc;
         if matched {
             saving = saving.max(1.0 - frac);

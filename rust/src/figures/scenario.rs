@@ -36,17 +36,15 @@ fn mean_timeline(
     cfg: &SimConfig,
     grid: &[f64],
     reps: usize,
-) -> Vec<f64> {
+) -> Result<Vec<f64>> {
     let mut acc = vec![0.0f64; grid.len()];
     for rep in 0..reps {
-        let res = builder
-            .run_scenario(cfg, 0xD1CE ^ rep as u64)
-            .expect("scenario figure run");
+        let res = builder.run_scenario(cfg, 0xD1CE ^ rep as u64)?;
         for (a, v) in acc.iter_mut().zip(resample(&res.timeline, grid)) {
             *a += v;
         }
     }
-    acc.iter().map(|a| a / reps as f64).collect()
+    Ok(acc.iter().map(|a| a / reps as f64).collect())
 }
 
 /// The churn + outage figure: m = 1000, R = 100, T = 400; rolling
@@ -80,10 +78,10 @@ pub fn fig_scenario(reps: usize) -> Result<()> {
             .with_scenario(sc.clone());
         mean_timeline(&b, &cfg, &grid, reps)
     };
-    let ncis = lane(PolicyKind::GreedyNcis, &dynamic);
-    let cis = lane(PolicyKind::GreedyCis, &dynamic);
-    let greedy = lane(PolicyKind::Greedy, &dynamic);
-    let ncis_static = lane(PolicyKind::GreedyNcis, &static_world);
+    let ncis = lane(PolicyKind::GreedyNcis, &dynamic)?;
+    let cis = lane(PolicyKind::GreedyCis, &dynamic)?;
+    let greedy = lane(PolicyKind::Greedy, &dynamic)?;
+    let ncis_static = lane(PolicyKind::GreedyNcis, &static_world)?;
 
     let mut fig = FigureOutput::new(
         "fig_scenario_churn_outage",

@@ -59,9 +59,8 @@ fn run_policy(
     believed_pages: &[PageParams],
     kind: PolicyKind,
     spec: &SemiSynthSpec,
-) -> (f64, f64) {
-    let cfg = SimConfig::new(spec.budget, spec.steps)
-        .expect("semi-synth budget must be a positive finite crawl rate");
+) -> Result<(f64, f64)> {
+    let cfg = SimConfig::new(spec.budget, spec.steps)?;
     let mut acc = RepAccumulator::new(true_inst.pages.len());
     let mut ws = SimWorkspace::new();
     // one scheduler reused across reps: on_start resets it (the
@@ -70,8 +69,7 @@ fn run_policy(
         .policy(kind)
         .strategy(Strategy::Lazy)
         .pages(believed_pages)
-        .build()
-        .expect("fig05 scheduler construction");
+        .build()?;
     for rep in 0..spec.reps {
         let mut rng = Rng::new(spec.seed ^ (0xABCD + rep as u64));
         let traces = generate_traces(&true_inst.pages, spec.steps, CisDelay::None, &mut rng);
@@ -79,7 +77,7 @@ fn run_policy(
         acc.push(res.accuracy, &res.empirical_rates(spec.steps));
     }
     let s = acc.accuracy();
-    (s.mean, s.stderr)
+    Ok((s.mean, s.stderr))
 }
 
 /// Figure 5: GREEDY vs GREEDY-NCIS vs GREEDY-CIS+ on the semi-synthetic
@@ -104,10 +102,10 @@ pub fn fig05(spec: &SemiSynthSpec) -> Result<()> {
         let mut crng = Rng::new(spec.seed ^ 0xC0 ^ (p * 100.0) as u64);
         let believed_recs = dataset::corrupt(&sample, p, &mut crng);
         let believed_inst = dataset::to_instance(&believed_recs, spec.budget).normalized();
-        let (g, g_se) = run_policy(&true_inst, &believed_inst.pages, PolicyKind::Greedy, spec);
-        let (n, n_se) = run_policy(&true_inst, &believed_inst.pages, PolicyKind::GreedyNcis, spec);
+        let (g, g_se) = run_policy(&true_inst, &believed_inst.pages, PolicyKind::Greedy, spec)?;
+        let (n, n_se) = run_policy(&true_inst, &believed_inst.pages, PolicyKind::GreedyNcis, spec)?;
         let (c, c_se) =
-            run_policy(&true_inst, &believed_inst.pages, PolicyKind::GreedyCisPlus, spec);
+            run_policy(&true_inst, &believed_inst.pages, PolicyKind::GreedyCisPlus, spec)?;
         fig.rowf(&[p, g, n, c, g_se, n_se, c_se]);
     }
     fig.finish()?;

@@ -16,7 +16,7 @@ use crate::Result;
 /// `value_ncis` per point).
 pub fn fig06() -> Result<()> {
     let p = PageParams { delta: 1.0, mu: 1.0, lam: 0.5, nu: 0.8 };
-    let d = p.derive().unwrap();
+    let d = p.derive()?;
     let asymptote = d.mu / d.delta;
     let mut fig = FigureOutput::new(
         "fig06_value_function",

@@ -45,6 +45,11 @@
 //!   ([`Scenario`] / [`WorldEvent`]), merged into the streaming
 //!   simulator with slot recycling + generation counters, plus
 //!   composable stress-pattern generators.
+//! - [`fault`] — fault injection and resilience: deterministic
+//!   [`fault::FaultModel`] (transient errors, timeouts, correlated
+//!   host outages, dead pages), [`fault::RetryPolicy`] with
+//!   deterministic backoff jitter, the fault-aware merge engine with
+//!   bandwidth-conserving retry accounting, and degraded-mode metrics.
 //! - [`estimation`] — Appendix-E estimators for CIS precision/recall.
 //! - [`dataset`] — semi-synthetic stand-in for the (non-public)
 //!   Kolobov et al. dataset.
@@ -61,6 +66,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod error;
 pub mod estimation;
+pub mod fault;
 pub mod figures;
 pub mod lds;
 pub mod metrics;

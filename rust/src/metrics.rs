@@ -125,10 +125,17 @@ pub struct Registry {
     histos: Mutex<Vec<(String, std::sync::Arc<DurationHisto>)>>,
 }
 
+/// Lock a registry mutex, surviving poison: a panicked worker must not
+/// also take down metrics exposition — the stored `Arc`s are always
+/// structurally valid, so the poisoned state is safely recoverable.
+fn lock_resilient<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 impl Registry {
     /// Register (or create) a counter.
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
-        let mut cs = self.counters.lock().unwrap();
+        let mut cs = lock_resilient(&self.counters);
         if let Some((_, c)) = cs.iter().find(|(n, _)| n == name) {
             return c.clone();
         }
@@ -139,7 +146,7 @@ impl Registry {
 
     /// Register (or create) a gauge.
     pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
-        let mut gs = self.gauges.lock().unwrap();
+        let mut gs = lock_resilient(&self.gauges);
         if let Some((_, g)) = gs.iter().find(|(n, _)| n == name) {
             return g.clone();
         }
@@ -150,7 +157,7 @@ impl Registry {
 
     /// Register (or create) a duration histogram.
     pub fn histo(&self, name: &str) -> std::sync::Arc<DurationHisto> {
-        let mut hs = self.histos.lock().unwrap();
+        let mut hs = lock_resilient(&self.histos);
         if let Some((_, h)) = hs.iter().find(|(n, _)| n == name) {
             return h.clone();
         }
@@ -162,13 +169,13 @@ impl Registry {
     /// Text exposition (Prometheus-flavoured, `name value` lines).
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (n, c) in self.counters.lock().unwrap().iter() {
+        for (n, c) in lock_resilient(&self.counters).iter() {
             out.push_str(&format!("{n} {}\n", c.get()));
         }
-        for (n, g) in self.gauges.lock().unwrap().iter() {
+        for (n, g) in lock_resilient(&self.gauges).iter() {
             out.push_str(&format!("{n} {}\n", g.get()));
         }
-        for (n, h) in self.histos.lock().unwrap().iter() {
+        for (n, h) in lock_resilient(&self.histos).iter() {
             out.push_str(&format!(
                 "{n}_count {}\n{n}_mean_seconds {:.9}\n{n}_p99_seconds {:.9}\n",
                 h.count(),
@@ -232,6 +239,23 @@ mod tests {
         assert!(text.contains("b 1.5"));
         assert!(text.contains("lat_count 1"));
         assert!(text.contains("lat_p99_seconds"));
+    }
+
+    #[test]
+    fn registry_survives_a_poisoned_lock() {
+        let r = Registry::default();
+        r.counter("a_total").add(2);
+        // poison the counters mutex the way a panicking worker would
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = r.counters.lock().unwrap();
+            panic!("worker died while registering");
+        }));
+        assert!(poisoned.is_err());
+        assert!(r.counters.is_poisoned());
+        // registration and exposition still work after the poison
+        r.counter("a_total").inc();
+        assert_eq!(r.counter("a_total").get(), 3);
+        assert!(r.render().contains("a_total 3"));
     }
 
     #[test]

@@ -270,9 +270,7 @@ fn effective_bandwidth(base: &BandwidthSchedule, events: &[TimedEvent]) -> Bandw
     for (k, &(t, r)) in changes.iter().enumerate() {
         dirs.push((t, 1, k, r));
     }
-    dirs.sort_by(|a, b| {
-        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
-    });
+    dirs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
     let mut segs: Vec<(f64, f64)> = Vec::new();
     for (t, _, _, r) in dirs {
         match segs.last_mut() {
@@ -281,7 +279,7 @@ fn effective_bandwidth(base: &BandwidthSchedule, events: &[TimedEvent]) -> Bandw
         }
     }
     BandwidthSchedule::new(segs)
-        .expect("validated directives merge into a valid schedule")
+        .unwrap_or_else(|e| unreachable!("validated directives merge into a valid schedule: {e}"))
 }
 
 /// Apply one world event at its time `ev.t`. `idx` is the event's
@@ -514,7 +512,9 @@ pub fn simulate_scenario_with(
             if te > next_tick {
                 break;
             }
-            let Reverse((OrdF64(et), kind, page, ver)) = ws.heap.pop().unwrap();
+            let Some(Reverse((OrdF64(et), kind, page, ver))) = ws.heap.pop() else {
+                break; // unreachable: a finite frontier implies a non-empty heap
+            };
             let i = page as usize;
             if ver != ws.stream_ver[i] {
                 continue; // stale entry: the page retired or regenerated
@@ -873,7 +873,9 @@ pub fn simulate_scenario_streamed_with(
             if te > next_tick {
                 break;
             }
-            let Reverse((OrdF64(et), kind, page, ver)) = ws.heap.pop().unwrap();
+            let Some(Reverse((OrdF64(et), kind, page, ver))) = ws.heap.pop() else {
+                break; // unreachable: a finite frontier implies a non-empty heap
+            };
             let i = page as usize;
             if ver != ws.stream_ver[i] {
                 continue; // stale entry: the page retired or re-seeded

@@ -194,7 +194,7 @@ impl Scenario {
             self.events.push(TimedEvent { t, event });
         }
         // stable: preserves existing order and batch order at equal times
-        self.events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        self.events.sort_by(|a, b| a.t.total_cmp(&b.t));
     }
 
     fn validate_event(t: f64, event: &WorldEvent) {

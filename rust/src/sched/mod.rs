@@ -30,6 +30,12 @@
 //!   `page` shifted (drift, rate shift); schedulers that model beliefs
 //!   re-project them here.
 //!
+//! The fault layer ([`crate::fault`]) adds one more, also a safe
+//! default: [`CrawlScheduler::on_crawl_failed`] — a fetch attempt
+//! failed (the tick was spent, the page was not fetched); by default
+//! the failure is treated like a veto so the page is sidelined for an
+//! immediate re-`select`.
+//!
 //! [`PageTracker`] is the shared bookkeeping every stateful scheduler
 //! embeds: last-crawl times and pending-CIS counts, updated from the
 //! hooks with exactly the semantics the pre-redesign engine used for
@@ -84,6 +90,20 @@ pub trait CrawlScheduler {
         let _ = (page, t);
     }
 
+    /// A crawl attempt on `page` at time `t` **failed** with the given
+    /// outcome — the tick was spent but the page was NOT fetched, so
+    /// its freshness state is unchanged and `on_crawl` will not fire.
+    /// The fault engine (`crate::fault::engine`) owns the retry/backoff
+    /// calendar; this hook is the scheduler's chance to re-score.
+    /// Default: treat the failure like a veto (sideline the page so an
+    /// immediate re-`select` yields the next-best candidate). Permanent
+    /// failures additionally surface as [`Self::on_page_removed`] when
+    /// the engine quarantines the page.
+    fn on_crawl_failed(&mut self, page: usize, t: f64, outcome: crate::fault::CrawlOutcome) {
+        let _ = outcome;
+        self.on_veto(page, t);
+    }
+
     /// Slot `page` now holds a live page with parameters `params`
     /// (born at time `t`). `page` is either one past the current
     /// population (growth) or a previously-retired slot (recycling);
@@ -131,6 +151,9 @@ impl<S: CrawlScheduler + ?Sized> CrawlScheduler for Box<S> {
     }
     fn on_veto(&mut self, page: usize, t: f64) {
         (**self).on_veto(page, t)
+    }
+    fn on_crawl_failed(&mut self, page: usize, t: f64, outcome: crate::fault::CrawlOutcome) {
+        (**self).on_crawl_failed(page, t, outcome)
     }
     fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
         (**self).on_page_added(page, params, t)

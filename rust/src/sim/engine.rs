@@ -220,21 +220,24 @@ pub(crate) const KIND_REQUEST: u8 = 2;
 #[derive(Debug, Default)]
 pub struct SimWorkspace {
     /// Last crawl time per page (drives the Appendix-C discard window).
-    last_crawl: Vec<f64>,
-    changed: Vec<bool>,
-    crawl_counts: Vec<u32>,
-    ring: Vec<bool>,
-    heap: BinaryHeap<Reverse<(OrdF64, u8, u32)>>,
+    /// Fields are `pub(crate)` so the fault engine
+    /// ([`crate::fault::engine`]) drives the identical merge loop over
+    /// the same scratch.
+    pub(crate) last_crawl: Vec<f64>,
+    pub(crate) changed: Vec<bool>,
+    pub(crate) crawl_counts: Vec<u32>,
+    pub(crate) ring: Vec<bool>,
+    pub(crate) heap: BinaryHeap<Reverse<(OrdF64, u8, u32)>>,
     /// Merge frontier, time column: page `i`'s pending event time
     /// (`INFINITY` = exhausted). Debug-mode bookkeeping only: heap
     /// entries carry the same `(time, kind)` pair, so release builds
     /// skip these stores entirely; debug builds use the columns to
     /// assert the one-live-entry-per-page invariant on every pop.
-    frontier_time: Vec<f64>,
+    pub(crate) frontier_time: Vec<f64>,
     /// Merge frontier, kind column (debug-mode bookkeeping, as above).
-    frontier_kind: Vec<u8>,
+    pub(crate) frontier_kind: Vec<u8>,
     /// Cursor pool lent to [`ReplaySource`] between repetitions.
-    cursor_pool: Vec<[usize; 3]>,
+    pub(crate) cursor_pool: Vec<[usize; 3]>,
 }
 
 impl SimWorkspace {
@@ -243,7 +246,7 @@ impl SimWorkspace {
         Self::default()
     }
 
-    fn reset(&mut self, m: usize) {
+    pub(crate) fn reset(&mut self, m: usize) {
         self.last_crawl.clear();
         self.last_crawl.resize(m, 0.0);
         self.changed.clear();
@@ -264,7 +267,7 @@ impl SimWorkspace {
     /// Record page `i`'s pending frontier event (debug builds only —
     /// release builds rely on the heap entry alone).
     #[inline]
-    fn set_frontier(&mut self, i: usize, ev: Option<(f64, u8)>) {
+    pub(crate) fn set_frontier(&mut self, i: usize, ev: Option<(f64, u8)>) {
         #[cfg(debug_assertions)]
         {
             let (t, k) = ev.unwrap_or((f64::INFINITY, 0));

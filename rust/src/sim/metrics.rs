@@ -57,6 +57,77 @@ impl RepAccumulator {
     }
 }
 
+/// Degraded-mode aggregation across repetitions of a faulty cell:
+/// freshness-under-failure (the accuracy the crawler still achieves
+/// while fetches fail), the wasted-bandwidth fraction (ticks burnt on
+/// failed attempts or forfeited on quarantined picks), and the per-host
+/// retry histogram summed over reps. Companion to [`RepAccumulator`]
+/// for [`crate::fault::FaultSimResult`] runs.
+#[derive(Debug, Default, Clone)]
+pub struct FaultRepAccumulator {
+    accuracies: Vec<f64>,
+    wasted_fractions: Vec<f64>,
+    retry_fractions: Vec<f64>,
+    quarantined: Vec<f64>,
+    /// Per-host retry counts summed across reps.
+    retries_per_host: Vec<u64>,
+    reps: usize,
+}
+
+impl FaultRepAccumulator {
+    /// New accumulator for a topology of `hosts` hosts.
+    pub fn new(hosts: usize) -> Self {
+        Self { retries_per_host: vec![0; hosts], ..Self::default() }
+    }
+
+    /// Record one repetition.
+    pub fn push(&mut self, res: &crate::fault::FaultSimResult) {
+        assert_eq!(res.faults.retries_per_host.len(), self.retries_per_host.len());
+        self.accuracies.push(res.sim.accuracy);
+        self.wasted_fractions.push(res.faults.wasted_fraction());
+        let attempts = res.faults.attempts.max(1) as f64;
+        self.retry_fractions.push(res.faults.retries as f64 / attempts);
+        self.quarantined.push(res.faults.quarantined as f64);
+        for (s, &r) in self.retries_per_host.iter_mut().zip(&res.faults.retries_per_host) {
+            *s += r;
+        }
+        self.reps += 1;
+    }
+
+    /// Freshness-under-failure summary (accuracy across reps).
+    pub fn accuracy(&self) -> Summary {
+        summarize(&self.accuracies)
+    }
+
+    /// Wasted-bandwidth fraction summary.
+    pub fn wasted_fraction(&self) -> Summary {
+        summarize(&self.wasted_fractions)
+    }
+
+    /// Fraction of attempts that were retries, summarized across reps.
+    pub fn retry_fraction(&self) -> Summary {
+        summarize(&self.retry_fractions)
+    }
+
+    /// Quarantined-page count summary.
+    pub fn quarantined(&self) -> Summary {
+        summarize(&self.quarantined)
+    }
+
+    /// Mean retries per host across reps.
+    pub fn mean_retries_per_host(&self) -> Vec<f64> {
+        if self.reps == 0 {
+            return vec![f64::NAN; self.retries_per_host.len()];
+        }
+        self.retries_per_host.iter().map(|&s| s as f64 / self.reps as f64).collect()
+    }
+
+    /// Number of repetitions recorded.
+    pub fn reps(&self) -> usize {
+        self.reps
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +149,65 @@ mod tests {
     fn rate_length_mismatch_panics() {
         let mut acc = RepAccumulator::new(2);
         acc.push(0.8, &[1.0]);
+    }
+
+    #[test]
+    fn fault_accumulator_summarizes_degraded_runs() {
+        use crate::fault::{FaultSimResult, FaultStats};
+        use crate::sim::engine::SimResult;
+        let mk = |accuracy: f64, stats: FaultStats| FaultSimResult {
+            sim: SimResult {
+                accuracy,
+                requests: 10,
+                fresh_hits: 5,
+                crawl_counts: vec![],
+                ticks: 10,
+                timeline: vec![],
+            },
+            faults: stats,
+        };
+        let mut s1 = FaultStats::new(2);
+        s1.attempts = 10;
+        s1.successes = 8;
+        s1.transient_errors = 2;
+        s1.retries = 2;
+        s1.retries_per_host = vec![2, 0];
+        let mut s2 = FaultStats::new(2);
+        s2.attempts = 10;
+        s2.successes = 6;
+        s2.timeouts = 4;
+        s2.retries = 4;
+        s2.quarantined = 1;
+        s2.retries_per_host = vec![1, 3];
+
+        let mut acc = FaultRepAccumulator::new(2);
+        acc.push(&mk(0.9, s1));
+        acc.push(&mk(0.7, s2));
+        assert_eq!(acc.reps(), 2);
+        assert!((acc.accuracy().mean - 0.8).abs() < 1e-12);
+        // wasted fractions: 2/10 and 4/10 → mean 0.3
+        assert!((acc.wasted_fraction().mean - 0.3).abs() < 1e-12);
+        assert!((acc.retry_fraction().mean - 0.3).abs() < 1e-12);
+        assert!((acc.quarantined().mean - 0.5).abs() < 1e-12);
+        assert_eq!(acc.mean_retries_per_host(), vec![1.5, 1.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fault_host_mismatch_panics() {
+        use crate::fault::{FaultSimResult, FaultStats};
+        use crate::sim::engine::SimResult;
+        let mut acc = FaultRepAccumulator::new(3);
+        acc.push(&FaultSimResult {
+            sim: SimResult {
+                accuracy: 0.5,
+                requests: 0,
+                fresh_hits: 0,
+                crawl_counts: vec![],
+                ticks: 0,
+                timeline: vec![],
+            },
+            faults: FaultStats::new(2),
+        });
     }
 }

@@ -1,0 +1,386 @@
+//! Fault-injection suite: the resilience contracts of the fault layer.
+//!
+//! 1. **Zero-fault bit-parity pins**: the fault engine with the inert
+//!    model is bit-identical to the plain engine for every
+//!    (strategy × policy) combination, through BOTH the materialized
+//!    replay path and the streamed path — the fault layer must be free
+//!    when disabled.
+//! 2. **Chaos fuzzer**: N random fault timelines (random probabilities,
+//!    outages, retry policies, populations), each replayed twice —
+//!    bit-identical results — with the engine invariants checked on
+//!    every run: bandwidth conservation including wasted ticks, no
+//!    crawl of a quarantined page, consistent failure accounting.
+//! 3. **Retry bandwidth accounting over bursty outages**: retries
+//!    consume real ticks from the same constant-rate budget — the
+//!    faulty run executes exactly as many ticks as the fault-free run
+//!    on the same schedule, never more.
+
+use ncis_crawl::fault::{
+    simulate_faulty_streamed_with, simulate_faulty_with, FaultConfig, FaultModel, HostOutage,
+    RetryPolicy,
+};
+use ncis_crawl::params::PageParams;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::sched::CrawlScheduler;
+use ncis_crawl::sim::{
+    generate_traces, simulate_streamed_with, simulate_with, CisDelay, SimConfig, SimResult,
+    SimWorkspace, StreamedSource,
+};
+use ncis_crawl::{CrawlerBuilder, Strategy};
+
+fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| PageParams {
+            delta: rng.range(0.01, 1.0),
+            mu: rng.range(0.01, 1.0),
+            lam: rng.f64(),
+            nu: rng.range(0.0, 0.6),
+        })
+        .collect()
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{ctx}: accuracy");
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.fresh_hits, b.fresh_hits, "{ctx}: fresh_hits");
+    assert_eq!(a.crawl_counts, b.crawl_counts, "{ctx}: crawl_counts");
+    assert_eq!(a.ticks, b.ticks, "{ctx}: ticks");
+    assert_eq!(a.timeline.len(), b.timeline.len(), "{ctx}: timeline length");
+    for (k, (x, y)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: timeline[{k}].t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: timeline[{k}].acc");
+    }
+}
+
+/// Wraps a scheduler and asserts the engine never hands a crawl (or a
+/// crawl failure) for a page it already removed — the externally
+/// observable form of the quarantine invariant.
+struct QuarantineWatch {
+    inner: Box<dyn CrawlScheduler + Send>,
+    removed: Vec<bool>,
+}
+
+impl QuarantineWatch {
+    fn new(inner: Box<dyn CrawlScheduler + Send>) -> Self {
+        Self { inner, removed: Vec::new() }
+    }
+}
+
+impl CrawlScheduler for QuarantineWatch {
+    fn on_start(&mut self, m: usize) {
+        self.removed = vec![false; m];
+        self.inner.on_start(m);
+    }
+
+    fn on_cis(&mut self, page: usize, t: f64) {
+        assert!(!self.removed[page], "CIS for quarantined page {page} at t={t}");
+        self.inner.on_cis(page, t);
+    }
+
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        assert!(!self.removed[page], "crawl of quarantined page {page} at t={t}");
+        self.inner.on_crawl(page, t);
+    }
+
+    fn on_veto(&mut self, page: usize, t: f64) {
+        self.inner.on_veto(page, t);
+    }
+
+    fn on_crawl_failed(&mut self, page: usize, t: f64, outcome: ncis_crawl::fault::CrawlOutcome) {
+        assert!(!self.removed[page], "failed crawl of quarantined page {page} at t={t}");
+        self.inner.on_crawl_failed(page, t, outcome);
+    }
+
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        assert!(!self.removed[page], "page {page} removed twice (t={t})");
+        self.removed[page] = true;
+        self.inner.on_page_removed(page, t);
+    }
+
+    fn select(&mut self, t: f64) -> Option<usize> {
+        self.inner.select(t)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+}
+
+const COMBOS: &[(Strategy, PolicyKind)] = &[
+    (Strategy::Exact, PolicyKind::Greedy),
+    (Strategy::Exact, PolicyKind::GreedyNcis),
+    (Strategy::Exact, PolicyKind::GreedyCis),
+    (Strategy::Lazy, PolicyKind::GreedyNcis),
+    (Strategy::Lazy, PolicyKind::NcisApprox(2)),
+];
+
+#[test]
+fn zero_fault_is_bit_identical_materialized() {
+    let pp = pages(120, 0xFA);
+    let horizon = 60.0;
+    let cfg = SimConfig::new(6.0, horizon).unwrap();
+    let mut trng = Rng::new(0xFB);
+    let traces = generate_traces(&pp, horizon, CisDelay::None, &mut trng);
+    for &(strategy, policy) in COMBOS {
+        for retry in [
+            RetryPolicy::default(),
+            RetryPolicy::Immediate { max_attempts: 2 },
+        ] {
+            let build = || {
+                CrawlerBuilder::new().policy(policy).strategy(strategy).pages(&pp).build().unwrap()
+            };
+            let mut ws = SimWorkspace::new();
+            let mut plain = build();
+            let want = simulate_with(&mut ws, &traces, &cfg, plain.as_mut());
+            let mut faulty = build();
+            let mut model = FaultModel::inert();
+            let got =
+                simulate_faulty_with(&mut ws, &traces, &cfg, faulty.as_mut(), &mut model, retry);
+            let ctx = format!("{strategy:?}/{policy:?}/{retry:?}");
+            assert_bit_identical(&want, &got.sim, &ctx);
+            assert_eq!(got.faults.failures(), 0, "{ctx}: failures");
+            assert_eq!(got.faults.retries, 0, "{ctx}: retries");
+            assert_eq!(got.faults.quarantined, 0, "{ctx}: quarantined");
+            assert_eq!(got.faults.forfeited_ticks, 0, "{ctx}: forfeited");
+        }
+    }
+}
+
+#[test]
+fn zero_fault_is_bit_identical_streamed() {
+    let pp = pages(120, 0xFC);
+    let horizon = 60.0;
+    let cfg = SimConfig::new(6.0, horizon).unwrap();
+    for &(strategy, policy) in COMBOS {
+        let build = || {
+            CrawlerBuilder::new().policy(policy).strategy(strategy).pages(&pp).build().unwrap()
+        };
+        let src = |seed: u64| {
+            let mut trng = Rng::new(seed);
+            StreamedSource::new(&pp, horizon, CisDelay::None, &mut trng).unwrap()
+        };
+        let mut ws = SimWorkspace::new();
+        let mut plain = build();
+        let want = simulate_streamed_with(&mut ws, src(0xFD), &cfg, plain.as_mut());
+        let mut faulty = build();
+        let mut model = FaultModel::inert();
+        let got = simulate_faulty_streamed_with(
+            &mut ws,
+            src(0xFD),
+            &cfg,
+            faulty.as_mut(),
+            &mut model,
+            RetryPolicy::default(),
+        );
+        assert_bit_identical(&want, &got.sim, &format!("streamed {strategy:?}/{policy:?}"));
+    }
+}
+
+/// One random fault timeline of the chaos fuzzer: returns the faulty
+/// result so the caller can replay and compare.
+fn chaos_run(seed: u64) -> (ncis_crawl::fault::FaultSimResult, String) {
+    let mut rng = Rng::new(seed);
+    let m = 40 + (rng.next_u64() % 80) as usize;
+    let horizon = 30.0 + rng.f64() * 30.0;
+    let r = 2.0 + rng.f64() * 6.0;
+    let hosts = 1 + (rng.next_u64() % 8) as usize;
+    let pp = pages(m, seed ^ 0xA5A5);
+    let cfg = SimConfig::new(r, horizon).unwrap();
+    let mut fault_cfg = FaultConfig {
+        transient_prob: rng.f64() * 0.5,
+        timeout_prob: rng.f64() * 0.2,
+        gone_prob: rng.f64() * 0.05,
+        hosts,
+        outages: Vec::new(),
+        seed: seed ^ 0x5A5A,
+    };
+    fault_cfg.add_correlated_outages(
+        (rng.next_u64() % 6) as usize,
+        1.0 + rng.f64() * 5.0,
+        horizon,
+        seed ^ 0x0FF,
+    );
+    let retry = if rng.next_u64() % 2 == 0 {
+        RetryPolicy::Immediate { max_attempts: 1 + (rng.next_u64() % 4) as u32 }
+    } else {
+        RetryPolicy::ExponentialBackoff {
+            base: 0.1 + rng.f64(),
+            factor: 1.5 + rng.f64(),
+            cap: 10.0,
+            max_attempts: 1 + (rng.next_u64() % 5) as u32,
+        }
+    };
+    let ctx = format!(
+        "seed={seed:#x} m={m} r={r:.2} hosts={hosts} cfg={fault_cfg:?} retry={retry:?}"
+    );
+
+    let mut trng = Rng::new(seed ^ 0xBEEF);
+    let traces = generate_traces(&pp, horizon, CisDelay::None, &mut trng);
+    let inner = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Exact)
+        .pages(&pp)
+        .build()
+        .unwrap();
+    let mut sched = QuarantineWatch::new(inner);
+    let mut model = FaultModel::new(fault_cfg).unwrap();
+    let mut ws = SimWorkspace::new();
+    let res = simulate_faulty_with(&mut ws, &traces, &cfg, &mut sched, &mut model, retry);
+
+    // engine invariants on every run
+    let f = &res.faults;
+    assert_eq!(
+        f.successes + f.failures() + f.forfeited_ticks + f.idle_ticks,
+        res.sim.ticks,
+        "{ctx}: bandwidth conservation"
+    );
+    assert_eq!(f.attempts, f.successes + f.failures(), "{ctx}: attempt accounting");
+    assert!(f.retries <= f.attempts, "{ctx}: retries exceed attempts");
+    assert_eq!(
+        res.sim.crawl_counts.iter().map(|&c| c as u64).sum::<u64>(),
+        f.successes,
+        "{ctx}: only successful fetches count as crawls"
+    );
+    assert_eq!(
+        f.retries_per_host.iter().sum::<u64>(),
+        f.retries,
+        "{ctx}: per-host retry histogram sums to total"
+    );
+    assert!(f.quarantined as usize <= pp.len(), "{ctx}: quarantined bound");
+    (res, ctx)
+}
+
+#[test]
+fn chaos_fuzzer_is_replay_deterministic() {
+    for k in 0..12u64 {
+        let seed = 0xC4A05 ^ (k * 0x9E3779B97F4A7C15);
+        let (a, ctx) = chaos_run(seed);
+        let (b, _) = chaos_run(seed);
+        assert_bit_identical(&a.sim, &b.sim, &ctx);
+        assert_eq!(a.faults, b.faults, "{ctx}: fault stats replay");
+    }
+}
+
+/// Bursty outages: the whole fleet goes dark in waves. Retries must be
+/// paid from the same constant-rate tick budget — the faulty run can
+/// never execute more ticks than the fault-free run on the same
+/// schedule, and every tick is accounted for exactly once.
+#[test]
+fn retry_bandwidth_is_conserved_over_bursty_outages() {
+    let pp = pages(100, 0xB00);
+    let horizon = 80.0;
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
+    let mut trng = Rng::new(0xB01);
+    let traces = generate_traces(&pp, horizon, CisDelay::None, &mut trng);
+    let hosts = 4;
+    // three fleet-wide bursts: every host dark over each window
+    let mut outages = Vec::new();
+    for h in 0..hosts {
+        for &(s, e) in &[(10.0, 14.0), (35.0, 42.0), (60.0, 61.5)] {
+            outages.push(HostOutage { host: h, start: s, end: e });
+        }
+    }
+    let fault_cfg = FaultConfig {
+        transient_prob: 0.1,
+        timeout_prob: 0.0,
+        gone_prob: 0.0,
+        hosts,
+        outages,
+        seed: 0xB02,
+    };
+
+    let build = || {
+        CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Exact)
+            .pages(&pp)
+            .build()
+            .unwrap()
+    };
+    let mut ws = SimWorkspace::new();
+    let mut plain = build();
+    let want = simulate_with(&mut ws, &traces, &cfg, plain.as_mut());
+
+    for retry in [
+        RetryPolicy::Immediate { max_attempts: 6 },
+        RetryPolicy::ExponentialBackoff { base: 0.5, factor: 2.0, cap: 8.0, max_attempts: 6 },
+    ] {
+        let mut sched = build();
+        let mut model = FaultModel::new(fault_cfg.clone()).unwrap();
+        let res =
+            simulate_faulty_with(&mut ws, &traces, &cfg, sched.as_mut(), &mut model, retry);
+        let f = &res.faults;
+        // same tick budget as the fault-free run: retries reuse ticks,
+        // they never mint new ones
+        assert_eq!(res.sim.ticks, want.ticks, "{retry:?}: tick budget");
+        assert_eq!(
+            f.successes + f.failures() + f.forfeited_ticks + f.idle_ticks,
+            res.sim.ticks,
+            "{retry:?}: conservation"
+        );
+        // the bursts really bit: timeouts were recorded and retried
+        assert!(f.timeouts > 0, "{retry:?}: bursts should time fetches out");
+        assert!(f.retries > 0, "{retry:?}: failures should schedule retries");
+        // wasted bandwidth shows up as lost successes vs the clean run
+        assert!(
+            f.successes <= want.ticks,
+            "{retry:?}: successes bounded by the schedule"
+        );
+    }
+}
+
+/// Fleet-scale sanity: quarantine (attempt budget exhausted against a
+/// permanently dark host) removes pages, and the engine forfeits — not
+/// crashes on — later picks of them.
+#[test]
+fn permanent_outage_quarantines_and_forfeits() {
+    let pp = pages(30, 0xD00);
+    let horizon = 40.0;
+    let cfg = SimConfig::new(3.0, horizon).unwrap();
+    let mut trng = Rng::new(0xD01);
+    let traces = generate_traces(&pp, horizon, CisDelay::None, &mut trng);
+    let hosts = 3;
+    // host 0 is dark for the whole horizon: its pages burn their
+    // attempt budgets and must end up quarantined
+    let fault_cfg = FaultConfig {
+        transient_prob: 0.0,
+        timeout_prob: 0.0,
+        gone_prob: 0.0,
+        hosts,
+        outages: vec![HostOutage { host: 0, start: 0.0, end: horizon }],
+        seed: 0xD02,
+    };
+    let inner = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Exact)
+        .pages(&pp)
+        .build()
+        .unwrap();
+    let mut sched = QuarantineWatch::new(inner);
+    let mut model = FaultModel::new(fault_cfg).unwrap();
+    let mut ws = SimWorkspace::new();
+    let res = simulate_faulty_with(
+        &mut ws,
+        &traces,
+        &cfg,
+        &mut sched,
+        &mut model,
+        RetryPolicy::Immediate { max_attempts: 2 },
+    );
+    let f = &res.faults;
+    assert!(f.quarantined > 0, "dark-host pages should be quarantined");
+    assert!(f.timeouts >= 2 * f.quarantined, "each quarantine burnt its attempt budget");
+    // pages on the dark host never produced a successful crawl
+    for (i, &c) in res.sim.crawl_counts.iter().enumerate() {
+        if i % hosts == 0 {
+            assert_eq!(c, 0, "page {i} is on the dark host");
+        }
+    }
+    assert_eq!(
+        f.successes + f.failures() + f.forfeited_ticks + f.idle_ticks,
+        res.sim.ticks,
+        "conservation with quarantine forfeits"
+    );
+}
