@@ -24,6 +24,9 @@
 //!   plain engine (`fault_overhead_*`; acceptance: ≤ 1.05× at m=1e5)
 //!   and degraded-mode throughput under a heavy fault mix
 //!   (`fault_degraded_*`)
+//! - serving layer: the served engine with off traffic vs the plain
+//!   engine (`serve_off_*` / `serve_overhead_*`; acceptance: ≤ 1.10×
+//!   at m=1e5) and loaded Zipf request throughput (`serve_on_*`)
 //!
 //! Every lane is also recorded into `BENCH_perf.json` (via
 //! `benchkit::BenchJson`) so future PRs have a machine-readable perf
@@ -971,6 +974,129 @@ fn bench_faults(json: &mut BenchJson, smoke: bool) -> Vec<String> {
     declared
 }
 
+/// Serving-layer lanes (the request-side acceptance bars):
+///
+/// - `serve_off_m*` / `serve_overhead_m*`: the served engine carrying a
+///   [`RequestTraffic::off`] session vs the plain engine on the same
+///   traces and scheduler — the cost of the serve branch in the event
+///   loop when no request ever arrives. Acceptance: ≤ 1.10× at m=1e5.
+/// - `serve_on_m*`: the same cell under a loaded Zipf request stream
+///   (diurnal + one flash crowd) — throughput of answering requests
+///   from the freshness cache, recorded for trajectory rather than
+///   gated.
+///
+/// Returns the declared acceptance lane names.
+fn bench_serving(json: &mut BenchJson, smoke: bool) -> Vec<String> {
+    use ncis_crawl::serving::{RequestTraffic, ServingSession};
+    use ncis_crawl::sim::simulate_served_with;
+    let mut declared = Vec::new();
+    let m: usize = if smoke { 2_048 } else { 100_000 };
+    let horizon = 10.0;
+    let r = if smoke { 200.0 } else { 2_000.0 };
+    println!("\n-- serving layer: zero-traffic overhead and loaded serving (m={m}) --");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let mut irng = Rng::new(45);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let mut trng = Rng::new(46);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(r, horizon).expect("valid bench bandwidth");
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+
+    // plain engine baseline (same construction idiom as the other lanes)
+    let secs_plain = {
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_with(&mut ws, &traces, &cfg, sched.as_mut()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("plain engine         m={m}"), &meas);
+        json.lane(
+            &format!("serve_baseline_m{m}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        meas.mean_s
+    };
+
+    // served engine, off traffic: the overhead acceptance lane
+    let secs_off = {
+        let off = RequestTraffic::off();
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                let mut serving = ServingSession::new(&off, &inst.pages, horizon);
+                std::hint::black_box(simulate_served_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    sched.as_mut(),
+                    &mut serving,
+                ));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("served engine (off)  m={m}"), &meas);
+        let lane = format!("serve_off_m{m}");
+        json.lane(
+            &lane,
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        declared.push(lane);
+        meas.mean_s
+    };
+    let overhead = secs_off / secs_plain.max(1e-12);
+    println!("serving-disabled overhead: {overhead:.3}x (acceptance: <= 1.10x)");
+    let lane = format!("serve_overhead_m{m}");
+    json.lane(&lane, &[("x", overhead)]);
+    declared.push(lane);
+
+    // loaded serving: Zipf requests at the crawl bandwidth, diurnal
+    // cycle, one mid-run flash crowd
+    {
+        let traffic = RequestTraffic::new(r, 1.1, 47)
+            .expect("valid bench traffic")
+            .with_diurnal(horizon / 4.0, 0.5)
+            .expect("valid diurnal cycle")
+            .with_flash(horizon * 0.3, horizon * 0.1, m / 2, 2.0 * r)
+            .expect("valid flash crowd");
+        let mut ws = SimWorkspace::new();
+        let mut served = 0u64;
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                let mut serving = ServingSession::new(&traffic, &inst.pages, horizon);
+                let res =
+                    simulate_served_with(&mut ws, &traces, &cfg, sched.as_mut(), &mut serving);
+                served = serving.metrics().served;
+                std::hint::black_box((res, serving.into_metrics()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("served engine (on)   m={m}"), &meas);
+        println!("{:>46} requests served {served}", "");
+        let lane = format!("serve_on_m{m}");
+        json.lane(
+            &lane,
+            &[
+                ("seconds_per_rep", meas.mean_s),
+                ("serves_per_s", served as f64 / meas.mean_s),
+                ("served", served as f64),
+            ],
+        );
+        declared.push(lane);
+    }
+    declared
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -995,6 +1121,7 @@ fn main() {
     bench_cell_engines(&mut json, smoke);
     let mut declared = bench_event_sourcing(&mut json, smoke);
     declared.extend(bench_faults(&mut json, smoke));
+    declared.extend(bench_serving(&mut json, smoke));
 
     // declared-lane manifest: the acceptance-critical lanes every run
     // of this bench must record, in both --smoke and full mode. CI

@@ -34,11 +34,16 @@ use crate::params::PageParams;
 use crate::policy::{PolicyKind, PolicyUnderTest};
 use crate::rngkit::Rng;
 use crate::scenario::{
+    simulate_scenario_served_with, simulate_scenario_streamed_served_with,
     simulate_scenario_streamed_with, simulate_scenario_with, Scenario, ScenarioWorkspace,
 };
 use crate::sched::CrawlScheduler;
-use crate::sim::engine::{SimConfig, SimResult};
-use crate::sim::{generate_traces, TraceMode};
+use crate::serving::{RequestTraffic, ServingMetrics, ServingSession};
+use crate::sim::engine::{SimConfig, SimResult, SimWorkspace};
+use crate::sim::{
+    generate_traces, simulate_served_with, simulate_streamed_served_with, CisDelay,
+    StreamedSource, TraceMode,
+};
 use crate::Result;
 
 /// Which scheduling strategy drives the policy's value function.
@@ -72,6 +77,7 @@ pub struct CrawlerBuilder {
     lds_rates: Vec<f64>,
     scenario: Option<Scenario>,
     trace_mode: TraceMode,
+    traffic: Option<RequestTraffic>,
 }
 
 /// Shared construction body of [`CrawlerBuilder::build`] and
@@ -144,6 +150,7 @@ impl CrawlerBuilder {
             lds_rates: Vec::new(),
             scenario: None,
             trace_mode: TraceMode::default(),
+            traffic: None,
         }
     }
 
@@ -203,6 +210,98 @@ impl CrawlerBuilder {
     /// The configured scenario, if any.
     pub fn scenario(&self) -> Option<&Scenario> {
         self.scenario.as_ref()
+    }
+
+    /// Attach user request traffic: [`Self::run_traffic`] then answers
+    /// every request from the serving layer's
+    /// [`crate::serving::FreshnessCache`] and returns
+    /// fairness-at-request [`ServingMetrics`] alongside the crawl
+    /// result. An [`RequestTraffic::off`] configuration is pinned
+    /// bit-identical to the plain engines (`tests/serving_parity.rs`).
+    pub fn with_traffic(mut self, traffic: RequestTraffic) -> Self {
+        self.traffic = Some(traffic);
+        self
+    }
+
+    /// The configured request traffic, if any.
+    pub fn traffic(&self) -> Option<&RequestTraffic> {
+        self.traffic.as_ref()
+    }
+
+    /// Build the scheduler and run one repetition with the serving
+    /// layer attached: crawl events replay exactly as
+    /// [`Self::run_scenario`] (dynamic world) or the static engines
+    /// (no scenario) would — the traffic stream draws from its own RNG,
+    /// so the crawl-side result is bit-identical to the traffic-less
+    /// run — while user requests are answered from the freshness cache.
+    /// Requires [`Self::with_traffic`].
+    pub fn run_traffic(
+        &self,
+        cfg: &SimConfig,
+        trace_seed: u64,
+    ) -> Result<(SimResult, ServingMetrics)> {
+        let traffic = self.traffic.as_ref().ok_or_else(|| {
+            Error::Usage("CrawlerBuilder: run_traffic requires with_traffic(..)".into())
+        })?;
+        let mut sched = self.build()?;
+        if let Some(scenario) = self.scenario.as_ref() {
+            if self.pages != scenario.initial_pages() {
+                return Err(Error::Usage(
+                    "CrawlerBuilder: pages(..) diverged from the scenario's initial \
+                     population — call with_scenario(..) last, or drop the pages(..) override"
+                        .into(),
+                ));
+            }
+            scenario.delay().validate()?;
+            let mut serving =
+                ServingSession::new(traffic, scenario.initial_pages(), cfg.horizon);
+            let mut ws = ScenarioWorkspace::new();
+            let res = match self.trace_mode {
+                TraceMode::Streamed => simulate_scenario_streamed_served_with(
+                    &mut ws,
+                    cfg,
+                    scenario,
+                    trace_seed,
+                    sched.as_mut(),
+                    &mut serving,
+                )?,
+                TraceMode::Materialized => {
+                    let mut rng = Rng::new(trace_seed);
+                    let traces = generate_traces(
+                        scenario.initial_pages(),
+                        cfg.horizon,
+                        scenario.delay(),
+                        &mut rng,
+                    );
+                    simulate_scenario_served_with(
+                        &mut ws,
+                        &traces,
+                        cfg,
+                        scenario,
+                        sched.as_mut(),
+                        &mut serving,
+                    )
+                }
+            };
+            Ok((res, serving.into_metrics()))
+        } else {
+            let mut serving = ServingSession::new(traffic, &self.pages, cfg.horizon);
+            let mut ws = SimWorkspace::new();
+            let mut rng = Rng::new(trace_seed);
+            let res = match self.trace_mode {
+                TraceMode::Streamed => {
+                    let source =
+                        StreamedSource::new(&self.pages, cfg.horizon, CisDelay::None, &mut rng)?;
+                    simulate_streamed_served_with(&mut ws, source, cfg, sched.as_mut(), &mut serving)
+                }
+                TraceMode::Materialized => {
+                    let traces =
+                        generate_traces(&self.pages, cfg.horizon, CisDelay::None, &mut rng);
+                    simulate_served_with(&mut ws, &traces, cfg, sched.as_mut(), &mut serving)
+                }
+            };
+            Ok((res, serving.into_metrics()))
+        }
     }
 
     /// Build the scheduler and run one repetition against the
@@ -484,6 +583,77 @@ mod tests {
         let direct = simulate_scenario_with(&mut ws, &traces, &cfg, &sc, sched.as_mut());
         assert_eq!(materialized.accuracy.to_bits(), direct.accuracy.to_bits());
         assert_eq!(materialized.crawl_counts, direct.crawl_counts);
+    }
+
+    #[test]
+    fn run_traffic_serves_and_preserves_the_crawl_result() {
+        use crate::serving::RequestTraffic;
+        use crate::sim::{simulate_streamed_with, StreamedSource};
+        use crate::sim::engine::SimWorkspace;
+        let ps = pages(16, 21);
+        let cfg = SimConfig::new(4.0, 30.0).unwrap();
+        let base = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .pages(&ps);
+        // off traffic: the crawl result bit-matches the plain engine
+        // and nothing is served
+        let (off, m_off) =
+            base.clone().with_traffic(RequestTraffic::off()).run_traffic(&cfg, 5).unwrap();
+        let mut sched = base.build().unwrap();
+        let mut rng = Rng::new(5);
+        let source = StreamedSource::new(&ps, cfg.horizon, CisDelay::None, &mut rng).unwrap();
+        let mut ws = SimWorkspace::new();
+        let plain = simulate_streamed_with(&mut ws, source, &cfg, sched.as_mut());
+        assert_eq!(off.accuracy.to_bits(), plain.accuracy.to_bits());
+        assert_eq!(off.crawl_counts, plain.crawl_counts);
+        assert_eq!(m_off.served, 0);
+        // loaded traffic: serves land and conservation holds, while the
+        // crawl side is still bit-identical (traffic owns its own RNG)
+        let traffic = RequestTraffic::new(20.0, 1.0, 0xAB).unwrap();
+        let (on, m_on) = base.clone().with_traffic(traffic).run_traffic(&cfg, 5).unwrap();
+        assert_eq!(on.accuracy.to_bits(), plain.accuracy.to_bits());
+        assert!(m_on.served > 0);
+        assert_eq!(m_on.fresh_serves + m_on.stale_serves, m_on.served);
+        // without with_traffic, run_traffic is a usage error
+        assert!(base.run_traffic(&cfg, 5).is_err());
+    }
+
+    #[test]
+    fn run_traffic_through_a_dynamic_world() {
+        use crate::scenario::generators::{add_steady_churn, BornPageSpec};
+        use crate::serving::RequestTraffic;
+        let ps = pages(20, 23);
+        let mut sc = Scenario::new(ps, 61);
+        add_steady_churn(&mut sc, 0.02, 25.0, &BornPageSpec::default(), 62);
+        let cfg = SimConfig::new(5.0, 25.0).unwrap();
+        let traffic = RequestTraffic::new(30.0, 1.0, 0x5E).unwrap();
+        for mode in [TraceMode::Streamed, TraceMode::Materialized] {
+            let builder = CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(Strategy::Lazy)
+                .with_scenario(sc.clone())
+                .with_traffic(traffic.clone())
+                .trace_mode(mode);
+            let (res, metrics) = builder.run_traffic(&cfg, 63).unwrap();
+            assert!((0.0..=1.0).contains(&res.accuracy), "{mode:?}");
+            assert!(metrics.served > 0, "{mode:?}");
+            assert_eq!(
+                metrics.fresh_serves + metrics.stale_serves,
+                metrics.served,
+                "{mode:?}"
+            );
+            // the crawl result matches the traffic-less scenario run
+            let bare = CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(Strategy::Lazy)
+                .with_scenario(sc.clone())
+                .trace_mode(mode)
+                .run_scenario(&cfg, 63)
+                .unwrap();
+            assert_eq!(res.accuracy.to_bits(), bare.accuracy.to_bits(), "{mode:?}");
+            assert_eq!(res.crawl_counts, bare.crawl_counts, "{mode:?}");
+        }
     }
 
     #[test]

@@ -153,13 +153,16 @@ impl<S: CrawlScheduler> CrawlScheduler for PoliteScheduler<S> {
 }
 
 /// Zipf-ish host sizes for `m` pages over `hosts` hosts (a few giant
-/// hosts, a long tail — the shape of real crawl frontiers).
+/// hosts, a long tail — the shape of real crawl frontiers). The
+/// harmonic weights come from the shared [`crate::stats::Zipf`]
+/// distribution at `s = 1` — its `(h+1)^{-1}` masses are exactly the
+/// `1/(h+1)` weights this function always used; only the integer
+/// apportionment (floor + remainder juggling) lives here.
 pub fn zipf_host_sizes(m: usize, hosts: usize, rng: &mut crate::rngkit::Rng) -> Vec<usize> {
     assert!(hosts > 0 && m >= hosts);
-    let weights: Vec<f64> = (0..hosts).map(|h| 1.0 / (h as f64 + 1.0)).collect();
-    let total: f64 = weights.iter().sum();
+    let zipf = crate::stats::Zipf::new(hosts, 1.0);
     let mut sizes: Vec<usize> =
-        weights.iter().map(|w| ((w / total) * m as f64).floor() as usize).collect();
+        (0..hosts).map(|h| (zipf.pmf(h) * m as f64).floor() as usize).collect();
     // every host at least one page, then distribute the remainder
     for s in sizes.iter_mut() {
         if *s == 0 {

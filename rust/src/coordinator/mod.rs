@@ -26,4 +26,5 @@ pub mod shard;
 pub use builder::{CrawlerBuilder, Strategy};
 pub use crawler::{belief_params, GreedyScheduler, LdsAdapter, ValueBackend};
 pub use lazy::LazyGreedyScheduler;
+pub use pipeline::{run_serving_pipeline, ServingPipelineReport};
 pub use shard::{rebalance, ShardPlan, ShardedRun, ShardedScheduler};

@@ -24,8 +24,9 @@ use crate::coordinator::builder::CrawlerBuilder;
 use crate::params::PageParams;
 use crate::rngkit::Rng;
 use crate::sched::{CrawlScheduler, IdleScheduler};
-use crate::sim::engine::KIND_CIS;
-use crate::sim::{CisDelay, PageEventSource};
+use crate::serving::{RequestTraffic, ServingMetrics, ServingSession};
+use crate::sim::engine::{SimConfig, SimResult, SimWorkspace, KIND_CIS};
+use crate::sim::{simulate_streamed_served_with, CisDelay, PageEventSource, StreamedSource};
 use crate::util::OrdF64;
 
 /// A message into a shard worker.
@@ -539,6 +540,143 @@ pub fn run_pipeline_with_schedulers<I: Iterator<Item = (f64, usize)>>(
     })
 }
 
+/// Outcome of a sharded serving run: crawl-side counters plus the
+/// deterministic cross-shard reduction of the per-shard
+/// [`ServingMetrics`].
+#[derive(Debug)]
+pub struct ServingPipelineReport {
+    /// Crawls per shard.
+    pub crawls_per_shard: Vec<u64>,
+    /// Total crawls.
+    pub total_crawls: u64,
+    /// Trace-side requests replayed (freshness accounting).
+    pub requests: u64,
+    /// Trace-side requests that were fresh.
+    pub fresh_hits: u64,
+    /// Merged serving metrics (merged in shard-index order, so two
+    /// runs with the same inputs produce bit-identical sums).
+    pub metrics: ServingMetrics,
+    /// Wall-clock duration of the run.
+    pub wall: std::time::Duration,
+}
+
+/// Sharded serving fan-out: pages are round-robin sharded exactly as
+/// [`run_pipeline`], each shard runs the *served* streamed engine over
+/// its members at `bandwidth / shards` with its own slice of the user
+/// traffic, and the per-shard [`ServingMetrics`] reduce in shard-index
+/// order (the log-bucket counts are `u64` and order-free; the stale-age
+/// sums are `f64`, so a fixed reduction order keeps two same-input runs
+/// bit-identical).
+///
+/// The traffic split mirrors the page split: each shard's base rate is
+/// the global rate scaled by its member fraction, its Zipf law runs
+/// over shard-local popularity ranks (round-robin members are in
+/// ascending global rank, so local rank order matches global), its
+/// seed is derived from the global traffic seed and the shard index,
+/// and a flash crowd rides with the shard that owns its target page.
+/// Stamping errors (invalid template, bad traffic) surface as `Err`
+/// before any worker thread spawns.
+pub fn run_serving_pipeline(
+    pages: &[PageParams],
+    scheduler: &CrawlerBuilder,
+    traffic: &RequestTraffic,
+    cfg: &PipelineConfig,
+    trace_seed: u64,
+) -> crate::Result<ServingPipelineReport> {
+    if cfg.shards == 0 {
+        return Err(crate::Error::Usage(
+            "run_serving_pipeline: at least one shard required".into(),
+        ));
+    }
+    let plan = crate::coordinator::shard::ShardPlan::round_robin(pages.len(), cfg.shards);
+    let members = plan.shard_members();
+    let m = pages.len().max(1);
+    // stamp every shard's scheduler, traffic slice and serving session
+    // up front: misconfiguration is an Err here, not a panic inside
+    // thread::scope; empty shards (shards > pages) simply sit out
+    type Job = (Vec<PageParams>, Box<dyn CrawlScheduler + Send>, ServingSession);
+    let mut jobs: Vec<Option<Job>> = Vec::with_capacity(cfg.shards);
+    for (s, member) in members.iter().enumerate() {
+        if member.is_empty() {
+            jobs.push(None);
+            continue;
+        }
+        let shard_pages: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
+        let sched = scheduler.shard_template(pages, member).build()?;
+        let frac = shard_pages.len() as f64 / m as f64;
+        let mut shard_traffic = RequestTraffic::new(
+            traffic.rate() * frac,
+            traffic.zipf_s(),
+            traffic.seed() ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(s as u64 + 1),
+        )?;
+        for f in traffic.flashes() {
+            if let Some(local) = member.iter().position(|&g| g == f.page) {
+                shard_traffic =
+                    shard_traffic.with_flash(f.t0, f.duration, local, f.extra_rate)?;
+            }
+        }
+        let session = ServingSession::new(&shard_traffic, &shard_pages, cfg.horizon);
+        jobs.push(Some((shard_pages, sched, session)));
+    }
+    let sim_cfg = SimConfig::new(cfg.bandwidth / cfg.shards as f64, cfg.horizon)?;
+    let start = std::time::Instant::now();
+    let results: Vec<Option<(SimResult, ServingMetrics)>> = std::thread::scope(|scope| {
+        let sim_cfg = &sim_cfg;
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(s, job)| {
+                scope.spawn(move || {
+                    job.map(|(shard_pages, mut sched, mut session)| {
+                        let mut rng = Rng::new(trace_seed).split(s as u64);
+                        let source = StreamedSource::new(
+                            &shard_pages,
+                            sim_cfg.horizon,
+                            CisDelay::None,
+                            &mut rng,
+                        )
+                        .expect("CisDelay::None always validates");
+                        let mut ws = SimWorkspace::new();
+                        let res = simulate_streamed_served_with(
+                            &mut ws,
+                            source,
+                            sim_cfg,
+                            sched.as_mut(),
+                            &mut session,
+                        );
+                        (res, session.into_metrics())
+                    })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serving shard worker panicked"))
+            .collect()
+    });
+    // deterministic reduction: shard-index order, always
+    let mut metrics = ServingMetrics::new();
+    let mut crawls_per_shard = vec![0u64; cfg.shards];
+    let mut requests = 0u64;
+    let mut fresh_hits = 0u64;
+    for (s, r) in results.into_iter().enumerate() {
+        if let Some((res, shard_metrics)) = r {
+            crawls_per_shard[s] = res.crawl_counts.iter().map(|&c| c as u64).sum();
+            requests += res.requests;
+            fresh_hits += res.fresh_hits;
+            metrics.merge(&shard_metrics);
+        }
+    }
+    Ok(ServingPipelineReport {
+        total_crawls: crawls_per_shard.iter().sum(),
+        crawls_per_shard,
+        requests,
+        fresh_hits,
+        metrics,
+        wall: start.elapsed(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -790,6 +928,38 @@ mod tests {
         assert!(
             run_pipeline_with_schedulers(&ps, one, std::iter::empty(), &[], &cfg).is_err()
         );
+    }
+
+    #[test]
+    fn serving_pipeline_reduces_deterministically() {
+        let ps = pages(32);
+        let traffic = RequestTraffic::new(40.0, 1.1, 0xD1CE)
+            .unwrap()
+            .with_flash(5.0, 3.0, 2, 60.0)
+            .unwrap();
+        let cfg = PipelineConfig { shards: 4, queue_depth: 8, bandwidth: 16.0, horizon: 25.0 };
+        let a = run_serving_pipeline(&ps, &lazy_ncis(), &traffic, &cfg, 77).unwrap();
+        assert!(a.metrics.served > 0);
+        assert_eq!(a.metrics.fresh_serves + a.metrics.stale_serves, a.metrics.served);
+        // 16 ticks/s over 4 shards = 4/s each; 25s horizon = 100 ticks
+        // per shard, and a lazy scheduler crawls every tick
+        assert_eq!(a.total_crawls, 400);
+        assert!(a.crawls_per_shard.iter().all(|&c| c == 100));
+        // same inputs => bit-identical reduction (shard-index order)
+        let b = run_serving_pipeline(&ps, &lazy_ncis(), &traffic, &cfg, 77).unwrap();
+        assert_eq!(a.metrics.served, b.metrics.served);
+        assert_eq!(a.metrics.overall.count(), b.metrics.overall.count());
+        assert_eq!(a.metrics.overall.mean().to_bits(), b.metrics.overall.mean().to_bits());
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.fresh_hits, b.fresh_hits);
+        // zero shards is a usage error, not a panic
+        let z = PipelineConfig { shards: 0, ..cfg.clone() };
+        assert!(run_serving_pipeline(&ps, &lazy_ncis(), &traffic, &z, 77).is_err());
+        // more shards than pages: empty shards sit out without failing
+        let few = pages(3);
+        let wide = PipelineConfig { shards: 8, queue_depth: 4, bandwidth: 8.0, horizon: 10.0 };
+        let w = run_serving_pipeline(&few, &lazy_ncis(), &traffic, &wide, 77).unwrap();
+        assert!(w.crawls_per_shard[3..].iter().all(|&c| c == 0));
     }
 
     #[test]

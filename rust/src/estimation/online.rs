@@ -126,6 +126,60 @@ mod tests {
     }
 
     #[test]
+    fn refit_cadence_and_counters_are_exact() {
+        // 500 observations at refit_every = 50: a refit fires on
+        // observations 50, 100, ..., 500 — exactly 10 — and seen()
+        // counts every observation
+        let page = PageParams::from_quality(0.4, 0.1, 0.6, 0.6);
+        let mut rng = Rng::new(11);
+        let obs = generate_observations(&page, 0.6, 60_000.0, &mut rng);
+        assert!(obs.len() >= 500);
+        let mut est = OnlineEstimator::new(64, 50, 13);
+        for o in obs.into_iter().take(500) {
+            est.observe(o);
+        }
+        assert_eq!(est.seen(), 500);
+        assert_eq!(est.refits(), 10);
+        // quality() is finite and in range once refits have happened
+        let (p, r) = est.quality();
+        assert!(p.is_finite() && r.is_finite(), "({p}, {r})");
+        assert!((0.0..=1.0).contains(&r), "recall {r}");
+
+        // refit_every = 0 clamps to 1 (refit gated only by the
+        // 8-observation reservoir floor)
+        let mut eager = OnlineEstimator::new(64, 0, 13);
+        let mut rng = Rng::new(12);
+        for o in generate_observations(&page, 0.6, 2_000.0, &mut rng).into_iter().take(10) {
+            eager.observe(o);
+        }
+        assert_eq!(eager.seen(), 10);
+        assert_eq!(eager.refits(), 3, "refits on observations 8, 9, 10");
+    }
+
+    #[test]
+    fn no_refit_until_the_reservoir_floor() {
+        // refit_every = 4 with only 7 observations: the cadence matches
+        // at 4, but the 8-observation reservoir floor blocks the fit —
+        // theta stays at its prior and refits() stays 0
+        let page = PageParams::from_quality(0.4, 0.1, 0.6, 0.6);
+        let mut rng = Rng::new(17);
+        let obs = generate_observations(&page, 0.6, 2_000.0, &mut rng);
+        let mut est = OnlineEstimator::new(64, 4, 19);
+        let prior = est.theta;
+        for o in obs.iter().take(7).copied() {
+            est.observe(o);
+        }
+        assert_eq!(est.seen(), 7);
+        assert_eq!(est.refits(), 0);
+        assert_eq!(est.theta, prior, "theta untouched before the first refit");
+        // the 8th observation crosses the floor; the next cadence hit
+        // (observation 8, since 8 % 4 == 0) fits immediately
+        est.observe(obs[7]);
+        assert_eq!(est.refits(), 1);
+        assert_ne!(est.theta, prior, "first refit moves theta off the prior");
+    }
+
+    #[test]
     fn bounded_memory() {
         let page = PageParams::from_quality(0.5, 0.1, 0.5, 0.5);
         let mut rng = Rng::new(3);

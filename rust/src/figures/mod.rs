@@ -14,6 +14,7 @@ pub mod rates;
 pub mod scale;
 pub mod scenario;
 pub mod semisynth;
+pub mod serving;
 pub mod valuefn;
 
 pub use common::{ExperimentSpec, PolicyUnderTest};
@@ -42,8 +43,9 @@ pub fn run_figure(id: &str, reps: usize) -> crate::Result<()> {
         "appg" => scale::appg(20_000, 60.0, 4),
         "scenario" => scenario::fig_scenario(reps),
         "faults" => faults::fig_faults(reps),
+        "serving" => serving::fig_serving(reps),
         other => Err(crate::Error::Usage(format!(
-            "unknown figure `{other}` (valid: 1-14, appg, scenario, faults)"
+            "unknown figure `{other}` (valid: 1-14, appg, scenario, faults, serving)"
         ))),
     }
 }

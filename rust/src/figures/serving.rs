@@ -1,0 +1,115 @@
+//! Serving-fairness experiment (no paper counterpart — the request-side
+//! extension of the freshness story).
+//!
+//! The crawl policies optimize freshness *at request time*; this figure
+//! asks who actually gets that freshness. Heavy-tailed Zipf user
+//! traffic (with a diurnal cycle and one mid-run flash crowd) is served
+//! from the freshness cache while each policy crawls, and the
+//! staleness-at-request distribution is broken down by CIS-quality
+//! decile: decile 0 holds the worst-signalled tenth of the population,
+//! decile 9 the best. GREEDY-NCIS's fairness claim is that its noise
+//! model keeps the badly-signalled deciles' staleness comparable to the
+//! well-signalled ones, where the naive CIS-trusting baseline starves
+//! them and the CIS-blind baseline wastes bandwidth everywhere.
+//!
+//! CSV: `target/figures/fig_serving_fairness.csv`, one row per
+//! (policy, quality decile) plus an overall row per policy at
+//! `quality_decile = -1`.
+
+use crate::benchkit::FigureOutput;
+use crate::coordinator::builder::{CrawlerBuilder, Strategy};
+use crate::figures::common::ExperimentSpec;
+use crate::policy::PolicyKind;
+use crate::rngkit::Rng;
+use crate::serving::{RequestTraffic, ServingRepAccumulator, DECILES};
+use crate::sim::SimConfig;
+use crate::Result;
+
+/// Horizon of the experiment (shorter than §6.3: the sweep runs
+/// 3 policies × reps full served simulations).
+const HORIZON: f64 = 200.0;
+/// Bandwidth R.
+const BANDWIDTH: f64 = 50.0;
+/// Pages m.
+const PAGES: usize = 500;
+/// Aggregate base request rate.
+const RATE: f64 = 40.0;
+/// Zipf popularity exponent (page index = popularity rank).
+const ZIPF_S: f64 = 1.1;
+
+/// The serving-fairness figure: per (policy, CIS-quality decile) cell,
+/// serve counts, mean staleness-at-request age and its p50/p95/p99,
+/// merged across reps. CSV: `target/figures/fig_serving_fairness.csv`.
+pub fn fig_serving(reps: usize) -> Result<()> {
+    let reps = reps.clamp(1, 10);
+    let spec = ExperimentSpec::section6(PAGES, reps).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let cfg = SimConfig::new(BANDWIDTH, HORIZON)?;
+
+    // numeric policy codes (CSV rows are f64): 0 = GREEDY-NCIS,
+    // 1 = GREEDY (CIS-blind), 2 = GREEDY-CIS (naive trusting)
+    let policies: [(f64, PolicyKind); 3] = [
+        (0.0, PolicyKind::GreedyNcis),
+        (1.0, PolicyKind::Greedy),
+        (2.0, PolicyKind::GreedyCis),
+    ];
+    let mut fig = FigureOutput::new(
+        "fig_serving_fairness",
+        &[
+            "policy",
+            "quality_decile",
+            "served",
+            "mean_age",
+            "p50",
+            "p95",
+            "p99",
+            "stale_fraction_overall",
+        ],
+    );
+    for (code, policy) in policies {
+        let mut acc = ServingRepAccumulator::new();
+        for rep in 0..reps {
+            // per-rep traffic seed: an independent user-demand
+            // realization per repetition, same demand for every policy
+            let traffic =
+                RequestTraffic::new(RATE, ZIPF_S, spec.seed ^ (0x7AFF * (rep as u64 + 1)))?
+                    .with_diurnal(HORIZON / 4.0, 0.5)?
+                    .with_flash(HORIZON * 0.3, HORIZON * 0.05, PAGES / 2, 3.0 * RATE)?;
+            let builder = CrawlerBuilder::new()
+                .policy(policy)
+                .strategy(Strategy::Lazy)
+                .pages(&inst.pages)
+                .with_traffic(traffic);
+            let (_res, metrics) = builder.run_traffic(&cfg, spec.seed ^ (0xFEE1 + rep as u64))?;
+            acc.push(&metrics);
+        }
+        let totals = acc.totals();
+        let sf = totals.stale_fraction();
+        for (d, h) in totals.by_quality.iter().enumerate().take(DECILES) {
+            fig.rowf(&[
+                code,
+                d as f64,
+                h.count() as f64,
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.95),
+                h.quantile(0.99),
+                sf,
+            ]);
+        }
+        let o = &totals.overall;
+        fig.rowf(&[
+            code,
+            -1.0,
+            o.count() as f64,
+            o.mean(),
+            o.quantile(0.5),
+            o.quantile(0.95),
+            o.quantile(0.99),
+            sf,
+        ]);
+    }
+    fig.finish()?;
+    Ok(())
+}

@@ -50,6 +50,11 @@
 //!   host outages, dead pages), [`fault::RetryPolicy`] with
 //!   deterministic backoff jitter, the fault-aware merge engine with
 //!   bandwidth-conserving retry accounting, and degraded-mode metrics.
+//! - [`serving`] — the request-side serving layer: heavy-tailed
+//!   [`serving::RequestTraffic`] (Zipf popularity, diurnal cycles,
+//!   flash crowds), the [`serving::FreshnessCache`] answering requests
+//!   from the last crawled copy, and fairness-at-request metrics
+//!   (staleness percentiles per CIS-quality / popularity decile).
 //! - [`estimation`] — Appendix-E estimators for CIS precision/recall.
 //! - [`dataset`] — semi-synthetic stand-in for the (non-public)
 //!   Kolobov et al. dataset.
@@ -77,6 +82,7 @@ pub mod rngkit;
 pub mod runtime;
 pub mod scenario;
 pub mod sched;
+pub mod serving;
 pub mod sim;
 pub mod solver;
 pub mod special;

@@ -100,20 +100,21 @@ impl DurationHisto {
     }
 
     /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Bucket counts are exact in f64 (far below 2^53), so the shared
+    /// scan reproduces the pre-dedupe integer walk bit-for-bit; the
+    /// within-bucket fraction is discarded — this histogram's contract
+    /// is the conservative upper edge.
     pub fn quantile_s(&self, q: f64) -> f64 {
         let n = self.count();
         if n == 0 {
             return f64::NAN;
         }
-        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (b, bucket) in self.buckets.iter().enumerate() {
-            acc += bucket.load(Ordering::Relaxed);
-            if acc >= target {
-                return (1u64 << (b + 1)) as f64 / 1e6;
-            }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil();
+        let masses = self.buckets.iter().map(|b| b.load(Ordering::Relaxed) as f64);
+        match crate::stats::cum_mass_bucket(masses, target) {
+            Some((b, _)) => (1u64 << (b + 1)) as f64 / 1e6,
+            None => (1u64 << HISTO_BUCKETS) as f64 / 1e6,
         }
-        (1u64 << HISTO_BUCKETS) as f64 / 1e6
     }
 }
 

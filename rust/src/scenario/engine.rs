@@ -40,6 +40,7 @@ use std::collections::BinaryHeap;
 use crate::rngkit::Rng;
 use crate::scenario::{PageSet, Scenario, TimedEvent, WorldEvent};
 use crate::sched::CrawlScheduler;
+use crate::serving::ServingSession;
 use crate::sim::engine::{BandwidthSchedule, SimConfig, SimResult};
 use crate::sim::engine::{KIND_CHANGE, KIND_CIS, KIND_REQUEST};
 use crate::sim::events::{generate_page_trace_from, CisDelay, EventTraces, PageTrace};
@@ -291,6 +292,7 @@ fn apply_world(
     idx: usize,
     scenario: &Scenario,
     horizon: f64,
+    serving: Option<&mut ServingSession>,
 ) {
     let tw = ev.t;
     match &ev.event {
@@ -319,6 +321,9 @@ fn apply_world(
                 generate_page_trace_from(params, tw, horizon, scenario.delay(), &mut rng);
             ws.stats.births += 1;
             scheduler.on_page_added(slot, params, tw);
+            if let Some(sv) = serving {
+                sv.on_page_added(slot, params);
+            }
             push_next(
                 &mut ws.heap,
                 &ws.pages[slot],
@@ -451,6 +456,36 @@ pub fn simulate_scenario_with(
     scenario: &Scenario,
     scheduler: &mut dyn CrawlScheduler,
 ) -> SimResult {
+    simulate_scenario_served_core(ws, traces, cfg, scenario, scheduler, None)
+}
+
+/// [`simulate_scenario_with`] with a serving layer attached: user
+/// requests interleave with world and trace events (world → trace →
+/// serve at equal times), flash crowds hit whatever occupies the slot
+/// at request time, and requests into retired slots count as dead
+/// serves. Read results off the session afterwards.
+pub fn simulate_scenario_served_with(
+    ws: &mut ScenarioWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: &mut ServingSession,
+) -> SimResult {
+    simulate_scenario_served_core(ws, traces, cfg, scenario, scheduler, Some(serving))
+}
+
+/// The dynamic-world merge loop with an *optional* serving layer —
+/// `None` (or empty traffic) is branch-for-branch the plain scenario
+/// engine (zero extra RNG draws; pinned by `tests/serving_parity.rs`).
+fn simulate_scenario_served_core(
+    ws: &mut ScenarioWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    scheduler: &mut dyn CrawlScheduler,
+    mut serving: Option<&mut ServingSession>,
+) -> SimResult {
     let m0 = traces.pages.len();
     assert_eq!(
         m0,
@@ -497,7 +532,8 @@ pub fn simulate_scenario_with(
         }
         // apply world + trace events up to (and including) the tick
         // time, in time order; world events precede trace events at
-        // equal times (and keep script order among themselves)
+        // equal times (and keep script order among themselves); user
+        // requests serve after both at exact ties
         loop {
             let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
             let te = match ws.heap.peek() {
@@ -505,9 +541,26 @@ pub fn simulate_scenario_with(
                 None => f64::INFINITY,
             };
             if tw <= next_tick && tw <= te {
-                apply_world(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+                apply_world(
+                    ws,
+                    scheduler,
+                    &world[wc],
+                    wc,
+                    scenario,
+                    cfg.horizon,
+                    serving.as_deref_mut(),
+                );
                 wc += 1;
                 continue;
+            }
+            if let Some(sv) = serving.as_deref_mut() {
+                let ts = sv.next_time();
+                if ts <= next_tick && ts < te && ts < tw {
+                    let (st, sp) = sv.pop().expect("pending request");
+                    let live = sp < ws.live.len() && ws.live[sp];
+                    sv.serve(sp, st, live);
+                    continue;
+                }
             }
             if te > next_tick {
                 break;
@@ -523,6 +576,9 @@ pub fn simulate_scenario_with(
                 KIND_CHANGE => {
                     ws.changed[i] = true;
                     ws.cursors[i][0] += 1;
+                    if let Some(sv) = serving.as_deref_mut() {
+                        sv.on_change(i, et);
+                    }
                 }
                 KIND_REQUEST => {
                     requests += 1;
@@ -577,6 +633,9 @@ pub fn simulate_scenario_with(
                 ws.last_crawl[i] = t;
                 ws.crawl_counts[i] += 1;
                 scheduler.on_crawl(i, t);
+                if let Some(sv) = serving.as_deref_mut() {
+                    sv.on_crawl(i);
+                }
             } else {
                 // the pick names a retired slot: forfeit the tick. A
                 // hook-aware scheduler never does this (the parity
@@ -601,14 +660,31 @@ pub fn simulate_scenario_with(
             Some(&Reverse((OrdF64(x), _, _, _))) => x,
             None => f64::INFINITY,
         };
+        if let Some(sv) = serving.as_deref_mut() {
+            let ts = sv.next_time();
+            if ts.is_finite() && ts < tw && ts < te {
+                let (st, sp) = sv.pop().expect("pending request");
+                let live = sp < ws.live.len() && ws.live[sp];
+                sv.serve(sp, st, live);
+                continue;
+            }
+        }
         if wc < world.len() && tw <= te {
             if tw <= cfg.horizon {
-                apply_world(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+                apply_world(
+                    ws,
+                    scheduler,
+                    &world[wc],
+                    wc,
+                    scenario,
+                    cfg.horizon,
+                    serving.as_deref_mut(),
+                );
             }
             wc += 1;
             continue;
         }
-        let Some(Reverse((OrdF64(_), kind, page, ver))) = ws.heap.pop() else { break };
+        let Some(Reverse((OrdF64(et), kind, page, ver))) = ws.heap.pop() else { break };
         let i = page as usize;
         if ver != ws.stream_ver[i] {
             continue;
@@ -617,6 +693,9 @@ pub fn simulate_scenario_with(
             KIND_CHANGE => {
                 ws.changed[i] = true;
                 ws.cursors[i][0] += 1;
+                if let Some(sv) = serving.as_deref_mut() {
+                    sv.on_change(i, et);
+                }
             }
             KIND_REQUEST => {
                 requests += 1;
@@ -679,6 +758,7 @@ fn apply_world_streamed(
     idx: usize,
     scenario: &Scenario,
     horizon: f64,
+    serving: Option<&mut ServingSession>,
 ) {
     let tw = ev.t;
     let delay = scenario.delay();
@@ -708,6 +788,9 @@ fn apply_world_streamed(
             ws.cis_off_until[slot] = ws.global_off_until;
             ws.stats.births += 1;
             scheduler.on_page_added(slot, params, tw);
+            if let Some(sv) = serving {
+                sv.on_page_added(slot, params);
+            }
             if let Some((t, k)) = next_streamed(ws, slot, horizon, delay) {
                 ws.heap.push(Reverse((OrdF64(t), k, slot as u32, ws.stream_ver[slot])));
             }
@@ -822,6 +905,41 @@ pub fn simulate_scenario_streamed_with(
     trace_seed: u64,
     scheduler: &mut dyn CrawlScheduler,
 ) -> crate::Result<SimResult> {
+    simulate_scenario_streamed_served_core(ws, cfg, scenario, trace_seed, scheduler, None)
+}
+
+/// [`simulate_scenario_streamed_with`] with a serving layer attached
+/// (see [`simulate_scenario_served_with`] for the interleaving and
+/// dead-slot semantics).
+pub fn simulate_scenario_streamed_served_with(
+    ws: &mut ScenarioWorkspace,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    trace_seed: u64,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: &mut ServingSession,
+) -> crate::Result<SimResult> {
+    simulate_scenario_streamed_served_core(
+        ws,
+        cfg,
+        scenario,
+        trace_seed,
+        scheduler,
+        Some(serving),
+    )
+}
+
+/// Streamed dynamic-world merge loop with an *optional* serving layer
+/// (`None` / empty traffic is branch-for-branch the plain streamed
+/// scenario engine with zero extra RNG draws).
+fn simulate_scenario_streamed_served_core(
+    ws: &mut ScenarioWorkspace,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    trace_seed: u64,
+    scheduler: &mut dyn CrawlScheduler,
+    mut serving: Option<&mut ServingSession>,
+) -> crate::Result<SimResult> {
     scenario.delay().validate()?;
     let delay = scenario.delay();
     let m0 = scenario.initial_pages().len();
@@ -858,7 +976,8 @@ pub fn simulate_scenario_streamed_with(
             break;
         }
         // world + trace events up to (and including) the tick time, in
-        // time order; world events precede trace events at equal times
+        // time order; world events precede trace events at equal
+        // times; user requests serve after both at exact ties
         loop {
             let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
             let te = match ws.heap.peek() {
@@ -866,9 +985,26 @@ pub fn simulate_scenario_streamed_with(
                 None => f64::INFINITY,
             };
             if tw <= next_tick && tw <= te {
-                apply_world_streamed(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+                apply_world_streamed(
+                    ws,
+                    scheduler,
+                    &world[wc],
+                    wc,
+                    scenario,
+                    cfg.horizon,
+                    serving.as_deref_mut(),
+                );
                 wc += 1;
                 continue;
+            }
+            if let Some(sv) = serving.as_deref_mut() {
+                let ts = sv.next_time();
+                if ts <= next_tick && ts < te && ts < tw {
+                    let (st, sp) = sv.pop().expect("pending request");
+                    let live = sp < ws.live.len() && ws.live[sp];
+                    sv.serve(sp, st, live);
+                    continue;
+                }
             }
             if te > next_tick {
                 break;
@@ -883,6 +1019,9 @@ pub fn simulate_scenario_streamed_with(
             match kind {
                 KIND_CHANGE => {
                     ws.changed[i] = true;
+                    if let Some(sv) = serving.as_deref_mut() {
+                        sv.on_change(i, et);
+                    }
                 }
                 KIND_REQUEST => {
                     requests += 1;
@@ -939,6 +1078,9 @@ pub fn simulate_scenario_streamed_with(
                 ws.last_crawl[i] = t;
                 ws.crawl_counts[i] += 1;
                 scheduler.on_crawl(i, t);
+                if let Some(sv) = serving.as_deref_mut() {
+                    sv.on_crawl(i);
+                }
             } else {
                 ws.stats.stale_picks += 1;
             }
@@ -956,14 +1098,31 @@ pub fn simulate_scenario_streamed_with(
             Some(&Reverse((OrdF64(x), _, _, _))) => x,
             None => f64::INFINITY,
         };
+        if let Some(sv) = serving.as_deref_mut() {
+            let ts = sv.next_time();
+            if ts.is_finite() && ts < tw && ts < te {
+                let (st, sp) = sv.pop().expect("pending request");
+                let live = sp < ws.live.len() && ws.live[sp];
+                sv.serve(sp, st, live);
+                continue;
+            }
+        }
         if wc < world.len() && tw <= te {
             if tw <= cfg.horizon {
-                apply_world_streamed(ws, scheduler, &world[wc], wc, scenario, cfg.horizon);
+                apply_world_streamed(
+                    ws,
+                    scheduler,
+                    &world[wc],
+                    wc,
+                    scenario,
+                    cfg.horizon,
+                    serving.as_deref_mut(),
+                );
             }
             wc += 1;
             continue;
         }
-        let Some(Reverse((OrdF64(_), kind, page, ver))) = ws.heap.pop() else { break };
+        let Some(Reverse((OrdF64(et), kind, page, ver))) = ws.heap.pop() else { break };
         let i = page as usize;
         if ver != ws.stream_ver[i] {
             continue;
@@ -971,6 +1130,9 @@ pub fn simulate_scenario_streamed_with(
         match kind {
             KIND_CHANGE => {
                 ws.changed[i] = true;
+                if let Some(sv) = serving.as_deref_mut() {
+                    sv.on_change(i, et);
+                }
             }
             KIND_REQUEST => {
                 requests += 1;

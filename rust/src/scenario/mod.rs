@@ -43,7 +43,8 @@ pub mod engine;
 pub mod generators;
 
 pub use engine::{
-    simulate_scenario, simulate_scenario_streamed, simulate_scenario_streamed_with,
+    simulate_scenario, simulate_scenario_served_with, simulate_scenario_streamed,
+    simulate_scenario_streamed_served_with, simulate_scenario_streamed_with,
     simulate_scenario_with, ScenarioStats, ScenarioWorkspace,
 };
 

@@ -1,0 +1,159 @@
+//! Freshness cache: answers each user request from the last crawled
+//! copy and accounts staleness-at-request.
+//!
+//! The cache mirrors the engine's freshness bit exactly — the engine
+//! forwards its own `on_change` / `on_crawl` transitions, so "fresh"
+//! here is *defined* as the engine's `!changed[i]` (a request at the
+//! exact instant of a change is stale, matching the shared
+//! `(time, kind, page)` total order). On top of the bit it keeps the
+//! *first* un-crawled change time per page (`dirty_since`), which turns
+//! every serve into a staleness **age**: how long the served copy had
+//! been out of date at request time. A crawl resets the page to clean;
+//! later changes re-arm the clock at their own timestamp.
+
+/// Per-page freshness state plus serve counters.
+#[derive(Debug, Clone, Default)]
+pub struct FreshnessCache {
+    /// Time of the first change since the last crawl; `INFINITY` =
+    /// clean (the crawled copy is current).
+    dirty_since: Vec<f64>,
+    /// Total serves per page.
+    serves: Vec<u64>,
+    /// Stale serves per page.
+    stale_serves: Vec<u64>,
+}
+
+impl FreshnessCache {
+    /// Cache over `m` pages, all clean.
+    pub fn new(m: usize) -> Self {
+        Self {
+            dirty_since: vec![f64::INFINITY; m],
+            serves: vec![0; m],
+            stale_serves: vec![0; m],
+        }
+    }
+
+    /// Number of tracked slots.
+    pub fn len(&self) -> usize {
+        self.dirty_since.len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.dirty_since.is_empty()
+    }
+
+    /// Grow (never shrink) so slot `i` exists — the dynamic-world
+    /// newborn path. New slots start clean with zeroed counters.
+    pub fn ensure_slot(&mut self, i: usize) {
+        if i >= self.dirty_since.len() {
+            self.dirty_since.resize(i + 1, f64::INFINITY);
+            self.serves.resize(i + 1, 0);
+            self.stale_serves.resize(i + 1, 0);
+        }
+    }
+
+    /// Reset slot `i` to clean with zeroed counters (slot reuse when a
+    /// retired page's slot is handed to a newborn).
+    pub fn reset_slot(&mut self, i: usize) {
+        self.ensure_slot(i);
+        self.dirty_since[i] = f64::INFINITY;
+        self.serves[i] = 0;
+        self.stale_serves[i] = 0;
+    }
+
+    /// The page changed at `t`: arm the staleness clock if it was clean
+    /// (later changes before a crawl keep the *first* dirty time — the
+    /// served copy has been stale since then).
+    #[inline]
+    pub fn on_change(&mut self, i: usize, t: f64) {
+        if i < self.dirty_since.len() && self.dirty_since[i].is_infinite() {
+            self.dirty_since[i] = t;
+        }
+    }
+
+    /// The page was crawled: the cached copy is current again.
+    #[inline]
+    pub fn on_crawl(&mut self, i: usize) {
+        if i < self.dirty_since.len() {
+            self.dirty_since[i] = f64::INFINITY;
+        }
+    }
+
+    /// Serve page `i` at time `t`: returns `(fresh, age)` where `age`
+    /// is the staleness-at-request (0 for a fresh serve; a request at
+    /// the exact change instant is stale with age 0).
+    #[inline]
+    pub fn serve(&mut self, i: usize, t: f64) -> (bool, f64) {
+        self.serves[i] += 1;
+        let since = self.dirty_since[i];
+        if since.is_infinite() {
+            (true, 0.0)
+        } else {
+            self.stale_serves[i] += 1;
+            (false, (t - since).max(0.0))
+        }
+    }
+
+    /// Total serves recorded for page `i`.
+    pub fn serves(&self, i: usize) -> u64 {
+        self.serves[i]
+    }
+
+    /// Stale serves recorded for page `i`.
+    pub fn stale_serves(&self, i: usize) -> u64 {
+        self.stale_serves[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_page_serves_fresh_with_zero_age() {
+        let mut c = FreshnessCache::new(3);
+        assert_eq!(c.serve(1, 5.0), (true, 0.0));
+        assert_eq!(c.serves(1), 1);
+        assert_eq!(c.stale_serves(1), 0);
+    }
+
+    #[test]
+    fn age_runs_from_first_change_until_crawl() {
+        let mut c = FreshnessCache::new(1);
+        c.on_change(0, 2.0);
+        c.on_change(0, 3.0); // later change does not reset the clock
+        let (fresh, age) = c.serve(0, 5.0);
+        assert!(!fresh);
+        assert_eq!(age, 3.0);
+        c.on_crawl(0);
+        assert_eq!(c.serve(0, 6.0), (true, 0.0));
+        // a fresh change after the crawl re-arms at its own time
+        c.on_change(0, 7.0);
+        assert_eq!(c.serve(0, 7.5), (false, 0.5));
+        assert_eq!(c.serves(0), 3);
+        assert_eq!(c.stale_serves(0), 2);
+    }
+
+    #[test]
+    fn request_at_change_instant_is_stale_with_zero_age() {
+        let mut c = FreshnessCache::new(1);
+        c.on_change(0, 4.0);
+        assert_eq!(c.serve(0, 4.0), (false, 0.0));
+    }
+
+    #[test]
+    fn slots_grow_and_reset_for_the_dynamic_world() {
+        let mut c = FreshnessCache::new(2);
+        c.ensure_slot(5);
+        assert_eq!(c.len(), 6);
+        c.on_change(5, 1.0);
+        assert_eq!(c.serve(5, 2.0), (false, 1.0));
+        c.reset_slot(5);
+        assert_eq!(c.serve(5, 3.0), (true, 0.0));
+        assert_eq!(c.serves(5), 1, "reset zeroes the counters");
+        // out-of-range hooks are ignored rather than panicking
+        c.on_change(99, 1.0);
+        c.on_crawl(99);
+    }
+}

@@ -1,0 +1,345 @@
+//! Serving-side accounting: log-bucket staleness-age histograms with
+//! fairness breakdowns by CIS-quality decile and popularity decile,
+//! plus the cross-repetition accumulator.
+//!
+//! Everything here is built for *deterministic reduction*: histogram
+//! state is integer bucket counts (plus one f64 running sum for means),
+//! so [`ServingMetrics::merge`] over per-shard partials — folded in
+//! shard-index order by the pipeline — produces the same bits
+//! regardless of which shard finished first. Percentiles reuse the
+//! shared [`crate::stats::cum_mass_bucket`] scan and report the
+//! conservative **upper bucket edge**, the same contract as
+//! `metrics::DurationHisto`.
+
+use crate::stats::{cum_mass_bucket, summarize, Summary};
+
+/// Smallest resolvable staleness age: serves at or below this age land
+/// in the dedicated zero bucket and report a 0.0 quantile.
+pub const AGE_RESOLUTION: f64 = 1e-6;
+
+/// Number of power-of-two age buckets above the zero bucket
+/// (upper edge of the last bucket: `AGE_RESOLUTION · 2^44 ≈ 1.8e7`
+/// time units — far beyond any simulated horizon).
+pub const AGE_BUCKETS: usize = 44;
+
+/// Number of fairness deciles (CIS quality and popularity).
+pub const DECILES: usize = 10;
+
+/// Log-bucket histogram over staleness-at-request ages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgeHisto {
+    /// Serves with age ≤ [`AGE_RESOLUTION`] (fresh serves included).
+    zero: u64,
+    /// Bucket `j` holds ages in `[R·2^j, R·2^(j+1))`.
+    counts: Vec<u64>,
+    /// Running age sum (for the mean; merged in shard-index order).
+    sum: f64,
+}
+
+impl Default for AgeHisto {
+    fn default() -> Self {
+        Self { zero: 0, counts: vec![0; AGE_BUCKETS], sum: 0.0 }
+    }
+}
+
+impl AgeHisto {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one serve's staleness age (fresh serves record age 0).
+    pub fn observe(&mut self, age: f64) {
+        self.sum += age;
+        if age <= AGE_RESOLUTION {
+            self.zero += 1;
+        } else {
+            let b = (age / AGE_RESOLUTION).log2().floor() as usize;
+            self.counts[b.min(AGE_BUCKETS - 1)] += 1;
+        }
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.zero + self.counts.iter().sum::<u64>()
+    }
+
+    /// Mean staleness age (`NaN` when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Quantile from the log buckets: 0.0 inside the zero bucket,
+    /// otherwise the conservative upper bucket edge; `NaN` when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil();
+        let masses = std::iter::once(self.zero as f64)
+            .chain(self.counts.iter().map(|&c| c as f64));
+        match cum_mass_bucket(masses, target) {
+            Some((0, _)) => 0.0,
+            Some((b, _)) => AGE_RESOLUTION * (1u64 << b) as f64,
+            None => AGE_RESOLUTION * 2f64.powi(AGE_BUCKETS as i32),
+        }
+    }
+
+    /// Fold `other` into `self` (commutative on the integer counts;
+    /// callers fold in shard-index order so the f64 sum is
+    /// deterministic too).
+    pub fn merge(&mut self, other: &AgeHisto) {
+        self.zero += other.zero;
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+}
+
+/// Full serving-side accounting for one run (or one shard of one run).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingMetrics {
+    /// Requests served from a live page slot.
+    pub served: u64,
+    /// Serves that hit a fresh copy.
+    pub fresh_serves: u64,
+    /// Serves that hit a stale copy.
+    pub stale_serves: u64,
+    /// Requests aimed at retired or never-born slots (excluded from
+    /// the age histograms — there is no copy to age).
+    pub dead_serves: u64,
+    /// Staleness ages over all live serves.
+    pub overall: AgeHisto,
+    /// Ages split by CIS-quality decile (0 = worst signals).
+    pub by_quality: Vec<AgeHisto>,
+    /// Ages split by popularity decile (0 = most requested head).
+    pub by_popularity: Vec<AgeHisto>,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self {
+            served: 0,
+            fresh_serves: 0,
+            stale_serves: 0,
+            dead_serves: 0,
+            overall: AgeHisto::new(),
+            by_quality: vec![AgeHisto::new(); DECILES],
+            by_popularity: vec![AgeHisto::new(); DECILES],
+        }
+    }
+}
+
+impl ServingMetrics {
+    /// Empty accounting.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one live serve.
+    pub fn record(&mut self, fresh: bool, age: f64, quality_decile: usize, pop_decile: usize) {
+        self.served += 1;
+        if fresh {
+            self.fresh_serves += 1;
+        } else {
+            self.stale_serves += 1;
+        }
+        self.overall.observe(age);
+        self.by_quality[quality_decile.min(DECILES - 1)].observe(age);
+        self.by_popularity[pop_decile.min(DECILES - 1)].observe(age);
+    }
+
+    /// Record a request that found no live page behind its slot.
+    pub fn record_dead(&mut self) {
+        self.dead_serves += 1;
+    }
+
+    /// Fraction of live serves that were stale (`NaN` when none).
+    pub fn stale_fraction(&self) -> f64 {
+        if self.served == 0 {
+            f64::NAN
+        } else {
+            self.stale_serves as f64 / self.served as f64
+        }
+    }
+
+    /// Fold `other` into `self` (see [`AgeHisto::merge`] for the
+    /// determinism contract).
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.served += other.served;
+        self.fresh_serves += other.fresh_serves;
+        self.stale_serves += other.stale_serves;
+        self.dead_serves += other.dead_serves;
+        self.overall.merge(&other.overall);
+        for (a, b) in self.by_quality.iter_mut().zip(&other.by_quality) {
+            a.merge(b);
+        }
+        for (a, b) in self.by_popularity.iter_mut().zip(&other.by_popularity) {
+            a.merge(b);
+        }
+    }
+}
+
+/// Serving companion to [`crate::sim::metrics::RepAccumulator`]:
+/// collects per-repetition [`ServingMetrics`], exposing merged totals
+/// plus mean ± stderr summaries of the per-rep staleness percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct ServingRepAccumulator {
+    totals: ServingMetrics,
+    p50: Vec<f64>,
+    p95: Vec<f64>,
+    p99: Vec<f64>,
+    stale_fractions: Vec<f64>,
+}
+
+impl ServingRepAccumulator {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one repetition's serving metrics.
+    pub fn push(&mut self, m: &ServingMetrics) {
+        self.totals.merge(m);
+        self.p50.push(m.overall.quantile(0.5));
+        self.p95.push(m.overall.quantile(0.95));
+        self.p99.push(m.overall.quantile(0.99));
+        self.stale_fractions.push(m.stale_fraction());
+    }
+
+    /// Metrics merged across all repetitions.
+    pub fn totals(&self) -> &ServingMetrics {
+        &self.totals
+    }
+
+    /// p50 staleness-at-request summary across reps.
+    pub fn p50(&self) -> Summary {
+        summarize(&self.p50)
+    }
+
+    /// p95 staleness-at-request summary across reps.
+    pub fn p95(&self) -> Summary {
+        summarize(&self.p95)
+    }
+
+    /// p99 staleness-at-request summary across reps.
+    pub fn p99(&self) -> Summary {
+        summarize(&self.p99)
+    }
+
+    /// Stale-serve fraction summary across reps.
+    pub fn stale_fraction(&self) -> Summary {
+        summarize(&self.stale_fractions)
+    }
+
+    /// Number of repetitions recorded.
+    pub fn reps(&self) -> usize {
+        self.p50.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_quantiles_are_monotone_and_cover_samples() {
+        let mut h = AgeHisto::new();
+        for age in [0.0, 1e-7, 0.001, 0.01, 0.1, 1.0, 10.0] {
+            h.observe(age);
+        }
+        assert_eq!(h.count(), 7);
+        let qs: Vec<f64> = [0.1, 0.5, 0.9, 0.99].iter().map(|&q| h.quantile(q)).collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1], "quantiles must be monotone: {qs:?}");
+        }
+        // p99 must cover the 10.0 sample (upper-edge contract)
+        assert!(qs[3] >= 10.0);
+        // the two ≤-resolution samples land in the zero bucket
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn empty_histo_is_nan() {
+        let h = AgeHisto::new();
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn merge_is_order_independent_on_counts() {
+        let mut a = AgeHisto::new();
+        let mut b = AgeHisto::new();
+        for age in [0.0, 0.5, 2.0] {
+            a.observe(age);
+        }
+        for age in [0.25, 4.0] {
+            b.observe(age);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.count(), 5);
+        assert_eq!(ab.zero, ba.zero);
+        assert_eq!(ab.counts, ba.counts);
+        assert_eq!(ab.quantile(0.5).to_bits(), ba.quantile(0.5).to_bits());
+    }
+
+    #[test]
+    fn metrics_record_and_merge() {
+        let mut m = ServingMetrics::new();
+        m.record(true, 0.0, 0, 9);
+        m.record(false, 1.5, 9, 0);
+        m.record_dead();
+        assert_eq!(m.served, 2);
+        assert_eq!(m.fresh_serves, 1);
+        assert_eq!(m.stale_serves, 1);
+        assert_eq!(m.dead_serves, 1);
+        assert!((m.stale_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(m.by_quality[0].count(), 1);
+        assert_eq!(m.by_quality[9].count(), 1);
+        assert_eq!(m.by_popularity[9].count(), 1);
+
+        let mut other = ServingMetrics::new();
+        other.record(false, 3.0, 9, 9);
+        m.merge(&other);
+        assert_eq!(m.served, 3);
+        assert_eq!(m.stale_serves, 2);
+        assert_eq!(m.by_quality[9].count(), 2);
+    }
+
+    #[test]
+    fn out_of_range_deciles_clamp_to_tail() {
+        let mut m = ServingMetrics::new();
+        m.record(false, 1.0, 99, 99);
+        assert_eq!(m.by_quality[9].count(), 1);
+        assert_eq!(m.by_popularity[9].count(), 1);
+    }
+
+    #[test]
+    fn rep_accumulator_summarizes_percentiles() {
+        let mut acc = ServingRepAccumulator::new();
+        for stale_age in [1.0, 2.0] {
+            let mut m = ServingMetrics::new();
+            m.record(true, 0.0, 0, 0);
+            m.record(false, stale_age, 5, 5);
+            acc.push(&m);
+        }
+        assert_eq!(acc.reps(), 2);
+        assert_eq!(acc.totals().served, 4);
+        let p99 = acc.p99();
+        assert_eq!(p99.n, 2);
+        assert!(p99.mean >= 1.0);
+        assert!((acc.stale_fraction().mean - 0.5).abs() < 1e-12);
+    }
+}

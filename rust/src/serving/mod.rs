@@ -1,0 +1,259 @@
+//! Request-side serving layer: heavy-tailed user traffic, the
+//! freshness cache it is answered from, and fairness-at-request
+//! metrics.
+//!
+//! The crawl policies in this repo optimize *freshness at request
+//! time* (the objective the source paper inherits from Azar et al.'s
+//! request-weighted staleness), but until this module requests only
+//! existed as trace events folded into a scalar accuracy. The serving
+//! layer closes the loop:
+//!
+//! - [`traffic`] generates user demand as a lazy stream —
+//!   [`RequestTraffic`] composes per-page Zipf popularity (shared
+//!   [`crate::stats::Zipf`] sampler), diurnal modulation and
+//!   flash-crowd spikes, sampled by Lewis–Shedler thinning at O(1) per
+//!   event from a traffic-owned RNG;
+//! - [`cache`] is the [`FreshnessCache`] answering each request from
+//!   the last crawled copy, recording hit-freshness and
+//!   staleness-at-request age per page;
+//! - [`metrics`] accumulates [`ServingMetrics`]: log-bucket staleness
+//!   percentiles plus fairness breakdowns by CIS-quality decile and
+//!   popularity decile, with a deterministic cross-shard
+//!   [`ServingMetrics::merge`].
+//!
+//! [`ServingSession`] bundles the three into the single handle the
+//! engines thread through their merge loops (`sim::engine` and
+//! `scenario::engine` both take an `Option<&mut ServingSession>`; the
+//! `None` / empty-traffic configuration is pinned bit-identical to the
+//! plain engines by `tests/serving_parity.rs`, the same discipline as
+//! the scenario and fault subsystems).
+//!
+//! ## Fairness deciles
+//!
+//! The fairness claim under test is "comparable staleness regardless
+//! of CIS quality". Pages are ranked once, at session construction,
+//! by the scalar CIS-quality score `precision · recall` (see
+//! [`crate::params::PageParams`]); decile 0 holds the worst-signalled
+//! tenth, decile 9 the best. Popularity deciles come straight from the
+//! Zipf law: page index *is* popularity rank, so decile 0 is the
+//! most-requested head. Pages born mid-run (dynamic world) are slotted
+//! by score against the initial population's ladder.
+
+pub mod cache;
+pub mod metrics;
+pub mod traffic;
+
+pub use cache::FreshnessCache;
+pub use metrics::{AgeHisto, ServingMetrics, ServingRepAccumulator, AGE_BUCKETS, AGE_RESOLUTION, DECILES};
+pub use traffic::{FlashCrowd, RequestTraffic, TrafficStream};
+
+use crate::params::PageParams;
+use traffic::TrafficStream as Stream;
+
+/// One run's serving state: the pending-request stream, the freshness
+/// cache, decile assignments and the metrics sink. Built fresh per
+/// repetition (the stream is single-pass), threaded through an engine
+/// by mutable reference, then read out via [`ServingSession::metrics`].
+#[derive(Debug, Clone)]
+pub struct ServingSession {
+    stream: Stream,
+    cache: FreshnessCache,
+    metrics: ServingMetrics,
+    /// CIS-quality decile per page slot (0 = worst signals).
+    qdecile: Vec<u8>,
+    /// Initial population's quality scores, ascending — the ladder
+    /// newborn pages are slotted against.
+    score_ladder: Vec<f64>,
+    /// Initial population size (fixes the popularity-decile scale).
+    m0: usize,
+}
+
+impl ServingSession {
+    /// Session over the initial population `pages` with traffic
+    /// `traffic` up to `horizon`.
+    pub fn new(traffic: &RequestTraffic, pages: &[PageParams], horizon: f64) -> Self {
+        let m = pages.len();
+        let scores: Vec<f64> = pages.iter().map(Self::score).collect();
+        // rank-based decile assignment: sort by (score, index), decile
+        // = rank·10/m — exactly m/10-sized cohorts up to rounding
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
+        let mut qdecile = vec![0u8; m];
+        for (rank, &i) in order.iter().enumerate() {
+            qdecile[i] = ((rank * DECILES) / m.max(1)).min(DECILES - 1) as u8;
+        }
+        let mut score_ladder = scores;
+        score_ladder.sort_by(f64::total_cmp);
+        Self {
+            stream: traffic.stream(m, horizon),
+            cache: FreshnessCache::new(m),
+            metrics: ServingMetrics::new(),
+            qdecile,
+            score_ladder,
+            m0: m,
+        }
+    }
+
+    /// The scalar CIS-quality score pages are ranked by.
+    #[inline]
+    fn score(p: &PageParams) -> f64 {
+        p.precision() * p.recall()
+    }
+
+    /// Time of the next pending request (`INFINITY` when drained).
+    #[inline]
+    pub fn next_time(&self) -> f64 {
+        self.stream.next_time()
+    }
+
+    /// Consume the pending request.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        self.stream.pop()
+    }
+
+    /// Engine hook: page `i` changed at `t`.
+    #[inline]
+    pub fn on_change(&mut self, i: usize, t: f64) {
+        self.cache.on_change(i, t);
+    }
+
+    /// Engine hook: page `i` was crawled.
+    #[inline]
+    pub fn on_crawl(&mut self, i: usize) {
+        self.cache.on_crawl(i);
+    }
+
+    /// Dynamic-world hook: a page was born (or reborn) into slot `i`.
+    /// The slot's cache state resets and its quality decile is
+    /// re-assigned by score against the initial population's ladder.
+    pub fn on_page_added(&mut self, i: usize, params: &PageParams) {
+        self.cache.reset_slot(i);
+        if i >= self.qdecile.len() {
+            self.qdecile.resize(i + 1, 0);
+        }
+        let s = Self::score(params);
+        let rank = self.score_ladder.partition_point(|&x| x < s);
+        let n = self.score_ladder.len().max(1);
+        self.qdecile[i] = ((rank * DECILES) / n).min(DECILES - 1) as u8;
+    }
+
+    /// Serve a request for slot `i` at time `t`. `live` is the
+    /// engine's view of whether a page currently occupies the slot;
+    /// requests into retired or never-born slots count as dead serves
+    /// and stay out of the age histograms.
+    pub fn serve(&mut self, i: usize, t: f64, live: bool) {
+        if !live || i >= self.cache.len() {
+            self.metrics.record_dead();
+            return;
+        }
+        let (fresh, age) = self.cache.serve(i, t);
+        let qd = self.qdecile.get(i).copied().unwrap_or(0) as usize;
+        let pd = if self.m0 == 0 { 0 } else { ((i * DECILES) / self.m0).min(DECILES - 1) };
+        self.metrics.record(fresh, age, qd, pd);
+    }
+
+    /// The accumulated serving metrics.
+    pub fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    /// Consume the session, returning its metrics.
+    pub fn into_metrics(self) -> ServingMetrics {
+        self.metrics
+    }
+
+    /// The per-page cache (serve counters, freshness state).
+    pub fn cache(&self) -> &FreshnessCache {
+        &self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quality_page(precision: f64, recall: f64) -> PageParams {
+        PageParams::from_quality(0.5, 0.1, precision, recall)
+    }
+
+    #[test]
+    fn quality_deciles_are_rank_based_cohorts() {
+        // 20 pages with strictly increasing quality score: two per decile
+        let pages: Vec<PageParams> =
+            (0..20).map(|k| quality_page(0.05 + 0.045 * k as f64, 0.9)).collect();
+        let s = ServingSession::new(&RequestTraffic::off(), &pages, 10.0);
+        for (i, &d) in s.qdecile.iter().enumerate() {
+            assert_eq!(d as usize, i / 2, "page {i}");
+        }
+    }
+
+    #[test]
+    fn serve_routes_ages_into_the_right_deciles() {
+        let pages: Vec<PageParams> =
+            (0..10).map(|k| quality_page(0.1 + 0.08 * k as f64, 0.9)).collect();
+        let mut s = ServingSession::new(&RequestTraffic::off(), &pages, 10.0);
+        s.on_change(9, 1.0); // best-quality page goes stale
+        s.serve(9, 3.0, true); // stale, age 2, quality decile 9, pop decile 9
+        s.serve(0, 3.0, true); // fresh, quality decile 0, pop decile 0
+        s.serve(4, 3.0, false); // retired slot -> dead
+        let m = s.metrics();
+        assert_eq!(m.served, 2);
+        assert_eq!(m.stale_serves, 1);
+        assert_eq!(m.dead_serves, 1);
+        assert_eq!(m.by_quality[9].count(), 1);
+        assert_eq!(m.by_quality[0].count(), 1);
+        assert_eq!(m.by_popularity[9].count(), 1);
+        assert!((m.by_quality[9].mean() - 2.0).abs() < 1e-12);
+        // crawl cleans the page again
+        s.on_crawl(9);
+        s.serve(9, 4.0, true);
+        assert_eq!(s.metrics().fresh_serves, 2);
+    }
+
+    #[test]
+    fn newborn_pages_slot_by_score_against_the_initial_ladder() {
+        let pages: Vec<PageParams> =
+            (0..10).map(|k| quality_page(0.1 + 0.08 * k as f64, 0.9)).collect();
+        let mut s = ServingSession::new(&RequestTraffic::off(), &pages, 10.0);
+        // newborn with a near-perfect signal lands in the top decile,
+        // one with hopeless signals at the bottom; both slots serve
+        s.on_page_added(3, &quality_page(0.99, 1.0));
+        assert_eq!(s.qdecile[3], 9);
+        s.on_page_added(12, &quality_page(0.01, 0.05));
+        assert_eq!(s.qdecile[12], 0);
+        s.serve(12, 1.0, true);
+        assert_eq!(s.metrics().served, 1);
+        // slot reuse resets the cache: old dirt is gone
+        s.on_change(3, 0.5);
+        s.on_page_added(3, &quality_page(0.5, 0.5));
+        s.serve(3, 2.0, true);
+        assert_eq!(s.metrics().stale_serves, 0);
+    }
+
+    #[test]
+    fn out_of_range_serves_count_dead() {
+        let pages = vec![quality_page(0.5, 0.5); 4];
+        let mut s = ServingSession::new(&RequestTraffic::off(), &pages, 10.0);
+        s.serve(17, 1.0, true); // slot never existed
+        assert_eq!(s.metrics().dead_serves, 1);
+        assert_eq!(s.metrics().served, 0);
+    }
+
+    #[test]
+    fn session_streams_traffic_in_time_order() {
+        let pages = vec![quality_page(0.5, 0.5); 8];
+        let traffic = RequestTraffic::new(50.0, 1.0, 0xCAFE).unwrap();
+        let mut s = ServingSession::new(&traffic, &pages, 20.0);
+        let mut prev = 0.0;
+        let mut n = 0usize;
+        while let Some((t, page)) = s.pop() {
+            assert!(t >= prev && t <= 20.0);
+            assert!(page < 8);
+            prev = t;
+            n += 1;
+        }
+        assert!(n > 100, "expected substantial traffic, got {n}");
+        assert!(s.next_time().is_infinite());
+    }
+}

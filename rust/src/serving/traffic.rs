@@ -1,0 +1,389 @@
+//! Heavy-tailed request traffic: per-page Zipf popularity, diurnal
+//! modulation, and flash-crowd spikes.
+//!
+//! [`RequestTraffic`] is the validated *configuration* (rate, Zipf
+//! exponent, seed, optional diurnal cycle, flash crowds);
+//! [`TrafficStream`] is the lazy per-repetition *stream* built from it:
+//! a Lewis–Shedler thinning sampler over the non-homogeneous aggregate
+//! rate λ(t) = base·(1 + A·sin(2πt/P)) + Σ active flash extras, drawing
+//! every variate from a traffic-owned [`Rng`] so attaching traffic to
+//! an engine perturbs **zero** draws of the trace or scenario RNG
+//! streams (the zero-traffic bit-parity discipline of
+//! `tests/serving_parity.rs`). Page attribution on acceptance splits
+//! proportionally: with probability base(t)/λ(t) the request lands on
+//! the Zipf popularity law (page 0 most popular), otherwise on the
+//! flash crowd whose extra rate covers the draw. Each emitted event
+//! costs O(1) expected work (thinning acceptance is bounded below by
+//! min λ(t) / λ_max, a constant of the configuration).
+
+use crate::error::Error;
+use crate::rngkit::{exponential, Rng};
+use crate::stats::Zipf;
+
+/// A flash-crowd spike: `extra_rate` additional requests per unit time
+/// aimed at a single page over `[t0, t0 + duration)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlashCrowd {
+    /// Spike onset time.
+    pub t0: f64,
+    /// Spike duration (the spike is active on `[t0, t0 + duration)`).
+    pub duration: f64,
+    /// Target page index.
+    pub page: usize,
+    /// Additional aggregate request rate while active.
+    pub extra_rate: f64,
+}
+
+impl FlashCrowd {
+    #[inline]
+    fn active(&self, t: f64) -> bool {
+        t >= self.t0 && t < self.t0 + self.duration
+    }
+}
+
+/// Validated request-traffic configuration.
+///
+/// `Default` (and [`RequestTraffic::off`]) is the zero-traffic
+/// configuration: no base rate, no flash crowds — attaching it to any
+/// engine is bit-identical to running without a serving layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestTraffic {
+    rate: f64,
+    zipf_s: f64,
+    seed: u64,
+    diurnal: Option<(f64, f64)>,
+    flashes: Vec<FlashCrowd>,
+}
+
+impl RequestTraffic {
+    /// Base traffic: aggregate rate `rate` requests per unit time,
+    /// pages drawn from a Zipf(`zipf_s`) popularity law (page index =
+    /// popularity rank), variates keyed by `seed`.
+    pub fn new(rate: f64, zipf_s: f64, seed: u64) -> crate::Result<Self> {
+        if !(rate >= 0.0) || !rate.is_finite() {
+            return Err(Error::InvalidParam(format!(
+                "traffic rate must be finite and >= 0, got {rate}"
+            )));
+        }
+        if !(zipf_s >= 0.0) || !zipf_s.is_finite() {
+            return Err(Error::InvalidParam(format!(
+                "traffic Zipf exponent must be finite and >= 0, got {zipf_s}"
+            )));
+        }
+        Ok(Self { rate, zipf_s, seed, diurnal: None, flashes: Vec::new() })
+    }
+
+    /// The zero-traffic configuration (no requests ever).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Add a diurnal cycle: the base rate is modulated by
+    /// `1 + amplitude·sin(2πt/period)`; `amplitude ∈ [0, 1]` keeps the
+    /// instantaneous rate non-negative.
+    pub fn with_diurnal(mut self, period: f64, amplitude: f64) -> crate::Result<Self> {
+        if !(period > 0.0) || !period.is_finite() {
+            return Err(Error::InvalidParam(format!(
+                "diurnal period must be finite and > 0, got {period}"
+            )));
+        }
+        if !(0.0..=1.0).contains(&amplitude) {
+            return Err(Error::InvalidParam(format!(
+                "diurnal amplitude must be in [0, 1], got {amplitude}"
+            )));
+        }
+        self.diurnal = Some((period, amplitude));
+        Ok(self)
+    }
+
+    /// Add a flash-crowd spike aimed at `page`.
+    pub fn with_flash(
+        mut self,
+        t0: f64,
+        duration: f64,
+        page: usize,
+        extra_rate: f64,
+    ) -> crate::Result<Self> {
+        if !(t0 >= 0.0) || !t0.is_finite() {
+            return Err(Error::InvalidParam(format!(
+                "flash onset must be finite and >= 0, got {t0}"
+            )));
+        }
+        if !(duration > 0.0) || !duration.is_finite() {
+            return Err(Error::InvalidParam(format!(
+                "flash duration must be finite and > 0, got {duration}"
+            )));
+        }
+        if !(extra_rate > 0.0) || !extra_rate.is_finite() {
+            return Err(Error::InvalidParam(format!(
+                "flash extra rate must be finite and > 0, got {extra_rate}"
+            )));
+        }
+        self.flashes.push(FlashCrowd { t0, duration, page, extra_rate });
+        Ok(self)
+    }
+
+    /// True when this configuration can never emit a request.
+    pub fn is_off(&self) -> bool {
+        self.rate <= 0.0 && self.flashes.is_empty()
+    }
+
+    /// Base aggregate rate.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Zipf popularity exponent.
+    pub fn zipf_s(&self) -> f64 {
+        self.zipf_s
+    }
+
+    /// Traffic RNG seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Configured flash crowds.
+    pub fn flashes(&self) -> &[FlashCrowd] {
+        &self.flashes
+    }
+
+    /// Build the lazy per-repetition stream over `m` pages up to
+    /// `horizon`. Single-pass: build a fresh stream per repetition.
+    pub fn stream(&self, m: usize, horizon: f64) -> TrafficStream {
+        let off = self.is_off() || m == 0 || horizon <= 0.0;
+        let (amp_bound, zipf) = if off {
+            (0.0, None)
+        } else {
+            let amp = self.diurnal.map(|(_, a)| a).unwrap_or(0.0);
+            (amp, if self.rate > 0.0 { Some(Zipf::new(m, self.zipf_s)) } else { None })
+        };
+        let rate_max = if off {
+            0.0
+        } else {
+            self.rate * (1.0 + amp_bound)
+                + self.flashes.iter().map(|f| f.extra_rate).sum::<f64>()
+        };
+        let mut stream = TrafficStream {
+            base_rate: self.rate,
+            rate_max,
+            diurnal: self.diurnal,
+            flashes: self.flashes.clone(),
+            zipf,
+            rng: Rng::new(self.seed),
+            horizon,
+            t: 0.0,
+            pending: None,
+        };
+        stream.advance();
+        stream
+    }
+}
+
+/// Lazy request-arrival stream: O(1) state, one pending `(time, page)`
+/// event regenerated on [`TrafficStream::pop`].
+#[derive(Debug, Clone)]
+pub struct TrafficStream {
+    base_rate: f64,
+    rate_max: f64,
+    diurnal: Option<(f64, f64)>,
+    flashes: Vec<FlashCrowd>,
+    zipf: Option<Zipf>,
+    rng: Rng,
+    horizon: f64,
+    t: f64,
+    pending: Option<(f64, usize)>,
+}
+
+impl TrafficStream {
+    /// Time of the pending request, `INFINITY` when the stream is
+    /// exhausted (or the configuration is off).
+    #[inline]
+    pub fn next_time(&self) -> f64 {
+        match self.pending {
+            Some((t, _)) => t,
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Consume the pending request and sample the next one.
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        let ev = self.pending.take();
+        if ev.is_some() {
+            self.advance();
+        }
+        ev
+    }
+
+    /// Instantaneous base rate at `t` (diurnal-modulated).
+    #[inline]
+    fn base_at(&self, t: f64) -> f64 {
+        match self.diurnal {
+            Some((period, amp)) => {
+                self.base_rate * (1.0 + amp * (std::f64::consts::TAU * t / period).sin())
+            }
+            None => self.base_rate,
+        }
+    }
+
+    /// Sum of active flash extras at `t`.
+    #[inline]
+    fn flash_at(&self, t: f64) -> f64 {
+        self.flashes.iter().filter(|f| f.active(t)).map(|f| f.extra_rate).sum()
+    }
+
+    /// Lewis–Shedler thinning: propose at `rate_max`, accept with
+    /// probability λ(t)/rate_max, then attribute the accepted request
+    /// proportionally to the base law or an active flash.
+    fn advance(&mut self) {
+        self.pending = None;
+        if self.rate_max <= 0.0 {
+            return;
+        }
+        loop {
+            self.t += exponential(&mut self.rng, self.rate_max);
+            if self.t > self.horizon {
+                return;
+            }
+            let base = self.base_at(self.t);
+            let flash = self.flash_at(self.t);
+            let lam = base + flash;
+            if lam <= 0.0 {
+                continue;
+            }
+            if self.rng.f64() * self.rate_max < lam {
+                let u = self.rng.f64() * lam;
+                let page = if u < base {
+                    match &self.zipf {
+                        Some(z) => z.sample(&mut self.rng),
+                        None => 0,
+                    }
+                } else {
+                    self.flash_target(self.t, u - base)
+                };
+                self.pending = Some((self.t, page));
+                return;
+            }
+        }
+    }
+
+    /// Pick the active flash whose extra-rate span covers `u`.
+    fn flash_target(&self, t: f64, mut u: f64) -> usize {
+        let mut last = 0usize;
+        for f in self.flashes.iter().filter(|f| f.active(t)) {
+            last = f.page;
+            if u < f.extra_rate {
+                return f.page;
+            }
+            u -= f.extra_rate;
+        }
+        // float-edge fallback: attribute to the last active flash
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(mut s: TrafficStream) -> Vec<(f64, usize)> {
+        let mut out = Vec::new();
+        while let Some(ev) = s.pop() {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn off_stream_emits_nothing() {
+        let t = RequestTraffic::off();
+        assert!(t.is_off());
+        let s = t.stream(100, 50.0);
+        assert!(s.next_time().is_infinite());
+        assert!(drain(s).is_empty());
+        // zero-rate with no flashes is also off
+        assert!(RequestTraffic::new(0.0, 1.0, 7).unwrap().is_off());
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(RequestTraffic::new(-1.0, 1.0, 0).is_err());
+        assert!(RequestTraffic::new(f64::NAN, 1.0, 0).is_err());
+        assert!(RequestTraffic::new(1.0, -0.5, 0).is_err());
+        let t = RequestTraffic::new(1.0, 1.0, 0).unwrap();
+        assert!(t.clone().with_diurnal(0.0, 0.5).is_err());
+        assert!(t.clone().with_diurnal(10.0, 1.5).is_err());
+        assert!(t.clone().with_flash(-1.0, 1.0, 0, 5.0).is_err());
+        assert!(t.clone().with_flash(1.0, 0.0, 0, 5.0).is_err());
+        assert!(t.with_flash(1.0, 1.0, 0, 0.0).is_err());
+    }
+
+    #[test]
+    fn arrivals_are_ordered_within_horizon_and_deterministic() {
+        let cfg = RequestTraffic::new(20.0, 1.1, 0xBEEF)
+            .unwrap()
+            .with_diurnal(10.0, 0.5)
+            .unwrap()
+            .with_flash(5.0, 2.0, 3, 30.0)
+            .unwrap();
+        let a = drain(cfg.stream(50, 40.0));
+        let b = drain(cfg.stream(50, 40.0));
+        assert_eq!(a, b, "same config + seed must replay identically");
+        assert!(!a.is_empty());
+        let mut prev = 0.0;
+        for &(t, page) in &a {
+            assert!(t >= prev && t <= 40.0, "ordered within horizon, got {t}");
+            assert!(page < 50);
+            prev = t;
+        }
+        // a different seed gives a different realization
+        let c = drain(RequestTraffic::new(20.0, 1.1, 0xF00D).unwrap().stream(50, 40.0));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn zipf_popularity_favours_low_indices() {
+        let cfg = RequestTraffic::new(200.0, 1.2, 11).unwrap();
+        let evs = drain(cfg.stream(64, 100.0));
+        let head = evs.iter().filter(|&&(_, p)| p < 8).count();
+        // Zipf(1.2) over 64 pages puts well over half the mass on the
+        // first 8 ranks; 20k+ samples make this a >5σ-safe bound
+        assert!(evs.len() > 5_000);
+        assert!(head * 2 > evs.len(), "head {head} of {}", evs.len());
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_on_target_during_window() {
+        let cfg = RequestTraffic::new(5.0, 1.0, 3)
+            .unwrap()
+            .with_flash(10.0, 5.0, 42, 200.0)
+            .unwrap();
+        let evs = drain(cfg.stream(100, 30.0));
+        let in_window: Vec<_> =
+            evs.iter().filter(|&&(t, _)| (10.0..15.0).contains(&t)).collect();
+        let on_target = in_window.iter().filter(|&&&(_, p)| p == 42).count();
+        assert!(in_window.len() > 500, "spike volume {}", in_window.len());
+        assert!(
+            on_target * 10 > in_window.len() * 9,
+            "flash target should dominate the window: {on_target}/{}",
+            in_window.len()
+        );
+        // outside the window the target is just an ordinary tail page
+        let outside_on_target =
+            evs.iter().filter(|&&(t, p)| !(10.0..15.0).contains(&t) && p == 42).count();
+        assert!(outside_on_target * 10 < evs.len());
+    }
+
+    #[test]
+    fn diurnal_modulation_shifts_volume_between_half_periods() {
+        // period 20: sin > 0 on (0, 10), sin < 0 on (10, 20)
+        let cfg = RequestTraffic::new(100.0, 0.0, 9).unwrap().with_diurnal(20.0, 0.9).unwrap();
+        let evs = drain(cfg.stream(10, 20.0));
+        let first = evs.iter().filter(|&&(t, _)| t < 10.0).count();
+        let second = evs.len() - first;
+        assert!(
+            first as f64 > 1.5 * second as f64,
+            "peak half-period should dominate: {first} vs {second}"
+        );
+    }
+}

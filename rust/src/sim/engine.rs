@@ -54,6 +54,7 @@ use crate::error::Error;
 use crate::params::PageParams;
 use crate::rngkit::Rng;
 use crate::sched::CrawlScheduler;
+use crate::serving::ServingSession;
 use crate::sim::events::{CisDelay, EventTraces};
 use crate::sim::source::{EventSource, ReplaySource, StreamedSource};
 use crate::util::OrdF64;
@@ -349,6 +350,68 @@ pub fn simulate_source_with<S: EventSource>(
     cfg: &SimConfig,
     scheduler: &mut dyn CrawlScheduler,
 ) -> SimResult {
+    simulate_source_served_with(ws, source, cfg, scheduler, None)
+}
+
+/// [`simulate_with`] with a serving layer attached: user requests from
+/// the session's traffic stream are answered from its
+/// [`crate::serving::FreshnessCache`] as the merge loop replays. Read
+/// the results off the session afterwards
+/// ([`ServingSession::metrics`]).
+pub fn simulate_served_with(
+    ws: &mut SimWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: &mut ServingSession,
+) -> SimResult {
+    let mut source =
+        ReplaySource::with_cursors(&traces.pages, std::mem::take(&mut ws.cursor_pool));
+    let res = simulate_source_served_with(ws, &mut source, cfg, scheduler, Some(serving));
+    ws.cursor_pool = source.into_cursors();
+    res
+}
+
+/// [`simulate_served_with`] with a throwaway workspace.
+pub fn simulate_served(
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: &mut ServingSession,
+) -> SimResult {
+    let mut ws = SimWorkspace::new();
+    simulate_served_with(&mut ws, traces, cfg, scheduler, serving)
+}
+
+/// [`simulate_streamed_with`] with a serving layer attached (the
+/// `O(m)`-memory lazy path).
+pub fn simulate_streamed_served_with(
+    ws: &mut SimWorkspace,
+    mut source: StreamedSource,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: &mut ServingSession,
+) -> SimResult {
+    simulate_source_served_with(ws, &mut source, cfg, scheduler, Some(serving))
+}
+
+/// The merge engine with an *optional* serving layer threaded through
+/// the loop. `None` (or a session over empty traffic, whose pending
+/// time is always `INFINITY`) takes exactly the branch structure of
+/// the plain engine with zero extra RNG draws — the zero-traffic
+/// bit-parity pinned by `tests/serving_parity.rs`. With traffic
+/// attached, pending requests interleave by time; a request tied with
+/// a trace event is served *after* it (so a request at a change's
+/// exact instant sees the stale copy, matching the engine's own
+/// `(time, kind, page)` total order, and a request at a tick time is
+/// served before that tick's crawl).
+pub fn simulate_source_served_with<S: EventSource>(
+    ws: &mut SimWorkspace,
+    source: &mut S,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    mut serving: Option<&mut ServingSession>,
+) -> SimResult {
     let m = source.len();
     ws.reset(m);
     scheduler.on_start(m);
@@ -380,8 +443,28 @@ pub fn simulate_source_with<S: EventSource>(
         if next_tick > cfg.horizon {
             break;
         }
-        // apply events up to (and including) the tick time
-        while let Some(&Reverse((OrdF64(et), kind, page))) = ws.heap.peek() {
+        // apply events up to (and including) the tick time; pending
+        // user requests interleave by time, serving after any trace
+        // event they tie with
+        loop {
+            if let Some(sv) = serving.as_deref_mut() {
+                let ts = sv.next_time();
+                if ts <= next_tick {
+                    let te = match ws.heap.peek() {
+                        Some(&Reverse((OrdF64(t), _, _))) => t,
+                        None => f64::INFINITY,
+                    };
+                    if ts < te {
+                        let (st, sp) = sv.pop().expect("pending request");
+                        sv.serve(sp, st, true);
+                        continue;
+                    }
+                }
+            }
+            let (et, kind, page) = match ws.heap.peek() {
+                Some(&Reverse((OrdF64(et), kind, page))) => (et, kind, page),
+                None => break,
+            };
             if et > next_tick {
                 break;
             }
@@ -394,6 +477,9 @@ pub fn simulate_source_with<S: EventSource>(
             match kind {
                 KIND_CHANGE => {
                     ws.changed[i] = true;
+                    if let Some(sv) = serving.as_deref_mut() {
+                        sv.on_change(i, et);
+                    }
                 }
                 KIND_REQUEST => {
                     requests += 1;
@@ -445,17 +531,42 @@ pub fn simulate_source_with<S: EventSource>(
             ws.last_crawl[i] = t;
             ws.crawl_counts[i] += 1;
             scheduler.on_crawl(i, t);
+            if let Some(sv) = serving.as_deref_mut() {
+                sv.on_crawl(i);
+            }
         }
         if window > 0 && !ws.ring.is_empty() {
             timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
         }
     }
-    // drain remaining request/change events after the final tick
-    while let Some(Reverse((OrdF64(_), kind, page))) = ws.heap.pop() {
+    // drain remaining request/change events after the final tick,
+    // still interleaved with user requests due before the horizon
+    loop {
+        if let Some(sv) = serving.as_deref_mut() {
+            let ts = sv.next_time();
+            if ts.is_finite() {
+                let te = match ws.heap.peek() {
+                    Some(&Reverse((OrdF64(t), _, _))) => t,
+                    None => f64::INFINITY,
+                };
+                if ts < te {
+                    let (st, sp) = sv.pop().expect("pending request");
+                    sv.serve(sp, st, true);
+                    continue;
+                }
+            }
+        }
+        let (et, kind, page) = match ws.heap.pop() {
+            Some(Reverse((OrdF64(et), kind, page))) => (et, kind, page),
+            None => break,
+        };
         let i = page as usize;
         match kind {
             KIND_CHANGE => {
                 ws.changed[i] = true;
+                if let Some(sv) = serving.as_deref_mut() {
+                    sv.on_change(i, et);
+                }
             }
             KIND_REQUEST => {
                 requests += 1;

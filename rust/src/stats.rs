@@ -1,6 +1,10 @@
 //! Small statistics toolkit: running moments, standard errors over
-//! experiment repetitions, and (weighted) histograms for the Figure-1
-//! style CIS-quality plots.
+//! experiment repetitions, (weighted) histograms for the Figure-1
+//! style CIS-quality plots, the shared bucket-mass quantile scan, and
+//! the finite-support [`Zipf`] sampler behind heavy-tailed host sizes
+//! and request popularity.
+
+use crate::rngkit::RandomSource;
 
 /// Mean / stderr summary of a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -72,17 +76,98 @@ impl Histogram {
     /// Weighted quantile (inverse CDF over bucket masses).
     pub fn quantile(&self, q: f64) -> f64 {
         let q = q.clamp(0.0, 1.0);
-        let mut acc = 0.0;
         let bins = self.mass.len();
         let width = (self.hi - self.lo) / bins as f64;
-        for (b, &m) in self.mass.iter().enumerate() {
-            if acc + m >= q {
-                let frac = if m > 0.0 { (q - acc) / m } else { 0.5 };
-                return self.lo + (b as f64 + frac) * width;
-            }
-            acc += m;
+        match cum_mass_bucket(self.mass.iter().copied(), q) {
+            Some((b, frac)) => self.lo + (b as f64 + frac) * width,
+            None => self.hi,
         }
-        self.hi
+    }
+}
+
+/// The shared inverse-CDF bucket scan behind every log/linear-bucket
+/// quantile in the crate ([`Histogram::quantile`],
+/// `metrics::DurationHisto::quantile_s`, the serving staleness
+/// percentiles): walk the bucket masses until the cumulative mass
+/// reaches `target` and return `(bucket, within-bucket fraction)` — or
+/// `None` when the total mass never reaches the target (the caller
+/// supplies its own upper-edge fallback). An empty bucket that closes
+/// the gap reports the midpoint fraction `0.5`. Callers choosing a
+/// conservative upper-edge convention simply ignore the fraction.
+pub fn cum_mass_bucket(masses: impl IntoIterator<Item = f64>, target: f64) -> Option<(usize, f64)> {
+    let mut acc = 0.0;
+    for (b, m) in masses.into_iter().enumerate() {
+        if acc + m >= target {
+            let frac = if m > 0.0 { (target - acc) / m } else { 0.5 };
+            return Some((b, frac));
+        }
+        acc += m;
+    }
+    None
+}
+
+/// Exact inverse-CDF sampler over the finite Zipf distribution
+/// `P[k] ∝ (k+1)^{-s}` for `k ∈ 0..n`. Promoted from the ad-hoc
+/// harmonic weights of `coordinator::hosts::zipf_host_sizes` (its
+/// `s = 1` case) so host sizes and per-page request popularity draw
+/// from one audited implementation. The unnormalized cumulative table
+/// makes every draw one uniform + one binary search — no rejection, no
+/// approximation — and sampling is deterministic given the caller's
+/// seedable [`RandomSource`].
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// Unnormalized cumulative weights: `cdf[k] = Σ_{j≤k} (j+1)^{-s}`.
+    cdf: Vec<f64>,
+    /// Total unnormalized mass (last entry of `cdf`).
+    total: f64,
+}
+
+impl Zipf {
+    /// Zipf over ranks `0..n` with exponent `s ≥ 0` (`s = 0` is
+    /// uniform). Panics on `n == 0` or a non-finite/negative `s` —
+    /// both are construction-site bugs, not runtime conditions.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf support must be non-empty");
+        assert!(s.is_finite() && s >= 0.0, "Zipf exponent must be finite and >= 0, got {s}");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-s);
+            cdf.push(acc);
+        }
+        Self { cdf, total: acc }
+    }
+
+    /// Support size n.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Is the support empty (never true by construction)?
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Probability mass of rank `k`.
+    pub fn pmf(&self, k: usize) -> f64 {
+        let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        (self.cdf[k] - lo) / self.total
+    }
+
+    /// Unnormalized weight of rank `k` (the raw `(k+1)^{-s}` mass —
+    /// what `zipf_host_sizes` apportions before integer juggling).
+    pub fn weight(&self, k: usize) -> f64 {
+        let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - lo
+    }
+
+    /// Draw one rank by exact inversion: `u ~ U[0, total)`, then the
+    /// first bucket whose cumulative weight exceeds `u`. `rng.f64()`
+    /// is in `[0, 1)`, so `u < total` and the partition point is
+    /// always a valid rank.
+    pub fn sample<R: RandomSource>(&self, rng: &mut R) -> usize {
+        let u = rng.f64() * self.total;
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
     }
 }
 
@@ -159,5 +244,94 @@ mod tests {
         assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
         let yneg = [-2.0, -4.0, -6.0];
         assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    // ---- the shared bucket-mass quantile scan ----
+
+    #[test]
+    fn cum_mass_bucket_is_monotone_in_target() {
+        let masses = [0.0, 0.3, 0.0, 0.5, 0.2];
+        let mut prev = (0usize, 0.0f64);
+        for step in 0..=20 {
+            let q = step as f64 / 20.0;
+            let (b, frac) = cum_mass_bucket(masses.iter().copied(), q)
+                .unwrap_or((masses.len(), 0.0));
+            let pos = b as f64 + frac;
+            let prev_pos = prev.0 as f64 + prev.1;
+            assert!(pos >= prev_pos - 1e-12, "q={q}: {pos} < {prev_pos}");
+            prev = (b, frac);
+        }
+    }
+
+    #[test]
+    fn cum_mass_bucket_edge_buckets() {
+        // target 0 lands in the first bucket even when it is empty
+        assert_eq!(cum_mass_bucket([0.0, 1.0], 0.0), Some((0, 0.5)));
+        // all mass in the last bucket: everything above 0 resolves there
+        let (b, _) = cum_mass_bucket([0.0, 0.0, 1.0], 0.7).unwrap();
+        assert_eq!(b, 2);
+        // unreachable target: None, caller supplies the upper edge
+        assert_eq!(cum_mass_bucket([0.2, 0.2], 0.9), None);
+        // exact total is reachable (>= comparison, matching the
+        // pre-dedupe scans in Histogram::quantile and quantile_s)
+        assert_eq!(cum_mass_bucket([0.5, 0.5], 1.0).map(|(b, _)| b), Some(1));
+    }
+
+    // ---- the Zipf sampler ----
+
+    #[test]
+    fn zipf_pmf_sums_to_one_and_is_monotone() {
+        for s in [0.0, 0.5, 1.0, 2.0] {
+            let z = Zipf::new(50, s);
+            let total: f64 = (0..z.len()).map(|k| z.pmf(k)).sum();
+            assert!((total - 1.0).abs() < 1e-12, "s={s}: {total}");
+            for k in 1..z.len() {
+                assert!(z.pmf(k) <= z.pmf(k - 1) + 1e-15, "s={s}: pmf not monotone at {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_s1_matches_harmonic_weights() {
+        // s = 1 reproduces the 1/(k+1) weights zipf_host_sizes used
+        let z = Zipf::new(20, 1.0);
+        for k in 0..20 {
+            assert!((z.weight(k) - 1.0 / (k as f64 + 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zipf_marginals_match_pmf() {
+        use crate::rngkit::Rng;
+        let n = 16;
+        let z = Zipf::new(n, 1.2);
+        let draws = 200_000usize;
+        let mut counts = vec![0usize; n];
+        let mut rng = Rng::new(0xD1CE);
+        for _ in 0..draws {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for k in 0..n {
+            let emp = counts[k] as f64 / draws as f64;
+            let p = z.pmf(k);
+            // 5-sigma binomial band, floored for tiny tail cells
+            let tol = 5.0 * (p * (1.0 - p) / draws as f64).sqrt() + 1e-4;
+            assert!((emp - p).abs() < tol, "rank {k}: emp {emp} vs pmf {p}");
+        }
+    }
+
+    #[test]
+    fn zipf_s0_is_uniform_and_sampling_is_deterministic() {
+        use crate::rngkit::Rng;
+        let z = Zipf::new(8, 0.0);
+        for k in 0..8 {
+            assert!((z.pmf(k) - 0.125).abs() < 1e-12);
+        }
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            (0..64).map(|_| z.sample(&mut rng)).collect()
+        };
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(7), draw(8));
     }
 }

@@ -85,6 +85,26 @@ fn figure_six_runs_fast() {
 }
 
 #[test]
+fn figure_serving_is_deterministic() {
+    // every seed in the serving figure derives from the spec seed, so
+    // two same-seed runs must emit byte-identical CSV
+    run("figure serving --reps 1").unwrap();
+    let path = std::path::Path::new("target/figures/fig_serving_fairness.csv");
+    let first = std::fs::read(path).unwrap();
+    run("figure serving --reps 1").unwrap();
+    let second = std::fs::read(path).unwrap();
+    assert_eq!(first, second, "same-seed `figure serving` runs diverged");
+    // header + 3 policies × (10 quality-decile rows + 1 overall row)
+    let text = String::from_utf8(first).unwrap();
+    assert_eq!(text.lines().count(), 1 + 3 * 11);
+    let header = text.lines().next().unwrap();
+    assert!(
+        header.starts_with("policy,quality_decile,served,mean_age,p50,p95,p99"),
+        "unexpected header: {header}"
+    );
+}
+
+#[test]
 fn unknown_command_fails() {
     assert!(run("frobnicate").is_err());
 }

@@ -1,0 +1,326 @@
+//! Request-side serving acceptance suite (the serving-layer contract):
+//!
+//! 1. a crawler with [`RequestTraffic::off`] is bit-identical to the
+//!    plain engines — materialized AND streamed, static AND scenario —
+//!    for every Strategy × policy combination (the serving layer is an
+//!    extra merge input whose stream is empty, never an extra RNG
+//!    draw on the crawl side);
+//! 2. loaded traffic leaves the crawl side bit-identical too (the
+//!    traffic stream owns its RNG);
+//! 3. a same-seed served run replays bit-identically, metrics included;
+//! 4. serving sanity: conservation (fresh + stale == served), flash
+//!    crowds concentrate serves on their target, and a starved crawler
+//!    serves staler copies than a well-provisioned one.
+
+use ncis_crawl::coordinator::builder::{CrawlerBuilder, Strategy};
+use ncis_crawl::params::PageParams;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::scenario::generators::{
+    add_correlated_outages, add_steady_churn, BornPageSpec,
+};
+use ncis_crawl::scenario::Scenario;
+use ncis_crawl::serving::{RequestTraffic, ServingMetrics, ServingSession};
+use ncis_crawl::sim::{
+    generate_traces, simulate, simulate_served_with, CisDelay, SimConfig, SimResult,
+    SimWorkspace, TraceMode,
+};
+
+fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| PageParams {
+            delta: rng.range(0.05, 1.0),
+            mu: rng.range(0.05, 1.0),
+            lam: rng.f64(),
+            nu: rng.range(0.1, 0.5),
+        })
+        .collect()
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{ctx}: accuracy");
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.fresh_hits, b.fresh_hits, "{ctx}: fresh_hits");
+    assert_eq!(a.crawl_counts, b.crawl_counts, "{ctx}: crawl_counts");
+    assert_eq!(a.ticks, b.ticks, "{ctx}: ticks");
+    assert_eq!(a.timeline.len(), b.timeline.len(), "{ctx}: timeline length");
+    for (k, (x, y)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: timeline[{k}].t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: timeline[{k}].acc");
+    }
+}
+
+fn assert_metrics_identical(a: &ServingMetrics, b: &ServingMetrics, ctx: &str) {
+    assert_eq!(a.served, b.served, "{ctx}: served");
+    assert_eq!(a.fresh_serves, b.fresh_serves, "{ctx}: fresh_serves");
+    assert_eq!(a.stale_serves, b.stale_serves, "{ctx}: stale_serves");
+    assert_eq!(a.dead_serves, b.dead_serves, "{ctx}: dead_serves");
+    assert_eq!(a.overall.count(), b.overall.count(), "{ctx}: overall count");
+    assert_eq!(
+        a.overall.mean().to_bits(),
+        b.overall.mean().to_bits(),
+        "{ctx}: overall mean"
+    );
+    for q in [0.5, 0.95, 0.99] {
+        assert_eq!(
+            a.overall.quantile(q).to_bits(),
+            b.overall.quantile(q).to_bits(),
+            "{ctx}: overall p{}",
+            q * 100.0
+        );
+    }
+    for (d, (x, y)) in a.by_quality.iter().zip(&b.by_quality).enumerate() {
+        assert_eq!(x.count(), y.count(), "{ctx}: by_quality[{d}] count");
+        assert_eq!(
+            x.mean().to_bits(),
+            y.mean().to_bits(),
+            "{ctx}: by_quality[{d}] mean"
+        );
+    }
+    for (d, (x, y)) in a.by_popularity.iter().zip(&b.by_popularity).enumerate() {
+        assert_eq!(x.count(), y.count(), "{ctx}: by_popularity[{d}] count");
+    }
+}
+
+/// A churn + outage scenario over `ps` (same shape as the
+/// scenario-parity suite's dynamic world).
+fn dynamic_scenario(ps: &[PageParams], seed: u64, horizon: f64) -> Scenario {
+    let mut sc = Scenario::new(ps.to_vec(), seed);
+    add_steady_churn(&mut sc, 0.01, horizon, &BornPageSpec::default(), seed ^ 0xA);
+    add_correlated_outages(&mut sc, 4, 3, horizon / 10.0, horizon, seed ^ 0xB);
+    sc
+}
+
+// ---- 1. zero traffic == plain engines, every strategy × policy ----
+
+#[test]
+fn zero_traffic_is_bit_identical_to_the_static_engine_for_all_combos() {
+    let m = 40;
+    let horizon = 30.0;
+    let trace_seed = 2;
+    let ps = pages(m, 1);
+    let mut cfg = SimConfig::new(4.0, horizon).unwrap();
+    cfg.timeline_window = Some(16);
+
+    let policies = [
+        PolicyKind::Greedy,
+        PolicyKind::GreedyCis,
+        PolicyKind::GreedyNcis,
+        PolicyKind::NcisApprox(2),
+        PolicyKind::GreedyCisPlus,
+    ];
+    let strategies = [
+        Strategy::Exact,
+        Strategy::Lazy,
+        Strategy::LazyWithMargin(0.5),
+        Strategy::Sharded { shards: 3 },
+    ];
+    for policy in policies {
+        for strategy in strategies {
+            for mode in [TraceMode::Materialized, TraceMode::Streamed] {
+                let builder = CrawlerBuilder::new()
+                    .policy(policy)
+                    .strategy(strategy)
+                    .pages(&ps)
+                    .trace_mode(mode)
+                    .with_traffic(RequestTraffic::off());
+                let (a, metrics) = builder.run_traffic(&cfg, trace_seed).unwrap();
+                // the plain run: same trace seed through the same engine
+                let mut sched = builder.build().unwrap();
+                let b = match mode {
+                    TraceMode::Materialized => {
+                        let mut rng = Rng::new(trace_seed);
+                        let traces =
+                            generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+                        simulate(&traces, &cfg, sched.as_mut())
+                    }
+                    TraceMode::Streamed => {
+                        let mut rng = Rng::new(trace_seed);
+                        ncis_crawl::sim::simulate_streamed(
+                            &ps,
+                            &cfg,
+                            CisDelay::None,
+                            &mut rng,
+                            sched.as_mut(),
+                        )
+                        .unwrap()
+                    }
+                };
+                let ctx = format!("{policy:?} × {strategy:?} × {mode:?}");
+                assert_bit_identical(&a, &b, &ctx);
+                assert_eq!(metrics.served, 0, "{ctx}: off traffic served a request");
+                assert_eq!(metrics.dead_serves, 0, "{ctx}: off traffic hit a dead slot");
+            }
+        }
+    }
+    // the LDS lane (policy-independent; rates must cover the pages)
+    let builder = CrawlerBuilder::new()
+        .strategy(Strategy::Lds)
+        .pages(&ps)
+        .lds_rates(&vec![1.0; m])
+        .with_traffic(RequestTraffic::off());
+    let (a, _) = builder.run_traffic(&cfg, trace_seed).unwrap();
+    let mut sched = builder.build().unwrap();
+    let mut rng = Rng::new(trace_seed);
+    let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+    let b = simulate(&traces, &cfg, sched.as_mut());
+    assert_bit_identical(&a, &b, "LDS");
+}
+
+#[test]
+fn zero_traffic_is_bit_identical_to_the_scenario_engine() {
+    let horizon = 50.0;
+    let ps = pages(50, 7);
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
+    for strategy in [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }] {
+        for mode in [TraceMode::Materialized, TraceMode::Streamed] {
+            let builder = CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(strategy)
+                .trace_mode(mode)
+                .with_scenario(dynamic_scenario(&ps, 4321, horizon))
+                .with_traffic(RequestTraffic::off());
+            // run_scenario ignores the traffic; run_traffic must route
+            // the very same dynamic world through the served engine
+            let (a, metrics) = builder.run_traffic(&cfg, 70).unwrap();
+            let b = builder.run_scenario(&cfg, 70).unwrap();
+            assert_bit_identical(&a, &b, &format!("{strategy:?} × {mode:?}"));
+            assert_eq!(metrics.served, 0, "{strategy:?} × {mode:?}");
+        }
+    }
+}
+
+// ---- 2. loaded traffic never perturbs the crawl side ----
+
+#[test]
+fn loaded_traffic_leaves_the_crawl_side_bit_identical() {
+    let m = 40;
+    let horizon = 30.0;
+    let ps = pages(m, 9);
+    let cfg = SimConfig::new(4.0, horizon).unwrap();
+    let traffic = RequestTraffic::new(25.0, 1.1, 0xBEEF)
+        .unwrap()
+        .with_diurnal(horizon / 3.0, 0.5)
+        .unwrap()
+        .with_flash(horizon * 0.4, horizon * 0.1, m - 1, 60.0)
+        .unwrap();
+    for mode in [TraceMode::Materialized, TraceMode::Streamed] {
+        let base = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .pages(&ps)
+            .trace_mode(mode);
+        let (off, _) = base
+            .clone()
+            .with_traffic(RequestTraffic::off())
+            .run_traffic(&cfg, 11)
+            .unwrap();
+        let (on, metrics) =
+            base.with_traffic(traffic.clone()).run_traffic(&cfg, 11).unwrap();
+        assert_bit_identical(&off, &on, &format!("{mode:?} traffic on/off"));
+        assert!(metrics.served > 0, "{mode:?}: loaded traffic served nothing");
+    }
+}
+
+// ---- 3. same-seed served replay is bit-identical, metrics included ----
+
+#[test]
+fn same_seed_served_replay_is_bit_identical() {
+    let horizon = 40.0;
+    let ps = pages(50, 13);
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
+    for mode in [TraceMode::Materialized, TraceMode::Streamed] {
+        let run = || {
+            let traffic = RequestTraffic::new(30.0, 1.2, 0xCAFE)
+                .unwrap()
+                .with_diurnal(10.0, 0.4)
+                .unwrap();
+            CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(Strategy::Lazy)
+                .trace_mode(mode)
+                .with_scenario(dynamic_scenario(&ps, 777, horizon))
+                .with_traffic(traffic)
+                .run_traffic(&cfg, 21)
+                .unwrap()
+        };
+        let (r1, m1) = run();
+        let (r2, m2) = run();
+        let ctx = format!("{mode:?} replay");
+        assert_bit_identical(&r1, &r2, &ctx);
+        assert_metrics_identical(&m1, &m2, &ctx);
+        assert!(m1.served > 0, "{ctx}: no requests served");
+        assert_eq!(
+            m1.fresh_serves + m1.stale_serves,
+            m1.served,
+            "{ctx}: conservation"
+        );
+    }
+}
+
+// ---- 4. serving sanity ----
+
+#[test]
+fn flash_crowd_concentrates_serves_on_its_target() {
+    // the flash target is the least-popular page: without the flash its
+    // Zipf mass is the smallest of the population, so a serve surplus
+    // over its unpopular neighbor can only come from the flash stream
+    let m = 30;
+    let horizon = 40.0;
+    let ps = pages(m, 17);
+    let cfg = SimConfig::new(4.0, horizon).unwrap();
+    let target = m - 1;
+    let neighbor = m - 2;
+    let traffic = RequestTraffic::new(20.0, 1.3, 0xF1A5)
+        .unwrap()
+        .with_flash(5.0, 30.0, target, 200.0)
+        .unwrap();
+    let mut serving = ServingSession::new(&traffic, &ps, horizon);
+    let mut sched = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&ps)
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(23);
+    let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+    let mut ws = SimWorkspace::new();
+    simulate_served_with(&mut ws, &traces, &cfg, sched.as_mut(), &mut serving);
+    let cache = serving.cache();
+    assert!(
+        cache.serves(target) > 10 * cache.serves(neighbor).max(1),
+        "flash target got {} serves vs neighbor's {}",
+        cache.serves(target),
+        cache.serves(neighbor)
+    );
+    let metrics = serving.metrics();
+    assert!(metrics.served > 0);
+    assert_eq!(metrics.fresh_serves + metrics.stale_serves, metrics.served);
+}
+
+#[test]
+fn starved_crawler_serves_staler_copies() {
+    let m = 40;
+    let horizon = 60.0;
+    let ps = pages(m, 29);
+    let traffic = RequestTraffic::new(15.0, 1.1, 0xD00D).unwrap();
+    let stale_fraction_at = |bandwidth: f64| {
+        let cfg = SimConfig::new(bandwidth, horizon).unwrap();
+        let (_res, metrics) = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .pages(&ps)
+            .with_traffic(traffic.clone())
+            .run_traffic(&cfg, 31)
+            .unwrap();
+        assert!(metrics.served > 0, "R={bandwidth}: nothing served");
+        metrics.stale_fraction()
+    };
+    let starved = stale_fraction_at(0.2);
+    let provisioned = stale_fraction_at(20.0);
+    assert!(
+        starved > provisioned + 0.1,
+        "starved crawler ({starved:.3}) must serve staler than provisioned ({provisioned:.3})"
+    );
+}
