@@ -27,6 +27,9 @@
 //! - serving layer: the served engine with off traffic vs the plain
 //!   engine (`serve_off_*` / `serve_overhead_*`; acceptance: ≤ 1.10×
 //!   at m=1e5) and loaded Zipf request throughput (`serve_on_*`)
+//! - estimation loop: oracle vs learned knowledge on the same cell
+//!   (`est_{oracle,learned}_*` and the `est_overhead_*` ratio;
+//!   acceptance: ≤ 1.25× at m=1e5)
 //!
 //! Every lane is also recorded into `BENCH_perf.json` (via
 //! `benchkit::BenchJson`) so future PRs have a machine-readable perf
@@ -1097,6 +1100,70 @@ fn bench_serving(json: &mut BenchJson, smoke: bool) -> Vec<String> {
     declared
 }
 
+/// Estimation-loop lanes (the learned-knowledge acceptance bars):
+///
+/// - `est_oracle_m*`: the plain oracle-knowledge scheduler — the
+///   baseline everything learned is compared against.
+/// - `est_learned_m*`: the same cell under `Knowledge::Learned` — the
+///   full estimation loop in the hot path (per-fetch observation,
+///   budgeted re-projection through `on_params_changed`).
+/// - `est_overhead_m*`: learned/oracle wall-clock ratio.
+///   Acceptance: ≤ 1.25× at m=1e5.
+///
+/// Returns the declared acceptance lane names.
+fn bench_estimation(json: &mut BenchJson, smoke: bool) -> Vec<String> {
+    use ncis_crawl::{EstimatorConfig, Knowledge};
+    let mut declared = Vec::new();
+    let m: usize = if smoke { 2_048 } else { 100_000 };
+    let horizon = 10.0;
+    let r = if smoke { 200.0 } else { 2_000.0 };
+    println!("\n-- estimation loop: oracle vs learned knowledge (m={m}) --");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let mut irng = Rng::new(51);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let mut trng = Rng::new(52);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(r, horizon).expect("valid bench bandwidth");
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+
+    let mut lane_secs = [0.0f64; 2];
+    for (slot, (label, knowledge)) in [
+        ("oracle", Knowledge::Oracle),
+        ("learned", Knowledge::Learned(EstimatorConfig::default())),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let lane_builder = builder.clone().knowledge(knowledge);
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = lane_builder.build().unwrap();
+                std::hint::black_box(simulate_with(&mut ws, &traces, &cfg, sched.as_mut()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("{label:>8} knowledge  m={m}"), &meas);
+        let lane = format!("est_{label}_m{m}");
+        json.lane(
+            &lane,
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        declared.push(lane);
+        lane_secs[slot] = meas.mean_s;
+    }
+    let overhead = lane_secs[1] / lane_secs[0].max(1e-12);
+    println!("learned-knowledge overhead: {overhead:.3}x (acceptance: <= 1.25x)");
+    let lane = format!("est_overhead_m{m}");
+    json.lane(&lane, &[("x", overhead)]);
+    declared.push(lane);
+    declared
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -1122,6 +1189,7 @@ fn main() {
     let mut declared = bench_event_sourcing(&mut json, smoke);
     declared.extend(bench_faults(&mut json, smoke));
     declared.extend(bench_serving(&mut json, smoke));
+    declared.extend(bench_estimation(&mut json, smoke));
 
     // declared-lane manifest: the acceptance-critical lanes every run
     // of this bench must record, in both --smoke and full mode. CI

@@ -27,7 +27,7 @@ commands:
   serve-shards streaming sharded coordinator demo
                --m N --shards S --r R --horizon T
   figure       regenerate a paper figure: figure <id> [--reps K]
-               (ids: 1,2,3,4,5,6,7,8,9,10,11,12,14, appg, scenario, faults, serving)
+               (ids: 1,2,3,4,5,6,7,8,9,10,11,12,14, appg, scenario, faults, regret, serving)
 
 policies: GREEDY | GREEDY-CIS | GREEDY-NCIS | G-NCIS-APPROX-1 |
           G-NCIS-APPROX-2 | GREEDY-CIS+ | LDS  (suffix -LAZY for §5.2)

@@ -28,8 +28,10 @@
 
 use crate::coordinator::crawler::{GreedyScheduler, LdsAdapter, ValueBackend};
 use crate::coordinator::lazy::{LazyGreedyScheduler, DEFAULT_MARGIN};
+use crate::coordinator::learned::{prior_params, LearnedScheduler};
 use crate::coordinator::shard::ShardedScheduler;
 use crate::error::Error;
+use crate::estimation::EstimatorConfig;
 use crate::params::PageParams;
 use crate::policy::{PolicyKind, PolicyUnderTest};
 use crate::rngkit::Rng;
@@ -67,6 +69,26 @@ pub enum Strategy {
     Lds,
 }
 
+/// Where the scheduler's knowledge of page parameters comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Knowledge {
+    /// Ground-truth page parameters, as every pre-existing scheduler
+    /// consumed them (the default — bit-identical to not having the
+    /// knob at all).
+    #[default]
+    Oracle,
+    /// Oracle-free crawling: the scheduler is constructed over
+    /// uninformative priors and a [`LearnedScheduler`] decorator learns
+    /// (Δ̂, precision, recall) online from crawl outcomes, re-projecting
+    /// beliefs on a bounded per-tick budget. Scenario ground-truth
+    /// events never reach the wrapped scheduler (only the observable
+    /// importance weight μ crosses). With [`Strategy::Lds`] the
+    /// decorator still attaches, but the adapter replays its
+    /// caller-provided rates and ignores re-projections — an
+    /// oracle-rate baseline, documented rather than forbidden.
+    Learned(EstimatorConfig),
+}
+
 /// Builder facade over every scheduler in the coordinator layer.
 #[derive(Debug, Clone)]
 pub struct CrawlerBuilder {
@@ -78,6 +100,7 @@ pub struct CrawlerBuilder {
     scenario: Option<Scenario>,
     trace_mode: TraceMode,
     traffic: Option<RequestTraffic>,
+    knowledge: Knowledge,
 }
 
 /// Shared construction body of [`CrawlerBuilder::build`] and
@@ -151,7 +174,16 @@ impl CrawlerBuilder {
             scenario: None,
             trace_mode: TraceMode::default(),
             traffic: None,
+            knowledge: Knowledge::Oracle,
         }
+    }
+
+    /// Knowledge source: [`Knowledge::Oracle`] (ground truth, the
+    /// default) or [`Knowledge::Learned`] (online estimation from crawl
+    /// outcomes with trust-gated degradation).
+    pub fn knowledge(mut self, knowledge: Knowledge) -> Self {
+        self.knowledge = knowledge;
+        self
     }
 
     /// How [`Self::run_scenario`] produces per-repetition event
@@ -385,7 +417,15 @@ impl CrawlerBuilder {
     /// EXPERIMENTS.md §PJRT) — single-thread drivers can then take
     /// [`Self::build_local`] instead.
     pub fn build(&self) -> Result<Box<dyn CrawlScheduler + Send>> {
-        construct_scheduler!(self)
+        match self.knowledge {
+            Knowledge::Oracle => construct_scheduler!(self),
+            Knowledge::Learned(cfg) => {
+                let eff = self.prior_projected(&cfg);
+                let inner: Result<Box<dyn CrawlScheduler + Send>> = construct_scheduler!(&eff);
+                let mus: Vec<f64> = self.pages.iter().map(|p| p.mu).collect();
+                Ok(Box::new(LearnedScheduler::new(inner?, mus, cfg)))
+            }
+        }
     }
 
     /// [`Self::build`] without the `Send` bound — for single-thread
@@ -394,7 +434,26 @@ impl CrawlerBuilder {
     /// usable when `build` must be feature-gated away for a non-`Send`
     /// engine.
     pub fn build_local(&self) -> Result<Box<dyn CrawlScheduler>> {
-        construct_scheduler!(self)
+        match self.knowledge {
+            Knowledge::Oracle => construct_scheduler!(self),
+            Knowledge::Learned(cfg) => {
+                let eff = self.prior_projected(&cfg);
+                let inner: Result<Box<dyn CrawlScheduler>> = construct_scheduler!(&eff);
+                let mus: Vec<f64> = self.pages.iter().map(|p| p.mu).collect();
+                Ok(Box::new(LearnedScheduler::new(inner?, mus, cfg)))
+            }
+        }
+    }
+
+    /// The builder whose pages are this one's projected through the
+    /// uninformative prior (observable importance only) — what a
+    /// Learned-mode inner scheduler is constructed over. Ground truth
+    /// (Δ, λ, ν) never reaches it.
+    fn prior_projected(&self, cfg: &EstimatorConfig) -> CrawlerBuilder {
+        let mut eff = self.clone();
+        eff.pages = self.pages.iter().map(|p| prior_params(cfg, p.mu)).collect();
+        eff.knowledge = Knowledge::Oracle;
+        eff
     }
 
     /// Stamp a shard-local copy of this template over the members of
@@ -654,6 +713,34 @@ mod tests {
             assert_eq!(res.accuracy.to_bits(), bare.accuracy.to_bits(), "{mode:?}");
             assert_eq!(res.crawl_counts, bare.crawl_counts, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn learned_knowledge_wraps_and_oracle_stays_default() {
+        let ps = pages(12, 31);
+        let oracle =
+            CrawlerBuilder::new().policy(PolicyKind::GreedyNcis).pages(&ps).build().unwrap();
+        assert_eq!(oracle.name(), "GREEDY-NCIS", "default is oracle, no wrapper");
+        let learned = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .pages(&ps)
+            .knowledge(Knowledge::Learned(EstimatorConfig::default()))
+            .build()
+            .unwrap();
+        assert_eq!(learned.name(), "LEARNED(GREEDY-NCIS)");
+        let local = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .pages(&ps)
+            .knowledge(Knowledge::Learned(EstimatorConfig::default()))
+            .build_local()
+            .unwrap();
+        assert_eq!(local.name(), "LEARNED(GREEDY-NCIS-LAZY)");
+        // misconfiguration errors surface through the learned path too
+        assert!(CrawlerBuilder::new()
+            .knowledge(Knowledge::Learned(EstimatorConfig::default()))
+            .build()
+            .is_err());
     }
 
     #[test]

@@ -124,6 +124,10 @@ impl<S: CrawlScheduler> CrawlScheduler for PoliteScheduler<S> {
         self.inner.on_crawl_failed(page, t, outcome);
     }
 
+    fn on_fetch_observed(&mut self, page: usize, t: f64, changed: bool) {
+        self.inner.on_fetch_observed(page, t, changed);
+    }
+
     fn on_page_added(&mut self, page: usize, params: &crate::params::PageParams, t: f64) {
         // a slot already covered by the map keeps its host: recycled
         // slots stay put, and a caller with a non-round-robin layout

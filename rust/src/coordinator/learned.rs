@@ -1,0 +1,378 @@
+//! Oracle-free knowledge: the [`LearnedScheduler`] decorator.
+//!
+//! Wraps any [`CrawlScheduler`] and replaces its source of page
+//! knowledge: the inner scheduler is constructed over *uninformative
+//! priors* (see [`crate::CrawlerBuilder`] with
+//! [`crate::Knowledge::Learned`]) and this decorator feeds it beliefs
+//! learned purely from crawl outcomes via an
+//! [`EstimatorBank`](crate::estimation::EstimatorBank):
+//!
+//! - [`CrawlScheduler::on_fetch_observed`] — the only learning signal:
+//!   a successful fetch contributes one `(τ, n_CIS, changed)`
+//!   observation.
+//! - [`CrawlScheduler::on_crawl_failed`] — recorded as *no* change
+//!   observation (the interval keeps running), so failed fetches never
+//!   poison estimates.
+//! - [`CrawlScheduler::on_params_changed`] — **ground truth is
+//!   withheld**. Scenario drift events update only the page's
+//!   importance weight μ (observable from request logs in a real
+//!   deployment) and bump `EstimationStats::suppressed_truth`; the
+//!   true (Δ, λ, ν) never reach the inner scheduler.
+//!
+//! Re-projection is budgeted: dirty pages queue FIFO and each `select`
+//! tick flushes at most `EstimatorConfig::reproject_budget` of them
+//! through the inner scheduler's `on_params_changed` (which lands in
+//! `BeliefModel::set_page` for the greedy family) — O(budget) extra
+//! work per tick, never O(m). Projections that would repeat the
+//! previous belief bit-for-bit are skipped.
+
+use std::collections::VecDeque;
+
+use crate::estimation::{EstimationStats, EstimatorBank, EstimatorConfig};
+use crate::params::PageParams;
+use crate::sched::CrawlScheduler;
+
+/// The uninformative-prior projection of a page: prior change rate, no
+/// CIS channel, observable importance only.
+pub(crate) fn prior_params(cfg: &EstimatorConfig, mu: f64) -> PageParams {
+    let mu = if mu.is_finite() && mu >= 0.0 { mu } else { 0.0 };
+    PageParams { delta: cfg.prior_delta, mu, lam: 0.0, nu: 0.0 }
+}
+
+/// Knowledge decorator: learns page parameters online and re-projects
+/// them into the wrapped scheduler on a bounded per-tick budget.
+#[derive(Debug)]
+pub struct LearnedScheduler<S> {
+    inner: S,
+    cfg: EstimatorConfig,
+    bank: EstimatorBank,
+    /// Pristine importance weights, restored by `on_start`.
+    initial_mus: Vec<f64>,
+    /// Current (observable) importance per slot.
+    mus: Vec<f64>,
+    last_fetch: Vec<f64>,
+    cis_count: Vec<u32>,
+    live: Vec<bool>,
+    dirty: Vec<bool>,
+    queue: VecDeque<usize>,
+    last_projected: Vec<Option<PageParams>>,
+}
+
+impl<S: CrawlScheduler> LearnedScheduler<S> {
+    /// Wrap `inner` (already constructed over prior-projected pages).
+    /// `mus` are the observable importance weights of the initial
+    /// population; everything else starts cold.
+    pub fn new(inner: S, mus: Vec<f64>, cfg: EstimatorConfig) -> Self {
+        let m = mus.len();
+        Self {
+            inner,
+            cfg,
+            bank: EstimatorBank::new(m, cfg),
+            initial_mus: mus.clone(),
+            mus,
+            last_fetch: vec![0.0; m],
+            cis_count: vec![0; m],
+            live: vec![true; m],
+            dirty: vec![false; m],
+            queue: VecDeque::new(),
+            last_projected: vec![None; m],
+        }
+    }
+
+    /// Estimation-loop counters (exact, seed-reproducible).
+    pub fn stats(&self) -> &EstimationStats {
+        self.bank.stats()
+    }
+
+    /// The underlying estimator bank (read-only).
+    pub fn bank(&self) -> &EstimatorBank {
+        &self.bank
+    }
+
+    /// The belief most recently projected into the inner scheduler for
+    /// `page` (`None` before the first projection).
+    pub fn projected(&self, page: usize) -> Option<PageParams> {
+        self.last_projected.get(page).copied().flatten()
+    }
+
+    /// The wrapped scheduler.
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    fn ensure_slot(&mut self, page: usize) {
+        if page >= self.mus.len() {
+            let n = page + 1;
+            self.mus.resize(n, 0.0);
+            self.last_fetch.resize(n, 0.0);
+            self.cis_count.resize(n, 0);
+            self.live.resize(n, false);
+            self.dirty.resize(n, false);
+            self.last_projected.resize(n, None);
+        }
+    }
+
+    fn mark_dirty(&mut self, page: usize) {
+        if !self.dirty[page] {
+            self.dirty[page] = true;
+            self.queue.push_back(page);
+        }
+    }
+
+    /// Flush up to `reproject_budget` dirty pages into the inner
+    /// scheduler; count what the budget left behind.
+    fn flush_dirty(&mut self, t: f64) {
+        let mut budget = self.cfg.reproject_budget;
+        while budget > 0 {
+            let Some(page) = self.queue.pop_front() else { break };
+            self.dirty[page] = false;
+            if !self.live[page] {
+                continue;
+            }
+            budget -= 1;
+            let params = self.bank.estimate(page, self.mus[page]);
+            if self.last_projected[page] == Some(params) {
+                continue;
+            }
+            self.inner.on_params_changed(page, &params, t);
+            self.last_projected[page] = Some(params);
+            self.bank.stats_mut().reprojections += 1;
+        }
+        self.bank.stats_mut().deferred += self.queue.len() as u64;
+    }
+}
+
+impl<S: CrawlScheduler> CrawlScheduler for LearnedScheduler<S> {
+    fn on_start(&mut self, m: usize) {
+        self.inner.on_start(m);
+        let mut mus = self.initial_mus.clone();
+        mus.resize(m, 0.0);
+        self.mus = mus;
+        self.bank.reset(m);
+        self.last_fetch.clear();
+        self.last_fetch.resize(m, 0.0);
+        self.cis_count.clear();
+        self.cis_count.resize(m, 0);
+        self.live.clear();
+        self.live.resize(m, true);
+        self.dirty.clear();
+        self.dirty.resize(m, false);
+        self.queue.clear();
+        self.last_projected.clear();
+        self.last_projected.resize(m, None);
+    }
+
+    fn on_cis(&mut self, page: usize, t: f64) {
+        self.ensure_slot(page);
+        self.cis_count[page] = self.cis_count[page].saturating_add(1);
+        self.inner.on_cis(page, t);
+    }
+
+    fn on_crawl(&mut self, page: usize, t: f64) {
+        self.ensure_slot(page);
+        self.inner.on_crawl(page, t);
+        self.last_fetch[page] = t;
+        self.cis_count[page] = 0;
+    }
+
+    fn on_veto(&mut self, page: usize, t: f64) {
+        self.inner.on_veto(page, t);
+    }
+
+    fn on_crawl_failed(&mut self, page: usize, t: f64, outcome: crate::fault::CrawlOutcome) {
+        self.ensure_slot(page);
+        // a failed fetch observes nothing about the content: the
+        // crawl interval keeps running and no change indicator lands
+        self.bank.note_failed(page);
+        self.inner.on_crawl_failed(page, t, outcome);
+    }
+
+    fn on_fetch_observed(&mut self, page: usize, t: f64, changed: bool) {
+        self.ensure_slot(page);
+        if !self.live[page] {
+            return;
+        }
+        let tau = t - self.last_fetch[page];
+        self.bank.observe(page, tau, self.cis_count[page], changed);
+        self.mark_dirty(page);
+        self.inner.on_fetch_observed(page, t, changed);
+    }
+
+    fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.ensure_slot(page);
+        self.mus[page] = params.mu;
+        self.bank.add_page(page);
+        self.live[page] = true;
+        self.last_fetch[page] = t;
+        self.cis_count[page] = 0;
+        self.last_projected[page] = None;
+        // the inner scheduler sees only the observable part of the
+        // newborn: importance, under the uninformative prior
+        let projected = prior_params(&self.cfg, params.mu);
+        self.inner.on_page_added(page, &projected, t);
+    }
+
+    fn on_page_removed(&mut self, page: usize, t: f64) {
+        self.ensure_slot(page);
+        self.live[page] = false;
+        self.bank.remove_page(page);
+        self.inner.on_page_removed(page, t);
+    }
+
+    fn on_params_changed(&mut self, page: usize, params: &PageParams, t: f64) {
+        self.ensure_slot(page);
+        let _ = t;
+        // ground truth stays outside: only the observable importance
+        // weight crosses, and the belief refresh rides the normal
+        // budgeted re-projection path
+        self.bank.stats_mut().suppressed_truth += 1;
+        self.mus[page] = params.mu;
+        self.mark_dirty(page);
+    }
+
+    fn select(&mut self, t: f64) -> Option<usize> {
+        self.flush_dirty(t);
+        self.inner.select(t)
+    }
+
+    fn name(&self) -> String {
+        format!("LEARNED({})", self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::CrawlOutcome;
+
+    /// Inner-scheduler probe that records every `on_params_changed`.
+    #[derive(Default)]
+    struct Probe {
+        projected: Vec<(usize, PageParams, f64)>,
+        started: usize,
+    }
+
+    impl CrawlScheduler for Probe {
+        fn on_start(&mut self, _m: usize) {
+            self.started += 1;
+            self.projected.clear();
+        }
+        fn on_params_changed(&mut self, page: usize, params: &PageParams, t: f64) {
+            self.projected.push((page, *params, t));
+        }
+        fn select(&mut self, _t: f64) -> Option<usize> {
+            None
+        }
+    }
+
+    fn cfg() -> EstimatorConfig {
+        EstimatorConfig { reproject_budget: 2, ..EstimatorConfig::default() }
+    }
+
+    #[test]
+    fn truth_events_never_reach_the_inner_scheduler() {
+        let mut sched = LearnedScheduler::new(Probe::default(), vec![0.5, 0.5], cfg());
+        let truth = PageParams { delta: 7.0, mu: 0.9, lam: 0.8, nu: 0.3 };
+        sched.on_params_changed(0, &truth, 1.0);
+        assert_eq!(sched.stats().suppressed_truth, 1);
+        // the flush projects a belief — but it is the cold prior with
+        // the observable μ, never the true (Δ, λ, ν)
+        sched.select(2.0);
+        let (page, p, _) = sched.inner().projected[0];
+        assert_eq!(page, 0);
+        assert_eq!(p.mu, 0.9, "importance is observable and crosses");
+        assert_eq!(p.delta, cfg().prior_delta, "true delta must not leak");
+        assert_eq!((p.lam, p.nu), (0.0, 0.0), "true CIS quality must not leak");
+    }
+
+    #[test]
+    fn reprojection_budget_defers_excess_pages() {
+        let mut sched = LearnedScheduler::new(Probe::default(), vec![0.2; 5], cfg());
+        for page in 0..5 {
+            let truth = PageParams { delta: 1.0, mu: 0.1 * (page + 1) as f64, lam: 0.0, nu: 0.0 };
+            sched.on_params_changed(page, &truth, 1.0);
+        }
+        sched.select(2.0);
+        assert_eq!(sched.inner().projected.len(), 2, "budget is 2 per tick");
+        assert_eq!(sched.stats().deferred, 3);
+        sched.select(3.0);
+        assert_eq!(sched.inner().projected.len(), 4);
+        sched.select(4.0);
+        assert_eq!(sched.inner().projected.len(), 5, "queue drains FIFO");
+        assert_eq!(sched.stats().reprojections, 5);
+    }
+
+    #[test]
+    fn identical_beliefs_are_not_reprojected() {
+        let mut sched = LearnedScheduler::new(Probe::default(), vec![0.5], cfg());
+        let truth = PageParams { delta: 3.0, mu: 0.5, lam: 0.1, nu: 0.1 };
+        sched.on_params_changed(0, &truth, 1.0);
+        sched.select(2.0);
+        assert_eq!(sched.inner().projected.len(), 1);
+        // same observable state again: dirty, but the projection is
+        // bit-identical and must be skipped
+        sched.on_params_changed(0, &truth, 3.0);
+        sched.select(4.0);
+        assert_eq!(sched.inner().projected.len(), 1);
+        assert_eq!(sched.stats().reprojections, 1);
+    }
+
+    #[test]
+    fn fetch_observations_feed_the_bank_and_failures_do_not() {
+        let mut sched = LearnedScheduler::new(Probe::default(), vec![0.5], cfg());
+        sched.on_cis(0, 0.5);
+        sched.on_cis(0, 0.8);
+        sched.on_fetch_observed(0, 1.0, true);
+        sched.on_crawl(0, 1.0);
+        assert_eq!(sched.stats().observations, 1);
+        assert_eq!(sched.bank().rate_obs(0), 1);
+        sched.on_crawl_failed(0, 2.0, CrawlOutcome::TransientError);
+        assert_eq!(sched.stats().skipped_failed, 1);
+        assert_eq!(sched.bank().rate_obs(0), 1, "failure recorded no observation");
+        // the next successful fetch spans the failure: interval runs
+        // from the last SUCCESSFUL crawl
+        sched.on_fetch_observed(0, 4.0, false);
+        sched.on_crawl(0, 4.0);
+        assert_eq!(sched.stats().observations, 2);
+    }
+
+    #[test]
+    fn removed_pages_stop_observing_until_rebirth() {
+        let mut sched = LearnedScheduler::new(Probe::default(), vec![0.5, 0.4], cfg());
+        sched.on_fetch_observed(1, 1.0, true);
+        sched.on_crawl(1, 1.0);
+        sched.on_page_removed(1, 2.0);
+        sched.on_fetch_observed(1, 3.0, true);
+        assert_eq!(sched.stats().observations, 1, "retired slot observes nothing");
+        let born = PageParams { delta: 2.0, mu: 0.7, lam: 0.5, nu: 0.2 };
+        sched.on_page_added(1, &born, 5.0);
+        assert_eq!(sched.bank().rate_obs(1), 0, "reborn slot is cold");
+        // the inner scheduler saw the newborn under the prior, not truth
+        sched.on_fetch_observed(1, 6.0, false);
+        sched.on_crawl(1, 6.0);
+        assert_eq!(sched.stats().observations, 2);
+    }
+
+    #[test]
+    fn on_start_restores_a_pristine_decorator() {
+        let mut sched = LearnedScheduler::new(Probe::default(), vec![0.5, 0.4], cfg());
+        sched.on_cis(0, 0.2);
+        sched.on_fetch_observed(0, 1.0, true);
+        sched.on_crawl(0, 1.0);
+        sched.on_params_changed(1, &PageParams { delta: 9.0, mu: 0.9, lam: 0.0, nu: 0.0 }, 1.5);
+        sched.on_start(2);
+        assert_eq!(sched.inner().started, 1);
+        assert_eq!(*sched.stats(), EstimationStats::default());
+        assert_eq!(sched.bank().rate_obs(0), 0);
+        assert_eq!(sched.projected(1), None);
+        // the restored importance is the pristine one
+        sched.select(0.5);
+        assert!(sched.inner().projected.is_empty(), "nothing dirty after reset");
+    }
+
+    #[test]
+    fn name_reflects_learned_mode() {
+        let sched = LearnedScheduler::new(Probe::default(), vec![0.5], cfg());
+        assert!(sched.name().starts_with("LEARNED("));
+    }
+}

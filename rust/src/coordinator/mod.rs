@@ -15,16 +15,22 @@
 //!   bounded queues / backpressure, worker shards) used by the
 //!   `serve-shards` CLI and the Appendix-G scale experiment.
 //! - [`hosts`] — per-host politeness decoration over any scheduler.
+//! - [`learned`] — the oracle-free knowledge decorator: learns page
+//!   parameters online from crawl outcomes ([`crate::estimation`]) and
+//!   re-projects beliefs into the wrapped scheduler on a bounded
+//!   budget, withholding scenario ground truth.
 
 pub mod builder;
 pub mod crawler;
 pub mod hosts;
 pub mod lazy;
+pub mod learned;
 pub mod pipeline;
 pub mod shard;
 
-pub use builder::{CrawlerBuilder, Strategy};
+pub use builder::{CrawlerBuilder, Knowledge, Strategy};
 pub use crawler::{belief_params, GreedyScheduler, LdsAdapter, ValueBackend};
 pub use lazy::LazyGreedyScheduler;
+pub use learned::LearnedScheduler;
 pub use pipeline::{run_serving_pipeline, ServingPipelineReport};
 pub use shard::{rebalance, ShardPlan, ShardedRun, ShardedScheduler};

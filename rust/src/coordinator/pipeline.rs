@@ -13,6 +13,13 @@
 //! the streaming topology — nothing is hard-coded to one scheduler.
 //!
 //! Used by the `serve-shards` CLI command and the Appendix-G scale bench.
+//!
+//! Limitation: shard workers carry no ground-truth freshness state (the
+//! world lives in the driver's event sources), so the pipeline never
+//! fires [`CrawlScheduler::on_fetch_observed`] — a
+//! [`crate::Knowledge::Learned`] scheduler runs here but stays on its
+//! uninformative priors. Learned-mode evaluation uses the simulation
+//! engines (`sim`, `scenario`, `fault`), which all fire the hook.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

@@ -186,6 +186,11 @@ impl CrawlScheduler for ShardedScheduler {
         self.inner[s].on_crawl_failed(self.local_index[page], t, outcome);
     }
 
+    fn on_fetch_observed(&mut self, page: usize, t: f64, changed: bool) {
+        let s = self.plan.assignment[page];
+        self.inner[s].on_fetch_observed(self.local_index[page], t, changed);
+    }
+
     fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
         self.world_mutated = true;
         if page == self.plan.assignment.len() {

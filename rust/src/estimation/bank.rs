@@ -1,0 +1,550 @@
+//! The estimator bank: O(m) online learning of page parameters from
+//! crawl outcomes alone.
+//!
+//! One [`Slot`] per page pairs a deterministic streaming change-rate
+//! estimator ([`ChangeRateEstimator`], stochastic-approximation MLE on
+//! the Bernoulli change observations `z ~ Ber(1 − e^{−Δτ})`) with the
+//! reservoir-based [`OnlineEstimator`](super::online::OnlineEstimator)
+//! for CIS (precision, recall). The bank is the learned-knowledge
+//! scheduler's only source of beliefs: scenario ground truth never
+//! enters (see `coordinator::learned`).
+//!
+//! Robustness invariants, pinned by tests:
+//!
+//! - **Trust gating** — a page whose Δ̂ confidence interval is still
+//!   wide (Fisher-information proxy) schedules from the uninformative
+//!   prior `EstimatorConfig::prior_delta`; a page whose estimated CIS
+//!   quality misses the GREEDY-CIS+ thresholds
+//!   ([`crate::policy::CIS_PLUS_MIN_PRECISION`] /
+//!   [`crate::policy::CIS_PLUS_MIN_RECALL`]) has its CIS channel
+//!   projected away (`λ = ν = 0`), so unreliable signals are ignored
+//!   per page.
+//! - **Divergence guardrails** — [`EstimatorBank::estimate`] never
+//!   returns non-finite or out-of-range parameters: offending values
+//!   are clamped and counted in [`EstimationStats`], never propagated.
+//! - **Determinism** — every per-page reservoir seed derives from the
+//!   master seed via [`Rng::split64`] sub-keys keyed by (page,
+//!   generation); same seed + same event stream replays bit-identically
+//!   ([`slot_seed`] is a pure function, no ad-hoc RNG constants).
+
+use crate::estimation::online::OnlineEstimator;
+use crate::estimation::Observation;
+use crate::params::PageParams;
+use crate::policy::{CIS_PLUS_MIN_PRECISION, CIS_PLUS_MIN_RECALL};
+use crate::rngkit::Rng;
+
+/// Hard floor for any projected change-rate estimate.
+pub const DELTA_MIN: f64 = 1e-6;
+/// Hard ceiling for any projected change-rate estimate.
+pub const DELTA_MAX: f64 = 1e4;
+
+/// Configuration of the learned-knowledge estimation loop.
+///
+/// Carried inside [`crate::Knowledge::Learned`]; `seed` is the master
+/// seed all per-page estimator streams derive from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EstimatorConfig {
+    /// Master seed; per-page reservoir seeds are `split64` sub-keys.
+    pub seed: u64,
+    /// Uninformative prior change rate used before Δ̂ earns trust.
+    pub prior_delta: f64,
+    /// Minimum observations before any estimate may be trusted.
+    pub min_obs: u64,
+    /// Maximum relative CI half-width for Δ̂ to be trusted.
+    pub max_rel_ci: f64,
+    /// Maximum belief re-projections flushed per `select` tick.
+    pub reproject_budget: usize,
+    /// Per-page reservoir capacity of the CIS quality estimator.
+    pub reservoir_capacity: usize,
+    /// Refit cadence of the CIS quality estimator.
+    pub refit_every: u64,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xE571_AA7E,
+            prior_delta: 0.1,
+            min_obs: 8,
+            max_rel_ci: 0.5,
+            reproject_budget: 64,
+            reservoir_capacity: 32,
+            refit_every: 32,
+        }
+    }
+}
+
+/// Counters for everything the estimation loop absorbed or refused to
+/// propagate. All exact (no sampling), so seeded runs can pin them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EstimationStats {
+    /// Successful-fetch observations recorded.
+    pub observations: u64,
+    /// Failed fetches that were (correctly) NOT recorded as change
+    /// observations.
+    pub skipped_failed: u64,
+    /// Non-finite estimates clamped before projection.
+    pub clamped_nonfinite: u64,
+    /// Out-of-range estimates clamped before projection.
+    pub clamped_range: u64,
+    /// Projections that fell back to the uninformative prior or gated
+    /// the CIS channel off because an estimate had not earned trust.
+    pub untrusted_fallbacks: u64,
+    /// Belief re-projections pushed into the inner scheduler.
+    pub reprojections: u64,
+    /// Dirty pages left for a later tick by the re-projection budget.
+    pub deferred: u64,
+    /// Ground-truth parameter events withheld from the inner scheduler.
+    pub suppressed_truth: u64,
+}
+
+/// Deterministic streaming MLE of a page's change rate Δ.
+///
+/// Stochastic-approximation ascent on the log-likelihood of
+/// `z ~ Ber(1 − e^{−Δτ})`, updated multiplicatively in log-space so Δ̂
+/// stays positive; the per-step learning rate decays as `1/k` down to a
+/// floor of 0.05 so drifting rates keep being tracked. Accumulated
+/// Fisher information provides the relative-CI trust proxy. No RNG —
+/// the estimate is a pure fold over the observation stream.
+#[derive(Debug, Clone, Copy)]
+pub struct ChangeRateEstimator {
+    delta: f64,
+    n: u64,
+    fisher: f64,
+}
+
+impl ChangeRateEstimator {
+    /// Estimator starting from the (clamped) prior rate.
+    pub fn new(prior_delta: f64) -> Self {
+        let prior = if prior_delta.is_finite() { prior_delta } else { 0.1 };
+        Self { delta: prior.clamp(DELTA_MIN, DELTA_MAX), n: 0, fisher: 0.0 }
+    }
+
+    /// Fold in one fetch outcome: the page was observed after interval
+    /// `tau` and had (`changed = true`) or had not changed.
+    /// Non-positive or non-finite intervals carry no rate information
+    /// and are ignored.
+    pub fn observe(&mut self, tau: f64, changed: bool) {
+        if !tau.is_finite() || tau <= 0.0 {
+            return;
+        }
+        self.n += 1;
+        let x = (self.delta * tau).min(700.0);
+        let e = (-x).exp();
+        let p = (1.0 - e).max(1e-12); // P[changed in τ]
+        let grad = if changed { tau * e / p } else { -tau };
+        let eta = (1.0 / self.n as f64).max(0.05);
+        // natural-gradient step in log Δ (d ll/d log Δ = grad·Δ),
+        // clamped so one outlier interval cannot blow the estimate up
+        let step = (eta * grad * self.delta).clamp(-0.5, 0.5);
+        self.delta = (self.delta * step.exp()).clamp(DELTA_MIN, DELTA_MAX);
+        self.fisher += tau * tau * e / p;
+    }
+
+    /// Current change-rate estimate (always within
+    /// `[DELTA_MIN, DELTA_MAX]`).
+    #[inline]
+    pub fn delta_hat(&self) -> f64 {
+        self.delta
+    }
+
+    /// Observations folded in.
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Relative CI half-width proxy `1/(Δ̂·√I)` from the accumulated
+    /// Fisher information `I` (infinite before any information).
+    pub fn rel_ci(&self) -> f64 {
+        if self.fisher > 0.0 {
+            1.0 / (self.delta * self.fisher.sqrt())
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Has the estimate earned trust (enough observations AND a tight
+    /// enough CI)?
+    pub fn trusted(&self, min_obs: u64, max_rel_ci: f64) -> bool {
+        self.n >= min_obs && self.rel_ci() <= max_rel_ci
+    }
+}
+
+/// Per-page reservoir seed: a pure function of (master seed, slot,
+/// lifecycle generation) via `split64` sub-keys, so replays are
+/// bit-identical and recycled slots never reuse a stream.
+fn slot_seed(master: u64, page: usize, generation: u32) -> u64 {
+    let mut parent = Rng::new(master);
+    let tag = (page as u64) ^ ((generation as u64) << 40);
+    parent.split64(tag).next_u64()
+}
+
+#[derive(Debug)]
+struct Slot {
+    rate: ChangeRateEstimator,
+    quality: OnlineEstimator,
+    live: bool,
+    generation: u32,
+}
+
+/// O(m) bank of per-page online estimators plus the shared divergence
+/// counters.
+#[derive(Debug)]
+pub struct EstimatorBank {
+    cfg: EstimatorConfig,
+    slots: Vec<Slot>,
+    stats: EstimationStats,
+}
+
+impl EstimatorBank {
+    /// Bank over `m` pages, all cold.
+    pub fn new(m: usize, cfg: EstimatorConfig) -> Self {
+        let mut bank = Self { cfg, slots: Vec::new(), stats: EstimationStats::default() };
+        bank.reset(m);
+        bank
+    }
+
+    /// Re-dimension to `m` cold pages and zero the stats (the
+    /// `on_start` contract: a reused bank is indistinguishable from a
+    /// fresh one).
+    pub fn reset(&mut self, m: usize) {
+        self.slots.clear();
+        self.slots.reserve(m);
+        for page in 0..m {
+            self.slots.push(self.fresh_slot(page, 0));
+        }
+        self.stats = EstimationStats::default();
+    }
+
+    fn fresh_slot(&self, page: usize, generation: u32) -> Slot {
+        Slot {
+            rate: ChangeRateEstimator::new(self.cfg.prior_delta),
+            quality: OnlineEstimator::new(
+                self.cfg.reservoir_capacity,
+                self.cfg.refit_every,
+                slot_seed(self.cfg.seed, page, generation),
+            ),
+            live: true,
+            generation,
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Is the bank empty?
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &EstimatorConfig {
+        &self.cfg
+    }
+
+    /// Divergence / bookkeeping counters.
+    pub fn stats(&self) -> &EstimationStats {
+        &self.stats
+    }
+
+    pub(crate) fn stats_mut(&mut self) -> &mut EstimationStats {
+        &mut self.stats
+    }
+
+    /// Record one successful fetch of `page`: interval `tau` since the
+    /// previous fetch, `n_cis` signals delivered within it, and whether
+    /// the content had `changed`. Ignored for retired slots (a
+    /// quarantined page must stop producing observations).
+    pub fn observe(&mut self, page: usize, tau: f64, n_cis: u32, changed: bool) {
+        let Some(slot) = self.slots.get_mut(page) else { return };
+        if !slot.live {
+            return;
+        }
+        slot.rate.observe(tau, changed);
+        slot.quality.observe(Observation {
+            tau,
+            n_cis: n_cis as f64,
+            changed: if changed { 1.0 } else { 0.0 },
+        });
+        self.stats.observations += 1;
+    }
+
+    /// A fetch of `page` failed: no change observation may be recorded
+    /// (the interval keeps running), only the counter moves.
+    pub fn note_failed(&mut self, page: usize) {
+        let _ = page;
+        self.stats.skipped_failed += 1;
+    }
+
+    /// Slot `page` was born (or reborn): fresh estimators on a new
+    /// `split64` sub-stream, so nothing of a previous occupant survives.
+    pub fn add_page(&mut self, page: usize) {
+        if page == self.slots.len() {
+            self.slots.push(self.fresh_slot(page, 0));
+        } else if let Some(slot) = self.slots.get(page) {
+            let generation = slot.generation.wrapping_add(1);
+            self.slots[page] = self.fresh_slot(page, generation);
+        }
+    }
+
+    /// Slot `page` was retired (removal or quarantine): freeze it so no
+    /// further observations land.
+    pub fn remove_page(&mut self, page: usize) {
+        if let Some(slot) = self.slots.get_mut(page) {
+            slot.live = false;
+        }
+    }
+
+    /// Is the slot currently live?
+    pub fn is_live(&self, page: usize) -> bool {
+        self.slots.get(page).is_some_and(|s| s.live)
+    }
+
+    /// Current raw change-rate estimate for `page` (trust-ungated).
+    pub fn delta_hat(&self, page: usize) -> f64 {
+        self.slots.get(page).map_or(self.cfg.prior_delta, |s| s.rate.delta_hat())
+    }
+
+    /// Observations folded into `page`'s change-rate estimator.
+    pub fn rate_obs(&self, page: usize) -> u64 {
+        self.slots.get(page).map_or(0, |s| s.rate.n())
+    }
+
+    /// Project `page`'s current beliefs into scheduler-ready
+    /// parameters, applying trust gating and the divergence guardrails.
+    /// `mu` is the page's (observable) importance weight. The returned
+    /// parameters always pass [`PageParams::validate`].
+    pub fn estimate(&mut self, page: usize, mu: f64) -> PageParams {
+        let cfg = self.cfg;
+        let mut fell_back = false;
+
+        let mut mu = mu;
+        if !mu.is_finite() || mu < 0.0 {
+            self.stats.clamped_nonfinite += 1;
+            mu = 0.0;
+        }
+
+        // change rate: trust-gated, clamped, never non-finite
+        let (rate_trusted, raw_delta) = match self.slots.get(page) {
+            Some(slot) => (slot.rate.trusted(cfg.min_obs, cfg.max_rel_ci), slot.rate.delta_hat()),
+            None => (false, cfg.prior_delta),
+        };
+        let mut delta = if rate_trusted {
+            raw_delta
+        } else {
+            fell_back = true;
+            cfg.prior_delta
+        };
+        if !delta.is_finite() {
+            self.stats.clamped_nonfinite += 1;
+            delta = cfg.prior_delta;
+        }
+        if !(DELTA_MIN..=DELTA_MAX).contains(&delta) {
+            self.stats.clamped_range += 1;
+            delta = delta.clamp(DELTA_MIN, DELTA_MAX);
+        }
+
+        // CIS quality: estimated (precision, recall) must clear the
+        // GREEDY-CIS+ thresholds or the signal channel is projected away
+        let (mut p_hat, mut r_hat, quality_seen) = match self.slots.get(page) {
+            Some(slot) => {
+                let (p, r) = slot.quality.quality();
+                (p, r, slot.quality.seen())
+            }
+            None => (0.0, 0.0, 0),
+        };
+        if !p_hat.is_finite() || !r_hat.is_finite() {
+            self.stats.clamped_nonfinite += 1;
+            p_hat = 0.0;
+            r_hat = 0.0;
+        }
+        if !(0.0..=1.0).contains(&p_hat) || !(0.0..=1.0).contains(&r_hat) {
+            self.stats.clamped_range += 1;
+            p_hat = p_hat.clamp(0.0, 1.0);
+            r_hat = r_hat.clamp(0.0, 1.0);
+        }
+        let cis_trusted = quality_seen >= cfg.min_obs
+            && p_hat > CIS_PLUS_MIN_PRECISION
+            && r_hat > CIS_PLUS_MIN_RECALL;
+
+        let params = if cis_trusted {
+            PageParams::from_quality(delta, mu, p_hat, r_hat)
+        } else {
+            fell_back = true;
+            PageParams { delta, mu, lam: 0.0, nu: 0.0 }
+        };
+        if fell_back {
+            self.stats.untrusted_fallbacks += 1;
+        }
+        if params.validate().is_err() {
+            // unreachable by construction, but an estimate must NEVER
+            // propagate an invalid belief — degrade to the pure prior
+            self.stats.clamped_nonfinite += 1;
+            return PageParams { delta: cfg.prior_delta, mu, lam: 0.0, nu: 0.0 };
+        }
+        params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic synthetic fetch stream: periodic crawls of a page
+    /// with true change rate `delta`, change outcomes drawn from the
+    /// exact Bernoulli(1 − e^{−Δτ}).
+    fn drive(est: &mut ChangeRateEstimator, delta: f64, tau: f64, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let p = 1.0 - (-delta * tau).exp();
+        for _ in 0..n {
+            est.observe(tau, rng.bernoulli(p));
+        }
+    }
+
+    #[test]
+    fn change_rate_converges_on_stationary_stream() {
+        let mut est = ChangeRateEstimator::new(0.1);
+        drive(&mut est, 0.5, 1.0, 4000, 7);
+        let d = est.delta_hat();
+        assert!(d > 0.25 && d < 1.0, "delta_hat {d} vs truth 0.5");
+        assert!(est.trusted(8, 0.5), "rel_ci {}", est.rel_ci());
+    }
+
+    #[test]
+    fn change_rate_tracks_upward_drift() {
+        let mut est = ChangeRateEstimator::new(0.1);
+        drive(&mut est, 0.5, 1.0, 2000, 11);
+        let before = est.delta_hat();
+        drive(&mut est, 2.0, 1.0, 2000, 12);
+        let after = est.delta_hat();
+        assert!(after > before * 1.5, "must track drift: {before} -> {after}");
+        assert!(after > 1.0 && after < 4.0, "after {after} vs truth 2.0");
+    }
+
+    #[test]
+    fn change_rate_ignores_degenerate_intervals() {
+        let mut est = ChangeRateEstimator::new(0.3);
+        est.observe(0.0, true);
+        est.observe(-1.0, true);
+        est.observe(f64::NAN, true);
+        est.observe(f64::INFINITY, false);
+        assert_eq!(est.n(), 0);
+        assert_eq!(est.delta_hat(), 0.3);
+        assert!(!est.trusted(0, f64::INFINITY) || est.rel_ci().is_infinite());
+    }
+
+    #[test]
+    fn change_rate_stays_clamped_under_adversarial_streams() {
+        // all-changed pushes Δ̂ up: must stop at DELTA_MAX, stay finite
+        let mut up = ChangeRateEstimator::new(1.0);
+        for _ in 0..5000 {
+            up.observe(1e6, true);
+        }
+        assert!(up.delta_hat().is_finite() && up.delta_hat() <= DELTA_MAX);
+        // never-changed pushes Δ̂ down: must stop at DELTA_MIN
+        let mut down = ChangeRateEstimator::new(1.0);
+        for _ in 0..5000 {
+            down.observe(1e6, false);
+        }
+        assert!(down.delta_hat() >= DELTA_MIN);
+    }
+
+    #[test]
+    fn slot_seeds_are_deterministic_and_distinct() {
+        assert_eq!(slot_seed(42, 3, 0), slot_seed(42, 3, 0));
+        assert_ne!(slot_seed(42, 3, 0), slot_seed(42, 4, 0), "pages differ");
+        assert_ne!(slot_seed(42, 3, 0), slot_seed(42, 3, 1), "generations differ");
+        assert_ne!(slot_seed(42, 3, 0), slot_seed(43, 3, 0), "masters differ");
+    }
+
+    #[test]
+    fn cold_bank_estimates_the_uninformative_prior() {
+        let cfg = EstimatorConfig::default();
+        let mut bank = EstimatorBank::new(4, cfg);
+        let p = bank.estimate(2, 0.25);
+        assert_eq!(p.delta, cfg.prior_delta);
+        assert_eq!(p.mu, 0.25);
+        assert_eq!((p.lam, p.nu), (0.0, 0.0), "cold CIS channel is gated off");
+        assert!(p.validate().is_ok());
+        assert_eq!(bank.stats().untrusted_fallbacks, 1);
+        assert_eq!(bank.stats().clamped_nonfinite, 0);
+    }
+
+    #[test]
+    fn estimate_guards_degenerate_mu() {
+        let mut bank = EstimatorBank::new(1, EstimatorConfig::default());
+        let p = bank.estimate(0, f64::NAN);
+        assert_eq!(p.mu, 0.0);
+        assert!(p.validate().is_ok());
+        assert_eq!(bank.stats().clamped_nonfinite, 1);
+        let p = bank.estimate(0, -3.0);
+        assert_eq!(p.mu, 0.0);
+        assert_eq!(bank.stats().clamped_nonfinite, 2);
+    }
+
+    #[test]
+    fn trusted_rate_is_projected_untrusted_cis_is_not() {
+        let cfg = EstimatorConfig::default();
+        let mut bank = EstimatorBank::new(1, cfg);
+        // feed enough clean observations for the rate gate to open; the
+        // CIS channel (no signals ever) must stay gated
+        let mut rng = Rng::new(5);
+        let truth = 0.4;
+        let p_change = 1.0 - (-truth * 1.0f64).exp();
+        for _ in 0..3000 {
+            bank.observe(0, 1.0, 0, rng.bernoulli(p_change));
+        }
+        let p = bank.estimate(0, 0.5);
+        assert!(p.delta > 0.2 && p.delta < 0.8, "learned delta {}", p.delta);
+        assert_ne!(p.delta, cfg.prior_delta, "rate gate must have opened");
+        assert_eq!((p.lam, p.nu), (0.0, 0.0), "no-signal CIS stays off");
+        assert_eq!(bank.stats().observations, 3000);
+    }
+
+    #[test]
+    fn retired_slots_refuse_observations_and_rebirth_is_fresh() {
+        let mut bank = EstimatorBank::new(2, EstimatorConfig::default());
+        bank.observe(1, 1.0, 0, true);
+        assert_eq!(bank.rate_obs(1), 1);
+        bank.remove_page(1);
+        assert!(!bank.is_live(1));
+        bank.observe(1, 1.0, 0, true);
+        assert_eq!(bank.rate_obs(1), 1, "retired slot must not absorb observations");
+        assert_eq!(bank.stats().observations, 1);
+        bank.add_page(1);
+        assert!(bank.is_live(1));
+        assert_eq!(bank.rate_obs(1), 0, "reborn slot starts cold");
+    }
+
+    #[test]
+    fn reset_matches_fresh_bank() {
+        let cfg = EstimatorConfig::default();
+        let mut used = EstimatorBank::new(3, cfg);
+        used.observe(0, 1.0, 2, true);
+        used.note_failed(2);
+        used.remove_page(1);
+        used.reset(3);
+        let mut fresh = EstimatorBank::new(3, cfg);
+        assert_eq!(used.stats(), fresh.stats());
+        for page in 0..3 {
+            assert!(used.is_live(page));
+            assert_eq!(used.rate_obs(page), 0);
+            let (a, b) = (used.estimate(page, 0.1), fresh.estimate(page, 0.1));
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn failed_fetches_only_move_the_counter() {
+        let mut bank = EstimatorBank::new(1, EstimatorConfig::default());
+        for _ in 0..5 {
+            bank.note_failed(0);
+        }
+        assert_eq!(bank.stats().skipped_failed, 5);
+        assert_eq!(bank.stats().observations, 0);
+        assert_eq!(bank.rate_obs(0), 0, "failures carry no change observation");
+    }
+}

@@ -12,7 +12,10 @@
 //!   `ν̂ = γ̂ e^{−κ̂}` (κ̂ = α̂β̂), `prec = 1 − e^{−κ̂}`,
 //!   `Δ̂ = α̂ + γ̂(1 − e^{−κ̂})`, `recall = γ̂(1 − e^{−κ̂})/Δ̂`.
 
+pub mod bank;
 pub mod online;
+
+pub use bank::{ChangeRateEstimator, EstimationStats, EstimatorBank, EstimatorConfig};
 
 use crate::params::PageParams;
 use crate::rngkit::{self, Rng};
@@ -81,12 +84,18 @@ pub fn empirical_gamma(obs: &[Observation]) -> f64 {
 }
 
 /// The naive interval-counting estimator of Appendix E (biased; Fig 10).
+///
+/// Degenerate streams yield finite conventional values instead of NaN
+/// (the estimation loop must never propagate non-finite quality): with
+/// no CIS-bearing intervals precision is 1.0 — matching
+/// [`PageParams::precision`]'s no-signal convention — and with no
+/// observed changes recall is 0.0.
 pub fn naive_precision_recall(obs: &[Observation]) -> (f64, f64) {
     let both = obs.iter().filter(|o| o.n_cis > 0.0 && o.changed > 0.5).count() as f64;
     let with_cis = obs.iter().filter(|o| o.n_cis > 0.0).count() as f64;
     let with_change = obs.iter().filter(|o| o.changed > 0.5).count() as f64;
-    let precision = if with_cis > 0.0 { both / with_cis } else { f64::NAN };
-    let recall = if with_change > 0.0 { both / with_change } else { f64::NAN };
+    let precision = if with_cis > 0.0 { both / with_cis } else { 1.0 };
+    let recall = if with_change > 0.0 { both / with_change } else { 0.0 };
     (precision, recall)
 }
 
@@ -204,7 +213,8 @@ mod tests {
         let (alpha, kappa) = mle_fit(&obs, 60);
         assert!((alpha - d.alpha).abs() < 0.05 * d.alpha.max(0.05), "alpha {alpha} vs {}", d.alpha);
         let want_kappa = d.alpha * d.beta;
-        assert!((kappa - want_kappa).abs() < 0.08 * want_kappa.max(0.1), "kappa {kappa} vs {want_kappa}");
+        let kappa_tol = 0.08 * want_kappa.max(0.1);
+        assert!((kappa - want_kappa).abs() < kappa_tol, "kappa {kappa} vs {want_kappa}");
     }
 
     #[test]
@@ -219,6 +229,89 @@ mod tests {
         let (prec, rec) = mle_precision_recall(&obs, 60);
         assert!((prec - true_p).abs() < 0.05, "precision {prec} vs {true_p}");
         assert!((rec - true_r).abs() < 0.05, "recall {rec} vs {true_r}");
+    }
+
+    // --- degenerate-stream edge cases: no panics, no NaN propagation ---
+
+    #[test]
+    fn empty_observation_set_is_finite_everywhere() {
+        let obs: [Observation; 0] = [];
+        assert_eq!(empirical_gamma(&obs), 0.0);
+        let (prec, rec) = naive_precision_recall(&obs);
+        assert_eq!((prec, rec), (1.0, 0.0), "no-signal/no-change conventions");
+        // mle_fit on zero observations: gradient/Hessian are zero, the
+        // damped solve bails on the singular system and θ stays at the
+        // (finite) prior
+        let (alpha, kappa) = mle_fit(&obs, 25);
+        assert!(alpha.is_finite() && kappa.is_finite(), "({alpha}, {kappa})");
+        let (p, r) = quality_from_theta(alpha, kappa, empirical_gamma(&obs));
+        assert!(p.is_finite() && r.is_finite(), "({p}, {r})");
+        assert!((0.0..=1.0).contains(&r), "recall {r}");
+    }
+
+    #[test]
+    fn all_changed_stream_stays_clamped_and_finite() {
+        // every interval reports a change: the MLE wants α → ∞; the
+        // relative step clip + positivity floor must keep θ finite
+        let obs: Vec<Observation> =
+            (0..64).map(|_| Observation { tau: 1.0, n_cis: 1.0, changed: 1.0 }).collect();
+        let (alpha, kappa) = mle_fit(&obs, 50);
+        assert!(alpha.is_finite() && alpha > 0.0, "alpha {alpha}");
+        assert!(kappa.is_finite() && kappa > 0.0, "kappa {kappa}");
+        let (p, r) = quality_from_theta(alpha, kappa, empirical_gamma(&obs));
+        assert!(p.is_finite() && (0.0..=1.0).contains(&p), "precision {p}");
+        assert!(r.is_finite() && (0.0..=1.0).contains(&r), "recall {r}");
+        let (np, nr) = naive_precision_recall(&obs);
+        assert_eq!((np, nr), (1.0, 1.0));
+    }
+
+    #[test]
+    fn none_changed_stream_drives_theta_to_the_floor() {
+        // no interval ever reports a change: the MLE pushes θ toward 0
+        // and must stop at the 1e-8 positivity floor, never below
+        let obs: Vec<Observation> =
+            (0..64).map(|_| Observation { tau: 1.0, n_cis: 1.0, changed: 0.0 }).collect();
+        let (alpha, kappa) = mle_fit(&obs, 200);
+        assert!(alpha >= 1e-8 && alpha.is_finite(), "alpha {alpha}");
+        assert!(kappa >= 1e-8 && kappa.is_finite(), "kappa {kappa}");
+        assert!(alpha < 0.05, "alpha should collapse toward 0, got {alpha}");
+        let (p, r) = quality_from_theta(alpha, kappa, empirical_gamma(&obs));
+        assert!(p.is_finite() && r.is_finite(), "({p}, {r})");
+        let (np, nr) = naive_precision_recall(&obs);
+        assert_eq!(np, 0.0, "CIS present, never right");
+        assert_eq!(nr, 0.0, "no changes: recall convention 0.0");
+    }
+
+    #[test]
+    fn zero_tau_observations_do_not_poison_the_fit() {
+        // instantaneous re-crawls contribute x = (0, n) rows; γ̂ must
+        // not divide by the zero total time and the fit must stay finite
+        let degenerate: Vec<Observation> =
+            (0..16).map(|_| Observation { tau: 0.0, n_cis: 2.0, changed: 0.0 }).collect();
+        assert_eq!(empirical_gamma(&degenerate), 0.0, "zero total time: γ̂ convention 0");
+        let (alpha, kappa) = mle_fit(&degenerate, 25);
+        assert!(alpha.is_finite() && kappa.is_finite(), "({alpha}, {kappa})");
+        // mixed in with a healthy stream they are just weak rows
+        let mut rng = Rng::new(41);
+        let page = quality_page(0.5, 0.6, 0.3);
+        let mut obs = generate_observations(&page, 0.6, 20_000.0, &mut rng);
+        obs.extend(degenerate);
+        let (p, r) = mle_precision_recall(&obs, 40);
+        assert!(p.is_finite() && (0.0..=1.0).contains(&p), "precision {p}");
+        assert!(r.is_finite() && (0.0..=1.0).contains(&r), "recall {r}");
+    }
+
+    #[test]
+    fn gamma_zero_yields_no_signal_quality() {
+        // γ̂ = 0 (no CIS ever observed): recall must be exactly 0 and
+        // precision the analytic 1 − e^{−κ}, both finite — the trust
+        // gate downstream then ignores the CIS channel entirely
+        let (p, r) = quality_from_theta(0.3, 0.5, 0.0);
+        assert!((p - (1.0 - (-0.5f64).exp())).abs() < 1e-12, "{p}");
+        assert_eq!(r, 0.0);
+        // γ̂ = 0 with α also at the floor: delta_hat > 0 still holds
+        let (p2, r2) = quality_from_theta(1e-8, 1e-8, 0.0);
+        assert!(p2.is_finite() && r2 == 0.0, "({p2}, {r2})");
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //! bounded reservoir of recent observations per page and refits with a
 //! few damped-Newton steps on every `refit_every`-th observation —
 //! amortized O(1) per crawl, bounded memory, and it tracks drifting
-//! signal quality (an exponential decay downweights stale observations).
+//! signal quality: the reservoir is *time-biased* (every new
+//! observation enters; once full it evicts a uniformly random slot), so
+//! an observation's survival probability decays geometrically,
+//! `(1 − 1/capacity)^k` after `k` further observations — the
+//! exponential decay that downweights stale observations.
 
 use crate::estimation::{mle_fit, Observation};
 use crate::rngkit::Rng;
@@ -49,14 +53,16 @@ impl OnlineEstimator {
         const A: f64 = 0.02;
         self.gamma_hat =
             if self.seen == 1 { rate } else { (1.0 - A) * self.gamma_hat + A * rate };
-        // reservoir sampling (Vitter's R)
+        // time-biased reservoir: the newest observation ALWAYS enters;
+        // once full it evicts a uniformly random slot. Survival of an
+        // old observation decays as (1 − 1/capacity)^k over the next k
+        // observations, unlike uniform Vitter's-R where early
+        // observations linger forever and drift tracking stalls.
         if self.reservoir.len() < self.capacity {
             self.reservoir.push(obs);
         } else {
-            let j = self.rng.below(self.seen) as usize;
-            if j < self.capacity {
-                self.reservoir[j] = obs;
-            }
+            let j = self.rng.below(self.capacity as u64) as usize;
+            self.reservoir[j] = obs;
         }
         if self.seen % self.refit_every == 0 && self.reservoir.len() >= 8 {
             self.theta = mle_fit(&self.reservoir, 25);
@@ -119,8 +125,17 @@ mod tests {
             }
         }
         let (p_after, _) = est.quality();
+        // the time-biased reservoir flushes the good-regime sample in
+        // ~capacity·ln(capacity) observations, so after 6 bad-regime
+        // generations the estimate must sit AT the new regime, not
+        // merely below the old one (the pre-fix uniform reservoir only
+        // managed p_after < p_good - 0.2)
         assert!(
-            p_after < p_good - 0.2,
+            p_after < 0.35,
+            "estimate must converge to the new regime (0.2): {p_good} -> {p_after}"
+        );
+        assert!(
+            p_after < p_good - 0.35,
             "estimate must follow the drift: {p_good} -> {p_after}"
         );
     }

@@ -249,6 +249,7 @@ pub fn simulate_faulty_source_with<S: EventSource>(
                         stats.successes += 1;
                         consec_failures[i] = 0;
                         in_retry[i] = false; // cancel any pending retry
+                        scheduler.on_fetch_observed(i, t, ws.changed[i]);
                         ws.changed[i] = false;
                         ws.last_crawl[i] = t;
                         ws.crawl_counts[i] += 1;

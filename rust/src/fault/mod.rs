@@ -535,6 +535,10 @@ impl<S: CrawlScheduler> CrawlScheduler for OutageAwareScheduler<S> {
         self.inner.on_crawl_failed(page, t, outcome);
     }
 
+    fn on_fetch_observed(&mut self, page: usize, t: f64, changed: bool) {
+        self.inner.on_fetch_observed(page, t, changed);
+    }
+
     fn on_page_added(&mut self, page: usize, params: &crate::params::PageParams, t: f64) {
         self.inner.on_page_added(page, params, t);
     }

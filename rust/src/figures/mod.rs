@@ -11,6 +11,7 @@ pub mod dynamics;
 pub mod estimators;
 pub mod faults;
 pub mod rates;
+pub mod regret;
 pub mod scale;
 pub mod scenario;
 pub mod semisynth;
@@ -44,8 +45,9 @@ pub fn run_figure(id: &str, reps: usize) -> crate::Result<()> {
         "scenario" => scenario::fig_scenario(reps),
         "faults" => faults::fig_faults(reps),
         "serving" => serving::fig_serving(reps),
+        "regret" => regret::fig_regret(reps),
         other => Err(crate::Error::Usage(format!(
-            "unknown figure `{other}` (valid: 1-14, appg, scenario, faults, serving)"
+            "unknown figure `{other}` (valid: 1-14, appg, scenario, faults, regret, serving)"
         ))),
     }
 }

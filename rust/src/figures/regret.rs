@@ -1,0 +1,186 @@
+//! Learned-knowledge regret experiment (no paper counterpart — the
+//! oracle-free extension of the §1-footnote deployment story).
+//!
+//! The same GREEDY-NCIS scheduler runs every world twice: once with
+//! oracle knowledge (ground-truth page parameters, the paper's setting)
+//! and once with [`crate::Knowledge::Learned`] — cold-started from
+//! uninformative priors, learning change rates and CIS quality purely
+//! from crawl outcomes. The gap between the two rolling-freshness
+//! timelines is the *regret of not knowing the world*, reported under:
+//!
+//! - a **static** world (pure cold-start: regret must shrink as
+//!   estimates converge),
+//! - a **drifting** world (diurnal Δ drift: the estimators chase a
+//!   moving target),
+//! - a **faulty** world (transient fetch errors + correlated host
+//!   outages through the fault engine: failed fetches must not poison
+//!   estimates).
+//!
+//! Every seed derives from the spec seed, so two same-seed runs emit
+//! byte-identical CSV (pinned in `tests/cli_integration.rs`).
+
+use crate::benchkit::FigureOutput;
+use crate::coordinator::builder::{CrawlerBuilder, Knowledge, Strategy};
+use crate::estimation::EstimatorConfig;
+use crate::fault::{simulate_faulty_with, FaultConfig, FaultModel, RetryPolicy};
+use crate::figures::common::ExperimentSpec;
+use crate::figures::dynamics::resample;
+use crate::policy::PolicyKind;
+use crate::rngkit::Rng;
+use crate::scenario::generators::add_diurnal_drift;
+use crate::scenario::Scenario;
+use crate::sim::{generate_traces, CisDelay, SimConfig, SimWorkspace};
+use crate::Result;
+
+/// Horizon of the experiment (long enough for cold-start convergence:
+/// each page is fetched ~R·T/m = 20 times).
+const HORIZON: f64 = 200.0;
+/// Bandwidth R.
+const BANDWIDTH: f64 = 40.0;
+/// Pages m.
+const PAGES: usize = 400;
+/// Host count for the faulty world's topology.
+const HOSTS: usize = 16;
+/// Rolling-freshness window (requests).
+const WINDOW: usize = 1000;
+
+fn knob(knowledge: Knowledge, base: &CrawlerBuilder) -> CrawlerBuilder {
+    base.clone().knowledge(knowledge)
+}
+
+/// Learned-mode configuration of the figure: default trust gates, the
+/// figure's own master seed.
+fn learned_cfg() -> EstimatorConfig {
+    EstimatorConfig { seed: 0x4E57_ED42, ..EstimatorConfig::default() }
+}
+
+/// Mean rolling-freshness timeline over `reps` scenario repetitions.
+fn mean_timeline(
+    builder: &CrawlerBuilder,
+    cfg: &SimConfig,
+    grid: &[f64],
+    reps: usize,
+) -> Result<Vec<f64>> {
+    let mut acc = vec![0.0f64; grid.len()];
+    for rep in 0..reps {
+        let res = builder.run_scenario(cfg, 0x4E67 ^ rep as u64)?;
+        for (a, v) in acc.iter_mut().zip(resample(&res.timeline, grid)) {
+            *a += v;
+        }
+    }
+    Ok(acc.iter().map(|a| a / reps as f64).collect())
+}
+
+/// Mean rolling-freshness timeline through the fault engine.
+fn mean_faulty_timeline(
+    builder: &CrawlerBuilder,
+    pages: &[crate::params::PageParams],
+    cfg: &SimConfig,
+    grid: &[f64],
+    reps: usize,
+    trace_seed: u64,
+) -> Result<Vec<f64>> {
+    let mut acc = vec![0.0f64; grid.len()];
+    let mut ws = SimWorkspace::new();
+    let mut sched = builder.build()?;
+    for rep in 0..reps {
+        let mut trng = Rng::new(trace_seed ^ (0xFEE1 + rep as u64));
+        let traces = generate_traces(pages, HORIZON, CisDelay::None, &mut trng);
+        let mut fault_cfg = FaultConfig {
+            transient_prob: 0.2,
+            timeout_prob: 0.02,
+            gone_prob: 0.0,
+            hosts: HOSTS,
+            outages: Vec::new(),
+            seed: 0xFA17 ^ rep as u64,
+        };
+        fault_cfg.add_correlated_outages(3, HORIZON / 40.0, HORIZON, 0xFA18 ^ rep as u64);
+        let mut model = FaultModel::new(fault_cfg)?;
+        let res = simulate_faulty_with(
+            &mut ws,
+            &traces,
+            cfg,
+            sched.as_mut(),
+            &mut model,
+            RetryPolicy::default(),
+        );
+        for (a, v) in acc.iter_mut().zip(resample(&res.sim.timeline, grid)) {
+            *a += v;
+        }
+    }
+    Ok(acc.iter().map(|a| a / reps as f64).collect())
+}
+
+/// The regret figure: per unit time, oracle vs learned rolling
+/// freshness and their gap, under static / drifting / faulty worlds.
+/// CSV: `target/figures/fig_regret.csv`.
+pub fn fig_regret(reps: usize) -> Result<()> {
+    let reps = reps.clamp(1, 10);
+    let spec = ExperimentSpec::section6(PAGES, reps).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+
+    let mut cfg = SimConfig::new(BANDWIDTH, HORIZON)?;
+    cfg.timeline_window = Some(WINDOW);
+    let grid: Vec<f64> = (1..=HORIZON as usize).map(|k| k as f64).collect();
+
+    let static_world = Scenario::new(inst.pages.clone(), 0x4E61);
+    let mut drift_world = Scenario::new(inst.pages.clone(), 0x4E62);
+    add_diurnal_drift(&mut drift_world, 50.0, 0.5, 8, 0.3, HORIZON, 0x4E63);
+
+    let base = CrawlerBuilder::new().policy(PolicyKind::GreedyNcis).strategy(Strategy::Exact);
+    let learned = Knowledge::Learned(learned_cfg());
+
+    let lane = |k: Knowledge, sc: &Scenario| {
+        mean_timeline(&knob(k, &base).with_scenario(sc.clone()), &cfg, &grid, reps)
+    };
+    let static_oracle = lane(Knowledge::Oracle, &static_world)?;
+    let static_learned = lane(learned, &static_world)?;
+    let drift_oracle = lane(Knowledge::Oracle, &drift_world)?;
+    let drift_learned = lane(learned, &drift_world)?;
+
+    let faulty = |k: Knowledge| {
+        mean_faulty_timeline(
+            &knob(k, &base).pages(&inst.pages),
+            &inst.pages,
+            &cfg,
+            &grid,
+            reps,
+            spec.seed,
+        )
+    };
+    let faulty_oracle = faulty(Knowledge::Oracle)?;
+    let faulty_learned = faulty(learned)?;
+
+    let mut fig = FigureOutput::new(
+        "fig_regret",
+        &[
+            "t",
+            "static_oracle",
+            "static_learned",
+            "static_regret",
+            "drift_oracle",
+            "drift_learned",
+            "drift_regret",
+            "faulty_oracle",
+            "faulty_learned",
+            "faulty_regret",
+        ],
+    );
+    for (k, &t) in grid.iter().enumerate() {
+        fig.rowf(&[
+            t,
+            static_oracle[k],
+            static_learned[k],
+            static_oracle[k] - static_learned[k],
+            drift_oracle[k],
+            drift_learned[k],
+            drift_oracle[k] - drift_learned[k],
+            faulty_oracle[k],
+            faulty_learned[k],
+            faulty_oracle[k] - faulty_learned[k],
+        ]);
+    }
+    fig.finish()?;
+    Ok(())
+}

@@ -55,7 +55,10 @@
 //!   flash crowds), the [`serving::FreshnessCache`] answering requests
 //!   from the last crawled copy, and fairness-at-request metrics
 //!   (staleness percentiles per CIS-quality / popularity decile).
-//! - [`estimation`] — Appendix-E estimators for CIS precision/recall.
+//! - [`estimation`] — Appendix-E estimators for CIS precision/recall
+//!   plus the online [`estimation::EstimatorBank`] behind
+//!   [`Knowledge::Learned`] (streaming change-rate MLE, trust gating,
+//!   divergence guardrails).
 //! - [`dataset`] — semi-synthetic stand-in for the (non-public)
 //!   Kolobov et al. dataset.
 //! - [`coordinator`] — Algorithm-1 crawler drivers behind
@@ -90,8 +93,9 @@ pub mod stats;
 pub mod testkit;
 pub mod util;
 
-pub use coordinator::{CrawlerBuilder, Strategy};
+pub use coordinator::{CrawlerBuilder, Knowledge, Strategy};
 pub use error::{Error, Result};
+pub use estimation::{EstimationStats, EstimatorConfig};
 pub use params::{DerivedParams, PageParams};
 pub use policy::{PolicyKind, PolicyUnderTest};
 pub use scenario::{Scenario, WorldEvent};

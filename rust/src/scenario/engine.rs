@@ -629,6 +629,7 @@ fn simulate_scenario_served_core(
         if let Some(i) = scheduler.select(t) {
             debug_assert!(i < ws.live.len());
             if ws.live[i] {
+                scheduler.on_fetch_observed(i, t, ws.changed[i]);
                 ws.changed[i] = false;
                 ws.last_crawl[i] = t;
                 ws.crawl_counts[i] += 1;
@@ -1074,6 +1075,7 @@ fn simulate_scenario_streamed_served_core(
         if let Some(i) = scheduler.select(t) {
             debug_assert!(i < ws.live.len());
             if ws.live[i] {
+                scheduler.on_fetch_observed(i, t, ws.changed[i]);
                 ws.changed[i] = false;
                 ws.last_crawl[i] = t;
                 ws.crawl_counts[i] += 1;

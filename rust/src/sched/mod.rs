@@ -36,6 +36,13 @@
 //! the failure is treated like a veto so the page is sidelined for an
 //! immediate re-`select`.
 //!
+//! The estimation loop ([`crate::estimation`]) adds the last hook,
+//! again a default no-op: [`CrawlScheduler::on_fetch_observed`] — a
+//! successful fetch reported whether the page content had changed since
+//! the previous fetch. Drivers fire it right before the matching
+//! `on_crawl`; learned-knowledge schedulers turn the (interval,
+//! changed?, CIS-count) triple into online parameter estimates.
+//!
 //! [`PageTracker`] is the shared bookkeeping every stateful scheduler
 //! embeds: last-crawl times and pending-CIS counts, updated from the
 //! hooks with exactly the semantics the pre-redesign engine used for
@@ -104,6 +111,19 @@ pub trait CrawlScheduler {
         self.on_veto(page, t);
     }
 
+    /// The driver fetched `page` at time `t` and observed whether its
+    /// content **changed** since the previous fetch. Fired immediately
+    /// before the matching [`Self::on_crawl`] (same `page`, same `t`),
+    /// and only for successful fetches — failed attempts surface
+    /// through [`Self::on_crawl_failed`] instead and carry no change
+    /// observation. This is the only channel through which learned-
+    /// knowledge schedulers ([`crate::Knowledge::Learned`]) may learn
+    /// about the world; ground-truth parameter events are withheld from
+    /// them. Default: no-op (oracle schedulers don't need outcomes).
+    fn on_fetch_observed(&mut self, page: usize, t: f64, changed: bool) {
+        let _ = (page, t, changed);
+    }
+
     /// Slot `page` now holds a live page with parameters `params`
     /// (born at time `t`). `page` is either one past the current
     /// population (growth) or a previously-retired slot (recycling);
@@ -154,6 +174,9 @@ impl<S: CrawlScheduler + ?Sized> CrawlScheduler for Box<S> {
     }
     fn on_crawl_failed(&mut self, page: usize, t: f64, outcome: crate::fault::CrawlOutcome) {
         (**self).on_crawl_failed(page, t, outcome)
+    }
+    fn on_fetch_observed(&mut self, page: usize, t: f64, changed: bool) {
+        (**self).on_fetch_observed(page, t, changed)
     }
     fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
         (**self).on_page_added(page, params, t)

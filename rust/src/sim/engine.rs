@@ -527,6 +527,7 @@ pub fn simulate_source_served_with<S: EventSource>(
         ticks += 1;
         if let Some(i) = scheduler.select(t) {
             debug_assert!(i < m);
+            scheduler.on_fetch_observed(i, t, ws.changed[i]);
             ws.changed[i] = false;
             ws.last_crawl[i] = t;
             ws.crawl_counts[i] += 1;
@@ -686,6 +687,7 @@ pub fn simulate_reference(
         ticks += 1;
         if let Some(i) = scheduler.select(t) {
             debug_assert!(i < m);
+            scheduler.on_fetch_observed(i, t, changed[i]);
             changed[i] = false;
             last_crawl[i] = t;
             crawl_counts[i] += 1;

@@ -105,6 +105,27 @@ fn figure_serving_is_deterministic() {
 }
 
 #[test]
+fn figure_regret_is_deterministic() {
+    // oracle + learned lanes both derive every seed (scenario, traces,
+    // faults, estimator sub-streams) from the spec seed, so two
+    // same-seed runs must emit byte-identical CSV
+    run("figure regret --reps 1").unwrap();
+    let path = std::path::Path::new("target/figures/fig_regret.csv");
+    let first = std::fs::read(path).unwrap();
+    run("figure regret --reps 1").unwrap();
+    let second = std::fs::read(path).unwrap();
+    assert_eq!(first, second, "same-seed `figure regret` runs diverged");
+    // header + one row per grid point (t = 1..=200)
+    let text = String::from_utf8(first).unwrap();
+    assert_eq!(text.lines().count(), 1 + 200);
+    let header = text.lines().next().unwrap();
+    assert!(
+        header.starts_with("t,static_oracle,static_learned,static_regret,drift_oracle"),
+        "unexpected header: {header}"
+    );
+}
+
+#[test]
 fn unknown_command_fails() {
     assert!(run("frobnicate").is_err());
 }
