@@ -30,6 +30,10 @@
 //! - estimation loop: oracle vs learned knowledge on the same cell
 //!   (`est_{oracle,learned}_*` and the `est_overhead_*` ratio;
 //!   acceptance: ≤ 1.25× at m=1e5)
+//! - flight recorder: the traced engine entry with no handle vs the
+//!   plain engine (`trace_off_*` / `trace_overhead_*`; acceptance:
+//!   ≤ 1.02× at m=1e5) and full ring-buffer recording
+//!   (`trace_on_*`; acceptance: ≤ 1.25× at m=1e5)
 //!
 //! Every lane is also recorded into `BENCH_perf.json` (via
 //! `benchkit::BenchJson`) so future PRs have a machine-readable perf
@@ -1164,6 +1168,141 @@ fn bench_estimation(json: &mut BenchJson, smoke: bool) -> Vec<String> {
     declared
 }
 
+/// Flight-recorder lanes (the tracing acceptance bars):
+///
+/// - `trace_off_m*` / `trace_overhead_m*`: the traced engine entry with
+///   `tr = None` vs the plain engine on the same traces and scheduler —
+///   the cost of carrying the Option-gated trace branches when nothing
+///   records. Acceptance: ≤ 1.02× at m=1e5.
+/// - `trace_on_m*`: the same cell with a recording ring-buffer handle
+///   attached to engine and scheduler — full event emission into the
+///   bounded flight recorder. Acceptance: ≤ 1.25× at m=1e5.
+///
+/// Returns the declared acceptance lane names.
+fn bench_trace(json: &mut BenchJson, smoke: bool) -> Vec<String> {
+    use ncis_crawl::sim::simulate_traced_with;
+    use ncis_crawl::trace::TraceHandle;
+    let mut declared = Vec::new();
+    let m: usize = if smoke { 2_048 } else { 100_000 };
+    let horizon = 10.0;
+    let r = if smoke { 200.0 } else { 2_000.0 };
+    println!("\n-- flight recorder: disabled-path and recording overhead (m={m}) --");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let mut irng = Rng::new(61);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let mut trng = Rng::new(62);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(r, horizon).expect("valid bench bandwidth");
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+
+    // plain engine baseline (same construction idiom as the other lanes)
+    let secs_plain = {
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_with(&mut ws, &traces, &cfg, sched.as_mut()));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("plain engine         m={m}"), &meas);
+        json.lane(
+            &format!("trace_baseline_m{m}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        meas.mean_s
+    };
+
+    // traced entry, no handle: the disabled-path acceptance lane
+    let secs_off = {
+        let mut ws = SimWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_traced_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    sched.as_mut(),
+                    None,
+                    None,
+                ));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("traced engine (off)  m={m}"), &meas);
+        let lane = format!("trace_off_m{m}");
+        json.lane(
+            &lane,
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        declared.push(lane);
+        meas.mean_s
+    };
+    let overhead = secs_off / secs_plain.max(1e-12);
+    println!("trace-disabled overhead: {overhead:.3}x (acceptance: <= 1.02x)");
+    let lane = format!("trace_overhead_m{m}");
+    json.lane(&lane, &[("x", overhead)]);
+    declared.push(lane);
+
+    // recording: engine + scheduler emit into a bounded ring (the cap
+    // keeps memory flat however long the run — overwrites are counted,
+    // not allocated)
+    {
+        let mut ws = SimWorkspace::new();
+        let mut events = 0u64;
+        let meas = measure(
+            || {
+                let handle = TraceHandle::recorder(1 << 16);
+                let mut sched =
+                    builder.clone().with_trace(handle.clone()).build().unwrap();
+                let res = simulate_traced_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    sched.as_mut(),
+                    None,
+                    Some(&handle),
+                );
+                events = handle
+                    .recorder_arc()
+                    .map(|rec| {
+                        let rec = rec
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                        rec.len() as u64 + rec.dropped()
+                    })
+                    .unwrap_or(0);
+                std::hint::black_box(res);
+            },
+            3,
+            0.2,
+        );
+        report(&format!("traced engine (on)   m={m}"), &meas);
+        let rec_overhead = meas.mean_s / secs_plain.max(1e-12);
+        println!(
+            "{:>46} events recorded {events} ({rec_overhead:.3}x, acceptance: <= 1.25x)",
+            ""
+        );
+        let lane = format!("trace_on_m{m}");
+        json.lane(
+            &lane,
+            &[
+                ("seconds_per_rep", meas.mean_s),
+                ("events_per_s", events as f64 / meas.mean_s),
+                ("x", rec_overhead),
+            ],
+        );
+        declared.push(lane);
+    }
+    declared
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -1190,6 +1329,7 @@ fn main() {
     declared.extend(bench_faults(&mut json, smoke));
     declared.extend(bench_serving(&mut json, smoke));
     declared.extend(bench_estimation(&mut json, smoke));
+    declared.extend(bench_trace(&mut json, smoke));
 
     // declared-lane manifest: the acceptance-critical lanes every run
     // of this bench must record, in both --smoke and full mode. CI

@@ -7,10 +7,16 @@ use crate::cli::Args;
 use crate::coordinator::builder::{CrawlerBuilder, Strategy};
 use crate::coordinator::pipeline::{run_pipeline_streamed, CisFeed, PipelineConfig};
 use crate::error::{Error, Result};
+use crate::fault::{simulate_faulty_traced_with, FaultConfig, FaultModel, RetryPolicy};
 use crate::figures::common::{run_cell, ExperimentSpec};
-use crate::policy::{parse_policy, PolicyKind};
+use crate::policy::{parse_policy, PolicyKind, PolicyUnderTest};
 use crate::rngkit::Rng;
+use crate::scenario::generators::{add_steady_churn, BornPageSpec};
+use crate::scenario::Scenario;
+use crate::serving::RequestTraffic;
+use crate::sim::{generate_traces, CisDelay, SimConfig, SimWorkspace};
 use crate::solver;
+use crate::trace::TraceHandle;
 
 const USAGE: &str = "\
 ncis-crawl <command> [options]
@@ -28,6 +34,10 @@ commands:
                --m N --shards S --r R --horizon T
   figure       regenerate a paper figure: figure <id> [--reps K]
                (ids: 1,2,3,4,5,6,7,8,9,10,11,12,14, appg, scenario, faults, regret, serving)
+  trace        run one traced repetition, emit the flight-recorder JSONL
+               --m N --r R --horizon T --policy NAME [--scenario] [--faults]
+               [--serve RATE] [--cap N] [--seed S] [--out FILE]
+               [--verbose] [--stride N]
 
 policies: GREEDY | GREEDY-CIS | GREEDY-NCIS | G-NCIS-APPROX-1 |
           G-NCIS-APPROX-2 | GREEDY-CIS+ | LDS  (suffix -LAZY for §5.2)
@@ -195,6 +205,118 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One traced repetition on a synthetic instance: every decision,
+/// lifecycle transition and serve lands in a bounded flight recorder,
+/// drained to JSONL (stdout or `--out`) after the run. The summary
+/// goes to stderr so a piped `trace | jq` sees only event lines.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use std::io::Write;
+
+    let m = args.usize_or("m", 200)?;
+    let r = args.f64_or("r", 50.0)?;
+    let horizon = args.f64_or("horizon", 50.0)?;
+    let seed = args.u64_or("seed", 0x7ACE)?;
+    let cap = args.usize_or("cap", 65_536)?;
+    let put = parse_policy(args.opt("policy").unwrap_or("GREEDY-NCIS"))?;
+    // the trace lanes run through CrawlerBuilder; map the policy name
+    // onto its strategy (LDS has no decision trace — its picks are a
+    // precomputed low-discrepancy sequence, not per-tick argmaxes)
+    let (policy, strategy) = match put {
+        PolicyUnderTest::Greedy(k) => (k, Strategy::Exact),
+        PolicyUnderTest::Lazy(k) => (k, Strategy::Lazy),
+        other => {
+            return Err(Error::Usage(format!(
+                "trace: policy {} is not traceable — use a GREEDY variant",
+                other.name()
+            )))
+        }
+    };
+    let mut rng = Rng::new(seed);
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let cfg = SimConfig::new(r, horizon)?;
+
+    let mut handle = TraceHandle::recorder(cap);
+    if args.has_flag("verbose") {
+        handle = handle.with_progress(args.u64_or("stride", 1_000)?);
+    }
+
+    let crawls: u64;
+    if args.has_flag("faults") {
+        // fault lane: the traced degraded-mode engine, moderate severity
+        let mut sched = CrawlerBuilder::new()
+            .policy(policy)
+            .strategy(strategy)
+            .pages(&inst.pages)
+            .with_trace(handle.clone())
+            .build()?;
+        let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut rng);
+        let mut model = FaultModel::new(FaultConfig {
+            transient_prob: 0.1,
+            timeout_prob: 0.05,
+            gone_prob: 0.002,
+            seed: seed ^ 0xFA17,
+            ..FaultConfig::none()
+        })?;
+        let mut ws = SimWorkspace::new();
+        let res = simulate_faulty_traced_with(
+            &mut ws,
+            &traces,
+            &cfg,
+            sched.as_mut(),
+            &mut model,
+            RetryPolicy::default(),
+            Some(&handle),
+        );
+        crawls = res.sim.crawl_counts.iter().map(|&c| c as u64).sum();
+        eprintln!(
+            "fault lane: attempts={} retries={} quarantined={}",
+            res.faults.attempts, res.faults.retries, res.faults.quarantined
+        );
+    } else {
+        let mut b = CrawlerBuilder::new()
+            .policy(policy)
+            .strategy(strategy)
+            .pages(&inst.pages)
+            .with_trace(handle.clone());
+        if args.has_flag("scenario") {
+            // dynamic lane: steady churn over the whole horizon
+            let mut sc = Scenario::new(inst.pages.clone(), seed ^ 0x5C);
+            add_steady_churn(&mut sc, 0.02, horizon, &BornPageSpec::default(), seed ^ 0x5D);
+            b = b.with_scenario(sc);
+        }
+        let rate = args.f64_or("serve", 0.0)?;
+        let traffic = if rate > 0.0 {
+            RequestTraffic::new(rate, 1.1, seed ^ 0x5E)?
+        } else {
+            RequestTraffic::off()
+        };
+        let (res, metrics) = b.with_traffic(traffic).run_traffic(&cfg, seed)?;
+        crawls = res.crawl_counts.iter().map(|&c| c as u64).sum();
+        if metrics.served > 0 {
+            eprintln!(
+                "serving lane: served={} fresh={} stale={}",
+                metrics.served, metrics.fresh_serves, metrics.stale_serves
+            );
+        }
+    }
+
+    let jsonl = handle.drain_jsonl();
+    let events = jsonl.lines().count();
+    match args.opt("out") {
+        Some(path) => std::fs::write(path, &jsonl)?,
+        None => std::io::stdout().lock().write_all(jsonl.as_bytes())?,
+    }
+    let dropped = handle
+        .recorder_arc()
+        .map(|rec| {
+            rec.lock().unwrap_or_else(std::sync::PoisonError::into_inner).dropped()
+        })
+        .unwrap_or(0);
+    eprintln!("trace: {events} events held ({crawls} crawls, {dropped} overwritten, cap {cap})");
+    Ok(())
+}
+
 fn cmd_figure(args: &Args) -> Result<()> {
     let id = args
         .positionals
@@ -215,6 +337,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("dataset") => cmd_dataset(args),
         Some("estimate") => cmd_estimate(args),
         Some("serve-shards") => cmd_serve_shards(args),
+        Some("trace") => cmd_trace(args),
         Some("figure") => cmd_figure(args),
         Some("report") => {
             let path = args

@@ -36,16 +36,17 @@ use crate::params::PageParams;
 use crate::policy::{PolicyKind, PolicyUnderTest};
 use crate::rngkit::Rng;
 use crate::scenario::{
-    simulate_scenario_served_with, simulate_scenario_streamed_served_with,
-    simulate_scenario_streamed_with, simulate_scenario_with, Scenario, ScenarioWorkspace,
+    simulate_scenario_streamed_traced_with, simulate_scenario_traced_with, Scenario,
+    ScenarioWorkspace,
 };
 use crate::sched::CrawlScheduler;
 use crate::serving::{RequestTraffic, ServingMetrics, ServingSession};
 use crate::sim::engine::{SimConfig, SimResult, SimWorkspace};
 use crate::sim::{
-    generate_traces, simulate_served_with, simulate_streamed_served_with, CisDelay,
+    generate_traces, simulate_streamed_traced_with, simulate_traced_with, CisDelay,
     StreamedSource, TraceMode,
 };
+use crate::trace::TraceHandle;
 use crate::Result;
 
 /// Which scheduling strategy drives the policy's value function.
@@ -101,6 +102,7 @@ pub struct CrawlerBuilder {
     trace_mode: TraceMode,
     traffic: Option<RequestTraffic>,
     knowledge: Knowledge,
+    trace: Option<TraceHandle>,
 }
 
 /// Shared construction body of [`CrawlerBuilder::build`] and
@@ -175,7 +177,23 @@ impl CrawlerBuilder {
             trace_mode: TraceMode::default(),
             traffic: None,
             knowledge: Knowledge::Oracle,
+            trace: None,
         }
+    }
+
+    /// Attach a trace handle: schedulers built by this builder emit
+    /// decision events into it, and [`Self::run_scenario`] /
+    /// [`Self::run_traffic`] drive the traced engine entry points.
+    /// Tracing is strictly observational — picks, RNG draws and results
+    /// are bit-identical to the untraced run (`tests/trace_parity.rs`).
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// The attached trace handle, if any.
+    pub fn trace_handle(&self) -> Option<&TraceHandle> {
+        self.trace.as_ref()
     }
 
     /// Knowledge source: [`Knowledge::Oracle`] (ground truth, the
@@ -289,13 +307,14 @@ impl CrawlerBuilder {
                 ServingSession::new(traffic, scenario.initial_pages(), cfg.horizon);
             let mut ws = ScenarioWorkspace::new();
             let res = match self.trace_mode {
-                TraceMode::Streamed => simulate_scenario_streamed_served_with(
+                TraceMode::Streamed => simulate_scenario_streamed_traced_with(
                     &mut ws,
                     cfg,
                     scenario,
                     trace_seed,
                     sched.as_mut(),
-                    &mut serving,
+                    Some(&mut serving),
+                    self.trace.as_ref(),
                 )?,
                 TraceMode::Materialized => {
                     let mut rng = Rng::new(trace_seed);
@@ -305,13 +324,14 @@ impl CrawlerBuilder {
                         scenario.delay(),
                         &mut rng,
                     );
-                    simulate_scenario_served_with(
+                    simulate_scenario_traced_with(
                         &mut ws,
                         &traces,
                         cfg,
                         scenario,
                         sched.as_mut(),
-                        &mut serving,
+                        Some(&mut serving),
+                        self.trace.as_ref(),
                     )
                 }
             };
@@ -324,12 +344,26 @@ impl CrawlerBuilder {
                 TraceMode::Streamed => {
                     let source =
                         StreamedSource::new(&self.pages, cfg.horizon, CisDelay::None, &mut rng)?;
-                    simulate_streamed_served_with(&mut ws, source, cfg, sched.as_mut(), &mut serving)
+                    simulate_streamed_traced_with(
+                        &mut ws,
+                        source,
+                        cfg,
+                        sched.as_mut(),
+                        Some(&mut serving),
+                        self.trace.as_ref(),
+                    )
                 }
                 TraceMode::Materialized => {
                     let traces =
                         generate_traces(&self.pages, cfg.horizon, CisDelay::None, &mut rng);
-                    simulate_served_with(&mut ws, &traces, cfg, sched.as_mut(), &mut serving)
+                    simulate_traced_with(
+                        &mut ws,
+                        &traces,
+                        cfg,
+                        sched.as_mut(),
+                        Some(&mut serving),
+                        self.trace.as_ref(),
+                    )
                 }
             };
             Ok((res, serving.into_metrics()))
@@ -373,9 +407,15 @@ impl CrawlerBuilder {
         scenario.delay().validate()?;
         let mut sched = self.build()?;
         match self.trace_mode {
-            TraceMode::Streamed => {
-                simulate_scenario_streamed_with(ws, cfg, scenario, trace_seed, sched.as_mut())
-            }
+            TraceMode::Streamed => simulate_scenario_streamed_traced_with(
+                ws,
+                cfg,
+                scenario,
+                trace_seed,
+                sched.as_mut(),
+                None,
+                self.trace.as_ref(),
+            ),
             TraceMode::Materialized => {
                 let mut rng = Rng::new(trace_seed);
                 let traces = generate_traces(
@@ -384,7 +424,15 @@ impl CrawlerBuilder {
                     scenario.delay(),
                     &mut rng,
                 );
-                Ok(simulate_scenario_with(ws, &traces, cfg, scenario, sched.as_mut()))
+                Ok(simulate_scenario_traced_with(
+                    ws,
+                    &traces,
+                    cfg,
+                    scenario,
+                    sched.as_mut(),
+                    None,
+                    self.trace.as_ref(),
+                ))
             }
         }
     }
@@ -417,7 +465,7 @@ impl CrawlerBuilder {
     /// EXPERIMENTS.md §PJRT) — single-thread drivers can then take
     /// [`Self::build_local`] instead.
     pub fn build(&self) -> Result<Box<dyn CrawlScheduler + Send>> {
-        match self.knowledge {
+        let built: Result<Box<dyn CrawlScheduler + Send>> = match self.knowledge {
             Knowledge::Oracle => construct_scheduler!(self),
             Knowledge::Learned(cfg) => {
                 let eff = self.prior_projected(&cfg);
@@ -425,7 +473,12 @@ impl CrawlerBuilder {
                 let mus: Vec<f64> = self.pages.iter().map(|p| p.mu).collect();
                 Ok(Box::new(LearnedScheduler::new(inner?, mus, cfg)))
             }
+        };
+        let mut sched = built?;
+        if let Some(h) = &self.trace {
+            sched.attach_trace(h.clone());
         }
+        Ok(sched)
     }
 
     /// [`Self::build`] without the `Send` bound — for single-thread
@@ -434,7 +487,7 @@ impl CrawlerBuilder {
     /// usable when `build` must be feature-gated away for a non-`Send`
     /// engine.
     pub fn build_local(&self) -> Result<Box<dyn CrawlScheduler>> {
-        match self.knowledge {
+        let built: Result<Box<dyn CrawlScheduler>> = match self.knowledge {
             Knowledge::Oracle => construct_scheduler!(self),
             Knowledge::Learned(cfg) => {
                 let eff = self.prior_projected(&cfg);
@@ -442,7 +495,12 @@ impl CrawlerBuilder {
                 let mus: Vec<f64> = self.pages.iter().map(|p| p.mu).collect();
                 Ok(Box::new(LearnedScheduler::new(inner?, mus, cfg)))
             }
+        };
+        let mut sched = built?;
+        if let Some(h) = &self.trace {
+            sched.attach_trace(h.clone());
         }
+        Ok(sched)
     }
 
     /// The builder whose pages are this one's projected through the

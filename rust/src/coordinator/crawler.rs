@@ -97,6 +97,11 @@ pub struct GreedyScheduler {
     /// EMA of selected crawl values — the paper's estimate of the
     /// stationary threshold Λ (exposed for diagnostics / lazy parity).
     pub lambda_estimate: f64,
+    /// Optional decision-trace handle: when attached (and recording),
+    /// the native argmax emits one `Decision` event per pick with its
+    /// bound-pruning stats. Strictly observational — no pick, belief
+    /// or RNG state depends on it.
+    trace: Option<crate::trace::TraceHandle>,
 }
 
 impl GreedyScheduler {
@@ -120,6 +125,7 @@ impl GreedyScheduler {
             world_mutated: false,
             last_values: vec![0.0; m],
             lambda_estimate: 0.0,
+            trace: None,
         };
         s.rebuild_order();
         s
@@ -185,13 +191,19 @@ impl GreedyScheduler {
         let mut tau = [0.0f64; VALUE_CHUNK];
         let mut ncis = [0u32; VALUE_CHUNK];
         let mut vals = [0.0f64; VALUE_CHUNK];
+        let mut chunks_visited = 0u32;
+        let mut scanned = 0u32;
+        let mut early_break = false;
         for chunk in self.by_ub.chunks(VALUE_CHUNK) {
             // chunk[0] carries the chunk's largest bound (sorted order):
             // once it cannot beat `best`, no later page can win or tie
             if self.ub_safe[chunk[0] as usize] < best {
+                early_break = true;
                 break;
             }
             let n = chunk.len();
+            chunks_visited += 1;
+            scanned += n as u32;
             for (j, &ip) in chunk.iter().enumerate() {
                 let i = ip as usize;
                 tau[j] = self.tracker.tau_elap(i, t);
@@ -223,6 +235,14 @@ impl GreedyScheduler {
             return None;
         }
         self.update_lambda(best);
+        crate::trace::emit(self.trace.as_ref(), || crate::trace::TraceEvent::Decision {
+            t,
+            page: best_i as u32,
+            value: best,
+            chunks: chunks_visited,
+            scanned,
+            early_break,
+        });
         Some(best_i)
     }
 
@@ -319,11 +339,14 @@ impl CrawlScheduler for GreedyScheduler {
         if self.world_mutated {
             // a dynamic run grew/retired/drifted the model: rebuild
             // from the pristine construction-time population, exactly
-            // as a fresh scheduler would be (reuse == fresh)
+            // as a fresh scheduler would be (reuse == fresh); the trace
+            // handle is a capability, not belief state, so it survives
             let policy = self.model.policy();
             let backend = self.backend.clone();
             let pages = std::mem::take(&mut self.initial_pages);
+            let trace = self.trace.take();
             *self = Self::new(policy, &pages, backend);
+            self.trace = trace;
         }
         debug_assert_eq!(m, self.model.len(), "page count changed between runs");
         self.tracker.reset(self.model.len());
@@ -344,6 +367,10 @@ impl CrawlScheduler for GreedyScheduler {
     fn on_veto(&mut self, page: usize, t: f64) {
         self.veto_tick[page] = t;
         self.last_veto_t = t;
+        crate::trace::emit(self.trace.as_ref(), || crate::trace::TraceEvent::Veto {
+            t,
+            page: page as u32,
+        });
     }
 
     fn on_page_added(&mut self, page: usize, params: &PageParams, t: f64) {
@@ -392,6 +419,10 @@ impl CrawlScheduler for GreedyScheduler {
                 self.select_pjrt(&engine, terms, t)
             }
         }
+    }
+
+    fn attach_trace(&mut self, tr: crate::trace::TraceHandle) {
+        self.trace = Some(tr);
     }
 
     fn name(&self) -> String {

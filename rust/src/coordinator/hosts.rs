@@ -151,6 +151,10 @@ impl<S: CrawlScheduler> CrawlScheduler for PoliteScheduler<S> {
         self.inner.on_params_changed(page, params, t);
     }
 
+    fn attach_trace(&mut self, tr: crate::trace::TraceHandle) {
+        self.inner.attach_trace(tr);
+    }
+
     fn name(&self) -> String {
         format!("{}-POLITE", self.inner.name())
     }

@@ -56,6 +56,10 @@ pub struct LearnedScheduler<S> {
     dirty: Vec<bool>,
     queue: VecDeque<usize>,
     last_projected: Vec<Option<PageParams>>,
+    /// Optional decision-trace handle: re-projections and trust-gate
+    /// flips are recorded here. Observational only — no belief or
+    /// projection depends on it.
+    trace: Option<crate::trace::TraceHandle>,
 }
 
 impl<S: CrawlScheduler> LearnedScheduler<S> {
@@ -76,6 +80,7 @@ impl<S: CrawlScheduler> LearnedScheduler<S> {
             dirty: vec![false; m],
             queue: VecDeque::new(),
             last_projected: vec![None; m],
+            trace: None,
         }
     }
 
@@ -122,6 +127,7 @@ impl<S: CrawlScheduler> LearnedScheduler<S> {
     /// Flush up to `reproject_budget` dirty pages into the inner
     /// scheduler; count what the budget left behind.
     fn flush_dirty(&mut self, t: f64) {
+        let t0 = self.trace.as_ref().and_then(crate::trace::TraceHandle::span_clock);
         let mut budget = self.cfg.reproject_budget;
         while budget > 0 {
             let Some(page) = self.queue.pop_front() else { break };
@@ -134,11 +140,28 @@ impl<S: CrawlScheduler> LearnedScheduler<S> {
             if self.last_projected[page] == Some(params) {
                 continue;
             }
+            // trust gate: the projected CIS rate λ̂ crossing zero is
+            // the bank starting/stopping to trust the page's signals
+            let was_open = self.last_projected[page].is_some_and(|p| p.lam > 0.0);
+            if was_open != (params.lam > 0.0) {
+                crate::trace::emit(self.trace.as_ref(), || crate::trace::TraceEvent::TrustGate {
+                    t,
+                    page: page as u32,
+                    open: params.lam > 0.0,
+                });
+            }
+            crate::trace::emit(self.trace.as_ref(), || crate::trace::TraceEvent::Reproject {
+                t,
+                page: page as u32,
+            });
             self.inner.on_params_changed(page, &params, t);
             self.last_projected[page] = Some(params);
             self.bank.stats_mut().reprojections += 1;
         }
         self.bank.stats_mut().deferred += self.queue.len() as u64;
+        if let Some(h) = &self.trace {
+            h.span_observe(crate::trace::SpanKind::Reproject, t0);
+        }
     }
 }
 
@@ -233,6 +256,11 @@ impl<S: CrawlScheduler> CrawlScheduler for LearnedScheduler<S> {
     fn select(&mut self, t: f64) -> Option<usize> {
         self.flush_dirty(t);
         self.inner.select(t)
+    }
+
+    fn attach_trace(&mut self, tr: crate::trace::TraceHandle) {
+        self.inner.attach_trace(tr.clone());
+        self.trace = Some(tr);
     }
 
     fn name(&self) -> String {

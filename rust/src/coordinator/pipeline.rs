@@ -33,7 +33,8 @@ use crate::rngkit::Rng;
 use crate::sched::{CrawlScheduler, IdleScheduler};
 use crate::serving::{RequestTraffic, ServingMetrics, ServingSession};
 use crate::sim::engine::{SimConfig, SimResult, SimWorkspace, KIND_CIS};
-use crate::sim::{simulate_streamed_served_with, CisDelay, PageEventSource, StreamedSource};
+use crate::sim::{simulate_streamed_traced_with, CisDelay, PageEventSource, StreamedSource};
+use crate::trace::TraceHandle;
 use crate::util::OrdF64;
 
 /// A message into a shard worker.
@@ -373,13 +374,20 @@ fn run_pipeline_events<I: Iterator<Item = (f64, usize)>>(
     // here, before any thread exists; shards > pages leaves some shards
     // empty and they idle their ticks away instead of failing validation.
     // shard_template remaps pages AND (for Lds templates) global rates
-    // to shard-local indices, so workers always see local picks.
+    // to shard-local indices, so workers always see local picks. A
+    // trace handle on the template is re-pointed at the worker's own
+    // ring (`h.shard(s)`) so concurrent shards never interleave events
+    // and the drain stays deterministic in shard-index order.
     let mut scheds: Vec<Box<dyn CrawlScheduler + Send>> = Vec::with_capacity(cfg.shards);
-    for member in &members {
+    for (s, member) in members.iter().enumerate() {
         scheds.push(if member.is_empty() {
             Box::new(IdleScheduler)
         } else {
-            scheduler.shard_template(pages, member).build()?
+            let mut tpl = scheduler.shard_template(pages, member);
+            if let Some(h) = scheduler.trace_handle() {
+                tpl = tpl.with_trace(h.shard(s));
+            }
+            tpl.build()?
         });
     }
     run_pipeline_with_schedulers(pages, scheds, cis_events, world_events, cfg)
@@ -601,7 +609,8 @@ pub fn run_serving_pipeline(
     // stamp every shard's scheduler, traffic slice and serving session
     // up front: misconfiguration is an Err here, not a panic inside
     // thread::scope; empty shards (shards > pages) simply sit out
-    type Job = (Vec<PageParams>, Box<dyn CrawlScheduler + Send>, ServingSession);
+    type Job =
+        (Vec<PageParams>, Box<dyn CrawlScheduler + Send>, ServingSession, Option<TraceHandle>);
     let mut jobs: Vec<Option<Job>> = Vec::with_capacity(cfg.shards);
     for (s, member) in members.iter().enumerate() {
         if member.is_empty() {
@@ -609,7 +618,13 @@ pub fn run_serving_pipeline(
             continue;
         }
         let shard_pages: Vec<PageParams> = member.iter().map(|&i| pages[i]).collect();
-        let sched = scheduler.shard_template(pages, member).build()?;
+        // per-shard trace handle: each worker records into its own ring
+        let tr = scheduler.trace_handle().map(|h| h.shard(s));
+        let mut tpl = scheduler.shard_template(pages, member);
+        if let Some(h) = &tr {
+            tpl = tpl.with_trace(h.clone());
+        }
+        let sched = tpl.build()?;
         let frac = shard_pages.len() as f64 / m as f64;
         let mut shard_traffic = RequestTraffic::new(
             traffic.rate() * frac,
@@ -623,7 +638,7 @@ pub fn run_serving_pipeline(
             }
         }
         let session = ServingSession::new(&shard_traffic, &shard_pages, cfg.horizon);
-        jobs.push(Some((shard_pages, sched, session)));
+        jobs.push(Some((shard_pages, sched, session, tr)));
     }
     let sim_cfg = SimConfig::new(cfg.bandwidth / cfg.shards as f64, cfg.horizon)?;
     let start = std::time::Instant::now();
@@ -634,7 +649,7 @@ pub fn run_serving_pipeline(
             .enumerate()
             .map(|(s, job)| {
                 scope.spawn(move || {
-                    job.map(|(shard_pages, mut sched, mut session)| {
+                    job.map(|(shard_pages, mut sched, mut session, tr)| {
                         let mut rng = Rng::new(trace_seed).split(s as u64);
                         let source = StreamedSource::new(
                             &shard_pages,
@@ -644,12 +659,13 @@ pub fn run_serving_pipeline(
                         )
                         .expect("CisDelay::None always validates");
                         let mut ws = SimWorkspace::new();
-                        let res = simulate_streamed_served_with(
+                        let res = simulate_streamed_traced_with(
                             &mut ws,
                             source,
                             sim_cfg,
                             sched.as_mut(),
-                            &mut session,
+                            Some(&mut session),
+                            tr.as_ref(),
                         );
                         (res, session.into_metrics())
                     })

@@ -92,6 +92,9 @@ pub struct ShardedScheduler {
     backend: ValueBackend,
     initial_pages: Vec<PageParams>,
     world_mutated: bool,
+    /// Attached trace handle, kept so the post-dynamic-run rebuild can
+    /// re-attach it to the fresh shard schedulers.
+    trace: Option<crate::trace::TraceHandle>,
 }
 
 impl ShardedScheduler {
@@ -134,6 +137,7 @@ impl ShardedScheduler {
             backend,
             initial_pages: pages.to_vec(),
             world_mutated: false,
+            trace: None,
         }
     }
 
@@ -152,12 +156,17 @@ impl CrawlScheduler for ShardedScheduler {
     fn on_start(&mut self, m: usize) {
         if self.world_mutated {
             // a dynamic run grew the membership: rebuild the plan and
-            // every shard scheduler from the pristine population
+            // every shard scheduler from the pristine population (the
+            // trace handle is a capability, not state — it survives)
             let policy = self.policy;
             let backend = self.backend.clone();
             let shards = self.plan.shards;
             let pages = std::mem::take(&mut self.initial_pages);
+            let trace = self.trace.take();
             *self = Self::new(policy, &pages, shards, backend);
+            if let Some(tr) = trace {
+                self.attach_trace(tr);
+            }
         }
         debug_assert_eq!(m, self.local_index.len(), "page count changed between runs");
         self.next_shard = 0;
@@ -235,6 +244,13 @@ impl CrawlScheduler for ShardedScheduler {
             return None;
         }
         self.inner[s].select(t).map(|local| self.members[s][local])
+    }
+
+    fn attach_trace(&mut self, tr: crate::trace::TraceHandle) {
+        for inner in &mut self.inner {
+            inner.attach_trace(tr.clone());
+        }
+        self.trace = Some(tr);
     }
 
     fn name(&self) -> String {

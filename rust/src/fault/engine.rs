@@ -31,6 +31,7 @@ use crate::sim::engine::{KIND_CHANGE, KIND_REQUEST};
 use crate::sim::events::EventTraces;
 use crate::sim::source::{EventSource, ReplaySource, StreamedSource};
 use crate::sim::{SimConfig, SimResult, SimWorkspace};
+use crate::trace::{self, SpanKind, TraceEvent};
 use crate::util::OrdF64;
 
 /// Outcome of one faulty repetition: the usual freshness accounting
@@ -77,6 +78,26 @@ pub fn simulate_faulty_with(
     res
 }
 
+/// [`simulate_faulty_with`] with an optional trace sink: the retry /
+/// quarantine / forfeit transitions land in the flight recorder as
+/// they happen. `tr = None` is branch-for-branch the untraced engine
+/// (pinned by `tests/trace_parity.rs`).
+pub fn simulate_faulty_traced_with(
+    ws: &mut SimWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    model: &mut FaultModel,
+    retry: RetryPolicy,
+    tr: Option<&crate::trace::TraceHandle>,
+) -> FaultSimResult {
+    let mut source =
+        ReplaySource::with_cursors(&traces.pages, std::mem::take(&mut ws.cursor_pool));
+    let res = simulate_faulty_source_traced_with(ws, &mut source, cfg, scheduler, model, retry, tr);
+    ws.cursor_pool = source.into_cursors();
+    res
+}
+
 /// Faulty analogue of [`crate::sim::simulate_streamed_with`]: drive a
 /// lazy [`StreamedSource`] (taken by value — single pass) through the
 /// fault-aware merge loop.
@@ -106,6 +127,20 @@ pub fn simulate_faulty_source_with<S: EventSource>(
     model: &mut FaultModel,
     retry: RetryPolicy,
 ) -> FaultSimResult {
+    simulate_faulty_source_traced_with(ws, source, cfg, scheduler, model, retry, None)
+}
+
+/// [`simulate_faulty_source_with`] with an optional trace sink — the
+/// generic traced core every other faulty entry point funnels into.
+pub fn simulate_faulty_source_traced_with<S: EventSource>(
+    ws: &mut SimWorkspace,
+    source: &mut S,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    model: &mut FaultModel,
+    retry: RetryPolicy,
+    tr: Option<&crate::trace::TraceHandle>,
+) -> FaultSimResult {
     let m = source.len();
     ws.reset(m);
     model.reset(m);
@@ -130,6 +165,8 @@ pub fn simulate_faulty_source_with<S: EventSource>(
     let mut fresh_hits = 0u64;
     let mut requests = 0u64;
     let mut ticks = 0u64;
+    let mut ev_count = 0u64; // events applied (merge pops)
+    let mut live_count = m; // pages not yet quarantined
     let mut timeline = Vec::new();
     let window = cfg.timeline_window.unwrap_or(0);
     let mut ring_pos = 0usize;
@@ -148,11 +185,13 @@ pub fn simulate_faulty_source_with<S: EventSource>(
             break;
         }
         // apply events up to (and including) the tick time
+        let ev_t0 = trace::span_clock(tr);
         while let Some(&Reverse((OrdF64(et), kind, page))) = ws.heap.peek() {
             if et > next_tick {
                 break;
             }
             ws.heap.pop();
+            ev_count += 1;
             let i = page as usize;
             // one live heap entry per page: the popped entry IS the
             // page's frontier
@@ -196,6 +235,7 @@ pub fn simulate_faulty_source_with<S: EventSource>(
                         };
                     if keep {
                         scheduler.on_cis(i, et);
+                        trace::emit(tr, || TraceEvent::Cis { t: et, page });
                     }
                 }
             }
@@ -205,9 +245,11 @@ pub fn simulate_faulty_source_with<S: EventSource>(
                 ws.heap.push(Reverse((OrdF64(nt), nk, page)));
             }
         }
+        trace::span_observe(tr, SpanKind::Events, ev_t0);
         // fetch attempt at the tick: a due retry outranks the scheduler
         t = next_tick;
         ticks += 1;
+        let retry_t0 = trace::span_clock(tr);
         let mut is_retry = false;
         let mut target: Option<usize> = None;
         while let Some(&Reverse((OrdF64(due), page))) = retry_heap.peek() {
@@ -226,16 +268,23 @@ pub fn simulate_faulty_source_with<S: EventSource>(
             target = Some(i);
             break;
         }
+        trace::span_observe(tr, SpanKind::Retry, retry_t0);
         if target.is_none() {
+            let sel_t0 = trace::span_clock(tr);
             target = scheduler.select(t);
+            trace::span_observe(tr, SpanKind::Select, sel_t0);
         }
         match target {
-            None => stats.idle_ticks += 1,
+            None => {
+                stats.idle_ticks += 1;
+                trace::emit(tr, || TraceEvent::Idle { t });
+            }
             Some(i) if quarantined[i] => {
                 // the scheduler re-picked a removed page: the tick is
                 // forfeited (counted, not crashed) — degraded mode
                 debug_assert!(!is_retry);
                 stats.forfeited_ticks += 1;
+                trace::emit(tr, || TraceEvent::Forfeit { t, page: i as u32 });
             }
             Some(i) => {
                 debug_assert!(i < m);
@@ -249,11 +298,17 @@ pub fn simulate_faulty_source_with<S: EventSource>(
                         stats.successes += 1;
                         consec_failures[i] = 0;
                         in_retry[i] = false; // cancel any pending retry
-                        scheduler.on_fetch_observed(i, t, ws.changed[i]);
+                        let was_changed = ws.changed[i];
+                        scheduler.on_fetch_observed(i, t, was_changed);
                         ws.changed[i] = false;
                         ws.last_crawl[i] = t;
                         ws.crawl_counts[i] += 1;
                         scheduler.on_crawl(i, t);
+                        trace::emit(tr, || TraceEvent::Crawl {
+                            t,
+                            page: i as u32,
+                            changed: was_changed,
+                        });
                     }
                     outcome => {
                         // failed attempt: the tick is spent, freshness
@@ -265,6 +320,11 @@ pub fn simulate_faulty_source_with<S: EventSource>(
                             CrawlOutcome::Success => unreachable!(),
                         }
                         scheduler.on_crawl_failed(i, t, outcome);
+                        trace::emit(tr, || TraceEvent::CrawlFailed {
+                            t,
+                            page: i as u32,
+                            outcome: outcome as u8,
+                        });
                         let quarantine = if outcome == CrawlOutcome::Gone {
                             true // permanently dead: never retry
                         } else {
@@ -274,6 +334,11 @@ pub fn simulate_faulty_source_with<S: EventSource>(
                                     in_retry[i] = true;
                                     retry_at[i] = t + d;
                                     retry_heap.push(Reverse((OrdF64(t + d), i as u32)));
+                                    trace::emit(tr, || TraceEvent::Retry {
+                                        t,
+                                        page: i as u32,
+                                        due: t + d,
+                                    });
                                     false
                                 }
                                 None => true, // attempt budget spent
@@ -283,12 +348,15 @@ pub fn simulate_faulty_source_with<S: EventSource>(
                             quarantined[i] = true;
                             in_retry[i] = false;
                             stats.quarantined += 1;
+                            live_count -= 1;
                             scheduler.on_page_removed(i, t);
+                            trace::emit(tr, || TraceEvent::Quarantine { t, page: i as u32 });
                         }
                     }
                 }
             }
         }
+        trace::progress(tr, t, cfg.horizon, ev_count, live_count);
         if window > 0 && !ws.ring.is_empty() {
             timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
         }
@@ -315,11 +383,22 @@ pub fn simulate_faulty_source_with<S: EventSource>(
         }
     }
 
-    debug_assert_eq!(
-        stats.successes + stats.failures() + stats.forfeited_ticks + stats.idle_ticks,
-        ticks,
-        "bandwidth conservation: every tick is a success, a failure, a forfeit or idle"
+    // invariant checks (debug builds): on violation the flight
+    // recorder's last events are dumped to stderr before the panic, so
+    // the decision history leading up to the corruption is preserved
+    trace::debug_check(
+        stats.successes + stats.failures() + stats.forfeited_ticks + stats.idle_ticks == ticks,
+        tr,
+        "bandwidth conservation: every tick is a success, a failure, a forfeit or idle",
     );
+    if cfg!(debug_assertions) {
+        let q = quarantined.iter().filter(|&&x| x).count();
+        trace::debug_check(
+            stats.quarantined == q as u64 && live_count == m - q,
+            tr,
+            "quarantine arithmetic: counter, flag population and live count must agree",
+        );
+    }
 
     FaultSimResult {
         sim: SimResult {

@@ -39,7 +39,8 @@
 pub mod engine;
 
 pub use engine::{
-    simulate_faulty, simulate_faulty_streamed_with, simulate_faulty_with, FaultSimResult,
+    simulate_faulty, simulate_faulty_source_traced_with, simulate_faulty_streamed_with,
+    simulate_faulty_traced_with, simulate_faulty_with, FaultSimResult,
 };
 
 use crate::error::Error;
@@ -458,6 +459,23 @@ impl FaultStats {
             self.failures() as f64 / self.attempts as f64
         }
     }
+
+    /// Publish the ledger into a metrics registry under the `fault_`
+    /// prefix. Counters *add* (repetition loops accumulate across
+    /// runs); the wasted-bandwidth gauge is overwritten with this
+    /// ledger's value.
+    pub fn export(&self, registry: &crate::metrics::Registry) {
+        registry.counter("fault_attempts").add(self.attempts);
+        registry.counter("fault_successes").add(self.successes);
+        registry.counter("fault_transient_errors").add(self.transient_errors);
+        registry.counter("fault_timeouts").add(self.timeouts);
+        registry.counter("fault_gone").add(self.gone);
+        registry.counter("fault_retries").add(self.retries);
+        registry.counter("fault_quarantined").add(self.quarantined);
+        registry.counter("fault_forfeited_ticks").add(self.forfeited_ticks);
+        registry.counter("fault_idle_ticks").add(self.idle_ticks);
+        registry.gauge("fault_wasted_fraction").set(self.wasted_fraction());
+    }
 }
 
 /// Politeness-style decorator that reroutes picks away from hosts
@@ -549,6 +567,10 @@ impl<S: CrawlScheduler> CrawlScheduler for OutageAwareScheduler<S> {
 
     fn on_params_changed(&mut self, page: usize, params: &crate::params::PageParams, t: f64) {
         self.inner.on_params_changed(page, params, t);
+    }
+
+    fn attach_trace(&mut self, tr: crate::trace::TraceHandle) {
+        self.inner.attach_trace(tr);
     }
 
     fn name(&self) -> String {

@@ -61,6 +61,10 @@
 //!   divergence guardrails).
 //! - [`dataset`] — semi-synthetic stand-in for the (non-public)
 //!   Kolobov et al. dataset.
+//! - [`trace`] — sim-time flight recorder and decision-trace layer:
+//!   per-shard ring-buffer event log ([`trace::FlightRecorder`]) with
+//!   JSONL exposition, engine-phase span timing into
+//!   [`metrics::Registry`], and dump-on-violation diagnostics.
 //! - [`coordinator`] — Algorithm-1 crawler drivers behind
 //!   [`CrawlerBuilder`]: exact argmax, the §5.2 lazy/tiered scheduler,
 //!   N-way sharding, the threaded streaming pipeline, politeness.
@@ -91,6 +95,7 @@ pub mod solver;
 pub mod special;
 pub mod stats;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 
 pub use coordinator::{CrawlerBuilder, Knowledge, Strategy};
@@ -100,6 +105,7 @@ pub use params::{DerivedParams, PageParams};
 pub use policy::{PolicyKind, PolicyUnderTest};
 pub use scenario::{Scenario, WorldEvent};
 pub use sched::{CrawlScheduler, PageTracker};
+pub use trace::{FlightRecorder, TraceEvent, TraceHandle, TraceSink};
 
 mod app;
 pub use app::run_cli;

@@ -55,12 +55,15 @@ pub struct DurationHisto {
     count: AtomicU64,
 }
 
-const HISTO_BUCKETS: usize = 25; // 2^i µs, i=0..24
+const HISTO_BUCKETS: usize = 25; // 2^i µs, i=0..24, plus one overflow slot
 
 impl Default for DurationHisto {
     fn default() -> Self {
         Self {
-            buckets: (0..HISTO_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            // one extra slot past the largest finite bucket: durations
+            // beyond ~17s saturate there instead of aliasing into the
+            // top power-of-two bucket
+            buckets: (0..=HISTO_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             sum_ns: AtomicU64::new(0),
             count: AtomicU64::new(0),
         }
@@ -68,10 +71,11 @@ impl Default for DurationHisto {
 }
 
 impl DurationHisto {
-    /// Record a duration.
+    /// Record a duration. Durations past the largest finite bucket
+    /// edge (2^25 µs ≈ 33.5s) land in a dedicated overflow slot.
     pub fn observe(&self, d: std::time::Duration) {
         let us = d.as_micros() as u64;
-        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(HISTO_BUCKETS - 1);
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(HISTO_BUCKETS);
         self.buckets[b].fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -112,8 +116,11 @@ impl DurationHisto {
         let target = (q.clamp(0.0, 1.0) * n as f64).ceil();
         let masses = self.buckets.iter().map(|b| b.load(Ordering::Relaxed) as f64);
         match crate::stats::cum_mass_bucket(masses, target) {
-            Some((b, _)) => (1u64 << (b + 1)) as f64 / 1e6,
-            None => (1u64 << HISTO_BUCKETS) as f64 / 1e6,
+            Some((b, _)) if b < HISTO_BUCKETS => (1u64 << (b + 1)) as f64 / 1e6,
+            // the target mass sits in the overflow slot: the true
+            // duration has no finite bucket edge, so saturate instead
+            // of reporting the aliased top edge
+            _ => f64::INFINITY,
         }
     }
 }
@@ -219,6 +226,22 @@ mod tests {
         let p99 = h.quantile_s(0.99);
         assert!(p50 <= p99);
         assert!(p99 >= 0.01, "p99 {p99} should cover the 10ms sample");
+    }
+
+    #[test]
+    fn histogram_overflow_saturates_instead_of_aliasing() {
+        let h = DurationHisto::default();
+        // 60s > 2^25 µs: must land in the overflow slot, not the top
+        // finite bucket
+        h.observe(std::time::Duration::from_secs(60));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_s(0.99).is_infinite());
+        // a duration inside the top finite bucket still reports its
+        // finite upper edge
+        let h2 = DurationHisto::default();
+        h2.observe(std::time::Duration::from_secs(20)); // in [2^24, 2^25) µs
+        assert!(h2.quantile_s(0.99).is_finite());
+        assert!((h2.quantile_s(0.99) - (1u64 << 25) as f64 / 1e6).abs() < 1e-9);
     }
 
     #[test]

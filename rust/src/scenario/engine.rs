@@ -45,6 +45,7 @@ use crate::sim::engine::{BandwidthSchedule, SimConfig, SimResult};
 use crate::sim::engine::{KIND_CHANGE, KIND_CIS, KIND_REQUEST};
 use crate::sim::events::{generate_page_trace_from, CisDelay, EventTraces, PageTrace};
 use crate::sim::source::PageEventSource;
+use crate::trace::{self, world_kind, SpanKind, TraceEvent};
 use crate::util::OrdF64;
 
 /// Heap entry: `(time, kind, page, stream version)`. The version is a
@@ -293,6 +294,7 @@ fn apply_world(
     scenario: &Scenario,
     horizon: f64,
     serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
 ) {
     let tw = ev.t;
     match &ev.event {
@@ -320,6 +322,7 @@ fn apply_world(
             ws.pages[slot] =
                 generate_page_trace_from(params, tw, horizon, scenario.delay(), &mut rng);
             ws.stats.births += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::BORN, page: slot as u32 });
             scheduler.on_page_added(slot, params, tw);
             if let Some(sv) = serving {
                 sv.on_page_added(slot, params);
@@ -349,6 +352,7 @@ fn apply_world(
             ws.pages[i].requests.truncate(c[2]);
             ws.free.push(i);
             ws.stats.retirements += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::RETIRED, page: i as u32 });
             scheduler.on_page_removed(i, tw);
         }
         WorldEvent::ParamsChanged { page, params } => {
@@ -368,6 +372,7 @@ fn apply_world(
             ws.pages[i].requests.extend(fresh.requests);
             ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
             ws.stats.param_shifts += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::PARAMS, page: i as u32 });
             scheduler.on_params_changed(i, params, tw);
             push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], i as u32, ws.stream_ver[i]);
         }
@@ -400,6 +405,7 @@ fn apply_world(
             ws.pages[i].cis.extend(cis);
             ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
             ws.stats.quality_shifts += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::QUALITY, page: i as u32 });
             // the scheduler is NOT notified: its beliefs go stale
             push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], i as u32, ws.stream_ver[i]);
         }
@@ -425,6 +431,15 @@ fn apply_world(
                 }
             }
             ws.stats.outages += 1;
+            trace::emit(tr, || TraceEvent::World {
+                t: tw,
+                kind: world_kind::OUTAGE,
+                // page = first named slot; u32::MAX marks a global blackout
+                page: match pages {
+                    PageSet::All => u32::MAX,
+                    PageSet::Pages(list) => list.first().map_or(u32::MAX, |&p| p as u32),
+                },
+            });
         }
         // folded into the effective bandwidth schedule before the run
         WorldEvent::BandwidthChange { .. } => {}
@@ -456,7 +471,7 @@ pub fn simulate_scenario_with(
     scenario: &Scenario,
     scheduler: &mut dyn CrawlScheduler,
 ) -> SimResult {
-    simulate_scenario_served_core(ws, traces, cfg, scenario, scheduler, None)
+    simulate_scenario_served_core(ws, traces, cfg, scenario, scheduler, None, None)
 }
 
 /// [`simulate_scenario_with`] with a serving layer attached: user
@@ -472,7 +487,23 @@ pub fn simulate_scenario_served_with(
     scheduler: &mut dyn CrawlScheduler,
     serving: &mut ServingSession,
 ) -> SimResult {
-    simulate_scenario_served_core(ws, traces, cfg, scenario, scheduler, Some(serving))
+    simulate_scenario_served_core(ws, traces, cfg, scenario, scheduler, Some(serving), None)
+}
+
+/// [`simulate_scenario_served_with`] with both the serving layer and
+/// the trace sink optional — the fully-general dynamic-world entry
+/// point. `tr = None` is branch-for-branch the untraced engine (the
+/// handle is only ever *read*; pinned by `tests/trace_parity.rs`).
+pub fn simulate_scenario_traced_with(
+    ws: &mut ScenarioWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
+) -> SimResult {
+    simulate_scenario_served_core(ws, traces, cfg, scenario, scheduler, serving, tr)
 }
 
 /// The dynamic-world merge loop with an *optional* serving layer —
@@ -485,6 +516,7 @@ fn simulate_scenario_served_core(
     scenario: &Scenario,
     scheduler: &mut dyn CrawlScheduler,
     mut serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
 ) -> SimResult {
     let m0 = traces.pages.len();
     assert_eq!(
@@ -512,6 +544,7 @@ fn simulate_scenario_served_core(
     let mut fresh_hits = 0u64;
     let mut requests = 0u64;
     let mut ticks = 0u64;
+    let mut ev_count = 0u64; // events applied (world + merge pops + serves)
     let mut timeline = Vec::new();
     let window = cfg.timeline_window.unwrap_or(0);
     let mut ring_pos = 0usize;
@@ -534,6 +567,7 @@ fn simulate_scenario_served_core(
         // time, in time order; world events precede trace events at
         // equal times (and keep script order among themselves); user
         // requests serve after both at exact ties
+        let ev_t0 = trace::span_clock(tr);
         loop {
             let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
             let te = match ws.heap.peek() {
@@ -549,8 +583,10 @@ fn simulate_scenario_served_core(
                     scenario,
                     cfg.horizon,
                     serving.as_deref_mut(),
+                    tr,
                 );
                 wc += 1;
+                ev_count += 1;
                 continue;
             }
             if let Some(sv) = serving.as_deref_mut() {
@@ -558,7 +594,14 @@ fn simulate_scenario_served_core(
                 if ts <= next_tick && ts < te && ts < tw {
                     let (st, sp) = sv.pop().expect("pending request");
                     let live = sp < ws.live.len() && ws.live[sp];
-                    sv.serve(sp, st, live);
+                    let fresh = sv.serve(sp, st, live);
+                    ev_count += 1;
+                    trace::emit(tr, || TraceEvent::Serve {
+                        t: st,
+                        page: sp as u32,
+                        fresh: fresh == Some(true),
+                        live: fresh.is_some(),
+                    });
                     continue;
                 }
             }
@@ -572,6 +615,7 @@ fn simulate_scenario_served_core(
             if ver != ws.stream_ver[i] {
                 continue; // stale entry: the page retired or regenerated
             }
+            ev_count += 1;
             match kind {
                 KIND_CHANGE => {
                     ws.changed[i] = true;
@@ -616,6 +660,7 @@ fn simulate_scenario_served_core(
                             ws.stats.cis_suppressed += 1;
                         } else {
                             scheduler.on_cis(i, et);
+                            trace::emit(tr, || TraceEvent::Cis { t: et, page });
                         }
                     }
                     ws.cursors[i][1] += 1;
@@ -623,17 +668,23 @@ fn simulate_scenario_served_core(
             }
             push_next(&mut ws.heap, &ws.pages[i], &ws.cursors[i], page, ver);
         }
+        trace::span_observe(tr, SpanKind::Events, ev_t0);
         // crawl at the tick
         t = next_tick;
         ticks += 1;
-        if let Some(i) = scheduler.select(t) {
+        let sel_t0 = trace::span_clock(tr);
+        let pick = scheduler.select(t);
+        trace::span_observe(tr, SpanKind::Select, sel_t0);
+        if let Some(i) = pick {
             debug_assert!(i < ws.live.len());
             if ws.live[i] {
-                scheduler.on_fetch_observed(i, t, ws.changed[i]);
+                let was_changed = ws.changed[i];
+                scheduler.on_fetch_observed(i, t, was_changed);
                 ws.changed[i] = false;
                 ws.last_crawl[i] = t;
                 ws.crawl_counts[i] += 1;
                 scheduler.on_crawl(i, t);
+                trace::emit(tr, || TraceEvent::Crawl { t, page: i as u32, changed: was_changed });
                 if let Some(sv) = serving.as_deref_mut() {
                     sv.on_crawl(i);
                 }
@@ -645,8 +696,10 @@ fn simulate_scenario_served_core(
                 // churn) simply wastes the crawl — exactly what a
                 // static plan does against a dead URL in production.
                 ws.stats.stale_picks += 1;
+                trace::emit(tr, || TraceEvent::Forfeit { t, page: i as u32 });
             }
         }
+        trace::progress(tr, t, cfg.horizon, ev_count, ws.live.len() - ws.free.len());
         if window > 0 && !ws.ring.is_empty() {
             timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
         }
@@ -666,7 +719,13 @@ fn simulate_scenario_served_core(
             if ts.is_finite() && ts < tw && ts < te {
                 let (st, sp) = sv.pop().expect("pending request");
                 let live = sp < ws.live.len() && ws.live[sp];
-                sv.serve(sp, st, live);
+                let fresh = sv.serve(sp, st, live);
+                trace::emit(tr, || TraceEvent::Serve {
+                    t: st,
+                    page: sp as u32,
+                    fresh: fresh == Some(true),
+                    live: fresh.is_some(),
+                });
                 continue;
             }
         }
@@ -680,6 +739,7 @@ fn simulate_scenario_served_core(
                     scenario,
                     cfg.horizon,
                     serving.as_deref_mut(),
+                    tr,
                 );
             }
             wc += 1;
@@ -760,6 +820,7 @@ fn apply_world_streamed(
     scenario: &Scenario,
     horizon: f64,
     serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
 ) {
     let tw = ev.t;
     let delay = scenario.delay();
@@ -788,6 +849,7 @@ fn apply_world_streamed(
             // (explicit slot lists) cannot name the unborn
             ws.cis_off_until[slot] = ws.global_off_until;
             ws.stats.births += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::BORN, page: slot as u32 });
             scheduler.on_page_added(slot, params, tw);
             if let Some(sv) = serving {
                 sv.on_page_added(slot, params);
@@ -810,6 +872,7 @@ fn apply_world_streamed(
             ws.lazy[i].kill();
             ws.free.push(i);
             ws.stats.retirements += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::RETIRED, page: i as u32 });
             scheduler.on_page_removed(i, tw);
         }
         WorldEvent::ParamsChanged { page, params } => {
@@ -824,6 +887,7 @@ fn apply_world_streamed(
             ws.lazy[i] = PageEventSource::new(params, tw, horizon, delay, &mut rng);
             ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
             ws.stats.param_shifts += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::PARAMS, page: i as u32 });
             scheduler.on_params_changed(i, params, tw);
             if let Some((t, k)) = next_streamed(ws, i, horizon, delay) {
                 ws.heap.push(Reverse((OrdF64(t), k, i as u32, ws.stream_ver[i])));
@@ -845,6 +909,7 @@ fn apply_world_streamed(
             ws.lazy[i].shift_cis_quality(*lam, *nu, tw, horizon, &mut rng);
             ws.stream_ver[i] = ws.stream_ver[i].wrapping_add(1);
             ws.stats.quality_shifts += 1;
+            trace::emit(tr, || TraceEvent::World { t: tw, kind: world_kind::QUALITY, page: i as u32 });
             // the scheduler is NOT notified: its beliefs go stale
             if let Some((t, k)) = next_streamed(ws, i, horizon, delay) {
                 ws.heap.push(Reverse((OrdF64(t), k, i as u32, ws.stream_ver[i])));
@@ -872,6 +937,15 @@ fn apply_world_streamed(
                 }
             }
             ws.stats.outages += 1;
+            trace::emit(tr, || TraceEvent::World {
+                t: tw,
+                kind: world_kind::OUTAGE,
+                // page = first named slot; u32::MAX marks a global blackout
+                page: match pages {
+                    PageSet::All => u32::MAX,
+                    PageSet::Pages(list) => list.first().map_or(u32::MAX, |&p| p as u32),
+                },
+            });
         }
         // folded into the effective bandwidth schedule before the run
         WorldEvent::BandwidthChange { .. } => {}
@@ -906,7 +980,7 @@ pub fn simulate_scenario_streamed_with(
     trace_seed: u64,
     scheduler: &mut dyn CrawlScheduler,
 ) -> crate::Result<SimResult> {
-    simulate_scenario_streamed_served_core(ws, cfg, scenario, trace_seed, scheduler, None)
+    simulate_scenario_streamed_served_core(ws, cfg, scenario, trace_seed, scheduler, None, None)
 }
 
 /// [`simulate_scenario_streamed_with`] with a serving layer attached
@@ -927,7 +1001,23 @@ pub fn simulate_scenario_streamed_served_with(
         trace_seed,
         scheduler,
         Some(serving),
+        None,
     )
+}
+
+/// [`simulate_scenario_streamed_with`] with both the serving layer and
+/// the trace sink optional (see [`simulate_scenario_traced_with`] for
+/// the `tr = None` parity guarantee).
+pub fn simulate_scenario_streamed_traced_with(
+    ws: &mut ScenarioWorkspace,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    trace_seed: u64,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
+) -> crate::Result<SimResult> {
+    simulate_scenario_streamed_served_core(ws, cfg, scenario, trace_seed, scheduler, serving, tr)
 }
 
 /// Streamed dynamic-world merge loop with an *optional* serving layer
@@ -940,6 +1030,7 @@ fn simulate_scenario_streamed_served_core(
     trace_seed: u64,
     scheduler: &mut dyn CrawlScheduler,
     mut serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
 ) -> crate::Result<SimResult> {
     scenario.delay().validate()?;
     let delay = scenario.delay();
@@ -958,6 +1049,7 @@ fn simulate_scenario_streamed_served_core(
     let mut fresh_hits = 0u64;
     let mut requests = 0u64;
     let mut ticks = 0u64;
+    let mut ev_count = 0u64; // events applied (world + merge pops + serves)
     let mut timeline = Vec::new();
     let window = cfg.timeline_window.unwrap_or(0);
     let mut ring_pos = 0usize;
@@ -979,6 +1071,7 @@ fn simulate_scenario_streamed_served_core(
         // world + trace events up to (and including) the tick time, in
         // time order; world events precede trace events at equal
         // times; user requests serve after both at exact ties
+        let ev_t0 = trace::span_clock(tr);
         loop {
             let tw = world.get(wc).map(|e| e.t).unwrap_or(f64::INFINITY);
             let te = match ws.heap.peek() {
@@ -994,8 +1087,10 @@ fn simulate_scenario_streamed_served_core(
                     scenario,
                     cfg.horizon,
                     serving.as_deref_mut(),
+                    tr,
                 );
                 wc += 1;
+                ev_count += 1;
                 continue;
             }
             if let Some(sv) = serving.as_deref_mut() {
@@ -1003,7 +1098,14 @@ fn simulate_scenario_streamed_served_core(
                 if ts <= next_tick && ts < te && ts < tw {
                     let (st, sp) = sv.pop().expect("pending request");
                     let live = sp < ws.live.len() && ws.live[sp];
-                    sv.serve(sp, st, live);
+                    let fresh = sv.serve(sp, st, live);
+                    ev_count += 1;
+                    trace::emit(tr, || TraceEvent::Serve {
+                        t: st,
+                        page: sp as u32,
+                        fresh: fresh == Some(true),
+                        live: fresh.is_some(),
+                    });
                     continue;
                 }
             }
@@ -1017,6 +1119,7 @@ fn simulate_scenario_streamed_served_core(
             if ver != ws.stream_ver[i] {
                 continue; // stale entry: the page retired or re-seeded
             }
+            ev_count += 1;
             match kind {
                 KIND_CHANGE => {
                     ws.changed[i] = true;
@@ -1060,6 +1163,7 @@ fn simulate_scenario_streamed_served_core(
                         };
                         if keep {
                             scheduler.on_cis(i, et);
+                            trace::emit(tr, || TraceEvent::Cis { t: et, page });
                         }
                     }
                 }
@@ -1069,24 +1173,32 @@ fn simulate_scenario_streamed_served_core(
                 ws.heap.push(Reverse((OrdF64(nt), nk, page, ver)));
             }
         }
+        trace::span_observe(tr, SpanKind::Events, ev_t0);
         // crawl at the tick
         t = next_tick;
         ticks += 1;
-        if let Some(i) = scheduler.select(t) {
+        let sel_t0 = trace::span_clock(tr);
+        let pick = scheduler.select(t);
+        trace::span_observe(tr, SpanKind::Select, sel_t0);
+        if let Some(i) = pick {
             debug_assert!(i < ws.live.len());
             if ws.live[i] {
-                scheduler.on_fetch_observed(i, t, ws.changed[i]);
+                let was_changed = ws.changed[i];
+                scheduler.on_fetch_observed(i, t, was_changed);
                 ws.changed[i] = false;
                 ws.last_crawl[i] = t;
                 ws.crawl_counts[i] += 1;
                 scheduler.on_crawl(i, t);
+                trace::emit(tr, || TraceEvent::Crawl { t, page: i as u32, changed: was_changed });
                 if let Some(sv) = serving.as_deref_mut() {
                     sv.on_crawl(i);
                 }
             } else {
                 ws.stats.stale_picks += 1;
+                trace::emit(tr, || TraceEvent::Forfeit { t, page: i as u32 });
             }
         }
+        trace::progress(tr, t, cfg.horizon, ev_count, ws.live.len() - ws.free.len());
         if window > 0 && !ws.ring.is_empty() {
             timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
         }
@@ -1105,7 +1217,13 @@ fn simulate_scenario_streamed_served_core(
             if ts.is_finite() && ts < tw && ts < te {
                 let (st, sp) = sv.pop().expect("pending request");
                 let live = sp < ws.live.len() && ws.live[sp];
-                sv.serve(sp, st, live);
+                let fresh = sv.serve(sp, st, live);
+                trace::emit(tr, || TraceEvent::Serve {
+                    t: st,
+                    page: sp as u32,
+                    fresh: fresh == Some(true),
+                    live: fresh.is_some(),
+                });
                 continue;
             }
         }
@@ -1119,6 +1237,7 @@ fn simulate_scenario_streamed_served_core(
                     scenario,
                     cfg.horizon,
                     serving.as_deref_mut(),
+                    tr,
                 );
             }
             wc += 1;

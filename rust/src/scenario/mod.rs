@@ -44,8 +44,9 @@ pub mod generators;
 
 pub use engine::{
     simulate_scenario, simulate_scenario_served_with, simulate_scenario_streamed,
-    simulate_scenario_streamed_served_with, simulate_scenario_streamed_with,
-    simulate_scenario_with, ScenarioStats, ScenarioWorkspace,
+    simulate_scenario_streamed_served_with, simulate_scenario_streamed_traced_with,
+    simulate_scenario_streamed_with, simulate_scenario_traced_with, simulate_scenario_with,
+    ScenarioStats, ScenarioWorkspace,
 };
 
 use crate::params::PageParams;

@@ -150,6 +150,16 @@ pub trait CrawlScheduler {
     /// Page to crawl at tick time `t` (`None` = idle tick).
     fn select(&mut self, t: f64) -> Option<usize>;
 
+    /// Attach a trace handle ([`crate::trace::TraceHandle`]) so the
+    /// scheduler can emit decision events (argmax stats, vetoes,
+    /// trust-gate flips). Tracing is strictly observational: attaching
+    /// a handle must not change any pick, belief, or RNG draw.
+    /// Default: no-op (most schedulers emit nothing themselves —
+    /// engine-side events still cover them).
+    fn attach_trace(&mut self, tr: crate::trace::TraceHandle) {
+        let _ = tr;
+    }
+
     /// Policy name for reports.
     fn name(&self) -> String {
         "scheduler".into()
@@ -189,6 +199,9 @@ impl<S: CrawlScheduler + ?Sized> CrawlScheduler for Box<S> {
     }
     fn select(&mut self, t: f64) -> Option<usize> {
         (**self).select(t)
+    }
+    fn attach_trace(&mut self, tr: crate::trace::TraceHandle) {
+        (**self).attach_trace(tr)
     }
     fn name(&self) -> String {
         (**self).name()

@@ -170,6 +170,21 @@ impl ServingMetrics {
         }
     }
 
+    /// Publish the serving summary into a metrics registry under the
+    /// `serving_` prefix. Counters *add* (repetition loops accumulate
+    /// across runs); the staleness gauges are overwritten with this
+    /// summary's values.
+    pub fn export(&self, registry: &crate::metrics::Registry) {
+        registry.counter("serving_served").add(self.served);
+        registry.counter("serving_fresh").add(self.fresh_serves);
+        registry.counter("serving_stale").add(self.stale_serves);
+        registry.counter("serving_dead").add(self.dead_serves);
+        registry.gauge("serving_age_mean_seconds").set(self.overall.mean());
+        registry.gauge("serving_age_p50_seconds").set(self.overall.quantile(0.50));
+        registry.gauge("serving_age_p95_seconds").set(self.overall.quantile(0.95));
+        registry.gauge("serving_age_p99_seconds").set(self.overall.quantile(0.99));
+    }
+
     /// Fold `other` into `self` (see [`AgeHisto::merge`] for the
     /// determinism contract).
     pub fn merge(&mut self, other: &ServingMetrics) {

@@ -142,15 +142,20 @@ impl ServingSession {
     /// engine's view of whether a page currently occupies the slot;
     /// requests into retired or never-born slots count as dead serves
     /// and stay out of the age histograms.
-    pub fn serve(&mut self, i: usize, t: f64, live: bool) {
+    ///
+    /// Returns `Some(fresh)` for a live serve and `None` for a dead
+    /// one, so tracing callers can report the outcome without a second
+    /// cache probe. Untraced engines ignore the return value.
+    pub fn serve(&mut self, i: usize, t: f64, live: bool) -> Option<bool> {
         if !live || i >= self.cache.len() {
             self.metrics.record_dead();
-            return;
+            return None;
         }
         let (fresh, age) = self.cache.serve(i, t);
         let qd = self.qdecile.get(i).copied().unwrap_or(0) as usize;
         let pd = if self.m0 == 0 { 0 } else { ((i * DECILES) / self.m0).min(DECILES - 1) };
         self.metrics.record(fresh, age, qd, pd);
+        Some(fresh)
     }
 
     /// The accumulated serving metrics.

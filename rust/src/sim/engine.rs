@@ -410,8 +410,57 @@ pub fn simulate_source_served_with<S: EventSource>(
     source: &mut S,
     cfg: &SimConfig,
     scheduler: &mut dyn CrawlScheduler,
-    mut serving: Option<&mut ServingSession>,
+    serving: Option<&mut ServingSession>,
 ) -> SimResult {
+    simulate_source_served_traced_with(ws, source, cfg, scheduler, serving, None)
+}
+
+/// [`simulate_served_with`] with an optional serving session AND an
+/// optional decision-trace handle (see [`crate::trace`]) — the replay
+/// analogue of [`simulate_streamed_traced_with`].
+pub fn simulate_traced_with(
+    ws: &mut SimWorkspace,
+    traces: &EventTraces,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
+) -> SimResult {
+    let mut source =
+        ReplaySource::with_cursors(&traces.pages, std::mem::take(&mut ws.cursor_pool));
+    let res = simulate_source_served_traced_with(ws, &mut source, cfg, scheduler, serving, tr);
+    ws.cursor_pool = source.into_cursors();
+    res
+}
+
+/// [`simulate_streamed_served_with`] generalized: optional serving
+/// session, optional decision-trace handle.
+pub fn simulate_streamed_traced_with(
+    ws: &mut SimWorkspace,
+    mut source: StreamedSource,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
+) -> SimResult {
+    simulate_source_served_traced_with(ws, &mut source, cfg, scheduler, serving, tr)
+}
+
+/// The full merge engine: optional serving layer and optional trace
+/// handle threaded through the loop. Tracing is strictly observational
+/// — `tr` gates only event emission, wall-clock span timing and the
+/// `--verbose` progress meter; it draws no RNG, adds no events to the
+/// merge and never changes a pick, so traced and untraced runs are
+/// bit-identical (pinned by `tests/trace_parity.rs`).
+pub fn simulate_source_served_traced_with<S: EventSource>(
+    ws: &mut SimWorkspace,
+    source: &mut S,
+    cfg: &SimConfig,
+    scheduler: &mut dyn CrawlScheduler,
+    mut serving: Option<&mut ServingSession>,
+    tr: Option<&crate::trace::TraceHandle>,
+) -> SimResult {
+    use crate::trace::{self, SpanKind, TraceEvent};
     let m = source.len();
     ws.reset(m);
     scheduler.on_start(m);
@@ -425,6 +474,7 @@ pub fn simulate_source_served_with<S: EventSource>(
     let mut fresh_hits = 0u64;
     let mut requests = 0u64;
     let mut ticks = 0u64;
+    let mut ev_count = 0u64; // events applied (merge pops + serves)
     let mut timeline = Vec::new();
     // rolling window of request freshness bits
     let window = cfg.timeline_window.unwrap_or(0);
@@ -446,6 +496,7 @@ pub fn simulate_source_served_with<S: EventSource>(
         // apply events up to (and including) the tick time; pending
         // user requests interleave by time, serving after any trace
         // event they tie with
+        let ev_t0 = trace::span_clock(tr);
         loop {
             if let Some(sv) = serving.as_deref_mut() {
                 let ts = sv.next_time();
@@ -456,7 +507,14 @@ pub fn simulate_source_served_with<S: EventSource>(
                     };
                     if ts < te {
                         let (st, sp) = sv.pop().expect("pending request");
-                        sv.serve(sp, st, true);
+                        let fresh = sv.serve(sp, st, true);
+                        ev_count += 1;
+                        trace::emit(tr, || TraceEvent::Serve {
+                            t: st,
+                            page: sp as u32,
+                            fresh: fresh == Some(true),
+                            live: fresh.is_some(),
+                        });
                         continue;
                     }
                 }
@@ -469,6 +527,7 @@ pub fn simulate_source_served_with<S: EventSource>(
                 break;
             }
             ws.heap.pop();
+            ev_count += 1;
             let i = page as usize;
             // one live heap entry per page: the popped entry IS the
             // page's frontier
@@ -513,6 +572,7 @@ pub fn simulate_source_served_with<S: EventSource>(
                     };
                     if keep {
                         scheduler.on_cis(i, et);
+                        trace::emit(tr, || TraceEvent::Cis { t: et, page });
                     }
                 }
             }
@@ -522,20 +582,27 @@ pub fn simulate_source_served_with<S: EventSource>(
                 ws.heap.push(Reverse((OrdF64(nt), nk, page)));
             }
         }
+        trace::span_observe(tr, SpanKind::Events, ev_t0);
         // crawl at the tick
         t = next_tick;
         ticks += 1;
-        if let Some(i) = scheduler.select(t) {
+        let sel_t0 = trace::span_clock(tr);
+        let pick = scheduler.select(t);
+        trace::span_observe(tr, SpanKind::Select, sel_t0);
+        if let Some(i) = pick {
             debug_assert!(i < m);
-            scheduler.on_fetch_observed(i, t, ws.changed[i]);
+            let was_changed = ws.changed[i];
+            scheduler.on_fetch_observed(i, t, was_changed);
             ws.changed[i] = false;
             ws.last_crawl[i] = t;
             ws.crawl_counts[i] += 1;
             scheduler.on_crawl(i, t);
+            trace::emit(tr, || TraceEvent::Crawl { t, page: i as u32, changed: was_changed });
             if let Some(sv) = serving.as_deref_mut() {
                 sv.on_crawl(i);
             }
         }
+        trace::progress(tr, t, cfg.horizon, ev_count, m);
         if window > 0 && !ws.ring.is_empty() {
             timeline.push((t, ring_fresh as f64 / ws.ring.len() as f64));
         }
@@ -552,7 +619,13 @@ pub fn simulate_source_served_with<S: EventSource>(
                 };
                 if ts < te {
                     let (st, sp) = sv.pop().expect("pending request");
-                    sv.serve(sp, st, true);
+                    let fresh = sv.serve(sp, st, true);
+                    trace::emit(tr, || TraceEvent::Serve {
+                        t: st,
+                        page: sp as u32,
+                        fresh: fresh == Some(true),
+                        live: fresh.is_some(),
+                    });
                     continue;
                 }
             }

@@ -24,9 +24,10 @@ pub mod source;
 
 pub use engine::{
     simulate, simulate_reference, simulate_served, simulate_served_with,
-    simulate_source_served_with, simulate_source_with, simulate_streamed,
-    simulate_streamed_served_with, simulate_streamed_with, simulate_with, BandwidthSchedule,
-    SimConfig, SimResult, SimWorkspace,
+    simulate_source_served_traced_with, simulate_source_served_with, simulate_source_with,
+    simulate_streamed, simulate_streamed_served_with, simulate_streamed_traced_with,
+    simulate_streamed_with, simulate_traced_with, simulate_with, BandwidthSchedule, SimConfig,
+    SimResult, SimWorkspace,
 };
 pub use events::{generate_page_trace_from, generate_traces, CisDelay, EventTraces, PageTrace};
 pub use source::{EventSource, PageEventSource, ReplaySource, StreamedSource, TraceMode};

@@ -1,0 +1,840 @@
+//! Sim-time flight recorder and decision-trace layer.
+//!
+//! A zero-dependency structured tracing subsystem: engines and
+//! schedulers emit compact [`TraceEvent`]s into a bounded per-shard
+//! ring buffer ([`FlightRecorder`]) through a cloneable
+//! [`TraceHandle`]. The handle is `Option`-gated at every call site —
+//! exactly like the serving session — so the untraced branch structure
+//! is identical to the traced one and crawl-side picks stay
+//! bit-identical whether or not a recorder is attached.
+//!
+//! Three invariants keep tracing observational:
+//!
+//! 1. **No RNG.** Nothing in this module draws random numbers, so the
+//!    engines' jitter/traffic/fault streams are untouched.
+//! 2. **No sim-time feedback.** Events carry sim time but never feed
+//!    back into scheduling; wall-clock span timings go only into
+//!    [`metrics::Registry`] histograms, never into the JSONL log, so
+//!    the drained log is a pure function of (instance, seed, config).
+//! 3. **Bounded memory.** Each shard's ring holds at most `capacity`
+//!    events and overwrites the oldest on overflow; draining walks
+//!    shards in index order, each oldest→newest, which makes the JSONL
+//!    output deterministic and byte-identical across same-seed runs.
+//!
+//! On invariant violation (see [`debug_check`]) the recorder dumps the
+//! last [`DUMP_WINDOW`] events to stderr (or a caller-supplied writer)
+//! before panicking, so the decision history leading up to the failure
+//! is preserved.
+
+use std::io::Write as IoWrite;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::metrics::{DurationHisto, Registry};
+
+/// Events kept in the window written on invariant violation.
+pub const DUMP_WINDOW: usize = 256;
+
+/// Default per-shard ring capacity of a [`FlightRecorder`].
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// World-event kinds recorded by the scenario engine
+/// (`TraceEvent::World { kind, .. }`).
+pub mod world_kind {
+    /// A page was born (possibly into a recycled slot).
+    pub const BORN: u8 = 0;
+    /// A page was retired.
+    pub const RETIRED: u8 = 1;
+    /// A page's change/importance parameters drifted.
+    pub const PARAMS: u8 = 2;
+    /// A page's CIS quality shifted.
+    pub const QUALITY: u8 = 3;
+    /// A CIS outage window toggled.
+    pub const OUTAGE: u8 = 4;
+}
+
+/// One compact sim-time event. All payloads are `Copy` so the ring
+/// buffer stores them inline with no allocation per event.
+///
+/// Times are sim-time seconds; they must be finite for the JSONL
+/// exposition to be valid JSON.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// A change-indicating signal arrived for `page`.
+    Cis { t: f64, page: u32 },
+    /// A crawl was applied to `page`; `changed` is whether the copy
+    /// was stale at crawl time.
+    Crawl { t: f64, page: u32, changed: bool },
+    /// The batched argmax chose `page` with score `value`, after
+    /// scanning `scanned` candidates across `chunks` chunks;
+    /// `early_break` is whether the bound-pruning loop exited before
+    /// visiting every chunk.
+    Decision {
+        t: f64,
+        page: u32,
+        value: f64,
+        chunks: u32,
+        scanned: u32,
+        early_break: bool,
+    },
+    /// The engine vetoed the scheduler's pick of `page`.
+    Veto { t: f64, page: u32 },
+    /// A crawl attempt on `page` failed; `outcome` is the
+    /// `CrawlOutcome` discriminant (1 transient, 2 timeout, 3 gone).
+    CrawlFailed { t: f64, page: u32, outcome: u8 },
+    /// The retry calendar scheduled `page` for re-attempt at `due`.
+    Retry { t: f64, page: u32, due: f64 },
+    /// `page` exhausted its retry budget and was quarantined.
+    Quarantine { t: f64, page: u32 },
+    /// A tick was forfeited: its pick `page` was blocked by an outage.
+    Forfeit { t: f64, page: u32 },
+    /// A tick found nothing crawlable.
+    Idle { t: f64 },
+    /// The learned-knowledge trust gate for `page` transitioned
+    /// (`open` = CIS now trusted / rate projected as positive).
+    TrustGate { t: f64, page: u32, open: bool },
+    /// The learned decorator re-projected `page`'s belief into the
+    /// inner scheduler.
+    Reproject { t: f64, page: u32 },
+    /// A scenario world event of `kind` (see [`world_kind`]) hit
+    /// `page`.
+    World { t: f64, kind: u8, page: u32 },
+    /// A request for `page` was served; `fresh` is cache freshness at
+    /// serve time, `live` whether the page still exists.
+    Serve {
+        t: f64,
+        page: u32,
+        fresh: bool,
+        live: bool,
+    },
+}
+
+impl TraceEvent {
+    /// Stable event name used in the JSONL exposition.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Cis { .. } => "cis",
+            TraceEvent::Crawl { .. } => "crawl",
+            TraceEvent::Decision { .. } => "decision",
+            TraceEvent::Veto { .. } => "veto",
+            TraceEvent::CrawlFailed { .. } => "crawl_failed",
+            TraceEvent::Retry { .. } => "retry",
+            TraceEvent::Quarantine { .. } => "quarantine",
+            TraceEvent::Forfeit { .. } => "forfeit",
+            TraceEvent::Idle { .. } => "idle",
+            TraceEvent::TrustGate { .. } => "trust_gate",
+            TraceEvent::Reproject { .. } => "reproject",
+            TraceEvent::World { .. } => "world",
+            TraceEvent::Serve { .. } => "serve",
+        }
+    }
+
+    /// Sim time the event was recorded at.
+    pub fn time(&self) -> f64 {
+        match *self {
+            TraceEvent::Cis { t, .. }
+            | TraceEvent::Crawl { t, .. }
+            | TraceEvent::Decision { t, .. }
+            | TraceEvent::Veto { t, .. }
+            | TraceEvent::CrawlFailed { t, .. }
+            | TraceEvent::Retry { t, .. }
+            | TraceEvent::Quarantine { t, .. }
+            | TraceEvent::Forfeit { t, .. }
+            | TraceEvent::Idle { t }
+            | TraceEvent::TrustGate { t, .. }
+            | TraceEvent::Reproject { t, .. }
+            | TraceEvent::World { t, .. }
+            | TraceEvent::Serve { t, .. } => t,
+        }
+    }
+
+    /// Append this event's JSONL object (no trailing newline) for
+    /// `shard` to `out`. Floats use Rust's shortest-roundtrip
+    /// `Display`, which is deterministic across runs and platforms.
+    fn write_json(&self, shard: usize, out: &mut String) {
+        use std::fmt::Write;
+        let name = self.name();
+        let _ = write!(out, "{{\"ev\":\"{name}\",\"shard\":{shard}");
+        match *self {
+            TraceEvent::Cis { t, page }
+            | TraceEvent::Veto { t, page }
+            | TraceEvent::Quarantine { t, page }
+            | TraceEvent::Forfeit { t, page }
+            | TraceEvent::Reproject { t, page } => {
+                let _ = write!(out, ",\"t\":{t},\"page\":{page}");
+            }
+            TraceEvent::Crawl { t, page, changed } => {
+                let _ = write!(out, ",\"t\":{t},\"page\":{page},\"changed\":{changed}");
+            }
+            TraceEvent::Decision {
+                t,
+                page,
+                value,
+                chunks,
+                scanned,
+                early_break,
+            } => {
+                let _ = write!(
+                    out,
+                    ",\"t\":{t},\"page\":{page},\"value\":{value},\"chunks\":{chunks},\"scanned\":{scanned},\"early_break\":{early_break}"
+                );
+            }
+            TraceEvent::CrawlFailed { t, page, outcome } => {
+                let _ = write!(out, ",\"t\":{t},\"page\":{page},\"outcome\":{outcome}");
+            }
+            TraceEvent::Retry { t, page, due } => {
+                let _ = write!(out, ",\"t\":{t},\"page\":{page},\"due\":{due}");
+            }
+            TraceEvent::Idle { t } => {
+                let _ = write!(out, ",\"t\":{t}");
+            }
+            TraceEvent::TrustGate { t, page, open } => {
+                let _ = write!(out, ",\"t\":{t},\"page\":{page},\"open\":{open}");
+            }
+            TraceEvent::World { t, kind, page } => {
+                let _ = write!(out, ",\"t\":{t},\"kind\":{kind},\"page\":{page}");
+            }
+            TraceEvent::Serve {
+                t,
+                page,
+                fresh,
+                live,
+            } => {
+                let _ = write!(out, ",\"t\":{t},\"page\":{page},\"fresh\":{fresh},\"live\":{live}");
+            }
+        }
+        out.push('}');
+    }
+}
+
+/// Destination for trace events. Implementations must be cheap to
+/// query when disabled: callers gate event *construction* on
+/// [`TraceSink::enabled`], so the disabled path is a single
+/// well-predicted branch.
+pub trait TraceSink {
+    /// Whether `record` will actually store events. When `false`,
+    /// callers may (and should) skip building the event entirely.
+    fn enabled(&self) -> bool;
+    /// Record one event.
+    fn record(&self, ev: TraceEvent);
+}
+
+/// A sink that drops everything; its disabled path is branch-cheap
+/// (`enabled()` is a constant `false`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    #[inline]
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    #[inline]
+    fn record(&self, _ev: TraceEvent) {}
+}
+
+struct ShardRing {
+    buf: Vec<TraceEvent>,
+    /// Index of the oldest event once the ring is full; 0 before.
+    head: usize,
+    /// Events overwritten by newer ones.
+    dropped: u64,
+}
+
+/// Bounded per-shard ring-buffer event store: fixed capacity per
+/// shard, overwrite-oldest on overflow, drained in deterministic
+/// shard-index order (each shard oldest→newest).
+pub struct FlightRecorder {
+    capacity: usize,
+    shards: Vec<ShardRing>,
+}
+
+impl FlightRecorder {
+    /// Create a recorder with `capacity` events per shard (min 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            shards: Vec::new(),
+        }
+    }
+
+    /// Per-shard ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of shard streams seen so far.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total events currently held (across shards).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.buf.len()).sum()
+    }
+
+    /// Whether no events are held.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.buf.is_empty())
+    }
+
+    /// Total events overwritten by newer ones (across shards).
+    pub fn dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.dropped).sum()
+    }
+
+    /// Append `ev` to `shard`'s ring, overwriting the oldest event if
+    /// the ring is full. Shard streams are created on demand.
+    pub fn push(&mut self, shard: usize, ev: TraceEvent) {
+        if shard >= self.shards.len() {
+            self.shards.resize_with(shard + 1, || ShardRing {
+                buf: Vec::new(),
+                head: 0,
+                dropped: 0,
+            });
+        }
+        let ring = &mut self.shards[shard];
+        if ring.buf.len() < self.capacity {
+            ring.buf.push(ev);
+        } else {
+            ring.buf[ring.head] = ev;
+            ring.head += 1;
+            if ring.head == self.capacity {
+                ring.head = 0;
+            }
+            ring.dropped += 1;
+        }
+    }
+
+    /// All held events in drain order — shard-index order, each shard
+    /// oldest→newest — without consuming them.
+    pub fn snapshot(&self) -> Vec<(usize, TraceEvent)> {
+        let mut out = Vec::with_capacity(self.len());
+        for (s, ring) in self.shards.iter().enumerate() {
+            for &ev in &ring.buf[ring.head..] {
+                out.push((s, ev));
+            }
+            for &ev in &ring.buf[..ring.head] {
+                out.push((s, ev));
+            }
+        }
+        out
+    }
+
+    /// Drain the full log as JSONL text, one event per line, in drain
+    /// order. Same-seed runs produce byte-identical output.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (s, ev) in self.snapshot() {
+            ev.write_json(s, &mut out);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the last `last_n` events (in drain order) to `w` — the
+    /// window dumped on invariant violation.
+    pub fn dump<W: IoWrite>(&self, w: &mut W, last_n: usize) -> std::io::Result<()> {
+        let snap = self.snapshot();
+        let skip = snap.len().saturating_sub(last_n);
+        let mut line = String::new();
+        for (s, ev) in &snap[skip..] {
+            line.clear();
+            ev.write_json(*s, &mut line);
+            writeln!(w, "{line}")?;
+        }
+        Ok(())
+    }
+
+    /// Discard all held events (shard streams are kept).
+    pub fn clear(&mut self) {
+        for ring in &mut self.shards {
+            ring.buf.clear();
+            ring.head = 0;
+            ring.dropped = 0;
+        }
+    }
+}
+
+/// Lock the shared recorder, surviving poison: a panicking engine
+/// thread must not make the flight log unreadable — the ring only
+/// holds `Copy` events, so the poisoned state is structurally valid.
+fn lock_resilient<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Which engine phase a wall-clock span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Scheduler `select` per tick.
+    Select,
+    /// Event merge/pop + apply per tick.
+    Events,
+    /// Learned-knowledge belief re-projection flush.
+    Reproject,
+    /// Retry-calendar maintenance per tick.
+    Retry,
+}
+
+/// Wall-clock span histograms for engine phases, registered into a
+/// [`metrics::Registry`]. Timings never enter the JSONL log (they are
+/// nondeterministic); they only feed the registry's text exposition.
+pub struct EngineSpans {
+    select: Arc<DurationHisto>,
+    events: Arc<DurationHisto>,
+    reproject: Arc<DurationHisto>,
+    retry: Arc<DurationHisto>,
+}
+
+impl EngineSpans {
+    /// Register the four phase histograms in `reg` (names
+    /// `engine_select`, `engine_events`, `engine_reproject`,
+    /// `engine_retry`).
+    pub fn register(reg: &Registry) -> Self {
+        Self {
+            select: reg.histo("engine_select"),
+            events: reg.histo("engine_events"),
+            reproject: reg.histo("engine_reproject"),
+            retry: reg.histo("engine_retry"),
+        }
+    }
+
+    /// The histogram for `kind`.
+    pub fn histo(&self, kind: SpanKind) -> &DurationHisto {
+        match kind {
+            SpanKind::Select => &self.select,
+            SpanKind::Events => &self.events,
+            SpanKind::Reproject => &self.reproject,
+            SpanKind::Retry => &self.retry,
+        }
+    }
+
+    /// Record one span duration.
+    pub fn observe(&self, kind: SpanKind, d: std::time::Duration) {
+        self.histo(kind).observe(d);
+    }
+}
+
+/// Progress telemetry for `--verbose`: one stderr line every `stride`
+/// ticks. The line's sim-time fields (tick, horizon fraction, event
+/// and live-page counts) are deterministic per shard; only the
+/// events/s rate is wall-clock dependent.
+pub struct ProgressMeter {
+    stride: u64,
+    ticks: AtomicU64,
+    start: std::time::Instant,
+}
+
+impl ProgressMeter {
+    /// Create a meter emitting every `stride` ticks (min 1).
+    pub fn new(stride: u64) -> Self {
+        Self {
+            stride: stride.max(1),
+            ticks: AtomicU64::new(0),
+            start: std::time::Instant::now(),
+        }
+    }
+
+    fn tick(&self, shard: usize, t: f64, horizon: f64, events: u64, live: usize) {
+        let n = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.stride != 0 {
+            return;
+        }
+        let frac = if horizon > 0.0 { (t / horizon).clamp(0.0, 1.0) } else { 1.0 };
+        let wall = self.start.elapsed().as_secs_f64().max(1e-9);
+        eprintln!(
+            "[progress s={shard}] t={t:.3}/{horizon:.3} ({:.1}%) events={events} live={live} ({:.0} ev/s)",
+            frac * 100.0,
+            events as f64 / wall
+        );
+    }
+}
+
+/// Cloneable capability handle threaded through engines and
+/// schedulers. Carries an optional shared [`FlightRecorder`] (with
+/// this handle's shard index), optional [`EngineSpans`], and an
+/// optional [`ProgressMeter`] — each independently attachable, so
+/// `--verbose` works without recording and vice versa.
+#[derive(Clone, Default)]
+pub struct TraceHandle {
+    rec: Option<Arc<Mutex<FlightRecorder>>>,
+    shard: usize,
+    spans: Option<Arc<EngineSpans>>,
+    progress: Option<Arc<ProgressMeter>>,
+}
+
+impl std::fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceHandle")
+            .field("shard", &self.shard)
+            .field("recording", &self.rec.is_some())
+            .field("spans", &self.spans.is_some())
+            .field("progress", &self.progress.is_some())
+            .finish()
+    }
+}
+
+impl TraceHandle {
+    /// A handle over a fresh [`FlightRecorder`] with `capacity` events
+    /// per shard, writing to shard 0.
+    pub fn recorder(capacity: usize) -> Self {
+        Self::from_recorder(Arc::new(Mutex::new(FlightRecorder::new(capacity))))
+    }
+
+    /// A handle over an existing shared recorder, writing to shard 0.
+    pub fn from_recorder(rec: Arc<Mutex<FlightRecorder>>) -> Self {
+        Self {
+            rec: Some(rec),
+            shard: 0,
+            spans: None,
+            progress: None,
+        }
+    }
+
+    /// A handle with no recorder attached (spans/progress can still be
+    /// added); `enabled()` is `false`.
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Attach engine-phase span timing, registering histograms in
+    /// `reg`.
+    pub fn with_spans(mut self, reg: &Registry) -> Self {
+        self.spans = Some(Arc::new(EngineSpans::register(reg)));
+        self
+    }
+
+    /// Attach a `--verbose` progress meter emitting every `stride`
+    /// ticks.
+    pub fn with_progress(mut self, stride: u64) -> Self {
+        self.progress = Some(Arc::new(ProgressMeter::new(stride)));
+        self
+    }
+
+    /// A clone of this handle writing to shard `shard` (recorder,
+    /// spans and meter stay shared).
+    pub fn shard(&self, shard: usize) -> Self {
+        let mut h = self.clone();
+        h.shard = shard;
+        h
+    }
+
+    /// This handle's shard index.
+    pub fn shard_index(&self) -> usize {
+        self.shard
+    }
+
+    /// The shared recorder, if one is attached.
+    pub fn recorder_arc(&self) -> Option<Arc<Mutex<FlightRecorder>>> {
+        self.rec.clone()
+    }
+
+    /// Drain the attached recorder's full log as JSONL (empty string
+    /// when no recorder is attached).
+    pub fn drain_jsonl(&self) -> String {
+        match &self.rec {
+            Some(rec) => lock_resilient(rec).to_jsonl(),
+            None => String::new(),
+        }
+    }
+
+    /// Write the last `last_n` recorded events to `w` (no-op without a
+    /// recorder).
+    pub fn dump<W: IoWrite>(&self, w: &mut W, last_n: usize) -> std::io::Result<()> {
+        match &self.rec {
+            Some(rec) => lock_resilient(rec).dump(w, last_n),
+            None => Ok(()),
+        }
+    }
+
+    /// Start a wall-clock span if span timing is attached. Pass the
+    /// result to [`TraceHandle::span_observe`]; when `None`, no clock
+    /// is read at all.
+    #[inline]
+    pub fn span_clock(&self) -> Option<std::time::Instant> {
+        self.spans.as_ref().map(|_| std::time::Instant::now())
+    }
+
+    /// Close a span started with [`TraceHandle::span_clock`].
+    #[inline]
+    pub fn span_observe(&self, kind: SpanKind, t0: Option<std::time::Instant>) {
+        if let (Some(sp), Some(t0)) = (&self.spans, t0) {
+            sp.observe(kind, t0.elapsed());
+        }
+    }
+
+    /// Per-tick progress hook (no-op without a meter).
+    #[inline]
+    pub fn progress(&self, t: f64, horizon: f64, events: u64, live: usize) {
+        if let Some(p) = &self.progress {
+            p.tick(self.shard, t, horizon, events, live);
+        }
+    }
+}
+
+impl TraceSink for TraceHandle {
+    #[inline]
+    fn enabled(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    #[inline]
+    fn record(&self, ev: TraceEvent) {
+        if let Some(rec) = &self.rec {
+            lock_resilient(rec).push(self.shard, ev);
+        }
+    }
+}
+
+// --- Option<&TraceHandle> call-site helpers -------------------------------
+//
+// Engines thread `tr: Option<&TraceHandle>`; these free functions keep
+// every call site a single branch and defer event construction behind
+// the enabled check.
+
+/// Record the event built by `ev` iff a recording handle is attached.
+#[inline]
+pub fn emit(tr: Option<&TraceHandle>, ev: impl FnOnce() -> TraceEvent) {
+    if let Some(h) = tr {
+        if h.enabled() {
+            h.record(ev());
+        }
+    }
+}
+
+/// Start a wall-clock span iff span timing is attached.
+#[inline]
+pub fn span_clock(tr: Option<&TraceHandle>) -> Option<std::time::Instant> {
+    tr.and_then(TraceHandle::span_clock)
+}
+
+/// Close a span started with [`span_clock`].
+#[inline]
+pub fn span_observe(tr: Option<&TraceHandle>, kind: SpanKind, t0: Option<std::time::Instant>) {
+    if let Some(h) = tr {
+        h.span_observe(kind, t0);
+    }
+}
+
+/// Per-tick progress hook.
+#[inline]
+pub fn progress(tr: Option<&TraceHandle>, t: f64, horizon: f64, events: u64, live: usize) {
+    if let Some(h) = tr {
+        h.progress(t, horizon, events, live);
+    }
+}
+
+/// Debug-build invariant check with flight-recorder dump: when `cond`
+/// is false in a debug build, dump the last [`DUMP_WINDOW`] events to
+/// stderr and panic with `msg`. Release builds compile this to
+/// nothing (wrap costly condition computations in
+/// `if cfg!(debug_assertions)` at the call site).
+#[inline]
+pub fn debug_check(cond: bool, tr: Option<&TraceHandle>, msg: &str) {
+    if cfg!(debug_assertions) && !cond {
+        let mut err = std::io::stderr().lock();
+        dump_and_panic(tr, &mut err, msg);
+    }
+}
+
+/// Writer-parameterized variant of [`debug_check`]: the violation
+/// window goes to `w` instead of stderr. Tests use this to capture and
+/// assert on the dumped window.
+pub fn check_or_dump<W: IoWrite>(cond: bool, tr: Option<&TraceHandle>, w: &mut W, msg: &str) {
+    if cfg!(debug_assertions) && !cond {
+        dump_and_panic(tr, w, msg);
+    }
+}
+
+#[cold]
+fn dump_and_panic<W: IoWrite>(tr: Option<&TraceHandle>, w: &mut W, msg: &str) -> ! {
+    if let Some(h) = tr {
+        let _ = writeln!(
+            w,
+            "--- flight recorder: last {DUMP_WINDOW} events before violation ---"
+        );
+        let _ = h.dump(w, DUMP_WINDOW);
+        let _ = w.flush();
+    }
+    panic!("invariant violated: {msg}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(t: f64) -> TraceEvent {
+        TraceEvent::Idle { t }
+    }
+
+    #[test]
+    fn ring_respects_capacity_and_overwrites_oldest() {
+        let mut rec = FlightRecorder::new(8);
+        for k in 0..20 {
+            rec.push(0, idle(f64::from(k)));
+        }
+        assert_eq!(rec.len(), 8);
+        assert_eq!(rec.dropped(), 12);
+        let times: Vec<f64> = rec.snapshot().iter().map(|(_, e)| e.time()).collect();
+        // oldest→newest: 12..=19 survive
+        assert_eq!(times, (12..20).map(f64::from).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_order_is_shard_index_then_oldest_first() {
+        let mut rec = FlightRecorder::new(4);
+        // interleave shards out of order; shard 2 created before shard 1
+        rec.push(2, idle(20.0));
+        rec.push(0, idle(0.0));
+        rec.push(1, idle(10.0));
+        rec.push(0, idle(1.0));
+        rec.push(2, idle(21.0));
+        let got: Vec<(usize, f64)> = rec
+            .snapshot()
+            .iter()
+            .map(|&(s, e)| (s, e.time()))
+            .collect();
+        assert_eq!(
+            got,
+            vec![(0, 0.0), (0, 1.0), (1, 10.0), (2, 20.0), (2, 21.0)]
+        );
+    }
+
+    #[test]
+    fn jsonl_is_one_wellformed_object_per_line() {
+        let mut rec = FlightRecorder::new(16);
+        rec.push(0, TraceEvent::Cis { t: 0.5, page: 3 });
+        rec.push(
+            0,
+            TraceEvent::Decision {
+                t: 1.25,
+                page: 7,
+                value: 0.125,
+                chunks: 2,
+                scanned: 128,
+                early_break: true,
+            },
+        );
+        rec.push(
+            1,
+            TraceEvent::Serve {
+                t: 2.0,
+                page: 9,
+                fresh: false,
+                live: true,
+            },
+        );
+        let text = rec.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            assert!(line.starts_with('{') && line.ends_with('}'), "line {line}");
+            assert!(line.contains("\"ev\":\""), "line {line}");
+            assert!(line.contains("\"shard\":"), "line {line}");
+            assert!(line.contains("\"t\":"), "line {line}");
+        }
+        assert_eq!(
+            lines[0],
+            "{\"ev\":\"cis\",\"shard\":0,\"t\":0.5,\"page\":3}"
+        );
+        assert!(lines[1].contains("\"value\":0.125"));
+        assert!(lines[1].contains("\"early_break\":true"));
+        assert!(lines[2].contains("\"shard\":1"));
+        assert!(lines[2].contains("\"fresh\":false"));
+    }
+
+    #[test]
+    fn null_sink_is_disabled_and_droppy() {
+        let s = NullSink;
+        assert!(!s.enabled());
+        s.record(idle(1.0)); // no-op, no panic
+    }
+
+    #[test]
+    fn handle_records_into_its_shard_and_disabled_handle_is_inert() {
+        let h = TraceHandle::recorder(16);
+        assert!(h.enabled());
+        h.record(idle(0.0));
+        let h1 = h.shard(3);
+        assert_eq!(h1.shard_index(), 3);
+        h1.record(idle(1.0));
+        let snap = match h.recorder_arc() {
+            Some(rec) => lock_resilient(&rec).snapshot(),
+            None => Vec::new(),
+        };
+        assert_eq!(
+            snap.iter().map(|&(s, _)| s).collect::<Vec<_>>(),
+            vec![0, 3]
+        );
+
+        let off = TraceHandle::disabled();
+        assert!(!off.enabled());
+        off.record(idle(2.0)); // no-op
+        assert!(off.drain_jsonl().is_empty());
+        // emit() must not even build the event without a recorder
+        emit(Some(&off), || unreachable!("event built while disabled"));
+        emit(None, || unreachable!("event built with no handle"));
+    }
+
+    #[test]
+    fn drained_jsonl_is_reproducible() {
+        let build = || {
+            let h = TraceHandle::recorder(8);
+            for k in 0..12u32 {
+                h.record(TraceEvent::Crawl {
+                    t: f64::from(k) * 0.25,
+                    page: k,
+                    changed: k % 2 == 0,
+                });
+            }
+            h.drain_jsonl()
+        };
+        let a = build();
+        let b = build();
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spans_feed_registry_histograms() {
+        let reg = Registry::default();
+        let h = TraceHandle::disabled().with_spans(&reg);
+        let t0 = h.span_clock();
+        assert!(t0.is_some());
+        h.span_observe(SpanKind::Select, t0);
+        assert_eq!(reg.histo("engine_select").count(), 1);
+        assert_eq!(reg.histo("engine_events").count(), 0);
+        // no spans attached → no clock read
+        assert!(TraceHandle::disabled().span_clock().is_none());
+    }
+
+    #[test]
+    fn violation_dumps_last_window_then_panics() {
+        let h = TraceHandle::recorder(8);
+        for k in 0..20 {
+            h.record(idle(f64::from(k)));
+        }
+        let mut buf: Vec<u8> = Vec::new();
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_or_dump(false, Some(&h), &mut buf, "deliberately broken invariant");
+        }));
+        if !cfg!(debug_assertions) {
+            // release builds compile the check away entirely
+            assert!(hit.is_ok());
+            return;
+        }
+        assert!(hit.is_err(), "violation must panic in debug builds");
+        let text = String::from_utf8_lossy(&buf);
+        // ring capacity 8 → window holds t=12..=19 only
+        assert!(text.contains("\"t\":12}"), "dump: {text}");
+        assert!(text.contains("\"t\":19}"), "dump: {text}");
+        assert!(!text.contains("\"t\":11}"), "dump: {text}");
+        assert!(text.contains("flight recorder"), "dump: {text}");
+
+        // a passing check neither dumps nor panics
+        let mut quiet: Vec<u8> = Vec::new();
+        check_or_dump(true, Some(&h), &mut quiet, "fine");
+        assert!(quiet.is_empty());
+    }
+}

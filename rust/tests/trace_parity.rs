@@ -1,0 +1,367 @@
+//! Flight-recorder acceptance suite (the tracing contract):
+//!
+//! 1. tracing is strictly observational — a run with a recording
+//!    [`TraceHandle`] attached is bit-identical to the untraced run
+//!    across strategy × policy × trace-mode, on the static, scenario,
+//!    serving and fault engines (tracing adds no RNG draw and no
+//!    branch that depends on recorded state);
+//! 2. the drained JSONL is deterministic: same seed ⇒ byte-identical
+//!    log, shards in index order;
+//! 3. the ring buffer holds exactly the newest `capacity` events per
+//!    shard and accounts every overwrite;
+//! 4. an invariant violation dumps the last events before panicking
+//!    (debug builds).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+
+use ncis_crawl::coordinator::builder::{CrawlerBuilder, Knowledge, Strategy};
+use ncis_crawl::fault::{
+    simulate_faulty_traced_with, FaultConfig, FaultModel, RetryPolicy,
+};
+use ncis_crawl::params::PageParams;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::scenario::generators::{
+    add_correlated_outages, add_steady_churn, BornPageSpec,
+};
+use ncis_crawl::scenario::Scenario;
+use ncis_crawl::serving::{RequestTraffic, ServingMetrics};
+use ncis_crawl::sim::{generate_traces, CisDelay, SimConfig, SimResult, SimWorkspace, TraceMode};
+use ncis_crawl::trace::{self, FlightRecorder, TraceEvent, TraceHandle};
+use ncis_crawl::EstimatorConfig;
+
+fn pages(m: usize, seed: u64) -> Vec<PageParams> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| PageParams {
+            delta: rng.range(0.05, 1.0),
+            mu: rng.range(0.05, 1.0),
+            lam: rng.f64(),
+            nu: rng.range(0.1, 0.5),
+        })
+        .collect()
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{ctx}: accuracy");
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.fresh_hits, b.fresh_hits, "{ctx}: fresh_hits");
+    assert_eq!(a.crawl_counts, b.crawl_counts, "{ctx}: crawl_counts");
+    assert_eq!(a.ticks, b.ticks, "{ctx}: ticks");
+    assert_eq!(a.timeline.len(), b.timeline.len(), "{ctx}: timeline length");
+    for (k, (x, y)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: timeline[{k}].t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: timeline[{k}].acc");
+    }
+}
+
+fn assert_metrics_identical(a: &ServingMetrics, b: &ServingMetrics, ctx: &str) {
+    assert_eq!(a.served, b.served, "{ctx}: served");
+    assert_eq!(a.fresh_serves, b.fresh_serves, "{ctx}: fresh_serves");
+    assert_eq!(a.stale_serves, b.stale_serves, "{ctx}: stale_serves");
+    assert_eq!(a.dead_serves, b.dead_serves, "{ctx}: dead_serves");
+    assert_eq!(a.overall.count(), b.overall.count(), "{ctx}: overall count");
+    assert_eq!(
+        a.overall.mean().to_bits(),
+        b.overall.mean().to_bits(),
+        "{ctx}: overall mean"
+    );
+}
+
+/// The serving suite's dynamic world: churn plus correlated outages.
+fn dynamic_scenario(ps: &[PageParams], seed: u64, horizon: f64) -> Scenario {
+    let mut sc = Scenario::new(ps.to_vec(), seed);
+    add_steady_churn(&mut sc, 0.01, horizon, &BornPageSpec::default(), seed ^ 0xA);
+    add_correlated_outages(&mut sc, 4, 3, horizon / 10.0, horizon, seed ^ 0xB);
+    sc
+}
+
+// ---- 1. tracing on == tracing off, bit for bit ----
+
+#[test]
+fn tracing_is_bit_identical_on_the_static_engine_for_all_combos() {
+    let m = 40;
+    let horizon = 30.0;
+    let ps = pages(m, 1);
+    let mut cfg = SimConfig::new(4.0, horizon).unwrap();
+    cfg.timeline_window = Some(16);
+    let policies = [PolicyKind::Greedy, PolicyKind::GreedyCis, PolicyKind::GreedyNcis];
+    let strategies = [Strategy::Exact, Strategy::Lazy, Strategy::Sharded { shards: 3 }];
+    for policy in policies {
+        for strategy in strategies {
+            for mode in [TraceMode::Materialized, TraceMode::Streamed] {
+                let base = CrawlerBuilder::new()
+                    .policy(policy)
+                    .strategy(strategy)
+                    .pages(&ps)
+                    .trace_mode(mode)
+                    .with_traffic(RequestTraffic::off());
+                let (off, _) = base.clone().run_traffic(&cfg, 2).unwrap();
+                let handle = TraceHandle::recorder(1 << 16);
+                let (on, _) =
+                    base.with_trace(handle.clone()).run_traffic(&cfg, 2).unwrap();
+                let ctx = format!("{policy:?} × {strategy:?} × {mode:?}");
+                assert_bit_identical(&off, &on, &ctx);
+                assert!(!handle.drain_jsonl().is_empty(), "{ctx}: empty trace");
+            }
+        }
+    }
+}
+
+#[test]
+fn tracing_is_bit_identical_on_scenario_with_loaded_serving() {
+    let horizon = 50.0;
+    let ps = pages(50, 7);
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
+    let traffic = RequestTraffic::new(25.0, 1.1, 0xBEEF)
+        .unwrap()
+        .with_flash(horizon * 0.4, horizon * 0.1, 3, 60.0)
+        .unwrap();
+    for mode in [TraceMode::Materialized, TraceMode::Streamed] {
+        let base = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .trace_mode(mode)
+            .with_scenario(dynamic_scenario(&ps, 4321, horizon))
+            .with_traffic(traffic.clone());
+        let (off, m_off) = base.clone().run_traffic(&cfg, 70).unwrap();
+        let handle = TraceHandle::recorder(1 << 17);
+        let (on, m_on) = base.with_trace(handle.clone()).run_traffic(&cfg, 70).unwrap();
+        let ctx = format!("scenario+serving × {mode:?}");
+        assert_bit_identical(&off, &on, &ctx);
+        assert_metrics_identical(&m_off, &m_on, &ctx);
+        let jsonl = handle.drain_jsonl();
+        // the dynamic + serving lane exercises the whole taxonomy
+        for ev in ["\"ev\":\"crawl\"", "\"ev\":\"serve\"", "\"ev\":\"world\""] {
+            assert!(jsonl.contains(ev), "{ctx}: no {ev} event in trace");
+        }
+    }
+}
+
+#[test]
+fn tracing_is_bit_identical_on_the_learned_scheduler() {
+    // the learned decorator adds trust-gate and re-projection events;
+    // neither may perturb its picks. ~40 observations per page so the
+    // bank's trust gates (min_obs = 8 + CI tightness) actually open.
+    let ps = pages(30, 11);
+    let cfg = SimConfig::new(10.0, 120.0).unwrap();
+    let est = EstimatorConfig { seed: 0xC0FFEE, ..EstimatorConfig::default() };
+    let base = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Exact)
+        .pages(&ps)
+        .knowledge(Knowledge::Learned(est))
+        .with_traffic(RequestTraffic::off());
+    let (off, _) = base.clone().run_traffic(&cfg, 5).unwrap();
+    let handle = TraceHandle::recorder(1 << 16);
+    let (on, _) = base.with_trace(handle.clone()).run_traffic(&cfg, 5).unwrap();
+    assert_bit_identical(&off, &on, "learned");
+    let jsonl = handle.drain_jsonl();
+    assert!(jsonl.contains("\"ev\":\"trust_gate\""), "no trust-gate transition traced");
+    assert!(jsonl.contains("\"ev\":\"reproject\""), "no re-projection traced");
+}
+
+#[test]
+fn tracing_is_bit_identical_on_the_fault_engine() {
+    let ps = pages(60, 13);
+    let horizon = 80.0;
+    let cfg = SimConfig::new(5.0, horizon).unwrap();
+    let fault_cfg = FaultConfig {
+        transient_prob: 0.15,
+        timeout_prob: 0.05,
+        gone_prob: 0.02,
+        seed: 0xFA,
+        ..FaultConfig::none()
+    };
+    fn run(
+        ps: &[PageParams],
+        cfg: &SimConfig,
+        fault_cfg: &FaultConfig,
+        tr: Option<&TraceHandle>,
+    ) -> ncis_crawl::fault::FaultSimResult {
+        let mut sched = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .pages(ps)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(17);
+        let traces = generate_traces(ps, cfg.horizon, CisDelay::None, &mut rng);
+        let mut model = FaultModel::new(fault_cfg.clone()).unwrap();
+        let mut ws = SimWorkspace::new();
+        simulate_faulty_traced_with(
+            &mut ws,
+            &traces,
+            cfg,
+            sched.as_mut(),
+            &mut model,
+            RetryPolicy::default(),
+            tr,
+        )
+    }
+    let off = run(&ps, &cfg, &fault_cfg, None);
+    let handle = TraceHandle::recorder(1 << 17);
+    let on = run(&ps, &cfg, &fault_cfg, Some(&handle));
+    assert_bit_identical(&off.sim, &on.sim, "fault engine");
+    assert_eq!(off.faults.attempts, on.faults.attempts, "attempts");
+    assert_eq!(off.faults.retries, on.faults.retries, "retries");
+    assert_eq!(off.faults.quarantined, on.faults.quarantined, "quarantined");
+    assert_eq!(off.faults.forfeited_ticks, on.faults.forfeited_ticks, "forfeits");
+    let jsonl = handle.drain_jsonl();
+    assert!(jsonl.contains("\"ev\":\"crawl_failed\""), "no failure traced");
+    assert!(jsonl.contains("\"ev\":\"retry\""), "no retry traced");
+}
+
+// ---- 2. deterministic drains ----
+
+#[test]
+fn combined_lanes_share_one_recorder_and_drain_deterministically() {
+    // the acceptance shape: a scenario+serving run records into shard 0
+    // and a fault run into shard 1 of ONE recorder; the drain is
+    // non-empty, shard-ordered, and byte-identical across same-seed runs
+    let ps = pages(40, 19);
+    let horizon = 40.0;
+    let cfg = SimConfig::new(4.0, horizon).unwrap();
+    let run_both = || {
+        let handle = TraceHandle::recorder(1 << 17);
+        let builder = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Exact)
+            .with_scenario(dynamic_scenario(&ps, 23, horizon))
+            .with_traffic(RequestTraffic::new(20.0, 1.1, 0xCAFE).unwrap())
+            .with_trace(handle.shard(0));
+        let (scen_res, _) = builder.run_traffic(&cfg, 29).unwrap();
+        let h1 = handle.shard(1);
+        let mut sched = CrawlerBuilder::new()
+            .policy(PolicyKind::GreedyNcis)
+            .strategy(Strategy::Lazy)
+            .pages(&ps)
+            .with_trace(h1.clone())
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(31);
+        let traces = generate_traces(&ps, horizon, CisDelay::None, &mut rng);
+        let mut model = FaultModel::new(FaultConfig {
+            transient_prob: 0.1,
+            seed: 0xFB,
+            ..FaultConfig::none()
+        })
+        .unwrap();
+        let mut ws = SimWorkspace::new();
+        let fault_res = simulate_faulty_traced_with(
+            &mut ws,
+            &traces,
+            &cfg,
+            sched.as_mut(),
+            &mut model,
+            RetryPolicy::default(),
+            Some(&h1),
+        );
+        (scen_res, fault_res, handle.drain_jsonl())
+    };
+    let (s1, f1, j1) = run_both();
+    let (s2, f2, j2) = run_both();
+    assert!(!j1.is_empty(), "combined drain is empty");
+    assert_eq!(j1, j2, "same-seed drains must be byte-identical");
+    assert_bit_identical(&s1, &s2, "combined scenario lane replay");
+    assert_bit_identical(&f1.sim, &f2.sim, "combined fault lane replay");
+    assert!(j1.contains("\"shard\":0,"), "no shard-0 events");
+    assert!(j1.contains("\"shard\":1,"), "no shard-1 events");
+    // shard-index drain order: every shard-0 line precedes every shard-1
+    let first_s1 = j1.find("\"shard\":1,").unwrap();
+    let last_s0 = j1.rfind("\"shard\":0,").unwrap();
+    assert!(last_s0 < first_s1, "drain must emit shards in index order");
+    // every line is a well-formed single-object JSONL record
+    for line in j1.lines() {
+        assert!(
+            line.starts_with("{\"ev\":\"") && line.ends_with('}'),
+            "malformed trace line: {line}"
+        );
+    }
+}
+
+// ---- 3. ring-buffer semantics ----
+
+#[test]
+fn ring_buffer_keeps_newest_capacity_events_and_counts_overwrites() {
+    let cap = 64;
+    let mut rec = FlightRecorder::new(cap);
+    let total = 1000u32;
+    for i in 0..total {
+        // two shards, interleaved pushes with distinguishable payloads
+        rec.push((i % 2) as usize, TraceEvent::Cis { t: f64::from(i), page: i });
+    }
+    assert_eq!(rec.len(), 2 * cap, "each shard holds exactly its capacity");
+    assert_eq!(rec.dropped(), u64::from(total) - 2 * cap as u64);
+    let snap = rec.snapshot();
+    // shard 0 first, then shard 1; within a shard, oldest→newest of the
+    // newest `cap` events pushed to it
+    let shard0: Vec<u32> = snap
+        .iter()
+        .filter(|(s, _)| *s == 0)
+        .map(|(_, ev)| match ev {
+            TraceEvent::Cis { page, .. } => *page,
+            other => panic!("unexpected event {other:?}"),
+        })
+        .collect();
+    let expect0: Vec<u32> =
+        (0..total).filter(|i| i % 2 == 0).rev().take(cap).rev().collect();
+    assert_eq!(shard0, expect0, "shard 0 must hold its newest {cap} events in order");
+    let pos1 = snap.iter().position(|(s, _)| *s == 1).unwrap();
+    assert!(
+        snap[..pos1].iter().all(|(s, _)| *s == 0),
+        "snapshot must list shard 0 before shard 1"
+    );
+    rec.clear();
+    assert!(rec.is_empty());
+}
+
+// ---- 4. dump on violation ----
+
+/// An `io::Write` the panic can't take with it: the buffer outlives the
+/// unwound closure via `Arc`.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl std::io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn violation_dumps_the_event_window_before_panicking() {
+    let handle = TraceHandle::recorder(128);
+    for i in 0..10u32 {
+        trace::emit(Some(&handle), || TraceEvent::Crawl {
+            t: f64::from(i),
+            page: i,
+            changed: i % 2 == 0,
+        });
+    }
+    let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+    let mut w = buf.clone();
+    let hit = catch_unwind(AssertUnwindSafe(|| {
+        trace::check_or_dump(false, Some(&handle), &mut w, "deliberately broken invariant");
+    }));
+    if !cfg!(debug_assertions) {
+        // release builds compile the check away entirely
+        assert!(hit.is_ok());
+        return;
+    }
+    assert!(hit.is_err(), "violated invariant must panic in debug builds");
+    let dumped = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    assert!(dumped.contains("flight recorder"), "missing dump header: {dumped}");
+    assert!(dumped.contains("\"ev\":\"crawl\""), "dump must carry the event window");
+    // a satisfied invariant writes nothing and returns
+    let ok = catch_unwind(AssertUnwindSafe(|| {
+        let mut w2 = buf.clone();
+        trace::check_or_dump(true, Some(&handle), &mut w2, "fine");
+    }));
+    assert!(ok.is_ok());
+}
