@@ -34,6 +34,11 @@
 //!   plain engine (`trace_off_*` / `trace_overhead_*`; acceptance:
 //!   ≤ 1.02× at m=1e5) and full ring-buffer recording
 //!   (`trace_on_*`; acceptance: ≤ 1.25× at m=1e5)
+//! - scenario DSL: parse+compile throughput of a DSL world at m=1e5
+//!   (`world_parse_m*`), the DSL-compiled world replayed against its
+//!   hand-constructed bit-identical twin (`world_overhead_m*`;
+//!   acceptance: ≤ 1.05×), and the fuzz campaign's sustained world
+//!   rate (`fuzz_rep_rate`)
 //!
 //! Every lane is also recorded into `BENCH_perf.json` (via
 //! `benchkit::BenchJson`) so future PRs have a machine-readable perf
@@ -1303,6 +1308,137 @@ fn bench_trace(json: &mut BenchJson, smoke: bool) -> Vec<String> {
     declared
 }
 
+/// Scenario-DSL lanes (the adversarial-world acceptance bars):
+///
+/// - `world_parse_m*`: parse + compile of a DSL world text at the
+///   acceptance population — the whole `parse_world` path including
+///   §6.3 instance generation and normalization, measured per pass.
+/// - `world_overhead_m*`: the scenario engine replaying the
+///   DSL-compiled world vs the hand-constructed twin it is asserted
+///   bit-identical to, on the same traces and scheduler. The compiled
+///   world is plain `Scenario` data, so the lane pins the claim that
+///   authoring a world in the DSL costs nothing at run time.
+///   Acceptance: ≤ 1.05× at m=1e5.
+/// - `fuzz_rep_rate`: sustained worlds/s of the replay fuzzer (each
+///   world = parse, round-trip, audit, and every engine lane run
+///   twice), recorded for trajectory so CI's time-boxed `fuzz-smoke`
+///   budget stays calibrated.
+///
+/// Returns the declared acceptance lane names.
+fn bench_world_dsl(json: &mut BenchJson, smoke: bool) -> Vec<String> {
+    use ncis_crawl::scenario::fuzz::{run_fuzz, FuzzConfig};
+    use ncis_crawl::scenario::{bit_identical, PageSet};
+    use ncis_crawl::{parse_world, WorldEvent};
+    let mut declared = Vec::new();
+    let m: usize = if smoke { 2_048 } else { 100_000 };
+    let horizon = 10.0;
+    let r = if smoke { 200.0 } else { 2_000.0 };
+    println!("\n-- scenario DSL: parse+compile, DSL vs hand-built replay (m={m}) --");
+    let text = format!(
+        "world horizon={horizon:?} bandwidth={r:?} scenario_seed=0x5ce7\n\
+         pages section6 m={m} seed=0x5eed partial_cis false_positives normalized\n\
+         churn rho=0.001 seed=0x5ce8\n\
+         outage t=5.0 duration=2.0 pages=all\n"
+    );
+
+    // parse + compile throughput (compile dominates: it realizes the
+    // §6.3 population)
+    let meas = measure(
+        || {
+            std::hint::black_box(parse_world(&text).unwrap());
+        },
+        3,
+        0.2,
+    );
+    report(&format!("parse+compile        m={m}"), &meas);
+    println!("{:>46} {:.1}k pages/s", "", m as f64 / meas.mean_s / 1e3);
+    let lane = format!("world_parse_m{m}");
+    json.lane(
+        &lane,
+        &[("seconds_per_parse", meas.mean_s), ("pages_per_s", m as f64 / meas.mean_s)],
+    );
+    declared.push(lane);
+
+    // the hand-constructed twin of the same world, and the identity
+    // check the overhead ratio rests on
+    let world = parse_world(&text).expect("bench world parses");
+    let spec = ExperimentSpec::section6(m, 1).with_partial_cis().with_false_positives();
+    let mut irng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut irng).normalized();
+    let mut hand = Scenario::new(inst.pages.clone(), 0x5CE7);
+    add_steady_churn(&mut hand, 0.001, horizon, &BornPageSpec::default(), 0x5CE8);
+    hand.push(5.0, WorldEvent::CisOutage { pages: PageSet::All, duration: 2.0 });
+    assert!(
+        bit_identical(&world.scenario, &hand),
+        "DSL world drifted from its hand-built twin; the overhead ratio is meaningless"
+    );
+
+    let mut trng = Rng::new(71);
+    let traces = generate_traces(&inst.pages, horizon, CisDelay::None, &mut trng);
+    let cfg = SimConfig::new(r, horizon).expect("valid bench bandwidth");
+    let builder = CrawlerBuilder::new()
+        .policy(PolicyKind::GreedyNcis)
+        .strategy(Strategy::Lazy)
+        .pages(&inst.pages);
+    let mut lane_secs = [0.0f64; 2];
+    for (slot, (label, sc)) in
+        [("hand", &hand), ("dsl", &world.scenario)].into_iter().enumerate()
+    {
+        let mut ws = ScenarioWorkspace::new();
+        let meas = measure(
+            || {
+                let mut sched = builder.build().unwrap();
+                std::hint::black_box(simulate_scenario_with(
+                    &mut ws,
+                    &traces,
+                    &cfg,
+                    sc,
+                    sched.as_mut(),
+                ));
+            },
+            3,
+            0.2,
+        );
+        report(&format!("{label:>8} world      m={m}"), &meas);
+        json.lane(
+            &format!("world_{label}_m{m}"),
+            &[("seconds_per_rep", meas.mean_s), ("ticks_per_s", r * horizon / meas.mean_s)],
+        );
+        lane_secs[slot] = meas.mean_s;
+    }
+    let overhead = lane_secs[1] / lane_secs[0].max(1e-12);
+    println!("DSL-world overhead: {overhead:.3}x (acceptance: <= 1.05x)");
+    let lane = format!("world_overhead_m{m}");
+    json.lane(&lane, &[("x", overhead)]);
+    declared.push(lane);
+
+    // fuzz campaign rep rate: one deterministic timed campaign
+    let worlds = if smoke { 6 } else { 24 };
+    println!("\n-- fuzz campaign rep rate ({worlds} worlds) --");
+    let t0 = Instant::now();
+    let out = run_fuzz(&FuzzConfig { worlds, start_seed: 0x9000, budget: None });
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "fuzz: {} worlds, {} lanes in {secs:.2}s ({:.1} worlds/s, {} violations)",
+        out.worlds,
+        out.lanes,
+        out.worlds as f64 / secs.max(1e-12),
+        out.violations.len()
+    );
+    json.lane(
+        "fuzz_rep_rate",
+        &[
+            ("worlds", out.worlds as f64),
+            ("lanes", out.lanes as f64),
+            ("seconds", secs),
+            ("worlds_per_s", out.worlds as f64 / secs.max(1e-12)),
+            ("violations", out.violations.len() as f64),
+        ],
+    );
+    declared.push("fuzz_rep_rate".into());
+    declared
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -1330,6 +1466,7 @@ fn main() {
     declared.extend(bench_serving(&mut json, smoke));
     declared.extend(bench_estimation(&mut json, smoke));
     declared.extend(bench_trace(&mut json, smoke));
+    declared.extend(bench_world_dsl(&mut json, smoke));
 
     // declared-lane manifest: the acceptance-critical lanes every run
     // of this bench must record, in both --smoke and full mode. CI

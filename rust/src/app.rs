@@ -11,8 +11,9 @@ use crate::fault::{simulate_faulty_traced_with, FaultConfig, FaultModel, RetryPo
 use crate::figures::common::{run_cell, ExperimentSpec};
 use crate::policy::{parse_policy, PolicyKind, PolicyUnderTest};
 use crate::rngkit::Rng;
+use crate::scenario::fuzz::{run_fuzz, FuzzConfig};
 use crate::scenario::generators::{add_steady_churn, BornPageSpec};
-use crate::scenario::Scenario;
+use crate::scenario::{parse_world, CompiledWorld, Scenario, WorldSpec};
 use crate::serving::RequestTraffic;
 use crate::sim::{generate_traces, CisDelay, SimConfig, SimWorkspace};
 use crate::solver;
@@ -34,10 +35,15 @@ commands:
                --m N --shards S --r R --horizon T
   figure       regenerate a paper figure: figure <id> [--reps K]
                (ids: 1,2,3,4,5,6,7,8,9,10,11,12,14, appg, scenario, faults, regret, serving)
+               figure scenario also accepts --world FILE (DSL world)
   trace        run one traced repetition, emit the flight-recorder JSONL
                --m N --r R --horizon T --policy NAME [--scenario] [--faults]
                [--serve RATE] [--cap N] [--seed S] [--out FILE]
-               [--verbose] [--stride N]
+               [--verbose] [--stride N] [--world FILE]
+  world        parse + compile a scenario-DSL world file, print a summary
+               world <file> [--render]
+  fuzz         randomized world fuzzing with replay + invariant checks
+               [--worlds N] [--seed S] [--budget-secs T] [--out DIR]
 
 policies: GREEDY | GREEDY-CIS | GREEDY-NCIS | G-NCIS-APPROX-1 |
           G-NCIS-APPROX-2 | GREEDY-CIS+ | LDS  (suffix -LAZY for §5.2)
@@ -242,7 +248,28 @@ fn cmd_trace(args: &Args) -> Result<()> {
     }
 
     let crawls: u64;
-    if args.has_flag("faults") {
+    if let Some(path) = args.opt("world") {
+        // DSL-world lane: the compiled world supplies population,
+        // timeline and (when declared) traffic; --m/--r/--horizon are
+        // ignored in favor of the file
+        let world = parse_world(&std::fs::read_to_string(path)?)?;
+        let mut b = world
+            .crawler()
+            .policy(policy)
+            .strategy(strategy)
+            .with_trace(handle.clone());
+        if world.traffic.is_none() {
+            b = b.with_traffic(RequestTraffic::off());
+        }
+        let (res, metrics) = b.run_traffic(&world.sim_config()?, seed)?;
+        crawls = res.crawl_counts.iter().map(|&c| c as u64).sum();
+        eprintln!(
+            "world lane: m={} events={} served={}",
+            world.initial_pages().len(),
+            world.scenario.events().len(),
+            metrics.served
+        );
+    } else if args.has_flag("faults") {
         // fault lane: the traced degraded-mode engine, moderate severity
         let mut sched = CrawlerBuilder::new()
             .policy(policy)
@@ -324,7 +351,96 @@ fn cmd_figure(args: &Args) -> Result<()> {
         .map(String::as_str)
         .ok_or_else(|| Error::Usage("figure <id> required".into()))?;
     let reps = args.usize_or("reps", 10)?;
+    if let Some(path) = args.opt("world") {
+        if id != "scenario" {
+            return Err(Error::Usage(
+                "--world is only supported for `figure scenario`".into(),
+            ));
+        }
+        let world = parse_world(&std::fs::read_to_string(path)?)?;
+        return crate::figures::scenario::fig_scenario_world(reps, &world);
+    }
     crate::figures::run_figure(id, reps)
+}
+
+/// Parse + compile a DSL world file and print what it contains;
+/// `--render` echoes the canonical form (the round-trip fixpoint).
+fn cmd_world(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .ok_or_else(|| Error::Usage("world <file> required".into()))?;
+    let text = std::fs::read_to_string(path)?;
+    let spec = WorldSpec::parse(&text)?;
+    if args.has_flag("render") {
+        print!("{}", spec.render());
+        return Ok(());
+    }
+    let world: CompiledWorld = spec.compile()?;
+    println!(
+        "world: m={} horizon={} bandwidth={} events={} directives={}",
+        world.initial_pages().len(),
+        world.horizon,
+        world.bandwidth,
+        world.scenario.events().len(),
+        spec.directives().len()
+    );
+    match &world.faults {
+        Some(fc) => println!(
+            "faults: transient={} timeout={} gone={} hosts={} outage_windows={}",
+            fc.transient_prob, fc.timeout_prob, fc.gone_prob, fc.hosts, fc.outages.len()
+        ),
+        None => println!("faults: none"),
+    }
+    match &world.traffic {
+        Some(tr) => println!(
+            "traffic: rate={} zipf={} diurnal={} flashes={}",
+            tr.rate(),
+            tr.zipf_s(),
+            tr.diurnal().is_some(),
+            tr.flashes().len()
+        ),
+        None => println!("traffic: none"),
+    }
+    Ok(())
+}
+
+/// Run a fuzz campaign; violations are written as repro bundles
+/// (`fuzz-<seed>.world` / `.jsonl` / `.txt`) under `--out` and turn the
+/// exit status nonzero so CI fails loudly.
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    let cfg = FuzzConfig {
+        worlds: args.usize_or("worlds", 200)?,
+        start_seed: args.u64_or("seed", 1)?,
+        budget: match args.f64_or("budget-secs", 0.0)? {
+            t if t > 0.0 => Some(std::time::Duration::from_secs_f64(t)),
+            _ => None,
+        },
+    };
+    let out_dir = Path::new(args.opt("out").unwrap_or("target/fuzz"));
+    let outcome = run_fuzz(&cfg);
+    println!(
+        "fuzz: {} worlds, {} lanes (each replayed twice), {} violations",
+        outcome.worlds,
+        outcome.lanes,
+        outcome.violations.len()
+    );
+    if outcome.clean() {
+        return Ok(());
+    }
+    std::fs::create_dir_all(out_dir)?;
+    for v in &outcome.violations {
+        let base = out_dir.join(format!("fuzz-{:016x}", v.seed));
+        std::fs::write(base.with_extension("world"), &v.dsl)?;
+        std::fs::write(base.with_extension("jsonl"), &v.flight_jsonl)?;
+        std::fs::write(base.with_extension("txt"), v.to_string())?;
+        eprintln!("violation: seed 0x{:x}: {}", v.seed, v.message);
+    }
+    Err(Error::Runtime(format!(
+        "fuzz found {} violation(s); repro bundles in {}",
+        outcome.violations.len(),
+        out_dir.display()
+    )))
 }
 
 /// Dispatch a parsed command line.
@@ -339,6 +455,8 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("serve-shards") => cmd_serve_shards(args),
         Some("trace") => cmd_trace(args),
         Some("figure") => cmd_figure(args),
+        Some("world") => cmd_world(args),
+        Some("fuzz") => cmd_fuzz(args),
         Some("report") => {
             let path = args
                 .positionals

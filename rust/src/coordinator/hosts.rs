@@ -10,6 +10,20 @@
 
 use crate::sched::CrawlScheduler;
 
+/// The round-robin page → host convention shared by every layer that
+/// groups pages into hosts: [`HostMap::round_robin`], the fault
+/// model's outage topology ([`crate::fault::FaultModel`]), the
+/// scenario outage generator
+/// ([`crate::scenario::generators::add_correlated_outages`]) and the
+/// DSL's host-level directives. One definition, so a host-targeted
+/// directive can never darken a different page set than the engine
+/// maps.
+#[inline]
+pub fn host_of(page: usize, hosts: usize) -> usize {
+    debug_assert!(hosts > 0, "host_of requires at least one host");
+    page % hosts
+}
+
 /// Page → host assignment plus per-host politeness interval.
 #[derive(Debug, Clone)]
 pub struct HostMap {
@@ -25,7 +39,7 @@ impl HostMap {
     /// Assign pages to hosts round-robin (uniform host sizes).
     pub fn round_robin(m: usize, hosts: usize, min_interval: f64) -> Self {
         assert!(hosts > 0);
-        Self { host: (0..m).map(|i| i % hosts).collect(), min_interval, hosts }
+        Self { host: (0..m).map(|i| host_of(i, hosts)).collect(), min_interval, hosts }
     }
 
     /// Assign by explicit host sizes (e.g. Zipf-distributed host
@@ -134,11 +148,11 @@ impl<S: CrawlScheduler> CrawlScheduler for PoliteScheduler<S> {
         // (e.g. `HostMap::from_sizes` Zipf hosts) can pre-extend
         // `map.host` past the initial population to control where
         // births land. Only an UNMAPPED newborn falls back to the
-        // round-robin convention (`page % hosts`), matching
+        // round-robin convention ([`host_of`]), matching
         // `HostMap::round_robin` and the sharded/pipeline birth
         // routing.
         if page == self.map.host.len() {
-            self.map.host.push(page % self.map.hosts);
+            self.map.host.push(host_of(page, self.map.hosts));
         }
         self.inner.on_page_added(page, params, t);
     }

@@ -14,10 +14,9 @@
 //!   probabilities drawn from per-page RNG substreams (same
 //!   `split64` keying discipline as [`crate::sim::source`]),
 //!   permanent-dead pages, and correlated host-level outage windows
-//!   (`page % hosts` round-robin hosts, the
-//!   [`crate::coordinator::hosts::HostMap::round_robin`] /
-//!   [`crate::scenario::generators::add_correlated_outages`]
-//!   convention).
+//!   (round-robin hosts via the shared
+//!   [`crate::coordinator::hosts::host_of`] convention, same as
+//!   [`crate::scenario::generators::add_correlated_outages`]).
 //! - [`RetryPolicy`] — what happens after a failed fetch: immediate
 //!   re-queue or exponential backoff with deterministic jitter from the
 //!   page's fault substream; after `max_attempts` consecutive failures
@@ -43,6 +42,7 @@ pub use engine::{
     simulate_faulty_traced_with, simulate_faulty_with, FaultSimResult,
 };
 
+use crate::coordinator::hosts::host_of;
 use crate::error::Error;
 use crate::rngkit::{self, RandomSource, Rng, SplitMix64};
 use crate::sched::CrawlScheduler;
@@ -183,7 +183,7 @@ impl FaultConfig {
             let start = rng.range(0.0, horizon);
             let duration = rngkit::exponential(&mut rng, 1.0 / mean_duration);
             self.outages.push(HostOutage {
-                host: i % self.hosts,
+                host: host_of(i, self.hosts),
                 start,
                 end: (start + duration).min(horizon),
             });
@@ -327,10 +327,11 @@ impl FaultModel {
         self.inert
     }
 
-    /// Host of `page` (round-robin convention).
+    /// Host of `page` (the shared round-robin convention,
+    /// [`crate::coordinator::hosts::host_of`]).
     #[inline]
     pub fn host_of(&self, page: usize) -> usize {
-        page % self.cfg.hosts
+        host_of(page, self.cfg.hosts)
     }
 
     /// Number of hosts.
@@ -506,7 +507,7 @@ impl<S: CrawlScheduler> OutageAwareScheduler<S> {
     }
 
     fn dark(&self, page: usize, t: f64) -> bool {
-        let h = page % self.hosts;
+        let h = host_of(page, self.hosts);
         self.outages.iter().any(|o| o.covers(h, t))
     }
 

@@ -47,12 +47,51 @@ fn mean_timeline(
     Ok(acc.iter().map(|a| a / reps as f64).collect())
 }
 
+/// The four-lane body shared by [`fig_scenario`] and
+/// [`fig_scenario_world`]: GREEDY-NCIS / GREEDY-CIS / GREEDY under the
+/// dynamic world, plus GREEDY-NCIS in the matching static world (same
+/// initial population and seed, empty timeline).
+fn run_scenario_lanes(
+    name: &str,
+    dynamic: &Scenario,
+    cfg: &SimConfig,
+    reps: usize,
+) -> Result<()> {
+    let reps = reps.clamp(1, 10);
+    let static_world = Scenario::new(dynamic.initial_pages().to_vec(), dynamic.seed());
+    let grid: Vec<f64> = (1..=cfg.horizon as usize).map(|k| k as f64).collect();
+
+    let lane = |policy: PolicyKind, sc: &Scenario| {
+        let b = CrawlerBuilder::new()
+            .policy(policy)
+            .strategy(Strategy::Exact)
+            .with_scenario(sc.clone());
+        mean_timeline(&b, cfg, &grid, reps)
+    };
+    let ncis = lane(PolicyKind::GreedyNcis, dynamic)?;
+    let cis = lane(PolicyKind::GreedyCis, dynamic)?;
+    let greedy = lane(PolicyKind::Greedy, dynamic)?;
+    let ncis_static = lane(PolicyKind::GreedyNcis, &static_world)?;
+
+    let mut fig = FigureOutput::new(
+        name,
+        &["t", "greedy_ncis", "greedy_cis", "greedy", "greedy_ncis_static"],
+    );
+    for (k, &t) in grid.iter().enumerate() {
+        fig.rowf(&[t, ncis[k], cis[k], greedy[k], ncis_static[k]]);
+    }
+    fig.finish()?;
+    Ok(())
+}
+
 /// The churn + outage figure: m = 1000, R = 100, T = 400; rolling
 /// accuracy (window 1000 requests) for GREEDY-NCIS / GREEDY-CIS /
 /// GREEDY under the dynamic world, plus GREEDY-NCIS in the matching
 /// static world. CSV: `target/figures/fig_scenario_churn_outage.csv`.
+/// The equivalent DSL world (`tests/corpus/fig_scenario.world`) is
+/// pinned bit-identical to this hand-built one in
+/// `tests/world_fuzz.rs`.
 pub fn fig_scenario(reps: usize) -> Result<()> {
-    let reps = reps.clamp(1, 10);
     let spec = ExperimentSpec::section6(1000, 1).with_partial_cis().with_false_positives();
     let mut rng = Rng::new(spec.seed);
     let inst = spec.gen_instance(&mut rng).normalized();
@@ -65,31 +104,21 @@ pub fn fig_scenario(reps: usize) -> Result<()> {
         OUTAGE_START,
         WorldEvent::CisOutage { pages: PageSet::All, duration: OUTAGE_LEN },
     );
-    let static_world = Scenario::new(inst.pages.clone(), 0x5CE7);
 
     let mut cfg = SimConfig::new(spec.bandwidth, HORIZON)?;
     cfg.timeline_window = Some(1000);
-    let grid: Vec<f64> = (1..=HORIZON as usize).map(|k| k as f64).collect();
+    run_scenario_lanes("fig_scenario_churn_outage", &dynamic, &cfg, reps)
+}
 
-    let lane = |policy: PolicyKind, sc: &Scenario| {
-        let b = CrawlerBuilder::new()
-            .policy(policy)
-            .strategy(Strategy::Exact)
-            .with_scenario(sc.clone());
-        mean_timeline(&b, &cfg, &grid, reps)
-    };
-    let ncis = lane(PolicyKind::GreedyNcis, &dynamic)?;
-    let cis = lane(PolicyKind::GreedyCis, &dynamic)?;
-    let greedy = lane(PolicyKind::Greedy, &dynamic)?;
-    let ncis_static = lane(PolicyKind::GreedyNcis, &static_world)?;
-
-    let mut fig = FigureOutput::new(
-        "fig_scenario_churn_outage",
-        &["t", "greedy_ncis", "greedy_cis", "greedy", "greedy_ncis_static"],
-    );
-    for (k, &t) in grid.iter().enumerate() {
-        fig.rowf(&[t, ncis[k], cis[k], greedy[k], ncis_static[k]]);
+/// The same four-lane figure over a DSL-compiled world (`ncis-crawl
+/// figure scenario --world FILE`): the dynamic lanes run the compiled
+/// timeline; the static lane freezes its initial population. When the
+/// world sets no `timeline_window`, the figure's default rolling window
+/// of 1000 requests applies. CSV: `target/figures/fig_scenario_world.csv`.
+pub fn fig_scenario_world(reps: usize, world: &crate::scenario::CompiledWorld) -> Result<()> {
+    let mut cfg = world.sim_config()?;
+    if cfg.timeline_window.is_none() {
+        cfg.timeline_window = Some(1000);
     }
-    fig.finish()?;
-    Ok(())
+    run_scenario_lanes("fig_scenario_world", &world.scenario, &cfg, reps)
 }

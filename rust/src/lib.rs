@@ -44,7 +44,10 @@
 //!   page churn, parameter drift, CIS outages and bandwidth shifts
 //!   ([`Scenario`] / [`WorldEvent`]), merged into the streaming
 //!   simulator with slot recycling + generation counters, plus
-//!   composable stress-pattern generators.
+//!   composable stress-pattern generators, the adversarial-world
+//!   scenario DSL ([`scenario::dsl`]), the reusable engine-invariant
+//!   audit ([`scenario::WorldAudit`]) and the deterministic replay
+//!   fuzzer ([`scenario::fuzz`]).
 //! - [`fault`] — fault injection and resilience: deterministic
 //!   [`fault::FaultModel`] (transient errors, timeouts, correlated
 //!   host outages, dead pages), [`fault::RetryPolicy`] with
@@ -103,7 +106,7 @@ pub use error::{Error, Result};
 pub use estimation::{EstimationStats, EstimatorConfig};
 pub use params::{DerivedParams, PageParams};
 pub use policy::{PolicyKind, PolicyUnderTest};
-pub use scenario::{Scenario, WorldEvent};
+pub use scenario::{parse_world, CompiledWorld, Scenario, WorldAudit, WorldEvent, WorldSpec};
 pub use sched::{CrawlScheduler, PageTracker};
 pub use trace::{FlightRecorder, TraceEvent, TraceHandle, TraceSink};
 

@@ -1,0 +1,1454 @@
+//! Line-oriented world-configuration DSL: adversarial scenarios as
+//! small text files.
+//!
+//! Every stress world the crate ships — the figure harness's churn +
+//! blackout run, the fault sweep's correlated-outage severities, the
+//! serving figure's flash-crowd traffic — is hand-assembled from the
+//! same building blocks: an `ExperimentSpec` population, a [`Scenario`]
+//! with generator calls, a [`FaultConfig`] and a [`RequestTraffic`].
+//! This module gives those compositions a concrete syntax, so a world
+//! is a reviewable artifact (checked into `tests/corpus/`, passed to
+//! `--world`, mutated by the fuzzer) instead of a code path:
+//!
+//! ```text
+//! # fig_scenario's churn + blackout world
+//! world horizon=400.0 bandwidth=100.0 scenario_seed=0x5ce7
+//! pages section6 m=1000 seed=0x5eed partial_cis false_positives normalized
+//! churn rho=0.005 seed=0x5ce8
+//! outage t=150.0 duration=100.0 pages=all
+//! ```
+//!
+//! The parser is hand-rolled (the crate's zero-dependency discipline —
+//! same idiom as [`crate::cli::Args`] and [`crate::config`]): one
+//! directive per line, `#` comments, whitespace-separated `key=value`
+//! tokens plus bare flags. Errors carry 1-based line *and* column
+//! context ([`DslError`]) and the parser never panics on malformed
+//! input — every constraint [`Scenario::push`] or a generator would
+//! `assert!` on is pre-validated here and surfaced as `Err`.
+//!
+//! [`WorldSpec::compile`] replays the directives **in file order**
+//! through the exact generator entry points the figures call
+//! ([`add_steady_churn`], [`FaultConfig::add_correlated_outages`], …),
+//! so a DSL world and its hand-constructed twin are bit-identical —
+//! `tests/world_fuzz.rs` pins all three shipped figure worlds.
+//! [`WorldSpec::render`] emits the canonical form; parse → render →
+//! parse is the identity (every numeric field is printed in Rust's
+//! shortest round-trip notation).
+//!
+//! ## Grammar
+//!
+//! | directive | fields | compiles to |
+//! |---|---|---|
+//! | `world` | `horizon= bandwidth= scenario_seed= [timeline_window=]` | [`SimConfig`] + [`Scenario`] seed (must be first) |
+//! | `pages section6` | `m= [seed=] [partial_cis] [false_positives] [normalized]` | §6.3 population via `ExperimentSpec` (must be second) |
+//! | `pages zipf` | `m= s= [seed=] [partial_cis] [false_positives] [normalized]` | heavy-tailed population, μᵢ ∝ (i+1)⁻ˢ |
+//! | `churn` | `rho= [horizon=] [seed=]` | [`add_steady_churn`] |
+//! | `flash` | `t= duration= frac= mu_factor= [delta_factor=] [seed=]` | [`add_flash_crowd`] |
+//! | `drift` | `period= amplitude= samples= frac= [horizon=] [seed=]` | [`add_diurnal_drift`] |
+//! | `outage` | `t= duration= [pages=all\|i,j,k]` | one [`WorldEvent::CisOutage`] |
+//! | `host_outages` | `hosts= n= mean= [horizon=] [seed=]` | [`generators::add_correlated_outages`](add_correlated_outages) |
+//! | `adversarial_cis` | `t= [frac=] lam= nu=` | [`WorldEvent::CisQualityShift`] on the top-μ `frac` of pages |
+//! | `bandwidth` | `t= rate=` | one [`WorldEvent::BandwidthChange`] |
+//! | `regions` | `t= interval= rates=a,b,c` | staggered `BandwidthChange` steps (multi-region failover) |
+//! | `faults` | `transient= timeout= [gone=] [hosts=] [seed=]` | [`FaultConfig`] (≤ 1) |
+//! | `fault_outages` | `n= mean= [horizon=] [seed=]` | [`FaultConfig::add_correlated_outages`] |
+//! | `fault_window` | `host= start= end=` | one explicit [`HostOutage`] (overlaps rejected) |
+//! | `retry` | `backoff` \| `immediate max_attempts=` | [`RetryPolicy`] (≤ 1) |
+//! | `traffic` | `rate= zipf= [seed=]` | [`RequestTraffic`] (≤ 1) |
+//! | `diurnal` | `period= amplitude=` | [`RequestTraffic::with_diurnal`] |
+//! | `request_flash` | `t= duration= page= extra=` | [`RequestTraffic::with_flash`] |
+
+use std::fmt;
+use std::fmt::Write as _;
+
+use crate::coordinator::builder::CrawlerBuilder;
+use crate::fault::{FaultConfig, HostOutage, RetryPolicy};
+use crate::figures::common::ExperimentSpec;
+use crate::params::{Instance, PageParams};
+use crate::rngkit::{self, Rng};
+use crate::scenario::generators::{
+    add_correlated_outages, add_diurnal_drift, add_flash_crowd, add_steady_churn, BornPageSpec,
+};
+use crate::scenario::{PageSet, Scenario, WorldEvent};
+use crate::serving::RequestTraffic;
+use crate::sim::SimConfig;
+
+/// A parse or compile failure with 1-based source position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DslError {
+    /// 1-based line of the offending directive.
+    pub line: usize,
+    /// 1-based column of the offending token (1 = the directive name).
+    pub col: usize,
+    /// What went wrong.
+    pub msg: String,
+}
+
+impl fmt::Display for DslError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "world config: line {}, col {}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for DslError {}
+
+impl From<DslError> for crate::error::Error {
+    fn from(e: DslError) -> Self {
+        crate::error::Error::Config(e.to_string())
+    }
+}
+
+/// How `pages` draws the initial population.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageModel {
+    /// §6.3 draws through [`ExperimentSpec::gen_instance`]: Δ, μ ~
+    /// U[1e-4, 1).
+    Section6,
+    /// Heavy-tailed popularity: Δ as §6.3, μᵢ ∝ (i + 1)⁻ˢ (page index =
+    /// popularity rank, matching the Zipf request model).
+    Zipf {
+        /// Tail exponent s > 0.
+        s: f64,
+    },
+}
+
+/// Retry policy selector (`retry` directive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetrySpec {
+    /// [`RetryPolicy::default`]'s exponential backoff.
+    Backoff,
+    /// [`RetryPolicy::Immediate`] with the given attempt budget.
+    Immediate {
+        /// Consecutive failures tolerated before quarantine.
+        max_attempts: u32,
+    },
+}
+
+/// One parsed directive, in source order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Directive {
+    /// `world horizon= bandwidth= scenario_seed= [timeline_window=]`.
+    World {
+        /// Horizon T > 0.
+        horizon: f64,
+        /// Initial bandwidth R > 0.
+        bandwidth: f64,
+        /// Seed of every event stream the scenario engine regenerates.
+        scenario_seed: u64,
+        /// Rolling-accuracy window ([`SimConfig::timeline_window`]).
+        timeline_window: Option<usize>,
+    },
+    /// `pages <model> m= seed= [partial_cis] [false_positives]
+    /// [normalized]`.
+    Pages {
+        /// Draw model.
+        model: PageModel,
+        /// Population size m ≥ 1.
+        m: usize,
+        /// Instance seed.
+        seed: u64,
+        /// λ ~ Beta(0.25, 0.25) (else λ = 0).
+        partial_cis: bool,
+        /// ν ~ U[0.1, 0.6) (else ν = 0).
+        false_positives: bool,
+        /// Normalize importance to μ̃ᵢ = μᵢ / Σμ.
+        normalized: bool,
+    },
+    /// `churn rho= [horizon=] [seed=]`.
+    Churn {
+        /// Population turnover rate ρ ≥ 0 per unit time.
+        rho: f64,
+        /// Churn horizon (default: world horizon).
+        horizon: Option<f64>,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// `flash t= duration= frac= mu_factor= [delta_factor=] [seed=]`.
+    Flash {
+        /// Surge start.
+        t: f64,
+        /// Surge length > 0.
+        duration: f64,
+        /// Fraction of the population surged, in [0, 1].
+        frac: f64,
+        /// Importance multiplier ∈ [0, 1e6].
+        mu_factor: f64,
+        /// Change-rate multiplier ∈ [1e-6, 1e6] (default 1).
+        delta_factor: f64,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// `drift period= amplitude= samples= frac= [horizon=] [seed=]`.
+    Drift {
+        /// Cycle period > 0.
+        period: f64,
+        /// Relative Δ swing, |a| < 1.
+        amplitude: f64,
+        /// Re-pin samples per cycle ≥ 1.
+        samples: usize,
+        /// Fraction of pages drifting, in [0, 1].
+        frac: f64,
+        /// Drift horizon (default: world horizon).
+        horizon: Option<f64>,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// `outage t= duration= [pages=all|i,j,k]`.
+    Outage {
+        /// Outage start.
+        t: f64,
+        /// Outage length > 0.
+        duration: f64,
+        /// Affected slots (`None` = every live page).
+        pages: Option<Vec<usize>>,
+    },
+    /// `host_outages hosts= n= mean= [horizon=] [seed=]`.
+    HostOutages {
+        /// Round-robin host count ≥ 1.
+        hosts: usize,
+        /// Number of outage windows.
+        n: usize,
+        /// Mean (exponential) outage length > 0.
+        mean: f64,
+        /// Start-time horizon (default: world horizon).
+        horizon: Option<f64>,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// `adversarial_cis t= [frac=] lam= nu=` — silently degrade the
+    /// CIS feeds of the most-popular pages (highest μ), the worst-case
+    /// quality attack: exactly where freshness matters most, recall
+    /// collapses and false positives spike with no notification.
+    AdversarialCis {
+        /// Attack time.
+        t: f64,
+        /// Top-μ fraction attacked, in (0, 1] (default 0.1 — the top
+        /// popularity decile).
+        frac: f64,
+        /// Degraded recall λ ∈ [0, 1].
+        lam: f64,
+        /// Degraded false-positive rate ν ≥ 0.
+        nu: f64,
+    },
+    /// `bandwidth t= rate=`.
+    Bandwidth {
+        /// Step time.
+        t: f64,
+        /// New rate R > 0.
+        rate: f64,
+    },
+    /// `regions t= interval= rates=a,b,c` — a multi-region capacity
+    /// schedule: region k's (cumulative) rate lands at `t + k·interval`
+    /// as one `BandwidthChange` step each, modeling staged failover or
+    /// region-by-region rollout of crawl capacity.
+    Regions {
+        /// First step time.
+        t: f64,
+        /// Stagger between steps > 0.
+        interval: f64,
+        /// Per-step total rates, each > 0.
+        rates: Vec<f64>,
+    },
+    /// `faults transient= timeout= [gone=] [hosts=] [seed=]`.
+    Faults {
+        /// Transient-error probability ∈ [0, 1].
+        transient: f64,
+        /// Timeout probability ∈ [0, 1].
+        timeout: f64,
+        /// Permanently-gone probability ∈ [0, 1].
+        gone: f64,
+        /// Round-robin host count ≥ 1.
+        hosts: usize,
+        /// Fault-substream master seed.
+        seed: u64,
+    },
+    /// `fault_outages n= mean= [horizon=] [seed=]`.
+    FaultOutages {
+        /// Number of fetch-outage windows.
+        n: usize,
+        /// Mean window length > 0.
+        mean: f64,
+        /// Start-time horizon (default: world horizon).
+        horizon: Option<f64>,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// `fault_window host= start= end=` — one explicit fetch-outage
+    /// window; windows on the same host must not overlap.
+    FaultWindow {
+        /// Darkened host.
+        host: usize,
+        /// Window start ≥ 0.
+        start: f64,
+        /// Window end > start.
+        end: f64,
+    },
+    /// `retry backoff` | `retry immediate max_attempts=`.
+    Retry(RetrySpec),
+    /// `traffic rate= zipf= [seed=]`.
+    Traffic {
+        /// Aggregate base request rate ≥ 0.
+        rate: f64,
+        /// Zipf popularity exponent ≥ 0.
+        zipf: f64,
+        /// Traffic seed.
+        seed: u64,
+    },
+    /// `diurnal period= amplitude=`.
+    Diurnal {
+        /// Cycle period > 0.
+        period: f64,
+        /// Rate modulation depth ∈ [0, 1].
+        amplitude: f64,
+    },
+    /// `request_flash t= duration= page= extra=`.
+    RequestFlash {
+        /// Flash start.
+        t: f64,
+        /// Flash length > 0.
+        duration: f64,
+        /// Targeted page slot.
+        page: usize,
+        /// Additional request rate > 0.
+        extra: f64,
+    },
+}
+
+/// A parsed world file: directives in source order plus their source
+/// lines (for compile-time error context). Equality compares the
+/// directives only, so a rendered canonical form (comments stripped,
+/// defaults explicit) still equals its source.
+#[derive(Debug, Clone)]
+pub struct WorldSpec {
+    directives: Vec<Directive>,
+    lines: Vec<usize>,
+}
+
+impl PartialEq for WorldSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.directives == other.directives
+    }
+}
+
+/// A compiled world: everything [`CrawlerBuilder`] and the fault engine
+/// consume, produced by [`WorldSpec::compile`].
+#[derive(Debug, Clone)]
+pub struct CompiledWorld {
+    /// Horizon T.
+    pub horizon: f64,
+    /// Initial bandwidth R.
+    pub bandwidth: f64,
+    /// Rolling-accuracy window.
+    pub timeline_window: Option<usize>,
+    /// The world timeline over its initial population.
+    pub scenario: Scenario,
+    /// Fetch-failure model, when a `faults` block is present.
+    pub faults: Option<FaultConfig>,
+    /// Retry policy for the fault lane.
+    pub retry: RetryPolicy,
+    /// Request-side traffic, when a `traffic` block is present.
+    pub traffic: Option<RequestTraffic>,
+}
+
+impl CompiledWorld {
+    /// The initial page population.
+    pub fn initial_pages(&self) -> &[PageParams] {
+        self.scenario.initial_pages()
+    }
+
+    /// The run configuration (`bandwidth`, `horizon`,
+    /// `timeline_window`).
+    pub fn sim_config(&self) -> crate::Result<SimConfig> {
+        let mut cfg = SimConfig::new(self.bandwidth, self.horizon)?;
+        cfg.timeline_window = self.timeline_window;
+        Ok(cfg)
+    }
+
+    /// A [`CrawlerBuilder`] pre-wired with this world's scenario and
+    /// (when present) its traffic; callers add policy / strategy /
+    /// knowledge.
+    pub fn crawler(&self) -> CrawlerBuilder {
+        let mut b = CrawlerBuilder::new().with_scenario(self.scenario.clone());
+        if let Some(t) = &self.traffic {
+            b = b.with_traffic(t.clone());
+        }
+        b
+    }
+}
+
+/// Parse and compile in one step.
+pub fn parse_world(text: &str) -> Result<CompiledWorld, DslError> {
+    WorldSpec::parse(text)?.compile()
+}
+
+/// Bitwise scenario equality: seeds, delay model, initial parameters
+/// and every timeline event compare by `f64::to_bits`, the same
+/// criterion the replay tests use. [`Scenario`] deliberately has no
+/// `PartialEq` (semantic float equality would be a trap); this is the
+/// explicit, exact form the DSL pin tests and the fuzzer's round-trip
+/// check need.
+pub fn bit_identical(a: &Scenario, b: &Scenario) -> bool {
+    fn feq(x: f64, y: f64) -> bool {
+        x.to_bits() == y.to_bits()
+    }
+    fn peq(x: &PageParams, y: &PageParams) -> bool {
+        feq(x.delta, y.delta) && feq(x.mu, y.mu) && feq(x.lam, y.lam) && feq(x.nu, y.nu)
+    }
+    fn eeq(x: &WorldEvent, y: &WorldEvent) -> bool {
+        use WorldEvent::*;
+        match (x, y) {
+            (PageBorn { params: p }, PageBorn { params: q }) => peq(p, q),
+            (PageRetired { page: p }, PageRetired { page: q }) => p == q,
+            (ParamsChanged { page: i, params: p }, ParamsChanged { page: j, params: q }) => {
+                i == j && peq(p, q)
+            }
+            (
+                CisQualityShift { page: i, lam: l1, nu: n1 },
+                CisQualityShift { page: j, lam: l2, nu: n2 },
+            ) => i == j && feq(*l1, *l2) && feq(*n1, *n2),
+            (CisOutage { pages: p, duration: d1 }, CisOutage { pages: q, duration: d2 }) => {
+                p == q && feq(*d1, *d2)
+            }
+            (BandwidthChange { rate: r1 }, BandwidthChange { rate: r2 }) => feq(*r1, *r2),
+            _ => false,
+        }
+    }
+    a.seed() == b.seed()
+        && a.delay() == b.delay()
+        && a.initial_pages().len() == b.initial_pages().len()
+        && a.initial_pages().iter().zip(b.initial_pages()).all(|(x, y)| peq(x, y))
+        && a.events().len() == b.events().len()
+        && a.events()
+            .iter()
+            .zip(b.events())
+            .all(|(x, y)| feq(x.t, y.t) && eeq(&x.event, &y.event))
+}
+
+// ---------------------------------------------------------------- parsing
+
+#[derive(Clone, Copy)]
+struct Tok<'a> {
+    text: &'a str,
+    col: usize,
+}
+
+fn tokenize(line: &str) -> Vec<Tok<'_>> {
+    let body = match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    };
+    let bytes = body.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i].is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < bytes.len() && !bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        toks.push(Tok { text: &body[start..i], col: start + 1 });
+    }
+    toks
+}
+
+/// Field extractor for one directive line: `key=value` tokens and bare
+/// flags are consumed as they are recognized; anything left over at
+/// [`Fields::finish`] is trailing garbage and fails with its column.
+struct Fields<'a> {
+    line: usize,
+    toks: Vec<Option<Tok<'a>>>,
+}
+
+impl<'a> Fields<'a> {
+    fn new(line: usize, toks: &[Tok<'a>]) -> Self {
+        Self { line, toks: toks.iter().copied().map(Some).collect() }
+    }
+
+    fn err(&self, col: usize, msg: impl Into<String>) -> DslError {
+        DslError { line: self.line, col, msg: msg.into() }
+    }
+
+    fn take(&mut self, key: &str) -> Option<(usize, &'a str)> {
+        for slot in self.toks.iter_mut() {
+            if let Some(t) = slot {
+                if let Some(rest) = t.text.strip_prefix(key) {
+                    if let Some(v) = rest.strip_prefix('=') {
+                        let col = t.col + key.len() + 1;
+                        *slot = None;
+                        return Some((col, v));
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn flag(&mut self, name: &str) -> bool {
+        for slot in self.toks.iter_mut() {
+            if slot.map(|t| t.text == name).unwrap_or(false) {
+                *slot = None;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn f64_raw(&self, col: usize, key: &str, v: &str) -> Result<f64, DslError> {
+        v.parse::<f64>()
+            .map_err(|_| self.err(col, format!("`{key}` expects a number, got `{v}`")))
+    }
+
+    /// Required f64 with a constraint predicate; `what` names the
+    /// constraint in the error ("a finite number >= 0", …).
+    fn f64_where(
+        &mut self,
+        key: &str,
+        what: &str,
+        pred: impl Fn(f64) -> bool,
+    ) -> Result<f64, DslError> {
+        match self.take(key) {
+            None => Err(self.err(1, format!("missing required `{key}=`"))),
+            Some((col, v)) => {
+                let x = self.f64_raw(col, key, v)?;
+                if pred(x) {
+                    Ok(x)
+                } else {
+                    Err(self.err(col, format!("`{key}` must be {what}, got {v}")))
+                }
+            }
+        }
+    }
+
+    /// Optional f64 with a constraint; `None` when absent.
+    fn f64_opt_where(
+        &mut self,
+        key: &str,
+        what: &str,
+        pred: impl Fn(f64) -> bool,
+    ) -> Result<Option<f64>, DslError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some((col, v)) => {
+                let x = self.f64_raw(col, key, v)?;
+                if pred(x) {
+                    Ok(Some(x))
+                } else {
+                    Err(self.err(col, format!("`{key}` must be {what}, got {v}")))
+                }
+            }
+        }
+    }
+
+    fn f64_or_where(
+        &mut self,
+        key: &str,
+        default: f64,
+        what: &str,
+        pred: impl Fn(f64) -> bool,
+    ) -> Result<f64, DslError> {
+        Ok(self.f64_opt_where(key, what, pred)?.unwrap_or(default))
+    }
+
+    fn u64_or(&mut self, key: &str, default: u64) -> Result<u64, DslError> {
+        match self.take(key) {
+            None => Ok(default),
+            Some((col, v)) => parse_u64(v)
+                .ok_or_else(|| self.err(col, format!("`{key}` expects an integer, got `{v}`"))),
+        }
+    }
+
+    fn usize_where(
+        &mut self,
+        key: &str,
+        what: &str,
+        pred: impl Fn(usize) -> bool,
+    ) -> Result<usize, DslError> {
+        match self.take(key) {
+            None => Err(self.err(1, format!("missing required `{key}=`"))),
+            Some((col, v)) => {
+                let x = v
+                    .parse::<usize>()
+                    .map_err(|_| self.err(col, format!("`{key}` expects an integer, got `{v}`")))?;
+                if pred(x) {
+                    Ok(x)
+                } else {
+                    Err(self.err(col, format!("`{key}` must be {what}, got {v}")))
+                }
+            }
+        }
+    }
+
+    fn usize_opt_where(
+        &mut self,
+        key: &str,
+        what: &str,
+        pred: impl Fn(usize) -> bool,
+    ) -> Result<Option<usize>, DslError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some((col, v)) => {
+                let x = v
+                    .parse::<usize>()
+                    .map_err(|_| self.err(col, format!("`{key}` expects an integer, got `{v}`")))?;
+                if pred(x) {
+                    Ok(Some(x))
+                } else {
+                    Err(self.err(col, format!("`{key}` must be {what}, got {v}")))
+                }
+            }
+        }
+    }
+
+    /// `pages=all` → `None`; `pages=1,2,3` → sorted-as-written list.
+    fn page_set(&mut self) -> Result<Option<Vec<usize>>, DslError> {
+        match self.take("pages") {
+            None => Ok(None),
+            Some((_, "all")) => Ok(None),
+            Some((col, v)) => {
+                let mut out = Vec::new();
+                for part in v.split(',') {
+                    let p = part.parse::<usize>().map_err(|_| {
+                        self.err(col, format!("`pages` expects `all` or indices, got `{v}`"))
+                    })?;
+                    out.push(p);
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+
+    fn f64_list(&mut self, key: &str) -> Result<Vec<f64>, DslError> {
+        match self.take(key) {
+            None => Err(self.err(1, format!("missing required `{key}=`"))),
+            Some((col, v)) => {
+                let mut out = Vec::new();
+                for part in v.split(',') {
+                    let x = self.f64_raw(col, key, part)?;
+                    if !(x > 0.0 && x.is_finite()) {
+                        return Err(self.err(
+                            col,
+                            format!("`{key}` entries must be positive and finite, got {part}"),
+                        ));
+                    }
+                    out.push(x);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn finish(self) -> Result<(), DslError> {
+        for t in self.toks.into_iter().flatten() {
+            return Err(DslError {
+                line: self.line,
+                col: t.col,
+                msg: format!("unexpected trailing `{}`", t.text),
+            });
+        }
+        Ok(())
+    }
+}
+
+fn parse_u64(v: &str) -> Option<u64> {
+    if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse::<u64>().ok()
+    }
+}
+
+// shared constraint predicates + their error phrasing
+const FIN_POS: (&str, fn(f64) -> bool) = ("positive and finite", |x| x > 0.0 && x.is_finite());
+const FIN_NONNEG: (&str, fn(f64) -> bool) = ("finite and >= 0", |x| x >= 0.0 && x.is_finite());
+const UNIT: (&str, fn(f64) -> bool) = ("in [0, 1]", |x| (0.0..=1.0).contains(&x));
+
+impl WorldSpec {
+    /// Parse a world file. Malformed input — unknown directives,
+    /// NaN/negative/out-of-range values, trailing garbage — returns
+    /// `Err` with line and column context; this function never panics.
+    pub fn parse(text: &str) -> Result<Self, DslError> {
+        let mut directives = Vec::new();
+        let mut lines = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = i + 1;
+            let toks = tokenize(raw);
+            let Some(head) = toks.first().copied() else { continue };
+            let mut f = Fields::new(line, &toks[1..]);
+            let d = match head.text {
+                "world" => Directive::World {
+                    horizon: f.f64_where("horizon", FIN_POS.0, FIN_POS.1)?,
+                    bandwidth: f.f64_where("bandwidth", FIN_POS.0, FIN_POS.1)?,
+                    scenario_seed: f.u64_or("scenario_seed", 0)?,
+                    timeline_window: f.usize_opt_where("timeline_window", "at least 1", |x| {
+                        x >= 1
+                    })?,
+                },
+                "pages" => parse_pages(&mut f)?,
+                "churn" => Directive::Churn {
+                    rho: f.f64_where("rho", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    horizon: f.f64_opt_where("horizon", FIN_POS.0, FIN_POS.1)?,
+                    seed: f.u64_or("seed", 0)?,
+                },
+                "flash" => Directive::Flash {
+                    t: f.f64_where("t", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    duration: f.f64_where("duration", FIN_POS.0, FIN_POS.1)?,
+                    frac: f.f64_where("frac", UNIT.0, UNIT.1)?,
+                    // factor bounds keep the scaled parameters inside
+                    // PageParams::validate's domain (Δ·factor stays
+                    // positive and finite for any §6.3 draw)
+                    mu_factor: f.f64_where("mu_factor", "in [0, 1e6]", |x| {
+                        (0.0..=1e6).contains(&x)
+                    })?,
+                    delta_factor: f.f64_or_where(
+                        "delta_factor",
+                        1.0,
+                        "in [1e-6, 1e6]",
+                        |x| (1e-6..=1e6).contains(&x),
+                    )?,
+                    seed: f.u64_or("seed", 0)?,
+                },
+                "drift" => Directive::Drift {
+                    period: f.f64_where("period", FIN_POS.0, FIN_POS.1)?,
+                    amplitude: f.f64_where("amplitude", "in (-1, 1)", |x| {
+                        x.is_finite() && x.abs() < 1.0
+                    })?,
+                    samples: f.usize_where("samples", "at least 1", |x| x >= 1)?,
+                    frac: f.f64_where("frac", UNIT.0, UNIT.1)?,
+                    horizon: f.f64_opt_where("horizon", FIN_POS.0, FIN_POS.1)?,
+                    seed: f.u64_or("seed", 0)?,
+                },
+                "outage" => Directive::Outage {
+                    t: f.f64_where("t", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    duration: f.f64_where("duration", FIN_POS.0, FIN_POS.1)?,
+                    pages: f.page_set()?,
+                },
+                "host_outages" => Directive::HostOutages {
+                    hosts: f.usize_where("hosts", "at least 1", |x| x >= 1)?,
+                    n: f.usize_where("n", "an integer", |_| true)?,
+                    mean: f.f64_where("mean", FIN_POS.0, FIN_POS.1)?,
+                    horizon: f.f64_opt_where("horizon", FIN_POS.0, FIN_POS.1)?,
+                    seed: f.u64_or("seed", 0)?,
+                },
+                "adversarial_cis" => Directive::AdversarialCis {
+                    t: f.f64_where("t", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    frac: f.f64_or_where("frac", 0.1, "in (0, 1]", |x| {
+                        x > 0.0 && x <= 1.0
+                    })?,
+                    lam: f.f64_where("lam", UNIT.0, UNIT.1)?,
+                    nu: f.f64_where("nu", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                },
+                "bandwidth" => Directive::Bandwidth {
+                    t: f.f64_where("t", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    rate: f.f64_where("rate", FIN_POS.0, FIN_POS.1)?,
+                },
+                "regions" => Directive::Regions {
+                    t: f.f64_where("t", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    interval: f.f64_where("interval", FIN_POS.0, FIN_POS.1)?,
+                    rates: f.f64_list("rates")?,
+                },
+                "faults" => Directive::Faults {
+                    transient: f.f64_where("transient", UNIT.0, UNIT.1)?,
+                    timeout: f.f64_where("timeout", UNIT.0, UNIT.1)?,
+                    gone: f.f64_or_where("gone", 0.0, UNIT.0, UNIT.1)?,
+                    hosts: f.usize_opt_where("hosts", "at least 1", |x| x >= 1)?.unwrap_or(1),
+                    seed: f.u64_or("seed", 0)?,
+                },
+                "fault_outages" => Directive::FaultOutages {
+                    n: f.usize_where("n", "an integer", |_| true)?,
+                    mean: f.f64_where("mean", FIN_POS.0, FIN_POS.1)?,
+                    horizon: f.f64_opt_where("horizon", FIN_POS.0, FIN_POS.1)?,
+                    seed: f.u64_or("seed", 0)?,
+                },
+                "fault_window" => {
+                    let host = f.usize_where("host", "an integer", |_| true)?;
+                    let start = f.f64_where("start", FIN_NONNEG.0, FIN_NONNEG.1)?;
+                    let end = f.f64_where("end", FIN_POS.0, FIN_POS.1)?;
+                    if end <= start {
+                        return Err(f.err(
+                            1,
+                            format!("fault_window end ({end}) must be after start ({start})"),
+                        ));
+                    }
+                    Directive::FaultWindow { host, start, end }
+                }
+                "retry" => parse_retry(&mut f)?,
+                "traffic" => Directive::Traffic {
+                    rate: f.f64_where("rate", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    zipf: f.f64_where("zipf", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    seed: f.u64_or("seed", 0)?,
+                },
+                "diurnal" => Directive::Diurnal {
+                    period: f.f64_where("period", FIN_POS.0, FIN_POS.1)?,
+                    amplitude: f.f64_where("amplitude", UNIT.0, UNIT.1)?,
+                },
+                "request_flash" => Directive::RequestFlash {
+                    t: f.f64_where("t", FIN_NONNEG.0, FIN_NONNEG.1)?,
+                    duration: f.f64_where("duration", FIN_POS.0, FIN_POS.1)?,
+                    page: f.usize_where("page", "an integer", |_| true)?,
+                    extra: f.f64_where("extra", FIN_POS.0, FIN_POS.1)?,
+                },
+                other => {
+                    return Err(DslError {
+                        line,
+                        col: head.col,
+                        msg: format!("unknown directive `{other}`"),
+                    })
+                }
+            };
+            f.finish()?;
+            directives.push(d);
+            lines.push(line);
+        }
+        Ok(Self { directives, lines })
+    }
+
+    /// The parsed directives, in source order.
+    pub fn directives(&self) -> &[Directive] {
+        &self.directives
+    }
+
+    /// Canonical text form: one line per directive, defaults made
+    /// explicit, numbers in shortest round-trip notation, seeds in
+    /// hex. `parse(render(spec)) == spec` — the `dsl_round_trip`
+    /// property in `tests/world_fuzz.rs` fuzzes this identity.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.directives {
+            render_directive(d, &mut out);
+        }
+        out
+    }
+
+    /// Compile the directives, in file order, into a runnable world.
+    /// Structural rules checked here: `world` first, `pages` second,
+    /// each of `world`/`pages`/`faults`/`retry`/`traffic`/`diurnal` at
+    /// most once, page indices in range, traffic modifiers after
+    /// `traffic`, fault directives after `faults`, and explicit fetch
+    /// outage windows non-overlapping per host.
+    pub fn compile(&self) -> Result<CompiledWorld, DslError> {
+        let at = |idx: usize| self.lines.get(idx).copied().unwrap_or(1);
+        let fail = |idx: usize, msg: String| DslError { line: at(idx), col: 1, msg };
+
+        let Some(Directive::World { horizon, bandwidth, scenario_seed, timeline_window }) =
+            self.directives.first()
+        else {
+            return Err(DslError {
+                line: 1,
+                col: 1,
+                msg: "the first directive must be `world`".into(),
+            });
+        };
+        let (world_horizon, bandwidth, timeline_window) =
+            (*horizon, *bandwidth, *timeline_window);
+        let pages = match self.directives.get(1) {
+            Some(Directive::Pages { model, m, seed, partial_cis, false_positives, normalized }) => {
+                build_pages(*model, *m, *seed, *partial_cis, *false_positives, *normalized)
+            }
+            _ => {
+                return Err(DslError {
+                    line: self.lines.get(1).copied().unwrap_or(1),
+                    col: 1,
+                    msg: "the second directive must be `pages`".into(),
+                })
+            }
+        };
+        let m = pages.len();
+
+        let mut scenario = Scenario::new(pages.clone(), *scenario_seed);
+        let mut faults: Option<FaultConfig> = None;
+        let mut explicit_windows: Vec<HostOutage> = Vec::new();
+        let mut retry: Option<RetryPolicy> = None;
+        let mut traffic: Option<RequestTraffic> = None;
+        let mut have_diurnal = false;
+
+        for (idx, d) in self.directives.iter().enumerate().skip(2) {
+            match d {
+                Directive::World { .. } => {
+                    return Err(fail(idx, "duplicate `world` directive".into()))
+                }
+                Directive::Pages { .. } => {
+                    return Err(fail(idx, "duplicate `pages` directive".into()))
+                }
+                Directive::Churn { rho, horizon, seed } => add_steady_churn(
+                    &mut scenario,
+                    *rho,
+                    horizon.unwrap_or(world_horizon),
+                    &BornPageSpec::default(),
+                    *seed,
+                ),
+                Directive::Flash { t, duration, frac, mu_factor, delta_factor, seed } => {
+                    add_flash_crowd(
+                        &mut scenario,
+                        *t,
+                        *duration,
+                        *frac,
+                        *mu_factor,
+                        *delta_factor,
+                        *seed,
+                    )
+                }
+                Directive::Drift { period, amplitude, samples, frac, horizon, seed } => {
+                    add_diurnal_drift(
+                        &mut scenario,
+                        *period,
+                        *amplitude,
+                        *samples,
+                        *frac,
+                        horizon.unwrap_or(world_horizon),
+                        *seed,
+                    )
+                }
+                Directive::Outage { t, duration, pages: set } => {
+                    let set = match set {
+                        None => PageSet::All,
+                        Some(v) => {
+                            if let Some(&p) = v.iter().find(|&&p| p >= m) {
+                                return Err(fail(
+                                    idx,
+                                    format!("outage page {p} out of range (m = {m})"),
+                                ));
+                            }
+                            PageSet::Pages(v.clone())
+                        }
+                    };
+                    scenario.push(*t, WorldEvent::CisOutage { pages: set, duration: *duration });
+                }
+                Directive::HostOutages { hosts, n, mean, horizon, seed } => add_correlated_outages(
+                    &mut scenario,
+                    *hosts,
+                    *n,
+                    *mean,
+                    horizon.unwrap_or(world_horizon),
+                    *seed,
+                ),
+                Directive::AdversarialCis { t, frac, lam, nu } => {
+                    // rank by importance, highest μ first, index as the
+                    // deterministic tie-break; shift the top `frac`
+                    let mut order: Vec<usize> = (0..m).collect();
+                    order.sort_by(|&a, &b| {
+                        pages[b].mu.total_cmp(&pages[a].mu).then(a.cmp(&b))
+                    });
+                    let k = ((m as f64) * frac).ceil() as usize;
+                    let mut chosen: Vec<usize> = order.into_iter().take(k.min(m)).collect();
+                    chosen.sort_unstable();
+                    for page in chosen {
+                        scenario
+                            .push(*t, WorldEvent::CisQualityShift { page, lam: *lam, nu: *nu });
+                    }
+                }
+                Directive::Bandwidth { t, rate } => {
+                    scenario.push(*t, WorldEvent::BandwidthChange { rate: *rate });
+                }
+                Directive::Regions { t, interval, rates } => {
+                    for (k, &rate) in rates.iter().enumerate() {
+                        scenario.push(
+                            t + interval * k as f64,
+                            WorldEvent::BandwidthChange { rate },
+                        );
+                    }
+                }
+                Directive::Faults { transient, timeout, gone, hosts, seed } => {
+                    if faults.is_some() {
+                        return Err(fail(idx, "duplicate `faults` directive".into()));
+                    }
+                    faults = Some(FaultConfig {
+                        transient_prob: *transient,
+                        timeout_prob: *timeout,
+                        gone_prob: *gone,
+                        hosts: *hosts,
+                        outages: Vec::new(),
+                        seed: *seed,
+                    });
+                }
+                Directive::FaultOutages { n, mean, horizon, seed } => {
+                    let cfg = faults.as_mut().ok_or_else(|| {
+                        fail(idx, "`fault_outages` requires a prior `faults` directive".into())
+                    })?;
+                    cfg.add_correlated_outages(*n, *mean, horizon.unwrap_or(world_horizon), *seed);
+                }
+                Directive::FaultWindow { host, start, end } => {
+                    let cfg = faults.as_mut().ok_or_else(|| {
+                        fail(idx, "`fault_window` requires a prior `faults` directive".into())
+                    })?;
+                    if *host >= cfg.hosts {
+                        return Err(fail(
+                            idx,
+                            format!("fault_window host {host} out of range (hosts {})", cfg.hosts),
+                        ));
+                    }
+                    let w = HostOutage { host: *host, start: *start, end: *end };
+                    if let Some(prev) = explicit_windows
+                        .iter()
+                        .find(|p| p.host == w.host && w.start < p.end && p.start < w.end)
+                    {
+                        return Err(fail(
+                            idx,
+                            format!(
+                                "overlapping outage windows for host {}: [{}, {}) and [{}, {})",
+                                w.host, prev.start, prev.end, w.start, w.end
+                            ),
+                        ));
+                    }
+                    explicit_windows.push(w);
+                    cfg.outages.push(w);
+                }
+                Directive::Retry(spec) => {
+                    if retry.is_some() {
+                        return Err(fail(idx, "duplicate `retry` directive".into()));
+                    }
+                    retry = Some(match *spec {
+                        RetrySpec::Backoff => RetryPolicy::default(),
+                        RetrySpec::Immediate { max_attempts } => {
+                            RetryPolicy::Immediate { max_attempts }
+                        }
+                    });
+                }
+                Directive::Traffic { rate, zipf, seed } => {
+                    if traffic.is_some() {
+                        return Err(fail(idx, "duplicate `traffic` directive".into()));
+                    }
+                    traffic = Some(
+                        RequestTraffic::new(*rate, *zipf, *seed)
+                            .map_err(|e| fail(idx, e.to_string()))?,
+                    );
+                }
+                Directive::Diurnal { period, amplitude } => {
+                    let t = traffic.take().ok_or_else(|| {
+                        fail(idx, "`diurnal` requires a prior `traffic` directive".into())
+                    })?;
+                    if have_diurnal {
+                        return Err(fail(idx, "duplicate `diurnal` directive".into()));
+                    }
+                    have_diurnal = true;
+                    traffic = Some(
+                        t.with_diurnal(*period, *amplitude)
+                            .map_err(|e| fail(idx, e.to_string()))?,
+                    );
+                }
+                Directive::RequestFlash { t, duration, page, extra } => {
+                    if *page >= m {
+                        return Err(fail(
+                            idx,
+                            format!("request_flash page {page} out of range (m = {m})"),
+                        ));
+                    }
+                    let tr = traffic.take().ok_or_else(|| {
+                        fail(idx, "`request_flash` requires a prior `traffic` directive".into())
+                    })?;
+                    traffic = Some(
+                        tr.with_flash(*t, *duration, *page, *extra)
+                            .map_err(|e| fail(idx, e.to_string()))?,
+                    );
+                }
+            }
+        }
+        if let Some(cfg) = &faults {
+            cfg.validate().map_err(|e| fail(0, e.to_string()))?;
+        }
+        Ok(CompiledWorld {
+            horizon: world_horizon,
+            bandwidth,
+            timeline_window,
+            scenario,
+            faults,
+            retry: retry.unwrap_or_default(),
+            traffic,
+        })
+    }
+}
+
+fn parse_pages(f: &mut Fields<'_>) -> Result<Directive, DslError> {
+    // the model is a bare sub-kind token, not key=value
+    let model = if f.flag("section6") {
+        PageModel::Section6
+    } else if f.flag("zipf") {
+        PageModel::Zipf { s: f.f64_where("s", FIN_POS.0, FIN_POS.1)? }
+    } else {
+        return Err(f.err(1, "pages expects a model: `section6` or `zipf`"));
+    };
+    Ok(Directive::Pages {
+        model,
+        m: f.usize_where("m", "at least 1", |x| x >= 1)?,
+        seed: f.u64_or("seed", 0x5EED)?,
+        partial_cis: f.flag("partial_cis"),
+        false_positives: f.flag("false_positives"),
+        normalized: f.flag("normalized"),
+    })
+}
+
+fn parse_retry(f: &mut Fields<'_>) -> Result<Directive, DslError> {
+    if f.flag("backoff") {
+        Ok(Directive::Retry(RetrySpec::Backoff))
+    } else if f.flag("immediate") {
+        let max = f.usize_where("max_attempts", "at least 1", |x| x >= 1)?;
+        Ok(Directive::Retry(RetrySpec::Immediate { max_attempts: max as u32 }))
+    } else {
+        Err(f.err(1, "retry expects a policy: `backoff` or `immediate max_attempts=N`"))
+    }
+}
+
+fn build_pages(
+    model: PageModel,
+    m: usize,
+    seed: u64,
+    partial_cis: bool,
+    false_positives: bool,
+    normalized: bool,
+) -> Vec<PageParams> {
+    let inst = match model {
+        PageModel::Section6 => {
+            // exactly the figure harness's construction, so a DSL world
+            // is bit-identical to its hand-built twin
+            let mut spec = ExperimentSpec::section6(m, 1);
+            spec.seed = seed;
+            if partial_cis {
+                spec = spec.with_partial_cis();
+            }
+            if false_positives {
+                spec = spec.with_false_positives();
+            }
+            spec.gen_instance(&mut Rng::new(spec.seed))
+        }
+        PageModel::Zipf { s } => {
+            let mut rng = Rng::new(seed);
+            let pages = (0..m)
+                .map(|i| PageParams {
+                    delta: rng.range(1e-4, 1.0),
+                    lam: if partial_cis { rngkit::beta(&mut rng, 0.25, 0.25) } else { 0.0 },
+                    nu: if false_positives { rng.range(0.1, 0.6) } else { 0.0 },
+                    mu: 1.0 / ((i + 1) as f64).powf(s),
+                })
+                .collect();
+            Instance { pages, bandwidth: 0.0 }
+        }
+    };
+    if normalized {
+        inst.normalized().pages
+    } else {
+        inst.pages
+    }
+}
+
+fn render_directive(d: &Directive, out: &mut String) {
+    // infallible: fmt::Write on String cannot fail
+    let _ = match d {
+        Directive::World { horizon, bandwidth, scenario_seed, timeline_window } => {
+            let _ = write!(
+                out,
+                "world horizon={horizon:?} bandwidth={bandwidth:?} scenario_seed=0x{scenario_seed:x}"
+            );
+            if let Some(w) = timeline_window {
+                let _ = write!(out, " timeline_window={w}");
+            }
+            writeln!(out)
+        }
+        Directive::Pages { model, m, seed, partial_cis, false_positives, normalized } => {
+            match model {
+                PageModel::Section6 => {
+                    let _ = write!(out, "pages section6 m={m} seed=0x{seed:x}");
+                }
+                PageModel::Zipf { s } => {
+                    let _ = write!(out, "pages zipf s={s:?} m={m} seed=0x{seed:x}");
+                }
+            }
+            for (on, name) in [
+                (partial_cis, "partial_cis"),
+                (false_positives, "false_positives"),
+                (normalized, "normalized"),
+            ] {
+                if **on {
+                    let _ = write!(out, " {name}");
+                }
+            }
+            writeln!(out)
+        }
+        Directive::Churn { rho, horizon, seed } => {
+            let _ = write!(out, "churn rho={rho:?}");
+            if let Some(h) = horizon {
+                let _ = write!(out, " horizon={h:?}");
+            }
+            writeln!(out, " seed=0x{seed:x}")
+        }
+        Directive::Flash { t, duration, frac, mu_factor, delta_factor, seed } => writeln!(
+            out,
+            "flash t={t:?} duration={duration:?} frac={frac:?} mu_factor={mu_factor:?} \
+             delta_factor={delta_factor:?} seed=0x{seed:x}"
+        ),
+        Directive::Drift { period, amplitude, samples, frac, horizon, seed } => {
+            let _ = write!(
+                out,
+                "drift period={period:?} amplitude={amplitude:?} samples={samples} frac={frac:?}"
+            );
+            if let Some(h) = horizon {
+                let _ = write!(out, " horizon={h:?}");
+            }
+            writeln!(out, " seed=0x{seed:x}")
+        }
+        Directive::Outage { t, duration, pages } => {
+            let _ = write!(out, "outage t={t:?} duration={duration:?} pages=");
+            match pages {
+                None => {
+                    let _ = write!(out, "all");
+                }
+                Some(v) => {
+                    for (k, p) in v.iter().enumerate() {
+                        let _ = write!(out, "{}{p}", if k > 0 { "," } else { "" });
+                    }
+                }
+            }
+            writeln!(out)
+        }
+        Directive::HostOutages { hosts, n, mean, horizon, seed } => {
+            let _ = write!(out, "host_outages hosts={hosts} n={n} mean={mean:?}");
+            if let Some(h) = horizon {
+                let _ = write!(out, " horizon={h:?}");
+            }
+            writeln!(out, " seed=0x{seed:x}")
+        }
+        Directive::AdversarialCis { t, frac, lam, nu } => {
+            writeln!(out, "adversarial_cis t={t:?} frac={frac:?} lam={lam:?} nu={nu:?}")
+        }
+        Directive::Bandwidth { t, rate } => writeln!(out, "bandwidth t={t:?} rate={rate:?}"),
+        Directive::Regions { t, interval, rates } => {
+            let _ = write!(out, "regions t={t:?} interval={interval:?} rates=");
+            for (k, r) in rates.iter().enumerate() {
+                let _ = write!(out, "{}{r:?}", if k > 0 { "," } else { "" });
+            }
+            writeln!(out)
+        }
+        Directive::Faults { transient, timeout, gone, hosts, seed } => writeln!(
+            out,
+            "faults transient={transient:?} timeout={timeout:?} gone={gone:?} hosts={hosts} \
+             seed=0x{seed:x}"
+        ),
+        Directive::FaultOutages { n, mean, horizon, seed } => {
+            let _ = write!(out, "fault_outages n={n} mean={mean:?}");
+            if let Some(h) = horizon {
+                let _ = write!(out, " horizon={h:?}");
+            }
+            writeln!(out, " seed=0x{seed:x}")
+        }
+        Directive::FaultWindow { host, start, end } => {
+            writeln!(out, "fault_window host={host} start={start:?} end={end:?}")
+        }
+        Directive::Retry(RetrySpec::Backoff) => writeln!(out, "retry backoff"),
+        Directive::Retry(RetrySpec::Immediate { max_attempts }) => {
+            writeln!(out, "retry immediate max_attempts={max_attempts}")
+        }
+        Directive::Traffic { rate, zipf, seed } => {
+            writeln!(out, "traffic rate={rate:?} zipf={zipf:?} seed=0x{seed:x}")
+        }
+        Directive::Diurnal { period, amplitude } => {
+            writeln!(out, "diurnal period={period:?} amplitude={amplitude:?}")
+        }
+        Directive::RequestFlash { t, duration, page, extra } => writeln!(
+            out,
+            "request_flash t={t:?} duration={duration:?} page={page} extra={extra:?}"
+        ),
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = "\
+# a small but fully-loaded world
+world horizon=40.0 bandwidth=5.0 scenario_seed=0x5ce7 timeline_window=100
+pages zipf s=1.1 m=24 seed=0x5eed partial_cis false_positives normalized
+churn rho=0.01 seed=0x5ce8
+flash t=8.0 duration=4.0 frac=0.25 mu_factor=6.0 delta_factor=2.0 seed=0x9
+drift period=10.0 amplitude=0.4 samples=4 frac=0.5 seed=0xa
+outage t=15.0 duration=5.0 pages=all
+outage t=2.0 duration=1.0 pages=1,3,5
+host_outages hosts=4 n=3 mean=2.0 seed=0xb
+adversarial_cis t=20.0 frac=0.1 lam=0.05 nu=0.9
+bandwidth t=30.0 rate=8.0
+regions t=33.0 interval=2.0 rates=3.0,6.0,9.0
+faults transient=0.1 timeout=0.02 gone=0.001 hosts=4 seed=0xfa17
+fault_outages n=2 mean=3.0 seed=0xfa18
+fault_window host=1 start=5.0 end=7.0
+retry immediate max_attempts=3
+traffic rate=6.0 zipf=1.1 seed=0x7aff
+diurnal period=10.0 amplitude=0.5
+request_flash t=12.0 duration=3.0 page=12 extra=20.0
+";
+
+    fn err(text: &str) -> DslError {
+        match WorldSpec::parse(text).and_then(|s| s.compile()) {
+            Ok(_) => panic!("expected a parse/compile error for:\n{text}"),
+            Err(e) => e,
+        }
+    }
+
+    #[test]
+    fn full_grammar_parses_and_compiles() {
+        let w = parse_world(MINI).unwrap();
+        assert_eq!(w.initial_pages().len(), 24);
+        assert!(!w.scenario.is_static());
+        let fc = w.faults.as_ref().unwrap();
+        assert_eq!(fc.hosts, 4);
+        // 2 generated + 1 explicit fetch-outage windows
+        assert_eq!(fc.outages.len(), 3);
+        assert_eq!(w.retry, RetryPolicy::Immediate { max_attempts: 3 });
+        let tr = w.traffic.as_ref().unwrap();
+        assert_eq!(tr.diurnal(), Some((10.0, 0.5)));
+        assert_eq!(tr.flashes().len(), 1);
+        assert_eq!(w.timeline_window, Some(100));
+        // importance was normalized
+        let total: f64 = w.initial_pages().iter().map(|p| p.mu).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let spec = WorldSpec::parse(MINI).unwrap();
+        let rendered = spec.render();
+        let again = WorldSpec::parse(&rendered).unwrap();
+        assert_eq!(spec, again, "parse → render → parse must be the identity");
+        // and the rendered form is a fixpoint of render itself
+        assert_eq!(rendered, again.render());
+        // compiled worlds agree bit-for-bit
+        let (a, b) = (spec.compile().unwrap(), again.compile().unwrap());
+        assert!(bit_identical(&a.scenario, &b.scenario));
+    }
+
+    #[test]
+    fn unknown_directive_reports_position() {
+        let e = err("world horizon=10.0 bandwidth=1.0\npages section6 m=4\nwibble x=1\n");
+        assert_eq!((e.line, e.col), (3, 1));
+        assert!(e.msg.contains("unknown directive `wibble`"), "{e}");
+    }
+
+    #[test]
+    fn nan_and_negative_rates_are_rejected_not_panicked() {
+        let e = err("world horizon=nan bandwidth=1.0\npages section6 m=4\n");
+        assert_eq!(e.line, 1);
+        assert!(e.msg.contains("horizon"), "{e}");
+        let e = err("world horizon=10.0 bandwidth=1.0\npages section6 m=4\nchurn rho=-0.5\n");
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("rho"), "{e}");
+        let e = err(
+            "world horizon=10.0 bandwidth=1.0\npages section6 m=4\nbandwidth t=1.0 rate=-2.0\n",
+        );
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("rate"), "{e}");
+    }
+
+    #[test]
+    fn error_column_points_at_the_value() {
+        let e = err("world horizon=10.0 bandwidth=oops\npages section6 m=4\n");
+        // column of the value inside `bandwidth=oops`
+        assert_eq!((e.line, e.col), (1, 30));
+        assert!(e.msg.contains("expects a number"), "{e}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected_with_its_column() {
+        let e = err("world horizon=10.0 bandwidth=1.0 surprise\npages section6 m=4\n");
+        assert_eq!((e.line, e.col), (1, 34));
+        assert!(e.msg.contains("unexpected trailing `surprise`"), "{e}");
+    }
+
+    #[test]
+    fn overlapping_fault_windows_are_rejected() {
+        let e = err("world horizon=10.0 bandwidth=1.0\npages section6 m=4\n\
+                     faults transient=0.1 timeout=0.0 hosts=2\n\
+                     fault_window host=1 start=1.0 end=3.0\n\
+                     fault_window host=1 start=2.0 end=4.0\n");
+        assert_eq!(e.line, 5);
+        assert!(e.msg.contains("overlapping outage windows for host 1"), "{e}");
+        // disjoint windows and other hosts are fine
+        assert!(parse_world(
+            "world horizon=10.0 bandwidth=1.0\npages section6 m=4\n\
+             faults transient=0.1 timeout=0.0 hosts=2\n\
+             fault_window host=1 start=1.0 end=3.0\n\
+             fault_window host=1 start=3.0 end=4.0\n\
+             fault_window host=0 start=2.0 end=4.0\n"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn structural_rules_are_enforced() {
+        assert!(err("pages section6 m=4\n").msg.contains("must be `world`"));
+        assert!(err("world horizon=10.0 bandwidth=1.0\nchurn rho=0.1\n")
+            .msg
+            .contains("must be `pages`"));
+        assert!(err("world horizon=10.0 bandwidth=1.0\npages section6 m=4\n\
+                     diurnal period=5.0 amplitude=0.5\n")
+            .msg
+            .contains("requires a prior `traffic`"));
+        assert!(err("world horizon=10.0 bandwidth=1.0\npages section6 m=4\n\
+                     fault_outages n=1 mean=2.0\n")
+            .msg
+            .contains("requires a prior `faults`"));
+        assert!(err("world horizon=10.0 bandwidth=1.0\npages section6 m=4\n\
+                     outage t=1.0 duration=1.0 pages=9\n")
+            .msg
+            .contains("out of range"));
+        assert!(err("world horizon=10.0 bandwidth=1.0\npages section6 m=4\n\
+                     world horizon=9.0 bandwidth=1.0\n")
+            .msg
+            .contains("duplicate `world`"));
+    }
+
+    #[test]
+    fn missing_required_field_is_reported() {
+        let e = err("world horizon=10.0\npages section6 m=4\n");
+        assert_eq!(e.line, 1);
+        assert!(e.msg.contains("missing required `bandwidth=`"), "{e}");
+    }
+
+    #[test]
+    fn adversarial_cis_hits_the_top_importance_decile() {
+        let text = "world horizon=10.0 bandwidth=1.0 scenario_seed=0x1\n\
+                    pages zipf s=1.0 m=20 seed=0x2\n\
+                    adversarial_cis t=1.0 frac=0.1 lam=0.0 nu=2.0\n";
+        let w = parse_world(text).unwrap();
+        // Zipf importance is rank order: the top decile of m=20 is
+        // pages {0, 1}
+        let shifted: Vec<usize> = w
+            .scenario
+            .events()
+            .iter()
+            .filter_map(|e| match e.event {
+                WorldEvent::CisQualityShift { page, .. } => Some(page),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(shifted, vec![0, 1]);
+    }
+
+    #[test]
+    fn regions_compile_to_staggered_bandwidth_steps() {
+        let text = "world horizon=10.0 bandwidth=1.0\npages section6 m=4\n\
+                    regions t=2.0 interval=1.5 rates=3.0,6.0\n";
+        let w = parse_world(text).unwrap();
+        let steps: Vec<(f64, f64)> = w
+            .scenario
+            .events()
+            .iter()
+            .filter_map(|e| match e.event {
+                WorldEvent::BandwidthChange { rate } => Some((e.t, rate)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(steps, vec![(2.0, 3.0), (3.5, 6.0)]);
+    }
+
+    #[test]
+    fn hex_and_decimal_seeds_both_parse() {
+        let a = parse_world("world horizon=10.0 bandwidth=1.0 scenario_seed=0x10\n\
+                             pages section6 m=4\n")
+            .unwrap();
+        let b = parse_world("world horizon=10.0 bandwidth=1.0 scenario_seed=16\n\
+                             pages section6 m=4\n")
+            .unwrap();
+        assert_eq!(a.scenario.seed(), 16);
+        assert!(bit_identical(&a.scenario, &b.scenario));
+    }
+}

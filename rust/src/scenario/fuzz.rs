@@ -1,0 +1,624 @@
+//! Deterministic world fuzzer: random DSL worlds → every engine →
+//! replay twice → audit.
+//!
+//! Each seed expands, via [`gen_world_dsl`], into a random world file
+//! within the DSL's validity envelope (the generator and the parser
+//! share constraints, so generation failing to parse is itself a
+//! finding). The world then runs through every engine lane it
+//! activates — materialized and streamed scenario replay, the serving
+//! loop when traffic is present, the fault engine when a failure model
+//! is present, and the learned-knowledge decorator — and every lane
+//! runs **twice from identical fresh state**. Any fingerprint
+//! divergence between the two runs is a determinism bug (the property
+//! the whole evaluation's rep/CI machinery rests on); any
+//! [`WorldAudit`](crate::scenario::invariants::WorldAudit) failure is
+//! a conservation bug. Either way the run's flight recorder is dumped
+//! through [`crate::trace::verify_or_dump`], so a [`FuzzViolation`] is
+//! a self-contained repro bundle: the seed, the exact DSL text, the
+//! violated law, and the last [`DUMP_WINDOW`](crate::trace) decisions
+//! before the violation as JSONL.
+//!
+//! Drivers: the `fuzz` CLI subcommand (CI's `fuzz-smoke` step) and
+//! `tests/world_fuzz.rs` (seed-corpus replay + a smoke range).
+
+use std::fmt;
+
+use crate::coordinator::builder::{Knowledge, Strategy};
+use crate::estimation::EstimatorConfig;
+use crate::fault::{simulate_faulty_traced_with, FaultModel, FaultSimResult};
+use crate::policy::PolicyKind;
+use crate::rngkit::Rng;
+use crate::scenario::dsl::{bit_identical, WorldSpec};
+use crate::scenario::invariants::WorldAudit;
+use crate::serving::ServingMetrics;
+use crate::sim::{generate_traces, CisDelay, SimResult, SimWorkspace, TraceMode};
+use crate::trace::{self, TraceHandle};
+
+/// Flight-recorder capacity per fuzz lane (events kept for the dump).
+const RECORDER_CAP: usize = 4096;
+/// Stop a fuzz campaign after this many violations: past a handful the
+/// rest are almost certainly the same bug, and each bundle is large.
+const MAX_VIOLATIONS: usize = 8;
+
+/// A self-contained failure bundle: everything needed to reproduce and
+/// diagnose one violated run without re-fuzzing.
+#[derive(Debug, Clone)]
+pub struct FuzzViolation {
+    /// The world seed (replay with `fuzz --seed <seed> --worlds 1`).
+    pub seed: u64,
+    /// The exact DSL text of the offending world.
+    pub dsl: String,
+    /// Which lane and which law broke.
+    pub message: String,
+    /// The lane's last flight-recorder events as JSONL (empty when the
+    /// failure precedes any engine run).
+    pub flight_jsonl: String,
+}
+
+impl fmt::Display for FuzzViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "seed 0x{:x}: {}", self.seed, self.message)?;
+        writeln!(f, "--- world ---")?;
+        write!(f, "{}", self.dsl)
+    }
+}
+
+/// Campaign parameters for [`run_fuzz`].
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Number of worlds to generate and run.
+    pub worlds: usize,
+    /// First seed; world `k` uses `start_seed + k`.
+    pub start_seed: u64,
+    /// Optional wall-clock budget; the campaign stops cleanly at the
+    /// first world boundary past it (CI time-boxing).
+    pub budget: Option<std::time::Duration>,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        Self { worlds: 200, start_seed: 1, budget: None }
+    }
+}
+
+/// What a campaign did and found.
+#[derive(Debug, Clone, Default)]
+pub struct FuzzOutcome {
+    /// Worlds actually run (≤ `cfg.worlds` under a budget).
+    pub worlds: usize,
+    /// Engine lanes exercised across all worlds (each lane = two full
+    /// replayed runs).
+    pub lanes: u64,
+    /// Every violation found, in seed order.
+    pub violations: Vec<FuzzViolation>,
+}
+
+impl FuzzOutcome {
+    /// True when every world replayed identically and every audit held.
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Run a fuzz campaign. Deterministic for a fixed config (the budget
+/// can only truncate the seed range, never reorder it).
+pub fn run_fuzz(cfg: &FuzzConfig) -> FuzzOutcome {
+    let start = std::time::Instant::now();
+    let mut out = FuzzOutcome::default();
+    for k in 0..cfg.worlds {
+        if let Some(budget) = cfg.budget {
+            if start.elapsed() >= budget {
+                break;
+            }
+        }
+        if out.violations.len() >= MAX_VIOLATIONS {
+            break;
+        }
+        let seed = cfg.start_seed.wrapping_add(k as u64);
+        match fuzz_world(seed) {
+            Ok(lanes) => out.lanes += lanes,
+            Err(v) => out.violations.push(*v),
+        }
+        out.worlds += 1;
+    }
+    out
+}
+
+/// Expand `seed` into a random world file. Always within the DSL's
+/// validity envelope: if the output fails to parse, that mismatch is a
+/// bug the fuzz tests surface directly.
+pub fn gen_world_dsl(seed: u64) -> String {
+    use std::fmt::Write as _;
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+    let mut out = String::new();
+
+    let horizon = rng.range(20.0, 60.0);
+    let bandwidth = rng.range(2.0, 20.0);
+    let m = 20 + rng.below(61) as usize;
+    let _ = write!(
+        out,
+        "world horizon={horizon:?} bandwidth={bandwidth:?} scenario_seed=0x{:x}",
+        rng.next_u64()
+    );
+    if rng.bernoulli(0.5) {
+        let _ = write!(out, " timeline_window={}", 1 + rng.below(200));
+    }
+    let _ = writeln!(out);
+
+    if rng.bernoulli(0.5) {
+        let _ = write!(out, "pages section6 m={m} seed=0x{:x}", rng.next_u64());
+    } else {
+        let s = rng.range(0.6, 1.6);
+        let _ = write!(out, "pages zipf s={s:?} m={m} seed=0x{:x}", rng.next_u64());
+    }
+    for flag in ["partial_cis", "false_positives", "normalized"] {
+        if rng.bernoulli(0.5) {
+            let _ = write!(out, " {flag}");
+        }
+    }
+    let _ = writeln!(out);
+
+    // 0–4 world-dynamics directives drawn from the full catalog
+    for _ in 0..rng.below(5) {
+        match rng.below(8) {
+            0 => {
+                let rho = rng.range(0.0, 0.05);
+                let _ = writeln!(out, "churn rho={rho:?} seed=0x{:x}", rng.next_u64());
+            }
+            1 => {
+                let t = rng.range(0.0, horizon * 0.5);
+                let d = rng.range(1.0, horizon * 0.25);
+                let frac = rng.range(0.0, 0.5);
+                let muf = rng.range(0.5, 10.0);
+                let df = rng.range(0.5, 4.0);
+                let _ = writeln!(
+                    out,
+                    "flash t={t:?} duration={d:?} frac={frac:?} mu_factor={muf:?} \
+                     delta_factor={df:?} seed=0x{:x}",
+                    rng.next_u64()
+                );
+            }
+            2 => {
+                let period = rng.range(5.0, 20.0);
+                let amp = rng.range(-0.8, 0.8);
+                let samples = 1 + rng.below(6);
+                let frac = rng.range(0.0, 1.0);
+                let _ = writeln!(
+                    out,
+                    "drift period={period:?} amplitude={amp:?} samples={samples} frac={frac:?} \
+                     seed=0x{:x}",
+                    rng.next_u64()
+                );
+            }
+            3 => {
+                let t = rng.range(0.0, horizon * 0.75);
+                let d = rng.range(0.5, horizon * 0.25);
+                let _ = write!(out, "outage t={t:?} duration={d:?} pages=");
+                if rng.bernoulli(0.5) {
+                    let _ = writeln!(out, "all");
+                } else {
+                    let k = 1 + rng.below(8) as usize;
+                    let chosen = rng.sample_indices(m, k.min(m));
+                    for (i, p) in chosen.iter().enumerate() {
+                        let _ = write!(out, "{}{p}", if i > 0 { "," } else { "" });
+                    }
+                    let _ = writeln!(out);
+                }
+            }
+            4 => {
+                let hosts = 1 + rng.below(8);
+                let n = rng.below(5);
+                let mean = rng.range(0.5, horizon * 0.125);
+                let _ = writeln!(
+                    out,
+                    "host_outages hosts={hosts} n={n} mean={mean:?} seed=0x{:x}",
+                    rng.next_u64()
+                );
+            }
+            5 => {
+                let t = rng.range(0.0, horizon);
+                let frac = rng.range(0.01, 0.3);
+                let lam = rng.range(0.0, 1.0);
+                let nu = rng.range(0.0, 3.0);
+                let _ = writeln!(
+                    out,
+                    "adversarial_cis t={t:?} frac={frac:?} lam={lam:?} nu={nu:?}"
+                );
+            }
+            6 => {
+                let t = rng.range(0.0, horizon);
+                let rate = rng.range(1.0, 30.0);
+                let _ = writeln!(out, "bandwidth t={t:?} rate={rate:?}");
+            }
+            _ => {
+                let t = rng.range(0.0, horizon * 0.5);
+                let interval = rng.range(0.5, 5.0);
+                let n = 2 + rng.below(3);
+                let _ = write!(out, "regions t={t:?} interval={interval:?} rates=");
+                for i in 0..n {
+                    let r = rng.range(1.0, 30.0);
+                    let _ = write!(out, "{}{r:?}", if i > 0 { "," } else { "" });
+                }
+                let _ = writeln!(out);
+            }
+        }
+    }
+
+    if rng.bernoulli(0.5) {
+        let transient = rng.range(0.0, 0.4);
+        let timeout = rng.range(0.0, 0.1);
+        let gone = rng.range(0.0, 0.02);
+        let hosts = 1 + rng.below(16);
+        let _ = writeln!(
+            out,
+            "faults transient={transient:?} timeout={timeout:?} gone={gone:?} hosts={hosts} \
+             seed=0x{:x}",
+            rng.next_u64()
+        );
+        if rng.bernoulli(0.5) {
+            let n = 1 + rng.below(4);
+            let mean = rng.range(0.5, horizon * 0.125);
+            let _ = writeln!(
+                out,
+                "fault_outages n={n} mean={mean:?} seed=0x{:x}",
+                rng.next_u64()
+            );
+        }
+        if rng.bernoulli(0.3) {
+            // a single explicit window can never self-overlap
+            let host = rng.below(hosts);
+            let start = rng.range(0.0, horizon * 0.75);
+            let end = start + rng.range(0.5, horizon * 0.25);
+            let _ = writeln!(out, "fault_window host={host} start={start:?} end={end:?}");
+        }
+        if rng.bernoulli(0.5) {
+            if rng.bernoulli(0.5) {
+                let _ = writeln!(out, "retry backoff");
+            } else {
+                let _ = writeln!(out, "retry immediate max_attempts={}", 1 + rng.below(6));
+            }
+        }
+    }
+
+    if rng.bernoulli(0.7) {
+        let rate = rng.range(0.0, 20.0);
+        let zipf = rng.range(0.0, 1.5);
+        let _ = writeln!(
+            out,
+            "traffic rate={rate:?} zipf={zipf:?} seed=0x{:x}",
+            rng.next_u64()
+        );
+        if rng.bernoulli(0.5) {
+            let period = rng.range(2.0, 20.0);
+            let amp = rng.range(0.0, 1.0);
+            let _ = writeln!(out, "diurnal period={period:?} amplitude={amp:?}");
+        }
+        if rng.bernoulli(0.4) {
+            let t = rng.range(0.0, horizon * 0.75);
+            let d = rng.range(0.5, horizon * 0.25);
+            let page = rng.below(m as u64);
+            let extra = rng.range(1.0, 50.0);
+            let _ = writeln!(
+                out,
+                "request_flash t={t:?} duration={d:?} page={page} extra={extra:?}"
+            );
+        }
+    }
+    out
+}
+
+/// Fuzz one seed: generate, parse, round-trip, compile, audit the
+/// timeline, then run and replay every active engine lane. Returns the
+/// number of lanes exercised, or the first violation.
+pub fn fuzz_world(seed: u64) -> Result<u64, Box<FuzzViolation>> {
+    let dsl = gen_world_dsl(seed);
+    let fail = |tr: Option<&TraceHandle>, msg: String| violation(seed, &dsl, tr, msg);
+
+    // parse + canonical round-trip: parse → render → parse is identity
+    let spec = match WorldSpec::parse(&dsl) {
+        Ok(s) => s,
+        Err(e) => return Err(fail(None, format!("generated DSL failed to parse: {e}"))),
+    };
+    let rendered = spec.render();
+    let again = match WorldSpec::parse(&rendered) {
+        Ok(a) => a,
+        Err(e) => return Err(fail(None, format!("canonical render failed to re-parse: {e}"))),
+    };
+    if again != spec {
+        return Err(fail(None, "round-trip changed the parsed directives".to_string()));
+    }
+    let world = match spec.compile() {
+        Ok(w) => w,
+        Err(e) => return Err(fail(None, format!("generated DSL failed to compile: {e}"))),
+    };
+    let twin = match again.compile() {
+        Ok(w) => w,
+        Err(e) => return Err(fail(None, format!("canonical twin failed to compile: {e}"))),
+    };
+    if !bit_identical(&world.scenario, &twin.scenario) {
+        return Err(fail(None, "round-trip world is not bit-identical".to_string()));
+    }
+
+    // static timeline audit before anything runs
+    let mut audit = WorldAudit::new();
+    audit.audit_timeline(&world.scenario);
+    if let Err(msg) = audit.into_result() {
+        return Err(fail(None, format!("timeline audit: {msg}")));
+    }
+
+    let mut lanes = 0u64;
+
+    // scenario lanes: materialized and streamed replay, plus the
+    // learned-knowledge decorator on the streamed path
+    let scenario_lanes: [(&str, TraceMode, Knowledge); 3] = [
+        ("scenario/materialized", TraceMode::Materialized, Knowledge::Oracle),
+        ("scenario/streamed", TraceMode::Streamed, Knowledge::Oracle),
+        (
+            "scenario/learned",
+            TraceMode::Streamed,
+            Knowledge::Learned(EstimatorConfig::default()),
+        ),
+    ];
+    for (label, mode, knowledge) in scenario_lanes {
+        let run = |k: Knowledge| -> crate::Result<(TraceHandle, SimResult)> {
+            let tr = TraceHandle::recorder(RECORDER_CAP);
+            let r = world
+                .crawler()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(Strategy::Lazy)
+                .trace_mode(mode)
+                .knowledge(k)
+                .with_trace(tr.clone())
+                .run_scenario(&world.sim_config()?, seed ^ 0xA11CE)?;
+            Ok((tr, r))
+        };
+        let (tr1, r1) = match run(knowledge) {
+            Ok(x) => x,
+            Err(e) => return Err(fail(None, format!("{label}: engine error: {e}"))),
+        };
+        let (_, r2) = match run(knowledge) {
+            Ok(x) => x,
+            Err(e) => return Err(fail(Some(&tr1), format!("{label}: replay engine error: {e}"))),
+        };
+        if fp_sim(&r1) != fp_sim(&r2) {
+            return Err(fail(
+                Some(&tr1),
+                format!("{label}: replay diverged (run fingerprints differ)"),
+            ));
+        }
+        let mut audit = WorldAudit::new();
+        audit.audit_sim(label, &r1);
+        if let Err(msg) = audit.into_result() {
+            return Err(fail(Some(&tr1), msg));
+        }
+        lanes += 1;
+    }
+
+    // serving lane, when the world carries request traffic
+    if world.traffic.is_some() {
+        let label = "serving";
+        let run = || -> crate::Result<(TraceHandle, SimResult, ServingMetrics)> {
+            let tr = TraceHandle::recorder(RECORDER_CAP);
+            let (r, m) = world
+                .crawler()
+                .policy(PolicyKind::GreedyCis)
+                .strategy(Strategy::Lazy)
+                .with_trace(tr.clone())
+                .run_traffic(&world.sim_config()?, seed ^ 0x5E4F)?;
+            Ok((tr, r, m))
+        };
+        let (tr1, r1, m1) = match run() {
+            Ok(x) => x,
+            Err(e) => return Err(fail(None, format!("{label}: engine error: {e}"))),
+        };
+        let (_, r2, m2) = match run() {
+            Ok(x) => x,
+            Err(e) => return Err(fail(Some(&tr1), format!("{label}: replay engine error: {e}"))),
+        };
+        if fp_sim(&r1) != fp_sim(&r2) || fp_serving(&m1) != fp_serving(&m2) || m1 != m2 {
+            return Err(fail(Some(&tr1), format!("{label}: replay diverged")));
+        }
+        let mut audit = WorldAudit::new();
+        audit.audit_sim(label, &r1);
+        audit.audit_serving(label, &m1);
+        if let Err(msg) = audit.into_result() {
+            return Err(fail(Some(&tr1), msg));
+        }
+        lanes += 1;
+    }
+
+    // fault lane, when the world carries a failure model
+    if let Some(fc) = &world.faults {
+        let label = "faults";
+        let cfg = world.sim_config().map_err(|e| fail(None, e.to_string()))?;
+        let run = || -> crate::Result<(TraceHandle, FaultSimResult)> {
+            let mut trng = Rng::new(seed ^ 0xFA57);
+            let traces =
+                generate_traces(world.initial_pages(), world.horizon, CisDelay::None, &mut trng);
+            let mut sched = crate::coordinator::builder::CrawlerBuilder::new()
+                .policy(PolicyKind::GreedyNcis)
+                .strategy(Strategy::Exact)
+                .pages(world.initial_pages())
+                .build()?;
+            let mut model = FaultModel::new(fc.clone())?;
+            let tr = TraceHandle::recorder(RECORDER_CAP);
+            let mut ws = SimWorkspace::new();
+            let r = simulate_faulty_traced_with(
+                &mut ws,
+                &traces,
+                &cfg,
+                sched.as_mut(),
+                &mut model,
+                world.retry,
+                Some(&tr),
+            );
+            Ok((tr, r))
+        };
+        let (tr1, r1) = match run() {
+            Ok(x) => x,
+            Err(e) => return Err(fail(None, format!("{label}: engine error: {e}"))),
+        };
+        let (_, r2) = match run() {
+            Ok(x) => x,
+            Err(e) => return Err(fail(Some(&tr1), format!("{label}: replay engine error: {e}"))),
+        };
+        if fp_faults(&r1) != fp_faults(&r2) {
+            return Err(fail(Some(&tr1), format!("{label}: replay diverged")));
+        }
+        let mut audit = WorldAudit::new();
+        audit.audit_faults(label, &r1, world.initial_pages().len());
+        if let Err(msg) = audit.into_result() {
+            return Err(fail(Some(&tr1), msg));
+        }
+        lanes += 1;
+    }
+
+    Ok(lanes)
+}
+
+fn violation(seed: u64, dsl: &str, tr: Option<&TraceHandle>, msg: String) -> Box<FuzzViolation> {
+    let mut buf = Vec::new();
+    // always-on dump: cond=false routes the message through the flight
+    // recorder so the bundle carries the final decisions
+    let _ = trace::verify_or_dump(false, tr, &mut buf, &msg);
+    Box::new(FuzzViolation {
+        seed,
+        dsl: dsl.to_string(),
+        message: msg,
+        flight_jsonl: String::from_utf8_lossy(&buf).into_owned(),
+    })
+}
+
+// ------------------------------------------------------------ fingerprints
+
+/// FNV-1a over little-endian words: cheap, deterministic, and
+/// collision-safe enough for equality-of-replay checks (any divergence
+/// at all is a bug; we never compare across different inputs).
+struct Fp(u64);
+
+impl Fp {
+    fn new() -> Self {
+        Fp(0xcbf2_9ce4_8422_2325)
+    }
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+}
+
+fn fp_sim(r: &SimResult) -> u64 {
+    let mut h = Fp::new();
+    h.f64(r.accuracy);
+    h.u64(r.requests);
+    h.u64(r.fresh_hits);
+    h.u64(r.ticks);
+    h.u64(r.crawl_counts.len() as u64);
+    for &c in &r.crawl_counts {
+        h.u64(c as u64);
+    }
+    h.u64(r.timeline.len() as u64);
+    for &(t, v) in &r.timeline {
+        h.f64(t);
+        h.f64(v);
+    }
+    h.0
+}
+
+fn fp_serving(m: &ServingMetrics) -> u64 {
+    let mut h = Fp::new();
+    h.u64(m.served);
+    h.u64(m.fresh_serves);
+    h.u64(m.stale_serves);
+    h.u64(m.dead_serves);
+    h.u64(m.overall.count());
+    if m.overall.count() > 0 {
+        h.f64(m.overall.mean());
+    }
+    for histo in m.by_quality.iter().chain(m.by_popularity.iter()) {
+        h.u64(histo.count());
+    }
+    h.0
+}
+
+fn fp_faults(r: &FaultSimResult) -> u64 {
+    let mut h = Fp::new();
+    h.u64(fp_sim(&r.sim));
+    let f = &r.faults;
+    h.u64(f.attempts);
+    h.u64(f.successes);
+    h.u64(f.transient_errors);
+    h.u64(f.timeouts);
+    h.u64(f.gone);
+    h.u64(f.retries);
+    h.u64(f.quarantined);
+    h.u64(f.forfeited_ticks);
+    h.u64(f.idle_ticks);
+    for &x in &f.retries_per_host {
+        h.u64(x);
+    }
+    h.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_dsl_is_deterministic_per_seed() {
+        assert_eq!(gen_world_dsl(42), gen_world_dsl(42));
+        assert_ne!(gen_world_dsl(42), gen_world_dsl(43));
+    }
+
+    #[test]
+    fn generated_dsl_always_parses_and_round_trips() {
+        for seed in 0..64 {
+            let dsl = gen_world_dsl(seed);
+            let spec = WorldSpec::parse(&dsl)
+                .unwrap_or_else(|e| panic!("seed {seed}: generated DSL rejected: {e}\n{dsl}"));
+            let again = WorldSpec::parse(&spec.render()).unwrap();
+            assert_eq!(spec, again, "seed {seed}: round-trip not identity");
+            spec.compile()
+                .unwrap_or_else(|e| panic!("seed {seed}: compile failed: {e}\n{dsl}"));
+        }
+    }
+
+    #[test]
+    fn fuzz_smoke_is_clean() {
+        // a slice of the CI campaign: every lane replays identically
+        // and every audit holds
+        let out = run_fuzz(&FuzzConfig { worlds: 12, start_seed: 1, budget: None });
+        assert_eq!(out.worlds, 12);
+        assert!(out.lanes >= 36, "scenario lanes always run");
+        assert!(
+            out.clean(),
+            "violations:\n{}",
+            out.violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn violation_bundle_is_self_contained() {
+        let v = violation(7, "world horizon=1.0 bandwidth=1.0\n", None, "law broke".into());
+        assert_eq!(v.seed, 7);
+        assert!(v.dsl.contains("horizon=1.0"));
+        assert!(v.message.contains("law broke"));
+        let shown = v.to_string();
+        assert!(shown.contains("seed 0x7") && shown.contains("--- world ---"));
+    }
+
+    #[test]
+    fn budget_truncates_cleanly() {
+        let out = run_fuzz(&FuzzConfig {
+            worlds: 1000,
+            start_seed: 1,
+            budget: Some(std::time::Duration::from_millis(0)),
+        });
+        assert_eq!(out.worlds, 0);
+        assert!(out.clean());
+    }
+}

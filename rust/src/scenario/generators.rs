@@ -9,6 +9,7 @@
 //! check [`super::ScenarioStats::skipped_events`] stayed 0 when
 //! composing aggressively.
 
+use crate::coordinator::hosts::host_of;
 use crate::params::PageParams;
 use crate::rngkit::{self, Rng};
 use crate::scenario::{PageSet, Scenario, WorldEvent};
@@ -164,9 +165,9 @@ pub fn add_diurnal_drift(
 }
 
 /// Correlated host-level CIS outages: pages are grouped into `hosts`
-/// round-robin hosts (`page % hosts`, the
-/// [`HostMap::round_robin`](crate::coordinator::hosts::HostMap::round_robin)
-/// convention), and `n_outages` outage windows
+/// round-robin hosts (the shared
+/// [`host_of`](crate::coordinator::hosts::host_of) convention), and
+/// `n_outages` outage windows
 /// (uniform start over the horizon, Exp(1/mean_duration) length) each
 /// darken one whole host's ping feed at once — the realistic failure
 /// unit: a sitemap endpoint or ping relay dies per site, not per URL.
@@ -185,7 +186,7 @@ pub fn add_correlated_outages(
     for _ in 0..n_outages {
         let t = rng.range(0.0, horizon);
         let h = rng.below(hosts as u64) as usize;
-        let members: Vec<usize> = (0..m0).filter(|i| i % hosts == h).collect();
+        let members: Vec<usize> = (0..m0).filter(|&i| host_of(i, hosts) == h).collect();
         let duration = rngkit::exponential(&mut rng, 1.0 / mean_duration);
         batch.push((t, WorldEvent::CisOutage { pages: PageSet::Pages(members), duration }));
     }

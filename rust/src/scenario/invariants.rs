@@ -1,0 +1,407 @@
+//! Reusable engine-invariant audits ([`WorldAudit`]).
+//!
+//! Every lane of the fuzzer (`scenario::fuzz`), the corpus replay
+//! tests, and the `fuzz` CLI subcommand check the same small set of
+//! conservation laws and sanity bounds after each run. Collecting them
+//! here — instead of scattering ad-hoc `assert!`s through test files —
+//! means a new engine entry point gets the full battery by calling one
+//! method, and a violation carries a labelled message suitable for
+//! [`crate::trace::verify_or_dump`]'s flight-recorder bundle.
+//!
+//! The laws:
+//!
+//! - **Timeline well-formedness** ([`WorldAudit::audit_timeline`]):
+//!   event times are finite, non-negative, and non-decreasing; every
+//!   event targets a live slot under the engine's LIFO slot-recycling
+//!   discipline (no post-retirement `ParamsChanged` / quality shifts /
+//!   double retirement); parameters, rates, and durations are in
+//!   domain.
+//! - **Crawl accounting** ([`WorldAudit::audit_sim`]): accuracy is a
+//!   probability (or NaN only when no requests arrived), fresh hits
+//!   never exceed requests, total crawls never exceed ticks, and the
+//!   rolling-accuracy timeline is time-ordered with values in [0, 1].
+//! - **Bandwidth conservation** ([`WorldAudit::audit_faults`]): every
+//!   tick is spent exactly once — `successes + failures + forfeited +
+//!   idle == ticks` — plus quarantine arithmetic (quarantined ≤ m,
+//!   retries ≤ attempts, per-host retries sum to the total).
+//! - **Serving conservation** ([`WorldAudit::audit_serving`]): live
+//!   serves split exactly into fresh + stale, the age histogram saw
+//!   exactly one observation per live serve, and observed ages are
+//!   finite and non-negative.
+//! - **Suppression arithmetic** ([`WorldAudit::audit_stats`]): event
+//!   counters are consistent with the compiled timeline (no skipped
+//!   events for DSL-generated worlds, which only ever target live
+//!   slots).
+
+use crate::fault::FaultSimResult;
+use crate::scenario::{PageSet, Scenario, ScenarioStats, WorldEvent};
+use crate::serving::ServingMetrics;
+use crate::sim::SimResult;
+
+/// An accumulating invariant checker: run audits, then collect the
+/// violation messages (empty = all laws held).
+#[derive(Debug, Default)]
+pub struct WorldAudit {
+    violations: Vec<String>,
+}
+
+impl WorldAudit {
+    /// A fresh audit with no recorded violations.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a violation when `cond` is false. The message closure
+    /// only runs on failure.
+    pub fn check(&mut self, cond: bool, msg: impl FnOnce() -> String) {
+        if !cond {
+            self.violations.push(msg());
+        }
+    }
+
+    /// True when every audited law held.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// The recorded violation messages, in audit order.
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    /// `Ok(())` when clean, else all messages joined with `"; "`.
+    pub fn into_result(self) -> Result<(), String> {
+        if self.violations.is_empty() {
+            Ok(())
+        } else {
+            Err(self.violations.join("; "))
+        }
+    }
+
+    /// Static timeline audit: replays the scenario's event list
+    /// against a model of the engine's LIFO slot recycling and flags
+    /// any event that the engine would have to skip or that would trip
+    /// a validation assert.
+    pub fn audit_timeline(&mut self, sc: &Scenario) {
+        let mut live: Vec<bool> = vec![true; sc.initial_pages().len()];
+        let mut free: Vec<usize> = Vec::new();
+        let mut prev_t = 0.0_f64;
+        for (k, ev) in sc.events().iter().enumerate() {
+            self.check(ev.t.is_finite() && ev.t >= 0.0, || {
+                format!("event {k}: non-finite or negative time {}", ev.t)
+            });
+            self.check(ev.t >= prev_t, || {
+                format!("event {k}: time {} precedes previous {prev_t} (not monotone)", ev.t)
+            });
+            if ev.t.is_finite() {
+                prev_t = prev_t.max(ev.t);
+            }
+            match &ev.event {
+                WorldEvent::PageBorn { params } => {
+                    self.check(params.validate().is_ok(), || {
+                        format!("event {k}: born page has invalid params {params:?}")
+                    });
+                    // LIFO recycling: reuse the most recently freed slot
+                    match free.pop() {
+                        Some(slot) => live[slot] = true,
+                        None => live.push(true),
+                    }
+                }
+                WorldEvent::PageRetired { page } => {
+                    let alive = live.get(*page).copied().unwrap_or(false);
+                    self.check(alive, || {
+                        format!("event {k}: retirement targets dead or unborn slot {page}")
+                    });
+                    if alive {
+                        live[*page] = false;
+                        free.push(*page);
+                    }
+                }
+                WorldEvent::ParamsChanged { page, params } => {
+                    self.check(live.get(*page).copied().unwrap_or(false), || {
+                        format!("event {k}: ParamsChanged targets dead slot {page}")
+                    });
+                    self.check(params.validate().is_ok(), || {
+                        format!("event {k}: ParamsChanged carries invalid params {params:?}")
+                    });
+                }
+                WorldEvent::CisQualityShift { page, lam, nu } => {
+                    self.check(live.get(*page).copied().unwrap_or(false), || {
+                        format!("event {k}: CisQualityShift targets dead slot {page}")
+                    });
+                    self.check((0.0..=1.0).contains(lam), || {
+                        format!("event {k}: shifted lam {lam} outside [0, 1]")
+                    });
+                    self.check(nu.is_finite() && *nu >= 0.0, || {
+                        format!("event {k}: shifted nu {nu} invalid")
+                    });
+                }
+                WorldEvent::CisOutage { pages, duration } => {
+                    self.check(duration.is_finite() && *duration > 0.0, || {
+                        format!("event {k}: outage duration {duration} invalid")
+                    });
+                    if let PageSet::Pages(list) = pages {
+                        for &p in list {
+                            self.check(live.get(p).copied().unwrap_or(false), || {
+                                format!("event {k}: outage names dead or unborn slot {p}")
+                            });
+                        }
+                    }
+                }
+                WorldEvent::BandwidthChange { rate } => {
+                    self.check(rate.is_finite() && *rate > 0.0, || {
+                        format!("event {k}: bandwidth rate {rate} invalid")
+                    });
+                }
+            }
+        }
+    }
+
+    /// Crawl-side accounting on a finished run.
+    pub fn audit_sim(&mut self, label: &str, r: &SimResult) {
+        if r.requests == 0 {
+            // accuracy is NaN by contract when nothing was requested
+            self.check(r.fresh_hits == 0, || {
+                format!("{label}: fresh_hits {} with zero requests", r.fresh_hits)
+            });
+        } else {
+            self.check(
+                r.accuracy.is_finite() && (0.0..=1.0).contains(&r.accuracy),
+                || format!("{label}: accuracy {} outside [0, 1]", r.accuracy),
+            );
+            self.check(r.fresh_hits <= r.requests, || {
+                format!("{label}: fresh_hits {} exceed requests {}", r.fresh_hits, r.requests)
+            });
+        }
+        let crawls: u64 = r.crawl_counts.iter().map(|&c| c as u64).sum();
+        self.check(crawls <= r.ticks, || {
+            format!("{label}: total crawls {crawls} exceed ticks {}", r.ticks)
+        });
+        let mut prev = f64::NEG_INFINITY;
+        for &(t, v) in &r.timeline {
+            self.check(t.is_finite() && t >= prev, || {
+                format!("{label}: timeline time {t} not monotone (prev {prev})")
+            });
+            self.check(v.is_finite() && (0.0..=1.0).contains(&v), || {
+                format!("{label}: timeline accuracy {v} at t={t} outside [0, 1]")
+            });
+            if t.is_finite() {
+                prev = t;
+            }
+        }
+    }
+
+    /// Event-counter arithmetic. DSL-compiled worlds only emit events
+    /// that target live slots (the static audit proves it), so the
+    /// engine must never have skipped one; staleness of pick counters
+    /// must be bounded by the events that can cause them.
+    pub fn audit_stats(&mut self, label: &str, sc: &Scenario, st: &ScenarioStats) {
+        self.check(st.skipped_events == 0, || {
+            format!("{label}: engine skipped {} timeline events", st.skipped_events)
+        });
+        let (mut births, mut retirements, mut shifts, mut quality, mut outages) =
+            (0u64, 0u64, 0u64, 0u64, 0u64);
+        for ev in sc.events() {
+            match ev.event {
+                WorldEvent::PageBorn { .. } => births += 1,
+                WorldEvent::PageRetired { .. } => retirements += 1,
+                WorldEvent::ParamsChanged { .. } => shifts += 1,
+                WorldEvent::CisQualityShift { .. } => quality += 1,
+                WorldEvent::CisOutage { .. } => outages += 1,
+                WorldEvent::BandwidthChange { .. } => {}
+            }
+        }
+        self.check(st.births <= births, || {
+            format!("{label}: {} births counted, timeline holds {births}", st.births)
+        });
+        self.check(st.retirements <= retirements, || {
+            format!("{label}: {} retirements counted, timeline holds {retirements}", st.retirements)
+        });
+        self.check(st.param_shifts <= shifts, || {
+            format!("{label}: {} param shifts counted, timeline holds {shifts}", st.param_shifts)
+        });
+        self.check(st.quality_shifts <= quality, || {
+            format!("{label}: {} quality shifts counted, timeline has {quality}", st.quality_shifts)
+        });
+        self.check(st.outages <= outages, || {
+            format!("{label}: {} outages counted, timeline holds {outages}", st.outages)
+        });
+        // a stale pick needs a retirement to have created staleness
+        self.check(retirements > 0 || st.stale_picks == 0, || {
+            format!("{label}: {} stale picks with no retirements", st.stale_picks)
+        });
+        // suppression needs at least one outage window
+        self.check(outages > 0 || st.cis_suppressed == 0, || {
+            format!("{label}: {} suppressed CIS with no outages", st.cis_suppressed)
+        });
+    }
+
+    /// Serving conservation: dead serves are tracked apart from
+    /// `served`, live serves split exactly into fresh + stale, and the
+    /// overall age histogram saw one observation per live serve.
+    pub fn audit_serving(&mut self, label: &str, m: &ServingMetrics) {
+        self.check(m.fresh_serves + m.stale_serves == m.served, || {
+            format!(
+                "{label}: fresh {} + stale {} != served {}",
+                m.fresh_serves, m.stale_serves, m.served
+            )
+        });
+        self.check(m.overall.count() == m.served, || {
+            format!(
+                "{label}: age histogram count {} != served {}",
+                m.overall.count(),
+                m.served
+            )
+        });
+        if m.served > 0 {
+            let mean = m.overall.mean();
+            self.check(mean.is_finite() && mean >= 0.0, || {
+                format!("{label}: mean served age {mean} invalid")
+            });
+        }
+        let by_quality: u64 = m.by_quality.iter().map(|h| h.count()).sum();
+        self.check(by_quality == m.served, || {
+            format!("{label}: quality-decile counts sum to {by_quality}, served {}", m.served)
+        });
+        let by_popularity: u64 = m.by_popularity.iter().map(|h| h.count()).sum();
+        self.check(by_popularity == m.served, || {
+            format!("{label}: popularity-decile counts sum to {by_popularity}, served {}", m.served)
+        });
+    }
+
+    /// Bandwidth conservation and quarantine arithmetic for a fault
+    /// run over an `m`-page population.
+    pub fn audit_faults(&mut self, label: &str, r: &FaultSimResult, m: usize) {
+        let f = &r.faults;
+        let spent = f.successes + f.failures() + f.forfeited_ticks + f.idle_ticks;
+        self.check(spent == r.sim.ticks, || {
+            format!(
+                "{label}: bandwidth not conserved: {} + {} + {} + {} = {spent} != ticks {}",
+                f.successes,
+                f.failures(),
+                f.forfeited_ticks,
+                f.idle_ticks,
+                r.sim.ticks
+            )
+        });
+        self.check(f.attempts == f.successes + f.failures(), || {
+            format!(
+                "{label}: attempts {} != successes {} + failures {}",
+                f.attempts,
+                f.successes,
+                f.failures()
+            )
+        });
+        self.check(f.retries <= f.attempts, || {
+            format!("{label}: retries {} exceed attempts {}", f.retries, f.attempts)
+        });
+        self.check(f.quarantined <= m as u64, || {
+            format!("{label}: quarantined {} pages out of {m}", f.quarantined)
+        });
+        let per_host: u64 = f.retries_per_host.iter().sum();
+        self.check(per_host == f.retries, || {
+            format!("{label}: per-host retries sum to {per_host}, total {}", f.retries)
+        });
+        self.audit_sim(label, &r.sim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::PageParams;
+
+    fn page() -> PageParams {
+        PageParams { delta: 0.2, mu: 0.1, lam: 0.5, nu: 0.1 }
+    }
+
+    #[test]
+    fn clean_timeline_passes() {
+        let mut sc = Scenario::new(vec![page(), page()], 7);
+        sc.push(1.0, WorldEvent::PageRetired { page: 0 });
+        sc.push(2.0, WorldEvent::PageBorn { params: page() });
+        sc.push(3.0, WorldEvent::ParamsChanged { page: 0, params: page() });
+        let mut audit = WorldAudit::new();
+        audit.audit_timeline(&sc);
+        assert!(audit.ok(), "unexpected violations: {:?}", audit.violations());
+    }
+
+    #[test]
+    fn post_retirement_event_is_flagged() {
+        // Scenario::push validates values, not liveness — the audit
+        // models slot recycling on top, so a shift on a retired slot
+        // (with no intervening birth) must be caught here.
+        let mut sc = Scenario::new(vec![page(), page()], 7);
+        sc.push(1.0, WorldEvent::PageRetired { page: 1 });
+        sc.push(2.0, WorldEvent::CisQualityShift { page: 1, lam: 0.0, nu: 1.0 });
+        let mut audit = WorldAudit::new();
+        audit.audit_timeline(&sc);
+        assert!(!audit.ok());
+        assert!(audit.violations()[0].contains("dead slot 1"), "{:?}", audit.violations());
+    }
+
+    #[test]
+    fn lifo_recycling_is_modelled() {
+        // retire 0 then 1; next birth must land in slot 1 (LIFO), so a
+        // follow-up event on slot 1 is legal while slot 0 stays dead
+        let mut sc = Scenario::new(vec![page(), page()], 7);
+        sc.push(1.0, WorldEvent::PageRetired { page: 0 });
+        sc.push(2.0, WorldEvent::PageRetired { page: 1 });
+        sc.push(3.0, WorldEvent::PageBorn { params: page() });
+        sc.push(4.0, WorldEvent::ParamsChanged { page: 1, params: page() });
+        let mut audit = WorldAudit::new();
+        audit.audit_timeline(&sc);
+        assert!(audit.ok(), "{:?}", audit.violations());
+
+        let mut bad = Scenario::new(vec![page(), page()], 7);
+        bad.push(1.0, WorldEvent::PageRetired { page: 0 });
+        bad.push(2.0, WorldEvent::PageRetired { page: 1 });
+        bad.push(3.0, WorldEvent::PageBorn { params: page() });
+        bad.push(4.0, WorldEvent::ParamsChanged { page: 0, params: page() });
+        let mut audit = WorldAudit::new();
+        audit.audit_timeline(&bad);
+        assert!(!audit.ok());
+    }
+
+    #[test]
+    fn double_retirement_is_flagged() {
+        let mut sc = Scenario::new(vec![page()], 7);
+        sc.push(1.0, WorldEvent::PageRetired { page: 0 });
+        sc.push(2.0, WorldEvent::PageRetired { page: 0 });
+        let mut audit = WorldAudit::new();
+        audit.audit_timeline(&sc);
+        assert!(!audit.ok());
+        assert!(audit.violations()[0].contains("dead or unborn slot 0"));
+    }
+
+    #[test]
+    fn sim_audit_accepts_empty_and_flags_overcount() {
+        let clean = SimResult {
+            accuracy: f64::NAN,
+            requests: 0,
+            fresh_hits: 0,
+            crawl_counts: vec![1, 2],
+            ticks: 5,
+            timeline: vec![(1.0, 0.5), (2.0, 0.75)],
+        };
+        let mut audit = WorldAudit::new();
+        audit.audit_sim("clean", &clean);
+        assert!(audit.ok(), "{:?}", audit.violations());
+
+        let bad = SimResult { fresh_hits: 9, requests: 4, accuracy: 0.5, ..clean };
+        let mut audit = WorldAudit::new();
+        audit.audit_sim("bad", &bad);
+        assert!(!audit.ok());
+        assert!(audit.violations()[0].contains("fresh_hits 9 exceed requests 4"));
+    }
+
+    #[test]
+    fn into_result_joins_messages() {
+        let mut audit = WorldAudit::new();
+        audit.check(false, || "first".into());
+        audit.check(false, || "second".into());
+        let err = audit.into_result().unwrap_err();
+        assert_eq!(err, "first; second");
+        assert!(WorldAudit::new().into_result().is_ok());
+    }
+}

@@ -38,16 +38,30 @@
 //! | [`WorldEvent::CisQualityShift`] | **no** | a silently degrading ping feed — beliefs go stale, exactly the stress motivating online re-estimation |
 //! | [`WorldEvent::CisOutage`] | **no** | a dark feed delivers nothing; the crawler cannot distinguish "no signals" from "no changes" |
 //! | [`WorldEvent::BandwidthChange`] | no (drives tick spacing) | same observability as the Appendix-D experiment |
+//!
+//! Worlds also have a concrete syntax: the [`dsl`] module parses a
+//! small line-oriented config format that composes the generators (and
+//! the fault / serving layers) into named adversarial archetypes, the
+//! [`invariants`] module packages the engine's conservation laws as a
+//! reusable [`invariants::WorldAudit`], and the [`fuzz`] module drives
+//! randomized DSL worlds through every engine twice, demanding
+//! bit-identical replay (see DESIGN.md §12).
 
+pub mod dsl;
 pub mod engine;
+pub mod fuzz;
 pub mod generators;
+pub mod invariants;
 
+pub use dsl::{bit_identical, parse_world, CompiledWorld, DslError, WorldSpec};
 pub use engine::{
     simulate_scenario, simulate_scenario_served_with, simulate_scenario_streamed,
     simulate_scenario_streamed_served_with, simulate_scenario_streamed_traced_with,
     simulate_scenario_streamed_with, simulate_scenario_traced_with, simulate_scenario_with,
     ScenarioStats, ScenarioWorkspace,
 };
+pub use fuzz::{run_fuzz, FuzzConfig, FuzzOutcome, FuzzViolation};
+pub use invariants::WorldAudit;
 
 use crate::params::PageParams;
 use crate::sim::CisDelay;

@@ -143,6 +143,12 @@ impl RequestTraffic {
         self.seed
     }
 
+    /// Configured diurnal cycle as `(period, amplitude)`, if any. The
+    /// DSL renderer needs this to round-trip a traffic block.
+    pub fn diurnal(&self) -> Option<(f64, f64)> {
+        self.diurnal
+    }
+
     /// Configured flash crowds.
     pub fn flashes(&self) -> &[FlashCrowd] {
         &self.flashes

@@ -647,6 +647,35 @@ pub fn check_or_dump<W: IoWrite>(cond: bool, tr: Option<&TraceHandle>, w: &mut W
     }
 }
 
+/// Always-on (release builds included) invariant check that reports
+/// instead of panicking: when `cond` is false, the last
+/// [`DUMP_WINDOW`] events are dumped to `w` and the violation message
+/// is returned as `Err`, so the caller owns what happens next. This is
+/// the fuzzer's check — a release-mode `fuzz` run must both keep
+/// going after a violation (to collect every failing seed) and ship
+/// the flight-recorder window in its repro bundle; `panic!` would
+/// allow neither. [`debug_check`] / [`check_or_dump`] remain the
+/// engines' hot-path checks (free in release builds).
+pub fn verify_or_dump<W: IoWrite>(
+    cond: bool,
+    tr: Option<&TraceHandle>,
+    w: &mut W,
+    msg: &str,
+) -> Result<(), String> {
+    if cond {
+        return Ok(());
+    }
+    if let Some(h) = tr {
+        let _ = writeln!(
+            w,
+            "--- flight recorder: last {DUMP_WINDOW} events before violation ---"
+        );
+        let _ = h.dump(w, DUMP_WINDOW);
+        let _ = w.flush();
+    }
+    Err(format!("invariant violated: {msg}"))
+}
+
 #[cold]
 fn dump_and_panic<W: IoWrite>(tr: Option<&TraceHandle>, w: &mut W, msg: &str) -> ! {
     if let Some(h) = tr {

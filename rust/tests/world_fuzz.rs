@@ -1,0 +1,223 @@
+//! Scenario-DSL integration suite: corpus regression replay, the
+//! figure-twin bit-identity pins, the parse → render → parse property,
+//! and a slice of the fuzz campaign CI runs at full width.
+
+use ncis_crawl::coordinator::builder::Strategy;
+use ncis_crawl::fault::{FaultConfig, RetryPolicy};
+use ncis_crawl::figures::common::ExperimentSpec;
+use ncis_crawl::policy::PolicyKind;
+use ncis_crawl::rngkit::Rng;
+use ncis_crawl::scenario::dsl::bit_identical;
+use ncis_crawl::scenario::fuzz::{gen_world_dsl, run_fuzz, FuzzConfig};
+use ncis_crawl::scenario::generators::{add_steady_churn, BornPageSpec};
+use ncis_crawl::scenario::{parse_world, PageSet, WorldAudit, WorldSpec};
+use ncis_crawl::serving::RequestTraffic;
+use ncis_crawl::sim::{SimResult, TraceMode};
+use ncis_crawl::{Scenario, WorldEvent};
+
+fn corpus_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus")
+}
+
+fn corpus_files() -> Vec<std::path::PathBuf> {
+    let mut files: Vec<_> = std::fs::read_dir(corpus_dir())
+        .expect("corpus dir missing")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "world").unwrap_or(false))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 4, "corpus unexpectedly small: {files:?}");
+    files
+}
+
+fn sim_eq(a: &SimResult, b: &SimResult) -> bool {
+    a.accuracy.to_bits() == b.accuracy.to_bits()
+        && a.requests == b.requests
+        && a.fresh_hits == b.fresh_hits
+        && a.ticks == b.ticks
+        && a.crawl_counts == b.crawl_counts
+        && a.timeline.len() == b.timeline.len()
+        && a
+            .timeline
+            .iter()
+            .zip(&b.timeline)
+            .all(|(x, y)| x.0.to_bits() == y.0.to_bits() && x.1.to_bits() == y.1.to_bits())
+}
+
+/// Every committed corpus world parses, round-trips, compiles, passes
+/// the static timeline audit, and — when small enough for the tier-1
+/// time budget — replays bit-identically in both trace modes.
+#[test]
+fn corpus_replays_cleanly() {
+    for path in corpus_files() {
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let spec = WorldSpec::parse(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let again = WorldSpec::parse(&spec.render()).unwrap();
+        assert_eq!(spec, again, "{name}: round-trip not identity");
+
+        let world = spec.compile().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let twin = again.compile().unwrap();
+        assert!(
+            bit_identical(&world.scenario, &twin.scenario),
+            "{name}: canonical form compiled to a different world"
+        );
+
+        let mut audit = WorldAudit::new();
+        audit.audit_timeline(&world.scenario);
+        assert!(audit.ok(), "{name}: timeline audit: {:?}", audit.violations());
+
+        // replay the small worlds through both engines; the fig-scale
+        // ones (m = 500..1000) are covered by their bit-identity pins
+        // and the release-mode CI fuzz step
+        let ticks = world.horizon * world.bandwidth;
+        if world.initial_pages().len() > 200 || ticks > 2_000.0 {
+            continue;
+        }
+        for mode in [TraceMode::Materialized, TraceMode::Streamed] {
+            let run = || {
+                world
+                    .crawler()
+                    .policy(PolicyKind::GreedyNcis)
+                    .strategy(Strategy::Lazy)
+                    .trace_mode(mode)
+                    .run_scenario(&world.sim_config().unwrap(), 0xD1CE)
+                    .unwrap_or_else(|e| panic!("{name}/{mode:?}: {e}"))
+            };
+            let (r1, r2) = (run(), run());
+            assert!(sim_eq(&r1, &r2), "{name}/{mode:?}: replay diverged");
+            let mut audit = WorldAudit::new();
+            audit.audit_sim(&name, &r1);
+            assert!(audit.ok(), "{name}/{mode:?}: {:?}", audit.violations());
+        }
+    }
+}
+
+/// The corpus twin of `fig_scenario` compiles bit-identical to the
+/// hand-constructed world inside the figure code.
+#[test]
+fn fig_scenario_world_is_bit_identical() {
+    // the figure's construction, verbatim
+    let spec = ExperimentSpec::section6(1000, 1).with_partial_cis().with_false_positives();
+    let mut rng = Rng::new(spec.seed);
+    let inst = spec.gen_instance(&mut rng).normalized();
+    let mut hand = Scenario::new(inst.pages.clone(), 0x5CE7);
+    add_steady_churn(&mut hand, 0.005, 400.0, &BornPageSpec::default(), 0x5CE8);
+    hand.push(150.0, WorldEvent::CisOutage { pages: PageSet::All, duration: 100.0 });
+
+    // the committed DSL twin
+    let text = std::fs::read_to_string(corpus_dir().join("fig_scenario.world")).unwrap();
+    let world = parse_world(&text).unwrap();
+    assert!(
+        bit_identical(&world.scenario, &hand),
+        "fig_scenario.world is not bit-identical to the figure's hand-built scenario"
+    );
+    assert_eq!(world.timeline_window, Some(1000));
+    assert_eq!((world.horizon, world.bandwidth), (400.0, 100.0));
+}
+
+/// A DSL `faults` block reproduces the fault figure's severest
+/// configuration field-for-field, including the generated correlated
+/// outage windows. The timeout is the figure's *computed* value
+/// (`0.02 × min(severity, 1)`), rendered through `{:?}` so the exact
+/// bits round-trip through the text form.
+#[test]
+fn fig_faults_world_matches_hand_config() {
+    let severity = 0.5_f64;
+    let timeout = 0.02 * severity.min(1.0);
+    // the figure's construction, verbatim
+    let mut hand = FaultConfig {
+        transient_prob: severity,
+        timeout_prob: timeout,
+        gone_prob: 0.0,
+        hosts: 20,
+        outages: Vec::new(),
+        seed: 0xFA17,
+    };
+    hand.add_correlated_outages((severity * 10.0).ceil() as usize, 200.0 / 40.0, 200.0, 0xFA18);
+
+    let text = format!(
+        "world horizon=200.0 bandwidth=50.0 scenario_seed=0x0\n\
+         pages section6 m=500 seed=0x5eed partial_cis false_positives normalized\n\
+         faults transient={severity:?} timeout={timeout:?} gone=0.0 hosts=20 seed=0xfa17\n\
+         fault_outages n=5 mean=5.0 seed=0xfa18\n\
+         retry backoff\n"
+    );
+    let world = parse_world(&text).unwrap();
+    let got = world.faults.expect("faults block compiled");
+    assert_eq!(got.transient_prob.to_bits(), hand.transient_prob.to_bits());
+    assert_eq!(got.timeout_prob.to_bits(), hand.timeout_prob.to_bits());
+    assert_eq!(got.gone_prob.to_bits(), hand.gone_prob.to_bits());
+    assert_eq!((got.hosts, got.seed), (hand.hosts, hand.seed));
+    assert_eq!(got.outages, hand.outages, "generated outage windows differ");
+    assert_eq!(world.retry, RetryPolicy::default());
+
+    // and the committed corpus twin agrees with the programmatic text
+    // (0.02 × 0.5 halves exactly, so `timeout=0.01` is the same bits)
+    let corpus = std::fs::read_to_string(corpus_dir().join("fig_faults.world")).unwrap();
+    let corpus_world = parse_world(&corpus).unwrap();
+    let cfc = corpus_world.faults.expect("corpus faults block");
+    assert_eq!(cfc.timeout_prob.to_bits(), hand.timeout_prob.to_bits());
+    assert_eq!(cfc.outages, hand.outages);
+}
+
+/// A DSL `traffic` block (plus `diurnal` and `request_flash`)
+/// reproduces the serving figure's rep-0 traffic exactly.
+#[test]
+fn fig_serving_world_matches_hand_traffic() {
+    // the figure's construction, verbatim (rep = 0)
+    let hand = RequestTraffic::new(40.0, 1.1, 0x5EED ^ 0x7AFF)
+        .unwrap()
+        .with_diurnal(50.0, 0.5)
+        .unwrap()
+        .with_flash(60.0, 10.0, 250, 120.0)
+        .unwrap();
+
+    let text = std::fs::read_to_string(corpus_dir().join("fig_serving.world")).unwrap();
+    let world = parse_world(&text).unwrap();
+    assert_eq!(world.traffic, Some(hand));
+    assert_eq!((world.horizon, world.bandwidth), (200.0, 50.0));
+}
+
+/// parse → render → parse is the identity over the fuzzer's whole
+/// generation envelope, and the re-parsed canonical form compiles to a
+/// bit-identical world.
+#[test]
+fn dsl_round_trip_property() {
+    ncis_crawl::testkit::forall(
+        "dsl_round_trip",
+        0xD51,
+        48,
+        |rng| gen_world_dsl(rng.next_u64()),
+        |dsl| {
+            let spec = WorldSpec::parse(dsl).map_err(|e| format!("parse: {e}\n{dsl}"))?;
+            let again = WorldSpec::parse(&spec.render())
+                .map_err(|e| format!("re-parse: {e}\n{}", spec.render()))?;
+            if spec != again {
+                return Err(format!("directives changed across render:\n{dsl}"));
+            }
+            let a = spec.compile().map_err(|e| format!("compile: {e}\n{dsl}"))?;
+            let b = again.compile().map_err(|e| format!("re-compile: {e}"))?;
+            if !bit_identical(&a.scenario, &b.scenario) {
+                return Err(format!("round-trip world not bit-identical:\n{dsl}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A slice of the CI fuzz campaign: every lane of every world replays
+/// bit-identically and satisfies the invariant audits. CI's
+/// `fuzz-smoke` step runs the same campaign at 200 worlds in release
+/// mode (`ncis-crawl fuzz --worlds 200`).
+#[test]
+fn fuzz_campaign_slice_is_clean() {
+    let out = run_fuzz(&FuzzConfig { worlds: 30, start_seed: 0x100, budget: None });
+    assert_eq!(out.worlds, 30);
+    assert!(out.lanes >= 90, "three scenario lanes always run per world");
+    assert!(
+        out.clean(),
+        "fuzz violations:\n{}",
+        out.violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n---\n")
+    );
+}
